@@ -1,0 +1,25 @@
+//! Bench: the ablations — keep-alive TTL sweep, serverless-vs-dedicated
+//! cost crossover, the §5 memory recommender, and (with artifacts) the
+//! Pallas-vs-reference kernel comparison.
+//!
+//! `cargo bench --bench bench_ablation`
+
+use lambdaserve::experiments::{run, EngineKind, ExpCtx};
+use std::time::Instant;
+
+fn main() {
+    let mut ctx = ExpCtx::new(EngineKind::Mock);
+    ctx.out_dir = "results".into();
+    for id in ["abl-keepalive", "abl-provisioned", "abl-memopt"] {
+        let t0 = Instant::now();
+        run(id, &ctx).expect(id);
+        println!("[{id} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+    // The kernel ablation needs real artifacts.
+    let mut pjrt = ExpCtx::new(EngineKind::Pjrt);
+    pjrt.out_dir = "results".into();
+    pjrt.reps = 10;
+    let t0 = Instant::now();
+    run("abl-kernel", &pjrt).expect("abl-kernel");
+    println!("[abl-kernel regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,31 @@
+//! Bench: Table 1 regeneration + billing-meter hot-path timing.
+//!
+//! `cargo bench --bench bench_billing`
+
+use lambdaserve::configparse::PricingConfig;
+use lambdaserve::experiments::{run_table1, EngineKind, ExpCtx};
+use lambdaserve::platform::BillingMeter;
+use std::time::{Duration, Instant};
+
+fn main() {
+    // Regenerate Table 1 (also writes results/table1.csv).
+    let mut ctx = ExpCtx::new(EngineKind::Mock);
+    ctx.out_dir = "results".into();
+    run_table1(&ctx).expect("table1");
+
+    // Hot path: charge() throughput (the meter sits on every invoke).
+    let meter = BillingMeter::new(PricingConfig::default());
+    let n = 200_000;
+    let t0 = Instant::now();
+    for i in 0..n {
+        meter
+            .charge("f", 1024, Duration::from_millis(100 + (i % 1000)))
+            .unwrap();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\nbilling.charge: {n} calls in {:.3}s = {:.0} ns/call",
+        dt.as_secs_f64(),
+        dt.as_nanos() as f64 / n as f64
+    );
+}

@@ -1,0 +1,21 @@
+//! Bench: Figures 4-6 — cold execution across memory sizes (real
+//! model load on every cold start; the 10-minute gaps are virtual).
+//!
+//! `cargo bench --bench bench_cold` regenerates results/fig{4,5,6}.csv.
+
+use lambdaserve::experiments::{run, EngineKind, ExpCtx};
+use std::time::Instant;
+
+fn main() {
+    let kind = match std::env::var("LAMBDASERVE_ENGINE").as_deref() {
+        Ok("mock") => EngineKind::Mock,
+        _ => EngineKind::Pjrt,
+    };
+    let mut ctx = ExpCtx::new(kind);
+    ctx.out_dir = "results".into();
+    for id in ["fig4", "fig5", "fig6"] {
+        let t0 = Instant::now();
+        run(id, &ctx).expect(id);
+        println!("[{id} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+}

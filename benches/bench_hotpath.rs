@@ -1,0 +1,85 @@
+//! Bench: L3 hot-path microbenchmarks (§Perf).
+//!
+//! The platform must not be the bottleneck: the paper's latency minus
+//! prediction time is a near-constant network/gateway cost, so our
+//! per-invoke platform overhead (routing + pool + governor + billing +
+//! metrics, everything except compute and simulated sleeps) has to sit
+//! in the microsecond range. This bench measures it, plus the
+//! substrate hot paths it is built on.
+//!
+//! `cargo bench --bench bench_hotpath`
+
+use lambdaserve::configparse::{BootstrapConfig, PlatformConfig};
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::{synthetic_image, MockEngine, MockModelCosts};
+use lambdaserve::stats::Histogram;
+use lambdaserve::util::json::Json;
+use lambdaserve::util::{ManualClock, SplitMix64};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warm up.
+    for _ in 0..iters.min(1000) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<44} {per:>12.0} ns/op   ({iters} iters)");
+    per
+}
+
+fn main() {
+    println!("=== L3 hot-path microbenchmarks ===\n");
+
+    // The headline number: full invoke pipeline overhead with a
+    // zero-cost model, no simulated delays, warm container, manual
+    // clock (sleeps are no-ops) — everything left is platform work.
+    let engine = Arc::new(MockEngine::new(vec![MockModelCosts {
+        predict: Duration::ZERO,
+        init_run: Duration::ZERO,
+        compile: Duration::ZERO,
+        manifest: MockModelCosts::paper_like("m", 1, 5.0, 85).manifest,
+    }]));
+    let config = PlatformConfig {
+        bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+        ..Default::default()
+    };
+    let clock = ManualClock::new();
+    let platform = Invoker::new(config, engine, clock);
+    platform.deploy("f", "m", "pallas", 1536).unwrap();
+    platform.invoke("f", 0).unwrap(); // warm the container
+    let mut seed = 0u64;
+    bench("invoke (warm, zero-cost model) = L3 overhead", 100_000, || {
+        seed += 1;
+        platform.invoke("f", seed).unwrap();
+    });
+
+    // Substrate hot paths.
+    let mut h = Histogram::new();
+    let mut rng = SplitMix64::new(1);
+    bench("histogram.record", 1_000_000, || {
+        h.record(rng.gen_range(1, 10_000_000_000));
+    });
+
+    let mut rng2 = SplitMix64::new(2);
+    bench("splitmix64.next_u64", 1_000_000, || {
+        std::hint::black_box(rng2.next_u64());
+    });
+
+    bench("synthetic_image 224x224", 200, || {
+        std::hint::black_box(synthetic_image(224, 224, 7));
+    });
+
+    // Read at runtime so the bench binary builds without artifacts.
+    if let Ok(manifest) = std::fs::read_to_string("artifacts/squeezenet.json") {
+        bench("json parse (squeezenet manifest)", 2_000, || {
+            std::hint::black_box(Json::parse(&manifest).unwrap());
+        });
+    }
+
+    println!("\nmetrics snapshot: {} records collected", platform.metrics.len());
+}

@@ -1,0 +1,24 @@
+//! Bench: Figure 7 (workload spec) and Figures 8-10 — scalability
+//! under the step ramp, on the calibrated mock engine + real clock
+//! (the paper-scale ramp peaks at 100 req/s with multi-second service
+//! times — horizontal-scale territory; `--scale` shrinks it shape-
+//! preserving, default 0.2).
+//!
+//! `cargo bench --bench bench_scale` regenerates results/fig{7,8,9,10}.csv.
+
+use lambdaserve::experiments::{run, EngineKind, ExpCtx};
+use std::time::Instant;
+
+fn main() {
+    let mut ctx = ExpCtx::new(EngineKind::Mock);
+    ctx.out_dir = "results".into();
+    ctx.scale = std::env::var("LAMBDASERVE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    for id in ["fig7", "fig8", "fig9", "fig10"] {
+        let t0 = Instant::now();
+        run(id, &ctx).expect(id);
+        println!("[{id} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench: Figures 1-3 — warm execution across memory sizes, all three
+//! models, on the REAL artifacts (PJRT engine).
+//!
+//! `cargo bench --bench bench_warm` regenerates results/fig{1,2,3}.csv.
+//! Set LAMBDASERVE_ENGINE=mock for a fast calibrated run.
+
+use lambdaserve::experiments::{run, EngineKind, ExpCtx};
+use std::time::Instant;
+
+fn main() {
+    let kind = match std::env::var("LAMBDASERVE_ENGINE").as_deref() {
+        Ok("mock") => EngineKind::Mock,
+        _ => EngineKind::Pjrt,
+    };
+    let mut ctx = ExpCtx::new(kind);
+    ctx.out_dir = "results".into();
+    // The paper's 25 sequential requests; LAMBDASERVE_REPS trims the
+    // sweep for time-boxed runs (the printed tables show the count).
+    ctx.reps = std::env::var("LAMBDASERVE_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(25);
+    for id in ["fig1", "fig2", "fig3"] {
+        let t0 = Instant::now();
+        run(id, &ctx).expect(id);
+        println!("[{id} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,64 @@
+//! The paper's core experiment, end to end on real inference: warm and
+//! cold memory sweeps for one model, printed side by side — a compact
+//! version of Figures 1 & 4 (SqueezeNet by default).
+//!
+//!     cargo run --release --example paper_sweep [-- model [reps]]
+//!
+//! 10-minute cold gaps run on the manual clock (instant), while every
+//! prediction and model load is real XLA compute; see DESIGN.md §4.
+
+use lambdaserve::configparse::{PlatformConfig, MEMORY_SIZES_2017};
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::PjrtEngine;
+use lambdaserve::stats::mean_ci95;
+use lambdaserve::util::ManualClock;
+use lambdaserve::workload::{run_closed_loop, ColdProbe, WarmProbe};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("squeezenet");
+    let reps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+
+    let config = PlatformConfig::default();
+    let engine = Arc::new(PjrtEngine::new(Path::new(&config.artifacts_dir), 1)?);
+    println!(
+        "{model}: warm ({reps} reqs @1s) vs cold (5 reqs @10min) across memory sizes\n"
+    );
+    println!(
+        "{:>8}  {:>12} {:>12}  {:>12} {:>12}",
+        "MB", "warm lat(s)", "warm pred(s)", "cold lat(s)", "cold pred(s)"
+    );
+
+    for mem in MEMORY_SIZES_2017 {
+        let clock = ManualClock::new();
+        let platform = Invoker::new(config.clone(), engine.clone(), clock);
+        if platform.deploy("f", model, "pallas", mem).is_err() {
+            println!("{mem:>8}  {:>12} (below the model's peak-memory floor)", "-");
+            continue;
+        }
+        // Warm probe (discarded first request absorbs the cold start).
+        let warm = run_closed_loop(
+            &platform,
+            "f",
+            &WarmProbe { requests: reps, interval: Duration::from_secs(1) },
+            1,
+        );
+        let (wl, _) = mean_ci95(&warm.latencies_s());
+        let (wp, _) = mean_ci95(&warm.predicts_s());
+
+        // Cold probe: clear the pool, then 10-minute-gap requests.
+        platform.evict_all();
+        let cold = run_closed_loop(&platform, "f", &ColdProbe::default(), 2);
+        assert_eq!(cold.cold_count(), cold.ok_samples().len());
+        let (cl, _) = mean_ci95(&cold.latencies_s());
+        let (cp, _) = mean_ci95(&cold.predicts_s());
+
+        println!("{mem:>8}  {wl:>12.3} {wp:>12.3}  {cl:>12.3} {cp:>12.3}");
+    }
+    println!("\n(the paper's shape: both fall with memory; cold stays several");
+    println!(" seconds above warm because sandbox+runtime+model-load dominate)");
+    Ok(())
+}

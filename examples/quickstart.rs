@@ -1,0 +1,61 @@
+//! Quickstart: deploy a model on the serverless platform and serve a
+//! few predictions, printing the cold/warm latency split and the bill.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Uses the real PJRT engine and real AOT artifacts. The first request
+//! pays the cold start (sandbox + runtime init + package fetch + real
+//! model compile/load); subsequent requests reuse the warm container.
+
+use lambdaserve::configparse::PlatformConfig;
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::PjrtEngine;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let config = PlatformConfig::default();
+    println!("loading AOT artifacts from {}/ ...", config.artifacts_dir);
+    let engine = Arc::new(PjrtEngine::new(Path::new(&config.artifacts_dir), 1)?);
+
+    // A live platform: real clock, real compute, simulated Lambda
+    // bootstrap + CPU-share semantics.
+    let platform = Invoker::live(config, engine);
+
+    // Deploy SqueezeNet at the paper's mid-range memory size.
+    let spec = platform.deploy("classify", "squeezenet", "pallas", 1024)?;
+    println!(
+        "deployed `{}` -> {} @ {} MB (CPU share {:.2})\n",
+        spec.name,
+        spec.model,
+        spec.memory_mb,
+        platform.governor().share(spec.memory_mb)
+    );
+
+    for seed in 0..5u64 {
+        let out = platform
+            .invoke("classify", seed)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let r = &out.record;
+        println!(
+            "request {seed}: class={:<4} ({:.3} prob)  {}  predict={:.3}s  \
+             response={:.3}s  billed={} ms  ${:.8}",
+            out.prediction.top1,
+            out.prediction.top_prob,
+            r.start,
+            r.predict.as_secs_f64(),
+            r.response().as_secs_f64(),
+            r.billed_ms,
+            r.cost_dollars,
+        );
+    }
+
+    println!(
+        "\ntotal bill: ${:.8} over {} invocations ({} cold); {:.2} GB-s",
+        platform.billing.total_dollars(),
+        platform.metrics.len(),
+        platform.metrics.cold_count(),
+        platform.billing.total_gb_seconds(),
+    );
+    Ok(())
+}

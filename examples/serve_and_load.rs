@@ -1,0 +1,98 @@
+//! END-TO-END VALIDATION DRIVER: boot the full serving stack (real AOT
+//! model on the PJRT engine behind the HTTP gateway), fire a batched
+//! load of real HTTP requests, and report latency/throughput — proving
+//! all layers compose: Pallas kernel -> JAX model -> HLO artifact ->
+//! Rust PJRT runtime -> container platform -> HTTP gateway -> client.
+//!
+//!     make artifacts && cargo run --release --example serve_and_load
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use lambdaserve::configparse::PlatformConfig;
+use lambdaserve::exec::ThreadPool;
+use lambdaserve::gateway::Gateway;
+use lambdaserve::httpd::{http_get, http_post};
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::PjrtEngine;
+use lambdaserve::stats::Summary;
+use lambdaserve::util::json::Json;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const REQUESTS: usize = 40;
+const CONCURRENCY: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let config = PlatformConfig::default();
+    println!("booting gateway with real PJRT engine (2 shards)...");
+    let engine = Arc::new(PjrtEngine::new(Path::new(&config.artifacts_dir), 2)?);
+    let platform = Arc::new(Invoker::live(config, engine));
+    let gw = Gateway::bind("127.0.0.1:0", 16, platform.clone())?;
+    let addr = gw.local_addr().to_string();
+    let shutdown = gw.shutdown_handle();
+    let server = std::thread::spawn(move || gw.serve());
+
+    // Deploy over HTTP, like a real operator would.
+    let tmo = Duration::from_secs(300);
+    let r = http_post(&addr, "/v1/functions?name=classify&model=squeezenet&mem=1536", b"", tmo)?;
+    anyhow::ensure!(r.status == 200, "deploy failed: {}", r.body_str());
+    println!("deployed squeezenet @1536MB via POST /v1/functions");
+
+    // Pre-warm to the target concurrency (pays the compiles up front).
+    let t0 = Instant::now();
+    let r = http_post(&addr, &format!("/v1/prewarm/classify?n={CONCURRENCY}"), b"", tmo)?;
+    anyhow::ensure!(r.status == 200, "prewarm failed: {}", r.body_str());
+    println!("pre-warmed {CONCURRENCY} containers in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Batched load: REQUESTS real HTTP GETs at CONCURRENCY in flight.
+    println!("\nfiring {REQUESTS} requests at concurrency {CONCURRENCY}...");
+    let pool = ThreadPool::new(CONCURRENCY, "loadgen");
+    let lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let addr = addr.clone();
+            let lat = lat.clone();
+            pool.submit(move || {
+                let t = Instant::now();
+                let r = http_get(&addr, &format!("/v1/invoke/classify?seed={i}"), tmo).unwrap();
+                assert_eq!(r.status, 200, "{}", r.body_str());
+                let j = Json::parse(&r.body_str()).unwrap();
+                assert!(j.get("top1").unwrap().as_f64().is_some());
+                lat.lock().unwrap().push(t.elapsed().as_secs_f64());
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lats = lat.lock().unwrap().clone();
+    let s = Summary::from_samples(&lats);
+    println!("\n=== end-to-end serving report (squeezenet @1536MB, pallas artifact) ===");
+    println!("requests:    {REQUESTS} ok, 0 failed");
+    println!("wall time:   {wall:.2}s");
+    println!("throughput:  {:.2} req/s", REQUESTS as f64 / wall);
+    println!(
+        "latency:     mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s max={:.3}s",
+        s.mean, s.p50, s.p95, s.p99, s.max
+    );
+
+    let stats = http_get(&addr, "/v1/stats", tmo)?;
+    let j = Json::parse(&stats.body_str())?;
+    println!(
+        "platform:    {} invocations, {} cold starts, {} containers, peak conc {}, ${:.6} billed",
+        j.get("invocations").unwrap().as_u64().unwrap(),
+        j.get("cold_starts").unwrap().as_u64().unwrap(),
+        j.get("containers_alive").unwrap().as_u64().unwrap(),
+        j.get("peak_concurrency").unwrap().as_u64().unwrap(),
+        j.get("total_cost_dollars").unwrap().as_f64().unwrap(),
+    );
+
+    shutdown.shutdown();
+    server.join().unwrap()?;
+    println!("\nall layers composed: pallas kernel -> HLO artifact -> PJRT -> platform -> HTTP");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! The paper's §5 claim, quantified: "this bimodal latency
+//! distribution can risk the adherence to SLAs".
+//!
+//! Simulates a day of sparse production traffic against one deployed
+//! function, then reports the latency distribution (p50/p95/p99/max),
+//! the cold fraction, and the SLA-violation rate for a range of SLA
+//! targets — with and without the §5 "keep warm" mitigation
+//! (pre-warmed containers + short keep-alive vs default).
+//!
+//!     cargo run --release --example sla_analysis
+
+use lambdaserve::configparse::PlatformConfig;
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::MockEngine;
+use lambdaserve::stats::Summary;
+use lambdaserve::util::ManualClock;
+use lambdaserve::workload::{run_closed_loop, PoissonArrivals};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn run_day(keep_alive_s: f64, prewarm: usize) -> (Summary, f64, Vec<(f64, f64)>) {
+    let engine = Arc::new(MockEngine::paper_zoo());
+    let config = PlatformConfig { keep_alive_s, ..Default::default() };
+    let clock = ManualClock::new();
+    let platform = Invoker::new(config, engine, clock);
+    platform.deploy("api", "squeezenet", "pallas", 1024).unwrap();
+    if prewarm > 0 {
+        platform.prewarm("api", prewarm).unwrap();
+    }
+    // One request every ~4 minutes for 24 h ≈ 360 requests.
+    let sched = PoissonArrivals {
+        rps: 1.0 / 240.0,
+        duration: Duration::from_secs(24 * 3600),
+        seed: 42,
+    };
+    let report = run_closed_loop(&platform, "api", &sched, 7);
+    let lats = report.latencies_s();
+    let summary = Summary::from_samples(&lats);
+    let cold_frac = report.cold_count() as f64 / report.ok_samples().len().max(1) as f64;
+    let slas = [0.5, 1.0, 2.0, 5.0]
+        .iter()
+        .map(|sla| {
+            let viol = lats.iter().filter(|l| **l > *sla).count() as f64
+                / lats.len().max(1) as f64;
+            (*sla, viol)
+        })
+        .collect();
+    (summary, cold_frac, slas)
+}
+
+fn print_block(name: &str, s: &Summary, cold: f64, slas: &[(f64, f64)]) {
+    println!("--- {name} ---");
+    println!(
+        "  n={}  mean={:.3}s  p50={:.3}s  p95={:.3}s  p99={:.3}s  max={:.3}s",
+        s.n, s.mean, s.p50, s.p95, s.p99, s.max
+    );
+    println!("  cold-start fraction: {:.1}%", cold * 100.0);
+    for (sla, viol) in slas {
+        println!("  SLA {sla:>4.1}s -> {:5.1}% violations", viol * 100.0);
+    }
+    println!();
+}
+
+fn main() {
+    println!("24h of sparse traffic (Poisson, ~4 min between requests), squeezenet @1024MB\n");
+
+    // The paper's situation: default platform, no mitigation.
+    let (s, cold, slas) = run_day(300.0, 0);
+    print_block("default platform (5 min keep-alive)", &s, cold, &slas);
+
+    // §5 mitigation 1: platform keeps containers warm much longer.
+    let (s, cold, slas) = run_day(3600.0, 0);
+    print_block("long keep-alive (60 min)", &s, cold, &slas);
+
+    // §5 mitigation 2: declarative pre-warming (and long TTL).
+    let (s, cold, slas) = run_day(3600.0, 2);
+    print_block("pre-warmed x2 + 60 min keep-alive", &s, cold, &slas);
+
+    println!("the bimodality (p99 >> p50) tracks the cold fraction — exactly the");
+    println!("paper's SLA-risk argument; keep-warm mitigations collapse the tail.");
+}

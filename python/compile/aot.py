@@ -1,0 +1,128 @@
+"""AOT bridge: lower the model zoo to HLO-text artifacts for Rust.
+
+Interchange format is HLO **text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  Both entry points
+are single-array-valued and lowered with ``return_tuple=False`` — the
+0.5.1 C API segfaults converting tuple buffers to literals, so the
+calling convention avoids tuples entirely (see compile.model).
+
+Per model this emits into ``--out-dir`` (default ``artifacts/``):
+
+* ``<name>_init.hlo.txt``  — ``init() -> (params...)``
+* ``<name>_infer.hlo.txt`` — ``infer(params..., image) -> (probs, top1)``
+* ``<name>.json``          — manifest: shapes, param spec, FLOPs,
+  paper-reported size / peak memory (used by the platform's
+  deployability floor and the billing model).
+
+plus a ``zoo.json`` index.  Python never runs after this; the Rust
+binary is self-contained once artifacts exist.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--height 224]
+                          [--models squeezenet,resnet18,resnext50]
+                          [--variant pallas|ref|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, height: int, width: int, use_pallas: bool):
+    """Lower init + infer for one zoo entry; returns (init_txt, infer_txt)."""
+    init = M.make_init(name, height, width)
+    infer = M.make_infer(name, height, width, use_pallas=use_pallas)
+    pspec = M.param_spec(name, height, width)
+
+    init_lowered = jax.jit(init).lower()
+    arg_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in pspec.shapes]
+    arg_specs.append(jax.ShapeDtypeStruct((1, height, width, 3), jnp.float32))
+    infer_lowered = jax.jit(infer).lower(*arg_specs)
+    return to_hlo_text(init_lowered), to_hlo_text(infer_lowered)
+
+
+def build(out_dir: str, models, height: int, width: int, variant: str,
+          verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    index = {"height": height, "width": width, "seed": M.SEED, "models": []}
+    for name in models:
+        info = M.ZOO[name]
+        ctx = M.spec(name, height, width)
+        entry = {
+            "name": name,
+            "input_shape": [1, height, width, 3],
+            "num_classes": M.NUM_CLASSES,
+            "param_count": ctx.spec.count,
+            "param_elements": ctx.spec.num_elements(),
+            "param_bytes": ctx.spec.size_bytes(),
+            "flops": ctx.flops,
+            "paper_size_mb": info.paper_size_mb,
+            "paper_peak_mem_mb": info.paper_peak_mem_mb,
+            "params": ctx.spec.to_json(),
+            "artifacts": {},
+        }
+        variants = ["pallas", "ref"] if variant == "both" else [variant]
+        for var in variants:
+            t0 = time.time()
+            init_txt, infer_txt = lower_model(name, height, width,
+                                              use_pallas=(var == "pallas"))
+            suffix = "" if var == "pallas" else "_ref"
+            init_path = f"{name}{suffix}_init.hlo.txt"
+            infer_path = f"{name}{suffix}_infer.hlo.txt"
+            with open(os.path.join(out_dir, init_path), "w") as f:
+                f.write(init_txt)
+            with open(os.path.join(out_dir, infer_path), "w") as f:
+                f.write(infer_txt)
+            entry["artifacts"][var] = {"init": init_path, "infer": infer_path}
+            if verbose:
+                print(f"[aot] {name}/{var}: init={len(init_txt)/1e3:.0f}kB "
+                      f"infer={len(infer_txt)/1e3:.0f}kB "
+                      f"({time.time()-t0:.1f}s)")
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(entry, f, indent=2)
+        index["models"].append(entry)
+    with open(os.path.join(out_dir, "zoo.json"), "w") as f:
+        json.dump(index, f, indent=2)
+    return index
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(M.ZOO))
+    ap.add_argument("--height", type=int, default=224)
+    ap.add_argument("--width", type=int, default=0,
+                    help="defaults to --height")
+    ap.add_argument("--variant", choices=["pallas", "ref", "both"],
+                    default="both")
+    args = ap.parse_args()
+    width = args.width or args.height
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    for m in models:
+        if m not in M.ZOO:
+            raise SystemExit(f"unknown model {m!r}; zoo: {list(M.ZOO)}")
+    build(args.out_dir, models, args.height, width, args.variant)
+
+
+if __name__ == "__main__":
+    main()

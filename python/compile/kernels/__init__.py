@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the inference hot-spots + jnp oracles."""
+
+from compile.kernels.matmul import (  # noqa: F401
+    conv1x1,
+    matmul_fused,
+    mxu_utilization_estimate,
+    softmax,
+    vmem_footprint_bytes,
+)

@@ -1,0 +1,211 @@
+"""Layer-1 Pallas kernels: tiled fused matmul (+bias, +ReLU) and softmax.
+
+These are the inference hot-spots of the three paper models:
+
+* every 1x1 convolution (the dominant FLOP class in SqueezeNet fire
+  modules and ResNeXt bottlenecks) is lowered to a ``(N*H*W, Cin) x
+  (Cin, Cout)`` matmul and dispatched to :func:`matmul_fused`;
+* the classifier head (global-pool -> 1000-way linear -> softmax) uses
+  :func:`matmul_fused` + :func:`softmax`.
+
+The matmul kernel is blocked for the TPU memory hierarchy: ``(bm, bk)``
+x ``(bk, bn)`` VMEM tiles streamed over a 3-D grid ``(M/bm, N/bn,
+K/bk)`` with an accumulator initialised on the first K-step.  On this
+CPU-only image the kernels MUST run with ``interpret=True`` (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute); interpret mode lowers the same grid to plain HLO loops so the
+AOT artifact runs anywhere.  See DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile sizes.  128 is the MXU systolic-array edge; a
+# (128, 128) f32 tile is 64 KiB, so x/w/o tiles plus double-buffering fit
+# comfortably in the ~16 MiB VMEM budget (see EXPERIMENTS.md §Perf for
+# the footprint table).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+# interpret=True is mandatory on CPU-only images; kept as a module flag
+# so a TPU build can flip it in one place.
+INTERPRET = True
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nsteps_k: int, has_bias: bool,
+                   relu: bool, b_ref=None):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    # Dummy use keeps signature uniform; b_ref handled in fused kernel.
+    del nsteps_k, has_bias, relu, b_ref
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def _matmul_fused_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps_k: int,
+                         relu: bool):
+    """Matmul tile with bias add + optional ReLU fused on the last K-step.
+
+    Fusing the epilogue into the kernel avoids a second HBM round-trip
+    over the (M, N) output — the same motivation as fused epilogues in
+    cuBLAS/CUTLASS, re-expressed for the Pallas grid.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == nsteps_k - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def matmul_fused(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                 *, relu: bool = False, bm: int = DEFAULT_BM,
+                 bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """``relu(x @ w + b)`` as a tiled Pallas kernel.
+
+    Arbitrary ``(M, K) x (K, N)`` shapes are supported: inputs are
+    zero-padded up to the tile grid and the result is sliced back.  Zero
+    padding is exact for matmul + bias; for ReLU it is exact as well
+    because padded rows/cols are discarded before any later use.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul_fused expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if interpret is None:
+        interpret = INTERPRET
+
+    m, k = x.shape
+    _, n = w.shape
+    # Shrink tiles for small problems so tiny layers do not pay a full
+    # 128^3 tile of padded zeros.
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    if b is None:
+        bias = jnp.zeros((np_,), dtype=x.dtype)
+    else:
+        if b.shape != (n,):
+            raise ValueError(f"bias shape {b.shape} != ({n},)")
+        bias = _pad_to(b, 0, bn)
+
+    kernel = functools.partial(_matmul_fused_kernel, nsteps_k=grid[2], relu=relu)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bias)
+    return out[:m, :n]
+
+
+def _round_up(v: int, multiple: int) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def conv1x1(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None, *,
+            relu: bool = False, **tile_kw) -> jax.Array:
+    """Pointwise (1x1, stride-1) convolution via the Pallas matmul.
+
+    ``x``: NHWC activations, ``w``: (Cin, Cout) weights.  The spatial
+    dims are flattened into the matmul M axis — a pure layout reshape,
+    no data movement in HLO.
+    """
+    if x.ndim != 4:
+        raise ValueError(f"conv1x1 expects NHWC, got {x.shape}")
+    n, h, w_, c = x.shape
+    cin, cout = w.shape
+    if c != cin:
+        raise ValueError(f"channel mismatch: x has {c}, w has {cin}")
+    flat = x.reshape(n * h * w_, c)
+    out = matmul_fused(flat, w, b, relu=relu, **tile_kw)
+    return out.reshape(n, h, w_, cout)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    """Numerically-stable softmax over the last axis of one block row."""
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax(x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
+    """Row softmax as a single-block Pallas kernel (classifier head)."""
+    if x.ndim != 2:
+        raise ValueError(f"softmax expects 2-D (batch, classes), got {x.shape}")
+    if interpret is None:
+        interpret = INTERPRET
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int,
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (x, w, bias, out tiles).
+
+    Used by EXPERIMENTS.md §Perf; interpret-mode wallclock is not a TPU
+    proxy, so block-shape tuning is driven by this + MXU-utilization
+    estimates instead.
+    """
+    x_tile = bm * bk * dtype_bytes
+    w_tile = bk * bn * dtype_bytes
+    b_tile = bn * dtype_bytes
+    o_tile = bm * bn * dtype_bytes
+    return x_tile + w_tile + b_tile + o_tile
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int,
+                             bk: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes doing useful work, given padding waste."""
+    mp, np_, kp = (_round_up(m, bm), _round_up(n, bn), _round_up(k, bk))
+    useful = m * n * k
+    issued = mp * np_ * kp
+    # Per-tile systolic efficiency: tiles narrower than the MXU edge
+    # leave lanes idle.
+    lane = min(bm, mxu) * min(bn, mxu) / float(mxu * mxu)
+    return (useful / issued) * lane

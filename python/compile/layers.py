@@ -1,0 +1,222 @@
+"""Layer-2 building blocks shared by the three paper models.
+
+Everything is NHWC / HWIO, inference-only (BatchNorm is folded into the
+preceding convolution's weight+bias at init time — see
+:func:`init_conv`), and batch-size 1 on the request path.
+
+The 1x1 stride-1 convolutions route through the Layer-1 Pallas kernel
+(:func:`compile.kernels.conv1x1`); spatial convolutions use XLA's native
+``conv_general_dilated``.  ``use_pallas=False`` swaps every kernel call
+for its jnp oracle, which gives an end-to-end pure-XLA reference model
+used by the python tests *and* an AOT "baseline" artifact variant for
+the kernel-ablation bench.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref as kref
+
+Params = List[jax.Array]
+
+
+class ParamSpec:
+    """Ordered record of every parameter array a model consumes.
+
+    The AOT manifest serializes this so the Rust runtime knows the
+    artifact's calling convention: ``init() -> flat f32[N]`` (all
+    params concatenated in spec order, already He/bias-scaled) and
+    ``infer(param_0, ..., param_{P-1}, image) -> probs`` with params in
+    spec order.  (A flat init output + separate infer args avoids XLA
+    tuple literals entirely — the xla_extension 0.5.1 C API crashes
+    converting large tuple buffers to literals.)
+    """
+
+    def __init__(self):
+        self.names: List[str] = []
+        self.shapes: List[Tuple[int, ...]] = []
+        self.stds: List[float] = []
+
+    def add(self, name: str, shape: Tuple[int, ...],
+            std: float = 1.0) -> int:
+        self.names.append(name)
+        self.shapes.append(tuple(int(d) for d in shape))
+        self.stds.append(float(std))
+        return len(self.shapes) - 1
+
+    @property
+    def count(self) -> int:
+        return len(self.shapes)
+
+    def num_elements(self) -> int:
+        return sum(int(math.prod(s)) for s in self.shapes)
+
+    def size_bytes(self, dtype_bytes: int = 4) -> int:
+        return self.num_elements() * dtype_bytes
+
+    def to_json(self) -> list:
+        return [{"name": n, "shape": list(s)}
+                for n, s in zip(self.names, self.shapes)]
+
+
+class Ctx:
+    """Build-time context threaded through a model definition.
+
+    One pass with ``mode='spec'`` records the ParamSpec and FLOP count;
+    ``mode='init'`` generates He-initialised parameters; ``mode='apply'``
+    consumes the params list in the same order.  A single model
+    definition therefore cannot go out of sync with its init or its
+    manifest.
+    """
+
+    def __init__(self, mode: str, *, key: Optional[jax.Array] = None,
+                 params: Optional[Params] = None, use_pallas: bool = True):
+        assert mode in ("spec", "init", "apply")
+        self.mode = mode
+        self.key = key
+        self.params = list(params) if params is not None else []
+        self.cursor = 0
+        self.spec = ParamSpec()
+        self.flops = 0
+        self.use_pallas = use_pallas
+
+    def param(self, name: str, shape: Tuple[int, ...],
+              fan_in: int, std_scale: float = 1.0) -> Optional[jax.Array]:
+        # He initialisation std, recorded in the spec; the init
+        # artifact applies it to slices of one flat RNG draw.
+        std = math.sqrt(2.0 / max(fan_in, 1)) * std_scale
+        self.spec.add(name, shape, std)
+        if self.mode != "apply":
+            return None
+        p = self.params[self.cursor]
+        self.cursor += 1
+        assert p.shape == shape, f"{name}: {p.shape} != {shape}"
+        return p
+
+    def bias(self, name: str, n: int) -> Optional[jax.Array]:
+        # Folded-BN bias: small random offset (a trained BN beta is
+        # O(0.1)); keeps activations centred so deep stacks do not
+        # saturate to all-zero under ReLU with random weights.
+        self.spec.add(name, (n,), 0.1)
+        if self.mode != "apply":
+            return None
+        p = self.params[self.cursor]
+        self.cursor += 1
+        assert p.shape == (n,), name
+        return p
+
+
+def conv2d(ctx: Ctx, name: str, x, cin: int, cout: int, ksize: int,
+           stride: int = 1, padding: str = "SAME", relu: bool = True,
+           groups: int = 1, std_scale: float = 1.0):
+    """Convolution + folded-BN bias + optional ReLU.
+
+    1x1 stride-1 ungrouped convs dispatch to the Pallas matmul kernel;
+    everything else uses XLA's native convolution.  ``std_scale < 1``
+    mimics the zero-init-residual trick (He et al.) so deep residual
+    stacks keep unit-order activations under synthetic weights.
+    """
+    kshape = (ksize, ksize, cin // groups, cout)
+    fan_in = ksize * ksize * (cin // groups)
+    w = ctx.param(f"{name}.w", kshape, fan_in, std_scale)
+    b = ctx.bias(f"{name}.b", cout)
+
+    def flop_count(out_h, out_w):
+        return 2 * out_h * out_w * cout * fan_in
+
+    if ctx.mode != "apply":
+        # spec/init passes are shape-only: record dims + FLOP ledger,
+        # never build compute (keeps the init artifact to pure RNG).
+        return _SpecTensor.conv(x, cout, ksize, stride, padding, ctx,
+                                flop_count)
+
+    n, h, ww, _ = x.shape
+    if ksize == 1 and stride == 1 and groups == 1:
+        w2 = w.reshape(cin, cout)
+        if ctx.use_pallas:
+            out = pk.conv1x1(x, w2, b, relu=relu)
+        else:
+            out = kref.conv1x1_ref(x, w2, b, relu=relu)
+        ctx.flops += flop_count(h, ww)
+        return out
+
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    out = out + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    ctx.flops += flop_count(out.shape[1], out.shape[2])
+    return out
+
+
+class _SpecTensor:
+    """Shape-only tensor used during the ``spec`` pass (no compute)."""
+
+    def __init__(self, shape):
+        self.shape = tuple(int(d) for d in shape)
+
+    @staticmethod
+    def conv(x, cout, ksize, stride, padding, ctx, flop_count):
+        n, h, w, _ = x.shape
+        if padding == "SAME":
+            oh, ow = -(-h // stride), -(-w // stride)
+        else:
+            oh = (h - ksize) // stride + 1
+            ow = (w - ksize) // stride + 1
+        ctx.flops += flop_count(oh, ow)
+        return _SpecTensor((n, oh, ow, cout))
+
+    @staticmethod
+    def pool(x, ksize, stride, padding):
+        n, h, w, c = x.shape
+        if padding == "SAME":
+            oh, ow = -(-h // stride), -(-w // stride)
+        else:
+            oh = (h - ksize) // stride + 1
+            ow = (w - ksize) // stride + 1
+        return _SpecTensor((n, oh, ow, c))
+
+
+def maxpool(ctx: Ctx, x, ksize: int, stride: int, padding: str = "VALID"):
+    if ctx.mode != "apply":
+        return _SpecTensor.pool(x, ksize, stride, padding)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, ksize, ksize, 1),
+        (1, stride, stride, 1), padding)
+
+
+def global_avgpool(ctx: Ctx, x):
+    if ctx.mode != "apply":
+        return _SpecTensor((x.shape[0], x.shape[3]))
+    return jnp.mean(x, axis=(1, 2))
+
+
+def classifier(ctx: Ctx, name: str, x, cin: int, nclasses: int):
+    """Linear head + softmax; both on the Pallas kernels."""
+    w = ctx.param(f"{name}.w", (cin, nclasses), cin)
+    b = ctx.bias(f"{name}.b", nclasses)
+    ctx.flops += 2 * cin * nclasses
+    if ctx.mode != "apply":
+        return _SpecTensor((x.shape[0], nclasses))
+    if ctx.use_pallas:
+        logits = pk.matmul_fused(x, w, b)
+        probs = pk.softmax(logits)
+    else:
+        logits = kref.matmul_fused_ref(x, w, b)
+        probs = kref.softmax_ref(logits)
+    return probs
+
+
+def add_relu(ctx: Ctx, a, b):
+    if ctx.mode != "apply":
+        assert a.shape == b.shape, (a.shape, b.shape)
+        return a
+    return jnp.maximum(a + b, 0.0)

@@ -1,0 +1,5 @@
+"""The three paper models (SqueezeNet v1.0, ResNet-18, ResNeXt-50 32x4d)."""
+
+from compile.models.squeezenet import squeezenet_v10  # noqa: F401
+from compile.models.resnet18 import resnet18  # noqa: F401
+from compile.models.resnext50 import resnext50_32x4d  # noqa: F401

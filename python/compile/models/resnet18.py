@@ -1,0 +1,34 @@
+"""ResNet-18 (He et al., 2015) — the paper's 45 MB model.
+
+Basic residual blocks (two 3x3 convs); downsampling shortcuts are 1x1
+convs, which run on the Layer-1 Pallas kernel when stride is 1.  BN is
+folded into conv bias at init (inference-only), see layers.Ctx.
+"""
+
+from __future__ import annotations
+
+from compile import layers as L
+
+
+def _basic_block(ctx: L.Ctx, name: str, x, cin: int, cout: int, stride: int):
+    out = L.conv2d(ctx, f"{name}.conv1", x, cin, cout, 3, stride=stride)
+    out = L.conv2d(ctx, f"{name}.conv2", out, cout, cout, 3, relu=False,
+                   std_scale=0.2)
+    if stride != 1 or cin != cout:
+        x = L.conv2d(ctx, f"{name}.down", x, cin, cout, 1, stride=stride,
+                     relu=False)
+    return L.add_relu(ctx, out, x)
+
+
+def resnet18(ctx: L.Ctx, image):
+    """``image``: (1, H, W, 3) NHWC float32 -> (probs[1,1000])."""
+    x = L.conv2d(ctx, "conv1", image, 3, 64, 7, stride=2)
+    x = L.maxpool(ctx, x, 3, 2, padding="SAME")
+    plan = [(64, 64, 1), (64, 64, 1),
+            (64, 128, 2), (128, 128, 1),
+            (128, 256, 2), (256, 256, 1),
+            (256, 512, 2), (512, 512, 1)]
+    for i, (cin, cout, stride) in enumerate(plan):
+        x = _basic_block(ctx, f"layer{i}", x, cin, cout, stride)
+    x = L.global_avgpool(ctx, x)
+    return L.classifier(ctx, "fc", x, 512, 1000)

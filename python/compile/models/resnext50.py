@@ -1,0 +1,44 @@
+"""ResNeXt-50 32x4d (Xie et al., 2016) — the paper's 98 MB model.
+
+Bottleneck blocks with 32-way grouped 3x3 convolutions.  The 1x1
+reduce/expand convs around each grouped conv dominate the FLOPs and run
+on the Layer-1 Pallas kernel; the grouped conv uses XLA's native
+``feature_group_count`` path.
+"""
+
+from __future__ import annotations
+
+from compile import layers as L
+
+CARDINALITY = 32
+BASE_WIDTH = 4
+
+
+def _bottleneck(ctx: L.Ctx, name: str, x, cin: int, planes: int,
+                stride: int, expansion: int = 4):
+    width = planes * BASE_WIDTH // 64 * CARDINALITY  # e.g. planes=64 -> 128
+    cout = planes * expansion
+    out = L.conv2d(ctx, f"{name}.reduce", x, cin, width, 1)
+    out = L.conv2d(ctx, f"{name}.grouped", out, width, width, 3,
+                   stride=stride, groups=CARDINALITY)
+    out = L.conv2d(ctx, f"{name}.expand", out, width, cout, 1, relu=False,
+                   std_scale=0.2)
+    if stride != 1 or cin != cout:
+        x = L.conv2d(ctx, f"{name}.down", x, cin, cout, 1, stride=stride,
+                     relu=False)
+    return L.add_relu(ctx, out, x)
+
+
+def resnext50_32x4d(ctx: L.Ctx, image):
+    """``image``: (1, H, W, 3) NHWC float32 -> (probs[1,1000])."""
+    x = L.conv2d(ctx, "conv1", image, 3, 64, 7, stride=2)
+    x = L.maxpool(ctx, x, 3, 2, padding="SAME")
+    cin = 64
+    for stage, (planes, blocks, stride) in enumerate(
+            [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)]):
+        for b in range(blocks):
+            s = stride if b == 0 else 1
+            x = _bottleneck(ctx, f"s{stage}b{b}", x, cin, planes, s)
+            cin = planes * 4
+    x = L.global_avgpool(ctx, x)
+    return L.classifier(ctx, "fc", x, 2048, 1000)

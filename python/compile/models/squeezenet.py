@@ -1,0 +1,47 @@
+"""SqueezeNet v1.0 (Iandola et al., 2016) — the paper's 5 MB model.
+
+Fire modules: a 1x1 "squeeze" conv followed by parallel 1x1 and 3x3
+"expand" convs, concatenated.  The 1x1 convs (two thirds of the layers)
+run on the Layer-1 Pallas matmul kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import layers as L
+
+
+def _fire(ctx: L.Ctx, name: str, x, cin: int, squeeze: int, e1: int, e3: int):
+    s = L.conv2d(ctx, f"{name}.squeeze", x, cin, squeeze, 1)
+    a = L.conv2d(ctx, f"{name}.expand1", s, squeeze, e1, 1)
+    b = L.conv2d(ctx, f"{name}.expand3", s, squeeze, e3, 3)
+    if ctx.mode != "apply":
+        n, h, w, _ = a.shape
+        return L._SpecTensor((n, h, w, e1 + e3))
+    return jnp.concatenate([a, b], axis=-1)
+
+
+def squeezenet_v10(ctx: L.Ctx, image):
+    """``image``: (1, H, W, 3) NHWC float32 -> (probs[1,1000])."""
+    x = L.conv2d(ctx, "conv1", image, 3, 96, 7, stride=2)
+    x = L.maxpool(ctx, x, 3, 2)
+    x = _fire(ctx, "fire2", x, 96, 16, 64, 64)
+    x = _fire(ctx, "fire3", x, 128, 16, 64, 64)
+    x = _fire(ctx, "fire4", x, 128, 32, 128, 128)
+    x = L.maxpool(ctx, x, 3, 2)
+    x = _fire(ctx, "fire5", x, 256, 32, 128, 128)
+    x = _fire(ctx, "fire6", x, 256, 48, 192, 192)
+    x = _fire(ctx, "fire7", x, 384, 48, 192, 192)
+    x = _fire(ctx, "fire8", x, 384, 64, 256, 256)
+    x = L.maxpool(ctx, x, 3, 2)
+    x = _fire(ctx, "fire9", x, 512, 64, 256, 256)
+    # conv10: 1x1 conv straight to 1000 classes, then global average
+    # pool — SqueezeNet has no fully-connected layer.
+    x = L.conv2d(ctx, "conv10", x, 512, 1000, 1)
+    x = L.global_avgpool(ctx, x)
+    if ctx.mode != "apply":
+        return x
+    from compile.kernels import matmul as pk
+    from compile.kernels import ref as kref
+    return pk.softmax(x) if ctx.use_pallas else kref.softmax_ref(x)

@@ -1,0 +1,138 @@
+"""L1 analytic roofline: VMEM footprint + MXU utilization per layer.
+
+interpret=True wallclock is CPU-numpy time, not a TPU proxy, so block
+shapes for the Pallas matmul are chosen analytically (DESIGN.md
+§Hardware-Adaptation, EXPERIMENTS.md §Perf). This tool walks every
+1x1-conv / classifier matmul in a zoo model, evaluates candidate tile
+shapes, and reports estimated MXU utilization, VMEM per grid step, and
+the arithmetic-intensity-limited roofline fraction.
+
+Usage::
+
+    python -m compile.roofline [model] [--tiles 128,128,128]
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List, Tuple
+
+from compile import layers as L
+from compile import model as M
+from compile.kernels import matmul as pk
+
+# TPUv4-class reference constants (the translation target for the
+# paper's CPU numbers; see DESIGN.md §Hardware-Adaptation).
+VMEM_BYTES = 16 * 1024 * 1024
+HBM_BW = 1.2e12  # bytes/s
+MXU_FLOPS = 2 * 128 * 128 * 940e6  # one MXU pass/cycle at ~940 MHz
+
+
+def matmul_sites(name: str, height: int = 224,
+                 width: int = 224) -> List[Tuple[str, int, int, int]]:
+    """Every (site, M, K, N) the Pallas kernel serves in `name`'s graph:
+    1x1 stride-1 convs as (N*H*W, Cin, Cout) plus the classifier."""
+    info = M.ZOO[name]
+
+    sites: List[Tuple[str, int, int, int]] = []
+
+    class Probe(L.Ctx):
+        def param(self, pname, shape, fan_in, std_scale=1.0):
+            return super().param(pname, shape, fan_in, std_scale)
+
+    ctx = Probe("spec")
+
+    # Wrap conv2d/classifier to record matmul shapes during the spec walk.
+    orig_conv2d = L.conv2d
+    orig_classifier = L.classifier
+
+    def conv2d_probe(c, cname, x, cin, cout, ksize, stride=1, padding="SAME",
+                     relu=True, groups=1, std_scale=1.0):
+        if ksize == 1 and stride == 1 and groups == 1 and c is ctx:
+            n, h, w, _ = x.shape
+            sites.append((cname, n * h * w, cin, cout))
+        return orig_conv2d(c, cname, x, cin, cout, ksize, stride=stride,
+                           padding=padding, relu=relu, groups=groups,
+                           std_scale=std_scale)
+
+    def classifier_probe(c, cname, x, cin, nclasses):
+        if c is ctx:
+            sites.append((cname, x.shape[0], cin, nclasses))
+        return orig_classifier(c, cname, x, cin, nclasses)
+
+    L.conv2d = conv2d_probe
+    L.classifier = classifier_probe
+    try:
+        info.fn(ctx, L._SpecTensor((1, height, width, 3)))
+    finally:
+        L.conv2d = orig_conv2d
+        L.classifier = orig_classifier
+    return sites
+
+
+def analyze(name: str, bm: int, bn: int, bk: int,
+            height: int = 224, width: int = 224) -> List[dict]:
+    """Per-site analytics for one tile configuration."""
+    rows = []
+    for site, m, k, n in matmul_sites(name, height, width):
+        # Mirror the kernel's tile-shrinking for small problems
+        # (matmul_fused clamps each tile to the rounded problem dim).
+        bm_e = min(bm, pk._round_up(m, 8))
+        bn_e = min(bn, pk._round_up(n, 8))
+        bk_e = min(bk, pk._round_up(k, 8))
+        util = pk.mxu_utilization_estimate(m, n, k, bm_e, bn_e, bk_e)
+        vmem = pk.vmem_footprint_bytes(bm_e, bn_e, bk_e)
+        flops = 2 * m * k * n
+        bytes_moved = 4 * (m * k + k * n + m * n)
+        intensity = flops / bytes_moved
+        # Roofline: fraction of MXU peak reachable given HBM bandwidth.
+        roof = min(1.0, intensity * HBM_BW / MXU_FLOPS)
+        rows.append({
+            "site": site,
+            "mkn": (m, k, n),
+            "mxu_util": util,
+            "vmem_per_step": vmem,
+            "vmem_frac_2buf": 2 * vmem / VMEM_BYTES,
+            "intensity": intensity,
+            "roofline_frac": roof,
+            "flops": flops,
+        })
+    return rows
+
+
+def summarize(rows: List[dict]) -> dict:
+    total = sum(r["flops"] for r in rows) or 1
+    wutil = sum(r["mxu_util"] * r["flops"] for r in rows) / total
+    wroof = sum(r["roofline_frac"] * r["flops"] for r in rows) / total
+    return {
+        "sites": len(rows),
+        "kernel_gflops": total / 1e9,
+        "flops_weighted_mxu_util": wutil,
+        "flops_weighted_roofline": wroof,
+        "max_vmem_frac": max((r["vmem_frac_2buf"] for r in rows), default=0.0),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("model", nargs="?", default="squeezenet")
+    ap.add_argument("--tiles", default="128,128,128")
+    ap.add_argument("--height", type=int, default=224)
+    args = ap.parse_args()
+    bm, bn, bk = (int(x) for x in args.tiles.split(","))
+    rows = analyze(args.model, bm, bn, bk, args.height, args.height)
+    print(f"{args.model} @ {args.height}px, tiles {bm}x{bn}x{bk}")
+    print(f"{'site':18} {'M,K,N':>20} {'MXUutil':>8} {'VMEM/step':>10} {'roofline':>9}")
+    for r in rows:
+        m, k, n = r["mkn"]
+        print(f"{r['site']:18} {f'{m},{k},{n}':>20} {r['mxu_util']:8.2f} "
+              f"{r['vmem_per_step']/1024:8.1f}Ki {r['roofline_frac']:9.2f}")
+    s = summarize(rows)
+    print(f"\nFLOP-weighted MXU utilization: {s['flops_weighted_mxu_util']:.2f}")
+    print(f"FLOP-weighted roofline fraction: {s['flops_weighted_roofline']:.2f}")
+    print(f"peak VMEM (2x buffered): {s['max_vmem_frac']*100:.1f}% of 16 MiB")
+    print(f"kernel GFLOPs: {s['kernel_gflops']:.2f} over {s['sites']} sites")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""AOT bridge tests: HLO-text emission, manifest consistency, and an
+in-python round-trip (compile the emitted XlaComputation text back
+through the jax CPU client where possible).
+
+Full cross-language round-trip (rust loads the artifacts) is covered by
+``rust/tests/`` — these tests pin the python half of the contract.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+H = 64  # tiny build keeps the suite fast
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    index = aot.build(out, ["squeezenet"], H, H, variant="both",
+                      verbose=False)
+    return out, index
+
+
+def test_emits_all_files(built):
+    out, _ = built
+    names = set(os.listdir(out))
+    assert {"squeezenet_init.hlo.txt", "squeezenet_infer.hlo.txt",
+            "squeezenet_ref_init.hlo.txt", "squeezenet_ref_infer.hlo.txt",
+            "squeezenet.json", "zoo.json"} <= names
+
+
+def test_hlo_text_parses_as_hlo_module(built):
+    out, _ = built
+    for f in ("squeezenet_init.hlo.txt", "squeezenet_infer.hlo.txt"):
+        text = open(os.path.join(out, f)).read()
+        assert text.startswith("HloModule"), f
+        assert "ENTRY" in text, f
+
+
+def test_infer_hlo_has_param_count_plus_image(built):
+    out, _ = built
+    text = open(os.path.join(out, "squeezenet_infer.hlo.txt")).read()
+    spec = M.param_spec("squeezenet", H, H)
+    # HLO entry params: param_0..param_{P-1} then the image.
+    entry = text[text.index("ENTRY"):]
+    header = entry[:entry.index("\n")]
+    assert header.count("parameter(") == 0  # params listed in body
+    n_params = entry.count(" parameter(")
+    assert n_params == spec.count + 1
+
+
+def test_manifest_consistency(built):
+    out, index = built
+    man = json.load(open(os.path.join(out, "squeezenet.json")))
+    spec = M.param_spec("squeezenet", H, H)
+    assert man["param_count"] == spec.count
+    assert man["param_elements"] == spec.num_elements()
+    assert man["param_bytes"] == spec.size_bytes()
+    assert man["input_shape"] == [1, H, H, 3]
+    assert man["num_classes"] == 1000
+    assert man["paper_peak_mem_mb"] == 85
+    assert [tuple(p["shape"]) for p in man["params"]] == list(spec.shapes)
+    assert man["artifacts"]["pallas"]["infer"] == "squeezenet_infer.hlo.txt"
+    # zoo index mirrors the per-model manifest
+    zoo = json.load(open(os.path.join(out, "zoo.json")))
+    assert zoo["height"] == H and zoo["seed"] == M.SEED
+    assert zoo["models"][0]["name"] == "squeezenet"
+
+
+def test_build_rejects_unknown_model(tmp_path):
+    with pytest.raises(KeyError):
+        aot.build(str(tmp_path), ["vgg16"], H, H, variant="pallas",
+                  verbose=False)
+
+
+def test_init_hlo_is_rng_only(built):
+    """The init artifact must not contain the forward pass (no conv,
+    no dot beyond RNG plumbing) — cold-start cost attribution depends
+    on this separation."""
+    out, _ = built
+    text = open(os.path.join(out, "squeezenet_init.hlo.txt")).read()
+    assert "convolution" not in text
+
+
+def test_infer_hlo_contains_convolutions(built):
+    out, _ = built
+    text = open(os.path.join(out, "squeezenet_infer.hlo.txt")).read()
+    assert "convolution" in text  # 3x3/7x7 convs on the native path
+
+
+def test_hlo_text_parses_back(built):
+    """The emitted text must re-parse as an HloModule — the same parser
+    entry point (`HloModuleProto::from_text_file`) the rust runtime
+    uses.  Full execute-and-compare lives in rust/tests/."""
+    out, _ = built
+    from jax._src.lib import xla_client as xc
+    for f in ("squeezenet_init.hlo.txt", "squeezenet_infer.hlo.txt"):
+        text = open(os.path.join(out, f)).read()
+        mod = xc._xla.hlo_module_from_text(text)
+        proto = mod.as_serialized_hlo_module_proto()
+        assert len(proto) > 0
+
+
+def test_artifact_shapes_in_entry_signature(built):
+    """Entry computation signature must carry the manifest's image shape
+    and the (probs, top1) result tuple."""
+    out, _ = built
+    text = open(os.path.join(out, "squeezenet_infer.hlo.txt")).read()
+    entry = text[text.index("ENTRY"):]
+    assert f"f32[1,{H},{H},3]" in entry
+    assert "f32[1,1000]" in entry

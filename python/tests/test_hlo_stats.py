@@ -1,0 +1,55 @@
+"""Tests for the L2 HLO analysis tool."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import hlo_stats as H
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _lower(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_census_counts_known_graph():
+    spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    text = _lower(lambda a, b: jnp.maximum(a @ b + 1.0, 0.0), spec, spec)
+    census = H.op_census(text)
+    assert census.get("dot", 0) == 1
+    assert census.get("add", 0) >= 1
+    assert census.get("maximum", 0) >= 1
+
+
+def test_summarize_fields():
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = _lower(lambda a: jnp.tanh(a) * 2.0, spec)
+    s = H.summarize(text)
+    assert s["total_ops"] > 0
+    assert s["heavy_ops"] == 0
+    assert s["while_loops"] == 0
+
+
+def test_conv_counted_as_heavy():
+    x = jax.ShapeDtypeStruct((1, 8, 8, 3), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 3, 3, 4), jnp.float32)
+
+    def conv(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    s = H.summarize(_lower(conv, x, w))
+    assert s["heavy_ops"] == 1
+
+
+def test_pallas_kernel_lowers_to_while_loop():
+    """interpret-mode pallas grids become HLO while loops (the compact
+    lowering the runtime relies on — not unrolled per grid cell)."""
+    from compile.kernels import matmul as pk
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    text = _lower(lambda a, b: pk.matmul_fused(a, b, bm=16, bn=16, bk=16),
+                  spec, spec)
+    s = H.summarize(text)
+    assert s["while_loops"] >= 1
+    assert s["heavy_ops"] >= 1

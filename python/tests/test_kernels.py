@@ -1,0 +1,200 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including non-multiples of the tile sizes,
+the degenerate 1x1 case, and shapes straddling block boundaries) and
+dtypes; assert_allclose against ref.py is the core correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Small tiles so hypothesis shapes exercise multi-block grids cheaply.
+TILES = dict(bm=16, bn=16, bk=16)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    relu=st.booleans(),
+    bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_fused_matches_ref(m, k, n, relu, bias, seed):
+    r = rng(seed)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    w = r.standard_normal((k, n), dtype=np.float32)
+    b = r.standard_normal(n).astype(np.float32) if bias else None
+    got = pk.matmul_fused(jnp.asarray(x), jnp.asarray(w),
+                          None if b is None else jnp.asarray(b),
+                          relu=relu, **TILES)
+    want = kref.matmul_fused_ref(jnp.asarray(x), jnp.asarray(w),
+                                 None if b is None else jnp.asarray(b),
+                                 relu=relu)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (16, 16, 16),      # exactly one tile
+    (32, 16, 48),      # multi-tile, exact multiples
+    (17, 16, 16),      # M one past a block boundary
+    (16, 33, 16),      # K straddles two blocks + remainder
+    (1, 1, 1),         # degenerate
+    (128, 256, 64),    # larger K-loop
+])
+def test_matmul_block_boundaries(m, k, n):
+    r = rng(m * 1000 + k * 100 + n)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    w = r.standard_normal((k, n), dtype=np.float32)
+    got = pk.matmul_fused(jnp.asarray(x), jnp.asarray(w), **TILES)
+    assert_allclose(np.asarray(got), x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_default_tiles_large():
+    """Default 128-tiles on a shape typical of a fire-module conv."""
+    r = rng(7)
+    x = r.standard_normal((3025, 96), dtype=np.float32)
+    w = r.standard_normal((96, 128), dtype=np.float32)
+    b = r.standard_normal(128).astype(np.float32)
+    got = pk.matmul_fused(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                          relu=True)
+    want = np.maximum(x @ w + b, 0.0)
+    assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    r = rng(11)
+    x = jnp.asarray(r.standard_normal((24, 24)), dtype=dtype)
+    w = jnp.asarray(r.standard_normal((24, 24)), dtype=dtype)
+    got = pk.matmul_fused(x, w, **TILES)
+    want = kref.matmul_fused_ref(x, w)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    assert got.dtype == dtype
+    assert_allclose(np.asarray(got, dtype=np.float32),
+                    np.asarray(want, dtype=np.float32), rtol=tol, atol=tol)
+
+
+def test_matmul_relu_clamps_negative():
+    x = jnp.asarray([[-1.0, 2.0]], dtype=jnp.float32)
+    w = jnp.asarray([[1.0], [0.0]], dtype=jnp.float32)
+    out = pk.matmul_fused(x, w, relu=True, **TILES)
+    assert float(out[0, 0]) == 0.0
+
+
+def test_matmul_shape_errors():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 4))
+    with pytest.raises(ValueError, match="contraction"):
+        pk.matmul_fused(x, w)
+    with pytest.raises(ValueError, match="2-D"):
+        pk.matmul_fused(jnp.zeros((2, 2, 2)), w)
+    with pytest.raises(ValueError, match="bias"):
+        pk.matmul_fused(jnp.zeros((4, 6)), w, jnp.zeros((5,)))
+
+
+def test_matmul_under_jit():
+    """The kernel must lower inside jit (the AOT path does exactly this)."""
+    r = rng(3)
+    x = r.standard_normal((20, 36), dtype=np.float32)
+    w = r.standard_normal((36, 12), dtype=np.float32)
+    f = jax.jit(lambda a, b: pk.matmul_fused(a, b, **TILES))
+    assert_allclose(np.asarray(f(x, w)), x @ w, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- conv1x1
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 14),
+    w=st.integers(1, 14),
+    cin=st.integers(1, 40),
+    cout=st.integers(1, 40),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1x1_matches_lax_conv(h, w, cin, cout, relu, seed):
+    r = rng(seed)
+    x = r.standard_normal((1, h, w, cin), dtype=np.float32)
+    wt = r.standard_normal((cin, cout), dtype=np.float32)
+    b = r.standard_normal(cout).astype(np.float32)
+    got = pk.conv1x1(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b),
+                     relu=relu, **TILES)
+    want = kref.conv1x1_ref(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b),
+                            relu=relu)
+    assert got.shape == (1, h, w, cout)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_conv1x1_requires_nhwc():
+    with pytest.raises(ValueError, match="NHWC"):
+        pk.conv1x1(jnp.zeros((4, 4)), jnp.zeros((4, 4)))
+    with pytest.raises(ValueError, match="channel"):
+        pk.conv1x1(jnp.zeros((1, 2, 2, 3)), jnp.zeros((4, 5)))
+
+
+# ---------------------------------------------------------------- softmax
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 1200),
+    scale=st.floats(0.1, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_matches_ref(b, n, scale, seed):
+    r = rng(seed)
+    x = (r.standard_normal((b, n)) * scale).astype(np.float32)
+    got = pk.softmax(jnp.asarray(x))
+    want = kref.softmax_ref(jnp.asarray(x))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(got).sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_stable_at_large_logits():
+    x = jnp.asarray([[1e4, 1e4 - 1.0]], dtype=jnp.float32)
+    out = np.asarray(pk.softmax(x))
+    assert np.isfinite(out).all()
+    assert_allclose(out.sum(), 1.0, rtol=1e-6)
+
+
+def test_softmax_rejects_non_2d():
+    with pytest.raises(ValueError, match="2-D"):
+        pk.softmax(jnp.zeros((3,)))
+
+
+# --------------------------------------------------- perf-model helpers
+
+def test_vmem_footprint_default_tiles_fit_budget():
+    # 128^2 f32 tiles: x + w + o + bias = 192.5 KiB/step; x2 for
+    # double-buffering still well under the 16 MiB VMEM budget.
+    fp = pk.vmem_footprint_bytes(128, 128, 128)
+    assert fp == (128 * 128 * 3 + 128) * 4
+    assert 2 * fp < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_estimates():
+    # Exact multiples of 128 at full MXU edge -> utilization 1.0.
+    assert pk.mxu_utilization_estimate(256, 256, 256, 128, 128, 128) == 1.0
+    # Padding waste reduces utilization.
+    u = pk.mxu_utilization_estimate(129, 128, 128, 128, 128, 128)
+    assert 0.4 < u < 0.6
+    # Narrow tiles leave MXU lanes idle.
+    u2 = pk.mxu_utilization_estimate(128, 128, 128, 32, 128, 128)
+    assert abs(u2 - 0.25) < 1e-9

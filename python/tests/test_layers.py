@@ -1,0 +1,155 @@
+"""Layer-2 building-block tests: Ctx bookkeeping, conv dispatch,
+spec-pass shape algebra vs real execution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import layers as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params_from_spec(spec, seed=0):
+    """Generate per-param arrays the way the init artifact does."""
+    r = np.random.default_rng(seed)
+    return [jnp.asarray(r.standard_normal(s, dtype=np.float32) * std)
+            for s, std in zip(spec.shapes, spec.stds)]
+
+
+def _spec_ctx(build):
+    ctx = L.Ctx("spec")
+    build(ctx)
+    return ctx
+
+
+def _apply_ctx(params, use_pallas=True):
+    return L.Ctx("apply", params=params, use_pallas=use_pallas)
+
+
+def test_ctx_rejects_bad_mode():
+    with pytest.raises(AssertionError):
+        L.Ctx("train")
+
+
+def test_spec_pass_records_params_without_compute():
+    ctx = L.Ctx("spec")
+    x = L._SpecTensor((1, 8, 8, 3))
+    out = L.conv2d(ctx, "c", x, 3, 16, 3)
+    assert isinstance(out, L._SpecTensor)
+    assert out.shape == (1, 8, 8, 16)
+    assert ctx.spec.names == ["c.w", "c.b"]
+    assert ctx.spec.shapes == [(3, 3, 3, 16), (16,)]
+    assert ctx.flops == 2 * 8 * 8 * 16 * 27
+
+
+def test_spec_records_he_std():
+    ctx = L.Ctx("spec")
+    L.conv2d(ctx, "c", L._SpecTensor((1, 8, 8, 3)), 3, 4, 3)
+    # weight std = sqrt(2/27), bias std = 0.1
+    assert abs(ctx.spec.stds[0] - (2.0 / 27.0) ** 0.5) < 1e-9
+    assert ctx.spec.stds[1] == 0.1
+    ctx2 = L.Ctx("spec")
+    L.conv2d(ctx2, "c", L._SpecTensor((1, 8, 8, 3)), 3, 4, 3, std_scale=0.2)
+    assert abs(ctx2.spec.stds[0] - 0.2 * (2.0 / 27.0) ** 0.5) < 1e-9
+
+
+def test_apply_consumes_params_in_order():
+    ctx = _spec_ctx(lambda c: (
+        L.conv2d(c, "a", L._SpecTensor((1, 4, 4, 3)), 3, 4, 3),
+        L.conv2d(c, "b", L._SpecTensor((1, 4, 4, 4)), 4, 2, 1)))
+    params = _params_from_spec(ctx.spec)
+
+    actx = _apply_ctx(params)
+    x = jnp.ones((1, 4, 4, 3))
+    y = L.conv2d(actx, "a", x, 3, 4, 3)
+    z = L.conv2d(actx, "b", y, 4, 2, 1)
+    assert z.shape == (1, 4, 4, 2)
+    assert actx.cursor == 4
+
+
+def test_apply_asserts_on_shape_mismatch():
+    actx = _apply_ctx([jnp.zeros((3, 3, 3, 4)), jnp.zeros((4,))])
+    with pytest.raises(AssertionError):
+        L.conv2d(actx, "c", jnp.ones((1, 4, 4, 3)), 3, 5, 3)
+
+
+@pytest.mark.parametrize("ksize,stride,padding", [
+    (3, 1, "SAME"), (3, 2, "SAME"), (7, 2, "SAME"), (1, 1, "SAME"),
+    (3, 2, "VALID")])
+def test_spec_conv_shape_matches_real(ksize, stride, padding):
+    ctx = L.Ctx("spec")
+    spec_out = L.conv2d(ctx, "c", L._SpecTensor((1, 13, 13, 3)), 3, 5,
+                        ksize, stride=stride, padding=padding)
+    actx = _apply_ctx(_params_from_spec(ctx.spec))
+    real_out = L.conv2d(actx, "c", jnp.ones((1, 13, 13, 3)), 3, 5, ksize,
+                        stride=stride, padding=padding)
+    assert spec_out.shape == real_out.shape
+
+
+@pytest.mark.parametrize("ksize,stride,padding", [
+    (3, 2, "VALID"), (3, 2, "SAME"), (2, 2, "VALID")])
+def test_spec_pool_shape_matches_real(ksize, stride, padding):
+    spec_out = L.maxpool(L.Ctx("spec"), L._SpecTensor((1, 13, 13, 3)),
+                         ksize, stride, padding)
+    real_out = L.maxpool(_apply_ctx([]), jnp.ones((1, 13, 13, 3)),
+                         ksize, stride, padding)
+    assert spec_out.shape == real_out.shape
+
+
+def test_conv1x1_dispatch_equals_lax_path():
+    """The pallas 1x1 fast path and the generic lax path must agree."""
+    ctx = _spec_ctx(lambda c: L.conv2d(c, "c", L._SpecTensor((1, 6, 6, 8)), 8, 12, 1))
+    params = _params_from_spec(ctx.spec)
+    x = jnp.asarray(np.random.default_rng(0).random((1, 6, 6, 8),
+                                                    dtype=np.float32))
+    got = L.conv2d(_apply_ctx(params, use_pallas=True), "c", x, 8, 12, 1)
+    want = L.conv2d(_apply_ctx(params, use_pallas=False), "c", x, 8, 12, 1)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_grouped_conv_param_shape():
+    ctx = L.Ctx("spec")
+    L.conv2d(ctx, "g", L._SpecTensor((1, 8, 8, 32)), 32, 32, 3, groups=8)
+    assert ctx.spec.shapes[0] == (3, 3, 4, 32)
+
+
+def test_global_avgpool():
+    x = jnp.arange(2 * 3 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 3, 4)
+    out = L.global_avgpool(_apply_ctx([]), x)
+    assert out.shape == (2, 4)
+    assert_allclose(np.asarray(out), np.asarray(x.mean(axis=(1, 2))))
+
+
+def test_add_relu():
+    a = jnp.asarray([[-2.0, 1.0]])
+    b = jnp.asarray([[1.0, 1.0]])
+    out = L.add_relu(_apply_ctx([]), a, b)
+    assert_allclose(np.asarray(out), [[0.0, 2.0]])
+
+
+def test_add_relu_spec_asserts_shape_match():
+    with pytest.raises(AssertionError):
+        L.add_relu(L.Ctx("spec"), L._SpecTensor((1, 2)), L._SpecTensor((1, 3)))
+
+
+def test_classifier_sums_to_one():
+    ctx = _spec_ctx(lambda c: L.classifier(c, "fc", L._SpecTensor((1, 16)), 16, 10))
+    probs = L.classifier(_apply_ctx(_params_from_spec(ctx.spec)), "fc",
+                         jnp.ones((1, 16)), 16, 10)
+    assert probs.shape == (1, 10)
+    assert_allclose(float(probs.sum()), 1.0, rtol=1e-5)
+
+
+def test_param_spec_bookkeeping():
+    spec = L.ParamSpec()
+    spec.add("a", (2, 3), 0.5)
+    spec.add("b", (4,))
+    assert spec.count == 2
+    assert spec.num_elements() == 10
+    assert spec.size_bytes() == 40
+    assert spec.stds == [0.5, 1.0]
+    assert spec.to_json() == [{"name": "a", "shape": [2, 3]},
+                              {"name": "b", "shape": [4]}]

@@ -1,0 +1,131 @@
+"""L2 model correctness: shapes, determinism, paper-size match, and
+pallas-vs-ref agreement for every zoo entry (at reduced resolution so
+the suite stays fast; parameter counts are resolution-independent).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+H = 64  # reduced test resolution; param counts don't depend on it
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cache[name] = M.materialize_params(name, H, H)
+        return cache[name]
+
+    return get
+
+
+def test_zoo_contents():
+    assert set(M.ZOO) == {"squeezenet", "resnet18", "resnext50"}
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_param_sizes_match_paper(name):
+    """Param bytes must land within 10% of the paper's model sizes
+    (5 / 45 / 98 MB) — the architecture reproduction signal."""
+    spec = M.param_spec(name)
+    mb = spec.size_bytes() / 1e6
+    paper = M.ZOO[name].paper_size_mb
+    assert abs(mb - paper) / paper < 0.10, (name, mb, paper)
+
+
+@pytest.mark.parametrize("name,count", [
+    ("squeezenet", 52), ("resnet18", 42), ("resnext50", 108)])
+def test_param_counts_stable(name, count):
+    assert M.param_spec(name).count == count
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_flops_positive_and_ordered(name):
+    f = M.flops(name, H, H)
+    assert f > 0
+
+
+def test_flops_ordering_at_224():
+    f = {n: M.flops(n) for n in M.ZOO}
+    assert f["squeezenet"] < f["resnet18"] < f["resnext50"]
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_init_matches_spec(name, params_cache):
+    params = params_cache(name)
+    spec = M.param_spec(name, H, H)
+    assert len(params) == spec.count
+    for p, s in zip(params, spec.shapes):
+        assert p.shape == s
+        assert p.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_init_flat_has_total_elements(name):
+    flat = jax.jit(M.make_init(name, H, H))()
+    assert flat.shape == (M.param_spec(name, H, H).num_elements(),)
+    assert flat.dtype == jnp.float32
+
+
+def test_init_applies_he_scaling():
+    """First squeezenet param is conv1.w (7x7x3 fan-in 147): its std
+    must be ~sqrt(2/147), far from the unit-normal draw."""
+    params = M.materialize_params("squeezenet", H, H)
+    import numpy as np
+    std = float(np.asarray(params[0]).std())
+    expect = (2.0 / 147.0) ** 0.5
+    assert abs(std - expect) / expect < 0.05, (std, expect)
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_init_deterministic(name, params_cache):
+    a = params_cache(name)
+    b = M.materialize_params(name, H, H)
+    for x, y in zip(a, b):
+        assert_allclose(np.asarray(x), np.asarray(y), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_infer_output_contract(name, params_cache):
+    """infer -> probs[1,1000] summing to 1 (argmax happens in Rust)."""
+    params = params_cache(name)
+    img = np.random.default_rng(0).random((1, H, H, 3), dtype=np.float32)
+    probs = jax.jit(M.make_infer(name, H, H))(*params, img)
+    assert probs.shape == (1, M.NUM_CLASSES)
+    assert probs.dtype == jnp.float32
+    assert_allclose(float(probs.sum()), 1.0, rtol=1e-4)
+    assert (np.asarray(probs) >= 0).all()
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_pallas_and_ref_variants_agree(name, params_cache):
+    """End-to-end L1-in-L2 signal: the full model with Pallas kernels
+    must match the same model on the pure-jnp path."""
+    params = params_cache(name)
+    img = np.random.default_rng(1).random((1, H, H, 3), dtype=np.float32)
+    p_pallas = jax.jit(
+        M.make_infer(name, H, H, use_pallas=True))(*params, img)
+    p_ref = jax.jit(
+        M.make_infer(name, H, H, use_pallas=False))(*params, img)
+    assert_allclose(np.asarray(p_pallas), np.asarray(p_ref),
+                    rtol=1e-3, atol=1e-5)
+    assert int(np.asarray(p_pallas).argmax()) == int(np.asarray(p_ref).argmax())
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_infer_depends_on_image(name, params_cache):
+    params = params_cache(name)
+    r = np.random.default_rng(2)
+    f = jax.jit(M.make_infer(name, H, H))
+    p1 = f(*params, r.random((1, H, H, 3), dtype=np.float32))
+    p2 = f(*params, r.random((1, H, H, 3), dtype=np.float32))
+    assert float(np.abs(np.asarray(p1) - np.asarray(p2)).max()) > 0

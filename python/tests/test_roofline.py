@@ -1,0 +1,72 @@
+"""Tests for the L1 analytic roofline tool."""
+
+import pytest
+
+from compile import roofline as R
+
+
+def test_squeezenet_sites_match_architecture():
+    sites = R.matmul_sites("squeezenet")
+    names = [s[0] for s in sites]
+    # 8 fire modules x (squeeze + expand1) + conv10 = 17 1x1 convs.
+    assert len(sites) == 17
+    assert "fire2.squeeze" in names
+    assert "conv10" in names
+    # fire2.squeeze at 224px: after conv1 s2 + pool3 s2 VALID -> 55x55.
+    site = dict((s[0], s) for s in sites)["fire2.squeeze"]
+    assert site[1:] == (55 * 55, 96, 16)
+
+
+def test_resnet_classifier_site():
+    sites = R.matmul_sites("resnet18")
+    names = [s[0] for s in sites]
+    assert "fc" in names
+    fc = [s for s in sites if s[0] == "fc"][0]
+    assert fc[1:] == (1, 512, 1000)
+
+
+def test_resnext_has_many_pointwise_sites():
+    sites = R.matmul_sites("resnext50")
+    # 16 bottlenecks x (reduce + expand) + downsamples are strided or
+    # recorded only when stride 1 ... at least 32 sites + fc.
+    assert len(sites) >= 33
+
+
+def test_analyze_fields_and_ranges():
+    rows = R.analyze("squeezenet", 128, 128, 128)
+    assert len(rows) == 17
+    for r in rows:
+        assert 0.0 < r["mxu_util"] <= 1.0
+        assert 0.0 < r["roofline_frac"] <= 1.0
+        assert r["vmem_per_step"] > 0
+        assert r["vmem_frac_2buf"] < 0.1, "tiles well under VMEM"
+
+
+def test_summarize_weighted_util_reasonable():
+    s = R.summarize(R.analyze("squeezenet", 128, 128, 128))
+    # The §Perf claim: >= 0.55 FLOP-weighted MXU utilization at 128^3
+    # with kernel-mirrored tile shrinking (squeeze layers have K=16..96).
+    assert s["flops_weighted_mxu_util"] >= 0.55, s
+    assert s["max_vmem_frac"] < 0.1
+
+
+def test_resnext_kernel_dominates_and_utilizes():
+    # ResNeXt's 1x1 reduce/expand convs carry most FLOPs: the Pallas
+    # kernel serves >= 7 GFLOPs at >= 0.75 estimated MXU utilization.
+    s = R.summarize(R.analyze("resnext50", 128, 128, 128))
+    assert s["kernel_gflops"] > 6.0
+    assert s["flops_weighted_mxu_util"] >= 0.75, s
+    assert s["flops_weighted_roofline"] >= 0.9
+
+
+def test_small_tiles_hurt_utilization():
+    big = R.summarize(R.analyze("squeezenet", 128, 128, 128))
+    small = R.summarize(R.analyze("squeezenet", 32, 32, 32))
+    assert small["flops_weighted_mxu_util"] < big["flops_weighted_mxu_util"]
+
+
+def test_spec_walk_does_not_leak_patches():
+    from compile import layers as L
+    before = L.conv2d
+    R.matmul_sites("squeezenet")
+    assert L.conv2d is before, "monkeypatch restored"

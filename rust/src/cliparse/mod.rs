@@ -1,0 +1,214 @@
+//! Tiny CLI argument parser (no clap in the offline dep closure).
+//!
+//! Supports the launcher's needs: subcommands, `--flag value`,
+//! `--flag=value`, boolean `--flag`, positional args, defaults, and a
+//! generated usage string.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(Some(n)),
+                Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(Some(n)),
+                Err(_) => bail!("--{name} expects a number, got {v:?}"),
+            },
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    }
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.flags.push(FlagSpec { name, help, default, is_bool: false });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: true });
+        self
+    }
+
+    /// Parse args after the subcommand name.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        for spec in &self.flags {
+            if let Some(d) = spec.default {
+                out.flags.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n{}", self.usage()))?;
+                if spec.is_bool {
+                    if inline.is_some() {
+                        bail!("--{name} is a boolean flag");
+                    }
+                    out.bools.insert(name.to_string(), true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    out.flags.insert(name.to_string(), value);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: lambdaserve {} [flags]\n  {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = if f.is_bool { "" } else { " <value>" };
+            let def = f.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", f.name, f.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("experiment", "run a paper experiment")
+            .flag("id", "experiment id", Some("fig1"))
+            .flag("mems", "memory sizes", None)
+            .flag("reps", "repetitions", Some("25"))
+            .bool_flag("verbose", "chatty output")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("id"), Some("fig1"));
+        assert_eq!(a.get_u64("reps").unwrap(), Some(25));
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&argv(&["--id", "fig4", "--reps=5", "--verbose"])).unwrap();
+        assert_eq!(a.get("id"), Some("fig4"));
+        assert_eq!(a.get_u64("reps").unwrap(), Some(5));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = cmd().parse(&argv(&["--mems", "128, 256,1536"])).unwrap();
+        assert_eq!(a.get_list("mems").unwrap(), vec!["128", "256", "1536"]);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["table1", "--verbose"])).unwrap();
+        assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cmd().parse(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&argv(&["--id"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = cmd().parse(&argv(&["--reps", "many"])).unwrap();
+        assert!(a.get_u64("reps").is_err());
+    }
+
+    #[test]
+    fn bool_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = cmd().usage();
+        assert!(u.contains("--id"));
+        assert!(u.contains("default: 25"));
+    }
+}

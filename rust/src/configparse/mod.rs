@@ -1,0 +1,15 @@
+//! TOML-subset config parser + the typed platform configuration.
+//!
+//! No `serde`/`toml` in the offline dep closure, so this implements the
+//! subset the configs use: `[section]` and `[section.sub]` headers,
+//! `key = value` with string / integer / float / bool / homogeneous
+//! array values, `#` comments, and inline errors with line numbers.
+
+mod platform_config;
+mod toml;
+
+pub use platform_config::{
+    BootstrapConfig, MemorySize, ModelConfig, NetworkConfig, PlatformConfig, PricingConfig,
+    MEMORY_SIZES_2017,
+};
+pub use toml::{parse_toml, TomlError, TomlValue};

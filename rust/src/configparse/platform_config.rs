@@ -1,0 +1,395 @@
+//! Typed platform configuration with the paper's calibration constants.
+//!
+//! Defaults reproduce the paper's setup (AWS Lambda, 2017): Table 1
+//! pricing, 128..1536 MB memory tiers in 128 MB steps, 100 ms billing
+//! granularity, ~10 min container keep-alive. `PlatformConfig::load`
+//! overlays a TOML file (see `configs/platform.toml`) on the defaults.
+
+use super::toml::{parse_toml, TomlValue};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Lambda memory size in MB. Tiers go 128..=1536 in 64 MB increments;
+/// the paper sweeps the 128 MB multiples.
+pub type MemorySize = u32;
+
+/// The paper's swept memory sizes (x-axis of every figure).
+pub const MEMORY_SIZES_2017: [MemorySize; 12] =
+    [128, 256, 384, 512, 640, 768, 896, 1024, 1152, 1280, 1408, 1536];
+
+/// Table 1: price per 100 ms for each memory size, in dollars.
+const PRICE_TABLE_2017: [(MemorySize, f64); 12] = [
+    (128, 0.000000208),
+    (256, 0.000000417),
+    (384, 0.000000625),
+    (512, 0.000000834),
+    (640, 0.000001042),
+    (768, 0.00000125),
+    (896, 0.000001459),
+    (1024, 0.000001667),
+    (1152, 0.000001875),
+    (1280, 0.000002084),
+    (1408, 0.000002292),
+    (1536, 0.000002501),
+];
+
+#[derive(Debug, Clone)]
+pub struct PricingConfig {
+    /// `(memory_mb, dollars per 100ms)` rows, ascending by memory.
+    pub table: Vec<(MemorySize, f64)>,
+    /// Billing quantum (AWS 2017: 100 ms).
+    pub granularity_ms: u64,
+    /// Per-request surcharge (AWS: $0.20 per 1M requests).
+    pub per_request_dollars: f64,
+}
+
+impl Default for PricingConfig {
+    fn default() -> Self {
+        Self {
+            table: PRICE_TABLE_2017.to_vec(),
+            granularity_ms: 100,
+            per_request_dollars: 0.2e-6,
+        }
+    }
+}
+
+impl PricingConfig {
+    /// Price per 100 ms for `mem`, linearly interpolated between table
+    /// rows for non-tabulated 64 MB tiers.
+    pub fn price_per_unit(&self, mem: MemorySize) -> Result<f64> {
+        if let Some(&(_, p)) = self.table.iter().find(|(m, _)| *m == mem) {
+            return Ok(p);
+        }
+        let below = self.table.iter().rev().find(|(m, _)| *m < mem);
+        let above = self.table.iter().find(|(m, _)| *m > mem);
+        match (below, above) {
+            (Some(&(m0, p0)), Some(&(m1, p1))) => {
+                let t = (mem - m0) as f64 / (m1 - m0) as f64;
+                Ok(p0 + t * (p1 - p0))
+            }
+            _ => bail!("memory size {mem} MB outside the price table"),
+        }
+    }
+}
+
+/// Cold-start bootstrap model (everything that is NOT the function
+/// body): sandbox provisioning + language-runtime init + code/model
+/// fetch. Calibrated against 2017-era Lambda measurements; the *model
+/// load* component is real work (PJRT compile + weight materialization)
+/// measured, not simulated — see `platform/container.rs`.
+#[derive(Debug, Clone)]
+pub struct BootstrapConfig {
+    /// Median sandbox (container) provisioning delay, seconds.
+    pub sandbox_median_s: f64,
+    /// Log-normal shape for the sandbox delay.
+    pub sandbox_sigma: f64,
+    /// Language-runtime (python+mxnet in the paper) init, seconds.
+    pub runtime_init_s: f64,
+    /// Deployment-package read bandwidth, bytes/s (code+model fetch
+    /// from local zip: the paper bundled models into the function).
+    pub package_read_bw: f64,
+    /// True: sandbox/runtime delays consume (virtual) clock time.
+    pub simulate_delays: bool,
+}
+
+impl Default for BootstrapConfig {
+    fn default() -> Self {
+        Self {
+            // 2017-era Lambda cold starts: a few hundred ms of sandbox
+            // setup + O(1s) runtime+framework import.
+            sandbox_median_s: 0.25,
+            sandbox_sigma: 0.35,
+            runtime_init_s: 1.2,
+            package_read_bw: 80e6,
+            simulate_delays: true,
+        }
+    }
+}
+
+/// Client<->gateway network model (the JMeter<->API-Gateway leg).
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    /// Fixed round-trip component, seconds.
+    pub rtt_s: f64,
+    /// Mean of the exponential jitter component, seconds.
+    pub jitter_mean_s: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self { rtt_s: 0.035, jitter_mean_s: 0.005 }
+    }
+}
+
+/// Per-model deployment config (overrides manifest defaults).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Artifact variant: "pallas" (default) or "ref".
+    pub variant: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Memory at which a container owns one full vCPU; Lambda allocates
+    /// CPU share proportionally below it (documented ~1792 MB).
+    pub full_power_mem_mb: u32,
+    /// Idle container keep-alive before eviction, seconds. 2017-era
+    /// Lambda reaped idle containers after ~5 minutes — below the
+    /// paper's 10-minute probe gap, which is what forces its cold
+    /// starts.
+    pub keep_alive_s: f64,
+    /// Hard cap on concurrently provisioned containers per function
+    /// (AWS account default: 1000 across the account).
+    pub max_containers: usize,
+    /// CPU throttle quantum, seconds (cgroup cfs_period-like).
+    pub throttle_quantum_s: f64,
+    /// Worker threads executing containers.
+    pub executor_threads: usize,
+    pub pricing: PricingConfig,
+    pub bootstrap: BootstrapConfig,
+    pub network: NetworkConfig,
+    /// Deterministic seed for every stochastic component.
+    pub seed: u64,
+    /// Directory of AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        Self {
+            full_power_mem_mb: 1792,
+            keep_alive_s: 300.0,
+            max_containers: 1000,
+            throttle_quantum_s: 0.02,
+            executor_threads: 8,
+            pricing: PricingConfig::default(),
+            bootstrap: BootstrapConfig::default(),
+            network: NetworkConfig::default(),
+            seed: 20171001,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Parse a TOML file over the defaults.
+    pub fn load(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&src)
+    }
+
+    pub fn from_toml(src: &str) -> Result<Self> {
+        let doc = parse_toml(src)?;
+        let mut cfg = Self::default();
+        let get_f64 = |k: &str| doc.get(k).and_then(TomlValue::as_f64);
+        let get_u64 = |k: &str| doc.get(k).and_then(TomlValue::as_i64).map(|v| v as u64);
+
+        if let Some(v) = get_u64("platform.full_power_mem_mb") {
+            cfg.full_power_mem_mb = v as u32;
+        }
+        if let Some(v) = get_f64("platform.keep_alive_s") {
+            cfg.keep_alive_s = v;
+        }
+        if let Some(v) = get_u64("platform.max_containers") {
+            cfg.max_containers = v as usize;
+        }
+        if let Some(v) = get_f64("platform.throttle_quantum_s") {
+            cfg.throttle_quantum_s = v;
+        }
+        if let Some(v) = get_u64("platform.executor_threads") {
+            cfg.executor_threads = v as usize;
+        }
+        if let Some(v) = get_u64("platform.seed") {
+            cfg.seed = v;
+        }
+        if let Some(v) = doc.get("platform.artifacts_dir").and_then(TomlValue::as_str) {
+            cfg.artifacts_dir = v.to_string();
+        }
+
+        if let Some(v) = get_u64("pricing.granularity_ms") {
+            cfg.pricing.granularity_ms = v;
+        }
+        if let Some(v) = get_f64("pricing.per_request_dollars") {
+            cfg.pricing.per_request_dollars = v;
+        }
+        if let (Some(mems), Some(prices)) = (
+            doc.get("pricing.memory_mb").and_then(TomlValue::as_array),
+            doc.get("pricing.dollars_per_unit").and_then(TomlValue::as_array),
+        ) {
+            if mems.len() != prices.len() {
+                bail!("pricing.memory_mb and pricing.dollars_per_unit length mismatch");
+            }
+            cfg.pricing.table = mems
+                .iter()
+                .zip(prices)
+                .map(|(m, p)| {
+                    Ok((
+                        m.as_i64().context("memory_mb must be int")? as MemorySize,
+                        p.as_f64().context("dollars_per_unit must be number")?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+
+        if let Some(v) = get_f64("bootstrap.sandbox_median_s") {
+            cfg.bootstrap.sandbox_median_s = v;
+        }
+        if let Some(v) = get_f64("bootstrap.sandbox_sigma") {
+            cfg.bootstrap.sandbox_sigma = v;
+        }
+        if let Some(v) = get_f64("bootstrap.runtime_init_s") {
+            cfg.bootstrap.runtime_init_s = v;
+        }
+        if let Some(v) = get_f64("bootstrap.package_read_bw") {
+            cfg.bootstrap.package_read_bw = v;
+        }
+        if let Some(v) = doc.get("bootstrap.simulate_delays").and_then(TomlValue::as_bool) {
+            cfg.bootstrap.simulate_delays = v;
+        }
+
+        if let Some(v) = get_f64("network.rtt_s") {
+            cfg.network.rtt_s = v;
+        }
+        if let Some(v) = get_f64("network.jitter_mean_s") {
+            cfg.network.jitter_mean_s = v;
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.full_power_mem_mb == 0 {
+            bail!("full_power_mem_mb must be positive");
+        }
+        if self.pricing.granularity_ms == 0 {
+            bail!("pricing.granularity_ms must be positive");
+        }
+        if self.pricing.table.is_empty() {
+            bail!("pricing table is empty");
+        }
+        if self.pricing.table.windows(2).any(|w| w[0].0 >= w[1].0) {
+            bail!("pricing table must be ascending in memory");
+        }
+        if self.throttle_quantum_s <= 0.0 {
+            bail!("throttle_quantum_s must be positive");
+        }
+        if self.keep_alive_s < 0.0 {
+            bail!("keep_alive_s must be non-negative");
+        }
+        Ok(())
+    }
+
+    /// CPU share in `(0, 1]` for a container of `mem` MB — Lambda's
+    /// "CPU power proportional to memory" rule.
+    pub fn cpu_share(&self, mem: MemorySize) -> f64 {
+        (mem as f64 / self.full_power_mem_mb as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table1() {
+        let cfg = PlatformConfig::default();
+        assert_eq!(cfg.pricing.price_per_unit(128).unwrap(), 0.000000208);
+        assert_eq!(cfg.pricing.price_per_unit(1536).unwrap(), 0.000002501);
+        assert_eq!(cfg.pricing.table.len(), 12);
+        assert_eq!(cfg.pricing.granularity_ms, 100);
+    }
+
+    #[test]
+    fn table1_price_monotone_in_memory() {
+        let p = PricingConfig::default();
+        let mut last = 0.0;
+        for m in MEMORY_SIZES_2017 {
+            let v = p.price_per_unit(m).unwrap();
+            assert!(v > last);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn interpolates_64mb_tiers() {
+        let p = PricingConfig::default();
+        let v = p.price_per_unit(192).unwrap();
+        let expect = (0.000000208 + 0.000000417) / 2.0;
+        assert!((v - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_out_of_table() {
+        let p = PricingConfig::default();
+        assert!(p.price_per_unit(64).is_err());
+        assert!(p.price_per_unit(4096).is_err());
+    }
+
+    #[test]
+    fn cpu_share_proportional_and_capped() {
+        let cfg = PlatformConfig::default();
+        assert!((cfg.cpu_share(128) - 128.0 / 1792.0).abs() < 1e-12);
+        assert!((cfg.cpu_share(896) - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.cpu_share(1792), 1.0);
+        assert_eq!(cfg.cpu_share(3008), 1.0);
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let cfg = PlatformConfig::from_toml(
+            r#"
+[platform]
+full_power_mem_mb = 2048
+keep_alive_s = 300.0
+seed = 7
+
+[bootstrap]
+runtime_init_s = 0.5
+simulate_delays = false
+
+[network]
+rtt_s = 0.01
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.full_power_mem_mb, 2048);
+        assert_eq!(cfg.keep_alive_s, 300.0);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.bootstrap.runtime_init_s, 0.5);
+        assert!(!cfg.bootstrap.simulate_delays);
+        assert_eq!(cfg.network.rtt_s, 0.01);
+        // untouched defaults survive
+        assert_eq!(cfg.pricing.table.len(), 12);
+    }
+
+    #[test]
+    fn custom_price_table() {
+        let cfg = PlatformConfig::from_toml(
+            r#"
+[pricing]
+memory_mb = [128, 256]
+dollars_per_unit = [1.0, 2.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.pricing.price_per_unit(128).unwrap(), 1.0);
+        assert_eq!(cfg.pricing.price_per_unit(192).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn validation_failures() {
+        assert!(PlatformConfig::from_toml("[platform]\nfull_power_mem_mb = 0").is_err());
+        assert!(PlatformConfig::from_toml("[pricing]\ngranularity_ms = 0").is_err());
+        assert!(PlatformConfig::from_toml(
+            "[pricing]\nmemory_mb = [256, 128]\ndollars_per_unit = [1.0, 2.0]"
+        )
+        .is_err());
+        assert!(PlatformConfig::from_toml(
+            "[pricing]\nmemory_mb = [128]\ndollars_per_unit = [1.0, 2.0]"
+        )
+        .is_err());
+    }
+}

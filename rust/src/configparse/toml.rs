@@ -1,0 +1,264 @@
+//! The TOML-subset parser. See module docs in `configparse`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric coercion: integers widen to f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Flat map: `section.key` (or `section.sub.key`) -> value.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+pub fn parse_toml(src: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = lineno + 1;
+        let text = strip_comment(raw).trim();
+        if text.is_empty() {
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or(TomlError { line, msg: "unterminated section header".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(TomlError { line, msg: "empty section name".into() });
+            }
+            if !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+            {
+                return Err(TomlError { line, msg: format!("invalid section name {name:?}") });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = text
+            .find('=')
+            .ok_or(TomlError { line, msg: format!("expected key = value, got {text:?}") })?;
+        let key = text[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError { line, msg: "empty key".into() });
+        }
+        let value = parse_value(text[eq + 1..].trim(), line)?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if doc.insert(full.clone(), value).is_some() {
+            return Err(TomlError { line, msg: format!("duplicate key {full:?}") });
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<TomlValue, TomlError> {
+    if text.is_empty() {
+        return Err(TomlError { line, msg: "missing value".into() });
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or(TomlError { line, msg: "unterminated string".into() })?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(TomlError { line, msg: "trailing data after string".into() });
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or(TomlError { line, msg: "unterminated array".into() })?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(TomlError { line, msg: format!("cannot parse value {text:?}") })
+}
+
+/// Split a (non-nested) array body on commas; strings may contain commas.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = parse_toml(
+            r#"
+# platform config
+top = 1
+
+[platform]
+full_power_mem_mb = 1792
+keep_alive_secs = 600.5
+name = "lambda-sim"
+enabled = true
+
+[pricing.tiers]
+mems = [128, 256, 384]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc["top"], TomlValue::Int(1));
+        assert_eq!(doc["platform.full_power_mem_mb"], TomlValue::Int(1792));
+        assert_eq!(doc["platform.keep_alive_secs"], TomlValue::Float(600.5));
+        assert_eq!(doc["platform.name"].as_str(), Some("lambda-sim"));
+        assert_eq!(doc["platform.enabled"].as_bool(), Some(true));
+        let arr = doc["pricing.tiers.mems"].as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_i64(), Some(128));
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse_toml("k = \"a # b\"").unwrap();
+        assert_eq!(doc["k"].as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse_toml("n = 1_000_000").unwrap();
+        assert_eq!(doc["n"].as_i64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn float_array() {
+        let doc = parse_toml("xs = [0.5, 1.5, 2.0]").unwrap();
+        let xs: Vec<f64> = doc["xs"].as_array().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(xs, vec![0.5, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse_toml("xs = []").unwrap();
+        assert_eq!(doc["xs"].as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn string_array_with_commas() {
+        let doc = parse_toml(r#"xs = ["a,b", "c"]"#).unwrap();
+        let xs = doc["xs"].as_array().unwrap();
+        assert_eq!(xs[0].as_str(), Some("a,b"));
+        assert_eq!(xs[1].as_str(), Some("c"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbad line").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("k = ").is_err());
+        assert!(parse_toml("k = \"open").is_err());
+        assert!(parse_toml("k = nope").is_err());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let err = parse_toml("a = 1\na = 2").unwrap_err();
+        assert!(err.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = parse_toml("i = 3\nf = 3.5").unwrap();
+        assert_eq!(doc["i"].as_f64(), Some(3.0));
+        assert_eq!(doc["f"].as_f64(), Some(3.5));
+        assert_eq!(doc["f"].as_i64(), None);
+    }
+}

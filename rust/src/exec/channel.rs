@@ -1,0 +1,306 @@
+//! Bounded/unbounded MPMC channel on Mutex + Condvar.
+//!
+//! `std::sync::mpsc` is single-consumer; the invoker needs multiple
+//! worker threads pulling from one queue, so this implements a small
+//! MPMC with close semantics and timeouts.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Chan<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    senders: usize,
+    receivers: usize,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvError {
+    Closed,
+    Timeout,
+}
+
+pub struct Sender<T>(Arc<Chan<T>>);
+
+pub struct Receiver<T>(Arc<Chan<T>>);
+
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap > 0, "bounded channel needs cap > 0");
+    make(cap)
+}
+
+pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
+    make(usize::MAX)
+}
+
+fn make<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let chan = Arc::new(Chan {
+        q: Mutex::new(State {
+            items: VecDeque::new(),
+            cap,
+            closed: false,
+            senders: 1,
+            receivers: 1,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender(chan.clone()), Receiver(chan))
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().receivers += 1;
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut g = self.0.q.lock().unwrap();
+        g.senders -= 1;
+        if g.senders == 0 {
+            g.closed = true;
+            drop(g);
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut g = self.0.q.lock().unwrap();
+        g.receivers -= 1;
+        if g.receivers == 0 {
+            g.closed = true;
+            drop(g);
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; fails when all receivers dropped.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut g = self.0.q.lock().unwrap();
+        loop {
+            if g.closed && g.receivers == 0 {
+                return Err(SendError(item));
+            }
+            if g.items.len() < g.cap {
+                g.items.push_back(item);
+                drop(g);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.0.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking send; fails when full or closed.
+    pub fn try_send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut g = self.0.q.lock().unwrap();
+        if (g.closed && g.receivers == 0) || g.items.len() >= g.cap {
+            return Err(SendError(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Queue depth (for backpressure metrics).
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `Closed` once all senders dropped and drained.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut g = self.0.q.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(RecvError::Closed);
+            }
+            g = self.0.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Receive with timeout.
+    pub fn recv_timeout(&self, d: Duration) -> Result<T, RecvError> {
+        let deadline = std::time::Instant::now() + d;
+        let mut g = self.0.q.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(RecvError::Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, res) = self.0.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                return Err(RecvError::Timeout);
+            }
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut g = self.0.q.lock().unwrap();
+        let item = g.items.pop_front();
+        if item.is_some() {
+            drop(g);
+            self.0.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_recv_fifo() {
+        let (tx, rx) = unbounded();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+    }
+
+    #[test]
+    fn closed_on_sender_drop() {
+        let (tx, rx) = unbounded::<u32>();
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn send_fails_after_receiver_drop() {
+        let (tx, rx) = unbounded::<u32>();
+        drop(rx);
+        assert_eq!(tx.send(5), Err(SendError(5)));
+    }
+
+    #[test]
+    fn bounded_try_send_full() {
+        let (tx, _rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(SendError(3)));
+        assert_eq!(tx.len(), 2);
+    }
+
+    #[test]
+    fn bounded_send_blocks_until_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(1).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until rx drains
+            tx
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Ok(1));
+        let tx = t.join().unwrap();
+        assert_eq!(rx.recv(), Ok(2));
+        drop(tx);
+    }
+
+    #[test]
+    fn recv_timeout() {
+        let (_tx, rx) = bounded::<u32>(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(30)), Err(RecvError::Timeout));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(8);
+        let n_producers = 4;
+        let per = 250;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all: Vec<usize> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let (tx, rx) = unbounded();
+        assert_eq!(rx.try_recv(), None);
+        tx.send(9).unwrap();
+        assert_eq!(rx.try_recv(), Some(9));
+    }
+}

@@ -1,0 +1,13 @@
+//! Execution substrate: a work-stealing-free but contention-light
+//! thread pool and a bounded MPMC channel, built on `std` only (no
+//! tokio in the offline dep closure).
+//!
+//! The platform uses the pool to run container executions; the gateway
+//! uses it for connection handling. Bounded channels give natural
+//! backpressure on the invoke queue.
+
+pub mod channel;
+mod pool;
+
+pub use channel::{bounded, unbounded, Receiver, RecvError, SendError, Sender};
+pub use pool::ThreadPool;

@@ -1,0 +1,174 @@
+//! Fixed-size thread pool with graceful shutdown and job handles.
+
+use super::channel::{unbounded, Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+    name: String,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        assert!(threads > 0, "thread pool needs >= 1 thread");
+        let (tx, rx): (Sender<Job>, Receiver<Job>) = unbounded();
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = rx.clone();
+                let active = active.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            active.fetch_add(1, Ordering::SeqCst);
+                            job();
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, active, name: name.to_string() }
+    }
+
+    /// Fire-and-forget execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("pool {} has no workers", self.name));
+    }
+
+    /// Execution with a join handle carrying the result.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot = Arc::new((Mutex::new(None::<T>), Condvar::new()));
+        let slot2 = slot.clone();
+        self.execute(move || {
+            let v = f();
+            let (m, cv) = &*slot2;
+            *m.lock().unwrap() = Some(v);
+            cv.notify_all();
+        });
+        JobHandle { slot }
+    }
+
+    /// Jobs currently executing (not queued).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Queue depth.
+    pub fn queued(&self) -> usize {
+        self.tx.as_ref().map_or(0, |t| t.len())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel; workers drain remaining jobs then exit.
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+pub struct JobHandle<T> {
+    slot: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes; returns its result.
+    pub fn join(self) -> T {
+        let (m, cv) = &*self.slot;
+        let mut g = m.lock().unwrap();
+        while g.is_none() {
+            g = cv.wait(g).unwrap();
+        }
+        g.take().unwrap()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.slot.0.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // drains queue
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_returns_result() {
+        let pool = ThreadPool::new(2, "t");
+        let h = pool.submit(|| 6 * 7);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn submit_many_parallel() {
+        let pool = ThreadPool::new(4, "t");
+        let handles: Vec<_> = (0..50).map(|i| pool.submit(move || i * i)).collect();
+        let results: Vec<i32> = handles.into_iter().map(|h| h.join()).collect();
+        assert_eq!(results, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn active_count_tracks_running() {
+        let pool = ThreadPool::new(2, "t");
+        let h1 = pool.submit(|| std::thread::sleep(Duration::from_millis(60)));
+        let h2 = pool.submit(|| std::thread::sleep(Duration::from_millis(60)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(pool.active(), 2);
+        h1.join();
+        h2.join();
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(pool.active(), 0);
+    }
+
+    #[test]
+    fn is_done_flips() {
+        let pool = ThreadPool::new(1, "t");
+        let h = pool.submit(|| std::thread::sleep(Duration::from_millis(30)));
+        assert!(!h.is_done());
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.is_done());
+        h.join();
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 1 thread")]
+    fn zero_threads_panics() {
+        let _ = ThreadPool::new(0, "t");
+    }
+}

@@ -1,0 +1,311 @@
+//! Ablations beyond the paper's figures, motivated by its discussion:
+//!
+//! * `abl-keepalive` — keep-alive TTL sweep: cold-start fraction and
+//!   SLA-violation rate vs TTL (§3.5/§5: bimodal latency "can risk the
+//!   adherence to SLAs"; §5 asks for a declarative keep-warm knob).
+//! * `abl-provisioned` — serverless vs an always-on dedicated server:
+//!   cost crossover as a function of sustained request rate (§4/§5:
+//!   dedicated serving systems "are not designed to minimize cost when
+//!   demand is changing"; §5 suggests VM+serverless mixes).
+//! * `abl-memopt` — the §5 "future work" tool: recommend a memory size
+//!   for a latency target or a cost budget from measured sweeps.
+//! * `abl-kernel` — L1 ablation: Pallas-kernel artifacts vs pure-XLA
+//!   reference artifacts (requires the PJRT engine).
+
+use super::report::{secs, write_csv, Table};
+use super::{EngineKind, ExpCtx};
+use crate::configparse::MEMORY_SIZES_2017;
+use crate::platform::Invoker;
+use crate::stats::mean_ci95;
+use crate::util::ManualClock;
+use crate::workload::{run_closed_loop, DiurnalTrace, PoissonArrivals, WarmProbe};
+use anyhow::Result;
+use std::time::Duration;
+
+/// Keep-alive TTL sweep under sparse Poisson traffic (mean gap 5 min):
+/// TTLs below the typical gap force mostly-cold behaviour.
+pub fn run_keepalive_ablation(ctx: &ExpCtx) -> Result<()> {
+    let engine = ctx.build_engine()?;
+    let sla = Duration::from_secs(2);
+    let mut t = Table::new(
+        "abl-keepalive: cold fraction & SLA(2s) violations vs keep-alive TTL \
+         (squeezenet @1024MB, Poisson 1 req/5min, 8h)",
+        &["TTL (min)", "Cold frac", "Mean lat (s)", "p99 (s)", "SLA viol frac"],
+    );
+    for ttl_min in [0u64, 1, 5, 10, 20, 30] {
+        let mut config = ctx.config.clone();
+        config.keep_alive_s = ttl_min as f64 * 60.0;
+        let clock = ManualClock::new();
+        let platform = Invoker::new(config, engine.clone(), clock);
+        platform.deploy("f", "squeezenet", "pallas", 1024)?;
+        let sched = PoissonArrivals {
+            rps: 1.0 / 300.0,
+            duration: Duration::from_secs(8 * 3600),
+            seed: ctx.config.seed,
+        };
+        let report = run_closed_loop(&platform, "f", &sched, ctx.config.seed ^ ttl_min);
+        let ok = report.ok_samples().len().max(1);
+        let lats = report.latencies_s();
+        let (mean, _) = mean_ci95(&lats);
+        let mut sorted = lats.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = sorted
+            .get(((0.99 * sorted.len() as f64).ceil() as usize).saturating_sub(1))
+            .copied()
+            .unwrap_or(0.0);
+        let viol = lats.iter().filter(|l| **l > sla.as_secs_f64()).count() as f64 / ok as f64;
+        t.row(vec![
+            ttl_min.to_string(),
+            format!("{:.2}", report.cold_count() as f64 / ok as f64),
+            secs(mean),
+            secs(p99),
+            format!("{viol:.2}"),
+        ]);
+    }
+    t.print();
+    write_csv(&t, &ctx.out_dir, "abl-keepalive")?;
+    Ok(())
+}
+
+/// Serverless vs dedicated: cost/hour as sustained request rate grows,
+/// under a *diurnal + bursty* trace (the paper's "quickly changing or
+/// even unpredictable" demand). Dedicated baseline: always-on instances
+/// at `DEDICATED_PER_HOUR` each, provisioned for the PEAK rate (no
+/// cold starts, no throttling — but you pay for idle troughs).
+pub fn run_provisioned(ctx: &ExpCtx) -> Result<()> {
+    const DEDICATED_PER_HOUR: f64 = 0.10; // m4.large-class, 2017
+    // One dedicated m4.large-class instance (2 vCPUs) sustains ~16
+    // req/s of squeezenet at full CPU speed (~0.12 s/req per core).
+    // This is what makes dedicated ~2x cheaper per request at full
+    // utilization: Lambda bills a 1024 MB container (0.57 vCPU-share)
+    // in rounded 100 ms units, so its effective $/vCPU-hour is higher.
+    const DEDICATED_CAPACITY_RPS: f64 = 16.0;
+    let engine = ctx.build_engine()?;
+    let mut t = Table::new(
+        "abl-provisioned: serverless vs dedicated $/h — flat vs diurnal+bursty \
+         traffic (squeezenet @1024MB, 1h per point; dedicated sized for peak)",
+        &["Mean (req/min)", "Shape", "Peak (req/s)", "Serverless ($/h)", "Dedicated ($/h)", "Cheaper"],
+    );
+    let mut flat_crossover = false;
+    let mut bursty_dedicated_wins = 0usize;
+    for per_min in [1u64, 6, 30, 60, 300, 900, 3600] {
+        let mean_rps = per_min as f64 / 60.0;
+        for shape in ["flat", "bursty"] {
+            let clock = ManualClock::new();
+            let platform = Invoker::new(ctx.config.clone(), engine.clone(), clock);
+            platform.deploy("f", "squeezenet", "pallas", 1024)?;
+            let (report, peak_rps) = if shape == "flat" {
+                let sched = PoissonArrivals {
+                    rps: mean_rps,
+                    duration: Duration::from_secs(3600),
+                    seed: ctx.config.seed ^ per_min,
+                };
+                (run_closed_loop(&platform, "f", &sched, ctx.config.seed ^ per_min), mean_rps)
+            } else {
+                let sched =
+                    DiurnalTrace::compressed_day(mean_rps, ctx.config.seed ^ per_min);
+                let a = (sched.swing - 1.0) / (sched.swing + 1.0);
+                let peak = sched.mean_rps * (1.0 + a) * sched.burst_factor;
+                (run_closed_loop(&platform, "f", &sched, ctx.config.seed ^ per_min), peak)
+            };
+            let serverless = report.total_cost();
+            let dedicated =
+                (peak_rps / DEDICATED_CAPACITY_RPS).ceil().max(1.0) * DEDICATED_PER_HOUR;
+            let cheaper = if serverless < dedicated { "serverless" } else { "dedicated" };
+            if cheaper == "dedicated" {
+                if shape == "flat" {
+                    flat_crossover = true;
+                } else {
+                    bursty_dedicated_wins += 1;
+                }
+            }
+            t.row(vec![
+                per_min.to_string(),
+                shape.to_string(),
+                format!("{peak_rps:.1}"),
+                format!("{serverless:.4}"),
+                format!("{dedicated:.4}"),
+                cheaper.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "shape: flat sustained traffic crosses over to dedicated ({}); bursty \
+         peak-provisioned demand stays serverless ({} dedicated wins) — the \
+         paper's §4 cost argument.",
+        if flat_crossover { "yes" } else { "no" },
+        bursty_dedicated_wins
+    );
+    write_csv(&t, &ctx.out_dir, "abl-provisioned")?;
+    Ok(())
+}
+
+/// §5 future-work tool: run the warm sweep, then recommend (a) the
+/// cheapest memory meeting a latency target and (b) the fastest memory
+/// within a cost budget; flag the paper's 1024->1536 "paying more for
+/// nothing" region.
+pub fn run_memopt(ctx: &ExpCtx) -> Result<()> {
+    let engine = ctx.build_engine()?;
+    let model = "squeezenet";
+    let mut rows: Vec<(u32, f64, f64)> = Vec::new(); // (mem, lat, cost)
+    for mem in MEMORY_SIZES_2017 {
+        let clock = ManualClock::new();
+        let platform = Invoker::new(ctx.config.clone(), engine.clone(), clock);
+        if platform.deploy("f", model, "pallas", mem).is_err() {
+            continue;
+        }
+        let probe = WarmProbe { requests: ctx.reps, interval: Duration::from_secs(1) };
+        let report = run_closed_loop(&platform, "f", &probe, ctx.config.seed ^ mem as u64);
+        let (lat, _) = mean_ci95(&report.latencies_s());
+        rows.push((mem, lat, report.total_cost() / report.ok_samples().len().max(1) as f64));
+    }
+
+    let mut t = Table::new(
+        &format!("abl-memopt: memory recommendation ({model}, warm)"),
+        &["Memory (MB)", "Latency (s)", "Cost/req ($)", "Note"],
+    );
+    let latency_target = 1.0;
+    let best_cheap = rows
+        .iter()
+        .filter(|(_, lat, _)| *lat <= latency_target)
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    let best_fast = rows.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    // "Knee": smallest memory whose latency is within 10% of the best.
+    let knee = best_fast.and_then(|bf| {
+        rows.iter().find(|(_, lat, _)| *lat <= bf.1 * 1.10)
+    });
+    for (mem, lat, cost) in &rows {
+        let mut notes = Vec::new();
+        if best_cheap.map(|r| r.0) == Some(*mem) {
+            notes.push(format!("cheapest under {latency_target:.1}s"));
+        }
+        if best_fast.map(|r| r.0) == Some(*mem) {
+            notes.push("fastest".into());
+        }
+        if knee.map(|r| r.0) == Some(*mem) {
+            notes.push("recommended (knee)".into());
+        }
+        t.row(vec![mem.to_string(), secs(*lat), format!("{cost:.8}"), notes.join("; ")]);
+    }
+    t.print();
+    if let (Some(k), Some(f)) = (knee, best_fast) {
+        if k.0 < f.0 {
+            println!(
+                "note: {} MB reaches within 10% of the {} MB latency — the paper's \
+                 'more memory buys nothing' region starts at {} MB",
+                k.0, f.0, k.0
+            );
+        }
+    }
+    write_csv(&t, &ctx.out_dir, "abl-memopt")?;
+    Ok(())
+}
+
+/// L1 kernel ablation: compare warm prediction times between the
+/// Pallas-kernel artifact and the pure-XLA reference artifact.
+pub fn run_kernel_ablation(ctx: &ExpCtx) -> Result<()> {
+    if ctx.engine_kind != EngineKind::Pjrt {
+        println!("abl-kernel requires --engine pjrt (real artifacts); skipping");
+        return Ok(());
+    }
+    let engine = ctx.build_engine()?;
+    let mut t = Table::new(
+        "abl-kernel: Pallas kernel vs pure-XLA reference (warm predict @1536MB, full CPU)",
+        &["Model", "Variant", "Predict mean (s)", "±CI", "Slowdown"],
+    );
+    for model in super::PAPER_MODELS {
+        let mut base = None;
+        for variant in ["ref", "pallas"] {
+            let clock = ManualClock::new();
+            let platform = Invoker::new(ctx.config.clone(), engine.clone(), clock);
+            platform.deploy("f", model, variant, 1536)?;
+            let probe = WarmProbe { requests: ctx.reps.min(10), interval: Duration::from_millis(10) };
+            let report = run_closed_loop(&platform, "f", &probe, ctx.config.seed);
+            let (prd, ci) = mean_ci95(&report.predicts_s());
+            let slowdown = match base {
+                None => {
+                    base = Some(prd);
+                    "1.00x".to_string()
+                }
+                Some(b) => format!("{:.2}x", prd / b),
+            };
+            t.row(vec![model.into(), variant.into(), secs(prd), secs(ci), slowdown]);
+        }
+    }
+    t.print();
+    write_csv(&t, &ctx.out_dir, "abl-kernel")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(tag: &str) -> ExpCtx {
+        let mut c = ExpCtx::new(EngineKind::Mock);
+        c.out_dir = std::env::temp_dir().join(format!("lambdaserve-abl-{tag}-{}", std::process::id()));
+        c.reps = 8;
+        c
+    }
+
+    #[test]
+    fn keepalive_cold_fraction_decreases_with_ttl() {
+        let c = ctx("ka");
+        run_keepalive_ablation(&c).unwrap();
+        let csv = std::fs::read_to_string(c.out_dir.join("abl-keepalive.csv")).unwrap();
+        let cold: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(1))
+            .filter_map(|v| v.parse().ok())
+            .collect();
+        assert_eq!(cold.len(), 6);
+        assert!(cold[0] > 0.95, "TTL=0 always cold: {cold:?}");
+        assert!(cold[5] < cold[0], "long TTL reduces cold starts: {cold:?}");
+        // SLA violations track cold fraction (bimodality claim).
+        let viol: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(4))
+            .filter_map(|v| v.parse().ok())
+            .collect();
+        assert!(viol[0] > viol[5]);
+        std::fs::remove_dir_all(c.out_dir).ok();
+    }
+
+    #[test]
+    fn provisioned_crossover_direction() {
+        let c = ctx("prov");
+        run_provisioned(&c).unwrap();
+        let csv = std::fs::read_to_string(c.out_dir.join("abl-provisioned.csv")).unwrap();
+        let flat: Vec<&str> = csv.lines().filter(|l| l.contains(",flat,")).collect();
+        let bursty: Vec<&str> = csv.lines().filter(|l| l.contains(",bursty,")).collect();
+        // Sparse traffic: serverless wins under both shapes.
+        assert!(flat[0].ends_with("serverless"), "{}", flat[0]);
+        assert!(bursty[0].ends_with("serverless"), "{}", bursty[0]);
+        // Sustained flat traffic crosses over to dedicated...
+        assert!(flat.last().unwrap().ends_with("dedicated"), "{}", flat.last().unwrap());
+        // ...but peak-provisioned bursty demand keeps serverless ahead
+        // far longer: strictly fewer dedicated wins than flat.
+        let wins = |rows: &[&str]| rows.iter().filter(|l| l.ends_with("dedicated")).count();
+        assert!(wins(&bursty) < wins(&flat), "bursty favors serverless");
+        std::fs::remove_dir_all(c.out_dir).ok();
+    }
+
+    #[test]
+    fn memopt_emits_recommendation() {
+        let c = ctx("memopt");
+        run_memopt(&c).unwrap();
+        let csv = std::fs::read_to_string(c.out_dir.join("abl-memopt.csv")).unwrap();
+        assert!(csv.contains("recommended (knee)"));
+        assert!(csv.contains("fastest"));
+        std::fs::remove_dir_all(c.out_dir).ok();
+    }
+
+    #[test]
+    fn kernel_ablation_skips_on_mock() {
+        let c = ctx("kern");
+        run_kernel_ablation(&c).unwrap(); // prints skip note, no panic
+    }
+}

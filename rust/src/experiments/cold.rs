@@ -1,0 +1,94 @@
+//! Figures 4-6: cold function execution across memory sizes.
+//!
+//! Method (paper §3.1, §3.3): 5 sequential requests separated by
+//! 10-minute gaps. The gaps exceed the keep-alive TTL, so every
+//! request cold-starts. The gaps run on the manual clock (instant);
+//! the model-load work is real. One discarded warm-up request per
+//! (model, memory) absorbs the per-process compile (MXNet in the paper
+//! had no compile step; see DESIGN.md §Substitutions).
+
+use super::report::{cost_x1000, secs, write_csv, Table};
+use super::ExpCtx;
+use crate::configparse::MEMORY_SIZES_2017;
+use crate::platform::Invoker;
+use crate::stats::mean_ci95;
+use crate::util::ManualClock;
+use crate::workload::{run_closed_loop, ColdProbe};
+use anyhow::Result;
+use std::time::Duration;
+
+pub fn run_cold(ctx: &ExpCtx, model: &str, name: &str) -> Result<()> {
+    let engine = ctx.build_engine()?;
+    let mut t = Table::new(
+        &format!("{name}: cold execution ({model}); mean over 5 requests at 10-min gaps [95% CI]"),
+        &["Memory (MB)", "Latency (s)", "±CI", "Prediction (s)", "±CI", "Cost x1000 ($)"],
+    );
+
+    for mem in MEMORY_SIZES_2017 {
+        let clock = ManualClock::new();
+        let platform = Invoker::new(ctx.config.clone(), engine.clone(), clock);
+        if platform.deploy("f", model, "pallas", mem).is_err() {
+            t.row(vec![mem.to_string(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        // Discarded warm-up: absorbs the one-time artifact compile so
+        // all measured cold starts pay the same (real) model load.
+        let _ = platform.invoke("f", 0);
+        platform.evict_all();
+        platform.billing.reset();
+        platform.metrics.reset();
+
+        let probe = ColdProbe { requests: 5, gap: Duration::from_secs(600) };
+        let report = run_closed_loop(&platform, "f", &probe, ctx.config.seed ^ mem as u64);
+        assert_eq!(report.cold_count(), report.ok_samples().len(), "all requests cold");
+        let (lat, lat_ci) = mean_ci95(&report.latencies_s());
+        let (prd, prd_ci) = mean_ci95(&report.predicts_s());
+        t.row(vec![
+            mem.to_string(),
+            secs(lat),
+            secs(lat_ci),
+            secs(prd),
+            secs(prd_ci),
+            cost_x1000(report.total_cost()),
+        ]);
+    }
+    t.print();
+    write_csv(&t, &ctx.out_dir, name)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::EngineKind;
+
+    fn parse_col(csv: &str, col: usize) -> Vec<f64> {
+        csv.lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(col))
+            .filter_map(|v| v.parse().ok())
+            .collect()
+    }
+
+    #[test]
+    fn cold_latency_exceeds_prediction_and_decreases() {
+        let mut c = ExpCtx::new(EngineKind::Mock);
+        c.out_dir = std::env::temp_dir().join(format!("lambdaserve-cold-{}", std::process::id()));
+        run_cold(&c, "squeezenet", "figtest4").unwrap();
+        let csv = std::fs::read_to_string(c.out_dir.join("figtest4.csv")).unwrap();
+        let lat = parse_col(&csv, 1);
+        let prd = parse_col(&csv, 3);
+        assert_eq!(lat.len(), 12);
+        // Cold latency dominated by bootstrap: much larger than predict.
+        for (l, p) in lat.iter().zip(&prd) {
+            assert!(*l > p + 0.2, "cold overhead visible: {l} vs {p}");
+        }
+        // Decreasing with memory but flatter than warm: the
+        // memory-independent sandbox component stays.
+        assert!(lat[0] > lat[11], "{lat:?}");
+        let warm_ratio = prd[0] / prd[11];
+        let cold_ratio = lat[0] / lat[11];
+        assert!(cold_ratio < warm_ratio, "cold curve flatter: {cold_ratio} < {warm_ratio}");
+        std::fs::remove_dir_all(c.out_dir).ok();
+    }
+}

@@ -1,0 +1,107 @@
+//! Experiment harnesses: one per paper table/figure plus ablations.
+//!
+//! Experiment ids (see DESIGN.md §4): `table1`, `fig1`..`fig10`,
+//! `abl-keepalive`, `abl-provisioned`, `abl-memopt`, `abl-kernel`.
+//! Each prints paper-style rows and writes a CSV into `results/`.
+
+mod ablations;
+mod cold;
+mod report;
+mod scale;
+mod table1;
+mod warm;
+
+pub use ablations::{run_kernel_ablation, run_keepalive_ablation, run_memopt, run_provisioned};
+pub use cold::run_cold;
+pub use report::{write_csv, Table};
+pub use scale::{print_fig7, run_scale};
+pub use table1::run_table1;
+pub use warm::run_warm;
+
+use crate::configparse::PlatformConfig;
+use crate::runtime::{Engine, MockEngine, PjrtEngine};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Which engine an experiment runs against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Real AOT artifacts on the PJRT CPU client.
+    Pjrt,
+    /// Synthetic costs calibrated to the measured artifacts
+    /// (fast sweeps; see DESIGN.md §Calibration).
+    Mock,
+}
+
+/// Shared experiment context.
+pub struct ExpCtx {
+    pub config: PlatformConfig,
+    pub engine_kind: EngineKind,
+    pub engine_shards: usize,
+    /// Output directory for CSVs.
+    pub out_dir: std::path::PathBuf,
+    /// Scale factor for time-expensive sweeps (1.0 = paper scale).
+    pub scale: f64,
+    /// Repetitions for warm probes (paper: 25).
+    pub reps: usize,
+}
+
+impl ExpCtx {
+    pub fn new(engine_kind: EngineKind) -> Self {
+        Self {
+            config: PlatformConfig::default(),
+            engine_kind,
+            engine_shards: 2,
+            out_dir: std::path::PathBuf::from("results"),
+            scale: 1.0,
+            reps: 25,
+        }
+    }
+
+    pub fn build_engine(&self) -> Result<Arc<dyn Engine>> {
+        match self.engine_kind {
+            EngineKind::Mock => Ok(Arc::new(MockEngine::paper_zoo())),
+            EngineKind::Pjrt => {
+                let dir = std::path::Path::new(&self.config.artifacts_dir);
+                Ok(Arc::new(PjrtEngine::new(dir, self.engine_shards)?))
+            }
+        }
+    }
+}
+
+/// The three paper models, in figure order.
+pub const PAPER_MODELS: [&str; 3] = ["squeezenet", "resnet18", "resnext50"];
+
+/// Dispatch by experiment id.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
+    match id {
+        "table1" => run_table1(ctx),
+        "fig1" => run_warm(ctx, "squeezenet", "fig1"),
+        "fig2" => run_warm(ctx, "resnet18", "fig2"),
+        "fig3" => run_warm(ctx, "resnext50", "fig3"),
+        "fig4" => run_cold(ctx, "squeezenet", "fig4"),
+        "fig5" => run_cold(ctx, "resnet18", "fig5"),
+        "fig6" => run_cold(ctx, "resnext50", "fig6"),
+        "fig7" => print_fig7(ctx),
+        "fig8" => run_scale(ctx, "squeezenet", "fig8"),
+        "fig9" => run_scale(ctx, "resnet18", "fig9"),
+        "fig10" => run_scale(ctx, "resnext50", "fig10"),
+        "abl-keepalive" => run_keepalive_ablation(ctx),
+        "abl-provisioned" => run_provisioned(ctx),
+        "abl-memopt" => run_memopt(ctx),
+        "abl-kernel" => run_kernel_ablation(ctx),
+        "all" => {
+            for id in ALL_IDS {
+                println!("\n=== experiment {id} ===");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment id {id:?}; valid: {ALL_IDS:?} or 'all'"),
+    }
+}
+
+pub const ALL_IDS: [&str; 15] = [
+    "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+    "abl-keepalive", "abl-provisioned", "abl-memopt", "abl-kernel",
+];

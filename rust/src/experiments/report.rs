@@ -1,0 +1,149 @@
+//! Tabular experiment output: aligned console print + CSV files.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Aligned console rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("{}\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            let escaped: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            s.push_str(&escaped.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Write a table as `<out_dir>/<name>.csv`.
+pub fn write_csv(table: &Table, out_dir: &Path, name: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join(format!("{name}.csv"));
+    std::fs::write(&path, table.to_csv())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// `x.yz` seconds formatting used across experiment rows.
+pub fn secs(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+/// Cost in dollars x 1000, as the paper plots it.
+pub fn cost_x1000(v: f64) -> String {
+    format!("{:.4}", v * 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("t", &["mem", "latency"]);
+        t.row(vec!["128".into(), "1.52".into()]);
+        t.row(vec!["1536".into(), "0.12".into()]);
+        t
+    }
+
+    #[test]
+    fn render_aligns() {
+        let r = sample().render();
+        assert!(r.contains("mem  latency"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["x,y".into()]);
+        t.row(vec!["q\"u".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"u\""));
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("lambdaserve-report-test");
+        write_csv(&sample(), &dir, "fig1").unwrap();
+        let content = std::fs::read_to_string(dir.join("fig1.csv")).unwrap();
+        assert!(content.starts_with("mem,latency"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(secs(1.23456), "1.235");
+        assert_eq!(cost_x1000(0.0000015), "0.0015");
+    }
+}

@@ -1,0 +1,39 @@
+//! Table 1: AWS Lambda price per 100 ms for each memory size.
+
+use super::report::{write_csv, Table};
+use super::ExpCtx;
+use crate::configparse::MEMORY_SIZES_2017;
+use anyhow::Result;
+
+pub fn run_table1(ctx: &ExpCtx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 1: AWS Lambda price per 100ms by memory size (2017)",
+        &["Memory (MB)", "Price per 100ms ($)"],
+    );
+    for mem in MEMORY_SIZES_2017 {
+        let p = ctx.config.pricing.price_per_unit(mem)?;
+        t.row(vec![mem.to_string(), format!("{p:.9}")]);
+    }
+    t.print();
+    write_csv(&t, &ctx.out_dir, "table1")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::EngineKind;
+
+    #[test]
+    fn reproduces_paper_rows() {
+        let mut ctx = ExpCtx::new(EngineKind::Mock);
+        ctx.out_dir = std::env::temp_dir().join("lambdaserve-table1-test");
+        run_table1(&ctx).unwrap();
+        let csv = std::fs::read_to_string(ctx.out_dir.join("table1.csv")).unwrap();
+        // Spot-check the paper's first and last rows.
+        assert!(csv.contains("128,0.000000208"));
+        assert!(csv.contains("1536,0.000002501"));
+        assert_eq!(csv.lines().count(), 13);
+        std::fs::remove_dir_all(ctx.out_dir).ok();
+    }
+}

@@ -1,0 +1,121 @@
+//! Figures 1-3: warm function execution across memory sizes.
+//!
+//! Method (paper §3.1-3.2): per memory size, deploy the model's
+//! function, send one discarded request (absorbs the cold start), then
+//! 25 sequential requests at 1 s intervals; report mean latency
+//! (client-observed), mean prediction time, and total cost x1000, all
+//! with 95% CIs.
+
+use super::report::{cost_x1000, secs, write_csv, Table};
+use super::ExpCtx;
+use crate::configparse::MEMORY_SIZES_2017;
+use crate::platform::Invoker;
+use crate::stats::mean_ci95;
+use crate::util::ManualClock;
+use crate::workload::{run_closed_loop, WarmProbe};
+use anyhow::Result;
+use std::time::Duration;
+
+pub fn run_warm(ctx: &ExpCtx, model: &str, name: &str) -> Result<()> {
+    let engine = ctx.build_engine()?;
+    let mut t = Table::new(
+        &format!("{name}: warm execution ({model}); mean over {} requests [95% CI]", ctx.reps),
+        &["Memory (MB)", "Latency (s)", "±CI", "Prediction (s)", "±CI", "Cost x1000 ($)"],
+    );
+
+    for mem in MEMORY_SIZES_2017 {
+        let clock = ManualClock::new();
+        let platform = Invoker::new(ctx.config.clone(), engine.clone(), clock);
+        if platform.deploy("f", model, "pallas", mem).is_err() {
+            // Below the model's peak-memory floor: the paper has no
+            // data point here either (e.g. ResNeXt below 512 MB).
+            t.row(vec![mem.to_string(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        let probe = WarmProbe { requests: ctx.reps, interval: Duration::from_secs(1) };
+        let report = run_closed_loop(&platform, "f", &probe, ctx.config.seed ^ mem as u64);
+        let (lat, lat_ci) = mean_ci95(&report.latencies_s());
+        let (prd, prd_ci) = mean_ci95(&report.predicts_s());
+        t.row(vec![
+            mem.to_string(),
+            secs(lat),
+            secs(lat_ci),
+            secs(prd),
+            secs(prd_ci),
+            cost_x1000(report.total_cost()),
+        ]);
+    }
+    t.print();
+    write_csv(&t, &ctx.out_dir, name)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::EngineKind;
+
+    fn ctx() -> ExpCtx {
+        let mut ctx = ExpCtx::new(EngineKind::Mock);
+        ctx.out_dir = std::env::temp_dir().join(format!("lambdaserve-warm-{}", std::process::id()));
+        ctx.reps = 10;
+        ctx
+    }
+
+    fn parse_col(csv: &str, col: usize) -> Vec<f64> {
+        csv.lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(col))
+            .filter_map(|v| v.parse().ok())
+            .collect()
+    }
+
+    #[test]
+    fn squeezenet_latency_decreases_with_memory() {
+        let c = ctx();
+        run_warm(&c, "squeezenet", "figtest").unwrap();
+        let csv = std::fs::read_to_string(c.out_dir.join("figtest.csv")).unwrap();
+        let lat = parse_col(&csv, 1);
+        assert_eq!(lat.len(), 12, "squeezenet deployable at all sizes");
+        // Monotone non-increasing up to jitter: compare endpoints.
+        assert!(lat[0] > lat[11] * 4.0, "128 MB much slower: {lat:?}");
+        // Prediction < latency (network component).
+        let prd = parse_col(&csv, 3);
+        for (l, p) in lat.iter().zip(&prd) {
+            assert!(l > p);
+        }
+        std::fs::remove_dir_all(c.out_dir).ok();
+    }
+
+    #[test]
+    fn resnext_missing_small_memory_points() {
+        let c = ctx();
+        run_warm(&c, "resnext50", "figtest3").unwrap();
+        let csv = std::fs::read_to_string(c.out_dir.join("figtest3.csv")).unwrap();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 12);
+        // 128..448 not deployable (peak 429 MB).
+        assert!(rows[0].contains("-"), "128 MB missing");
+        assert!(rows[2].contains("-"), "384 MB missing");
+        assert!(!rows[3].contains(",-"), "512 MB present: {}", rows[3]);
+        std::fs::remove_dir_all(c.out_dir).ok();
+    }
+
+    #[test]
+    fn cost_non_monotone_and_top_end_expensive() {
+        // The paper's cost findings (§3.2): total cost "does not
+        // necessarily increase with the memory size" (the shorter
+        // execution offsets the higher unit price at some steps), but
+        // past the latency plateau (1024->1536 MB) cost strictly rises.
+        let c = ctx();
+        run_warm(&c, "squeezenet", "figtest-cost").unwrap();
+        let csv = std::fs::read_to_string(c.out_dir.join("figtest-cost.csv")).unwrap();
+        let cost = parse_col(&csv, 5);
+        assert_eq!(cost.len(), 12);
+        let non_monotone = cost.windows(2).any(|w| w[1] < w[0]);
+        assert!(non_monotone, "some step got cheaper: {cost:?}");
+        let min = cost.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(cost[11] > min * 1.2, "1536 MB costs more than the optimum: {cost:?}");
+        std::fs::remove_dir_all(c.out_dir).ok();
+    }
+}

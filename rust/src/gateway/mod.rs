@@ -1,0 +1,260 @@
+//! HTTP gateway — the API-Gateway analog fronting the platform.
+//!
+//! Routes:
+//!   GET  /v1/functions                      — list deployments
+//!   POST /v1/functions?name=&model=&mem=    — deploy
+//!   GET  /v1/invoke/<function>[?seed=N]     — invoke (the paper's GET)
+//!   POST /v1/prewarm/<function>?n=N         — keep-warm knob (§5)
+//!   GET  /v1/stats                          — metrics snapshot
+//!   GET  /healthz
+//!
+//! Responses are JSON; invocation responses mirror what the paper's
+//! Lambda returned (prediction + timing), with the latency
+//! decomposition added.
+
+use crate::httpd::{HttpRequest, HttpServer, Responder};
+use crate::platform::{InvokeError, Platform};
+use crate::util::json::{obj, Json};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub struct Gateway {
+    server: HttpServer,
+}
+
+impl Gateway {
+    pub fn bind(addr: &str, threads: usize, platform: Arc<Platform>) -> Result<Self> {
+        let seq = Arc::new(AtomicU64::new(1));
+        let server = HttpServer::bind(addr, threads, move |req| {
+            route(&platform, &seq, req)
+        })?;
+        Ok(Self { server })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.server.local_addr()
+    }
+
+    pub fn shutdown_handle(&self) -> crate::httpd::ShutdownHandle {
+        self.server.shutdown_handle()
+    }
+
+    /// Blocking accept loop.
+    pub fn serve(&self) -> Result<()> {
+        self.server.serve()
+    }
+}
+
+fn route(platform: &Arc<Platform>, seq: &AtomicU64, req: HttpRequest) -> Responder {
+    let path = req.path.clone();
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => Responder::text(200, "ok"),
+        ("GET", ["v1", "functions"]) => list_functions(platform),
+        ("POST", ["v1", "functions"]) => deploy(platform, &req),
+        ("GET", ["v1", "invoke", func]) => invoke(platform, seq, func, &req),
+        ("POST", ["v1", "prewarm", func]) => prewarm(platform, func, &req),
+        ("GET", ["v1", "stats"]) => stats(platform),
+        _ => Responder::json(404, err_json("no such route")),
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    obj(vec![("error", Json::Str(msg.into()))]).to_string()
+}
+
+fn list_functions(platform: &Arc<Platform>) -> Responder {
+    let fns: Vec<Json> = platform
+        .registry
+        .list()
+        .into_iter()
+        .map(|f| {
+            obj(vec![
+                ("name", Json::Str(f.name.clone())),
+                ("model", Json::Str(f.model.clone())),
+                ("variant", Json::Str(f.variant.clone())),
+                ("memory_mb", Json::Num(f.memory_mb as f64)),
+            ])
+        })
+        .collect();
+    Responder::json(200, Json::Arr(fns).to_string())
+}
+
+fn deploy(platform: &Arc<Platform>, req: &HttpRequest) -> Responder {
+    let name = req.query_param("name").unwrap_or_default().to_string();
+    let model = req.query_param("model").unwrap_or_default().to_string();
+    let variant = req.query_param("variant").unwrap_or("pallas").to_string();
+    let mem: u32 = match req.query_param("mem").unwrap_or("1024").parse() {
+        Ok(m) => m,
+        Err(_) => return Responder::json(400, err_json("mem must be an integer")),
+    };
+    match platform.deploy(&name, &model, &variant, mem) {
+        Ok(spec) => Responder::json(
+            200,
+            obj(vec![
+                ("deployed", Json::Str(spec.name.clone())),
+                ("memory_mb", Json::Num(spec.memory_mb as f64)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => Responder::json(400, err_json(&e.to_string())),
+    }
+}
+
+fn invoke(platform: &Arc<Platform>, seq: &AtomicU64, func: &str, req: &HttpRequest) -> Responder {
+    let seed = req
+        .query_param("seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| seq.fetch_add(1, Ordering::Relaxed));
+    match platform.invoke(func, seed) {
+        Ok(out) => {
+            let r = &out.record;
+            Responder::json(
+                200,
+                obj(vec![
+                    ("function", Json::Str(r.function.clone())),
+                    ("top1", Json::Num(out.prediction.top1 as f64)),
+                    ("top_prob", Json::Num(out.prediction.top_prob as f64)),
+                    ("start", Json::Str(r.start.to_string())),
+                    ("prediction_s", Json::Num(r.predict.as_secs_f64())),
+                    ("response_s", Json::Num(r.response().as_secs_f64())),
+                    ("billed_ms", Json::Num(r.billed_ms as f64)),
+                    ("cost_dollars", Json::Num(r.cost_dollars)),
+                ])
+                .to_string(),
+            )
+        }
+        Err(InvokeError::NotFound(f)) => {
+            Responder::json(404, err_json(&format!("function {f} not deployed")))
+        }
+        Err(InvokeError::Throttled) => Responder::json(429, err_json("throttled")),
+        Err(InvokeError::Failed(e)) => Responder::json(500, err_json(&e.to_string())),
+    }
+}
+
+fn prewarm(platform: &Arc<Platform>, func: &str, req: &HttpRequest) -> Responder {
+    let n: usize = match req.query_param("n").unwrap_or("1").parse() {
+        Ok(n) => n,
+        Err(_) => return Responder::json(400, err_json("n must be an integer")),
+    };
+    match platform.prewarm(func, n) {
+        Ok(done) => Responder::json(200, obj(vec![("prewarmed", Json::Num(done as f64))]).to_string()),
+        Err(e) => Responder::json(400, err_json(&e.to_string())),
+    }
+}
+
+fn stats(platform: &Arc<Platform>) -> Responder {
+    let m = &platform.metrics;
+    Responder::json(
+        200,
+        obj(vec![
+            ("invocations", Json::Num(m.len() as f64)),
+            ("cold_starts", Json::Num(m.cold_count() as f64)),
+            ("containers_alive", Json::Num(platform.pool.total_alive() as f64)),
+            ("in_flight", Json::Num(platform.scaler.in_flight() as f64)),
+            ("peak_concurrency", Json::Num(platform.scaler.high_water_mark() as f64)),
+            ("throttled", Json::Num(platform.scaler.throttled_count() as f64)),
+            ("total_cost_dollars", Json::Num(platform.billing.total_dollars())),
+            ("total_gb_seconds", Json::Num(platform.billing.total_gb_seconds())),
+        ])
+        .to_string(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configparse::PlatformConfig;
+    use crate::httpd::http_get;
+    use crate::httpd::http_post;
+    use crate::platform::Invoker;
+    use crate::runtime::{MockEngine, MockModelCosts};
+    use crate::util::json::Json;
+    use std::time::Duration;
+
+    fn fast_platform() -> Arc<Platform> {
+        let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+            "squeezenet",
+            2,
+            5.0,
+            85,
+        )]));
+        let config = PlatformConfig {
+            bootstrap: crate::configparse::BootstrapConfig {
+                simulate_delays: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        Arc::new(Invoker::live(config, engine))
+    }
+
+    fn start() -> (String, crate::httpd::ShutdownHandle, std::thread::JoinHandle<()>) {
+        let gw = Gateway::bind("127.0.0.1:0", 4, fast_platform()).unwrap();
+        let addr = gw.local_addr().to_string();
+        let sh = gw.shutdown_handle();
+        let t = std::thread::spawn(move || {
+            gw.serve().unwrap();
+        });
+        (addr, sh, t)
+    }
+
+    #[test]
+    fn full_http_lifecycle() {
+        let (addr, sh, t) = start();
+        let tmo = Duration::from_secs(10);
+
+        // health
+        assert_eq!(http_get(&addr, "/healthz", tmo).unwrap().status, 200);
+
+        // deploy
+        let r = http_post(&addr, "/v1/functions?name=sq&model=squeezenet&mem=1024", b"", tmo)
+            .unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_str());
+
+        // list
+        let r = http_get(&addr, "/v1/functions", tmo).unwrap();
+        assert!(r.body_str().contains("\"sq\""));
+
+        // invoke: cold then warm
+        let r = http_get(&addr, "/v1/invoke/sq?seed=7", tmo).unwrap();
+        assert_eq!(r.status, 200);
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.get("start").unwrap().as_str(), Some("cold"));
+        assert!(j.get("response_s").unwrap().as_f64().unwrap() > 0.0);
+        let r = http_get(&addr, "/v1/invoke/sq?seed=8", tmo).unwrap();
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.get("start").unwrap().as_str(), Some("warm"));
+
+        // prewarm
+        let r = http_post(&addr, "/v1/prewarm/sq?n=2", b"", tmo).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_str());
+
+        // stats
+        let r = http_get(&addr, "/v1/stats", tmo).unwrap();
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.get("invocations").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("cold_starts").unwrap().as_u64(), Some(1));
+        assert!(j.get("containers_alive").unwrap().as_u64().unwrap() >= 3);
+
+        // errors
+        assert_eq!(http_get(&addr, "/v1/invoke/nope", tmo).unwrap().status, 404);
+        assert_eq!(http_get(&addr, "/nope", tmo).unwrap().status, 404);
+        assert_eq!(
+            http_post(&addr, "/v1/functions?name=x&model=squeezenet&mem=abc", b"", tmo)
+                .unwrap()
+                .status,
+            400
+        );
+        assert_eq!(
+            http_post(&addr, "/v1/functions?name=x&model=vgg&mem=512", b"", tmo)
+                .unwrap()
+                .status,
+            400
+        );
+
+        sh.shutdown();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,162 @@
+//! Tiny blocking HTTP/1.1 client (for the load generator and tests).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+pub fn http_get(addr: &str, path_and_query: &str, timeout: Duration) -> Result<HttpResponse> {
+    request(addr, "GET", path_and_query, &[], timeout)
+}
+
+pub fn http_post(
+    addr: &str,
+    path_and_query: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    request(addr, "POST", path_and_query, body, timeout)
+}
+
+fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true).ok();
+    let mut w = stream.try_clone()?;
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().context("empty response")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("bad response version: {version}");
+    }
+    let status: u16 = parts.next().context("missing status")?.parse().context("bad status")?;
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("eof in headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let body = if let Some(len) = headers.get("content-length") {
+        let len: usize = len.parse().context("bad content-length")?;
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        buf
+    } else {
+        let mut buf = Vec::new();
+        reader.read_to_end(&mut buf)?;
+        buf
+    };
+    Ok(HttpResponse { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::httpd::{HttpServer, Responder};
+
+    /// End-to-end loopback: server + client round-trip.
+    #[test]
+    fn get_roundtrip() {
+        let server = HttpServer::bind("127.0.0.1:0", 2, |req| {
+            assert_eq!(req.method, "GET");
+            let model = req.query_param("model").unwrap_or("none").to_string();
+            Responder::json(200, format!("{{\"model\":\"{model}\"}}"))
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let shutdown = server.shutdown_handle();
+        let t = std::thread::spawn(move || server.serve());
+
+        let resp =
+            http_get(&addr, "/invoke?model=squeezenet", Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.headers["content-type"], "application/json");
+        assert!(resp.body_str().contains("squeezenet"));
+
+        shutdown.shutdown();
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn post_echoes_body_length() {
+        let server = HttpServer::bind("127.0.0.1:0", 2, |req| {
+            Responder::text(200, &format!("len={}", req.body.len()))
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let shutdown = server.shutdown_handle();
+        let t = std::thread::spawn(move || server.serve());
+
+        let resp = http_post(&addr, "/x", b"hello world", Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body_str(), "len=11");
+
+        shutdown.shutdown();
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn many_concurrent_clients() {
+        let server = HttpServer::bind("127.0.0.1:0", 8, |_req| Responder::text(200, "ok"))
+            .unwrap();
+        let addr = server.local_addr().to_string();
+        let shutdown = server.shutdown_handle();
+        let t = std::thread::spawn(move || server.serve());
+
+        let handles: Vec<_> = (0..32)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    http_get(&addr, "/", Duration::from_secs(5)).unwrap().status
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+
+        shutdown.shutdown();
+        t.join().unwrap().unwrap();
+    }
+}

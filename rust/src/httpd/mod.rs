@@ -1,0 +1,13 @@
+//! Minimal HTTP/1.1 server + client over std::net (the API-Gateway
+//! substrate — no hyper/axum in the offline dep closure).
+//!
+//! Supports what the gateway and examples need: request line + headers
+//! parsing, Content-Length bodies, keep-alive, chunked responses are
+//! NOT used (we always set Content-Length), and a tiny blocking client
+//! for the load generator and tests.
+
+mod client;
+pub mod server;
+
+pub use client::{http_get, http_post, HttpResponse};
+pub use server::{HttpRequest, HttpServer, Responder, ShutdownHandle};

@@ -1,0 +1,293 @@
+//! Threaded HTTP/1.1 server.
+
+use crate::exec::ThreadPool;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    /// Parsed query parameters.
+    pub query: BTreeMap<String, String>,
+    /// Lower-cased header names.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.get(key).map(String::as_str)
+    }
+}
+
+/// Response builder handed to the handler.
+pub struct Responder {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Responder {
+    pub fn json(status: u16, body: String) -> Self {
+        Self { status, content_type: "application/json".into(), body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        Self { status, content_type: "text/plain".into(), body: body.as_bytes().to_vec() }
+    }
+}
+
+type Handler = dyn Fn(HttpRequest) -> Responder + Send + Sync + 'static;
+
+pub struct HttpServer {
+    listener: TcpListener,
+    pool: ThreadPool,
+    handler: Arc<Handler>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` ("127.0.0.1:0" for an ephemeral port).
+    pub fn bind<F>(addr: &str, threads: usize, handler: F) -> Result<Self>
+    where
+        F: Fn(HttpRequest) -> Responder + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Self {
+            listener,
+            pool: ThreadPool::new(threads, "httpd"),
+            handler: Arc::new(handler),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().unwrap()
+    }
+
+    /// Handle for stopping the accept loop from another thread.
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { flag: self.shutdown.clone(), addr: self.local_addr() }
+    }
+
+    /// Accept loop; returns when the shutdown handle fires.
+    pub fn serve(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let handler = self.handler.clone();
+            self.pool.execute(move || {
+                let _ = handle_connection(stream, &handler);
+            });
+        }
+        Ok(())
+    }
+}
+
+pub struct ShutdownHandle {
+    flag: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
+
+impl ShutdownHandle {
+    pub fn shutdown(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        // Poke the accept loop awake.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: &Arc<Handler>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean close
+            Err(e) => {
+                let _ = write_response(&mut stream, 400, "text/plain", e.to_string().as_bytes(), false);
+                return Ok(());
+            }
+        };
+        let keep_alive = req
+            .headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        let resp = handler(req);
+        write_response(&mut stream, resp.status, &resp.content_type, &resp.body, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let target = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version}");
+    }
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').context("malformed header")?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .context("bad content-length")?
+        .unwrap_or(0);
+    if len > 64 << 20 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+
+    let (path, query) = parse_target(&target);
+    Ok(Some(HttpRequest { method, path, query, headers, body }))
+}
+
+fn parse_target(target: &str) -> (String, BTreeMap<String, String>) {
+    match target.split_once('?') {
+        None => (target.to_string(), BTreeMap::new()),
+        Some((path, qs)) => {
+            let mut q = BTreeMap::new();
+            for pair in qs.split('&') {
+                if pair.is_empty() {
+                    continue;
+                }
+                let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+                q.insert(url_decode(k), url_decode(v));
+            }
+            (path.to_string(), q)
+        }
+    }
+}
+
+fn url_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() + 1 && i + 2 <= bytes.len() - 1 + 1 => {
+                let hex = std::str::from_utf8(&bytes[i + 1..(i + 3).min(bytes.len())]).ok();
+                if let Some(v) = hex.and_then(|h| u8::from_str_radix(h, 16).ok()) {
+                    out.push(v);
+                    i += 3;
+                } else {
+                    out.push(b'%');
+                    i += 1;
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len(),
+        conn
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_target_splits_query() {
+        let (path, q) = parse_target("/invoke?model=squeezenet&mem=512");
+        assert_eq!(path, "/invoke");
+        assert_eq!(q["model"], "squeezenet");
+        assert_eq!(q["mem"], "512");
+    }
+
+    #[test]
+    fn parse_target_no_query() {
+        let (path, q) = parse_target("/healthz");
+        assert_eq!(path, "/healthz");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn url_decode_basics() {
+        assert_eq!(url_decode("a%20b+c"), "a b c");
+        assert_eq!(url_decode("100%"), "100%");
+        assert_eq!(url_decode("x%2Fy"), "x/y");
+    }
+
+    #[test]
+    fn status_texts() {
+        assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(429), "Too Many Requests");
+        assert_eq!(status_text(777), "Unknown");
+    }
+}

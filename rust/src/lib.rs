@@ -1,0 +1,36 @@
+//! # lambdaserve
+//!
+//! A self-contained serverless (FaaS) platform for deep-learning
+//! inference, reproducing *"Serving deep learning models in a
+//! serverless platform"* (Ishakian, Muthusamy, Slominski — 2017).
+//!
+//! The paper measured MXNet image classifiers (SqueezeNet, ResNet-18,
+//! ResNeXt-50) on AWS Lambda across memory sizes, under cold starts,
+//! warm starts, and a step-shaped scalability load. This crate builds
+//! the platform itself — container pool with cold/warm lifecycle,
+//! memory-proportional CPU governor, 100 ms-granular billing, HTTP
+//! gateway — and serves *real* inference through AOT-compiled XLA
+//! artifacts (JAX + Pallas at build time, PJRT-CPU at run time; Python
+//! is never on the request path).
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//!
+//! * substrates: [`util`], [`exec`], [`configparse`], [`httpd`],
+//!   [`cliparse`], [`stats`], [`testkit`]
+//! * the FaaS core: [`platform`]
+//! * model execution: [`runtime`]
+//! * measurement: [`workload`], [`experiments`]
+//! * front door: [`gateway`]
+
+pub mod cliparse;
+pub mod configparse;
+pub mod exec;
+pub mod experiments;
+pub mod gateway;
+pub mod httpd;
+pub mod platform;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+pub mod workload;

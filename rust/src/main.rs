@@ -1,0 +1,371 @@
+//! `lambdaserve` launcher.
+//!
+//! Subcommands:
+//!
+//! * `serve`       — start the HTTP gateway on the live platform
+//! * `deploy`      — validate a deployment config (name/model/mem)
+//! * `invoke`      — one-shot local invocation (no HTTP)
+//! * `experiment`  — run a paper experiment by id (`table1`, `fig1`..
+//!                   `fig10`, `abl-*`, or `all`)
+//! * `price-table` — print Table 1
+//! * `models`      — list the AOT model zoo
+
+use anyhow::{bail, Result};
+use lambdaserve::cliparse::Command;
+use lambdaserve::configparse::PlatformConfig;
+use lambdaserve::experiments::{self, EngineKind, ExpCtx};
+use lambdaserve::gateway::Gateway;
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::{Engine, MockEngine, PjrtEngine, Zoo};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "usage: lambdaserve <serve|deploy|invoke|loadgen|experiment|price-table|models> [flags]\n\
+     run `lambdaserve <cmd> --help` for per-command flags"
+        .to_string()
+}
+
+fn load_config(args: &lambdaserve::cliparse::Args) -> Result<PlatformConfig> {
+    match args.get("config") {
+        Some(path) => PlatformConfig::load(Path::new(path)),
+        None => Ok(PlatformConfig::default()),
+    }
+}
+
+fn build_engine(kind: &str, config: &PlatformConfig, shards: usize) -> Result<Arc<dyn Engine>> {
+    match kind {
+        "pjrt" => Ok(Arc::new(PjrtEngine::new(Path::new(&config.artifacts_dir), shards)?)),
+        "mock" => Ok(Arc::new(MockEngine::paper_zoo())),
+        other => bail!("unknown engine {other:?} (pjrt|mock)"),
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "deploy" => cmd_deploy(rest),
+        "invoke" => cmd_invoke(rest),
+        "loadgen" => cmd_loadgen(rest),
+        "experiment" => cmd_experiment(rest),
+        "price-table" => cmd_price_table(rest),
+        "models" => cmd_models(rest),
+        "--help" | "help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "start the HTTP gateway")
+        .flag("addr", "bind address", Some("127.0.0.1:8080"))
+        .flag("config", "platform config TOML", None)
+        .flag("engine", "pjrt | mock", Some("pjrt"))
+        .flag("shards", "engine shards (compute parallelism)", Some("2"))
+        .flag("threads", "gateway worker threads", Some("16"))
+        .flag(
+            "deploy",
+            "comma list of name:model:mem to deploy at boot, e.g. sq:squeezenet:1024",
+            None,
+        );
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let config = load_config(&args)?;
+    let shards = args.get_u64("shards")?.unwrap_or(2) as usize;
+    let engine = build_engine(args.get_or("engine", "pjrt"), &config, shards)?;
+    let platform = Arc::new(Invoker::live(config, engine));
+
+    if let Some(deploys) = args.get_list("deploy") {
+        for d in deploys {
+            let parts: Vec<&str> = d.split(':').collect();
+            if parts.len() != 3 {
+                bail!("--deploy entries are name:model:mem, got {d:?}");
+            }
+            let mem: u32 = parts[2].parse()?;
+            platform.deploy(parts[0], parts[1], "pallas", mem)?;
+            println!("deployed {} = {} @ {} MB", parts[0], parts[1], mem);
+        }
+    }
+
+    let threads = args.get_u64("threads")?.unwrap_or(16) as usize;
+    let gw = Gateway::bind(args.get_or("addr", "127.0.0.1:8080"), threads, platform)?;
+    println!("lambdaserve gateway listening on http://{}", gw.local_addr());
+    println!("  GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
+    gw.serve()
+}
+
+fn cmd_deploy(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("deploy", "validate a deployment offline")
+        .flag("name", "function name", Some("fn"))
+        .flag("model", "zoo model", Some("squeezenet"))
+        .flag("variant", "artifact variant", Some("pallas"))
+        .flag("mem", "memory MB", Some("1024"))
+        .flag("config", "platform config TOML", None)
+        .flag("engine", "pjrt | mock", Some("mock"));
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let config = load_config(&args)?;
+    let engine = build_engine(args.get_or("engine", "mock"), &config, 1)?;
+    let platform = Invoker::live(config, engine);
+    let spec = platform.deploy(
+        args.get_or("name", "fn"),
+        args.get_or("model", "squeezenet"),
+        args.get_or("variant", "pallas"),
+        args.get_u64("mem")?.unwrap_or(1024) as u32,
+    )?;
+    println!(
+        "ok: {} -> {} ({}) @ {} MB (peak requirement {} MB, package {:.1} MB)",
+        spec.name,
+        spec.model,
+        spec.variant,
+        spec.memory_mb,
+        spec.peak_mem_mb,
+        spec.package_bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_invoke(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("invoke", "one-shot local invocation")
+        .flag("model", "zoo model", Some("squeezenet"))
+        .flag("variant", "artifact variant", Some("pallas"))
+        .flag("mem", "memory MB", Some("1024"))
+        .flag("seed", "image seed", Some("1"))
+        .flag("n", "number of requests", Some("2"))
+        .flag("config", "platform config TOML", None)
+        .flag("engine", "pjrt | mock", Some("pjrt"));
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let config = load_config(&args)?;
+    let engine = build_engine(args.get_or("engine", "pjrt"), &config, 1)?;
+    let platform = Invoker::live(config, engine);
+    let mem = args.get_u64("mem")?.unwrap_or(1024) as u32;
+    platform.deploy("fn", args.get_or("model", "squeezenet"), args.get_or("variant", "pallas"), mem)?;
+    let n = args.get_u64("n")?.unwrap_or(2);
+    let seed = args.get_u64("seed")?.unwrap_or(1);
+    for i in 0..n {
+        let out = platform
+            .invoke("fn", seed + i)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let r = &out.record;
+        println!(
+            "[{}] top1={} p={:.4} start={} predict={:.3}s response={:.3}s billed={}ms cost=${:.8}",
+            i,
+            out.prediction.top1,
+            out.prediction.top_prob,
+            r.start,
+            r.predict.as_secs_f64(),
+            r.response().as_secs_f64(),
+            r.billed_ms,
+            r.cost_dollars
+        );
+    }
+    Ok(())
+}
+
+/// The JMeter analog: drive a REMOTE lambdaserve gateway over real
+/// HTTP with one of the paper's schedules and report client-observed
+/// latency statistics.
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    use lambdaserve::exec::ThreadPool;
+    use lambdaserve::httpd::http_get;
+    use lambdaserve::stats::Summary;
+    use lambdaserve::workload::{ColdProbe, PoissonArrivals, Schedule, StepRamp, WarmProbe};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    let cmd = Command::new("loadgen", "HTTP load generator against a running gateway")
+        .flag("addr", "gateway address", Some("127.0.0.1:8080"))
+        .flag("function", "function route to invoke", Some("classify"))
+        .flag("schedule", "warm | cold | step | poisson", Some("warm"))
+        .flag("reps", "warm-probe request count", Some("25"))
+        .flag("rps", "poisson rate (req/s)", Some("5"))
+        .flag("duration", "poisson duration (s)", Some("30"))
+        .flag("scale", "step-ramp scale factor", Some("0.2"))
+        .flag("workers", "client concurrency", Some("64"))
+        .flag("timeout", "per-request timeout (s)", Some("600"));
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+    let function = args.get_or("function", "classify").to_string();
+    let tmo = Duration::from_secs(args.get_u64("timeout")?.unwrap_or(600));
+
+    let schedule: Box<dyn Schedule> = match args.get_or("schedule", "warm") {
+        "warm" => Box::new(WarmProbe {
+            requests: args.get_u64("reps")?.unwrap_or(25) as usize,
+            interval: Duration::from_secs(1),
+        }),
+        // NOTE: remote cold probes wait REAL 10-minute gaps, exactly
+        // like the paper's JMeter script did.
+        "cold" => Box::new(ColdProbe::default()),
+        "step" => Box::new(StepRamp::scaled(args.get_f64("scale")?.unwrap_or(0.2))),
+        "poisson" => Box::new(PoissonArrivals {
+            rps: args.get_f64("rps")?.unwrap_or(5.0),
+            duration: Duration::from_secs(args.get_u64("duration")?.unwrap_or(30)),
+            seed: 7,
+        }),
+        other => bail!("unknown schedule {other:?} (warm|cold|step|poisson)"),
+    };
+
+    let arrivals = schedule.arrivals();
+    let discard = schedule.discard_prefix();
+    println!(
+        "loadgen: {} requests ({} discarded) against http://{addr}/v1/invoke/{function}",
+        arrivals.len(),
+        discard
+    );
+    let workers = args.get_u64("workers")?.unwrap_or(64) as usize;
+    let pool = ThreadPool::new(workers, "loadgen");
+    let results: Arc<Mutex<Vec<(bool, f64, bool)>>> = Arc::new(Mutex::new(Vec::new()));
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for (i, at) in arrivals.iter().enumerate() {
+        let elapsed = t_start.elapsed();
+        if *at > elapsed {
+            std::thread::sleep(*at - elapsed);
+        }
+        let addr = addr.clone();
+        let function = function.clone();
+        let results = results.clone();
+        let measured = i >= discard;
+        handles.push(pool.submit(move || {
+            let t0 = Instant::now();
+            let resp = http_get(&addr, &format!("/v1/invoke/{function}?seed={i}"), tmo);
+            let ok = matches!(&resp, Ok(r) if r.status == 200);
+            let cold = matches!(&resp, Ok(r) if r.body_str().contains("\"cold\""));
+            if measured {
+                results.lock().unwrap().push((ok, t0.elapsed().as_secs_f64(), cold));
+            }
+        }));
+    }
+    for h in handles {
+        h.join();
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+    let rows = results.lock().unwrap().clone();
+    let ok: Vec<f64> = rows.iter().filter(|(s, _, _)| *s).map(|(_, l, _)| *l).collect();
+    let cold = rows.iter().filter(|(_, _, c)| *c).count();
+    let failed = rows.len() - ok.len();
+    let s = Summary::from_samples(&ok);
+    println!(
+        "done in {wall:.1}s: {} ok ({cold} cold), {failed} failed, {:.2} req/s",
+        ok.len(),
+        ok.len() as f64 / wall
+    );
+    println!(
+        "latency: mean={:.3}s ±{:.3} p50={:.3}s p95={:.3}s p99={:.3}s max={:.3}s",
+        s.mean, s.ci95, s.p50, s.p95, s.p99, s.max
+    );
+    Ok(())
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("experiment", "run a paper experiment")
+        .flag("id", "table1|fig1..fig10|abl-*|all", Some("table1"))
+        .flag("engine", "pjrt | mock", None)
+        .flag("shards", "engine shards", Some("2"))
+        .flag("out", "results directory", Some("results"))
+        .flag("scale", "workload scale factor for fig8-10", Some("0.2"))
+        .flag("reps", "warm-probe repetitions", Some("25"))
+        .flag("config", "platform config TOML", None);
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or(args.get_or("id", "table1"))
+        .to_string();
+    // Default engine per experiment family: real artifacts for the
+    // sequential probes, calibrated mock for the concurrency ramp
+    // (see DESIGN.md §4).
+    let default_engine = if id.starts_with("fig8")
+        || id.starts_with("fig9")
+        || id.starts_with("fig10")
+        || id.starts_with("abl")
+    {
+        "mock"
+    } else {
+        "pjrt"
+    };
+    let kind = match args.get("engine").unwrap_or(default_engine) {
+        "pjrt" => EngineKind::Pjrt,
+        "mock" => EngineKind::Mock,
+        other => bail!("unknown engine {other:?}"),
+    };
+    let mut ctx = ExpCtx::new(kind);
+    ctx.config = load_config(&args)?;
+    ctx.engine_shards = args.get_u64("shards")?.unwrap_or(2) as usize;
+    ctx.out_dir = args.get_or("out", "results").into();
+    ctx.scale = args.get_f64("scale")?.unwrap_or(0.2);
+    ctx.reps = args.get_u64("reps")?.unwrap_or(25) as usize;
+    experiments::run(&id, &ctx)
+}
+
+fn cmd_price_table(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("price-table", "print Table 1")
+        .flag("config", "platform config TOML", None)
+        .flag("out", "results directory", Some("results"));
+    let args = cmd.parse(argv)?;
+    let mut ctx = ExpCtx::new(EngineKind::Mock);
+    ctx.config = load_config(&args)?;
+    ctx.out_dir = args.get_or("out", "results").into();
+    experiments::run_table1(&ctx)
+}
+
+fn cmd_models(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("models", "list the AOT model zoo")
+        .flag("config", "platform config TOML", None);
+    let args = cmd.parse(argv)?;
+    let config = load_config(&args)?;
+    let zoo = Zoo::load(Path::new(&config.artifacts_dir))?;
+    println!(
+        "zoo: {}x{} input, seed {} ({} models)",
+        zoo.height,
+        zoo.width,
+        zoo.seed,
+        zoo.models.len()
+    );
+    for m in zoo.models.values() {
+        println!(
+            "  {:12} params={:3} arrays {:6.1} MB  flops={:6.2} G  peak={} MB  variants={:?}",
+            m.name,
+            m.param_count,
+            m.param_bytes as f64 / 1e6,
+            m.flops as f64 / 1e9,
+            m.paper_peak_mem_mb,
+            m.artifacts.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

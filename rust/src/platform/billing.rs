@@ -1,0 +1,199 @@
+//! Billing meter: AWS Lambda 2017 pricing (Table 1 of the paper).
+//!
+//! Execution is billed in 100 ms units, **rounded up**, at a per-unit
+//! price proportional to the configured memory size, plus a flat
+//! per-request charge. The paper's cost curves (Figures 1-3) fall out
+//! of `units(mem) * price(mem)`: the per-unit price rises linearly with
+//! memory while execution time falls, so total cost is non-monotone.
+
+use crate::configparse::{MemorySize, PricingConfig};
+use anyhow::Result;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One billed invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvoiceLine {
+    pub function: String,
+    pub memory_mb: MemorySize,
+    /// Raw billed duration before rounding.
+    pub duration: Duration,
+    /// Duration rounded up to the billing quantum, in ms.
+    pub billed_ms: u64,
+    /// Execution dollars (units x per-unit price).
+    pub execution_dollars: f64,
+    /// Flat request charge.
+    pub request_dollars: f64,
+}
+
+impl InvoiceLine {
+    pub fn total_dollars(&self) -> f64 {
+        self.execution_dollars + self.request_dollars
+    }
+
+    /// GB-seconds consumed (the unit AWS aggregates free tier in).
+    pub fn gb_seconds(&self) -> f64 {
+        (self.memory_mb as f64 / 1024.0) * (self.billed_ms as f64 / 1000.0)
+    }
+}
+
+/// Thread-safe accumulator of invoice lines.
+pub struct BillingMeter {
+    pricing: PricingConfig,
+    lines: Mutex<Vec<InvoiceLine>>,
+}
+
+impl BillingMeter {
+    pub fn new(pricing: PricingConfig) -> Self {
+        Self { pricing, lines: Mutex::new(Vec::new()) }
+    }
+
+    /// Round `duration` up to billing units.
+    pub fn round_up_ms(&self, duration: Duration) -> u64 {
+        let g = self.pricing.granularity_ms;
+        let ms = duration.as_nanos().div_ceil(1_000_000) as u64;
+        ms.div_ceil(g) * g
+    }
+
+    /// Price one invocation and record it.
+    pub fn charge(
+        &self,
+        function: &str,
+        memory_mb: MemorySize,
+        duration: Duration,
+    ) -> Result<InvoiceLine> {
+        let billed_ms = self.round_up_ms(duration);
+        let units = billed_ms / self.pricing.granularity_ms;
+        let per_unit = self.pricing.price_per_unit(memory_mb)?;
+        let line = InvoiceLine {
+            function: function.to_string(),
+            memory_mb,
+            duration,
+            billed_ms,
+            execution_dollars: units as f64 * per_unit,
+            request_dollars: self.pricing.per_request_dollars,
+        };
+        self.lines.lock().unwrap().push(line.clone());
+        Ok(line)
+    }
+
+    pub fn lines(&self) -> Vec<InvoiceLine> {
+        self.lines.lock().unwrap().clone()
+    }
+
+    pub fn total_dollars(&self) -> f64 {
+        self.lines.lock().unwrap().iter().map(InvoiceLine::total_dollars).sum()
+    }
+
+    pub fn total_gb_seconds(&self) -> f64 {
+        self.lines.lock().unwrap().iter().map(InvoiceLine::gb_seconds).sum()
+    }
+
+    pub fn reset(&self) {
+        self.lines.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Prop};
+
+    fn meter() -> BillingMeter {
+        BillingMeter::new(PricingConfig::default())
+    }
+
+    #[test]
+    fn rounds_up_to_100ms() {
+        let m = meter();
+        assert_eq!(m.round_up_ms(Duration::from_millis(1)), 100);
+        assert_eq!(m.round_up_ms(Duration::from_millis(100)), 100);
+        assert_eq!(m.round_up_ms(Duration::from_millis(101)), 200);
+        assert_eq!(m.round_up_ms(Duration::from_micros(100_001)), 200);
+        assert_eq!(m.round_up_ms(Duration::ZERO), 0);
+    }
+
+    #[test]
+    fn table1_example_charges() {
+        let m = meter();
+        // 1 second at 128 MB = 10 units x $0.000000208.
+        let line = m.charge("f", 128, Duration::from_secs(1)).unwrap();
+        assert!((line.execution_dollars - 10.0 * 0.000000208).abs() < 1e-15);
+        assert_eq!(line.billed_ms, 1000);
+        // 250 ms at 1536 MB rounds to 3 units.
+        let line = m.charge("f", 1536, Duration::from_millis(250)).unwrap();
+        assert_eq!(line.billed_ms, 300);
+        assert!((line.execution_dollars - 3.0 * 0.000002501).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gb_seconds() {
+        let m = meter();
+        let line = m.charge("f", 1024, Duration::from_secs(2)).unwrap();
+        assert!((line.gb_seconds() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulates_and_resets() {
+        let m = meter();
+        m.charge("a", 128, Duration::from_millis(100)).unwrap();
+        m.charge("b", 256, Duration::from_millis(100)).unwrap();
+        assert_eq!(m.lines().len(), 2);
+        let total = m.total_dollars();
+        assert!((total - (0.000000208 + 0.000000417 + 2.0 * 0.2e-6)).abs() < 1e-15);
+        m.reset();
+        assert_eq!(m.lines().len(), 0);
+        assert_eq!(m.total_dollars(), 0.0);
+    }
+
+    #[test]
+    fn unknown_memory_errors() {
+        let m = meter();
+        assert!(m.charge("f", 64, Duration::from_millis(100)).is_err());
+    }
+
+    // ------------------------- properties -------------------------
+
+    #[test]
+    fn prop_billed_never_less_than_duration() {
+        let m = meter();
+        forall("billed_ms >= duration_ms", move |ms: &u64| {
+            let ms = ms % 10_000_000; // up to ~3h
+            let billed = m.round_up_ms(Duration::from_millis(ms));
+            billed >= ms && billed - ms < 100
+        });
+    }
+
+    #[test]
+    fn prop_billing_monotone_in_duration() {
+        let m = meter();
+        forall("longer runs never cost less", move |(a, b): &(u64, u64)| {
+            let (a, b) = (a % 1_000_000, b % 1_000_000);
+            let (lo, hi) = (a.min(b), a.max(b));
+            let c_lo =
+                m.charge("f", 512, Duration::from_millis(lo)).unwrap().total_dollars();
+            let c_hi =
+                m.charge("f", 512, Duration::from_millis(hi)).unwrap().total_dollars();
+            Prop::from(c_lo <= c_hi)
+        });
+    }
+
+    #[test]
+    fn prop_billing_monotone_in_memory_at_fixed_duration() {
+        // Per-unit price (and hence fixed-duration cost) rises with
+        // memory: Table 1's structure.
+        let m = meter();
+        forall("more memory costs more per unit time", move |(i, j): &(u32, u32)| {
+            let mems = crate::configparse::MEMORY_SIZES_2017;
+            let a = mems[(*i as usize) % mems.len()];
+            let b = mems[(*j as usize) % mems.len()];
+            if a == b {
+                return Prop::Discard;
+            }
+            let (lo, hi) = (a.min(b), a.max(b));
+            let c_lo = m.charge("f", lo, Duration::from_secs(1)).unwrap().execution_dollars;
+            let c_hi = m.charge("f", hi, Duration::from_secs(1)).unwrap().execution_dollars;
+            Prop::from(c_lo < c_hi)
+        });
+    }
+}

@@ -1,0 +1,267 @@
+//! Container lifecycle: the unit of cold/warm state.
+//!
+//! A container binds one live model instance (weights resident in its
+//! engine shard) to one deployed function. Cold start = provisioning a
+//! new container: simulated sandbox + runtime-init + package-fetch
+//! delays (calibrated, CPU/IO-scaled) plus the *real* model compile +
+//! weight materialization done by the engine. Warm start = reusing a
+//! container from the pool, paying only the forward pass.
+
+use super::metrics::StartKind;
+use super::registry::FunctionSpec;
+use super::throttle::CpuGovernor;
+use crate::configparse::BootstrapConfig;
+use crate::runtime::{Engine, InstanceHandle, Prediction};
+use crate::util::{Clock, SplitMix64};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+static NEXT_CONTAINER_ID: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    /// Executing a request.
+    Busy,
+    /// Idle in the warm pool.
+    Warm,
+    /// Evicted; instance freed.
+    Reaped,
+}
+
+/// Cost breakdown of a cold provision.
+#[derive(Debug, Clone, Default)]
+pub struct ProvisionCost {
+    pub sandbox: Duration,
+    pub runtime_init: Duration,
+    pub package_fetch: Duration,
+    /// Effective (CPU-scaled) model compile + weight materialization.
+    pub model_load: Duration,
+}
+
+impl ProvisionCost {
+    pub fn total(&self) -> Duration {
+        self.sandbox + self.runtime_init + self.package_fetch + self.model_load
+    }
+}
+
+pub struct Container {
+    pub id: u64,
+    pub spec: Arc<FunctionSpec>,
+    handle: InstanceHandle,
+    engine: Arc<dyn Engine>,
+    state: ContainerState,
+    /// Platform-clock time of last use (keep-alive eviction).
+    pub last_used: u64,
+    /// Requests served by this container.
+    pub served: u64,
+    pub provision_cost: ProvisionCost,
+}
+
+impl Container {
+    /// Cold-provision a container: simulate the platform-side
+    /// bootstrap, then do the real model load through the engine.
+    /// Sleeps the platform clock for each component (instant on
+    /// virtual clocks) and returns the container plus its cost.
+    pub fn provision(
+        spec: Arc<FunctionSpec>,
+        engine: Arc<dyn Engine>,
+        governor: &CpuGovernor,
+        bootstrap: &BootstrapConfig,
+        clock: &Arc<dyn Clock>,
+        rng: &mut SplitMix64,
+    ) -> Result<Self> {
+        let mem = spec.memory_mb;
+        let share = governor.share(mem);
+
+        // 1. Sandbox provisioning: platform-side, memory-independent.
+        let sandbox = if bootstrap.simulate_delays {
+            Duration::from_secs_f64(rng.lognormal(bootstrap.sandbox_median_s, bootstrap.sandbox_sigma))
+        } else {
+            Duration::ZERO
+        };
+        clock.sleep(sandbox);
+
+        // 2. Language-runtime init: CPU-bound inside the container,
+        //    scaled by the CPU share.
+        let runtime_init = if bootstrap.simulate_delays {
+            Duration::from_secs_f64(bootstrap.runtime_init_s / share)
+        } else {
+            Duration::ZERO
+        };
+        clock.sleep(runtime_init);
+
+        // 3. Package fetch: I/O-bound; Lambda scales disk/network I/O
+        //    with memory as well.
+        let package_fetch = if bootstrap.simulate_delays {
+            Duration::from_secs_f64(spec.package_bytes as f64 / bootstrap.package_read_bw / share)
+        } else {
+            Duration::ZERO
+        };
+        clock.sleep(package_fetch);
+
+        // 4. REAL model load: compile (per-shard cache) + init run.
+        //    Measured wall time, scaled into effective time.
+        let t0 = Instant::now();
+        let (handle, stats) = engine.create_instance(&spec.model, &spec.variant)?;
+        let real = t0.elapsed();
+        let model_load = governor.throttle(stats.compile + stats.init_run, real, mem);
+
+        Ok(Self {
+            id: NEXT_CONTAINER_ID.fetch_add(1, Ordering::Relaxed),
+            spec,
+            handle,
+            engine,
+            state: ContainerState::Busy,
+            last_used: clock.now(),
+            served: 0,
+            provision_cost: ProvisionCost { sandbox, runtime_init, package_fetch, model_load },
+        })
+    }
+
+    pub fn state(&self) -> ContainerState {
+        self.state
+    }
+
+    /// Execute one prediction under the CPU governor; returns the raw
+    /// engine prediction and the effective (throttled) duration.
+    pub fn execute(
+        &mut self,
+        governor: &CpuGovernor,
+        clock: &Arc<dyn Clock>,
+        image_seed: u64,
+    ) -> Result<(Prediction, Duration)> {
+        assert_eq!(self.state, ContainerState::Busy, "execute on non-busy container");
+        let t0 = Instant::now();
+        let pred = self.engine.predict(&self.handle, image_seed)?;
+        let real = t0.elapsed();
+        let effective = governor.throttle(pred.compute, real, self.spec.memory_mb);
+        self.served += 1;
+        self.last_used = clock.now();
+        Ok((pred, effective))
+    }
+
+    /// Move Busy -> Warm (returned to the pool).
+    pub fn park(&mut self, clock: &Arc<dyn Clock>) {
+        assert_eq!(self.state, ContainerState::Busy);
+        self.state = ContainerState::Warm;
+        self.last_used = clock.now();
+    }
+
+    /// Move Warm -> Busy (acquired from the pool).
+    pub fn activate(&mut self) {
+        assert_eq!(self.state, ContainerState::Warm);
+        self.state = ContainerState::Busy;
+    }
+
+    /// Evict: frees the engine instance.
+    pub fn reap(&mut self) {
+        if self.state != ContainerState::Reaped {
+            self.engine.drop_instance(&self.handle);
+            self.state = ContainerState::Reaped;
+        }
+    }
+
+    /// Cold-start kind for the request that provisioned this container.
+    pub fn start_kind_for_first_use(&self) -> StartKind {
+        StartKind::Cold
+    }
+}
+
+impl Drop for Container {
+    fn drop(&mut self) {
+        self.reap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::registry::FunctionRegistry;
+    use crate::runtime::{Engine as _, MockEngine};
+    use crate::util::ManualClock;
+
+    fn setup() -> (Arc<FunctionSpec>, Arc<MockEngine>, CpuGovernor, Arc<dyn Clock>) {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let reg = FunctionRegistry::new(engine.clone());
+        let spec = reg.deploy("sq", "squeezenet", "pallas", 896).unwrap();
+        let clock: Arc<dyn Clock> = ManualClock::new();
+        let gov = CpuGovernor::new(1792, clock.clone());
+        (spec, engine, gov, clock)
+    }
+
+    #[test]
+    fn provision_accounts_all_components() {
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(1);
+        let cfg = BootstrapConfig::default();
+        let c = Container::provision(spec, engine.clone(), &gov, &cfg, &clock, &mut rng).unwrap();
+        assert_eq!(c.state(), ContainerState::Busy);
+        let pc = &c.provision_cost;
+        assert!(pc.sandbox > Duration::ZERO);
+        // runtime_init = 1.2s / 0.5 share = 2.4s.
+        assert!((pc.runtime_init.as_secs_f64() - 2.4).abs() < 1e-9);
+        assert!(pc.package_fetch > Duration::ZERO);
+        assert!(pc.model_load > Duration::ZERO, "compile + init run");
+        // The platform clock advanced by the simulated components.
+        assert!(clock.now() > 0);
+        assert_eq!(engine.live_instances(), 1);
+    }
+
+    #[test]
+    fn provision_without_simulated_delays() {
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(1);
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let c = Container::provision(spec, engine, &gov, &cfg, &clock, &mut rng).unwrap();
+        assert_eq!(c.provision_cost.sandbox, Duration::ZERO);
+        assert_eq!(c.provision_cost.runtime_init, Duration::ZERO);
+        assert!(c.provision_cost.model_load > Duration::ZERO, "real work still counted");
+    }
+
+    #[test]
+    fn execute_throttles_by_memory_share() {
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(2);
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let mut c = Container::provision(spec, engine, &gov, &cfg, &clock, &mut rng).unwrap();
+        let (pred, effective) = c.execute(&gov, &clock, 7).unwrap();
+        // 896 MB = half share: effective = 2x full-speed compute.
+        let expect = pred.compute.as_secs_f64() * 2.0;
+        assert!((effective.as_secs_f64() - expect).abs() < 1e-9);
+        assert_eq!(c.served, 1);
+    }
+
+    #[test]
+    fn state_machine_roundtrip() {
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(3);
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let mut c =
+            Container::provision(spec, engine.clone(), &gov, &cfg, &clock, &mut rng).unwrap();
+        c.park(&clock);
+        assert_eq!(c.state(), ContainerState::Warm);
+        c.activate();
+        assert_eq!(c.state(), ContainerState::Busy);
+        c.reap();
+        assert_eq!(c.state(), ContainerState::Reaped);
+        assert_eq!(engine.live_instances(), 0);
+        // Reap is idempotent.
+        c.reap();
+        assert_eq!(engine.live_instances(), 0);
+    }
+
+    #[test]
+    fn drop_reaps_instance() {
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(4);
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        {
+            let _c = Container::provision(spec, engine.clone(), &gov, &cfg, &clock, &mut rng)
+                .unwrap();
+            assert_eq!(engine.live_instances(), 1);
+        }
+        assert_eq!(engine.live_instances(), 0, "drop frees the instance");
+    }
+}

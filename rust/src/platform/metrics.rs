@@ -1,0 +1,227 @@
+//! Per-invocation records and aggregation.
+//!
+//! Each invocation yields an [`InvocationRecord`] with the full latency
+//! decomposition the paper measures: client-observed response time,
+//! in-function prediction time, cold/warm tag, billed duration, and
+//! cost. Experiments aggregate records into the rows of each figure.
+
+use crate::configparse::MemorySize;
+use crate::stats::{Histogram, Summary};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StartKind {
+    Cold,
+    Warm,
+}
+
+impl std::fmt::Display for StartKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StartKind::Cold => write!(f, "cold"),
+            StartKind::Warm => write!(f, "warm"),
+        }
+    }
+}
+
+/// The measured decomposition of one invocation (platform-side; the
+/// workload driver adds the client<->gateway network component).
+#[derive(Debug, Clone)]
+pub struct InvocationRecord {
+    pub function: String,
+    pub memory_mb: MemorySize,
+    pub start: StartKind,
+    /// Queue/dispatch wait before a container was available.
+    pub queue: Duration,
+    /// Sandbox provisioning (cold only; simulated).
+    pub sandbox: Duration,
+    /// Language-runtime init, CPU-scaled (cold only; simulated).
+    pub runtime_init: Duration,
+    /// Package (code+model) fetch, I/O-scaled (cold only; simulated).
+    pub package_fetch: Duration,
+    /// Model compile + weight materialization (cold only; REAL work,
+    /// CPU-scaled into effective time).
+    pub model_load: Duration,
+    /// Effective (CPU-share-scaled) forward-pass time — the paper's
+    /// "prediction time".
+    pub predict: Duration,
+    /// Raw full-speed compute measured by the engine.
+    pub predict_full_speed: Duration,
+    /// Billed handler duration (prediction + cold init work).
+    pub billed: Duration,
+    pub billed_ms: u64,
+    pub cost_dollars: f64,
+    /// Classification output (sanity checks).
+    pub top1: i32,
+}
+
+impl InvocationRecord {
+    /// Platform-side response time (everything the client waits for,
+    /// minus the network leg).
+    pub fn response(&self) -> Duration {
+        self.queue
+            + self.sandbox
+            + self.runtime_init
+            + self.package_fetch
+            + self.model_load
+            + self.predict
+    }
+
+    /// Total cold-start overhead (response minus what a warm start
+    /// would have cost).
+    pub fn cold_overhead(&self) -> Duration {
+        self.sandbox + self.runtime_init + self.package_fetch + self.model_load
+    }
+}
+
+/// Thread-safe collector.
+#[derive(Default)]
+pub struct MetricsSink {
+    records: Mutex<Vec<InvocationRecord>>,
+}
+
+impl MetricsSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, r: InvocationRecord) {
+        self.records.lock().unwrap().push(r);
+    }
+
+    pub fn records(&self) -> Vec<InvocationRecord> {
+        self.records.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn reset(&self) {
+        self.records.lock().unwrap().clear();
+    }
+
+    /// Count of cold starts observed.
+    pub fn cold_count(&self) -> usize {
+        self.records.lock().unwrap().iter().filter(|r| r.start == StartKind::Cold).count()
+    }
+
+    /// Summary of response times (seconds) over `filter`ed records.
+    pub fn response_summary<F: Fn(&InvocationRecord) -> bool>(&self, filter: F) -> Summary {
+        let xs: Vec<f64> = self
+            .records
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| filter(r))
+            .map(|r| r.response().as_secs_f64())
+            .collect();
+        Summary::from_samples(&xs)
+    }
+
+    /// Summary of prediction times (seconds).
+    pub fn predict_summary<F: Fn(&InvocationRecord) -> bool>(&self, filter: F) -> Summary {
+        let xs: Vec<f64> = self
+            .records
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| filter(r))
+            .map(|r| r.predict.as_secs_f64())
+            .collect();
+        Summary::from_samples(&xs)
+    }
+
+    /// Response-time histogram in nanoseconds (bimodality analysis).
+    pub fn response_histogram(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for r in self.records.lock().unwrap().iter() {
+            h.record(r.response().as_nanos() as u64);
+        }
+        h
+    }
+
+    /// Total cost over all records.
+    pub fn total_cost(&self) -> f64 {
+        self.records.lock().unwrap().iter().map(|r| r.cost_dollars).sum()
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_record(
+    function: &str,
+    mem: MemorySize,
+    start: StartKind,
+    predict_ms: u64,
+) -> InvocationRecord {
+    let cold = start == StartKind::Cold;
+    InvocationRecord {
+        function: function.to_string(),
+        memory_mb: mem,
+        start,
+        queue: Duration::ZERO,
+        sandbox: if cold { Duration::from_millis(250) } else { Duration::ZERO },
+        runtime_init: if cold { Duration::from_millis(1200) } else { Duration::ZERO },
+        package_fetch: if cold { Duration::from_millis(60) } else { Duration::ZERO },
+        model_load: if cold { Duration::from_millis(400) } else { Duration::ZERO },
+        predict: Duration::from_millis(predict_ms),
+        predict_full_speed: Duration::from_millis(predict_ms / 2),
+        billed: Duration::from_millis(predict_ms),
+        billed_ms: predict_ms.div_ceil(100) * 100,
+        cost_dollars: 1e-6,
+        top1: 42,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_is_component_sum() {
+        let r = test_record("f", 512, StartKind::Cold, 500);
+        assert_eq!(r.response(), Duration::from_millis(250 + 1200 + 60 + 400 + 500));
+        assert_eq!(r.cold_overhead(), Duration::from_millis(1910));
+        let w = test_record("f", 512, StartKind::Warm, 500);
+        assert_eq!(w.response(), Duration::from_millis(500));
+        assert_eq!(w.cold_overhead(), Duration::ZERO);
+    }
+
+    #[test]
+    fn sink_aggregation() {
+        let s = MetricsSink::new();
+        s.record(test_record("f", 512, StartKind::Cold, 1000));
+        s.record(test_record("f", 512, StartKind::Warm, 500));
+        s.record(test_record("g", 1024, StartKind::Warm, 300));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.cold_count(), 1);
+        let warm = s.response_summary(|r| r.start == StartKind::Warm);
+        assert_eq!(warm.n, 2);
+        assert!((warm.mean - 0.4).abs() < 1e-9);
+        let f_only = s.predict_summary(|r| r.function == "f");
+        assert_eq!(f_only.n, 2);
+        assert!((s.total_cost() - 3e-6).abs() < 1e-15);
+        s.reset();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn histogram_captures_bimodality() {
+        let s = MetricsSink::new();
+        for _ in 0..95 {
+            s.record(test_record("f", 512, StartKind::Warm, 100));
+        }
+        for _ in 0..5 {
+            s.record(test_record("f", 512, StartKind::Cold, 100));
+        }
+        let h = s.response_histogram();
+        // Warm ~100ms, cold ~2s; fraction above 1s equals cold share.
+        let frac = h.fraction_above(1_000_000_000);
+        assert!((frac - 0.05).abs() < 0.001, "frac={frac}");
+    }
+}

@@ -1,0 +1,19 @@
+//! The FaaS platform core (the paper's measured system, built).
+
+pub mod billing;
+pub mod container;
+pub mod invoker;
+pub mod metrics;
+pub mod pool;
+pub mod registry;
+pub mod scaler;
+pub mod throttle;
+
+pub use billing::{BillingMeter, InvoiceLine};
+pub use container::{Container, ContainerState};
+pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform};
+pub use metrics::{InvocationRecord, MetricsSink, StartKind};
+pub use pool::WarmPool;
+pub use registry::{FunctionRegistry, FunctionSpec};
+pub use scaler::Scaler;
+pub use throttle::CpuGovernor;

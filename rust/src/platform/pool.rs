@@ -1,0 +1,382 @@
+//! Warm-container pool with keep-alive eviction.
+//!
+//! Per-function LIFO stacks of warm containers (LIFO maximizes reuse
+//! and lets the oldest containers age out, matching observed Lambda
+//! behaviour), a global container count against the platform cap, and
+//! keep-alive eviction: a container idle longer than the TTL is reaped
+//! on the next sweep. The paper forces cold starts with 10-minute gaps
+//! precisely because the platform's TTL was below that.
+
+use super::container::Container;
+use crate::util::Clock;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub struct WarmPool {
+    /// function name -> warm containers (LIFO).
+    idle: Mutex<BTreeMap<String, Vec<Container>>>,
+    /// All containers alive (busy + warm) against `max_containers`.
+    total: AtomicUsize,
+    max_containers: usize,
+    keep_alive_ns: u64,
+    clock: Arc<dyn Clock>,
+}
+
+impl WarmPool {
+    pub fn new(max_containers: usize, keep_alive_s: f64, clock: Arc<dyn Clock>) -> Self {
+        Self {
+            idle: Mutex::new(BTreeMap::new()),
+            total: AtomicUsize::new(0),
+            max_containers,
+            keep_alive_ns: (keep_alive_s * 1e9) as u64,
+            clock,
+        }
+    }
+
+    /// Try to take a warm container for `function`. Runs an eviction
+    /// sweep for that function first, so an expired container is never
+    /// handed out (it is reaped instead — the paper's forced-cold
+    /// mechanism).
+    pub fn acquire(&self, function: &str) -> Option<Container> {
+        let mut g = self.idle.lock().unwrap();
+        let now = self.clock.now();
+        if let Some(stack) = g.get_mut(function) {
+            // Evict expired (oldest are at the bottom of the stack).
+            let ttl = self.keep_alive_ns;
+            let expired: Vec<Container> = {
+                let mut keep = Vec::with_capacity(stack.len());
+                let mut dead = Vec::new();
+                for c in stack.drain(..) {
+                    if now.saturating_sub(c.last_used) > ttl {
+                        dead.push(c);
+                    } else {
+                        keep.push(c);
+                    }
+                }
+                *stack = keep;
+                dead
+            };
+            let n_dead = expired.len();
+            drop(g); // reap outside the lock
+            for mut c in expired {
+                c.reap();
+            }
+            self.total.fetch_sub(n_dead, Ordering::SeqCst);
+            let mut g = self.idle.lock().unwrap();
+            if let Some(stack) = g.get_mut(function) {
+                if let Some(mut c) = stack.pop() {
+                    c.activate();
+                    return Some(c);
+                }
+            }
+            return None;
+        }
+        None
+    }
+
+    /// Return a busy container to the warm pool.
+    pub fn release(&self, mut container: Container) {
+        container.park(&self.clock);
+        let mut g = self.idle.lock().unwrap();
+        g.entry(container.spec.name.clone()).or_default().push(container);
+    }
+
+    /// Reserve a slot for a new (cold) container; `false` when the
+    /// platform is at its container cap (throttling: HTTP 429).
+    pub fn try_reserve(&self) -> bool {
+        let mut cur = self.total.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.max_containers {
+                return false;
+            }
+            match self.total.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return true,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Release a reservation after a failed provision.
+    pub fn cancel_reservation(&self) {
+        self.total.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Destroy a container without returning it to the pool.
+    pub fn retire(&self, mut container: Container) {
+        container.reap();
+        self.total.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Sweep every function's stack, reaping expired containers.
+    /// Returns the number reaped.
+    pub fn evict_expired(&self) -> usize {
+        let now = self.clock.now();
+        let ttl = self.keep_alive_ns;
+        let mut dead = Vec::new();
+        {
+            let mut g = self.idle.lock().unwrap();
+            for stack in g.values_mut() {
+                let mut keep = Vec::with_capacity(stack.len());
+                for c in stack.drain(..) {
+                    if now.saturating_sub(c.last_used) > ttl {
+                        dead.push(c);
+                    } else {
+                        keep.push(c);
+                    }
+                }
+                *stack = keep;
+            }
+        }
+        let n = dead.len();
+        for mut c in dead {
+            c.reap();
+        }
+        self.total.fetch_sub(n, Ordering::SeqCst);
+        n
+    }
+
+    /// Evict everything (tests / forced cold).
+    pub fn evict_all(&self) -> usize {
+        let mut dead = Vec::new();
+        {
+            let mut g = self.idle.lock().unwrap();
+            for stack in g.values_mut() {
+                dead.append(stack);
+            }
+        }
+        let n = dead.len();
+        for mut c in dead {
+            c.reap();
+        }
+        self.total.fetch_sub(n, Ordering::SeqCst);
+        n
+    }
+
+    /// Containers currently alive (warm + busy).
+    pub fn total_alive(&self) -> usize {
+        self.total.load(Ordering::SeqCst)
+    }
+
+    /// Warm containers for one function.
+    pub fn warm_count(&self, function: &str) -> usize {
+        self.idle.lock().unwrap().get(function).map_or(0, Vec::len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configparse::BootstrapConfig;
+    use crate::platform::registry::FunctionRegistry;
+    use crate::platform::throttle::CpuGovernor;
+    use crate::runtime::{Engine as _, MockEngine};
+    use crate::util::{ManualClock, SplitMix64};
+    use std::time::Duration;
+
+    struct Fixture {
+        pool: WarmPool,
+        engine: Arc<MockEngine>,
+        spec: Arc<crate::platform::registry::FunctionSpec>,
+        gov: CpuGovernor,
+        clock: Arc<ManualClock>,
+        dyn_clock: Arc<dyn Clock>,
+        rng: SplitMix64,
+    }
+
+    fn fixture(max: usize, keep_alive_s: f64) -> Fixture {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let reg = FunctionRegistry::new(engine.clone());
+        let spec = reg.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let clock = ManualClock::new();
+        let dyn_clock: Arc<dyn Clock> = clock.clone();
+        Fixture {
+            pool: WarmPool::new(max, keep_alive_s, dyn_clock.clone()),
+            engine,
+            spec,
+            gov: CpuGovernor::new(1792, dyn_clock.clone()),
+            clock,
+            dyn_clock,
+            rng: SplitMix64::new(0),
+        }
+    }
+
+    /// Reserve + provision; `None` when at the container cap.
+    fn try_provision(f: &mut Fixture) -> Option<Container> {
+        if !f.pool.try_reserve() {
+            return None;
+        }
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        Some(
+            Container::provision(
+                f.spec.clone(),
+                f.engine.clone(),
+                &f.gov,
+                &cfg,
+                &f.dyn_clock,
+                &mut f.rng,
+            )
+            .unwrap(),
+        )
+    }
+
+    fn provision(f: &mut Fixture) -> Container {
+        try_provision(f).expect("under cap")
+    }
+
+    #[test]
+    fn acquire_empty_returns_none() {
+        let f = fixture(10, 600.0);
+        assert!(f.pool.acquire("sq").is_none());
+        assert!(f.pool.acquire("unknown").is_none());
+    }
+
+    #[test]
+    fn release_then_acquire_reuses() {
+        let mut f = fixture(10, 600.0);
+        let c = provision(&mut f);
+        let id = c.id;
+        f.pool.release(c);
+        assert_eq!(f.pool.warm_count("sq"), 1);
+        let c2 = f.pool.acquire("sq").unwrap();
+        assert_eq!(c2.id, id, "same container comes back");
+        assert_eq!(f.pool.warm_count("sq"), 0);
+        f.pool.retire(c2);
+        assert_eq!(f.pool.total_alive(), 0);
+    }
+
+    #[test]
+    fn lifo_order() {
+        let mut f = fixture(10, 600.0);
+        let c1 = provision(&mut f);
+        let c2 = provision(&mut f);
+        let (id1, id2) = (c1.id, c2.id);
+        f.pool.release(c1);
+        f.pool.release(c2);
+        assert_eq!(f.pool.acquire("sq").map(|c| {
+            let id = c.id;
+            f.pool.retire(c);
+            id
+        }), Some(id2), "most recently used first");
+        assert_eq!(f.pool.acquire("sq").map(|c| {
+            let id = c.id;
+            f.pool.retire(c);
+            id
+        }), Some(id1));
+    }
+
+    #[test]
+    fn keep_alive_eviction_on_acquire() {
+        let mut f = fixture(10, 600.0);
+        let c = provision(&mut f);
+        f.pool.release(c);
+        // Advance past the TTL: the paper's 10-minute forced-cold gap.
+        f.clock.sleep(Duration::from_secs(601));
+        assert!(f.pool.acquire("sq").is_none(), "expired container not handed out");
+        assert_eq!(f.pool.total_alive(), 0, "expired container reaped");
+        assert_eq!(f.engine.live_instances(), 0);
+    }
+
+    #[test]
+    fn keep_alive_survives_within_ttl() {
+        let mut f = fixture(10, 600.0);
+        let c = provision(&mut f);
+        f.pool.release(c);
+        f.clock.sleep(Duration::from_secs(599));
+        let c = f.pool.acquire("sq");
+        assert!(c.is_some(), "within TTL container is reused");
+        f.pool.retire(c.unwrap());
+    }
+
+    #[test]
+    fn evict_expired_sweep() {
+        let mut f = fixture(10, 100.0);
+        let c1 = provision(&mut f);
+        f.pool.release(c1);
+        f.clock.sleep(Duration::from_secs(50));
+        let c2 = provision(&mut f);
+        f.pool.release(c2);
+        f.clock.sleep(Duration::from_secs(60)); // c1 is 110s idle, c2 is 60s
+        assert_eq!(f.pool.evict_expired(), 1);
+        assert_eq!(f.pool.warm_count("sq"), 1);
+        assert_eq!(f.pool.total_alive(), 1);
+    }
+
+    #[test]
+    fn capacity_reservations() {
+        let f = fixture(2, 600.0);
+        assert!(f.pool.try_reserve());
+        assert!(f.pool.try_reserve());
+        assert!(!f.pool.try_reserve(), "at cap");
+        f.pool.cancel_reservation();
+        assert!(f.pool.try_reserve(), "cancellation frees a slot");
+        assert_eq!(f.pool.total_alive(), 2);
+    }
+
+    #[test]
+    fn evict_all() {
+        let mut f = fixture(10, 600.0);
+        for _ in 0..3 {
+            let c = provision(&mut f);
+            f.pool.release(c);
+        }
+        assert_eq!(f.pool.warm_count("sq"), 3);
+        assert_eq!(f.pool.evict_all(), 3);
+        assert_eq!(f.pool.total_alive(), 0);
+        assert_eq!(f.engine.live_instances(), 0);
+    }
+
+    /// Property: through arbitrary interleavings of provision/release/
+    /// acquire/advance, the pool never exceeds its cap and never leaks
+    /// engine instances.
+    #[test]
+    fn prop_pool_invariants() {
+        crate::testkit::forall_cases("pool invariants", 60, |ops: &Vec<(u32, u64)>| {
+            let mut f = fixture(4, 100.0);
+            let mut held: Vec<Container> = Vec::new();
+            for (op, arg) in ops {
+                match op % 4 {
+                    0 => {
+                        if let Some(c) = try_provision(&mut f) {
+                            held.push(c);
+                        }
+                    }
+                    1 => {
+                        if let Some(c) = held.pop() {
+                            f.pool.release(c);
+                        }
+                    }
+                    2 => {
+                        if let Some(c) = f.pool.acquire("sq") {
+                            held.push(c);
+                        }
+                    }
+                    _ => {
+                        f.clock.sleep(Duration::from_secs(arg % 200));
+                        f.pool.evict_expired();
+                    }
+                }
+                let alive = f.pool.total_alive();
+                if alive > 4 {
+                    return Err(format!("cap exceeded: {alive}"));
+                }
+                let live = f.engine.live_instances();
+                let pooled = f.pool.warm_count("sq");
+                if live != pooled + held.len() {
+                    return Err(format!(
+                        "instance leak: engine={live} pooled={pooled} held={}",
+                        held.len()
+                    ));
+                }
+            }
+            for c in held.drain(..) {
+                f.pool.retire(c);
+            }
+            f.pool.evict_all();
+            if f.engine.live_instances() != 0 {
+                return Err("instances leaked at teardown".into());
+            }
+            Ok(())
+        });
+    }
+}

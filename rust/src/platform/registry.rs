@@ -1,0 +1,179 @@
+//! Function registry: deployment records and validation.
+//!
+//! A deployed function = (name, model, artifact variant, memory size).
+//! Deployment enforces the paper's observed constraints: memory must be
+//! a valid Lambda tier and at least the function's measured peak usage
+//! (85/229/429 MB for the three models) — this reproduces the missing
+//! small-memory data points in Figures 2-6.
+
+use crate::configparse::MemorySize;
+use crate::runtime::Engine;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionSpec {
+    /// Function name (route key at the gateway).
+    pub name: String,
+    /// Zoo model this function serves.
+    pub model: String,
+    /// Artifact variant ("pallas" | "ref").
+    pub variant: String,
+    /// Configured memory size, MB.
+    pub memory_mb: MemorySize,
+    /// Peak memory required to run (from the manifest).
+    pub peak_mem_mb: u32,
+    /// Deployment package bytes (model + code), for cold-start I/O.
+    pub package_bytes: u64,
+}
+
+pub struct FunctionRegistry {
+    engine: Arc<dyn Engine>,
+    /// Valid configurable tiers (min, max, step): Lambda 2017 was
+    /// 128..=1536 in 64 MB increments.
+    mem_min: MemorySize,
+    mem_max: MemorySize,
+    mem_step: MemorySize,
+    functions: RwLock<BTreeMap<String, Arc<FunctionSpec>>>,
+}
+
+impl FunctionRegistry {
+    pub fn new(engine: Arc<dyn Engine>) -> Self {
+        Self {
+            engine,
+            mem_min: 128,
+            mem_max: 1536,
+            mem_step: 64,
+            functions: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Deploy (or redeploy) a function. Validates the memory tier and
+    /// the model's peak-memory floor against the engine's manifest.
+    pub fn deploy(
+        &self,
+        name: &str,
+        model: &str,
+        variant: &str,
+        memory_mb: MemorySize,
+    ) -> Result<Arc<FunctionSpec>> {
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            bail!("invalid function name {name:?}");
+        }
+        if memory_mb < self.mem_min
+            || memory_mb > self.mem_max
+            || (memory_mb - self.mem_min) % self.mem_step != 0
+        {
+            bail!(
+                "invalid memory size {memory_mb} MB (valid: {}..={} step {})",
+                self.mem_min,
+                self.mem_max,
+                self.mem_step
+            );
+        }
+        let manifest = self.engine.manifest(model)?;
+        if !manifest.artifacts.contains_key(variant) {
+            bail!("model {model} has no artifact variant {variant:?}");
+        }
+        if memory_mb < manifest.paper_peak_mem_mb {
+            bail!(
+                "function {name}: {memory_mb} MB is below the model's peak \
+                 memory requirement of {} MB (the paper could not deploy \
+                 this configuration either)",
+                manifest.paper_peak_mem_mb
+            );
+        }
+        let spec = Arc::new(FunctionSpec {
+            name: name.to_string(),
+            model: model.to_string(),
+            variant: variant.to_string(),
+            memory_mb,
+            peak_mem_mb: manifest.paper_peak_mem_mb,
+            package_bytes: manifest.package_bytes(),
+        });
+        self.functions.write().unwrap().insert(name.to_string(), spec.clone());
+        Ok(spec)
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<FunctionSpec>> {
+        self.functions
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("function {name:?} is not deployed"))
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.functions.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn list(&self) -> Vec<Arc<FunctionSpec>> {
+        self.functions.read().unwrap().values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockEngine;
+
+    fn reg() -> FunctionRegistry {
+        FunctionRegistry::new(Arc::new(MockEngine::paper_zoo()))
+    }
+
+    #[test]
+    fn deploy_and_get() {
+        let r = reg();
+        let spec = r.deploy("sq-512", "squeezenet", "pallas", 512).unwrap();
+        assert_eq!(spec.memory_mb, 512);
+        assert_eq!(spec.peak_mem_mb, 85);
+        assert_eq!(r.get("sq-512").unwrap(), spec);
+        assert_eq!(r.list().len(), 1);
+        assert!(r.remove("sq-512"));
+        assert!(r.get("sq-512").is_err());
+    }
+
+    #[test]
+    fn redeploy_overwrites() {
+        let r = reg();
+        r.deploy("f", "squeezenet", "pallas", 512).unwrap();
+        r.deploy("f", "squeezenet", "pallas", 1024).unwrap();
+        assert_eq!(r.get("f").unwrap().memory_mb, 1024);
+        assert_eq!(r.list().len(), 1);
+    }
+
+    #[test]
+    fn memory_tier_validation() {
+        let r = reg();
+        assert!(r.deploy("f", "squeezenet", "pallas", 100).is_err(), "below min");
+        assert!(r.deploy("f", "squeezenet", "pallas", 2048).is_err(), "above max");
+        assert!(r.deploy("f", "squeezenet", "pallas", 130).is_err(), "off-step");
+        assert!(r.deploy("f", "squeezenet", "pallas", 192).is_ok(), "64 MB step ok");
+    }
+
+    #[test]
+    fn peak_memory_floor_matches_paper() {
+        let r = reg();
+        // SqueezeNet peaks at 85 MB -> deployable at 128 MB.
+        assert!(r.deploy("sq", "squeezenet", "pallas", 128).is_ok());
+        // ResNet-18 peaks at 229 MB -> 128 MB must fail, 256 MB works.
+        assert!(r.deploy("rn", "resnet18", "pallas", 128).is_err());
+        assert!(r.deploy("rn", "resnet18", "pallas", 256).is_ok());
+        // ResNeXt-50 peaks at 429 MB -> first deployable tier is 448;
+        // of the paper's 128-step sweep, 512 MB.
+        assert!(r.deploy("rx", "resnext50", "pallas", 384).is_err());
+        assert!(r.deploy("rx", "resnext50", "pallas", 512).is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown_model_variant_name() {
+        let r = reg();
+        assert!(r.deploy("f", "vgg", "pallas", 512).is_err());
+        assert!(r.deploy("f", "squeezenet", "tpu", 512).is_err());
+        assert!(r.deploy("bad name!", "squeezenet", "pallas", 512).is_err());
+        assert!(r.deploy("", "squeezenet", "pallas", 512).is_err());
+    }
+}

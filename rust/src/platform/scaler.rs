@@ -1,0 +1,186 @@
+//! Demand-driven scaling.
+//!
+//! Lambda's model (and ours): concurrency = number of in-flight
+//! requests; each in-flight request needs its own container, so a
+//! request that finds no warm container triggers a cold provision,
+//! bounded by the account-level container cap. The scaler tracks
+//! in-flight concurrency (the paper's Figure 7 ramp drives this up),
+//! exposes a high-water mark, and supports *pre-warming* — the
+//! "declarative keep-warm" capability the paper's §5 asks for, used by
+//! the keep-alive/provisioned ablations.
+
+use super::container::Container;
+use super::pool::WarmPool;
+use super::registry::FunctionSpec;
+use super::throttle::CpuGovernor;
+use crate::configparse::BootstrapConfig;
+use crate::runtime::Engine;
+use crate::util::{Clock, SplitMix64};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Default)]
+pub struct Scaler {
+    in_flight: AtomicUsize,
+    high_water: AtomicUsize,
+    throttled: AtomicUsize,
+    cold_provisions: AtomicUsize,
+}
+
+/// RAII guard for one in-flight request.
+pub struct FlightGuard<'a>(&'a Scaler);
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Scaler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an arriving request.
+    pub fn arrive(&self) -> FlightGuard<'_> {
+        let now = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.high_water.fetch_max(now, Ordering::SeqCst);
+        FlightGuard(self)
+    }
+
+    pub fn note_throttled(&self) {
+        self.throttled.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn note_cold_provision(&self) {
+        self.cold_provisions.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Peak concurrency observed (the scalability experiments report
+    /// this against the request ramp).
+    pub fn high_water_mark(&self) -> usize {
+        self.high_water.load(Ordering::SeqCst)
+    }
+
+    pub fn throttled_count(&self) -> usize {
+        self.throttled.load(Ordering::SeqCst)
+    }
+
+    pub fn cold_provision_count(&self) -> usize {
+        self.cold_provisions.load(Ordering::SeqCst)
+    }
+
+    /// Pre-warm `n` containers for `spec` into the pool (the paper's
+    /// requested "minimum time to keep warm containers" knob).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prewarm(
+        &self,
+        spec: &Arc<FunctionSpec>,
+        n: usize,
+        pool: &WarmPool,
+        engine: &Arc<dyn Engine>,
+        governor: &CpuGovernor,
+        bootstrap: &BootstrapConfig,
+        clock: &Arc<dyn Clock>,
+        rng: &Mutex<SplitMix64>,
+    ) -> Result<usize> {
+        let mut done = 0;
+        for _ in 0..n {
+            if !pool.try_reserve() {
+                bail!("container cap hit after pre-warming {done} of {n}");
+            }
+            let mut r = rng.lock().unwrap();
+            match Container::provision(spec.clone(), engine.clone(), governor, bootstrap, clock, &mut r)
+            {
+                Ok(c) => {
+                    drop(r);
+                    self.note_cold_provision();
+                    pool.release(c);
+                    done += 1;
+                }
+                Err(e) => {
+                    pool.cancel_reservation();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::registry::FunctionRegistry;
+    use crate::runtime::MockEngine;
+    use crate::util::ManualClock;
+
+    #[test]
+    fn flight_accounting() {
+        let s = Scaler::new();
+        assert_eq!(s.in_flight(), 0);
+        {
+            let _a = s.arrive();
+            let _b = s.arrive();
+            assert_eq!(s.in_flight(), 2);
+            assert_eq!(s.high_water_mark(), 2);
+        }
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.high_water_mark(), 2, "high water sticks");
+        let _c = s.arrive();
+        assert_eq!(s.high_water_mark(), 2);
+    }
+
+    #[test]
+    fn counters() {
+        let s = Scaler::new();
+        s.note_throttled();
+        s.note_throttled();
+        s.note_cold_provision();
+        assert_eq!(s.throttled_count(), 2);
+        assert_eq!(s.cold_provision_count(), 1);
+    }
+
+    #[test]
+    fn prewarm_fills_pool() {
+        let engine: Arc<dyn Engine> = Arc::new(MockEngine::paper_zoo());
+        let reg = FunctionRegistry::new(engine.clone());
+        let spec = reg.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let clock: Arc<dyn Clock> = ManualClock::new();
+        let pool = WarmPool::new(8, 600.0, clock.clone());
+        let gov = CpuGovernor::new(1792, clock.clone());
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let s = Scaler::new();
+        let rng = Mutex::new(SplitMix64::new(0));
+        let n = s
+            .prewarm(&spec, 3, &pool, &engine, &gov, &cfg, &clock, &rng)
+            .unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(pool.warm_count("sq"), 3);
+        assert_eq!(pool.total_alive(), 3);
+        assert_eq!(s.cold_provision_count(), 3);
+    }
+
+    #[test]
+    fn prewarm_respects_cap() {
+        let engine: Arc<dyn Engine> = Arc::new(MockEngine::paper_zoo());
+        let reg = FunctionRegistry::new(engine.clone());
+        let spec = reg.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let clock: Arc<dyn Clock> = ManualClock::new();
+        let pool = WarmPool::new(2, 600.0, clock.clone());
+        let gov = CpuGovernor::new(1792, clock.clone());
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let s = Scaler::new();
+        let rng = Mutex::new(SplitMix64::new(0));
+        let err = s
+            .prewarm(&spec, 5, &pool, &engine, &gov, &cfg, &clock, &rng)
+            .unwrap_err();
+        assert!(err.to_string().contains("cap"));
+        assert_eq!(pool.warm_count("sq"), 2);
+    }
+}

@@ -1,0 +1,145 @@
+//! Memory-proportional CPU governor.
+//!
+//! AWS Lambda "allocates CPU power proportional to the memory" — the
+//! paper attributes its latency-vs-memory curves to exactly this
+//! (§3.2: peak usage is 85/229/429 MB, so extra memory is *only*
+//! buying CPU). We model a cgroup-style duty-cycle governor: a
+//! compute-bound task that takes `t` at full speed takes `t / share`
+//! under share `< 1`. The governor scales *measured real compute* into
+//! *effective platform time* and advances the platform clock by the
+//! difference, so real engines stay honest (their wall time is
+//! already consumed) and virtual clocks account identically.
+
+use crate::configparse::MemorySize;
+use crate::util::Clock;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Clone)]
+pub struct CpuGovernor {
+    /// Memory that buys one full vCPU (AWS-documented ~1792 MB).
+    full_power_mem_mb: u32,
+    clock: Arc<dyn Clock>,
+}
+
+impl CpuGovernor {
+    pub fn new(full_power_mem_mb: u32, clock: Arc<dyn Clock>) -> Self {
+        assert!(full_power_mem_mb > 0);
+        Self { full_power_mem_mb, clock }
+    }
+
+    /// CPU share in `(0, 1]` for a container of `mem` MB.
+    pub fn share(&self, mem: MemorySize) -> f64 {
+        (mem as f64 / self.full_power_mem_mb as f64).min(1.0)
+    }
+
+    /// Effective duration of a compute-bound task measured at full
+    /// speed, when run under `mem`'s CPU share.
+    pub fn scale(&self, full_speed: Duration, mem: MemorySize) -> Duration {
+        Duration::from_secs_f64(full_speed.as_secs_f64() / self.share(mem))
+    }
+
+    /// Account a task that already consumed `real_elapsed` of wall time
+    /// (real engine) but should appear to take `scale(full_speed)`:
+    /// sleeps the clock for the remainder and returns the effective
+    /// duration. With a virtual/manual clock the sleep is instant.
+    pub fn throttle(
+        &self,
+        full_speed: Duration,
+        real_elapsed: Duration,
+        mem: MemorySize,
+    ) -> Duration {
+        let effective = self.scale(full_speed, mem);
+        let already = if self.clock.is_real() { real_elapsed } else { Duration::ZERO };
+        if effective > already {
+            self.clock.sleep(effective - already);
+        }
+        effective
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+    use crate::util::{ManualClock, SystemClock};
+
+    fn gov() -> (CpuGovernor, Arc<ManualClock>) {
+        let clock = ManualClock::new();
+        (CpuGovernor::new(1792, clock.clone()), clock)
+    }
+
+    #[test]
+    fn share_matches_lambda_rule() {
+        let (g, _) = gov();
+        assert!((g.share(128) - 128.0 / 1792.0).abs() < 1e-12);
+        assert!((g.share(896) - 0.5).abs() < 1e-12);
+        assert_eq!(g.share(1792), 1.0);
+        assert_eq!(g.share(3008), 1.0, "share is capped at 1");
+    }
+
+    #[test]
+    fn scale_is_inverse_share() {
+        let (g, _) = gov();
+        let t = Duration::from_millis(100);
+        assert_eq!(g.scale(t, 1792), t);
+        let scaled = g.scale(t, 128);
+        assert!((scaled.as_secs_f64() - 1.4).abs() < 1e-9, "{scaled:?}");
+        // 896 MB = half speed = double time.
+        assert!((g.scale(t, 896).as_secs_f64() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throttle_advances_manual_clock_by_full_effective() {
+        let (g, clock) = gov();
+        let eff = g.throttle(Duration::from_millis(100), Duration::from_millis(100), 896);
+        assert!((eff.as_secs_f64() - 0.2).abs() < 1e-9);
+        // Manual clock is not real: full effective duration is slept.
+        assert_eq!(clock.now(), eff.as_nanos() as u64);
+    }
+
+    #[test]
+    fn throttle_real_clock_sleeps_only_remainder() {
+        let clock = Arc::new(SystemClock::new());
+        let g = CpuGovernor::new(1000, clock.clone());
+        let t0 = std::time::Instant::now();
+        // Full speed 20 ms, already consumed 20 ms, share 0.5 ->
+        // effective 40 ms -> sleep ~20 ms more.
+        let eff = g.throttle(Duration::from_millis(20), Duration::from_millis(20), 500);
+        let wall = t0.elapsed();
+        assert!((eff.as_secs_f64() - 0.04).abs() < 1e-9);
+        assert!(wall >= Duration::from_millis(15), "slept remainder, {wall:?}");
+        assert!(wall < Duration::from_millis(45), "did not sleep full effective");
+    }
+
+    #[test]
+    fn full_power_no_extra_sleep() {
+        let (g, clock) = gov();
+        let eff = g.throttle(Duration::from_millis(50), Duration::from_millis(50), 1792);
+        assert_eq!(eff, Duration::from_millis(50));
+        assert_eq!(clock.now(), 50_000_000);
+    }
+
+    #[test]
+    fn prop_effective_time_monotone_decreasing_in_memory() {
+        // The paper's headline warm curve: more memory, less latency.
+        forall("scale(t, mem) decreasing in mem", |(ms, i): &(u64, u32)| {
+            let (g, _) = gov();
+            let t = Duration::from_millis(1 + ms % 10_000);
+            let mems = crate::configparse::MEMORY_SIZES_2017;
+            let idx = (*i as usize) % (mems.len() - 1);
+            g.scale(t, mems[idx]) >= g.scale(t, mems[idx + 1])
+        });
+    }
+
+    #[test]
+    fn prop_effective_never_faster_than_full_speed() {
+        forall("scale >= full speed", |(ms, i): &(u64, u32)| {
+            let (g, _) = gov();
+            let t = Duration::from_millis(ms % 100_000);
+            let mems = crate::configparse::MEMORY_SIZES_2017;
+            let m = mems[(*i as usize) % mems.len()];
+            g.scale(t, m) >= t
+        });
+    }
+}

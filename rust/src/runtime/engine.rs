@@ -1,0 +1,65 @@
+//! The thread-safe engine abstraction the platform codes against.
+
+use super::manifest::ModelManifest;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Handle to a live model instance (weights resident on the device of
+/// one engine shard). Dropping the handle does NOT free the instance —
+/// call [`Engine::drop_instance`] (container reaping does).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct InstanceHandle {
+    pub model: String,
+    pub variant: String,
+    pub shard: usize,
+    pub id: u64,
+}
+
+/// Cost breakdown of instance creation — the *real* components of a
+/// cold start (the platform adds the simulated sandbox/runtime parts).
+#[derive(Debug, Clone, Default)]
+pub struct InitStats {
+    /// HLO parse + PJRT compile time actually spent for this instance's
+    /// executables (zero when the shard compile cache hit).
+    pub compile: Duration,
+    /// Weight materialization (init executable run + upload).
+    pub init_run: Duration,
+    /// Bytes of parameters now resident.
+    pub weight_bytes: u64,
+}
+
+/// One inference result.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// Argmax class.
+    pub top1: i32,
+    /// Probability of the argmax class.
+    pub top_prob: f32,
+    /// Real compute time of the forward pass (full speed, unthrottled).
+    pub compute: Duration,
+}
+
+/// Thread-safe inference engine: the only interface the platform uses
+/// to touch models, implemented by [`super::PjrtEngine`] (real XLA) and
+/// [`super::MockEngine`] (synthetic costs).
+pub trait Engine: Send + Sync {
+    /// Manifest lookup (deploy-time validation, billing floors).
+    fn manifest(&self, model: &str) -> Result<ModelManifest>;
+
+    /// Create a live instance: ensure the artifacts are compiled on a
+    /// shard (cached per shard) and run the init executable (weight
+    /// materialization). This is the real work behind a cold start.
+    fn create_instance(&self, model: &str, variant: &str) -> Result<(InstanceHandle, InitStats)>;
+
+    /// Run one forward pass on a live instance. `image_seed`
+    /// deterministically generates the input image (the paper bundled
+    /// a fixed image with the function; a seed keeps runs reproducible
+    /// while letting workloads vary inputs).
+    fn predict(&self, handle: &InstanceHandle, image_seed: u64) -> Result<Prediction>;
+
+    /// Free a live instance (container reaped / evicted).
+    fn drop_instance(&self, handle: &InstanceHandle);
+
+    /// Number of live instances (leak checks in tests).
+    fn live_instances(&self) -> usize;
+}

@@ -1,0 +1,75 @@
+//! Deterministic synthetic input images.
+//!
+//! The paper bundles one fixed JPEG with the Lambda function and
+//! classifies it on every request. Pixel values do not affect inference
+//! *cost*, so we generate a procedural image (smooth gradients + seeded
+//! noise, roughly ImageNet-normalized) instead of shipping binary image
+//! assets; the seed varies per request so caching cannot hide work.
+
+use crate::util::SplitMix64;
+
+/// Generate an NHWC `[1, h, w, 3]` image as a flat f32 vector.
+///
+/// Hot path: called on every predict (the image upload is part of the
+/// request), so the generator is vectorizable — sin/cos are hoisted
+/// into per-row/column tables and one `u64` draw yields the noise for
+/// all three channels of a pixel (§Perf: 1.35 ms -> ~0.2 ms at 224²).
+pub fn synthetic_image(h: usize, w: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed ^ 0x1839_7cb1);
+    // Random low-frequency phase offsets make images differ smoothly.
+    let (px, py) = (rng.next_f32() * 6.28, rng.next_f32() * 6.28);
+    let col: Vec<f32> = (0..w)
+        .map(|x| ((x as f32 / w.max(1) as f32) * 6.28 + px).sin() * 0.5)
+        .collect();
+    let row: Vec<f32> = (0..h)
+        .map(|y| ((y as f32 / h.max(1) as f32) * 6.28 + py).cos() * 0.5)
+        .collect();
+    let mut out = Vec::with_capacity(h * w * 3);
+    const INV: f32 = 1.0 / 2097152.0; // 2^-21
+    for &ry in &row {
+        for &cx in &col {
+            let base = cx + ry;
+            // One draw -> three 21-bit channel noises in [-0.5, 0.5).
+            let bits = rng.next_u64();
+            let n0 = ((bits & 0x1F_FFFF) as f32) * INV - 0.5;
+            let n1 = (((bits >> 21) & 0x1F_FFFF) as f32) * INV - 0.5;
+            let n2 = (((bits >> 42) & 0x1F_FFFF) as f32) * INV - 0.5;
+            // ~N(0, 1)-ish after ImageNet-style normalization.
+            out.push(base + 0.3 * n0);
+            out.push(base + 0.3 * n1 + 0.1);
+            out.push(base + 0.3 * n2 + 0.2);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correct_length() {
+        assert_eq!(synthetic_image(224, 224, 0).len(), 224 * 224 * 3);
+        assert_eq!(synthetic_image(8, 4, 1).len(), 96);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(synthetic_image(16, 16, 7), synthetic_image(16, 16, 7));
+    }
+
+    #[test]
+    fn differs_across_seeds() {
+        assert_ne!(synthetic_image(16, 16, 1), synthetic_image(16, 16, 2));
+    }
+
+    #[test]
+    fn values_bounded() {
+        let img = synthetic_image(32, 32, 3);
+        assert!(img.iter().all(|v| v.is_finite() && v.abs() < 4.0));
+        // Non-degenerate: some spread.
+        let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+        let var: f32 = img.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / img.len() as f32;
+        assert!(var > 0.01, "var={var}");
+    }
+}

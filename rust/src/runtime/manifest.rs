@@ -1,0 +1,252 @@
+//! AOT manifest parsing (`artifacts/<model>.json`, `artifacts/zoo.json`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `<model>.json` manifest emitted by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    /// NHWC input shape, `[1, H, W, 3]`.
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub param_count: usize,
+    pub param_elements: u64,
+    pub param_bytes: u64,
+    pub flops: u64,
+    /// Paper-reported model file size (MB): 5 / 45 / 98.
+    pub paper_size_mb: f64,
+    /// Paper-reported peak function memory (MB): 85 / 229 / 429 — the
+    /// platform's deployability floor.
+    pub paper_peak_mem_mb: u32,
+    /// Ordered parameter shapes (the artifact calling convention).
+    pub param_shapes: Vec<Vec<usize>>,
+    /// variant -> (init artifact file, infer artifact file).
+    pub artifacts: BTreeMap<String, (String, String)>,
+    /// Directory the artifact files live in.
+    pub dir: PathBuf,
+}
+
+impl ModelManifest {
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.json"));
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::from_json(&src, dir)
+    }
+
+    pub fn from_json(src: &str, dir: &Path) -> Result<Self> {
+        let j = Json::parse(src).context("parsing manifest json")?;
+        let req_u64 = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("manifest missing numeric field {k:?}"))
+        };
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("manifest missing name")?
+            .to_string();
+        let input_shape: Vec<usize> = j
+            .get("input_shape")
+            .and_then(Json::as_arr)
+            .context("manifest missing input_shape")?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as usize).context("bad input_shape entry"))
+            .collect::<Result<_>>()?;
+        if input_shape.len() != 4 || input_shape[0] != 1 || input_shape[3] != 3 {
+            bail!("unsupported input shape {input_shape:?} (want [1, H, W, 3])");
+        }
+        let param_shapes: Vec<Vec<usize>> = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("manifest missing params")?
+            .iter()
+            .map(|p| {
+                p.get("shape")
+                    .and_then(Json::as_arr)
+                    .context("param missing shape")?
+                    .iter()
+                    .map(|v| v.as_u64().map(|x| x as usize).context("bad shape entry"))
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<_>>()?;
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(vars)) = j.get("artifacts") {
+            for (variant, files) in vars {
+                let init = files
+                    .get("init")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("artifact variant {variant} missing init"))?;
+                let infer = files
+                    .get("infer")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("artifact variant {variant} missing infer"))?;
+                artifacts.insert(variant.clone(), (init.to_string(), infer.to_string()));
+            }
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {name} lists no artifact variants");
+        }
+        let m = Self {
+            name,
+            input_shape,
+            num_classes: req_u64("num_classes")? as usize,
+            param_count: req_u64("param_count")? as usize,
+            param_elements: req_u64("param_elements")?,
+            param_bytes: req_u64("param_bytes")?,
+            flops: req_u64("flops")?,
+            paper_size_mb: j
+                .get("paper_size_mb")
+                .and_then(Json::as_f64)
+                .context("manifest missing paper_size_mb")?,
+            paper_peak_mem_mb: req_u64("paper_peak_mem_mb")? as u32,
+            param_shapes,
+            artifacts,
+            dir: dir.to_path_buf(),
+        };
+        if m.param_shapes.len() != m.param_count {
+            bail!("manifest {}: params list length {} != param_count {}", m.name,
+                  m.param_shapes.len(), m.param_count);
+        }
+        Ok(m)
+    }
+
+    /// Image pixel count (H * W * 3).
+    pub fn image_elements(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Absolute paths of `(init, infer)` artifacts for `variant`.
+    pub fn artifact_paths(&self, variant: &str) -> Result<(PathBuf, PathBuf)> {
+        let (init, infer) = self
+            .artifacts
+            .get(variant)
+            .with_context(|| {
+                format!("model {} has no variant {variant:?} (have: {:?})",
+                        self.name, self.artifacts.keys().collect::<Vec<_>>())
+            })?;
+        Ok((self.dir.join(init), self.dir.join(infer)))
+    }
+
+    /// Deployment package size in bytes (model weights dominate; the
+    /// paper bundled model + code into the function zip).
+    pub fn package_bytes(&self) -> u64 {
+        self.param_bytes + 2_000_000 // + code/framework baseline
+    }
+}
+
+/// The artifact directory index (`zoo.json`).
+#[derive(Debug, Clone)]
+pub struct Zoo {
+    pub height: usize,
+    pub width: usize,
+    pub seed: u64,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Zoo {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("zoo.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading zoo index {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&src).context("parsing zoo.json")?;
+        let mut models = BTreeMap::new();
+        for entry in j.get("models").and_then(Json::as_arr).context("zoo missing models")? {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .context("zoo entry missing name")?;
+            let m = ModelManifest::load(dir, name)?;
+            models.insert(name.to_string(), m);
+        }
+        Ok(Self {
+            height: j.get("height").and_then(Json::as_u64).context("zoo missing height")? as usize,
+            width: j.get("width").and_then(Json::as_u64).context("zoo missing width")? as usize,
+            seed: j.get("seed").and_then(Json::as_u64).context("zoo missing seed")?,
+            models,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model {name:?} (zoo: {:?})",
+                                     self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_manifest_json() -> &'static str {
+    r#"{
+      "name": "tiny",
+      "input_shape": [1, 8, 8, 3],
+      "num_classes": 10,
+      "param_count": 2,
+      "param_elements": 100,
+      "param_bytes": 400,
+      "flops": 12345,
+      "paper_size_mb": 5.0,
+      "paper_peak_mem_mb": 85,
+      "params": [
+        {"name": "a.w", "shape": [3, 4]},
+        {"name": "a.b", "shape": [4]}
+      ],
+      "artifacts": {
+        "pallas": {"init": "tiny_init.hlo.txt", "infer": "tiny_infer.hlo.txt"},
+        "ref": {"init": "tiny_ref_init.hlo.txt", "infer": "tiny_ref_infer.hlo.txt"}
+      }
+    }"#
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let m = ModelManifest::from_json(test_manifest_json(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.input_shape, vec![1, 8, 8, 3]);
+        assert_eq!(m.image_elements(), 192);
+        assert_eq!(m.param_shapes, vec![vec![3, 4], vec![4]]);
+        assert_eq!(m.paper_peak_mem_mb, 85);
+        let (init, infer) = m.artifact_paths("pallas").unwrap();
+        assert_eq!(init, Path::new("/tmp/a/tiny_init.hlo.txt"));
+        assert_eq!(infer, Path::new("/tmp/a/tiny_infer.hlo.txt"));
+        assert!(m.artifact_paths("nope").is_err());
+        assert!(m.package_bytes() > m.param_bytes);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        let dir = Path::new("/tmp");
+        assert!(ModelManifest::from_json("{}", dir).is_err());
+        // wrong input rank
+        let bad = test_manifest_json().replace("[1, 8, 8, 3]", "[8, 8, 3]");
+        assert!(ModelManifest::from_json(&bad, dir).is_err());
+        // params/param_count mismatch
+        let bad = test_manifest_json().replace("\"param_count\": 2", "\"param_count\": 3");
+        assert!(ModelManifest::from_json(&bad, dir).is_err());
+        // no artifacts
+        let bad = test_manifest_json().replace("\"pallas\"", "\"_ignored\"")
+            .replace("\"ref\"", "\"_ignored2\"");
+        // (renaming keys keeps variants — instead drop the object)
+        let bad2 = {
+            let mut s = bad;
+            let start = s.find("\"artifacts\"").unwrap();
+            let end = s.rfind('}').unwrap();
+            s.replace_range(start..end, "\"artifacts\": {}\n");
+            s
+        };
+        assert!(ModelManifest::from_json(&bad2, dir).is_err());
+    }
+
+    #[test]
+    fn zoo_load_missing_dir_errors() {
+        let err = Zoo::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

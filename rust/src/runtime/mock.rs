@@ -1,0 +1,217 @@
+//! Synthetic engine for platform tests and fast simulation sweeps.
+//!
+//! Costs are configured per model; `predict` does not burn CPU — it
+//! just *reports* the configured compute duration, which the platform
+//! then scales/bills exactly like a real one (the CPU governor and the
+//! virtual clock treat reported compute uniformly).
+
+use super::engine::{Engine, InitStats, InstanceHandle, Prediction};
+use super::manifest::ModelManifest;
+use crate::util::SplitMix64;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Configured costs for one mock model.
+#[derive(Debug, Clone)]
+pub struct MockModelCosts {
+    /// Full-speed forward-pass time.
+    pub predict: Duration,
+    /// Weight materialization at instance creation.
+    pub init_run: Duration,
+    /// First-compile cost (per engine, like a shard cache miss).
+    pub compile: Duration,
+    pub manifest: ModelManifest,
+}
+
+impl MockModelCosts {
+    /// A mock model mirroring one of the paper's three, with costs
+    /// roughly proportional to its FLOPs.
+    pub fn paper_like(name: &str, predict_ms: u64, size_mb: f64, peak_mem_mb: u32) -> Self {
+        let manifest = ModelManifest {
+            name: name.to_string(),
+            input_shape: vec![1, 224, 224, 3],
+            num_classes: 1000,
+            param_count: 2,
+            param_elements: (size_mb * 1e6 / 4.0) as u64,
+            param_bytes: (size_mb * 1e6) as u64,
+            flops: predict_ms * 2_000_000, // ~2 GFLOPS full speed
+            paper_size_mb: size_mb,
+            paper_peak_mem_mb: peak_mem_mb,
+            param_shapes: vec![vec![1], vec![1]],
+            artifacts: [(
+                "pallas".to_string(),
+                ("mock_init.hlo.txt".to_string(), "mock_infer.hlo.txt".to_string()),
+            )]
+            .into_iter()
+            .collect(),
+            dir: PathBuf::from("/nonexistent"),
+        };
+        Self {
+            predict: Duration::from_millis(predict_ms),
+            init_run: Duration::from_millis((size_mb * 2.0) as u64),
+            compile: Duration::from_millis(150),
+            manifest,
+        }
+    }
+}
+
+/// See module docs.
+pub struct MockEngine {
+    models: BTreeMap<String, MockModelCosts>,
+    compiled: Mutex<std::collections::BTreeSet<String>>,
+    instances: Mutex<std::collections::BTreeSet<(usize, u64)>>,
+    next_id: AtomicU64,
+    /// Calls observed (assertions in tests).
+    pub predict_calls: AtomicU64,
+    pub create_calls: AtomicU64,
+    /// When true, `create_instance` fails (failure-injection tests).
+    pub fail_create: std::sync::atomic::AtomicBool,
+}
+
+impl MockEngine {
+    pub fn new(models: Vec<MockModelCosts>) -> Self {
+        Self {
+            models: models.into_iter().map(|m| (m.manifest.name.clone(), m)).collect(),
+            compiled: Mutex::new(Default::default()),
+            instances: Mutex::new(Default::default()),
+            next_id: AtomicU64::new(0),
+            predict_calls: AtomicU64::new(0),
+            create_calls: AtomicU64::new(0),
+            fail_create: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// The three paper models with full-speed costs in the measured
+    /// ballpark of the real artifacts on this machine.
+    pub fn paper_zoo() -> Self {
+        Self::new(vec![
+            MockModelCosts::paper_like("squeezenet", 105, 5.0, 85),
+            MockModelCosts::paper_like("resnet18", 130, 46.7, 229),
+            MockModelCosts::paper_like("resnext50", 2220, 100.0, 429),
+        ])
+    }
+
+    fn costs(&self, model: &str) -> Result<&MockModelCosts> {
+        self.models.get(model).ok_or_else(|| anyhow!("mock engine: unknown model {model:?}"))
+    }
+}
+
+impl Engine for MockEngine {
+    fn manifest(&self, model: &str) -> Result<ModelManifest> {
+        Ok(self.costs(model)?.manifest.clone())
+    }
+
+    fn create_instance(&self, model: &str, variant: &str) -> Result<(InstanceHandle, InitStats)> {
+        self.create_calls.fetch_add(1, Ordering::SeqCst);
+        if self.fail_create.load(Ordering::SeqCst) {
+            return Err(anyhow!("mock engine: injected create failure"));
+        }
+        let costs = self.costs(model)?;
+        if variant != "pallas" && variant != "ref" {
+            return Err(anyhow!("mock engine: unknown variant {variant:?}"));
+        }
+        let compile = {
+            let mut c = self.compiled.lock().unwrap();
+            if c.insert(model.to_string()) {
+                costs.compile
+            } else {
+                Duration::ZERO
+            }
+        };
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.instances.lock().unwrap().insert((0, id));
+        Ok((
+            InstanceHandle { model: model.to_string(), variant: variant.to_string(), shard: 0, id },
+            InitStats { compile, init_run: costs.init_run, weight_bytes: costs.manifest.param_bytes },
+        ))
+    }
+
+    fn predict(&self, handle: &InstanceHandle, image_seed: u64) -> Result<Prediction> {
+        self.predict_calls.fetch_add(1, Ordering::SeqCst);
+        if !self.instances.lock().unwrap().contains(&(handle.shard, handle.id)) {
+            return Err(anyhow!("mock engine: predict on dead instance {:?}", handle));
+        }
+        let costs = self.costs(&handle.model)?;
+        // Deterministic pseudo-classification + ±5% compute jitter.
+        let mut rng = SplitMix64::new(image_seed);
+        let top1 = rng.gen_range(0, costs.manifest.num_classes as u64) as i32;
+        let jitter = 0.95 + 0.1 * rng.next_f64();
+        Ok(Prediction {
+            top1,
+            top_prob: 0.5 + 0.5 * rng.next_f32(),
+            compute: Duration::from_secs_f64(costs.predict.as_secs_f64() * jitter),
+        })
+    }
+
+    fn drop_instance(&self, handle: &InstanceHandle) {
+        self.instances.lock().unwrap().remove(&(handle.shard, handle.id));
+    }
+
+    fn live_instances(&self) -> usize {
+        self.instances.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let e = MockEngine::paper_zoo();
+        let (h, stats) = e.create_instance("squeezenet", "pallas").unwrap();
+        assert!(stats.compile > Duration::ZERO, "first create compiles");
+        assert_eq!(e.live_instances(), 1);
+
+        let (h2, stats2) = e.create_instance("squeezenet", "pallas").unwrap();
+        assert_eq!(stats2.compile, Duration::ZERO, "second create hits cache");
+        assert_eq!(e.live_instances(), 2);
+
+        let p = e.predict(&h, 42).unwrap();
+        assert!(p.compute > Duration::ZERO);
+        assert!((0..1000).contains(&p.top1));
+
+        // Determinism per seed.
+        let p2 = e.predict(&h, 42).unwrap();
+        assert_eq!(p.top1, p2.top1);
+        assert_eq!(p.compute, p2.compute);
+
+        e.drop_instance(&h);
+        assert_eq!(e.live_instances(), 1);
+        assert!(e.predict(&h, 1).is_err(), "predict on dropped instance fails");
+        e.drop_instance(&h2);
+        assert_eq!(e.live_instances(), 0);
+    }
+
+    #[test]
+    fn unknown_model_and_variant() {
+        let e = MockEngine::paper_zoo();
+        assert!(e.create_instance("vgg", "pallas").is_err());
+        assert!(e.create_instance("resnet18", "cuda").is_err());
+        assert!(e.manifest("nope").is_err());
+    }
+
+    #[test]
+    fn failure_injection() {
+        let e = MockEngine::paper_zoo();
+        e.fail_create.store(true, Ordering::SeqCst);
+        assert!(e.create_instance("squeezenet", "pallas").is_err());
+        e.fail_create.store(false, Ordering::SeqCst);
+        assert!(e.create_instance("squeezenet", "pallas").is_ok());
+    }
+
+    #[test]
+    fn paper_zoo_cost_ordering() {
+        let e = MockEngine::paper_zoo();
+        let s = e.manifest("squeezenet").unwrap();
+        let r = e.manifest("resnet18").unwrap();
+        let x = e.manifest("resnext50").unwrap();
+        assert!(s.param_bytes < r.param_bytes && r.param_bytes < x.param_bytes);
+        assert!(s.paper_peak_mem_mb < r.paper_peak_mem_mb);
+        assert_eq!(x.paper_peak_mem_mb, 429);
+    }
+}

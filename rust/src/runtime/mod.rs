@@ -1,0 +1,22 @@
+//! Model execution runtime: load AOT HLO-text artifacts, compile them
+//! on the PJRT CPU client, and serve predictions from Rust.
+//!
+//! The `xla` crate's PJRT types are `Rc`-based (thread-confined), so
+//! [`PjrtEngine`] runs one or more *engine shard* threads, each owning
+//! a `PjRtClient`, a compile cache, and the live model instances;
+//! the rest of the platform talks to shards through channels via the
+//! thread-safe [`Engine`] trait. [`MockEngine`] implements the same
+//! trait with configurable synthetic costs for platform tests and
+//! fast simulation sweeps.
+
+mod engine;
+mod image;
+mod manifest;
+mod mock;
+mod pjrt;
+
+pub use engine::{Engine, InitStats, InstanceHandle, Prediction};
+pub use image::synthetic_image;
+pub use manifest::{ModelManifest, Zoo};
+pub use mock::{MockEngine, MockModelCosts};
+pub use pjrt::PjrtEngine;

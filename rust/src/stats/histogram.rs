@@ -1,0 +1,282 @@
+//! HDR-style log-bucketed latency histogram.
+//!
+//! Buckets have ~1% relative width (128 sub-buckets per power of two),
+//! so p50/p99 quantiles are accurate to ~1% across nanoseconds..hours
+//! with a fixed 64 KiB footprint — good enough for the paper's
+//! latency-distribution (bimodality) analysis and cheap enough for the
+//! request hot path.
+
+const SUB_BITS: u32 = 7; // 128 sub-buckets per octave
+const SUB: u64 = 1 << SUB_BITS;
+
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 64 octaves x 128 sub-buckets.
+        Self {
+            counts: vec![0; (64 << SUB_BITS) as usize],
+            total: 0,
+            sum: 0.0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as u64;
+        let shift = msb - SUB_BITS as u64;
+        let sub = (v >> shift) - SUB; // top SUB_BITS+1 bits minus leading 1
+        (((msb - SUB_BITS as u64 + 1) << SUB_BITS) + sub as u64) as usize
+    }
+
+    /// Lower edge of the bucket holding `index` (representative value).
+    fn value_of(index: usize) -> u64 {
+        let index = index as u64;
+        if index < SUB {
+            return index;
+        }
+        let octave = (index >> SUB_BITS) - 1;
+        let sub = index & (SUB - 1);
+        (SUB + sub) << octave
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        self.counts[Self::index(v)] += n;
+        self.total += n;
+        self.sum += (v as f64) * (n as f64);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in `[0, 1]`; exact max for `q = 1`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::value_of(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Fraction of samples strictly above `threshold` — the SLA
+    /// violation rate for a latency target.
+    pub fn fraction_above(&self, threshold: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let idx = Self::index(threshold);
+        let above: u64 = self.counts[idx + 1..].iter().sum();
+        above as f64 / self.total as f64
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram(n={}, mean={:.1}, p50={}, p99={}, max={})",
+            self.total,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.fraction_above(10), 0.0);
+    }
+
+    #[test]
+    fn exact_below_128() {
+        let mut h = Histogram::new();
+        for v in 0..128 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 127);
+        assert_eq!(h.quantile(0.5), 63);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut h = Histogram::new();
+        let v = 1_234_567_890u64;
+        h.record(v);
+        let q = h.quantile(0.5);
+        let rel = (q as f64 - v as f64).abs() / v as f64;
+        assert!(rel < 0.01, "rel err {rel}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        h.record(10);
+        h.record(20);
+        h.record(30);
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut h = Histogram::new();
+        let mut r = crate::util::SplitMix64::new(5);
+        for _ in 0..10_000 {
+            h.record(r.gen_range(1, 1_000_000));
+        }
+        let mut last = 0;
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile not monotone at {q}");
+            last = v;
+        }
+        assert_eq!(h.quantile(1.0), h.max());
+    }
+
+    #[test]
+    fn uniform_quantiles_close() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50() as f64;
+        assert!((p50 - 50_000.0).abs() / 50_000.0 < 0.02, "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((p99 - 99_000.0).abs() / 99_000.0 < 0.02, "p99={p99}");
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut r = crate::util::SplitMix64::new(9);
+        for i in 0..1000 {
+            let v = r.gen_range(1, 100_000);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.mean(), c.mean());
+        assert_eq!(a.p99(), c.p99());
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn fraction_above_bimodal() {
+        // The paper's cold/warm bimodality: 95% at ~100ms, 5% at ~4s.
+        let mut h = Histogram::new();
+        h.record_n(100_000_000, 95); // 100ms in ns
+        h.record_n(4_000_000_000, 5); // 4s
+        let f = h.fraction_above(1_000_000_000); // 1s SLA
+        assert!((f - 0.05).abs() < 1e-9, "f={f}");
+    }
+
+    #[test]
+    fn record_n_matches_loop() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_n(777, 10);
+        for _ in 0..10 {
+            b.record(777);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.p50(), b.p50());
+    }
+}

@@ -1,0 +1,9 @@
+//! Streaming statistics: log-bucketed histograms, means with 95%
+//! confidence intervals (the paper reports "all results with 95%
+//! confidence"), and percentile summaries for the SLA analysis.
+
+mod histogram;
+mod summary;
+
+pub use histogram::Histogram;
+pub use summary::{mean_ci95, Summary, T_TABLE_975};

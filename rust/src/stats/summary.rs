@@ -1,0 +1,130 @@
+//! Mean ± 95% confidence interval (Student-t), matching the paper's
+//! "all results are reported with 95% confidence".
+
+/// Two-sided 97.5% Student-t critical values for df = 1..=30; beyond 30
+/// the normal approximation (1.96) is used.
+pub const T_TABLE_975: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+    2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+    2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+];
+
+fn t975(df: usize) -> f64 {
+    if df == 0 {
+        f64::INFINITY
+    } else if df <= 30 {
+        T_TABLE_975[df - 1]
+    } else {
+        1.96
+    }
+}
+
+/// `(mean, half_width)` of the 95% CI for the sample mean.
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+    let se = (var / n as f64).sqrt();
+    (mean, t975(n - 1) * se)
+}
+
+/// Aggregate sample summary used in experiment output rows.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (mean, ci95) = mean_ci95(xs);
+        let q = |p: f64| {
+            let idx = ((p * sorted.len() as f64).ceil() as usize).max(1) - 1;
+            sorted[idx.min(sorted.len() - 1)]
+        };
+        Self {
+            n: xs.len(),
+            mean,
+            ci95,
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(mean_ci95(&[]), (0.0, 0.0));
+        assert_eq!(mean_ci95(&[5.0]), (5.0, 0.0));
+    }
+
+    #[test]
+    fn known_ci() {
+        // n=5, mean=3, sd=sqrt(2.5), se=sqrt(0.5); t(4)=2.776.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let (mean, hw) = mean_ci95(&xs);
+        assert_eq!(mean, 3.0);
+        let expect = 2.776 * (2.5f64 / 5.0).sqrt();
+        assert!((hw - expect).abs() < 1e-9, "hw={hw} expect={expect}");
+    }
+
+    #[test]
+    fn constant_samples_zero_width() {
+        let xs = [7.0; 10];
+        let (mean, hw) = mean_ci95(&xs);
+        assert_eq!(mean, 7.0);
+        assert_eq!(hw, 0.0);
+    }
+
+    #[test]
+    fn large_n_uses_normal() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        let (_, hw) = mean_ci95(&xs);
+        // se = sd/sqrt(1000); sd of 0..9 uniform ≈ 2.8735 (sample).
+        assert!(hw < 0.2);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&xs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.mean, 50.5);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::from_samples(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+}

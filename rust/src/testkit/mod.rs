@@ -1,0 +1,304 @@
+//! proptest-lite: property-based testing without the proptest crate.
+//!
+//! `forall` runs a property over N seeded random cases; on failure it
+//! performs greedy input shrinking via the `Shrink` trait and reports
+//! the minimal counterexample with the seed needed to replay it.
+//! Coordinator invariants (routing, batching, pool state, billing
+//! rounding) are property-tested with this.
+
+use crate::util::SplitMix64;
+
+/// Types that can generate themselves from a PRNG.
+pub trait Arbitrary: Sized + Clone + std::fmt::Debug {
+    fn arbitrary(rng: &mut SplitMix64) -> Self;
+
+    /// Candidate smaller values (for shrinking). Default: none.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Arbitrary for u64 {
+    fn arbitrary(rng: &mut SplitMix64) -> Self {
+        // Mix small and large magnitudes.
+        match rng.gen_range(0, 4) {
+            0 => rng.gen_range(0, 16),
+            1 => rng.gen_range(0, 1 << 10),
+            2 => rng.gen_range(0, 1 << 32),
+            _ => rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let x = *self;
+        if x == 0 {
+            return Vec::new();
+        }
+        // Binary-search-style candidates: 0, x/2, 3x/4, 7x/8, ..., x-1.
+        // Greedy descent over these converges to the minimal failing
+        // value in O(log^2 x) steps for monotone properties.
+        let mut c = vec![0, x / 2];
+        let mut d = x / 4;
+        while d > 0 {
+            c.push(x - d);
+            d /= 2;
+        }
+        c.push(x - 1);
+        c.dedup();
+        c
+    }
+}
+
+impl Arbitrary for u32 {
+    fn arbitrary(rng: &mut SplitMix64) -> Self {
+        u64::arbitrary(rng) as u32
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        u64::shrink(&(*self as u64)).into_iter().map(|v| v as u32).collect()
+    }
+}
+
+impl Arbitrary for f64 {
+    fn arbitrary(rng: &mut SplitMix64) -> Self {
+        match rng.gen_range(0, 4) {
+            0 => 0.0,
+            1 => rng.next_f64(),
+            2 => rng.next_f64() * 1e6,
+            _ => -rng.next_f64() * 1e3,
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            Vec::new()
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl Arbitrary for bool {
+    fn arbitrary(rng: &mut SplitMix64) -> Self {
+        rng.gen_range(0, 2) == 1
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn arbitrary(rng: &mut SplitMix64) -> Self {
+        let len = rng.gen_range(0, 20) as usize;
+        (0..len).map(|_| T::arbitrary(rng)).collect()
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut c = Vec::new();
+        if self.is_empty() {
+            return c;
+        }
+        // Halve, drop one element, shrink one element.
+        c.push(self[..self.len() / 2].to_vec());
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.remove(0);
+            c.push(v);
+            let mut v = self.clone();
+            v.pop();
+            c.push(v);
+        }
+        for (i, x) in self.iter().enumerate() {
+            for s in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = s;
+                c.push(v);
+            }
+        }
+        c
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn arbitrary(rng: &mut SplitMix64) -> Self {
+        (A::arbitrary(rng), B::arbitrary(rng))
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut c: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        c.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        c
+    }
+}
+
+/// Outcome of one property evaluation.
+pub enum Prop {
+    Pass,
+    /// Skip this input (precondition unmet) — not counted as a case.
+    Discard,
+    Fail(String),
+}
+
+impl From<bool> for Prop {
+    fn from(ok: bool) -> Self {
+        if ok {
+            Prop::Pass
+        } else {
+            Prop::Fail("property returned false".into())
+        }
+    }
+}
+
+impl From<Result<(), String>> for Prop {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => Prop::Pass,
+            Err(m) => Prop::Fail(m),
+        }
+    }
+}
+
+const DEFAULT_CASES: usize = 200;
+const MAX_SHRINK_STEPS: usize = 500;
+
+/// Run `prop` over `DEFAULT_CASES` random inputs; panic with the
+/// shrunk counterexample on failure. Seed via `TESTKIT_SEED` env var to
+/// replay a specific failure.
+pub fn forall<T, F, P>(name: &str, prop: F)
+where
+    T: Arbitrary,
+    F: Fn(&T) -> P,
+    P: Into<Prop>,
+{
+    forall_cases(name, DEFAULT_CASES, prop)
+}
+
+pub fn forall_cases<T, F, P>(name: &str, cases: usize, prop: F)
+where
+    T: Arbitrary,
+    F: Fn(&T) -> P,
+    P: Into<Prop>,
+{
+    let seed = std::env::var("TESTKIT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1ce_bee5);
+    let mut rng = SplitMix64::new(seed);
+    let mut ran = 0;
+    let mut attempts = 0;
+    while ran < cases {
+        attempts += 1;
+        if attempts > cases * 20 {
+            panic!("property {name:?}: too many discards ({ran}/{cases} cases ran)");
+        }
+        let input = T::arbitrary(&mut rng);
+        match prop(&input).into() {
+            Prop::Pass => ran += 1,
+            Prop::Discard => continue,
+            Prop::Fail(msg) => {
+                let (min_input, min_msg) = shrink_failure(&input, msg, &prop);
+                panic!(
+                    "property {name:?} failed (seed {seed}, case {ran}):\n  \
+                     input: {min_input:?}\n  error: {min_msg}"
+                );
+            }
+        }
+    }
+}
+
+fn shrink_failure<T, F, P>(input: &T, msg: String, prop: &F) -> (T, String)
+where
+    T: Arbitrary,
+    F: Fn(&T) -> P,
+    P: Into<Prop>,
+{
+    let mut cur = input.clone();
+    let mut cur_msg = msg;
+    let mut steps = 0;
+    'outer: while steps < MAX_SHRINK_STEPS {
+        for cand in cur.shrink() {
+            steps += 1;
+            if let Prop::Fail(m) = prop(&cand).into() {
+                cur = cand;
+                cur_msg = m;
+                continue 'outer;
+            }
+            if steps >= MAX_SHRINK_STEPS {
+                break;
+            }
+        }
+        break;
+    }
+    (cur, cur_msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        forall("u64 halves are smaller", |x: &u64| *x / 2 <= *x);
+    }
+
+    #[test]
+    fn vec_reverse_involution() {
+        forall("reverse twice is identity", |v: &Vec<u64>| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    fn tuple_property() {
+        forall("addition commutes", |(a, b): &(u64, u64)| {
+            a.wrapping_add(*b) == b.wrapping_add(*a)
+        });
+    }
+
+    #[test]
+    fn discard_preconditions() {
+        forall("division well-defined for nonzero", |(a, b): &(u64, u64)| {
+            if *b == 0 {
+                return Prop::Discard;
+            }
+            Prop::from(a / b <= *a)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_counterexample() {
+        forall("all u64 are small (false)", |x: &u64| *x < 1000);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Catch the panic and verify the shrunk input is minimal (1000).
+        let result = std::panic::catch_unwind(|| {
+            forall("x < 1000", |x: &u64| *x < 1000);
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("input: 1000"), "shrunk to minimal: {msg}");
+    }
+
+    #[test]
+    fn result_form() {
+        forall("result-form properties work", |x: &u64| -> Result<(), String> {
+            if *x == *x {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,288 @@
+//! Clock abstraction: the platform never calls `Instant::now()` directly.
+//!
+//! The paper's cold-start experiment separates requests by **10 minutes**
+//! (5 requests x 10 min = 50 min per memory size x 12 sizes x 3 models).
+//! Re-running that in real time is absurd, so every time-dependent
+//! component (keep-alive eviction, billing timestamps, workload
+//! schedules) reads a [`Clock`].  Experiments run on [`VirtualClock`],
+//! where sleeps complete instantly by advancing a logical now; the live
+//! gateway runs on [`SystemClock`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Nanoseconds since an arbitrary epoch.
+pub type Nanos = u64;
+
+pub trait Clock: Send + Sync {
+    /// Current time in nanoseconds since the clock's epoch.
+    fn now(&self) -> Nanos;
+
+    /// Block the calling thread for `d` (virtual clocks may return
+    /// immediately after advancing logical time).
+    fn sleep(&self, d: Duration);
+
+    /// True when `sleep` consumes wall time.
+    fn is_real(&self) -> bool;
+
+    fn now_secs(&self) -> f64 {
+        self.now() as f64 / 1e9
+    }
+}
+
+/// Wall-clock time via `std::time::Instant`.
+pub struct SystemClock {
+    epoch: std::time::Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> Self {
+        Self { epoch: std::time::Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> Nanos {
+        self.epoch.elapsed().as_nanos() as Nanos
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+
+    fn is_real(&self) -> bool {
+        true
+    }
+}
+
+/// Discrete-event virtual clock shared across threads.
+///
+/// `sleep(d)` registers a waiter at `now + d` and parks; whichever
+/// thread calls [`VirtualClock::advance`] (usually the experiment
+/// driver) moves `now` forward and wakes every waiter whose deadline
+/// passed.  With `auto_advance`, a sleep from the *only* active waiter
+/// advances the clock itself — single-threaded experiments then never
+/// block at all.
+pub struct VirtualClock {
+    now: AtomicU64,
+    inner: Mutex<Waiters>,
+    cv: Condvar,
+    auto_advance: bool,
+}
+
+struct Waiters {
+    deadlines: Vec<Nanos>,
+    sleepers: usize,
+    threads: usize,
+}
+
+impl VirtualClock {
+    /// A clock where sleeps advance time immediately (single driver).
+    pub fn auto() -> Arc<Self> {
+        Arc::new(Self {
+            now: AtomicU64::new(0),
+            inner: Mutex::new(Waiters { deadlines: Vec::new(), sleepers: 0, threads: 1 }),
+            cv: Condvar::new(),
+            auto_advance: true,
+        })
+    }
+
+    /// A clock driven by explicit [`advance`](Self::advance) calls;
+    /// `threads` is the number of participating worker threads (used to
+    /// detect quiescence in multi-threaded simulations).
+    pub fn manual(threads: usize) -> Arc<Self> {
+        Arc::new(Self {
+            now: AtomicU64::new(0),
+            inner: Mutex::new(Waiters { deadlines: Vec::new(), sleepers: 0, threads }),
+            cv: Condvar::new(),
+            auto_advance: false,
+        })
+    }
+
+    /// Advance logical time to `t` (no-op if in the past) and wake
+    /// every sleeper whose deadline has been reached.
+    pub fn advance_to(&self, t: Nanos) {
+        let mut cur = self.now.load(Ordering::SeqCst);
+        while cur < t {
+            match self.now.compare_exchange(cur, t, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        let mut g = self.inner.lock().unwrap();
+        let now = self.now.load(Ordering::SeqCst);
+        g.deadlines.retain(|&d| d > now);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.advance_to(self.now.load(Ordering::SeqCst) + d.as_nanos() as Nanos);
+    }
+
+    /// Earliest pending sleeper deadline, if any.
+    pub fn next_deadline(&self) -> Option<Nanos> {
+        let g = self.inner.lock().unwrap();
+        g.deadlines.iter().copied().min()
+    }
+
+    /// Number of threads currently blocked in `sleep`.
+    pub fn sleeper_count(&self) -> usize {
+        self.inner.lock().unwrap().sleepers
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Nanos {
+        self.now.load(Ordering::SeqCst)
+    }
+
+    fn sleep(&self, d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        let deadline = self.now() + d.as_nanos() as Nanos;
+        if self.auto_advance {
+            self.advance_to(deadline);
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.deadlines.push(deadline);
+        g.sleepers += 1;
+        // If every participating thread is now asleep, time can only
+        // move forward: advance to the earliest deadline ourselves.
+        while self.now() < deadline {
+            let all_asleep = g.sleepers >= g.threads;
+            if all_asleep {
+                let min = g.deadlines.iter().copied().min().unwrap_or(deadline);
+                drop(g);
+                self.advance_to(min);
+                g = self.inner.lock().unwrap();
+            } else {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+        g.sleepers -= 1;
+        drop(g);
+    }
+
+    fn is_real(&self) -> bool {
+        false
+    }
+}
+
+/// Test clock settable from the outside, no waiter machinery.
+pub struct ManualClock(pub AtomicU64);
+
+impl ManualClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self(AtomicU64::new(0)))
+    }
+
+    pub fn set(&self, t: Nanos) {
+        self.0.store(t, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Nanos {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.0.fetch_add(d.as_nanos() as Nanos, Ordering::SeqCst);
+    }
+
+    fn is_real(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_monotonic() {
+        let c = SystemClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(c.is_real());
+    }
+
+    #[test]
+    fn auto_virtual_clock_sleep_advances() {
+        let c = VirtualClock::auto();
+        assert_eq!(c.now(), 0);
+        c.sleep(Duration::from_secs(600));
+        assert_eq!(c.now(), 600_000_000_000);
+        assert!(!c.is_real());
+    }
+
+    #[test]
+    fn auto_clock_zero_sleep_noop() {
+        let c = VirtualClock::auto();
+        c.sleep(Duration::ZERO);
+        assert_eq!(c.now(), 0);
+    }
+
+    #[test]
+    fn manual_clock_set_and_sleep() {
+        let c = ManualClock::new();
+        c.set(5);
+        assert_eq!(c.now(), 5);
+        c.sleep(Duration::from_nanos(10));
+        assert_eq!(c.now(), 15);
+    }
+
+    #[test]
+    fn virtual_clock_advance_wakes_sleeper() {
+        let c = VirtualClock::manual(2);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            c2.sleep(Duration::from_secs(10));
+            c2.now()
+        });
+        // Wait until the sleeper registers.
+        while c.sleeper_count() == 0 {
+            std::thread::yield_now();
+        }
+        assert_eq!(c.next_deadline(), Some(10_000_000_000));
+        c.advance(Duration::from_secs(10));
+        assert_eq!(h.join().unwrap(), 10_000_000_000);
+    }
+
+    #[test]
+    fn virtual_clock_all_asleep_self_advances() {
+        let c = VirtualClock::manual(1);
+        // Single participating thread: sleep must self-advance.
+        c.sleep(Duration::from_secs(3));
+        assert_eq!(c.now(), 3_000_000_000);
+    }
+
+    #[test]
+    fn virtual_clock_two_sleepers_ordered_wakeup() {
+        let c = VirtualClock::manual(2);
+        let (c1, c2) = (c.clone(), c.clone());
+        let h1 = std::thread::spawn(move || {
+            c1.sleep(Duration::from_secs(1));
+            c1.now()
+        });
+        let h2 = std::thread::spawn(move || {
+            c2.sleep(Duration::from_secs(2));
+            c2.now()
+        });
+        let t1 = h1.join().unwrap();
+        let t2 = h2.join().unwrap();
+        assert!(t1 >= 1_000_000_000);
+        assert!(t2 >= 2_000_000_000);
+    }
+}

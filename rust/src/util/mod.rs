@@ -1,0 +1,8 @@
+//! Shared substrates: virtual/real clock, deterministic PRNG, JSON.
+
+pub mod clock;
+pub mod json;
+pub mod rng;
+
+pub use clock::{Clock, ManualClock, SystemClock, VirtualClock};
+pub use rng::SplitMix64;

@@ -1,0 +1,274 @@
+//! Drivers: replay a schedule against a platform and collect
+//! client-observed samples (platform response + network model).
+
+use super::schedule::Schedule;
+use crate::configparse::NetworkConfig;
+use crate::exec::ThreadPool;
+use crate::platform::{InvokeError, Platform, StartKind};
+use crate::util::SplitMix64;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One client-side measurement.
+#[derive(Debug, Clone)]
+pub struct ClientSample {
+    /// Schedule offset at which the request was issued.
+    pub at: Duration,
+    /// Client-observed latency (network + platform response).
+    pub latency: Duration,
+    /// In-function prediction time (the paper's second series).
+    pub predict: Duration,
+    pub start: StartKind,
+    pub cost_dollars: f64,
+    /// `None` on success; `Some(kind)` on failure.
+    pub error: Option<String>,
+}
+
+/// Aggregated driver output.
+#[derive(Debug, Default)]
+pub struct DriverReport {
+    pub samples: Vec<ClientSample>,
+    pub discarded: usize,
+    pub throttled: usize,
+    pub failed: usize,
+}
+
+impl DriverReport {
+    pub fn ok_samples(&self) -> Vec<&ClientSample> {
+        self.samples.iter().filter(|s| s.error.is_none()).collect()
+    }
+
+    pub fn latencies_s(&self) -> Vec<f64> {
+        self.ok_samples().iter().map(|s| s.latency.as_secs_f64()).collect()
+    }
+
+    pub fn predicts_s(&self) -> Vec<f64> {
+        self.ok_samples().iter().map(|s| s.predict.as_secs_f64()).collect()
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.ok_samples().iter().map(|s| s.cost_dollars).sum()
+    }
+
+    pub fn cold_count(&self) -> usize {
+        self.ok_samples().iter().filter(|s| s.start == StartKind::Cold).count()
+    }
+}
+
+fn network_delay(net: &NetworkConfig, rng: &mut SplitMix64) -> Duration {
+    Duration::from_secs_f64(net.rtt_s + rng.exponential(net.jitter_mean_s))
+}
+
+/// Sequential (closed-loop) replay: used by the warm and cold probes,
+/// where the paper issues one request at a time. Between requests the
+/// platform clock is advanced by the schedule gap (so keep-alive
+/// eviction sees the paper's 10-minute waits without wall-clock cost on
+/// virtual/manual clocks).
+pub fn run_closed_loop(
+    platform: &Platform,
+    function: &str,
+    schedule: &dyn Schedule,
+    seed: u64,
+) -> DriverReport {
+    let arrivals = schedule.arrivals();
+    let discard = schedule.discard_prefix();
+    let mut rng = SplitMix64::new(seed);
+    let mut report = DriverReport { discarded: discard, ..Default::default() };
+    let clock = platform.clock().clone();
+    let t0 = clock.now();
+
+    for (i, at) in arrivals.iter().enumerate() {
+        // Advance the platform clock to the scheduled offset (noop on
+        // the real clock if time has already passed).
+        let target = t0 + at.as_nanos() as u64;
+        let now = clock.now();
+        if target > now {
+            clock.sleep(Duration::from_nanos(target - now));
+        }
+
+        let net = network_delay(&platform.config().network, &mut rng);
+        let sample = match platform.invoke(function, seed.wrapping_add(i as u64)) {
+            Ok(out) => ClientSample {
+                at: *at,
+                latency: net + out.record.response(),
+                predict: out.record.predict,
+                start: out.record.start,
+                cost_dollars: out.record.cost_dollars,
+                error: None,
+            },
+            Err(e) => {
+                match e {
+                    InvokeError::Throttled => report.throttled += 1,
+                    _ => report.failed += 1,
+                }
+                ClientSample {
+                    at: *at,
+                    latency: net,
+                    predict: Duration::ZERO,
+                    start: StartKind::Cold,
+                    cost_dollars: 0.0,
+                    error: Some(e.to_string()),
+                }
+            }
+        };
+        if i >= discard {
+            report.samples.push(sample);
+        }
+    }
+    report
+}
+
+/// Open-loop replay on the real clock: requests fire at their scheduled
+/// offsets regardless of completion (the paper's scalability setup).
+/// `workers` bounds client-side concurrency (JMeter thread pool).
+pub fn run_open_loop(
+    platform: &Arc<Platform>,
+    function: &str,
+    schedule: &dyn Schedule,
+    seed: u64,
+    workers: usize,
+) -> DriverReport {
+    let arrivals = schedule.arrivals();
+    let pool = ThreadPool::new(workers, "client");
+    let results: Arc<Mutex<Vec<ClientSample>>> = Arc::new(Mutex::new(Vec::new()));
+    let t_start = std::time::Instant::now();
+
+    let mut handles = Vec::new();
+    for (i, at) in arrivals.iter().enumerate() {
+        let at = *at;
+        let platform = platform.clone();
+        let function = function.to_string();
+        let results = results.clone();
+        // Pace dispatch: wait until the scheduled offset.
+        let elapsed = t_start.elapsed();
+        if at > elapsed {
+            std::thread::sleep(at - elapsed);
+        }
+        handles.push(pool.submit(move || {
+            let mut rng = SplitMix64::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E37));
+            let net = network_delay(&platform.config().network, &mut rng);
+            let sample = match platform.invoke(&function, seed.wrapping_add(i as u64)) {
+                Ok(out) => ClientSample {
+                    at,
+                    latency: net + out.record.response(),
+                    predict: out.record.predict,
+                    start: out.record.start,
+                    cost_dollars: out.record.cost_dollars,
+                    error: None,
+                },
+                Err(e) => ClientSample {
+                    at,
+                    latency: net,
+                    predict: Duration::ZERO,
+                    start: StartKind::Cold,
+                    cost_dollars: 0.0,
+                    error: Some(e.to_string()),
+                },
+            };
+            results.lock().unwrap().push(sample);
+        }));
+    }
+    for h in handles {
+        h.join();
+    }
+
+    let samples = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+    let throttled = samples.iter().filter(|s| s.error.as_deref() == Some("throttled: container capacity exhausted")).count();
+    let failed = samples.iter().filter(|s| s.error.is_some()).count() - throttled;
+    DriverReport { samples, discarded: 0, throttled, failed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configparse::PlatformConfig;
+    use crate::platform::Invoker;
+    use crate::runtime::MockEngine;
+    use crate::util::{Clock as _, ManualClock};
+    use crate::workload::{ColdProbe, StepRamp, WarmProbe};
+
+    fn platform_manual() -> (Arc<Platform>, Arc<ManualClock>) {
+        let clock = ManualClock::new();
+        let p = Arc::new(Invoker::new(
+            PlatformConfig::default(),
+            Arc::new(MockEngine::paper_zoo()),
+            clock.clone(),
+        ));
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        (p, clock)
+    }
+
+    #[test]
+    fn warm_probe_discards_first_and_measures_25() {
+        let (p, _) = platform_manual();
+        let report = run_closed_loop(&p, "sq", &WarmProbe::default(), 1);
+        assert_eq!(report.samples.len(), 25);
+        assert_eq!(report.discarded, 1);
+        // The discarded request absorbed the cold start.
+        assert_eq!(report.cold_count(), 0, "all measured requests warm");
+        assert!(report.latencies_s().iter().all(|l| *l > 0.0));
+        // Latency strictly exceeds prediction (network component).
+        for s in report.ok_samples() {
+            assert!(s.latency > s.predict);
+        }
+    }
+
+    #[test]
+    fn cold_probe_all_cold() {
+        let (p, _) = platform_manual();
+        let report = run_closed_loop(&p, "sq", &ColdProbe::default(), 2);
+        assert_eq!(report.samples.len(), 5);
+        assert_eq!(report.cold_count(), 5, "10-minute gaps exceed keep-alive");
+        // Cold latencies dominated by bootstrap.
+        let lat = report.latencies_s();
+        assert!(lat.iter().all(|l| *l > 1.0), "{lat:?}");
+    }
+
+    #[test]
+    fn closed_loop_advances_clock_by_schedule() {
+        let (p, clock) = platform_manual();
+        run_closed_loop(&p, "sq", &ColdProbe::default(), 3);
+        // 4 gaps of 600 s plus execution time.
+        assert!(clock.now() >= 4 * 600 * 1_000_000_000);
+    }
+
+    #[test]
+    fn unknown_function_counts_failed() {
+        let (p, _) = platform_manual();
+        let report = run_closed_loop(&p, "nope", &WarmProbe::default(), 4);
+        // All 26 attempts fail (the discarded warm-up request too);
+        // only 25 samples are kept.
+        assert_eq!(report.failed, 26);
+        assert_eq!(report.ok_samples().len(), 0);
+    }
+
+    #[test]
+    fn open_loop_serves_ramp() {
+        // Real clock; tiny ramp so the test is fast.
+        let p = Arc::new(Invoker::live(
+            PlatformConfig {
+                bootstrap: crate::configparse::BootstrapConfig {
+                    simulate_delays: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(MockEngine::new(vec![crate::runtime::MockModelCosts::paper_like(
+                "fast", 5, 5.0, 85,
+            )])),
+        ));
+        p.deploy("f", "fast", "pallas", 1536).unwrap();
+        let ramp = StepRamp {
+            initial_rps: 20.0,
+            increment_rps: 20.0,
+            step: Duration::from_millis(500),
+            steps: 2,
+        };
+        let report = run_open_loop(&p, "f", &ramp, 5, 64);
+        assert_eq!(report.samples.len(), 30); // 10 + 20 arrivals
+        assert_eq!(report.failed, 0);
+        assert!(report.cold_count() >= 1);
+        // Some containers were reused across the ramp.
+        assert!(p.pool.total_alive() <= 30);
+    }
+}

@@ -1,0 +1,23 @@
+//! Workload generators — the JMeter analog.
+//!
+//! The paper's three request schedules (§3.1, §3.4):
+//!
+//! * **warm probe**: one discarded warm-up request, then 25 sequential
+//!   requests at 1 s intervals;
+//! * **cold probe**: 5 sequential requests separated by 10-minute gaps
+//!   (beyond the keep-alive TTL, forcing a cold start each time);
+//! * **step ramp** (Figure 7): request rate increases by `increment`
+//!   req/s every `step` seconds for `steps` steps.
+//!
+//! plus a Poisson open-loop generator for the ablations. Drivers run
+//! against a [`crate::platform::Platform`] and add the client<->gateway
+//! network model to the platform-side response to produce the
+//! client-observed latency (what JMeter measured).
+
+mod diurnal;
+mod driver;
+mod schedule;
+
+pub use diurnal::DiurnalTrace;
+pub use driver::{run_closed_loop, run_open_loop, ClientSample, DriverReport};
+pub use schedule::{ColdProbe, PoissonArrivals, Schedule, StepRamp, WarmProbe};

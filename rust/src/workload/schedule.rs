@@ -1,0 +1,186 @@
+//! Request schedules: when does each request start, relative to t=0.
+
+use crate::util::SplitMix64;
+use std::time::Duration;
+
+/// A schedule yields the absolute start offset of each request.
+pub trait Schedule {
+    /// Offsets (sorted, from experiment start) of every request.
+    fn arrivals(&self) -> Vec<Duration>;
+
+    /// Requests whose measurements should be discarded (JMeter-style
+    /// warm-up). Indices into `arrivals()`.
+    fn discard_prefix(&self) -> usize {
+        0
+    }
+}
+
+/// §3.1: "send a request, disregard it, then send 25 sequential
+/// requests separated by one-second intervals".
+pub struct WarmProbe {
+    pub requests: usize,
+    pub interval: Duration,
+}
+
+impl Default for WarmProbe {
+    fn default() -> Self {
+        Self { requests: 25, interval: Duration::from_secs(1) }
+    }
+}
+
+impl Schedule for WarmProbe {
+    fn arrivals(&self) -> Vec<Duration> {
+        // +1 for the discarded warm-up request at t=0.
+        (0..=self.requests).map(|i| self.interval * i as u32).collect()
+    }
+
+    fn discard_prefix(&self) -> usize {
+        1
+    }
+}
+
+/// §3.1: "5 sequential requests separated by 10 minutes of wait time".
+pub struct ColdProbe {
+    pub requests: usize,
+    pub gap: Duration,
+}
+
+impl Default for ColdProbe {
+    fn default() -> Self {
+        Self { requests: 5, gap: Duration::from_secs(600) }
+    }
+}
+
+impl Schedule for ColdProbe {
+    fn arrivals(&self) -> Vec<Duration> {
+        (0..self.requests).map(|i| self.gap * i as u32).collect()
+    }
+}
+
+/// Figure 7: start at `initial_rps`, add `increment_rps` every
+/// `step` seconds, for `steps` steps. Arrivals are uniformly spaced
+/// within each step.
+pub struct StepRamp {
+    pub initial_rps: f64,
+    pub increment_rps: f64,
+    pub step: Duration,
+    pub steps: usize,
+}
+
+impl StepRamp {
+    /// The paper's configuration: 10 req/s initial, +10 req/s per
+    /// 10-second step, 10 steps.
+    pub fn paper() -> Self {
+        Self { initial_rps: 10.0, increment_rps: 10.0, step: Duration::from_secs(10), steps: 10 }
+    }
+
+    /// A scaled-down ramp with the same shape for quick benches.
+    pub fn scaled(factor: f64) -> Self {
+        Self {
+            initial_rps: 10.0 * factor,
+            increment_rps: 10.0 * factor,
+            step: Duration::from_secs(2),
+            steps: 5,
+        }
+    }
+
+    /// Request rate during step `k` (0-based).
+    pub fn rate_at_step(&self, k: usize) -> f64 {
+        self.initial_rps + self.increment_rps * k as f64
+    }
+}
+
+impl Schedule for StepRamp {
+    fn arrivals(&self) -> Vec<Duration> {
+        let mut out = Vec::new();
+        let step_s = self.step.as_secs_f64();
+        for k in 0..self.steps {
+            let rate = self.rate_at_step(k);
+            let n = (rate * step_s).round() as usize;
+            let t0 = step_s * k as f64;
+            for i in 0..n {
+                out.push(Duration::from_secs_f64(t0 + step_s * i as f64 / n.max(1) as f64));
+            }
+        }
+        out
+    }
+}
+
+/// Open-loop Poisson arrivals at `rps` for `duration` (ablations).
+pub struct PoissonArrivals {
+    pub rps: f64,
+    pub duration: Duration,
+    pub seed: u64,
+}
+
+impl Schedule for PoissonArrivals {
+    fn arrivals(&self) -> Vec<Duration> {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        while t < self.duration.as_secs_f64() {
+            t += rng.exponential(1.0 / self.rps);
+            if t < self.duration.as_secs_f64() {
+                out.push(Duration::from_secs_f64(t));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_probe_matches_paper() {
+        let s = WarmProbe::default();
+        let a = s.arrivals();
+        assert_eq!(a.len(), 26, "1 discarded + 25 measured");
+        assert_eq!(s.discard_prefix(), 1);
+        assert_eq!(a[1] - a[0], Duration::from_secs(1));
+        assert_eq!(*a.last().unwrap(), Duration::from_secs(25));
+    }
+
+    #[test]
+    fn cold_probe_matches_paper() {
+        let s = ColdProbe::default();
+        let a = s.arrivals();
+        assert_eq!(a.len(), 5);
+        assert_eq!(a[4], Duration::from_secs(2400), "10-minute gaps");
+        assert_eq!(s.discard_prefix(), 0);
+    }
+
+    #[test]
+    fn step_ramp_paper_counts() {
+        let s = StepRamp::paper();
+        let a = s.arrivals();
+        // 10*10 + 20*10 + ... + 100*10 = 10s * (10+...+100) = 5500.
+        assert_eq!(a.len(), 5500);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        assert_eq!(s.rate_at_step(0), 10.0);
+        assert_eq!(s.rate_at_step(9), 100.0);
+        // Last step's arrivals all within [90s, 100s).
+        let last_step: Vec<_> =
+            a.iter().filter(|t| **t >= Duration::from_secs(90)).collect();
+        assert_eq!(last_step.len(), 1000);
+    }
+
+    #[test]
+    fn step_ramp_scaled_preserves_shape() {
+        let s = StepRamp::scaled(0.5);
+        assert_eq!(s.steps, 5);
+        assert_eq!(s.rate_at_step(1) / s.rate_at_step(0), 2.0);
+    }
+
+    #[test]
+    fn poisson_rate_close() {
+        let s = PoissonArrivals { rps: 50.0, duration: Duration::from_secs(100), seed: 1 };
+        let a = s.arrivals();
+        let rate = a.len() as f64 / 100.0;
+        assert!((rate - 50.0).abs() < 5.0, "rate={rate}");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // Deterministic for a seed.
+        assert_eq!(a, PoissonArrivals { rps: 50.0, duration: Duration::from_secs(100), seed: 1 }.arrivals());
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration tests over the REAL artifacts (run `make artifacts`
+//! first): PJRT engine round-trip, platform cold/warm semantics on
+//! real inference, and pallas-vs-ref numeric agreement across the
+//! python/rust boundary.
+//!
+//! One shared engine keeps compile cost bounded; tests take care to be
+//! independent of ordering.
+
+use lambdaserve::configparse::{BootstrapConfig, PlatformConfig};
+use lambdaserve::platform::{Invoker, StartKind};
+use lambdaserve::runtime::{Engine, PjrtEngine};
+use lambdaserve::util::{Clock as _, ManualClock};
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+fn shared_engine() -> Arc<PjrtEngine> {
+    static ENGINE: OnceLock<Arc<PjrtEngine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            Arc::new(
+                PjrtEngine::new(artifacts_dir(), 1)
+                    .expect("run `make artifacts` before `cargo test`"),
+            )
+        })
+        .clone()
+}
+
+#[test]
+fn zoo_lists_three_paper_models() {
+    let engine = shared_engine();
+    for (name, size_mb, peak) in
+        [("squeezenet", 5.0, 85), ("resnet18", 46.7, 229), ("resnext50", 100.0, 429)]
+    {
+        let m = engine.manifest(name).unwrap();
+        assert!((m.param_bytes as f64 / 1e6 - size_mb).abs() < 1.0, "{name}");
+        assert_eq!(m.paper_peak_mem_mb, peak);
+        assert_eq!(m.input_shape, vec![1, 224, 224, 3]);
+        assert!(m.artifacts.contains_key("pallas") && m.artifacts.contains_key("ref"));
+    }
+}
+
+#[test]
+fn squeezenet_predict_roundtrip() {
+    let engine = shared_engine();
+    let (h, stats) = engine.create_instance("squeezenet", "pallas").unwrap();
+    // Weight bytes match the manifest (real init ran).
+    assert_eq!(stats.weight_bytes, engine.manifest("squeezenet").unwrap().param_bytes);
+    assert!(stats.init_run.as_secs_f64() > 0.0);
+
+    let p1 = engine.predict(&h, 42).unwrap();
+    assert!((0..1000).contains(&p1.top1));
+    assert!(p1.top_prob > 0.0 && p1.top_prob <= 1.0);
+    assert!(p1.compute.as_secs_f64() > 0.001, "real compute happened");
+
+    // Same seed -> identical prediction (deterministic artifact).
+    let p2 = engine.predict(&h, 42).unwrap();
+    assert_eq!(p1.top1, p2.top1);
+    assert_eq!(p1.top_prob, p2.top_prob);
+
+    engine.drop_instance(&h);
+}
+
+#[test]
+fn pallas_and_ref_artifacts_agree() {
+    // The L1 correctness signal ACROSS the language boundary: the
+    // artifact with Pallas kernels and the pure-XLA reference must
+    // classify identically (same weights, same image).
+    let engine = shared_engine();
+    let (hp, _) = engine.create_instance("squeezenet", "pallas").unwrap();
+    let (hr, _) = engine.create_instance("squeezenet", "ref").unwrap();
+    for seed in [1u64, 7, 99] {
+        let a = engine.predict(&hp, seed).unwrap();
+        let b = engine.predict(&hr, seed).unwrap();
+        assert_eq!(a.top1, b.top1, "seed {seed}");
+        assert!((a.top_prob - b.top_prob).abs() < 1e-3, "seed {seed}");
+    }
+    engine.drop_instance(&hp);
+    engine.drop_instance(&hr);
+}
+
+#[test]
+fn platform_cold_warm_on_real_inference() {
+    let engine = shared_engine();
+    let clock = ManualClock::new();
+    let config = PlatformConfig {
+        bootstrap: BootstrapConfig::default(),
+        ..Default::default()
+    };
+    let p = Invoker::new(config, engine.clone(), clock.clone());
+    p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+
+    let cold = p.invoke("sq", 1).unwrap();
+    assert_eq!(cold.record.start, StartKind::Cold);
+    assert!(cold.record.model_load.as_secs_f64() > 0.0, "real model load counted");
+    assert!(cold.record.predict > cold.record.predict_full_speed, "throttled at 1024 MB");
+
+    let warm = p.invoke("sq", 2).unwrap();
+    assert_eq!(warm.record.start, StartKind::Warm);
+    assert!(warm.record.response() < cold.record.response());
+
+    // 10-minute gap (manual clock) -> eviction -> cold again.
+    clock.sleep(std::time::Duration::from_secs(600));
+    let again = p.invoke("sq", 3).unwrap();
+    assert_eq!(again.record.start, StartKind::Cold);
+}
+
+#[test]
+fn throttle_scales_real_predict_time() {
+    let engine = shared_engine();
+    let clock = ManualClock::new();
+    let p = Invoker::new(PlatformConfig::default(), engine.clone(), clock);
+    p.deploy("small", "squeezenet", "pallas", 256).unwrap();
+    p.deploy("big", "squeezenet", "pallas", 1536).unwrap();
+    p.invoke("small", 0).unwrap();
+    p.invoke("big", 0).unwrap();
+    let small = p.invoke("small", 5).unwrap().record;
+    let big = p.invoke("big", 5).unwrap().record;
+    let ratio = small.predict.as_secs_f64() / big.predict.as_secs_f64();
+    // share ratio = 1536/256 = 6, modulo real-compute jitter.
+    assert!(ratio > 3.0, "memory throttling visible on real compute: {ratio}");
+}

@@ -1,0 +1,142 @@
+//! End-to-end platform integration on the mock engine: gateway HTTP
+//! round-trips over full workloads, multi-function isolation, and the
+//! experiment harness invariants that don't need real artifacts.
+
+use lambdaserve::configparse::{BootstrapConfig, PlatformConfig};
+use lambdaserve::gateway::Gateway;
+use lambdaserve::httpd::{http_get, http_post};
+use lambdaserve::platform::{Invoker, StartKind};
+use lambdaserve::runtime::{MockEngine, MockModelCosts};
+use lambdaserve::util::json::Json;
+use lambdaserve::util::ManualClock;
+use lambdaserve::workload::{run_closed_loop, PoissonArrivals, WarmProbe};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fast_config() -> PlatformConfig {
+    PlatformConfig {
+        bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn fast_engine() -> Arc<MockEngine> {
+    Arc::new(MockEngine::new(vec![
+        MockModelCosts::paper_like("squeezenet", 3, 5.0, 85),
+        MockModelCosts::paper_like("resnet18", 5, 46.7, 229),
+    ]))
+}
+
+#[test]
+fn multi_function_pools_are_isolated() {
+    let clock = ManualClock::new();
+    let p = Invoker::new(PlatformConfig::default(), fast_engine(), clock);
+    p.deploy("a", "squeezenet", "pallas", 512).unwrap();
+    p.deploy("b", "resnet18", "pallas", 512).unwrap();
+
+    p.invoke("a", 1).unwrap();
+    // b's first invoke is cold even though a has a warm container.
+    let rb = p.invoke("b", 1).unwrap();
+    assert_eq!(rb.record.start, StartKind::Cold);
+    assert_eq!(p.pool.warm_count("a"), 1);
+    assert_eq!(p.pool.warm_count("b"), 1);
+    // Each reuses its own.
+    assert_eq!(p.invoke("a", 2).unwrap().record.start, StartKind::Warm);
+    assert_eq!(p.invoke("b", 2).unwrap().record.start, StartKind::Warm);
+    assert_eq!(p.pool.total_alive(), 2);
+}
+
+#[test]
+fn poisson_day_simulation_costs_track_billing() {
+    let clock = ManualClock::new();
+    let p = Invoker::new(PlatformConfig::default(), fast_engine(), clock);
+    p.deploy("a", "squeezenet", "pallas", 1024).unwrap();
+    let sched =
+        PoissonArrivals { rps: 0.01, duration: Duration::from_secs(6 * 3600), seed: 3 };
+    let report = run_closed_loop(&p, "a", &sched, 17);
+    assert!(!report.samples.is_empty());
+    assert!((report.total_cost() - p.billing.total_dollars()).abs() < 1e-12);
+    // Sparse traffic (mean gap 100 s) with a 300 s TTL: mixed cold/warm.
+    let cold = report.cold_count();
+    assert!(cold > 0 && cold < report.samples.len(), "cold={cold}");
+}
+
+#[test]
+fn gateway_serves_warm_probe_over_http() {
+    let p = Arc::new(Invoker::live(fast_config(), fast_engine()));
+    p.deploy("sq", "squeezenet", "pallas", 1536).unwrap();
+    let gw = Gateway::bind("127.0.0.1:0", 8, p.clone()).unwrap();
+    let addr = gw.local_addr().to_string();
+    let sh = gw.shutdown_handle();
+    let t = std::thread::spawn(move || gw.serve().unwrap());
+    let tmo = Duration::from_secs(10);
+
+    // JMeter-style warm probe over real HTTP: discard one, measure 10.
+    let mut latencies = Vec::new();
+    for i in 0..11 {
+        let t0 = std::time::Instant::now();
+        let r = http_get(&addr, &format!("/v1/invoke/sq?seed={i}"), tmo).unwrap();
+        assert_eq!(r.status, 200);
+        if i > 0 {
+            latencies.push(t0.elapsed());
+        }
+        let j = Json::parse(&r.body_str()).unwrap();
+        let expect = if i == 0 { "cold" } else { "warm" };
+        assert_eq!(j.get("start").unwrap().as_str(), Some(expect), "request {i}");
+    }
+    assert_eq!(latencies.len(), 10);
+
+    let stats = http_get(&addr, "/v1/stats", tmo).unwrap();
+    let j = Json::parse(&stats.body_str()).unwrap();
+    assert_eq!(j.get("invocations").unwrap().as_u64(), Some(11));
+    assert_eq!(j.get("cold_starts").unwrap().as_u64(), Some(1));
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn gateway_throttles_with_429() {
+    let config = PlatformConfig { max_containers: 1, ..fast_config() };
+    let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+        "squeezenet",
+        300, // slow enough to hold the one container busy
+        5.0,
+        85,
+    )]));
+    let p = Arc::new(Invoker::live(config, engine));
+    p.deploy("sq", "squeezenet", "pallas", 1536).unwrap();
+    let gw = Gateway::bind("127.0.0.1:0", 8, p).unwrap();
+    let addr = gw.local_addr().to_string();
+    let sh = gw.shutdown_handle();
+    let t = std::thread::spawn(move || gw.serve().unwrap());
+    let tmo = Duration::from_secs(30);
+
+    // Two concurrent requests against capacity 1: one succeeds, the
+    // other gets 429.
+    let a1 = addr.clone();
+    let h1 = std::thread::spawn(move || http_get(&a1, "/v1/invoke/sq?seed=1", tmo).unwrap().status);
+    std::thread::sleep(Duration::from_millis(50));
+    let s2 = http_get(&addr, "/v1/invoke/sq?seed=2", tmo).unwrap().status;
+    let s1 = h1.join().unwrap();
+    assert_eq!(s1, 200);
+    assert_eq!(s2, 429, "second concurrent request throttled");
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn warm_probe_latency_decomposition_holds() {
+    // latency = network + queue + (cold parts) + predict; verify the
+    // identity on every sample of a probe.
+    let clock = ManualClock::new();
+    let p = Invoker::new(PlatformConfig::default(), fast_engine(), clock);
+    p.deploy("a", "squeezenet", "pallas", 512).unwrap();
+    let report = run_closed_loop(&p, "a", &WarmProbe::default(), 5);
+    for s in report.ok_samples() {
+        assert!(s.latency >= s.predict, "{s:?}");
+        // network floor: rtt 35 ms.
+        assert!(s.latency - s.predict >= Duration::from_millis(35), "{s:?}");
+    }
+}
