@@ -1,0 +1,88 @@
+//! v2 API tour through the typed client SDK: boot a gateway on the
+//! mock engine, then deploy / invoke (sync + async) / stats /
+//! reconfigure / undeploy over real HTTP.
+//!
+//! ```sh
+//! cargo run --example v2_client
+//! ```
+
+use lambdaserve::configparse::{BootstrapConfig, PlatformConfig};
+use lambdaserve::gateway::{ApiClient, DeploySpec, Gateway, ReconfigureSpec};
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::MockEngine;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // Gateway on an ephemeral port, mock engine, no simulated
+    // bootstrap delays (the paper-calibrated cold-start components
+    // would otherwise make this tour take seconds).
+    let config = PlatformConfig {
+        bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+        ..Default::default()
+    };
+    let platform = Arc::new(Invoker::live(config, Arc::new(MockEngine::paper_zoo())));
+    let gw = Gateway::bind("127.0.0.1:0", 8, platform)?;
+    let addr = gw.local_addr().to_string();
+    let shutdown = gw.shutdown_handle();
+    let server = std::thread::spawn(move || gw.serve());
+    println!("gateway: http://{addr}");
+
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(60));
+
+    // Deploy with the full v2 spec: memory, warm-pool policy, cap.
+    let f = api.deploy(
+        &DeploySpec::new("classify", "squeezenet")
+            .memory_mb(1024)
+            .min_warm(1)
+            .max_concurrency(8),
+    )?;
+    println!(
+        "deployed {} ({} @ {} MB, min_warm={}, warm={})",
+        f.name, f.model, f.memory_mb, f.min_warm, f.warm_containers
+    );
+
+    // Sync invocations: the first rides the pre-warmed container.
+    for seed in [1u64, 2] {
+        let r = api.invoke("classify", Some(seed))?;
+        println!(
+            "sync  seed={seed}: top1={} start={} response={:.3}s billed={}ms",
+            r.top1, r.start, r.response_s, r.billed_ms
+        );
+    }
+
+    // Async invocation: 202 + id, then poll.
+    let id = api.invoke_async("classify", Some(3))?;
+    println!("async seed=3: accepted as {id}");
+    let done = api.wait_invocation(&id, Duration::from_millis(20), Duration::from_secs(60))?;
+    if let Some(r) = done.result {
+        println!(
+            "async seed=3: {} start={} response={:.3}s billed={}ms",
+            done.status, r.start, r.response_s, r.billed_ms
+        );
+    }
+
+    // Per-function stats.
+    let s = api.stats("classify")?;
+    println!(
+        "stats: {} invocations ({} cold), mean response {:.3}s, total ${:.8}",
+        s.invocations, s.cold_starts, s.response_mean_s, s.cost_dollars_total
+    );
+
+    // Reconfigure to a bigger memory tier (cycles warm containers).
+    let f = api.reconfigure(
+        "classify",
+        &ReconfigureSpec { memory_mb: Some(1536), ..Default::default() },
+    )?;
+    println!("reconfigured to {} MB", f.memory_mb);
+    let r = api.invoke("classify", Some(4))?;
+    println!("post-reconfigure: start={} (cold: spec changed)", r.start);
+
+    // Undeploy and shut down.
+    let reaped = api.undeploy("classify")?;
+    println!("undeployed ({reaped} containers reaped)");
+
+    shutdown.shutdown();
+    server.join().unwrap()?;
+    Ok(())
+}

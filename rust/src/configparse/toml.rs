@@ -50,12 +50,19 @@ impl TomlValue {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Flat map: `section.key` (or `section.sub.key`) -> value.
 pub type TomlDoc = BTreeMap<String, TomlValue>;

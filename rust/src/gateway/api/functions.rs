@@ -1,0 +1,155 @@
+//! `/v2/functions` resource handlers: deploy (POST), list (GET), get
+//! (GET /:name), reconfigure (PATCH /:name), undeploy (DELETE /:name).
+
+use super::{err, json_body, opt_str, opt_u32, opt_u64, ApiCtx};
+use crate::httpd::{HttpRequest, Params, Responder};
+use crate::platform::{FunctionSpec, ReconfigurePatch};
+use crate::util::json::{obj, Json};
+use std::sync::Arc;
+
+/// Canonical JSON representation of a deployed function.
+pub(crate) fn function_json(ctx: &ApiCtx, spec: &Arc<FunctionSpec>) -> Json {
+    obj(vec![
+        ("name", Json::Str(spec.name.clone())),
+        ("model", Json::Str(spec.model.clone())),
+        ("variant", Json::Str(spec.variant.clone())),
+        ("memory_mb", Json::Num(spec.memory_mb as f64)),
+        ("min_warm", Json::Num(spec.min_warm as f64)),
+        (
+            "max_concurrency",
+            match spec.max_concurrency {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        ),
+        ("peak_mem_mb", Json::Num(spec.peak_mem_mb as f64)),
+        ("package_mb", Json::Num(spec.package_bytes as f64 / 1e6)),
+        ("warm_containers", Json::Num(ctx.platform.pool.warm_count(&spec.name) as f64)),
+    ])
+}
+
+/// `POST /v2/functions` — deploy from a JSON spec. 201 on success,
+/// 409 when the name is already taken (PATCH is the reconfigure verb).
+pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
+    let body = match json_body(req) {
+        Ok(b) => b,
+        Err(r) => return r,
+    };
+    let name = match body.get("name").and_then(Json::as_str) {
+        Some(n) => n.to_string(),
+        None => return err(400, "missing_field", "body field \"name\" (string) is required"),
+    };
+    let model = match body.get("model").and_then(Json::as_str) {
+        Some(m) => m.to_string(),
+        None => return err(400, "missing_field", "body field \"model\" (string) is required"),
+    };
+    let variant = match opt_str(&body, "variant") {
+        Ok(v) => v.unwrap_or_else(|| "pallas".to_string()),
+        Err(r) => return r,
+    };
+    let memory_mb = match opt_u32(&body, "memory_mb") {
+        Ok(v) => v.unwrap_or(1024),
+        Err(r) => return r,
+    };
+    let min_warm = match opt_u64(&body, "min_warm") {
+        Ok(v) => v.unwrap_or(0) as usize,
+        Err(r) => return r,
+    };
+    let max_concurrency = match opt_u64(&body, "max_concurrency") {
+        Ok(v) => v.map(|x| x as usize),
+        Err(r) => return r,
+    };
+    let conflict = || {
+        err(
+            409,
+            "already_exists",
+            &format!(
+                "function {name:?} is already deployed; PATCH /v2/functions/{name} to reconfigure"
+            ),
+        )
+    };
+    if ctx.platform.registry.get(&name).is_ok() {
+        return conflict();
+    }
+    // create_full is insert-if-absent, so two racing creates cannot
+    // both succeed; the loser maps to the same 409 as the pre-check.
+    match ctx.platform.create_full(&name, &model, &variant, memory_mb, min_warm, max_concurrency) {
+        Ok(spec) => Responder::json(201, function_json(ctx, &spec).to_string()),
+        Err(_) if ctx.platform.registry.get(&name).is_ok() => conflict(),
+        Err(e) => err(400, "invalid_deployment", &format!("{e:#}")),
+    }
+}
+
+/// `GET /v2/functions` — list deployments.
+pub fn list(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Responder {
+    let functions: Vec<Json> =
+        ctx.platform.registry.list().iter().map(|spec| function_json(ctx, spec)).collect();
+    Responder::json(200, obj(vec![("functions", Json::Arr(functions))]).to_string())
+}
+
+/// `GET /v2/functions/:name`.
+pub fn get_one(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
+    let name = params.require("name");
+    match ctx.platform.registry.get(name) {
+        Ok(spec) => Responder::json(200, function_json(ctx, &spec).to_string()),
+        Err(_) => err(404, "not_found", &format!("function {name:?} is not deployed")),
+    }
+}
+
+/// `PATCH /v2/functions/:name` — partial reconfigure. Fields absent
+/// from the body keep their value; `"max_concurrency": null` clears
+/// the cap.
+pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
+    let name = params.require("name");
+    if ctx.platform.registry.get(name).is_err() {
+        return err(404, "not_found", &format!("function {name:?} is not deployed"));
+    }
+    let body = match json_body(req) {
+        Ok(b) => b,
+        Err(r) => return r,
+    };
+    let memory_mb = match opt_u32(&body, "memory_mb") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
+    let variant = match opt_str(&body, "variant") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
+    let min_warm = match opt_u64(&body, "min_warm") {
+        Ok(v) => v.map(|x| x as usize),
+        Err(r) => return r,
+    };
+    // Tri-state: absent = keep, null = clear, integer = set.
+    let max_concurrency = match body.get("max_concurrency") {
+        None => None,
+        Some(Json::Null) => Some(None),
+        Some(v) => match v.as_u64() {
+            Some(n) => Some(Some(n as usize)),
+            None => {
+                return err(400, "invalid_field", "max_concurrency must be an integer or null")
+            }
+        },
+    };
+    let patch = ReconfigurePatch { memory_mb, variant, min_warm, max_concurrency };
+    match ctx.platform.reconfigure(name, &patch) {
+        Ok(spec) => Responder::json(200, function_json(ctx, &spec).to_string()),
+        Err(e) => err(400, "invalid_reconfigure", &format!("{e:#}")),
+    }
+}
+
+/// `DELETE /v2/functions/:name` — undeploy and reap warm containers.
+pub fn delete(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
+    let name = params.require("name");
+    match ctx.platform.undeploy(name) {
+        Ok(reaped) => Responder::json(
+            200,
+            obj(vec![
+                ("deleted", Json::Str(name.to_string())),
+                ("reaped_containers", Json::Num(reaped as f64)),
+            ])
+            .to_string(),
+        ),
+        Err(_) => err(404, "not_found", &format!("function {name:?} is not deployed")),
+    }
+}

@@ -1,0 +1,122 @@
+//! Invocation handlers: sync + async `POST
+//! /v2/functions/:name/invocations` and the async poll endpoint `GET
+//! /v2/invocations/:id`.
+
+use super::{err, json_body, ApiCtx};
+use crate::httpd::{HttpRequest, Params, Responder};
+use crate::platform::{AsyncInvocation, InvocationRecord, InvokeError};
+use crate::runtime::Prediction;
+use crate::util::json::{obj, Json};
+use std::sync::atomic::Ordering;
+
+/// Canonical JSON for one completed invocation (shared by the sync
+/// response, the async result payload, and `/v1/invoke`'s superset).
+pub(crate) fn invocation_json(record: &InvocationRecord, prediction: &Prediction) -> Json {
+    obj(vec![
+        ("function", Json::Str(record.function.clone())),
+        ("start", Json::Str(record.start.to_string())),
+        ("top1", Json::Num(prediction.top1 as f64)),
+        ("top_prob", Json::Num(prediction.top_prob as f64)),
+        ("memory_mb", Json::Num(record.memory_mb as f64)),
+        ("queue_s", Json::Num(record.queue.as_secs_f64())),
+        ("predict_s", Json::Num(record.predict.as_secs_f64())),
+        ("cold_overhead_s", Json::Num(record.cold_overhead().as_secs_f64())),
+        ("response_s", Json::Num(record.response().as_secs_f64())),
+        ("billed_ms", Json::Num(record.billed_ms as f64)),
+        ("cost_dollars", Json::Num(record.cost_dollars)),
+    ])
+}
+
+/// `POST /v2/functions/:name/invocations` — body `{"seed": N}`
+/// optional; `?mode=async` (or body `"mode"`) switches to
+/// fire-and-forget and returns `202` + invocation id.
+pub fn create(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
+    let name = params.require("name");
+    let body = match json_body(req) {
+        Ok(b) => b,
+        Err(r) => return r,
+    };
+    let seed = body
+        .get("seed")
+        .and_then(Json::as_u64)
+        .or_else(|| req.query_param("seed").and_then(|s| s.parse().ok()))
+        .unwrap_or_else(|| ctx.seq.fetch_add(1, Ordering::Relaxed));
+    let mode = req
+        .query_param("mode")
+        .map(str::to_string)
+        .or_else(|| body.get("mode").and_then(Json::as_str).map(str::to_string))
+        .unwrap_or_else(|| "sync".to_string());
+    match mode.as_str() {
+        "sync" => sync_invoke(ctx, name, seed),
+        "async" => async_invoke(ctx, name, seed),
+        other => {
+            err(400, "invalid_mode", &format!("mode must be \"sync\" or \"async\", got {other:?}"))
+        }
+    }
+}
+
+fn sync_invoke(ctx: &ApiCtx, name: &str, seed: u64) -> Responder {
+    match ctx.platform.invoke(name, seed) {
+        Ok(out) => Responder::json(200, invocation_json(&out.record, &out.prediction).to_string()),
+        Err(InvokeError::NotFound(f)) => {
+            err(404, "not_found", &format!("function {f:?} is not deployed"))
+        }
+        Err(InvokeError::Throttled) => err(429, "throttled", "container capacity exhausted"),
+        Err(InvokeError::Failed(e)) => err(500, "execution_failed", &format!("{e:#}")),
+    }
+}
+
+fn async_invoke(ctx: &ApiCtx, name: &str, seed: u64) -> Responder {
+    // Fail fast on unknown functions so the 404 arrives at submit
+    // time, not buried in a failed result.
+    if ctx.platform.registry.get(name).is_err() {
+        return err(404, "not_found", &format!("function {name:?} is not deployed"));
+    }
+    match ctx.async_inv.submit(name, seed) {
+        Ok(id) => Responder::json(
+            202,
+            obj(vec![
+                ("invocation_id", Json::Str(id)),
+                ("function", Json::Str(name.to_string())),
+                ("status", Json::Str("queued".to_string())),
+            ])
+            .to_string(),
+        ),
+        Err(e) => err(429, "queue_full", &e.to_string()),
+    }
+}
+
+/// `GET /v2/invocations/:id` — poll an async invocation.
+pub fn get_one(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
+    let id = params.require("id");
+    match ctx.async_inv.get(id) {
+        Some(entry) => Responder::json(200, async_json(&entry).to_string()),
+        None => err(
+            404,
+            "not_found",
+            &format!("invocation {id:?} is unknown or its result expired"),
+        ),
+    }
+}
+
+fn async_json(entry: &AsyncInvocation) -> Json {
+    obj(vec![
+        ("id", Json::Str(entry.id.clone())),
+        ("function", Json::Str(entry.function.clone())),
+        ("status", Json::Str(entry.status.as_str().to_string())),
+        (
+            "result",
+            match (&entry.record, &entry.prediction) {
+                (Some(record), Some(prediction)) => invocation_json(record, prediction),
+                _ => Json::Null,
+            },
+        ),
+        (
+            "error",
+            match &entry.error {
+                Some(e) => Json::Str(e.clone()),
+                None => Json::Null,
+            },
+        ),
+    ])
+}

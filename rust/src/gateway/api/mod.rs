@@ -1,0 +1,107 @@
+//! v2 resource-oriented API: shared context, route table, and JSON
+//! helpers. Handlers live in [`functions`], [`invocations`],
+//! [`stats`]; the legacy `/v1` query-string surface is kept alive as
+//! thin shims in [`v1`].
+//!
+//! Every v2 error response uses the structured envelope
+//! `{"error": {"code": "...", "message": "..."}}` (v1 shims keep their
+//! historical flat `{"error": "..."}` shape).
+
+pub mod functions;
+pub mod invocations;
+pub mod stats;
+pub mod v1;
+
+use crate::httpd::{error_envelope, HttpRequest, Params, Responder, Router};
+use crate::platform::{AsyncInvoker, Platform};
+use crate::util::json::{obj, Json};
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+/// Shared state threaded through every handler.
+pub struct ApiCtx {
+    pub platform: Arc<Platform>,
+    pub async_inv: Arc<AsyncInvoker>,
+    /// Fallback image-seed sequence when the caller doesn't pass one.
+    pub seq: AtomicU64,
+}
+
+/// Structured error response (the v2 envelope).
+pub fn err(status: u16, code: &str, message: &str) -> Responder {
+    Responder::json(status, error_envelope(code, message))
+}
+
+/// Parse the request body as JSON; an empty body reads as `{}` so
+/// endpoints whose fields all have defaults accept bare POSTs.
+pub fn json_body(req: &HttpRequest) -> Result<Json, Responder> {
+    if req.body.is_empty() {
+        return Ok(obj(vec![]));
+    }
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return Err(err(400, "invalid_body", "request body is not valid UTF-8")),
+    };
+    Json::parse(text).map_err(|e| err(400, "invalid_json", &e.to_string()))
+}
+
+/// Optional non-negative integer body field.
+pub fn opt_u64(body: &Json, key: &str) -> Result<Option<u64>, Responder> {
+    match body.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+            err(400, "invalid_field", &format!("field {key:?} must be a non-negative integer"))
+        }),
+    }
+}
+
+/// Optional u32 body field: rejects (rather than truncates) values
+/// over `u32::MAX`.
+pub fn opt_u32(body: &Json, key: &str) -> Result<Option<u32>, Responder> {
+    match opt_u64(body, key)? {
+        None => Ok(None),
+        Some(v) => u32::try_from(v).map(Some).map_err(|_| {
+            err(400, "invalid_field", &format!("field {key:?} is out of range"))
+        }),
+    }
+}
+
+/// Optional string body field.
+pub fn opt_str(body: &Json, key: &str) -> Result<Option<String>, Responder> {
+    match body.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| err(400, "invalid_field", &format!("field {key:?} must be a string"))),
+    }
+}
+
+fn bind(
+    ctx: &Arc<ApiCtx>,
+    f: fn(&ApiCtx, &HttpRequest, &Params) -> Responder,
+) -> impl Fn(&HttpRequest, &Params) -> Responder + Send + Sync + 'static {
+    let ctx = ctx.clone();
+    move |req: &HttpRequest, params: &Params| f(&ctx, req, params)
+}
+
+/// The full route table: v2 resources, v1 shims, health.
+pub fn build_router(ctx: &Arc<ApiCtx>) -> Router {
+    Router::new()
+        .route("GET", "/healthz", |_, _| Responder::text(200, "ok"))
+        // -- v2 resource-oriented surface --------------------------------
+        .route("GET", "/v2/functions", bind(ctx, functions::list))
+        .route("POST", "/v2/functions", bind(ctx, functions::create))
+        .route("GET", "/v2/functions/:name", bind(ctx, functions::get_one))
+        .route("PATCH", "/v2/functions/:name", bind(ctx, functions::patch))
+        .route("DELETE", "/v2/functions/:name", bind(ctx, functions::delete))
+        .route("POST", "/v2/functions/:name/invocations", bind(ctx, invocations::create))
+        .route("GET", "/v2/invocations/:id", bind(ctx, invocations::get_one))
+        .route("GET", "/v2/functions/:name/stats", bind(ctx, stats::function_stats))
+        .route("GET", "/v2/stats", bind(ctx, stats::platform_stats))
+        // -- v1 legacy shims ---------------------------------------------
+        .route("GET", "/v1/functions", bind(ctx, v1::list))
+        .route("POST", "/v1/functions", bind(ctx, v1::deploy))
+        .route("GET", "/v1/invoke/:function", bind(ctx, v1::invoke))
+        .route("POST", "/v1/prewarm/:function", bind(ctx, v1::prewarm))
+        .route("GET", "/v1/stats", bind(ctx, v1::stats))
+}

@@ -1,0 +1,75 @@
+//! Stats handlers: per-function latency/cold-start/billing breakdown
+//! (`GET /v2/functions/:name/stats`) and the platform-wide snapshot
+//! (`GET /v2/stats`).
+
+use super::{err, ApiCtx};
+use crate::httpd::{HttpRequest, Params, Responder};
+use crate::platform::StartKind;
+use crate::util::json::{obj, Json};
+
+/// `GET /v2/functions/:name/stats`.
+pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
+    let name = params.require("name");
+    if ctx.platform.registry.get(name).is_err() {
+        return err(404, "not_found", &format!("function {name:?} is not deployed"));
+    }
+    let metrics = &ctx.platform.metrics;
+    let records = metrics.records();
+    let recs: Vec<_> = records.iter().filter(|r| r.function == name).collect();
+    let cold = recs.iter().filter(|r| r.start == StartKind::Cold).count();
+    let response = metrics.response_summary(|r| r.function == name);
+    let predict = metrics.predict_summary(|r| r.function == name);
+    let billed_ms: u64 = recs.iter().map(|r| r.billed_ms).sum();
+    let cost: f64 = recs.iter().map(|r| r.cost_dollars).sum();
+    let gb_seconds: f64 = ctx
+        .platform
+        .billing
+        .lines()
+        .iter()
+        .filter(|l| l.function == name)
+        .map(|l| l.gb_seconds())
+        .sum();
+    Responder::json(
+        200,
+        obj(vec![
+            ("function", Json::Str(name.to_string())),
+            ("invocations", Json::Num(recs.len() as f64)),
+            ("cold_starts", Json::Num(cold as f64)),
+            ("warm_starts", Json::Num((recs.len() - cold) as f64)),
+            ("response_mean_s", Json::Num(response.mean)),
+            ("response_p50_s", Json::Num(response.p50)),
+            ("response_p95_s", Json::Num(response.p95)),
+            ("response_p99_s", Json::Num(response.p99)),
+            ("predict_mean_s", Json::Num(predict.mean)),
+            ("billed_ms_total", Json::Num(billed_ms as f64)),
+            ("cost_dollars_total", Json::Num(cost)),
+            ("gb_seconds_total", Json::Num(gb_seconds)),
+            ("warm_containers", Json::Num(ctx.platform.pool.warm_count(name) as f64)),
+        ])
+        .to_string(),
+    )
+}
+
+/// `GET /v2/stats` — platform-wide snapshot (superset of `/v1/stats`
+/// with async-subsystem depth).
+pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Responder {
+    let p = &ctx.platform;
+    let m = &p.metrics;
+    Responder::json(
+        200,
+        obj(vec![
+            ("invocations", Json::Num(m.len() as f64)),
+            ("cold_starts", Json::Num(m.cold_count() as f64)),
+            ("functions", Json::Num(p.registry.list().len() as f64)),
+            ("containers_alive", Json::Num(p.pool.total_alive() as f64)),
+            ("in_flight", Json::Num(p.scaler.in_flight() as f64)),
+            ("peak_concurrency", Json::Num(p.scaler.high_water_mark() as f64)),
+            ("throttled", Json::Num(p.scaler.throttled_count() as f64)),
+            ("total_cost_dollars", Json::Num(p.billing.total_dollars())),
+            ("total_gb_seconds", Json::Num(p.billing.total_gb_seconds())),
+            ("async_queued", Json::Num(ctx.async_inv.queued() as f64)),
+            ("async_results_stored", Json::Num(ctx.async_inv.stored() as f64)),
+        ])
+        .to_string(),
+    )
+}

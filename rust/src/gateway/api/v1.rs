@@ -1,0 +1,128 @@
+//! `/v1` legacy shims — byte-compatible with the original query-string
+//! gateway on every previously-valid request, so existing experiments,
+//! the load generator, and the seed integration tests keep passing
+//! unmodified. Two router-level error paths intentionally differ from
+//! the old ad-hoc `match`: unknown routes 404 with the structured
+//! envelope (was flat `{"error": "no such route"}`), and a known path
+//! hit with the wrong method now returns 405 instead of 404. New
+//! clients should use `/v2` (see API.md).
+
+use super::ApiCtx;
+use crate::httpd::{HttpRequest, Params, Responder};
+use crate::platform::InvokeError;
+use crate::util::json::{obj, Json};
+use std::sync::atomic::Ordering;
+
+/// v1 kept the flat error shape `{"error": "msg"}`.
+fn v1_err(msg: &str) -> String {
+    obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// `GET /v1/functions` — bare array of deployment summaries.
+pub fn list(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Responder {
+    let fns: Vec<Json> = ctx
+        .platform
+        .registry
+        .list()
+        .into_iter()
+        .map(|f| {
+            obj(vec![
+                ("name", Json::Str(f.name.clone())),
+                ("model", Json::Str(f.model.clone())),
+                ("variant", Json::Str(f.variant.clone())),
+                ("memory_mb", Json::Num(f.memory_mb as f64)),
+            ])
+        })
+        .collect();
+    Responder::json(200, Json::Arr(fns).to_string())
+}
+
+/// `POST /v1/functions?name=&model=&variant=&mem=` — redeploy allowed.
+pub fn deploy(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
+    let name = req.query_param("name").unwrap_or_default().to_string();
+    let model = req.query_param("model").unwrap_or_default().to_string();
+    let variant = req.query_param("variant").unwrap_or("pallas").to_string();
+    let mem: u32 = match req.query_param("mem").unwrap_or("1024").parse() {
+        Ok(m) => m,
+        Err(_) => return Responder::json(400, v1_err("mem must be an integer")),
+    };
+    match ctx.platform.deploy(&name, &model, &variant, mem) {
+        Ok(spec) => Responder::json(
+            200,
+            obj(vec![
+                ("deployed", Json::Str(spec.name.clone())),
+                ("memory_mb", Json::Num(spec.memory_mb as f64)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => Responder::json(400, v1_err(&e.to_string())),
+    }
+}
+
+/// `GET /v1/invoke/:function[?seed=N]` — the paper's GET.
+pub fn invoke(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
+    let func = params.require("function");
+    let seed = req
+        .query_param("seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| ctx.seq.fetch_add(1, Ordering::Relaxed));
+    match ctx.platform.invoke(func, seed) {
+        Ok(out) => {
+            let r = &out.record;
+            Responder::json(
+                200,
+                obj(vec![
+                    ("function", Json::Str(r.function.clone())),
+                    ("top1", Json::Num(out.prediction.top1 as f64)),
+                    ("top_prob", Json::Num(out.prediction.top_prob as f64)),
+                    ("start", Json::Str(r.start.to_string())),
+                    ("prediction_s", Json::Num(r.predict.as_secs_f64())),
+                    ("response_s", Json::Num(r.response().as_secs_f64())),
+                    ("billed_ms", Json::Num(r.billed_ms as f64)),
+                    ("cost_dollars", Json::Num(r.cost_dollars)),
+                ])
+                .to_string(),
+            )
+        }
+        Err(InvokeError::NotFound(f)) => {
+            Responder::json(404, v1_err(&format!("function {f} not deployed")))
+        }
+        Err(InvokeError::Throttled) => Responder::json(429, v1_err("throttled")),
+        Err(InvokeError::Failed(e)) => Responder::json(500, v1_err(&e.to_string())),
+    }
+}
+
+/// `POST /v1/prewarm/:function?n=N` — keep-warm knob (§5).
+pub fn prewarm(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
+    let func = params.require("function");
+    let n: usize = match req.query_param("n").unwrap_or("1").parse() {
+        Ok(n) => n,
+        Err(_) => return Responder::json(400, v1_err("n must be an integer")),
+    };
+    match ctx.platform.prewarm(func, n) {
+        Ok(done) => {
+            Responder::json(200, obj(vec![("prewarmed", Json::Num(done as f64))]).to_string())
+        }
+        Err(e) => Responder::json(400, v1_err(&e.to_string())),
+    }
+}
+
+/// `GET /v1/stats` — original platform-wide snapshot.
+pub fn stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Responder {
+    let p = &ctx.platform;
+    let m = &p.metrics;
+    Responder::json(
+        200,
+        obj(vec![
+            ("invocations", Json::Num(m.len() as f64)),
+            ("cold_starts", Json::Num(m.cold_count() as f64)),
+            ("containers_alive", Json::Num(p.pool.total_alive() as f64)),
+            ("in_flight", Json::Num(p.scaler.in_flight() as f64)),
+            ("peak_concurrency", Json::Num(p.scaler.high_water_mark() as f64)),
+            ("throttled", Json::Num(p.scaler.throttled_count() as f64)),
+            ("total_cost_dollars", Json::Num(p.billing.total_dollars())),
+            ("total_gb_seconds", Json::Num(p.billing.total_gb_seconds())),
+        ])
+        .to_string(),
+    )
+}

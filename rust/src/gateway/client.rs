@@ -1,0 +1,411 @@
+//! Typed Rust client SDK for the v2 gateway API.
+//!
+//! Wraps the blocking [`crate::httpd`] client with typed requests and
+//! responses; used by the CLI client subcommands, the examples, and
+//! the end-to-end integration tests.
+//!
+//! ```no_run
+//! use lambdaserve::gateway::{ApiClient, DeploySpec};
+//! let api = ApiClient::new("127.0.0.1:8080");
+//! api.deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024)).unwrap();
+//! let out = api.invoke("sq", Some(7)).unwrap();
+//! println!("top1={} in {:.3}s ({})", out.top1, out.response_s, out.start);
+//! ```
+
+use crate::httpd::http_request;
+use crate::util::json::{obj, Json};
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Error from an API call: HTTP envelope errors keep their status and
+/// `code`; transport failures use status 0 / code `"transport"`.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: String,
+    pub message: String,
+}
+
+impl ApiError {
+    fn transport(message: String) -> Self {
+        Self { status: 0, code: "transport".to_string(), message }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "api error ({} {}): {}", self.status, self.code, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+pub type ApiResult<T> = Result<T, ApiError>;
+
+/// Full deployment spec for `POST /v2/functions`.
+#[derive(Debug, Clone, Default)]
+pub struct DeploySpec {
+    pub name: String,
+    pub model: String,
+    pub variant: Option<String>,
+    pub memory_mb: Option<u32>,
+    pub min_warm: Option<usize>,
+    pub max_concurrency: Option<usize>,
+}
+
+impl DeploySpec {
+    pub fn new(name: &str, model: &str) -> Self {
+        Self { name: name.to_string(), model: model.to_string(), ..Default::default() }
+    }
+
+    pub fn variant(mut self, variant: &str) -> Self {
+        self.variant = Some(variant.to_string());
+        self
+    }
+
+    pub fn memory_mb(mut self, memory_mb: u32) -> Self {
+        self.memory_mb = Some(memory_mb);
+        self
+    }
+
+    pub fn min_warm(mut self, min_warm: usize) -> Self {
+        self.min_warm = Some(min_warm);
+        self
+    }
+
+    pub fn max_concurrency(mut self, cap: usize) -> Self {
+        self.max_concurrency = Some(cap);
+        self
+    }
+}
+
+/// Partial update for `PATCH /v2/functions/:name`. `max_concurrency`
+/// is doubly optional: `Some(None)` clears the cap.
+#[derive(Debug, Clone, Default)]
+pub struct ReconfigureSpec {
+    pub memory_mb: Option<u32>,
+    pub variant: Option<String>,
+    pub min_warm: Option<usize>,
+    pub max_concurrency: Option<Option<usize>>,
+}
+
+/// One deployed function, as reported by the API.
+#[derive(Debug, Clone)]
+pub struct FunctionInfo {
+    pub name: String,
+    pub model: String,
+    pub variant: String,
+    pub memory_mb: u32,
+    pub min_warm: usize,
+    pub max_concurrency: Option<usize>,
+    pub warm_containers: usize,
+}
+
+/// One completed invocation.
+#[derive(Debug, Clone)]
+pub struct InvocationResult {
+    pub function: String,
+    /// "cold" | "warm".
+    pub start: String,
+    pub top1: i64,
+    pub top_prob: f64,
+    pub predict_s: f64,
+    pub response_s: f64,
+    pub billed_ms: u64,
+    pub cost_dollars: f64,
+}
+
+impl InvocationResult {
+    pub fn is_cold(&self) -> bool {
+        self.start == "cold"
+    }
+}
+
+/// Poll snapshot of an async invocation.
+#[derive(Debug, Clone)]
+pub struct AsyncInvocationStatus {
+    pub id: String,
+    pub function: String,
+    /// "queued" | "running" | "done" | "failed".
+    pub status: String,
+    pub result: Option<InvocationResult>,
+    pub error: Option<String>,
+}
+
+impl AsyncInvocationStatus {
+    pub fn is_terminal(&self) -> bool {
+        self.status == "done" || self.status == "failed"
+    }
+}
+
+/// Per-function stats breakdown.
+#[derive(Debug, Clone)]
+pub struct FunctionStats {
+    pub function: String,
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub response_mean_s: f64,
+    pub response_p50_s: f64,
+    pub response_p95_s: f64,
+    pub response_p99_s: f64,
+    pub predict_mean_s: f64,
+    pub billed_ms_total: u64,
+    pub cost_dollars_total: f64,
+    pub gb_seconds_total: f64,
+    pub warm_containers: u64,
+}
+
+/// Blocking typed client for one gateway address.
+pub struct ApiClient {
+    addr: String,
+    timeout: Duration,
+}
+
+impl ApiClient {
+    pub fn new(addr: &str) -> Self {
+        Self { addr: addr.to_string(), timeout: Duration::from_secs(600) }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One call; returns (status, parsed body). Envelope errors (>=
+    /// 400) become `ApiError` with the envelope's code/message.
+    fn call(&self, method: &str, path: &str, body: Option<&Json>) -> ApiResult<(u16, Json)> {
+        let bytes = body.map(|j| j.to_string().into_bytes()).unwrap_or_default();
+        let resp = http_request(&self.addr, method, path, &bytes, self.timeout)
+            .map_err(|e| ApiError::transport(format!("{e:#}")))?;
+        let text = resp.body_str();
+        let json = Json::parse(&text).unwrap_or(Json::Null);
+        if resp.status >= 400 {
+            let code = json
+                .path(&["error", "code"])
+                .and_then(Json::as_str)
+                .unwrap_or("error")
+                .to_string();
+            let message = json
+                .path(&["error", "message"])
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .or_else(|| json.get("error").and_then(Json::as_str).map(str::to_string))
+                .unwrap_or(text);
+            return Err(ApiError { status: resp.status, code, message });
+        }
+        Ok((resp.status, json))
+    }
+
+    /// `GET /healthz`.
+    pub fn health(&self) -> ApiResult<()> {
+        self.call("GET", "/healthz", None).map(|_| ())
+    }
+
+    /// `POST /v2/functions`.
+    pub fn deploy(&self, spec: &DeploySpec) -> ApiResult<FunctionInfo> {
+        let mut fields = vec![
+            ("name", Json::Str(spec.name.clone())),
+            ("model", Json::Str(spec.model.clone())),
+        ];
+        if let Some(v) = &spec.variant {
+            fields.push(("variant", Json::Str(v.clone())));
+        }
+        if let Some(m) = spec.memory_mb {
+            fields.push(("memory_mb", Json::Num(m as f64)));
+        }
+        if let Some(w) = spec.min_warm {
+            fields.push(("min_warm", Json::Num(w as f64)));
+        }
+        if let Some(c) = spec.max_concurrency {
+            fields.push(("max_concurrency", Json::Num(c as f64)));
+        }
+        let (_, json) = self.call("POST", "/v2/functions", Some(&obj(fields)))?;
+        Ok(parse_function(&json))
+    }
+
+    /// `GET /v2/functions`.
+    pub fn functions(&self) -> ApiResult<Vec<FunctionInfo>> {
+        let (_, json) = self.call("GET", "/v2/functions", None)?;
+        Ok(json
+            .get("functions")
+            .and_then(Json::as_arr)
+            .map(|fns| fns.iter().map(parse_function).collect())
+            .unwrap_or_default())
+    }
+
+    /// `GET /v2/functions/:name`.
+    pub fn function(&self, name: &str) -> ApiResult<FunctionInfo> {
+        let (_, json) = self.call("GET", &format!("/v2/functions/{name}"), None)?;
+        Ok(parse_function(&json))
+    }
+
+    /// `PATCH /v2/functions/:name`.
+    pub fn reconfigure(&self, name: &str, patch: &ReconfigureSpec) -> ApiResult<FunctionInfo> {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(m) = patch.memory_mb {
+            fields.push(("memory_mb", Json::Num(m as f64)));
+        }
+        if let Some(v) = &patch.variant {
+            fields.push(("variant", Json::Str(v.clone())));
+        }
+        if let Some(w) = patch.min_warm {
+            fields.push(("min_warm", Json::Num(w as f64)));
+        }
+        if let Some(c) = patch.max_concurrency {
+            fields.push((
+                "max_concurrency",
+                match c {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ));
+        }
+        let (_, json) = self.call("PATCH", &format!("/v2/functions/{name}"), Some(&obj(fields)))?;
+        Ok(parse_function(&json))
+    }
+
+    /// `DELETE /v2/functions/:name`; returns containers reaped.
+    pub fn undeploy(&self, name: &str) -> ApiResult<usize> {
+        let (_, json) = self.call("DELETE", &format!("/v2/functions/{name}"), None)?;
+        Ok(json.get("reaped_containers").and_then(Json::as_u64).unwrap_or(0) as usize)
+    }
+
+    /// Synchronous invocation (`POST /v2/functions/:name/invocations`).
+    pub fn invoke(&self, function: &str, seed: Option<u64>) -> ApiResult<InvocationResult> {
+        let body = seed.map(|s| obj(vec![("seed", Json::Num(s as f64))]));
+        let (_, json) = self.call(
+            "POST",
+            &format!("/v2/functions/{function}/invocations"),
+            body.as_ref(),
+        )?;
+        Ok(parse_invocation(&json))
+    }
+
+    /// Fire-and-forget invocation; returns the invocation id from the
+    /// 202 response.
+    pub fn invoke_async(&self, function: &str, seed: Option<u64>) -> ApiResult<String> {
+        let body = seed.map(|s| obj(vec![("seed", Json::Num(s as f64))]));
+        let (status, json) = self.call(
+            "POST",
+            &format!("/v2/functions/{function}/invocations?mode=async"),
+            body.as_ref(),
+        )?;
+        if status != 202 {
+            return Err(ApiError {
+                status,
+                code: "unexpected_status".to_string(),
+                message: format!("expected 202 Accepted for async invoke, got {status}"),
+            });
+        }
+        let id = str_field(&json, "invocation_id");
+        if id.is_empty() {
+            return Err(ApiError::transport("202 response missing invocation_id".to_string()));
+        }
+        Ok(id)
+    }
+
+    /// `GET /v2/invocations/:id`.
+    pub fn invocation(&self, id: &str) -> ApiResult<AsyncInvocationStatus> {
+        let (_, json) = self.call("GET", &format!("/v2/invocations/{id}"), None)?;
+        Ok(AsyncInvocationStatus {
+            id: str_field(&json, "id"),
+            function: str_field(&json, "function"),
+            status: str_field(&json, "status"),
+            result: match json.get("result") {
+                Some(Json::Null) | None => None,
+                Some(r) => Some(parse_invocation(r)),
+            },
+            error: json.get("error").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    /// Poll `GET /v2/invocations/:id` until it reaches a terminal
+    /// status ("done" / "failed") or `timeout` elapses.
+    pub fn wait_invocation(
+        &self,
+        id: &str,
+        poll_every: Duration,
+        timeout: Duration,
+    ) -> ApiResult<AsyncInvocationStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let status = self.invocation(id)?;
+            if status.is_terminal() {
+                return Ok(status);
+            }
+            if Instant::now() >= deadline {
+                return Err(ApiError {
+                    status: 0,
+                    code: "timeout".to_string(),
+                    message: format!(
+                        "invocation {id} still {:?} after {timeout:?}",
+                        status.status
+                    ),
+                });
+            }
+            std::thread::sleep(poll_every);
+        }
+    }
+
+    /// `GET /v2/functions/:name/stats`.
+    pub fn stats(&self, function: &str) -> ApiResult<FunctionStats> {
+        let (_, json) = self.call("GET", &format!("/v2/functions/{function}/stats"), None)?;
+        Ok(FunctionStats {
+            function: str_field(&json, "function"),
+            invocations: u64_field(&json, "invocations"),
+            cold_starts: u64_field(&json, "cold_starts"),
+            warm_starts: u64_field(&json, "warm_starts"),
+            response_mean_s: num_field(&json, "response_mean_s"),
+            response_p50_s: num_field(&json, "response_p50_s"),
+            response_p95_s: num_field(&json, "response_p95_s"),
+            response_p99_s: num_field(&json, "response_p99_s"),
+            predict_mean_s: num_field(&json, "predict_mean_s"),
+            billed_ms_total: u64_field(&json, "billed_ms_total"),
+            cost_dollars_total: num_field(&json, "cost_dollars_total"),
+            gb_seconds_total: num_field(&json, "gb_seconds_total"),
+            warm_containers: u64_field(&json, "warm_containers"),
+        })
+    }
+}
+
+fn str_field(json: &Json, key: &str) -> String {
+    json.get(key).and_then(Json::as_str).unwrap_or_default().to_string()
+}
+
+fn num_field(json: &Json, key: &str) -> f64 {
+    json.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn u64_field(json: &Json, key: &str) -> u64 {
+    json.get(key).and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn parse_function(json: &Json) -> FunctionInfo {
+    FunctionInfo {
+        name: str_field(json, "name"),
+        model: str_field(json, "model"),
+        variant: str_field(json, "variant"),
+        memory_mb: u64_field(json, "memory_mb") as u32,
+        min_warm: u64_field(json, "min_warm") as usize,
+        max_concurrency: json.get("max_concurrency").and_then(Json::as_u64).map(|v| v as usize),
+        warm_containers: u64_field(json, "warm_containers") as usize,
+    }
+}
+
+fn parse_invocation(json: &Json) -> InvocationResult {
+    InvocationResult {
+        function: str_field(json, "function"),
+        start: str_field(json, "start"),
+        top1: num_field(json, "top1") as i64,
+        top_prob: num_field(json, "top_prob"),
+        predict_s: num_field(json, "predict_s"),
+        response_s: num_field(json, "response_s"),
+        billed_ms: u64_field(json, "billed_ms"),
+        cost_dollars: num_field(json, "cost_dollars"),
+    }
+}

@@ -1,35 +1,86 @@
 //! HTTP gateway — the API-Gateway analog fronting the platform.
 //!
-//! Routes:
-//!   GET  /v1/functions                      — list deployments
-//!   POST /v1/functions?name=&model=&mem=    — deploy
-//!   GET  /v1/invoke/<function>[?seed=N]     — invoke (the paper's GET)
-//!   POST /v1/prewarm/<function>?n=N         — keep-warm knob (§5)
-//!   GET  /v1/stats                          — metrics snapshot
-//!   GET  /healthz
+//! v2 resource-oriented surface (JSON bodies, structured errors):
 //!
-//! Responses are JSON; invocation responses mirror what the paper's
-//! Lambda returned (prediction + timing), with the latency
-//! decomposition added.
+//!   POST   /v2/functions                     — deploy (full spec), 201 / 409
+//!   GET    /v2/functions                     — list
+//!   GET    /v2/functions/:name               — inspect
+//!   PATCH  /v2/functions/:name               — reconfigure (partial)
+//!   DELETE /v2/functions/:name               — undeploy
+//!   POST   /v2/functions/:name/invocations   — invoke; `?mode=async`
+//!                                              returns 202 + id
+//!   GET    /v2/invocations/:id               — poll an async result
+//!   GET    /v2/functions/:name/stats         — per-function breakdown
+//!   GET    /v2/stats                         — platform snapshot
+//!   GET    /healthz
+//!
+//! The original `/v1` query-string routes remain as shims that are
+//! byte-compatible on previously-valid requests (see [`api::v1`] for
+//! the two intentional error-path differences); full reference in
+//! `API.md`.
 
-use crate::httpd::{HttpRequest, HttpServer, Responder};
-use crate::platform::{InvokeError, Platform};
-use crate::util::json::{obj, Json};
+pub mod api;
+pub mod client;
+
+pub use client::{
+    ApiClient, ApiError, ApiResult, AsyncInvocationStatus, DeploySpec, FunctionInfo,
+    FunctionStats, InvocationResult, ReconfigureSpec,
+};
+
+use crate::httpd::{HttpServer, Router};
+use crate::platform::{AsyncInvoker, Platform};
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
+use api::ApiCtx;
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Sizing for the async invocation subsystem.
+#[derive(Debug, Clone)]
+pub struct AsyncConfig {
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Bounded queue depth; a full queue rejects submits with 429.
+    pub queue_capacity: usize,
+    /// How long completed results stay pollable.
+    pub result_ttl: Duration,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self { workers: 4, queue_capacity: 256, result_ttl: Duration::from_secs(900) }
+    }
+}
 
 pub struct Gateway {
+    // Field order matters for drop: the server (and the router closure
+    // holding an ApiCtx clone) goes first, then the last ApiCtx ref
+    // releases the AsyncInvoker, which joins its workers.
     server: HttpServer,
+    ctx: Arc<ApiCtx>,
 }
 
 impl Gateway {
     pub fn bind(addr: &str, threads: usize, platform: Arc<Platform>) -> Result<Self> {
-        let seq = Arc::new(AtomicU64::new(1));
-        let server = HttpServer::bind(addr, threads, move |req| {
-            route(&platform, &seq, req)
-        })?;
-        Ok(Self { server })
+        Self::bind_with(addr, threads, platform, AsyncConfig::default())
+    }
+
+    pub fn bind_with(
+        addr: &str,
+        threads: usize,
+        platform: Arc<Platform>,
+        async_config: AsyncConfig,
+    ) -> Result<Self> {
+        let async_inv = Arc::new(AsyncInvoker::start(
+            platform.clone(),
+            async_config.workers,
+            async_config.queue_capacity,
+            async_config.result_ttl,
+        ));
+        let ctx = Arc::new(ApiCtx { platform, async_inv, seq: AtomicU64::new(1) });
+        let router: Arc<Router> = Arc::new(api::build_router(&ctx));
+        let server = HttpServer::bind(addr, threads, move |req| router.dispatch(&req))?;
+        Ok(Self { server, ctx })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
@@ -40,126 +91,15 @@ impl Gateway {
         self.server.shutdown_handle()
     }
 
+    /// The async subsystem (tests / stats).
+    pub fn async_invoker(&self) -> &Arc<AsyncInvoker> {
+        &self.ctx.async_inv
+    }
+
     /// Blocking accept loop.
     pub fn serve(&self) -> Result<()> {
         self.server.serve()
     }
-}
-
-fn route(platform: &Arc<Platform>, seq: &AtomicU64, req: HttpRequest) -> Responder {
-    let path = req.path.clone();
-    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
-    match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["healthz"]) => Responder::text(200, "ok"),
-        ("GET", ["v1", "functions"]) => list_functions(platform),
-        ("POST", ["v1", "functions"]) => deploy(platform, &req),
-        ("GET", ["v1", "invoke", func]) => invoke(platform, seq, func, &req),
-        ("POST", ["v1", "prewarm", func]) => prewarm(platform, func, &req),
-        ("GET", ["v1", "stats"]) => stats(platform),
-        _ => Responder::json(404, err_json("no such route")),
-    }
-}
-
-fn err_json(msg: &str) -> String {
-    obj(vec![("error", Json::Str(msg.into()))]).to_string()
-}
-
-fn list_functions(platform: &Arc<Platform>) -> Responder {
-    let fns: Vec<Json> = platform
-        .registry
-        .list()
-        .into_iter()
-        .map(|f| {
-            obj(vec![
-                ("name", Json::Str(f.name.clone())),
-                ("model", Json::Str(f.model.clone())),
-                ("variant", Json::Str(f.variant.clone())),
-                ("memory_mb", Json::Num(f.memory_mb as f64)),
-            ])
-        })
-        .collect();
-    Responder::json(200, Json::Arr(fns).to_string())
-}
-
-fn deploy(platform: &Arc<Platform>, req: &HttpRequest) -> Responder {
-    let name = req.query_param("name").unwrap_or_default().to_string();
-    let model = req.query_param("model").unwrap_or_default().to_string();
-    let variant = req.query_param("variant").unwrap_or("pallas").to_string();
-    let mem: u32 = match req.query_param("mem").unwrap_or("1024").parse() {
-        Ok(m) => m,
-        Err(_) => return Responder::json(400, err_json("mem must be an integer")),
-    };
-    match platform.deploy(&name, &model, &variant, mem) {
-        Ok(spec) => Responder::json(
-            200,
-            obj(vec![
-                ("deployed", Json::Str(spec.name.clone())),
-                ("memory_mb", Json::Num(spec.memory_mb as f64)),
-            ])
-            .to_string(),
-        ),
-        Err(e) => Responder::json(400, err_json(&e.to_string())),
-    }
-}
-
-fn invoke(platform: &Arc<Platform>, seq: &AtomicU64, func: &str, req: &HttpRequest) -> Responder {
-    let seed = req
-        .query_param("seed")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| seq.fetch_add(1, Ordering::Relaxed));
-    match platform.invoke(func, seed) {
-        Ok(out) => {
-            let r = &out.record;
-            Responder::json(
-                200,
-                obj(vec![
-                    ("function", Json::Str(r.function.clone())),
-                    ("top1", Json::Num(out.prediction.top1 as f64)),
-                    ("top_prob", Json::Num(out.prediction.top_prob as f64)),
-                    ("start", Json::Str(r.start.to_string())),
-                    ("prediction_s", Json::Num(r.predict.as_secs_f64())),
-                    ("response_s", Json::Num(r.response().as_secs_f64())),
-                    ("billed_ms", Json::Num(r.billed_ms as f64)),
-                    ("cost_dollars", Json::Num(r.cost_dollars)),
-                ])
-                .to_string(),
-            )
-        }
-        Err(InvokeError::NotFound(f)) => {
-            Responder::json(404, err_json(&format!("function {f} not deployed")))
-        }
-        Err(InvokeError::Throttled) => Responder::json(429, err_json("throttled")),
-        Err(InvokeError::Failed(e)) => Responder::json(500, err_json(&e.to_string())),
-    }
-}
-
-fn prewarm(platform: &Arc<Platform>, func: &str, req: &HttpRequest) -> Responder {
-    let n: usize = match req.query_param("n").unwrap_or("1").parse() {
-        Ok(n) => n,
-        Err(_) => return Responder::json(400, err_json("n must be an integer")),
-    };
-    match platform.prewarm(func, n) {
-        Ok(done) => Responder::json(200, obj(vec![("prewarmed", Json::Num(done as f64))]).to_string()),
-        Err(e) => Responder::json(400, err_json(&e.to_string())),
-    }
-}
-
-fn stats(platform: &Arc<Platform>) -> Responder {
-    let m = &platform.metrics;
-    Responder::json(
-        200,
-        obj(vec![
-            ("invocations", Json::Num(m.len() as f64)),
-            ("cold_starts", Json::Num(m.cold_count() as f64)),
-            ("containers_alive", Json::Num(platform.pool.total_alive() as f64)),
-            ("in_flight", Json::Num(platform.scaler.in_flight() as f64)),
-            ("peak_concurrency", Json::Num(platform.scaler.high_water_mark() as f64)),
-            ("throttled", Json::Num(platform.scaler.throttled_count() as f64)),
-            ("total_cost_dollars", Json::Num(platform.billing.total_dollars())),
-            ("total_gb_seconds", Json::Num(platform.billing.total_gb_seconds())),
-        ])
-        .to_string(),
-    )
 }
 
 #[cfg(test)]
@@ -253,6 +193,116 @@ mod tests {
                 .status,
             400
         );
+
+        sh.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn v2_deploy_invoke_conflict_and_errors() {
+        let (addr, sh, t) = start();
+        let tmo = Duration::from_secs(10);
+
+        // JSON-body deploy -> 201 with the function resource.
+        let body = br#"{"name": "sq", "model": "squeezenet", "memory_mb": 1024}"#;
+        let r = http_post(&addr, "/v2/functions", body, tmo).unwrap();
+        assert_eq!(r.status, 201, "{}", r.body_str());
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("sq"));
+        assert_eq!(j.get("memory_mb").unwrap().as_u64(), Some(1024));
+        assert_eq!(j.get("max_concurrency"), Some(&Json::Null));
+
+        // Duplicate deploy -> 409 conflict envelope.
+        let r = http_post(&addr, "/v2/functions", body, tmo).unwrap();
+        assert_eq!(r.status, 409);
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.path(&["error", "code"]).unwrap().as_str(), Some("already_exists"));
+
+        // Sync invoke with JSON body.
+        let r = http_post(&addr, "/v2/functions/sq/invocations", br#"{"seed": 3}"#, tmo).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_str());
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.get("start").unwrap().as_str(), Some("cold"));
+        assert!(j.get("billed_ms").unwrap().as_u64().unwrap() > 0);
+
+        // Malformed JSON body -> 400 envelope.
+        let r = http_post(&addr, "/v2/functions", b"{not json", tmo).unwrap();
+        assert_eq!(r.status, 400);
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.path(&["error", "code"]).unwrap().as_str(), Some("invalid_json"));
+
+        // memory_mb beyond u32 must 400, not silently truncate into a
+        // valid tier (4294968320 = 2^32 + 1024).
+        let r = http_post(
+            &addr,
+            "/v2/functions",
+            br#"{"name": "big", "model": "squeezenet", "memory_mb": 4294968320}"#,
+            tmo,
+        )
+        .unwrap();
+        assert_eq!(r.status, 400, "{}", r.body_str());
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(j.path(&["error", "code"]).unwrap().as_str(), Some("invalid_field"));
+
+        // Known path, wrong method -> 405 (not 404).
+        let r = crate::httpd::http_request(&addr, "PUT", "/v2/functions", b"", tmo).unwrap();
+        assert_eq!(r.status, 405);
+        let j = Json::parse(&r.body_str()).unwrap();
+        assert_eq!(
+            j.path(&["error", "code"]).unwrap().as_str(),
+            Some("method_not_allowed")
+        );
+
+        // Unknown invocation id -> 404.
+        let r = http_get(&addr, "/v2/invocations/inv-doesnotexist", tmo).unwrap();
+        assert_eq!(r.status, 404);
+
+        sh.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn v2_async_invocation_roundtrip_over_http() {
+        let (addr, sh, t) = start();
+        let tmo = Duration::from_secs(10);
+
+        let r = http_post(
+            &addr,
+            "/v2/functions",
+            br#"{"name": "sq", "model": "squeezenet", "memory_mb": 1024}"#,
+            tmo,
+        )
+        .unwrap();
+        assert_eq!(r.status, 201, "{}", r.body_str());
+
+        // Async submit -> 202 + id.
+        let r = http_post(&addr, "/v2/functions/sq/invocations?mode=async", b"", tmo).unwrap();
+        assert_eq!(r.status, 202, "{}", r.body_str());
+        let j = Json::parse(&r.body_str()).unwrap();
+        let id = j.get("invocation_id").unwrap().as_str().unwrap().to_string();
+        assert!(id.starts_with("inv-"));
+
+        // Poll to completion.
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        let done = loop {
+            let r = http_get(&addr, &format!("/v2/invocations/{id}"), tmo).unwrap();
+            assert_eq!(r.status, 200);
+            let j = Json::parse(&r.body_str()).unwrap();
+            let status = j.get("status").unwrap().as_str().unwrap().to_string();
+            if status == "done" || status == "failed" {
+                break j;
+            }
+            assert!(std::time::Instant::now() < deadline, "async invocation stuck");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        assert_eq!(done.get("status").unwrap().as_str(), Some("done"));
+        let result = done.get("result").unwrap();
+        assert_eq!(result.get("start").unwrap().as_str(), Some("cold"));
+        assert!(result.get("billed_ms").unwrap().as_u64().unwrap() > 0);
+
+        // Async submit for an unknown function -> 404 at submit time.
+        let r = http_post(&addr, "/v2/functions/ghost/invocations?mode=async", b"", tmo).unwrap();
+        assert_eq!(r.status, 404);
 
         sh.shutdown();
         t.join().unwrap();

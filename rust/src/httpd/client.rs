@@ -20,7 +20,7 @@ impl HttpResponse {
 }
 
 pub fn http_get(addr: &str, path_and_query: &str, timeout: Duration) -> Result<HttpResponse> {
-    request(addr, "GET", path_and_query, &[], timeout)
+    http_request(addr, "GET", path_and_query, &[], timeout)
 }
 
 pub fn http_post(
@@ -29,10 +29,25 @@ pub fn http_post(
     body: &[u8],
     timeout: Duration,
 ) -> Result<HttpResponse> {
-    request(addr, "POST", path_and_query, body, timeout)
+    http_request(addr, "POST", path_and_query, body, timeout)
 }
 
-fn request(
+pub fn http_patch(
+    addr: &str,
+    path_and_query: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    http_request(addr, "PATCH", path_and_query, body, timeout)
+}
+
+pub fn http_delete(addr: &str, path_and_query: &str, timeout: Duration) -> Result<HttpResponse> {
+    http_request(addr, "DELETE", path_and_query, &[], timeout)
+}
+
+/// One blocking request with an arbitrary method (the typed client SDK
+/// builds on this).
+pub fn http_request(
     addr: &str,
     method: &str,
     path: &str,

@@ -7,7 +7,9 @@
 //! for the load generator and tests.
 
 mod client;
+pub mod router;
 pub mod server;
 
-pub use client::{http_get, http_post, HttpResponse};
+pub use client::{http_delete, http_get, http_patch, http_post, http_request, HttpResponse};
+pub use router::{error_envelope, Params, Router};
 pub use server::{HttpRequest, HttpServer, Responder, ShutdownHandle};

@@ -1,0 +1,232 @@
+//! Method + path-pattern routing with `:param` captures.
+//!
+//! Replaces the gateway's ad-hoc `match` over path segments. Routes
+//! are registered as `(METHOD, "/v2/functions/:name/invocations")`;
+//! dispatch walks the table, captures `:param` segments, and
+//! distinguishes *unknown path* (404) from *known path, wrong method*
+//! (405). Error fallbacks use the structured envelope
+//! `{"error": {"code", "message"}}` shared with the API layer.
+
+use super::server::{HttpRequest, Responder};
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+
+/// Captured `:param` path segments for one matched route.
+#[derive(Debug, Default)]
+pub struct Params(BTreeMap<String, String>);
+
+impl Params {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.0.get(name).map(String::as_str)
+    }
+
+    /// Capture lookup that treats a missing capture as a bug: routes
+    /// declare their params statically, so handlers may rely on them.
+    pub fn require(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_default()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Seg {
+    Lit(String),
+    Param(String),
+}
+
+type RouteHandler = Box<dyn Fn(&HttpRequest, &Params) -> Responder + Send + Sync>;
+
+struct Route {
+    method: String,
+    pattern: Vec<Seg>,
+    handler: RouteHandler,
+}
+
+impl Route {
+    fn capture(&self, segs: &[&str]) -> Option<Params> {
+        if segs.len() != self.pattern.len() {
+            return None;
+        }
+        let mut params = BTreeMap::new();
+        for (seg, pat) in segs.iter().zip(&self.pattern) {
+            match pat {
+                Seg::Lit(lit) => {
+                    if lit.as_str() != *seg {
+                        return None;
+                    }
+                }
+                Seg::Param(name) => {
+                    params.insert(name.clone(), (*seg).to_string());
+                }
+            }
+        }
+        Some(Params(params))
+    }
+}
+
+fn parse_pattern(pattern: &str) -> Vec<Seg> {
+    pattern
+        .split('/')
+        .filter(|s| !s.is_empty())
+        .map(|s| match s.strip_prefix(':') {
+            Some(name) => Seg::Param(name.to_string()),
+            None => Seg::Lit(s.to_string()),
+        })
+        .collect()
+}
+
+/// JSON error envelope used by router fallbacks and API handlers.
+pub fn error_envelope(code: &str, message: &str) -> String {
+    obj(vec![(
+        "error",
+        obj(vec![
+            ("code", Json::Str(code.to_string())),
+            ("message", Json::Str(message.to_string())),
+        ]),
+    )])
+    .to_string()
+}
+
+/// Ordered route table. First match wins.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `method pattern -> handler`; chainable.
+    pub fn route<F>(mut self, method: &str, pattern: &str, handler: F) -> Self
+    where
+        F: Fn(&HttpRequest, &Params) -> Responder + Send + Sync + 'static,
+    {
+        self.routes.push(Route {
+            method: method.to_ascii_uppercase(),
+            pattern: parse_pattern(pattern),
+            handler: Box::new(handler),
+        });
+        self
+    }
+
+    /// Dispatch a request: 404 for unknown paths, 405 when the path
+    /// exists under a different method.
+    pub fn dispatch(&self, req: &HttpRequest) -> Responder {
+        let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        let mut path_known = false;
+        let mut allowed: Vec<&str> = Vec::new();
+        for route in &self.routes {
+            if let Some(params) = route.capture(&segs) {
+                if route.method == req.method {
+                    return (route.handler)(req, &params);
+                }
+                path_known = true;
+                if !allowed.contains(&route.method.as_str()) {
+                    allowed.push(route.method.as_str());
+                }
+            }
+        }
+        if path_known {
+            Responder::json(
+                405,
+                error_envelope(
+                    "method_not_allowed",
+                    &format!(
+                        "{} is not allowed for {} (allowed: {})",
+                        req.method,
+                        req.path,
+                        allowed.join(", ")
+                    ),
+                ),
+            )
+        } else {
+            Responder::json(
+                404,
+                error_envelope("not_found", &format!("no route for {}", req.path)),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(method: &str, path: &str) -> HttpRequest {
+        HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn router() -> Router {
+        Router::new()
+            .route("GET", "/v2/functions", |_, _| Responder::text(200, "list"))
+            .route("POST", "/v2/functions", |_, _| Responder::text(201, "create"))
+            .route("GET", "/v2/functions/:name", |_, p| {
+                Responder::text(200, &format!("get {}", p.require("name")))
+            })
+            .route("POST", "/v2/functions/:name/invocations", |_, p| {
+                Responder::text(200, &format!("invoke {}", p.require("name")))
+            })
+            .route("GET", "/healthz", |_, _| Responder::text(200, "ok"))
+    }
+
+    fn body(r: &Responder) -> String {
+        String::from_utf8_lossy(&r.body).into_owned()
+    }
+
+    #[test]
+    fn literal_and_param_dispatch() {
+        let r = router();
+        assert_eq!(body(&r.dispatch(&req("GET", "/v2/functions"))), "list");
+        assert_eq!(body(&r.dispatch(&req("POST", "/v2/functions"))), "create");
+        assert_eq!(body(&r.dispatch(&req("GET", "/v2/functions/sq"))), "get sq");
+        assert_eq!(
+            body(&r.dispatch(&req("POST", "/v2/functions/sq/invocations"))),
+            "invoke sq"
+        );
+    }
+
+    #[test]
+    fn unknown_path_is_404() {
+        let r = router();
+        assert_eq!(r.dispatch(&req("GET", "/nope")).status, 404);
+        assert_eq!(r.dispatch(&req("GET", "/v2/functions/sq/extra/deep")).status, 404);
+        let resp = r.dispatch(&req("GET", "/missing"));
+        let j = Json::parse(&body(&resp)).unwrap();
+        assert_eq!(j.path(&["error", "code"]).unwrap().as_str(), Some("not_found"));
+    }
+
+    #[test]
+    fn known_path_wrong_method_is_405() {
+        let r = router();
+        let resp = r.dispatch(&req("DELETE", "/v2/functions"));
+        assert_eq!(resp.status, 405);
+        let j = Json::parse(&body(&resp)).unwrap();
+        assert_eq!(
+            j.path(&["error", "code"]).unwrap().as_str(),
+            Some("method_not_allowed")
+        );
+        let msg = j.path(&["error", "message"]).unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("GET") && msg.contains("POST"), "{msg}");
+        // Param routes too.
+        assert_eq!(r.dispatch(&req("PUT", "/v2/functions/sq")).status, 405);
+    }
+
+    #[test]
+    fn method_is_case_normalized_at_registration() {
+        let r = Router::new().route("get", "/x", |_, _| Responder::text(200, "x"));
+        assert_eq!(r.dispatch(&req("GET", "/x")).status, 200);
+    }
+
+    #[test]
+    fn trailing_slash_is_equivalent() {
+        let r = router();
+        assert_eq!(body(&r.dispatch(&req("GET", "/v2/functions/"))), "list");
+    }
+}

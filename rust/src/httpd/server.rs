@@ -200,8 +200,9 @@ fn url_decode(s: &str) -> String {
     let mut i = 0;
     while i < bytes.len() {
         match bytes[i] {
-            b'%' if i + 2 < bytes.len() + 1 && i + 2 <= bytes.len() - 1 + 1 => {
-                let hex = std::str::from_utf8(&bytes[i + 1..(i + 3).min(bytes.len())]).ok();
+            // A full "%XY" escape needs two bytes after the '%'.
+            b'%' if i + 3 <= bytes.len() => {
+                let hex = std::str::from_utf8(&bytes[i + 1..i + 3]).ok();
                 if let Some(v) = hex.and_then(|h| u8::from_str_radix(h, 16).ok()) {
                     out.push(v);
                     i += 3;
@@ -226,9 +227,12 @@ fn url_decode(s: &str) -> String {
 fn status_text(code: u16) -> &'static str {
     match code {
         200 => "OK",
+        201 => "Created",
         202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -285,9 +289,137 @@ mod tests {
     }
 
     #[test]
+    fn url_decode_truncated_escape_at_end() {
+        // A '%' with fewer than two hex bytes left must pass through
+        // literally instead of reading out of bounds.
+        assert_eq!(url_decode("%"), "%");
+        assert_eq!(url_decode("%2"), "%2");
+        assert_eq!(url_decode("abc%2"), "abc%2");
+        assert_eq!(url_decode("%zz"), "%zz");
+        assert_eq!(url_decode("%%41"), "%%41");
+    }
+
+    #[test]
     fn status_texts() {
         assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(201), "Created");
+        assert_eq!(status_text(202), "Accepted");
+        assert_eq!(status_text(405), "Method Not Allowed");
+        assert_eq!(status_text(409), "Conflict");
         assert_eq!(status_text(429), "Too Many Requests");
         assert_eq!(status_text(777), "Unknown");
+    }
+
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    fn echo_server() -> (String, ShutdownHandle, std::thread::JoinHandle<()>) {
+        let server = HttpServer::bind("127.0.0.1:0", 2, |req| {
+            Responder::text(200, &format!("{} {} len={}", req.method, req.path, req.body.len()))
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let sh = server.shutdown_handle();
+        let t = std::thread::spawn(move || {
+            server.serve().unwrap();
+        });
+        (addr, sh, t)
+    }
+
+    /// Read one HTTP/1.1 response off `reader`; returns (status, body).
+    fn read_one_response(reader: &mut BufReader<TcpStream>) -> (u16, String) {
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line).unwrap();
+        let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    len = v.trim().parse().unwrap();
+                }
+            }
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).unwrap();
+        (status, String::from_utf8_lossy(&body).into_owned())
+    }
+
+    #[test]
+    fn keep_alive_pipelines_requests_on_one_connection() {
+        let (addr, sh, t) = echo_server();
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        // Two requests written back-to-back before reading anything.
+        w.write_all(
+            b"GET /first HTTP/1.1\r\nHost: x\r\n\r\n\
+              POST /second HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello",
+        )
+        .unwrap();
+        w.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let (s1, b1) = read_one_response(&mut reader);
+        assert_eq!((s1, b1.as_str()), (200, "GET /first len=0"));
+        let (s2, b2) = read_one_response(&mut reader);
+        assert_eq!((s2, b2.as_str()), (200, "POST /second len=5"));
+        sh.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn zero_length_body_post() {
+        let (addr, sh, t) = echo_server();
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(b"POST /empty HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n").unwrap();
+        w.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let (status, body) = read_one_response(&mut reader);
+        assert_eq!(status, 200);
+        assert_eq!(body, "POST /empty len=0");
+        sh.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_content_length_rejected() {
+        let (addr, sh, t) = echo_server();
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        // Claims a body far over the 64 MB cap; server must refuse
+        // before attempting to allocate or read it.
+        w.write_all(b"POST /big HTTP/1.1\r\nHost: x\r\nContent-Length: 999999999999\r\n\r\n")
+            .unwrap();
+        w.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let (status, body) = read_one_response(&mut reader);
+        assert_eq!(status, 400);
+        assert!(body.contains("body too large"), "body={body}");
+        sh.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_content_length_rejected() {
+        let (addr, sh, t) = echo_server();
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(b"POST /bad HTTP/1.1\r\nHost: x\r\nContent-Length: lots\r\n\r\n").unwrap();
+        w.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let (status, _) = read_one_response(&mut reader);
+        assert_eq!(status, 400);
+        sh.shutdown();
+        t.join().unwrap();
     }
 }

@@ -3,8 +3,12 @@
 //! Subcommands:
 //!
 //! * `serve`       — start the HTTP gateway on the live platform
-//! * `deploy`      — validate a deployment config (name/model/mem)
-//! * `invoke`      — one-shot local invocation (no HTTP)
+//! * `deploy`      — deploy: against a remote gateway with `--addr`
+//!                   (v2 API), or validate offline without it
+//! * `invoke`      — invoke: against a remote gateway with `--addr`
+//!                   (sync or `--mode async`), or one-shot local
+//! * `undeploy`    — remove a function from a remote gateway
+//! * `stats`       — per-function stats from a remote gateway
 //! * `experiment`  — run a paper experiment by id (`table1`, `fig1`..
 //!                   `fig10`, `abl-*`, or `all`)
 //! * `price-table` — print Table 1
@@ -14,11 +18,12 @@ use anyhow::{bail, Result};
 use lambdaserve::cliparse::Command;
 use lambdaserve::configparse::PlatformConfig;
 use lambdaserve::experiments::{self, EngineKind, ExpCtx};
-use lambdaserve::gateway::Gateway;
+use lambdaserve::gateway::{ApiClient, DeploySpec, Gateway};
 use lambdaserve::platform::Invoker;
 use lambdaserve::runtime::{Engine, MockEngine, PjrtEngine, Zoo};
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -29,7 +34,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: lambdaserve <serve|deploy|invoke|loadgen|experiment|price-table|models> [flags]\n\
+    "usage: lambdaserve <serve|deploy|invoke|undeploy|stats|loadgen|experiment|price-table|models> [flags]\n\
      run `lambdaserve <cmd> --help` for per-command flags"
         .to_string()
 }
@@ -59,6 +64,8 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "deploy" => cmd_deploy(rest),
         "invoke" => cmd_invoke(rest),
+        "undeploy" => cmd_undeploy(rest),
+        "stats" => cmd_stats(rest),
         "loadgen" => cmd_loadgen(rest),
         "experiment" => cmd_experiment(rest),
         "price-table" => cmd_price_table(rest),
@@ -108,16 +115,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let threads = args.get_u64("threads")?.unwrap_or(16) as usize;
     let gw = Gateway::bind(args.get_or("addr", "127.0.0.1:8080"), threads, platform)?;
     println!("lambdaserve gateway listening on http://{}", gw.local_addr());
-    println!("  GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
+    println!("  v2: POST /v2/functions  POST /v2/functions/<fn>/invocations[?mode=async]");
+    println!("  v1: GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
+    println!("  reference: API.md");
     gw.serve()
 }
 
 fn cmd_deploy(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("deploy", "validate a deployment offline")
+    let cmd = Command::new("deploy", "deploy to a remote gateway (--addr) or validate offline")
+        .flag("addr", "remote gateway address (omit for offline validation)", None)
         .flag("name", "function name", Some("fn"))
         .flag("model", "zoo model", Some("squeezenet"))
         .flag("variant", "artifact variant", Some("pallas"))
         .flag("mem", "memory MB", Some("1024"))
+        .flag("min-warm", "containers to keep pre-warmed", Some("0"))
+        .flag("max-concurrency", "per-function in-flight cap", None)
         .flag("config", "platform config TOML", None)
         .flag("engine", "pjrt | mock", Some("mock"));
     if argv.iter().any(|a| a == "--help") {
@@ -125,6 +137,29 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let args = cmd.parse(argv)?;
+    if let Some(addr) = args.get("addr") {
+        // Remote: v2 API through the typed client SDK.
+        let api = ApiClient::new(addr);
+        let mut spec = DeploySpec::new(args.get_or("name", "fn"), args.get_or("model", "squeezenet"))
+            .variant(args.get_or("variant", "pallas"))
+            .memory_mb(args.get_u64("mem")?.unwrap_or(1024) as u32)
+            .min_warm(args.get_u64("min-warm")?.unwrap_or(0) as usize);
+        if let Some(cap) = args.get_u64("max-concurrency")? {
+            spec = spec.max_concurrency(cap as usize);
+        }
+        let f = api.deploy(&spec)?;
+        println!(
+            "deployed {} -> {} ({}) @ {} MB (min_warm={}, max_concurrency={}, warm={})",
+            f.name,
+            f.model,
+            f.variant,
+            f.memory_mb,
+            f.min_warm,
+            f.max_concurrency.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
+            f.warm_containers
+        );
+        return Ok(());
+    }
     let config = load_config(&args)?;
     let engine = build_engine(args.get_or("engine", "mock"), &config, 1)?;
     let platform = Invoker::live(config, engine);
@@ -147,10 +182,13 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_invoke(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("invoke", "one-shot local invocation")
-        .flag("model", "zoo model", Some("squeezenet"))
-        .flag("variant", "artifact variant", Some("pallas"))
-        .flag("mem", "memory MB", Some("1024"))
+    let cmd = Command::new("invoke", "invoke against a remote gateway (--addr) or one-shot local")
+        .flag("addr", "remote gateway address (omit for local one-shot)", None)
+        .flag("function", "remote function name", Some("fn"))
+        .flag("mode", "remote invocation mode: sync | async", Some("sync"))
+        .flag("model", "zoo model (local mode)", Some("squeezenet"))
+        .flag("variant", "artifact variant (local mode)", Some("pallas"))
+        .flag("mem", "memory MB (local mode)", Some("1024"))
         .flag("seed", "image seed", Some("1"))
         .flag("n", "number of requests", Some("2"))
         .flag("config", "platform config TOML", None)
@@ -160,6 +198,47 @@ fn cmd_invoke(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let args = cmd.parse(argv)?;
+    if let Some(addr) = args.get("addr") {
+        let api = ApiClient::new(addr);
+        let function = args.get_or("function", "fn");
+        let n = args.get_u64("n")?.unwrap_or(2);
+        let seed = args.get_u64("seed")?.unwrap_or(1);
+        for i in 0..n {
+            match args.get_or("mode", "sync") {
+                "sync" => {
+                    let r = api.invoke(function, Some(seed + i))?;
+                    println!(
+                        "[{}] top1={} p={:.4} start={} predict={:.3}s response={:.3}s billed={}ms cost=${:.8}",
+                        i, r.top1, r.top_prob, r.start, r.predict_s, r.response_s, r.billed_ms,
+                        r.cost_dollars
+                    );
+                }
+                "async" => {
+                    let id = api.invoke_async(function, Some(seed + i))?;
+                    println!("[{i}] accepted: invocation {id}");
+                    let done = api.wait_invocation(
+                        &id,
+                        Duration::from_millis(50),
+                        Duration::from_secs(600),
+                    )?;
+                    match done.result {
+                        Some(r) => println!(
+                            "[{}] {} top1={} start={} response={:.3}s billed={}ms",
+                            i, done.status, r.top1, r.start, r.response_s, r.billed_ms
+                        ),
+                        None => println!(
+                            "[{}] {}: {}",
+                            i,
+                            done.status,
+                            done.error.unwrap_or_default()
+                        ),
+                    }
+                }
+                other => bail!("unknown mode {other:?} (sync|async)"),
+            }
+        }
+        return Ok(());
+    }
     let config = load_config(&args)?;
     let engine = build_engine(args.get_or("engine", "pjrt"), &config, 1)?;
     let platform = Invoker::live(config, engine);
@@ -182,6 +261,59 @@ fn cmd_invoke(argv: &[String]) -> Result<()> {
             r.response().as_secs_f64(),
             r.billed_ms,
             r.cost_dollars
+        );
+    }
+    Ok(())
+}
+
+fn cmd_undeploy(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("undeploy", "remove a function from a remote gateway")
+        .flag("addr", "gateway address", Some("127.0.0.1:8080"))
+        .flag("name", "function name", Some("fn"));
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let api = ApiClient::new(args.get_or("addr", "127.0.0.1:8080"));
+    let name = args.get_or("name", "fn");
+    let reaped = api.undeploy(name)?;
+    println!("undeployed {name} ({reaped} warm containers reaped)");
+    Ok(())
+}
+
+fn cmd_stats(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("stats", "per-function stats from a remote gateway")
+        .flag("addr", "gateway address", Some("127.0.0.1:8080"))
+        .flag("function", "function name (omit to list all)", None);
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let api = ApiClient::new(args.get_or("addr", "127.0.0.1:8080"));
+    let names: Vec<String> = match args.get("function") {
+        Some(f) => vec![f.to_string()],
+        None => api.functions()?.into_iter().map(|f| f.name).collect(),
+    };
+    if names.is_empty() {
+        println!("no functions deployed");
+        return Ok(());
+    }
+    for name in names {
+        let s = api.stats(&name)?;
+        println!(
+            "{}: {} invocations ({} cold / {} warm), warm_containers={}",
+            s.function, s.invocations, s.cold_starts, s.warm_starts, s.warm_containers
+        );
+        println!(
+            "  response mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s predict mean={:.3}s",
+            s.response_mean_s, s.response_p50_s, s.response_p95_s, s.response_p99_s,
+            s.predict_mean_s
+        );
+        println!(
+            "  billed={}ms cost=${:.8} gb_seconds={:.4}",
+            s.billed_ms_total, s.cost_dollars_total, s.gb_seconds_total
         );
     }
     Ok(())

@@ -1,0 +1,425 @@
+//! Async (fire-and-forget) invocation: bounded queue + worker threads
+//! + TTL'd result store.
+//!
+//! `POST /v2/functions/:name/invocations?mode=async` enqueues a job
+//! and returns `202` with an invocation id; workers drain the queue
+//! through the normal [`Platform::invoke`] pipeline (so cold/warm
+//! accounting, billing, and metrics are identical to sync calls); the
+//! outcome is kept in a result store for `result_ttl` after completion
+//! and served by `GET /v2/invocations/:id`.
+//!
+//! Backpressure: a full queue rejects the submit (HTTP 429), mirroring
+//! the container-cap throttle on the sync path. A job the API already
+//! accepted with 202 is NOT failed on a transient throttle (container
+//! cap / per-function cap): workers back off briefly and requeue it,
+//! up to a bounded retry budget. Shutdown drops queued jobs
+//! (fire-and-forget semantics) but joins workers mid-invocation.
+
+use super::invoker::{InvokeError, Platform};
+use super::metrics::InvocationRecord;
+use crate::runtime::Prediction;
+use crate::util::clock::Nanos;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AsyncStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl AsyncStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AsyncStatus::Queued => "queued",
+            AsyncStatus::Running => "running",
+            AsyncStatus::Done => "done",
+            AsyncStatus::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, AsyncStatus::Done | AsyncStatus::Failed)
+    }
+}
+
+/// Snapshot of one async invocation's lifecycle.
+#[derive(Debug, Clone)]
+pub struct AsyncInvocation {
+    pub id: String,
+    pub function: String,
+    pub status: AsyncStatus,
+    pub record: Option<InvocationRecord>,
+    pub prediction: Option<Prediction>,
+    pub error: Option<String>,
+    pub submitted_at: Nanos,
+    pub finished_at: Option<Nanos>,
+}
+
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity (HTTP 429).
+    QueueFull { capacity: usize },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { capacity } => {
+                write!(f, "async queue full ({capacity} pending invocations)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Throttle-retry budget: ~60 s of cumulative backoff before an
+/// accepted job is failed for real. Sized against the paper-calibrated
+/// cold start (~2 s with simulated bootstrap delays) so a handful of
+/// jobs serialized behind a `max_concurrency: 1` function survive the
+/// wait; the backoff also yields the worker between attempts.
+const MAX_THROTTLE_RETRIES: u32 = 2400;
+const THROTTLE_BACKOFF: Duration = Duration::from_millis(25);
+
+struct Job {
+    id: String,
+    function: String,
+    seed: u64,
+    attempts: u32,
+}
+
+struct Shared {
+    platform: Arc<Platform>,
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    results: Mutex<BTreeMap<String, AsyncInvocation>>,
+    capacity: usize,
+    ttl_ns: u64,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Drop finished entries older than the TTL. Unfinished entries
+    /// are always kept (a queued job must stay pollable).
+    fn purge(&self) {
+        let now = self.platform.clock().now();
+        let ttl = self.ttl_ns;
+        self.results.lock().unwrap().retain(|_, entry| match entry.finished_at {
+            Some(done) => now.saturating_sub(done) <= ttl,
+            None => true,
+        });
+    }
+}
+
+pub struct AsyncInvoker {
+    shared: Arc<Shared>,
+    seq: AtomicU64,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl AsyncInvoker {
+    pub fn start(
+        platform: Arc<Platform>,
+        workers: usize,
+        capacity: usize,
+        result_ttl: Duration,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            platform,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            results: Mutex::new(BTreeMap::new()),
+            capacity: capacity.max(1),
+            ttl_ns: result_ttl.as_nanos() as u64,
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("async-invoke-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn async-invoke worker")
+            })
+            .collect();
+        Self { shared, seq: AtomicU64::new(1), workers: Mutex::new(handles) }
+    }
+
+    /// Enqueue an invocation; returns its id, or an error when the
+    /// queue is full. The function's existence is NOT checked here —
+    /// an unknown function surfaces as a `failed` result, exactly as a
+    /// queued job for a just-undeployed function would.
+    pub fn submit(&self, function: &str, seed: u64) -> Result<String, SubmitError> {
+        let now = self.shared.platform.clock().now();
+        let id = format!("inv-{:08x}", self.seq.fetch_add(1, Ordering::Relaxed));
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            if queue.len() >= self.shared.capacity {
+                return Err(SubmitError::QueueFull { capacity: self.shared.capacity });
+            }
+            queue.push_back(Job {
+                id: id.clone(),
+                function: function.to_string(),
+                seed,
+                attempts: 0,
+            });
+            self.shared.results.lock().unwrap().insert(
+                id.clone(),
+                AsyncInvocation {
+                    id: id.clone(),
+                    function: function.to_string(),
+                    status: AsyncStatus::Queued,
+                    record: None,
+                    prediction: None,
+                    error: None,
+                    submitted_at: now,
+                    finished_at: None,
+                },
+            );
+        }
+        self.shared.cv.notify_one();
+        Ok(id)
+    }
+
+    /// Snapshot of one invocation; `None` when unknown or expired.
+    pub fn get(&self, id: &str) -> Option<AsyncInvocation> {
+        self.shared.purge();
+        self.shared.results.lock().unwrap().get(id).cloned()
+    }
+
+    /// Jobs waiting in the queue (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Entries currently in the result store (any status).
+    pub fn stored(&self) -> usize {
+        self.shared.results.lock().unwrap().len()
+    }
+
+    /// Force a TTL sweep (the store also self-purges on access).
+    pub fn purge_expired(&self) {
+        self.shared.purge();
+    }
+}
+
+impl Drop for AsyncInvoker {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for handle in self.workers.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(job) = queue.pop_front() {
+                    break job;
+                }
+                queue = shared.cv.wait(queue).unwrap();
+            }
+        };
+        if let Some(entry) = shared.results.lock().unwrap().get_mut(&job.id) {
+            entry.status = AsyncStatus::Running;
+        }
+        let outcome = shared.platform.invoke(&job.function, job.seed);
+        // Transient capacity pressure: the caller already got a 202,
+        // so back off and requeue rather than failing accepted work.
+        if matches!(outcome, Err(InvokeError::Throttled)) && job.attempts < MAX_THROTTLE_RETRIES {
+            if let Some(entry) = shared.results.lock().unwrap().get_mut(&job.id) {
+                entry.status = AsyncStatus::Queued;
+            }
+            std::thread::sleep(THROTTLE_BACKOFF);
+            {
+                let mut queue = shared.queue.lock().unwrap();
+                queue.push_back(Job { attempts: job.attempts + 1, ..job });
+            }
+            shared.cv.notify_one();
+            continue;
+        }
+        let now = shared.platform.clock().now();
+        {
+            let mut results = shared.results.lock().unwrap();
+            if let Some(entry) = results.get_mut(&job.id) {
+                entry.finished_at = Some(now);
+                match outcome {
+                    Ok(out) => {
+                        entry.status = AsyncStatus::Done;
+                        entry.record = Some(out.record);
+                        entry.prediction = Some(out.prediction);
+                    }
+                    Err(InvokeError::NotFound(name)) => {
+                        entry.status = AsyncStatus::Failed;
+                        entry.error = Some(format!("function not found: {name}"));
+                    }
+                    Err(e) => {
+                        entry.status = AsyncStatus::Failed;
+                        entry.error = Some(e.to_string());
+                    }
+                }
+            }
+        }
+        shared.purge();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configparse::PlatformConfig;
+    use crate::platform::{Invoker, StartKind};
+    use crate::runtime::{MockEngine, MockModelCosts};
+    use std::time::Instant;
+
+    fn live_platform() -> Arc<Platform> {
+        let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+            "squeezenet",
+            2,
+            5.0,
+            85,
+        )]));
+        let config = PlatformConfig {
+            bootstrap: crate::configparse::BootstrapConfig {
+                simulate_delays: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        Arc::new(Invoker::live(config, engine))
+    }
+
+    fn wait_terminal(inv: &AsyncInvoker, id: &str) -> AsyncInvocation {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            if let Some(s) = inv.get(id) {
+                if s.status.is_terminal() {
+                    return s;
+                }
+            }
+            assert!(Instant::now() < deadline, "invocation {id} never finished");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn submit_executes_and_stores_result() {
+        let p = live_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        let inv = AsyncInvoker::start(p.clone(), 2, 16, Duration::from_secs(600));
+        let id = inv.submit("sq", 7).unwrap();
+        assert!(id.starts_with("inv-"));
+        let done = wait_terminal(&inv, &id);
+        assert_eq!(done.status, AsyncStatus::Done);
+        let record = done.record.expect("record present");
+        assert_eq!(record.start, StartKind::Cold);
+        assert!(record.billed_ms > 0);
+        assert!(done.prediction.is_some());
+        assert!(done.finished_at.unwrap() >= done.submitted_at);
+        // Platform-side accounting went through the normal pipeline.
+        assert_eq!(p.metrics.len(), 1);
+    }
+
+    #[test]
+    fn unknown_function_fails_the_job() {
+        let p = live_platform();
+        let inv = AsyncInvoker::start(p, 1, 16, Duration::from_secs(600));
+        let id = inv.submit("ghost", 1).unwrap();
+        let done = wait_terminal(&inv, &id);
+        assert_eq!(done.status, AsyncStatus::Failed);
+        assert!(done.error.unwrap().contains("not found"));
+    }
+
+    #[test]
+    fn queue_capacity_rejects_submit() {
+        let p = live_platform();
+        // No workers draining quickly enough to matter: capacity 2 and
+        // a platform with a deployed fn; fill the queue before workers
+        // start by using capacity that the submit loop can outrun is
+        // racy, so instead use an undeployed fn: jobs still drain, but
+        // we only assert the immediate-full case by submitting with a
+        // single worker blocked on a first slow job.
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        let inv = AsyncInvoker::start(p, 1, 1, Duration::from_secs(600));
+        // Saturate: at most 1 queued at a time; keep submitting until
+        // one lands while the previous is still queued, then expect
+        // QueueFull on the immediate next submit.
+        let mut saw_full = false;
+        for i in 0..200 {
+            match inv.submit("sq", i) {
+                Ok(_) => {}
+                Err(SubmitError::QueueFull { capacity }) => {
+                    assert_eq!(capacity, 1);
+                    saw_full = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_full, "queue never reported full");
+    }
+
+    #[test]
+    fn throttled_jobs_requeue_until_capacity_frees() {
+        let p = live_platform();
+        // Per-function cap of 1 with 4 workers: concurrent dequeues
+        // hit the cap constantly, but every accepted job must still
+        // complete via backoff + requeue.
+        p.deploy_full("sq", "squeezenet", "pallas", 1024, 0, Some(1)).unwrap();
+        let inv = AsyncInvoker::start(p, 4, 64, Duration::from_secs(600));
+        let ids: Vec<String> = (0..6).map(|i| inv.submit("sq", i).unwrap()).collect();
+        for id in &ids {
+            let done = wait_terminal(&inv, id);
+            assert_eq!(done.status, AsyncStatus::Done, "{:?}", done.error);
+        }
+    }
+
+    #[test]
+    fn results_expire_after_ttl() {
+        let p = live_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        let inv = AsyncInvoker::start(p, 1, 16, Duration::from_millis(20));
+        let id = inv.submit("sq", 1).unwrap();
+        wait_terminal(&inv, &id);
+        // Live SystemClock: wait past the TTL, then the entry is gone.
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(inv.get(&id).is_none(), "entry should have expired");
+        assert_eq!(inv.stored(), 0);
+    }
+
+    #[test]
+    fn ids_are_unique_and_results_isolated() {
+        let p = live_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        let inv = AsyncInvoker::start(p, 4, 64, Duration::from_secs(600));
+        let ids: Vec<String> = (0..10).map(|i| inv.submit("sq", i).unwrap()).collect();
+        let unique: std::collections::BTreeSet<_> = ids.iter().collect();
+        assert_eq!(unique.len(), ids.len());
+        for id in &ids {
+            let done = wait_terminal(&inv, id);
+            assert_eq!(done.status, AsyncStatus::Done);
+            assert_eq!(done.id, *id);
+        }
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let p = live_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        let inv = AsyncInvoker::start(p, 2, 16, Duration::from_secs(600));
+        inv.submit("sq", 1).unwrap();
+        drop(inv); // must not hang
+    }
+}

@@ -17,19 +17,35 @@ use super::throttle::CpuGovernor;
 use crate::configparse::PlatformConfig;
 use crate::runtime::{Engine, Prediction};
 use crate::util::{Clock, SplitMix64, SystemClock};
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Error kind surfaced to the gateway (HTTP status mapping).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum InvokeError {
-    #[error("function not found: {0}")]
     NotFound(String),
-    #[error("throttled: container capacity exhausted")]
     Throttled,
-    #[error("execution failed: {0}")]
-    Failed(#[from] anyhow::Error),
+    Failed(anyhow::Error),
+}
+
+impl std::fmt::Display for InvokeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InvokeError::NotFound(name) => write!(f, "function not found: {name}"),
+            InvokeError::Throttled => write!(f, "throttled: container capacity exhausted"),
+            InvokeError::Failed(e) => write!(f, "execution failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for InvokeError {}
+
+impl From<anyhow::Error> for InvokeError {
+    fn from(e: anyhow::Error) -> Self {
+        InvokeError::Failed(e)
+    }
 }
 
 /// Successful invocation result.
@@ -50,6 +66,57 @@ pub struct Invoker {
     config: PlatformConfig,
     clock: Arc<dyn Clock>,
     rng: Mutex<SplitMix64>,
+    /// Per-function in-flight counters (enforces `max_concurrency`).
+    fn_in_flight: Mutex<BTreeMap<String, usize>>,
+}
+
+/// Partial update applied by [`Invoker::reconfigure`]; `None` fields
+/// keep the current value. `max_concurrency` is doubly optional so a
+/// patch can explicitly clear the cap (`Some(None)`).
+#[derive(Debug, Clone, Default)]
+pub struct ReconfigurePatch {
+    pub memory_mb: Option<u32>,
+    pub variant: Option<String>,
+    pub min_warm: Option<usize>,
+    pub max_concurrency: Option<Option<usize>>,
+}
+
+/// RAII decrement for one function's in-flight counter.
+struct FnFlightGuard<'a> {
+    map: &'a Mutex<BTreeMap<String, usize>>,
+    name: String,
+}
+
+impl<'a> FnFlightGuard<'a> {
+    /// Register one in-flight request for `name`; `None` when the
+    /// function's concurrency cap is already saturated.
+    fn acquire(
+        map: &'a Mutex<BTreeMap<String, usize>>,
+        name: &str,
+        cap: Option<usize>,
+    ) -> Option<Self> {
+        let mut g = map.lock().unwrap();
+        let count = g.entry(name.to_string()).or_insert(0);
+        if let Some(cap) = cap {
+            if *count >= cap {
+                return None;
+            }
+        }
+        *count += 1;
+        Some(FnFlightGuard { map, name: name.to_string() })
+    }
+}
+
+impl Drop for FnFlightGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = self.map.lock().unwrap();
+        if let Some(count) = g.get_mut(&self.name) {
+            *count = count.saturating_sub(1);
+            if *count == 0 {
+                g.remove(&self.name);
+            }
+        }
+    }
 }
 
 /// Alias used across the crate: the assembled platform.
@@ -68,6 +135,7 @@ impl Invoker {
             rng: Mutex::new(SplitMix64::new(config.seed)),
             config,
             clock,
+            fn_in_flight: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -92,7 +160,8 @@ impl Invoker {
         &self.governor
     }
 
-    /// Deploy a function (name, model, variant, memory).
+    /// Deploy a function (name, model, variant, memory) with default
+    /// policy.
     pub fn deploy(
         &self,
         name: &str,
@@ -101,6 +170,91 @@ impl Invoker {
         memory_mb: u32,
     ) -> Result<Arc<FunctionSpec>> {
         self.registry.deploy(name, model, variant, memory_mb)
+    }
+
+    /// Deploy with the full v2 spec (warm-pool policy + concurrency
+    /// cap). `min_warm` containers are provisioned eagerly,
+    /// best-effort: the target is a policy, not a transaction, so
+    /// hitting the container cap mid-prewarm does not fail (or roll
+    /// back) the deployment — callers can read the achieved count
+    /// from the pool (`warm_containers` in the API resource).
+    pub fn deploy_full(
+        &self,
+        name: &str,
+        model: &str,
+        variant: &str,
+        memory_mb: u32,
+        min_warm: usize,
+        max_concurrency: Option<usize>,
+    ) -> Result<Arc<FunctionSpec>> {
+        let spec =
+            self.registry.deploy_full(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        self.top_up_warm_pool(&spec);
+        Ok(spec)
+    }
+
+    /// Atomic create (v2 POST semantics): fails if the name is taken,
+    /// so two racing creates cannot both succeed. Prewarm is
+    /// best-effort, as in [`Self::deploy_full`].
+    pub fn create_full(
+        &self,
+        name: &str,
+        model: &str,
+        variant: &str,
+        memory_mb: u32,
+        min_warm: usize,
+        max_concurrency: Option<usize>,
+    ) -> Result<Arc<FunctionSpec>> {
+        let spec =
+            self.registry.create_full(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        self.top_up_warm_pool(&spec);
+        Ok(spec)
+    }
+
+    /// Best-effort provision up to the spec's `min_warm` target.
+    fn top_up_warm_pool(&self, spec: &Arc<FunctionSpec>) {
+        if spec.min_warm > 0 {
+            let have = self.pool.warm_count(&spec.name);
+            if have < spec.min_warm {
+                let _ = self.prewarm(&spec.name, spec.min_warm - have);
+            }
+        }
+    }
+
+    /// Remove a function: drop the registration and reap its warm
+    /// containers. Returns the number of containers reaped. In-flight
+    /// invocations complete; their containers age out via keep-alive.
+    pub fn undeploy(&self, name: &str) -> Result<usize> {
+        if !self.registry.remove(name) {
+            bail!("function {name:?} is not deployed");
+        }
+        Ok(self.pool.evict_function(name))
+    }
+
+    /// Apply a partial spec update. Warm containers are evicted only
+    /// when the patch changes something a container embodies
+    /// (memory/variant) — a cap- or policy-only patch keeps the pool
+    /// warm. The new `min_warm` target is then topped up best-effort
+    /// (see [`Self::deploy_full`]). Validation failures leave the
+    /// current spec untouched.
+    pub fn reconfigure(&self, name: &str, patch: &ReconfigurePatch) -> Result<Arc<FunctionSpec>> {
+        let cur = self.registry.get(name)?;
+        let spec = self.registry.deploy_full(
+            name,
+            &cur.model,
+            patch.variant.as_deref().unwrap_or(&cur.variant),
+            patch.memory_mb.unwrap_or(cur.memory_mb),
+            patch.min_warm.unwrap_or(cur.min_warm),
+            match patch.max_concurrency {
+                Some(v) => v,
+                None => cur.max_concurrency,
+            },
+        )?;
+        if spec.memory_mb != cur.memory_mb || spec.variant != cur.variant {
+            self.pool.evict_function(name);
+        }
+        self.top_up_warm_pool(&spec);
+        Ok(spec)
     }
 
     /// Pre-warm `n` containers for `function` (§5 "keep warm" knob).
@@ -124,6 +278,14 @@ impl Invoker {
             .registry
             .get(function)
             .map_err(|_| InvokeError::NotFound(function.to_string()))?;
+        let _fn_flight =
+            match FnFlightGuard::acquire(&self.fn_in_flight, function, spec.max_concurrency) {
+                Some(guard) => guard,
+                None => {
+                    self.scaler.note_throttled();
+                    return Err(InvokeError::Throttled);
+                }
+            };
         let _flight = self.scaler.arrive();
         let t_queue_start = self.clock.now();
 
@@ -214,8 +376,25 @@ impl Invoker {
         };
         self.metrics.record(record.clone());
 
-        // Release to the warm pool for reuse.
-        self.pool.release(container);
+        // Release to the warm pool for reuse — unless the function was
+        // undeployed or reconfigured mid-flight: a container whose
+        // baked-in model/memory/variant no longer matches the current
+        // spec must not serve again (and must not hold a capacity
+        // slot). Compared by content, not Arc identity, so cap- or
+        // policy-only patches don't churn containers.
+        let reusable = match self.registry.get(function) {
+            Ok(current) => {
+                current.model == container.spec.model
+                    && current.variant == container.spec.variant
+                    && current.memory_mb == container.spec.memory_mb
+            }
+            Err(_) => false,
+        };
+        if reusable {
+            self.pool.release(container);
+        } else {
+            self.pool.retire(container);
+        }
 
         Ok(InvokeOutcome { record, prediction })
     }
@@ -373,6 +552,154 @@ mod tests {
         // And they are all reusable now.
         let r = p.invoke("sq", 99).unwrap();
         assert_eq!(r.record.start, StartKind::Warm);
+    }
+
+    #[test]
+    fn undeploy_removes_function_and_reaps_warm_pool() {
+        let (p, _, _) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        assert_eq!(p.pool.warm_count("sq"), 1);
+        let reaped = p.undeploy("sq").unwrap();
+        assert_eq!(reaped, 1);
+        assert_eq!(p.pool.total_alive(), 0);
+        assert!(matches!(p.invoke("sq", 2), Err(InvokeError::NotFound(_))));
+        assert!(p.undeploy("sq").is_err(), "double undeploy is an error");
+    }
+
+    #[test]
+    fn deploy_full_prewarms_min_warm() {
+        let (p, _, _) = platform();
+        p.deploy_full("sq", "squeezenet", "pallas", 1024, 2, None).unwrap();
+        assert_eq!(p.pool.warm_count("sq"), 2);
+        // First invocation finds a warm container immediately.
+        let r = p.invoke("sq", 1).unwrap();
+        assert_eq!(r.record.start, StartKind::Warm);
+    }
+
+    #[test]
+    fn reconfigure_updates_spec_and_cycles_containers() {
+        let (p, _, _) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        p.invoke("sq", 1).unwrap();
+        assert_eq!(p.pool.warm_count("sq"), 1);
+        let patch = ReconfigurePatch { memory_mb: Some(1536), ..Default::default() };
+        let spec = p.reconfigure("sq", &patch).unwrap();
+        assert_eq!(spec.memory_mb, 1536);
+        // Old 512 MB containers were evicted: next start is cold.
+        assert_eq!(p.pool.warm_count("sq"), 0);
+        let r = p.invoke("sq", 2).unwrap();
+        assert_eq!(r.record.start, StartKind::Cold);
+        assert_eq!(r.record.memory_mb, 1536);
+        // Unknown function and invalid patch both error.
+        assert!(p.reconfigure("nope", &Default::default()).is_err());
+        let bad = ReconfigurePatch { memory_mb: Some(100), ..Default::default() };
+        assert!(p.reconfigure("sq", &bad).is_err());
+        assert_eq!(p.registry.get("sq").unwrap().memory_mb, 1536, "failed patch keeps spec");
+    }
+
+    #[test]
+    fn cap_only_reconfigure_keeps_warm_pool() {
+        let (p, _, _) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        assert_eq!(p.pool.warm_count("sq"), 1);
+        // Changing only the concurrency cap must not destroy warm
+        // containers — they embody memory/variant, not the cap.
+        let patch =
+            ReconfigurePatch { max_concurrency: Some(Some(4)), ..Default::default() };
+        let spec = p.reconfigure("sq", &patch).unwrap();
+        assert_eq!(spec.max_concurrency, Some(4));
+        assert_eq!(p.pool.warm_count("sq"), 1, "warm pool survives cap-only patch");
+        let r = p.invoke("sq", 2).unwrap();
+        assert_eq!(r.record.start, StartKind::Warm);
+        // And the container is re-pooled after serving (content match,
+        // not Arc identity).
+        assert_eq!(p.pool.warm_count("sq"), 1);
+    }
+
+    #[test]
+    fn container_in_flight_during_reconfigure_is_retired_not_pooled() {
+        use crate::runtime::MockModelCosts;
+        // Live clock so the in-flight invocation genuinely overlaps
+        // the reconfigure (mock predict sleeps real time).
+        let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+            "squeezenet",
+            300,
+            5.0,
+            85,
+        )]));
+        let cfg = PlatformConfig {
+            bootstrap: crate::configparse::BootstrapConfig {
+                simulate_delays: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let p = Arc::new(Invoker::live(cfg, engine));
+        p.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let p2 = p.clone();
+        let t = std::thread::spawn(move || p2.invoke("sq", 1).unwrap());
+        // Let the invocation start executing, then change the spec.
+        std::thread::sleep(Duration::from_millis(80));
+        p.reconfigure("sq", &ReconfigurePatch { memory_mb: Some(1536), ..Default::default() })
+            .unwrap();
+        let out = t.join().unwrap();
+        assert_eq!(out.record.memory_mb, 512, "in-flight run billed at old spec");
+        // The old-spec container must not have been parked for reuse.
+        assert_eq!(p.pool.warm_count("sq"), 0);
+        assert_eq!(p.pool.total_alive(), 0);
+        let r = p.invoke("sq", 2).unwrap();
+        assert_eq!(r.record.start, StartKind::Cold);
+        assert_eq!(r.record.memory_mb, 1536);
+    }
+
+    #[test]
+    fn container_in_flight_during_undeploy_is_retired() {
+        use crate::runtime::MockModelCosts;
+        let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+            "squeezenet",
+            300,
+            5.0,
+            85,
+        )]));
+        let cfg = PlatformConfig {
+            bootstrap: crate::configparse::BootstrapConfig {
+                simulate_delays: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let p = Arc::new(Invoker::live(cfg, engine));
+        p.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let p2 = p.clone();
+        let t = std::thread::spawn(move || p2.invoke("sq", 1).unwrap());
+        std::thread::sleep(Duration::from_millis(80));
+        p.undeploy("sq").unwrap();
+        t.join().unwrap();
+        // No orphaned container may keep holding a capacity slot.
+        assert_eq!(p.pool.total_alive(), 0);
+        assert_eq!(p.pool.warm_count("sq"), 0);
+    }
+
+    #[test]
+    fn per_function_concurrency_cap_throttles() {
+        let (p, _, _) = platform();
+        p.deploy_full("sq", "squeezenet", "pallas", 1024, 0, Some(1)).unwrap();
+        // Saturate the single slot by holding the counter via a warm
+        // container acquired mid-flight: simulate by taking the guard
+        // path directly — first invoke succeeds (counter returns to 0).
+        assert!(p.invoke("sq", 1).is_ok());
+        // Hold one in-flight slot manually.
+        let guard = FnFlightGuard::acquire(&p.fn_in_flight, "sq", Some(1)).unwrap();
+        let err = p.invoke("sq", 2).unwrap_err();
+        assert!(matches!(err, InvokeError::Throttled));
+        assert_eq!(p.scaler.throttled_count(), 1);
+        drop(guard);
+        assert!(p.invoke("sq", 3).is_ok(), "slot freed after guard drop");
+        // Other functions are unaffected by this function's cap.
+        p.deploy("other", "squeezenet", "pallas", 1024).unwrap();
+        assert!(p.invoke("other", 1).is_ok());
     }
 
     #[test]

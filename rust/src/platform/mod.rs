@@ -1,5 +1,6 @@
 //! The FaaS platform core (the paper's measured system, built).
 
+pub mod async_invoke;
 pub mod billing;
 pub mod container;
 pub mod invoker;
@@ -9,9 +10,10 @@ pub mod registry;
 pub mod scaler;
 pub mod throttle;
 
+pub use async_invoke::{AsyncInvocation, AsyncInvoker, AsyncStatus, SubmitError};
 pub use billing::{BillingMeter, InvoiceLine};
 pub use container::{Container, ContainerState};
-pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform};
+pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform, ReconfigurePatch};
 pub use metrics::{InvocationRecord, MetricsSink, StartKind};
 pub use pool::WarmPool;
 pub use registry::{FunctionRegistry, FunctionSpec};

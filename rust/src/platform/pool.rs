@@ -136,6 +136,23 @@ impl WarmPool {
         n
     }
 
+    /// Evict every warm container of one function (undeploy /
+    /// reconfigure: stale-spec containers must not serve again).
+    /// Returns the number reaped; busy containers are untouched and
+    /// retire through the normal release path.
+    pub fn evict_function(&self, function: &str) -> usize {
+        let dead: Vec<Container> = {
+            let mut g = self.idle.lock().unwrap();
+            g.remove(function).unwrap_or_default()
+        };
+        let n = dead.len();
+        for mut c in dead {
+            c.reap();
+        }
+        self.total.fetch_sub(n, Ordering::SeqCst);
+        n
+    }
+
     /// Evict everything (tests / forced cold).
     pub fn evict_all(&self) -> usize {
         let mut dead = Vec::new();
@@ -311,6 +328,20 @@ mod tests {
         f.pool.cancel_reservation();
         assert!(f.pool.try_reserve(), "cancellation frees a slot");
         assert_eq!(f.pool.total_alive(), 2);
+    }
+
+    #[test]
+    fn evict_function_reaps_only_that_stack() {
+        let mut f = fixture(10, 600.0);
+        let c = provision(&mut f);
+        f.pool.release(c);
+        let c = provision(&mut f);
+        f.pool.release(c);
+        assert_eq!(f.pool.evict_function("unknown"), 0);
+        assert_eq!(f.pool.evict_function("sq"), 2);
+        assert_eq!(f.pool.warm_count("sq"), 0);
+        assert_eq!(f.pool.total_alive(), 0);
+        assert_eq!(f.engine.live_instances(), 0);
     }
 
     #[test]

@@ -26,6 +26,12 @@ pub struct FunctionSpec {
     pub peak_mem_mb: u32,
     /// Deployment package bytes (model + code), for cold-start I/O.
     pub package_bytes: u64,
+    /// Warm-pool policy: containers pre-warmed at deploy/reconfigure
+    /// (the paper's §5 "keep warm" knob, now part of the spec).
+    pub min_warm: usize,
+    /// Per-function in-flight cap; `None` leaves only the account-wide
+    /// container cap.
+    pub max_concurrency: Option<usize>,
 }
 
 pub struct FunctionRegistry {
@@ -49,14 +55,67 @@ impl FunctionRegistry {
         }
     }
 
-    /// Deploy (or redeploy) a function. Validates the memory tier and
-    /// the model's peak-memory floor against the engine's manifest.
+    /// Deploy (or redeploy) a function with default policy (no
+    /// pre-warm target, no per-function concurrency cap).
     pub fn deploy(
         &self,
         name: &str,
         model: &str,
         variant: &str,
         memory_mb: MemorySize,
+    ) -> Result<Arc<FunctionSpec>> {
+        self.deploy_full(name, model, variant, memory_mb, 0, None)
+    }
+
+    /// Deploy (or redeploy) a function. Validates the memory tier and
+    /// the model's peak-memory floor against the engine's manifest.
+    pub fn deploy_full(
+        &self,
+        name: &str,
+        model: &str,
+        variant: &str,
+        memory_mb: MemorySize,
+        min_warm: usize,
+        max_concurrency: Option<usize>,
+    ) -> Result<Arc<FunctionSpec>> {
+        let spec =
+            self.validated_spec(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        self.functions.write().unwrap().insert(name.to_string(), spec.clone());
+        Ok(spec)
+    }
+
+    /// Atomic create: like [`Self::deploy_full`] but fails instead of
+    /// overwriting an existing deployment (the v2 POST semantics — two
+    /// racing creates cannot both succeed).
+    pub fn create_full(
+        &self,
+        name: &str,
+        model: &str,
+        variant: &str,
+        memory_mb: MemorySize,
+        min_warm: usize,
+        max_concurrency: Option<usize>,
+    ) -> Result<Arc<FunctionSpec>> {
+        let spec =
+            self.validated_spec(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        let mut functions = self.functions.write().unwrap();
+        if functions.contains_key(name) {
+            bail!("function {name:?} is already deployed");
+        }
+        functions.insert(name.to_string(), spec.clone());
+        Ok(spec)
+    }
+
+    /// Shared validation: name charset, memory tier, model manifest,
+    /// peak-memory floor, concurrency cap sanity.
+    fn validated_spec(
+        &self,
+        name: &str,
+        model: &str,
+        variant: &str,
+        memory_mb: MemorySize,
+        min_warm: usize,
+        max_concurrency: Option<usize>,
     ) -> Result<Arc<FunctionSpec>> {
         if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
         {
@@ -85,16 +144,19 @@ impl FunctionRegistry {
                 manifest.paper_peak_mem_mb
             );
         }
-        let spec = Arc::new(FunctionSpec {
+        if let Some(0) = max_concurrency {
+            bail!("function {name}: max_concurrency must be at least 1 when set");
+        }
+        Ok(Arc::new(FunctionSpec {
             name: name.to_string(),
             model: model.to_string(),
             variant: variant.to_string(),
             memory_mb,
             peak_mem_mb: manifest.paper_peak_mem_mb,
             package_bytes: manifest.package_bytes(),
-        });
-        self.functions.write().unwrap().insert(name.to_string(), spec.clone());
-        Ok(spec)
+            min_warm,
+            max_concurrency,
+        }))
     }
 
     pub fn get(&self, name: &str) -> Result<Arc<FunctionSpec>> {
@@ -146,6 +208,18 @@ mod tests {
     }
 
     #[test]
+    fn create_full_refuses_existing_name() {
+        let r = reg();
+        r.create_full("f", "squeezenet", "pallas", 512, 0, None).unwrap();
+        let err = r.create_full("f", "squeezenet", "pallas", 1024, 0, None).unwrap_err();
+        assert!(err.to_string().contains("already deployed"));
+        assert_eq!(r.get("f").unwrap().memory_mb, 512, "loser must not overwrite");
+        // Invalid specs are rejected before touching the map.
+        assert!(r.create_full("g", "squeezenet", "pallas", 100, 0, None).is_err());
+        assert!(r.get("g").is_err());
+    }
+
+    #[test]
     fn memory_tier_validation() {
         let r = reg();
         assert!(r.deploy("f", "squeezenet", "pallas", 100).is_err(), "below min");
@@ -166,6 +240,20 @@ mod tests {
         // of the paper's 128-step sweep, 512 MB.
         assert!(r.deploy("rx", "resnext50", "pallas", 384).is_err());
         assert!(r.deploy("rx", "resnext50", "pallas", 512).is_ok());
+    }
+
+    #[test]
+    fn deploy_full_policy_fields() {
+        let r = reg();
+        let spec = r.deploy_full("sq", "squeezenet", "pallas", 512, 2, Some(8)).unwrap();
+        assert_eq!(spec.min_warm, 2);
+        assert_eq!(spec.max_concurrency, Some(8));
+        // Plain deploy defaults.
+        let spec = r.deploy("sq2", "squeezenet", "pallas", 512).unwrap();
+        assert_eq!(spec.min_warm, 0);
+        assert_eq!(spec.max_concurrency, None);
+        // A zero cap would make the function uninvokable.
+        assert!(r.deploy_full("sq3", "squeezenet", "pallas", 512, 0, Some(0)).is_err());
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! real inference, and pallas-vs-ref numeric agreement across the
 //! python/rust boundary.
 //!
+//! Every test here is `#[ignore]`d by default because the artifacts
+//! are environment-dependent build products (JAX/Pallas AOT pipeline)
+//! that the repo does not ship. Opt in with
+//! `cargo test --test integration_pjrt -- --ignored` after building
+//! them.
+//!
 //! One shared engine keeps compile cost bounded; tests take care to be
 //! independent of ordering.
 
@@ -40,6 +46,7 @@ fn shared_engine() -> Arc<PjrtEngine> {
 }
 
 #[test]
+#[ignore = "requires real AOT artifacts (run `make artifacts` with the JAX/Pallas toolchain first); the repo ships without them"]
 fn zoo_lists_three_paper_models() {
     let engine = shared_engine();
     for (name, size_mb, peak) in
@@ -54,6 +61,7 @@ fn zoo_lists_three_paper_models() {
 }
 
 #[test]
+#[ignore = "requires real AOT artifacts (run `make artifacts` with the JAX/Pallas toolchain first); the repo ships without them"]
 fn squeezenet_predict_roundtrip() {
     let engine = shared_engine();
     let (h, stats) = engine.create_instance("squeezenet", "pallas").unwrap();
@@ -75,6 +83,7 @@ fn squeezenet_predict_roundtrip() {
 }
 
 #[test]
+#[ignore = "requires real AOT artifacts (run `make artifacts` with the JAX/Pallas toolchain first); the repo ships without them"]
 fn pallas_and_ref_artifacts_agree() {
     // The L1 correctness signal ACROSS the language boundary: the
     // artifact with Pallas kernels and the pure-XLA reference must
@@ -93,6 +102,7 @@ fn pallas_and_ref_artifacts_agree() {
 }
 
 #[test]
+#[ignore = "requires real AOT artifacts (run `make artifacts` with the JAX/Pallas toolchain first); the repo ships without them"]
 fn platform_cold_warm_on_real_inference() {
     let engine = shared_engine();
     let clock = ManualClock::new();
@@ -119,6 +129,7 @@ fn platform_cold_warm_on_real_inference() {
 }
 
 #[test]
+#[ignore = "requires real AOT artifacts (run `make artifacts` with the JAX/Pallas toolchain first); the repo ships without them"]
 fn throttle_scales_real_predict_time() {
     let engine = shared_engine();
     let clock = ManualClock::new();

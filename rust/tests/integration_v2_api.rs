@@ -1,0 +1,206 @@
+//! End-to-end v2 API integration: gateway over real HTTP, driven
+//! through the typed client SDK — deploy, sync + async invocation,
+//! polling, reconfigure, per-function stats, undeploy, and the v1
+//! shim coexistence.
+
+use lambdaserve::configparse::{BootstrapConfig, PlatformConfig};
+use lambdaserve::gateway::{ApiClient, DeploySpec, Gateway, ReconfigureSpec};
+use lambdaserve::httpd::http_get;
+use lambdaserve::platform::Invoker;
+use lambdaserve::runtime::{MockEngine, MockModelCosts};
+use lambdaserve::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fast_platform() -> Arc<Invoker> {
+    let engine = Arc::new(MockEngine::new(vec![
+        MockModelCosts::paper_like("squeezenet", 2, 5.0, 85),
+        MockModelCosts::paper_like("resnet18", 4, 46.7, 229),
+    ]));
+    let config = PlatformConfig {
+        bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+        ..Default::default()
+    };
+    Arc::new(Invoker::live(config, engine))
+}
+
+fn start_gateway() -> (String, lambdaserve::httpd::ShutdownHandle, std::thread::JoinHandle<()>) {
+    let gw = Gateway::bind("127.0.0.1:0", 8, fast_platform()).unwrap();
+    let addr = gw.local_addr().to_string();
+    let sh = gw.shutdown_handle();
+    let t = std::thread::spawn(move || gw.serve().unwrap());
+    (addr, sh, t)
+}
+
+#[test]
+fn sdk_full_lifecycle_sync_and_async() {
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+
+    api.health().unwrap();
+
+    // Deploy with the full v2 spec.
+    let f = api
+        .deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024).min_warm(1))
+        .unwrap();
+    assert_eq!(f.name, "sq");
+    assert_eq!(f.memory_mb, 1024);
+    assert_eq!(f.min_warm, 1);
+    assert_eq!(f.warm_containers, 1, "min_warm pre-provisioned");
+
+    // Duplicate deploy -> 409 typed error.
+    let dup = api.deploy(&DeploySpec::new("sq", "squeezenet")).unwrap_err();
+    assert_eq!(dup.status, 409);
+    assert_eq!(dup.code, "already_exists");
+
+    // Sync invoke: pre-warmed, so the first start is warm.
+    let r1 = api.invoke("sq", Some(7)).unwrap();
+    assert_eq!(r1.start, "warm");
+    assert!(r1.billed_ms > 0);
+    assert!(r1.response_s > 0.0);
+
+    // Async invoke: 202 + id, poll to completion through the SDK.
+    let id = api.invoke_async("sq", Some(8)).unwrap();
+    assert!(id.starts_with("inv-"));
+    let done = api
+        .wait_invocation(&id, Duration::from_millis(2), Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(done.status, "done");
+    assert_eq!(done.function, "sq");
+    let result = done.result.expect("completed result");
+    assert!(result.start == "warm" || result.start == "cold");
+    assert!(result.billed_ms > 0);
+    assert!(result.cost_dollars > 0.0);
+
+    // Per-function stats reflect both invocations.
+    let stats = api.stats("sq").unwrap();
+    assert_eq!(stats.invocations, 2);
+    assert_eq!(stats.cold_starts + stats.warm_starts, 2);
+    assert!(stats.billed_ms_total >= r1.billed_ms);
+    assert!(stats.cost_dollars_total > 0.0);
+    assert!(stats.response_mean_s > 0.0);
+
+    // List shows exactly our function.
+    let fns = api.functions().unwrap();
+    assert_eq!(fns.len(), 1);
+    assert_eq!(fns[0].name, "sq");
+
+    // Reconfigure: bump memory, clear pre-warm; old containers cycle.
+    let f = api
+        .reconfigure(
+            "sq",
+            &ReconfigureSpec { memory_mb: Some(1536), ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(f.memory_mb, 1536);
+    let r = api.invoke("sq", Some(9)).unwrap();
+    assert_eq!(r.start, "cold", "stale warm containers evicted on reconfigure");
+
+    // Undeploy, then everything 404s.
+    api.undeploy("sq").unwrap();
+    let err = api.invoke("sq", Some(1)).unwrap_err();
+    assert_eq!(err.status, 404);
+    assert_eq!(err.code, "not_found");
+    let err = api.function("sq").unwrap_err();
+    assert_eq!(err.status, 404);
+    let err = api.undeploy("sq").unwrap_err();
+    assert_eq!(err.status, 404);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn sdk_async_errors_and_expiry_semantics() {
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+
+    // Async submit for an unknown function fails at submit time.
+    let err = api.invoke_async("ghost", None).unwrap_err();
+    assert_eq!(err.status, 404);
+
+    // Unknown invocation id -> 404.
+    let err = api.invocation("inv-ffffffff").unwrap_err();
+    assert_eq!(err.status, 404);
+
+    // A function undeployed with jobs still queued surfaces "failed"
+    // results rather than losing them.
+    api.deploy(&DeploySpec::new("rn", "resnet18").memory_mb(512)).unwrap();
+    let id = api.invoke_async("rn", Some(1)).unwrap();
+    let done = api
+        .wait_invocation(&id, Duration::from_millis(2), Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(done.status, "done");
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn v1_and_v2_share_one_platform() {
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+    let tmo = Duration::from_secs(10);
+
+    // Deploy through v2, invoke through the v1 GET shim.
+    api.deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024)).unwrap();
+    let r = http_get(&addr, "/v1/invoke/sq?seed=1", tmo).unwrap();
+    assert_eq!(r.status, 200);
+    let j = Json::parse(&r.body_str()).unwrap();
+    assert_eq!(j.get("start").unwrap().as_str(), Some("cold"));
+
+    // The v1 invocation shows up in v2 per-function stats.
+    let stats = api.stats("sq").unwrap();
+    assert_eq!(stats.invocations, 1);
+    assert_eq!(stats.cold_starts, 1);
+
+    // And the v1 global stats see the same platform.
+    let r = http_get(&addr, "/v1/stats", tmo).unwrap();
+    let j = Json::parse(&r.body_str()).unwrap();
+    assert_eq!(j.get("invocations").unwrap().as_u64(), Some(1));
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn per_function_concurrency_cap_is_enforced_over_http() {
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(30));
+
+    // Cap rn at 1 concurrent invocation and flood it asynchronously:
+    // the cap throttles concurrent workers, but accepted (202) jobs
+    // are requeued with backoff, so every one must complete.
+    api.deploy(&DeploySpec::new("rn", "resnet18").memory_mb(1024).max_concurrency(1)).unwrap();
+    let ids: Vec<String> = (0..4).map(|i| api.invoke_async("rn", Some(i)).unwrap()).collect();
+    for id in &ids {
+        let s = api
+            .wait_invocation(id, Duration::from_millis(2), Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(s.status, "done", "invocation {id}: {:?}", s.error);
+        assert!(s.result.is_some());
+    }
+
+    // A sync burst against the same cap still sees 429s: the sync
+    // path has no queue to absorb the pressure.
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(30));
+                api.invoke("rn", Some(100 + i))
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    let throttled = results
+        .iter()
+        .filter(|r| matches!(r, Err(e) if e.status == 429 && e.code == "throttled"))
+        .count();
+    assert_eq!(ok + throttled, 4, "only 200s and 429s expected: {results:?}");
+    assert!(ok >= 1, "at least one sync invocation must get through");
+
+    sh.shutdown();
+    t.join().unwrap();
+}
