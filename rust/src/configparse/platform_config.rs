@@ -142,6 +142,14 @@ pub struct PlatformConfig {
     /// Hard cap on concurrently provisioned containers per function
     /// (AWS account default: 1000 across the account).
     pub max_containers: usize,
+    /// Background pool-maintainer tick interval, seconds: each tick
+    /// runs the keep-alive eviction sweep and replenishes `min_warm`
+    /// targets. `0` disables the maintainer.
+    pub maintainer_interval_s: f64,
+    /// Capacity of the metrics sink's recent-records ring buffer (raw
+    /// records for the experiment/report tooling; aggregates are
+    /// streamed and never truncated). `0` keeps aggregates only.
+    pub metrics_ring_capacity: usize,
     /// CPU throttle quantum, seconds (cgroup cfs_period-like).
     pub throttle_quantum_s: f64,
     /// Worker threads executing containers.
@@ -161,6 +169,8 @@ impl Default for PlatformConfig {
             full_power_mem_mb: 1792,
             keep_alive_s: 300.0,
             max_containers: 1000,
+            maintainer_interval_s: 5.0,
+            metrics_ring_capacity: 4096,
             throttle_quantum_s: 0.02,
             executor_threads: 8,
             pricing: PricingConfig::default(),
@@ -194,6 +204,12 @@ impl PlatformConfig {
         }
         if let Some(v) = get_u64("platform.max_containers") {
             cfg.max_containers = v as usize;
+        }
+        if let Some(v) = get_f64("platform.maintainer_interval_s") {
+            cfg.maintainer_interval_s = v;
+        }
+        if let Some(v) = get_u64("platform.metrics_ring_capacity") {
+            cfg.metrics_ring_capacity = v as usize;
         }
         if let Some(v) = get_f64("platform.throttle_quantum_s") {
             cfg.throttle_quantum_s = v;
@@ -279,6 +295,12 @@ impl PlatformConfig {
         if self.keep_alive_s < 0.0 {
             bail!("keep_alive_s must be non-negative");
         }
+        if !self.maintainer_interval_s.is_finite()
+            || self.maintainer_interval_s < 0.0
+            || self.maintainer_interval_s > 1e9
+        {
+            bail!("maintainer_interval_s must be in [0, 1e9] seconds (0 disables)");
+        }
         Ok(())
     }
 
@@ -344,6 +366,8 @@ mod tests {
 [platform]
 full_power_mem_mb = 2048
 keep_alive_s = 300.0
+maintainer_interval_s = 2.5
+metrics_ring_capacity = 128
 seed = 7
 
 [bootstrap]
@@ -357,6 +381,8 @@ rtt_s = 0.01
         .unwrap();
         assert_eq!(cfg.full_power_mem_mb, 2048);
         assert_eq!(cfg.keep_alive_s, 300.0);
+        assert_eq!(cfg.maintainer_interval_s, 2.5);
+        assert_eq!(cfg.metrics_ring_capacity, 128);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.bootstrap.runtime_init_s, 0.5);
         assert!(!cfg.bootstrap.simulate_delays);
@@ -382,6 +408,7 @@ dollars_per_unit = [1.0, 2.0]
     #[test]
     fn validation_failures() {
         assert!(PlatformConfig::from_toml("[platform]\nfull_power_mem_mb = 0").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\nmaintainer_interval_s = -1.0").is_err());
         assert!(PlatformConfig::from_toml("[pricing]\ngranularity_ms = 0").is_err());
         assert!(PlatformConfig::from_toml(
             "[pricing]\nmemory_mb = [256, 128]\ndollars_per_unit = [1.0, 2.0]"

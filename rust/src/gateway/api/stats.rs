@@ -1,11 +1,63 @@
 //! Stats handlers: per-function latency/cold-start/billing breakdown
 //! (`GET /v2/functions/:name/stats`) and the platform-wide snapshot
 //! (`GET /v2/stats`).
+//!
+//! Both routes read one consistent [`FnMetrics`] shard snapshot from
+//! the streaming metrics sink — a single lock acquisition and O(1)
+//! cost regardless of how many invocations have been recorded (the
+//! old implementation cloned and re-scanned the full record vector
+//! under four separate locks per request).
 
 use super::{err, ApiCtx};
 use crate::httpd::{HttpRequest, Params, Responder};
-use crate::platform::StartKind;
+use crate::platform::FnMetrics;
 use crate::util::json::{obj, Json};
+
+const NS: f64 = 1e9;
+
+fn secs(ns: u64) -> Json {
+    Json::Num(ns as f64 / NS)
+}
+
+/// Counters, cold/warm-split percentiles, and cost accumulators of
+/// one shard, read under its lock — everything here is one consistent
+/// view (`invocations == cold_starts + warm_starts`, always). The two
+/// transient merges (`response_all`/`predict_all`) are the only
+/// allocations; the shard itself is never copied.
+fn shard_fields(m: &FnMetrics) -> Vec<(&'static str, Json)> {
+    let response = m.response_all();
+    let predict = m.predict_all();
+    vec![
+        ("invocations", Json::Num(m.invocations as f64)),
+        ("cold_starts", Json::Num(m.cold_starts as f64)),
+        ("warm_starts", Json::Num(m.warm_starts() as f64)),
+        ("throttled", Json::Num(m.throttled as f64)),
+        ("response_mean_s", Json::Num(response.mean() / NS)),
+        ("response_p50_s", secs(response.p50())),
+        ("response_p95_s", secs(response.p95())),
+        ("response_p99_s", secs(response.p99())),
+        ("response_cold_p50_s", secs(m.response_cold.p50())),
+        ("response_cold_p95_s", secs(m.response_cold.p95())),
+        ("response_cold_p99_s", secs(m.response_cold.p99())),
+        ("response_warm_p50_s", secs(m.response_warm.p50())),
+        ("response_warm_p95_s", secs(m.response_warm.p95())),
+        ("response_warm_p99_s", secs(m.response_warm.p99())),
+        ("predict_mean_s", Json::Num(predict.mean() / NS)),
+        ("predict_p50_s", secs(predict.p50())),
+        ("predict_p99_s", secs(predict.p99())),
+        ("billed_ms_total", Json::Num(m.billed_ms_total as f64)),
+        ("cost_dollars_total", Json::Num(m.cost_dollars_total)),
+        ("gb_seconds_total", Json::Num(m.gb_seconds_total)),
+    ]
+}
+
+/// The rendered all-zero shard block, built once — a never-invoked
+/// function must not cost four zeroed 64 KiB histograms per request
+/// just to emit constant zeros.
+fn zero_shard_fields() -> Vec<(&'static str, Json)> {
+    static ZERO: std::sync::OnceLock<Vec<(&'static str, Json)>> = std::sync::OnceLock::new();
+    ZERO.get_or_init(|| shard_fields(&FnMetrics::default())).clone()
+}
 
 /// `GET /v2/functions/:name/stats`.
 pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
@@ -13,63 +65,36 @@ pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Resp
     if ctx.platform.registry.get(name).is_err() {
         return err(404, "not_found", &format!("function {name:?} is not deployed"));
     }
-    let metrics = &ctx.platform.metrics;
-    let records = metrics.records();
-    let recs: Vec<_> = records.iter().filter(|r| r.function == name).collect();
-    let cold = recs.iter().filter(|r| r.start == StartKind::Cold).count();
-    let response = metrics.response_summary(|r| r.function == name);
-    let predict = metrics.predict_summary(|r| r.function == name);
-    let billed_ms: u64 = recs.iter().map(|r| r.billed_ms).sum();
-    let cost: f64 = recs.iter().map(|r| r.cost_dollars).sum();
-    let gb_seconds: f64 = ctx
-        .platform
-        .billing
-        .lines()
-        .iter()
-        .filter(|l| l.function == name)
-        .map(|l| l.gb_seconds())
-        .sum();
-    Responder::json(
-        200,
-        obj(vec![
-            ("function", Json::Str(name.to_string())),
-            ("invocations", Json::Num(recs.len() as f64)),
-            ("cold_starts", Json::Num(cold as f64)),
-            ("warm_starts", Json::Num((recs.len() - cold) as f64)),
-            ("response_mean_s", Json::Num(response.mean)),
-            ("response_p50_s", Json::Num(response.p50)),
-            ("response_p95_s", Json::Num(response.p95)),
-            ("response_p99_s", Json::Num(response.p99)),
-            ("predict_mean_s", Json::Num(predict.mean)),
-            ("billed_ms_total", Json::Num(billed_ms as f64)),
-            ("cost_dollars_total", Json::Num(cost)),
-            ("gb_seconds_total", Json::Num(gb_seconds)),
-            ("warm_containers", Json::Num(ctx.platform.pool.warm_count(name) as f64)),
-        ])
-        .to_string(),
-    )
+    let mut fields = vec![("function", Json::Str(name.to_string()))];
+    fields.extend(match ctx.platform.metrics.with_function(name, shard_fields) {
+        Some(shard) => shard,
+        // Deployed but never invoked: all-zero block.
+        None => zero_shard_fields(),
+    });
+    fields.push(("warm_containers", Json::Num(ctx.platform.pool.warm_count(name) as f64)));
+    Responder::json(200, obj(fields).to_string())
 }
 
 /// `GET /v2/stats` — platform-wide snapshot (superset of `/v1/stats`
-/// with async-subsystem depth).
+/// with async-subsystem depth, provision-source split, and the
+/// cold/warm latency percentiles).
 pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Responder {
     let p = &ctx.platform;
-    let m = &p.metrics;
-    Responder::json(
-        200,
-        obj(vec![
-            ("invocations", Json::Num(m.len() as f64)),
-            ("cold_starts", Json::Num(m.cold_count() as f64)),
-            ("functions", Json::Num(p.registry.list().len() as f64)),
-            ("containers_alive", Json::Num(p.pool.total_alive() as f64)),
-            ("in_flight", Json::Num(p.scaler.in_flight() as f64)),
-            ("peak_concurrency", Json::Num(p.scaler.high_water_mark() as f64)),
-            ("throttled", Json::Num(p.scaler.throttled_count() as f64)),
-            ("total_cost_dollars", Json::Num(p.billing.total_dollars())),
-            ("total_gb_seconds", Json::Num(p.billing.total_gb_seconds())),
-            ("async_queued", Json::Num(ctx.async_inv.queued() as f64)),
-            ("async_results_stored", Json::Num(ctx.async_inv.stored() as f64)),
-        ])
-        .to_string(),
-    )
+    let mut fields = p.metrics.with_totals(shard_fields);
+    fields.extend([
+        // Demand-driven provisions vs operator/maintainer pre-warms:
+        // kept separate so pre-warming does not inflate the
+        // request-visible cold-start rate.
+        ("cold_provisions", Json::Num(p.scaler.cold_provision_count() as f64)),
+        ("prewarm_provisions", Json::Num(p.scaler.prewarm_provision_count() as f64)),
+        ("functions", Json::Num(p.registry.list().len() as f64)),
+        ("containers_alive", Json::Num(p.pool.total_alive() as f64)),
+        ("in_flight", Json::Num(p.scaler.in_flight() as f64)),
+        ("peak_concurrency", Json::Num(p.scaler.high_water_mark() as f64)),
+        ("total_cost_dollars", Json::Num(p.billing.total_dollars())),
+        ("total_gb_seconds", Json::Num(p.billing.total_gb_seconds())),
+        ("async_queued", Json::Num(ctx.async_inv.queued() as f64)),
+        ("async_results_stored", Json::Num(ctx.async_inv.stored() as f64)),
+    ]);
+    Responder::json(200, obj(fields).to_string())
 }

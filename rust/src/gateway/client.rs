@@ -145,11 +145,24 @@ pub struct FunctionStats {
     pub invocations: u64,
     pub cold_starts: u64,
     pub warm_starts: u64,
+    /// 429s observed for this function (container or concurrency cap).
+    pub throttled: u64,
     pub response_mean_s: f64,
     pub response_p50_s: f64,
     pub response_p95_s: f64,
     pub response_p99_s: f64,
+    /// Cold-start-only response percentiles (the slow mode of the
+    /// paper's bimodal distribution).
+    pub response_cold_p50_s: f64,
+    pub response_cold_p95_s: f64,
+    pub response_cold_p99_s: f64,
+    /// Warm-start-only response percentiles (the fast mode).
+    pub response_warm_p50_s: f64,
+    pub response_warm_p95_s: f64,
+    pub response_warm_p99_s: f64,
     pub predict_mean_s: f64,
+    pub predict_p50_s: f64,
+    pub predict_p99_s: f64,
     pub billed_ms_total: u64,
     pub cost_dollars_total: f64,
     pub gb_seconds_total: f64,
@@ -360,11 +373,20 @@ impl ApiClient {
             invocations: u64_field(&json, "invocations"),
             cold_starts: u64_field(&json, "cold_starts"),
             warm_starts: u64_field(&json, "warm_starts"),
+            throttled: u64_field(&json, "throttled"),
             response_mean_s: num_field(&json, "response_mean_s"),
             response_p50_s: num_field(&json, "response_p50_s"),
             response_p95_s: num_field(&json, "response_p95_s"),
             response_p99_s: num_field(&json, "response_p99_s"),
+            response_cold_p50_s: num_field(&json, "response_cold_p50_s"),
+            response_cold_p95_s: num_field(&json, "response_cold_p95_s"),
+            response_cold_p99_s: num_field(&json, "response_cold_p99_s"),
+            response_warm_p50_s: num_field(&json, "response_warm_p50_s"),
+            response_warm_p95_s: num_field(&json, "response_warm_p95_s"),
+            response_warm_p99_s: num_field(&json, "response_warm_p99_s"),
             predict_mean_s: num_field(&json, "predict_mean_s"),
+            predict_p50_s: num_field(&json, "predict_p50_s"),
+            predict_p99_s: num_field(&json, "predict_p99_s"),
             billed_ms_total: u64_field(&json, "billed_ms_total"),
             cost_dollars_total: num_field(&json, "cost_dollars_total"),
             gb_seconds_total: num_field(&json, "gb_seconds_total"),

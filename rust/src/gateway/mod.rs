@@ -78,6 +78,13 @@ impl Gateway {
             async_config.result_ttl,
         ));
         let ctx = Arc::new(ApiCtx { platform, async_inv, seq: AtomicU64::new(1) });
+        // Keep warm pools maintained while serving: keep-alive sweeps
+        // + min_warm replenishment on the configured tick (0 = off).
+        // No-op if the embedding application already started one; the
+        // thread is joined when the platform is dropped.
+        let interval = Duration::try_from_secs_f64(ctx.platform.config().maintainer_interval_s)
+            .unwrap_or(Duration::ZERO); // unrepresentable ≈ never ticks ≈ off
+        Platform::start_maintainer(&ctx.platform, interval);
         let router: Arc<Router> = Arc::new(api::build_router(&ctx));
         let server = HttpServer::bind(addr, threads, move |req| router.dispatch(&req))?;
         Ok(Self { server, ctx })

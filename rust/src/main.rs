@@ -86,6 +86,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("shards", "engine shards (compute parallelism)", Some("2"))
         .flag("threads", "gateway worker threads", Some("16"))
         .flag(
+            "maintainer-interval",
+            "pool maintainer tick, seconds (sweep + min_warm top-up; 0 disables)",
+            None,
+        )
+        .flag(
             "deploy",
             "comma list of name:model:mem to deploy at boot, e.g. sq:squeezenet:1024",
             None,
@@ -95,7 +100,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let args = cmd.parse(argv)?;
-    let config = load_config(&args)?;
+    let mut config = load_config(&args)?;
+    if let Some(v) = args.get_f64("maintainer-interval")? {
+        config.maintainer_interval_s = v;
+        // Same rule as the TOML path: [0, 1e9] seconds, 0 disables.
+        config.validate()?;
+    }
     let shards = args.get_u64("shards")?.unwrap_or(2) as usize;
     let engine = build_engine(args.get_or("engine", "pjrt"), &config, shards)?;
     let platform = Arc::new(Invoker::live(config, engine));
@@ -113,8 +123,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
 
     let threads = args.get_u64("threads")?.unwrap_or(16) as usize;
+    let interval = platform.config().maintainer_interval_s;
     let gw = Gateway::bind(args.get_or("addr", "127.0.0.1:8080"), threads, platform)?;
     println!("lambdaserve gateway listening on http://{}", gw.local_addr());
+    if interval > 0.0 {
+        println!("  pool maintainer: sweep + min_warm top-up every {interval:.1}s");
+    } else {
+        println!("  pool maintainer: disabled (min_warm pools decay past the keep-alive TTL)");
+    }
     println!("  v2: POST /v2/functions  POST /v2/functions/<fn>/invocations[?mode=async]");
     println!("  v1: GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
     println!("  reference: API.md");
@@ -303,13 +319,19 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
     for name in names {
         let s = api.stats(&name)?;
         println!(
-            "{}: {} invocations ({} cold / {} warm), warm_containers={}",
-            s.function, s.invocations, s.cold_starts, s.warm_starts, s.warm_containers
+            "{}: {} invocations ({} cold / {} warm, {} throttled), warm_containers={}",
+            s.function, s.invocations, s.cold_starts, s.warm_starts, s.throttled,
+            s.warm_containers
         );
         println!(
             "  response mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s predict mean={:.3}s",
             s.response_mean_s, s.response_p50_s, s.response_p95_s, s.response_p99_s,
             s.predict_mean_s
+        );
+        println!(
+            "  cold p50={:.3}s p99={:.3}s | warm p50={:.3}s p99={:.3}s",
+            s.response_cold_p50_s, s.response_cold_p99_s, s.response_warm_p50_s,
+            s.response_warm_p99_s
         );
         println!(
             "  billed={}ms cost=${:.8} gb_seconds={:.4}",

@@ -26,14 +26,22 @@ pub struct InvoiceLine {
     pub request_dollars: f64,
 }
 
+/// GB-seconds consumed by `billed_ms` at `memory_mb` (the unit AWS
+/// aggregates free tier in). One definition shared by the invoice
+/// lines and the streaming metrics shards, so the per-function
+/// `gb_seconds_total` can never diverge from the meter's.
+pub fn gb_seconds(memory_mb: MemorySize, billed_ms: u64) -> f64 {
+    (memory_mb as f64 / 1024.0) * (billed_ms as f64 / 1000.0)
+}
+
 impl InvoiceLine {
     pub fn total_dollars(&self) -> f64 {
         self.execution_dollars + self.request_dollars
     }
 
-    /// GB-seconds consumed (the unit AWS aggregates free tier in).
+    /// GB-seconds consumed by this line.
     pub fn gb_seconds(&self) -> f64 {
-        (self.memory_mb as f64 / 1024.0) * (self.billed_ms as f64 / 1000.0)
+        gb_seconds(self.memory_mb, self.billed_ms)
     }
 }
 

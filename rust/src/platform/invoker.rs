@@ -9,6 +9,7 @@
 
 use super::billing::BillingMeter;
 use super::container::Container;
+use super::maintainer::{MaintenanceReport, PoolMaintainer};
 use super::metrics::{InvocationRecord, MetricsSink, StartKind};
 use super::pool::WarmPool;
 use super::registry::{FunctionRegistry, FunctionSpec};
@@ -68,6 +69,9 @@ pub struct Invoker {
     rng: Mutex<SplitMix64>,
     /// Per-function in-flight counters (enforces `max_concurrency`).
     fn_in_flight: Mutex<BTreeMap<String, usize>>,
+    /// Background pool maintainer, when started (keep-alive sweeps +
+    /// `min_warm` replenishment; see `platform/maintainer.rs`).
+    maintainer: Mutex<Option<PoolMaintainer>>,
 }
 
 /// Partial update applied by [`Invoker::reconfigure`]; `None` fields
@@ -129,13 +133,14 @@ impl Invoker {
             pool: WarmPool::new(config.max_containers, config.keep_alive_s, clock.clone()),
             scaler: Scaler::new(),
             billing: BillingMeter::new(config.pricing.clone()),
-            metrics: MetricsSink::new(),
+            metrics: MetricsSink::with_capacity(config.metrics_ring_capacity),
             governor: CpuGovernor::new(config.full_power_mem_mb, clock.clone()),
             engine,
             rng: Mutex::new(SplitMix64::new(config.seed)),
             config,
             clock,
             fn_in_flight: Mutex::new(BTreeMap::new()),
+            maintainer: Mutex::new(None),
         }
     }
 
@@ -211,23 +216,40 @@ impl Invoker {
         Ok(spec)
     }
 
-    /// Best-effort provision up to the spec's `min_warm` target.
-    fn top_up_warm_pool(&self, spec: &Arc<FunctionSpec>) {
-        if spec.min_warm > 0 {
-            let have = self.pool.warm_count(&spec.name);
-            if have < spec.min_warm {
-                let _ = self.prewarm(&spec.name, spec.min_warm - have);
+    /// Best-effort top-up to `target` warm containers for `spec`;
+    /// returns how many were provisioned. One container per step
+    /// (`Scaler::prewarm` fails a batch outright on a cap hit — the
+    /// v1 prewarm route's contract — while a top-up must keep the
+    /// partial count), re-checking the pool so a concurrent acquire
+    /// can't turn this into a hot loop.
+    fn prewarm_up_to(&self, spec: &Arc<FunctionSpec>, target: usize) -> usize {
+        let mut done = 0;
+        for _ in 0..target {
+            if self.pool.warm_count(&spec.name) >= target {
+                break;
+            }
+            match self.prewarm(&spec.name, 1) {
+                Ok(n) => done += n,
+                Err(_) => break, // container cap, or undeployed meanwhile
             }
         }
+        done
     }
 
-    /// Remove a function: drop the registration and reap its warm
+    /// Best-effort provision up to the spec's `min_warm` target.
+    fn top_up_warm_pool(&self, spec: &Arc<FunctionSpec>) {
+        self.prewarm_up_to(spec, spec.min_warm);
+    }
+
+    /// Remove a function: drop the registration, its metrics shard
+    /// (platform totals keep the history), and reap its warm
     /// containers. Returns the number of containers reaped. In-flight
     /// invocations complete; their containers age out via keep-alive.
     pub fn undeploy(&self, name: &str) -> Result<usize> {
         if !self.registry.remove(name) {
             bail!("function {name:?} is not deployed");
         }
+        self.metrics.remove_function(name);
         Ok(self.pool.evict_function(name))
     }
 
@@ -283,6 +305,7 @@ impl Invoker {
                 Some(guard) => guard,
                 None => {
                     self.scaler.note_throttled();
+                    self.metrics.note_throttled(function);
                     return Err(InvokeError::Throttled);
                 }
             };
@@ -298,12 +321,15 @@ impl Invoker {
             None => {
                 if !self.pool.try_reserve() {
                     self.scaler.note_throttled();
+                    self.metrics.note_throttled(function);
                     return Err(InvokeError::Throttled);
                 }
                 let provisioned = {
-                    // Hold the RNG lock only to draw the bootstrap
-                    // sample, not for the whole provision.
-                    let mut rng = self.rng.lock().unwrap();
+                    // Draw a child seed under the lock, then provision
+                    // with a local RNG: concurrent cold starts (and
+                    // maintainer replenishment) must never serialize
+                    // on the multi-second bootstrap sleeps.
+                    let mut rng = SplitMix64::new(self.rng.lock().unwrap().next_u64());
                     Container::provision(
                         spec.clone(),
                         self.engine.clone(),
@@ -407,6 +433,62 @@ impl Invoker {
     /// Run one keep-alive sweep.
     pub fn sweep(&self) -> usize {
         self.pool.evict_expired()
+    }
+
+    /// One maintenance tick: keep-alive eviction sweep, then top up
+    /// every deployed function to its `min_warm` target through the
+    /// prewarm path (best-effort: the container cap bounds the
+    /// top-up). This is what the background [`PoolMaintainer`] runs;
+    /// time-virtualized tests call it directly after advancing a
+    /// `ManualClock`.
+    pub fn maintain(&self) -> MaintenanceReport {
+        let evicted = self.pool.evict_expired();
+        let mut replenished = 0;
+        for spec in self.registry.list() {
+            replenished += self.prewarm_up_to(&spec, spec.min_warm);
+        }
+        MaintenanceReport { evicted, replenished }
+    }
+
+    /// Start the background pool maintainer, ticking every `interval`.
+    /// Returns `false` (and does nothing) when `interval` is zero or a
+    /// maintainer is already running. An associated function because
+    /// the thread needs a `Weak` handle to the platform `Arc`.
+    pub fn start_maintainer(platform: &Arc<Platform>, interval: Duration) -> bool {
+        if interval.is_zero() {
+            return false;
+        }
+        let mut slot = platform.maintainer.lock().unwrap();
+        if slot.is_some() {
+            return false;
+        }
+        *slot = Some(PoolMaintainer::start(platform, interval));
+        true
+    }
+
+    /// Stop and join the background maintainer, if running.
+    pub fn stop_maintainer(&self) {
+        let taken = self.maintainer.lock().unwrap().take();
+        drop(taken); // joins on drop
+    }
+
+    /// Ticks completed by the running maintainer (0 when stopped).
+    pub fn maintainer_ticks(&self) -> u64 {
+        self.maintainer.lock().unwrap().as_ref().map_or(0, PoolMaintainer::ticks)
+    }
+
+    /// Containers replenished by the running maintainer (0 when
+    /// stopped).
+    pub fn maintainer_replenished(&self) -> usize {
+        self.maintainer.lock().unwrap().as_ref().map_or(0, PoolMaintainer::replenished_total)
+    }
+}
+
+impl Drop for Invoker {
+    fn drop(&mut self) {
+        // Join the maintainer thread before the platform's parts go
+        // away (its Weak upgrade fails from here on anyway).
+        self.stop_maintainer();
     }
 }
 
@@ -563,6 +645,10 @@ mod tests {
         let reaped = p.undeploy("sq").unwrap();
         assert_eq!(reaped, 1);
         assert_eq!(p.pool.total_alive(), 0);
+        // The metrics shard is released with the deployment (platform
+        // totals keep the history).
+        assert_eq!(p.metrics.function_metrics("sq").invocations, 0);
+        assert_eq!(p.metrics.len(), 1);
         assert!(matches!(p.invoke("sq", 2), Err(InvokeError::NotFound(_))));
         assert!(p.undeploy("sq").is_err(), "double undeploy is an error");
     }

@@ -1,0 +1,220 @@
+//! Background warm-pool maintenance.
+//!
+//! The paper's §5 asks for a "keep containers warm" knob; the spec's
+//! `min_warm` provides it — but pre-warmed containers still age out
+//! through the keep-alive TTL, so without upkeep the operator-paid
+//! warm capacity silently decays back to cold starts during idle gaps
+//! (exactly the 10-minute-gap regime the paper measures). The
+//! [`PoolMaintainer`] closes the loop: a background thread that on a
+//! configurable tick runs the keep-alive eviction sweep and then
+//! replenishes every deployed function back up to its `min_warm`
+//! target through the prewarm path.
+//!
+//! The thread holds only a [`Weak`] platform reference (upgraded per
+//! tick), stops promptly via a condvar'd flag, and joins on drop.
+//! Time-virtualized tests don't need the thread at all: one tick is
+//! [`Platform::maintain`], callable directly under a `ManualClock`.
+
+use super::invoker::Platform;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What one maintenance tick did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MaintenanceReport {
+    /// Containers reaped by the keep-alive sweep.
+    pub evicted: usize,
+    /// Containers provisioned to restore `min_warm` targets.
+    pub replenished: usize,
+}
+
+struct Shared {
+    stop: Mutex<bool>,
+    cv: Condvar,
+    ticks: AtomicU64,
+    evicted: AtomicUsize,
+    replenished: AtomicUsize,
+}
+
+/// Handle to the background maintenance thread.
+pub struct PoolMaintainer {
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl PoolMaintainer {
+    /// Spawn the maintenance thread, ticking every `interval` of wall
+    /// time (the platform clock may still be virtual: eviction reads
+    /// platform time, the tick timer reads wall time).
+    pub fn start(platform: &Arc<Platform>, interval: Duration) -> Self {
+        let shared = Arc::new(Shared {
+            stop: Mutex::new(false),
+            cv: Condvar::new(),
+            ticks: AtomicU64::new(0),
+            evicted: AtomicUsize::new(0),
+            replenished: AtomicUsize::new(0),
+        });
+        let weak = Arc::downgrade(platform);
+        let thread_shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("pool-maintainer".into())
+            .spawn(move || maintainer_loop(weak, interval, thread_shared))
+            .expect("spawn pool-maintainer thread");
+        Self { shared, handle: Some(handle) }
+    }
+
+    /// Completed maintenance ticks.
+    pub fn ticks(&self) -> u64 {
+        self.shared.ticks.load(Ordering::SeqCst)
+    }
+
+    /// Containers reaped across all ticks.
+    pub fn evicted_total(&self) -> usize {
+        self.shared.evicted.load(Ordering::SeqCst)
+    }
+
+    /// Containers replenished across all ticks.
+    pub fn replenished_total(&self) -> usize {
+        self.shared.replenished.load(Ordering::SeqCst)
+    }
+
+    /// Signal the thread to stop and join it. Idempotent.
+    pub fn stop(&mut self) {
+        *self.shared.stop.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        if let Some(handle) = self.handle.take() {
+            // The thread's transient upgrade can be the LAST strong
+            // platform ref, which would run this drop chain on the
+            // maintainer thread itself — joining would deadlock.
+            // Detaching is safe: the loop exits on the stop flag.
+            if handle.thread().id() == std::thread::current().id() {
+                return;
+            }
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for PoolMaintainer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn maintainer_loop(platform: Weak<Platform>, interval: Duration, shared: Arc<Shared>) {
+    loop {
+        // Interruptible sleep: a stop() mid-interval wakes us.
+        {
+            let mut stop = shared.stop.lock().unwrap();
+            let deadline = Instant::now() + interval;
+            while !*stop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared.cv.wait_timeout(stop, deadline - now).unwrap();
+                stop = guard;
+            }
+            if *stop {
+                return;
+            }
+        }
+        // Upgrade only for the tick so the maintainer never keeps a
+        // dropped platform alive.
+        let Some(p) = platform.upgrade() else { return };
+        let report = p.maintain();
+        shared.ticks.fetch_add(1, Ordering::SeqCst);
+        shared.evicted.fetch_add(report.evicted, Ordering::SeqCst);
+        shared.replenished.fetch_add(report.replenished, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configparse::PlatformConfig;
+    use crate::platform::{Invoker, StartKind};
+    use crate::runtime::MockEngine;
+    use crate::util::ManualClock;
+
+    fn platform(max_containers: usize) -> (Arc<Platform>, Arc<ManualClock>) {
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig { max_containers, ..Default::default() };
+        let p = Arc::new(Invoker::new(cfg, Arc::new(MockEngine::paper_zoo()), clock.clone()));
+        (p, clock)
+    }
+
+    #[test]
+    fn manual_tick_replenishes_decayed_min_warm() {
+        let (p, clock) = platform(1000);
+        p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None).unwrap();
+        assert_eq!(p.pool.warm_count("sq"), 2);
+        // Idle past the keep-alive TTL: the warm capacity has decayed.
+        clock.sleep(Duration::from_secs(601));
+        let report = p.maintain();
+        assert_eq!(report.evicted, 2, "stale pre-warmed containers reaped");
+        assert_eq!(report.replenished, 2, "min_warm restored");
+        assert_eq!(p.pool.warm_count("sq"), 2);
+        // The restored capacity is fresh: the next invocation is warm.
+        assert_eq!(p.invoke("sq", 1).unwrap().record.start, StartKind::Warm);
+        // Replenishment went through the prewarm path, not the
+        // request-visible cold-provision counter.
+        assert_eq!(p.scaler.cold_provision_count(), 0);
+        assert_eq!(p.scaler.prewarm_provision_count(), 4);
+    }
+
+    #[test]
+    fn maintain_respects_container_cap_and_missing_functions() {
+        let (p, clock) = platform(1);
+        p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None).unwrap();
+        // Cap 1: deploy-time prewarm got only 1 of the 2.
+        assert_eq!(p.pool.warm_count("sq"), 1);
+        clock.sleep(Duration::from_secs(601));
+        let report = p.maintain();
+        assert_eq!(report.evicted, 1);
+        assert_eq!(report.replenished, 1, "cap bounds the top-up, no spin");
+        assert_eq!(p.pool.total_alive(), 1);
+        // Undeployed functions are simply skipped.
+        p.undeploy("sq").unwrap();
+        let report = p.maintain();
+        assert_eq!(report, MaintenanceReport::default());
+    }
+
+    #[test]
+    fn maintain_is_noop_within_ttl() {
+        let (p, clock) = platform(1000);
+        p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None).unwrap();
+        clock.sleep(Duration::from_secs(100));
+        assert_eq!(p.maintain(), MaintenanceReport::default());
+        assert_eq!(p.pool.warm_count("sq"), 2);
+    }
+
+    #[test]
+    fn background_thread_replenishes_and_joins() {
+        let (p, clock) = platform(1000);
+        p.deploy_full("sq", "squeezenet", "pallas", 512, 1, None).unwrap();
+        assert!(Invoker::start_maintainer(&p, Duration::from_millis(2)));
+        assert!(!Invoker::start_maintainer(&p, Duration::from_millis(2)), "second start no-ops");
+        clock.sleep(Duration::from_secs(601));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while p.maintainer_replenished() < 1 {
+            assert!(Instant::now() < deadline, "maintainer never replenished");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(p.pool.warm_count("sq"), 1);
+        assert!(p.maintainer_ticks() >= 1);
+        p.stop_maintainer();
+        assert!(Invoker::start_maintainer(&p, Duration::from_millis(2)), "restartable after stop");
+        // Dropping the platform joins the thread (no hang, no leak).
+        drop(p);
+    }
+
+    #[test]
+    fn zero_interval_disables() {
+        let (p, _) = platform(1000);
+        assert!(!Invoker::start_maintainer(&p, Duration::ZERO));
+        assert_eq!(p.maintainer_ticks(), 0);
+    }
+}

@@ -1,14 +1,29 @@
-//! Per-invocation records and aggregation.
+//! Per-invocation records and streaming per-function aggregation.
 //!
 //! Each invocation yields an [`InvocationRecord`] with the full latency
 //! decomposition the paper measures: client-observed response time,
 //! in-function prediction time, cold/warm tag, billed duration, and
-//! cost. Experiments aggregate records into the rows of each figure.
+//! cost.
+//!
+//! Aggregation is *streaming*: every function owns a [`FnMetrics`]
+//! shard — cold/warm-split response and prediction [`Histogram`]s plus
+//! invocation/cold/throttle counters and billed/cost/GB-second
+//! accumulators — updated once at record time under a per-function
+//! lock. Stats readers clone one shard under one lock acquisition, so
+//! a snapshot is internally consistent (`invocations == cold + warm`,
+//! histogram counts match the counters) and costs O(1) in the number
+//! of invocations. A bounded ring of recent raw records keeps the
+//! experiment/report tooling working; total memory is bounded by
+//! `functions x fixed histogram footprint + ring capacity`.
 
 use crate::configparse::MemorySize;
 use crate::stats::{Histogram, Summary};
-use std::sync::Mutex;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
+
+/// Default capacity of the recent-records ring buffer.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StartKind {
@@ -73,12 +88,87 @@ impl InvocationRecord {
     pub fn cold_overhead(&self) -> Duration {
         self.sandbox + self.runtime_init + self.package_fetch + self.model_load
     }
+
+    /// GB-seconds consumed — the billing meter's own definition, so
+    /// the streamed accumulator matches the invoice lines exactly.
+    pub fn gb_seconds(&self) -> f64 {
+        super::billing::gb_seconds(self.memory_mb, self.billed_ms)
+    }
 }
 
-/// Thread-safe collector.
-#[derive(Default)]
+/// One function's streaming aggregates: everything the stats routes
+/// serve, updated incrementally at record time and snapshotted by
+/// value under a single lock.
+#[derive(Clone, Default)]
+pub struct FnMetrics {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    /// Requests rejected with 429 for this function (container cap or
+    /// per-function concurrency cap).
+    pub throttled: u64,
+    pub billed_ms_total: u64,
+    pub cost_dollars_total: f64,
+    pub gb_seconds_total: f64,
+    /// Response-time histograms in nanoseconds, split by start kind
+    /// (the paper's bimodality analysis).
+    pub response_cold: Histogram,
+    pub response_warm: Histogram,
+    /// Prediction-time histograms in nanoseconds.
+    pub predict_cold: Histogram,
+    pub predict_warm: Histogram,
+}
+
+impl FnMetrics {
+    pub fn warm_starts(&self) -> u64 {
+        self.invocations - self.cold_starts
+    }
+
+    /// Merged cold+warm response histogram.
+    pub fn response_all(&self) -> Histogram {
+        let mut h = self.response_cold.clone();
+        h.merge(&self.response_warm);
+        h
+    }
+
+    /// Merged cold+warm prediction histogram.
+    pub fn predict_all(&self) -> Histogram {
+        let mut h = self.predict_cold.clone();
+        h.merge(&self.predict_warm);
+        h
+    }
+
+    fn apply(&mut self, r: &InvocationRecord, response_ns: u64, predict_ns: u64) {
+        self.invocations += 1;
+        match r.start {
+            StartKind::Cold => {
+                self.cold_starts += 1;
+                self.response_cold.record(response_ns);
+                self.predict_cold.record(predict_ns);
+            }
+            StartKind::Warm => {
+                self.response_warm.record(response_ns);
+                self.predict_warm.record(predict_ns);
+            }
+        }
+        self.billed_ms_total += r.billed_ms;
+        self.cost_dollars_total += r.cost_dollars;
+        self.gb_seconds_total += r.gb_seconds();
+    }
+}
+
+/// Thread-safe collector: per-function shards + platform totals +
+/// bounded recent-records ring.
 pub struct MetricsSink {
-    records: Mutex<Vec<InvocationRecord>>,
+    shards: RwLock<BTreeMap<String, Arc<Mutex<FnMetrics>>>>,
+    totals: Mutex<FnMetrics>,
+    recent: Mutex<VecDeque<InvocationRecord>>,
+    ring_capacity: usize,
+}
+
+impl Default for MetricsSink {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_RING_CAPACITY)
+    }
 }
 
 impl MetricsSink {
@@ -86,16 +176,104 @@ impl MetricsSink {
         Self::default()
     }
 
+    /// Sink whose recent-records ring keeps at most `ring_capacity`
+    /// raw records (aggregates are never truncated).
+    pub fn with_capacity(ring_capacity: usize) -> Self {
+        Self {
+            shards: RwLock::new(BTreeMap::new()),
+            totals: Mutex::new(FnMetrics::default()),
+            recent: Mutex::new(VecDeque::with_capacity(ring_capacity.min(1024))),
+            ring_capacity,
+        }
+    }
+
+    fn shard(&self, function: &str) -> Arc<Mutex<FnMetrics>> {
+        if let Some(s) = self.shards.read().unwrap().get(function) {
+            return s.clone();
+        }
+        self.shards.write().unwrap().entry(function.to_string()).or_default().clone()
+    }
+
     pub fn record(&self, r: InvocationRecord) {
-        self.records.lock().unwrap().push(r);
+        let response_ns = r.response().as_nanos() as u64;
+        let predict_ns = r.predict.as_nanos() as u64;
+        self.shard(&r.function).lock().unwrap().apply(&r, response_ns, predict_ns);
+        self.totals.lock().unwrap().apply(&r, response_ns, predict_ns);
+        if self.ring_capacity == 0 {
+            return;
+        }
+        let mut ring = self.recent.lock().unwrap();
+        if ring.len() == self.ring_capacity {
+            ring.pop_front();
+        }
+        ring.push_back(r);
     }
 
+    /// Count a 429 against `function`'s shard (and the totals).
+    pub fn note_throttled(&self, function: &str) {
+        self.shard(function).lock().unwrap().throttled += 1;
+        self.totals.lock().unwrap().throttled += 1;
+    }
+
+    /// One-lock consistent snapshot of a function's aggregates
+    /// (default-empty when the function has never been invoked).
+    pub fn function_metrics(&self, function: &str) -> FnMetrics {
+        self.shards
+            .read()
+            .unwrap()
+            .get(function)
+            .map(|s| s.lock().unwrap().clone())
+            .unwrap_or_default()
+    }
+
+    /// Run `read` against the live shard under its lock — same
+    /// consistency as [`Self::function_metrics`] without copying the
+    /// histograms (a shard is ~256 KiB). `None` when the function has
+    /// never been invoked.
+    pub fn with_function<R>(
+        &self,
+        function: &str,
+        read: impl FnOnce(&FnMetrics) -> R,
+    ) -> Option<R> {
+        let shard = self.shards.read().unwrap().get(function).cloned()?;
+        let g = shard.lock().unwrap();
+        Some(read(&g))
+    }
+
+    /// One-lock consistent snapshot of the platform-wide aggregates.
+    pub fn platform_metrics(&self) -> FnMetrics {
+        self.totals.lock().unwrap().clone()
+    }
+
+    /// Run `read` against the live platform totals under their lock
+    /// (no histogram copy).
+    pub fn with_totals<R>(&self, read: impl FnOnce(&FnMetrics) -> R) -> R {
+        read(&self.totals.lock().unwrap())
+    }
+
+    /// Drop `function`'s shard (undeploy). Per-function stats are only
+    /// served for deployed functions, and shards are ~256 KiB each, so
+    /// keeping them for undeployed names would grow memory without
+    /// bound under deploy/undeploy churn. Platform totals retain the
+    /// history; an invocation still in flight may recreate a (fresh)
+    /// shard when it completes, which the next undeploy drops again.
+    pub fn remove_function(&self, function: &str) {
+        self.shards.write().unwrap().remove(function);
+    }
+
+    /// The recent raw records (bounded by the ring capacity; the
+    /// counters/histograms above are the unbounded-horizon truth).
     pub fn records(&self) -> Vec<InvocationRecord> {
-        self.records.lock().unwrap().clone()
+        self.recent.lock().unwrap().iter().cloned().collect()
     }
 
+    pub fn ring_capacity(&self) -> usize {
+        self.ring_capacity
+    }
+
+    /// Total invocations recorded (NOT the ring length).
     pub fn len(&self) -> usize {
-        self.records.lock().unwrap().len()
+        self.totals.lock().unwrap().invocations as usize
     }
 
     pub fn is_empty(&self) -> bool {
@@ -103,18 +281,21 @@ impl MetricsSink {
     }
 
     pub fn reset(&self) {
-        self.records.lock().unwrap().clear();
+        self.shards.write().unwrap().clear();
+        *self.totals.lock().unwrap() = FnMetrics::default();
+        self.recent.lock().unwrap().clear();
     }
 
     /// Count of cold starts observed.
     pub fn cold_count(&self) -> usize {
-        self.records.lock().unwrap().iter().filter(|r| r.start == StartKind::Cold).count()
+        self.totals.lock().unwrap().cold_starts as usize
     }
 
-    /// Summary of response times (seconds) over `filter`ed records.
+    /// Summary of response times (seconds) over `filter`ed recent
+    /// records (ring-bounded; experiment tooling).
     pub fn response_summary<F: Fn(&InvocationRecord) -> bool>(&self, filter: F) -> Summary {
         let xs: Vec<f64> = self
-            .records
+            .recent
             .lock()
             .unwrap()
             .iter()
@@ -124,10 +305,11 @@ impl MetricsSink {
         Summary::from_samples(&xs)
     }
 
-    /// Summary of prediction times (seconds).
+    /// Summary of prediction times (seconds) over `filter`ed recent
+    /// records (ring-bounded).
     pub fn predict_summary<F: Fn(&InvocationRecord) -> bool>(&self, filter: F) -> Summary {
         let xs: Vec<f64> = self
-            .records
+            .recent
             .lock()
             .unwrap()
             .iter()
@@ -137,18 +319,15 @@ impl MetricsSink {
         Summary::from_samples(&xs)
     }
 
-    /// Response-time histogram in nanoseconds (bimodality analysis).
+    /// Platform-wide response-time histogram in nanoseconds
+    /// (bimodality analysis); streamed, not ring-bounded.
     pub fn response_histogram(&self) -> Histogram {
-        let mut h = Histogram::new();
-        for r in self.records.lock().unwrap().iter() {
-            h.record(r.response().as_nanos() as u64);
-        }
-        h
+        self.totals.lock().unwrap().response_all()
     }
 
-    /// Total cost over all records.
+    /// Total cost over all recorded invocations.
     pub fn total_cost(&self) -> f64 {
-        self.records.lock().unwrap().iter().map(|r| r.cost_dollars).sum()
+        self.totals.lock().unwrap().cost_dollars_total
     }
 }
 
@@ -208,6 +387,7 @@ mod tests {
         assert!((s.total_cost() - 3e-6).abs() < 1e-15);
         s.reset();
         assert!(s.is_empty());
+        assert_eq!(s.function_metrics("f").invocations, 0, "reset drops shards");
     }
 
     #[test]
@@ -223,5 +403,72 @@ mod tests {
         // Warm ~100ms, cold ~2s; fraction above 1s equals cold share.
         let frac = h.fraction_above(1_000_000_000);
         assert!((frac - 0.05).abs() < 0.001, "frac={frac}");
+    }
+
+    #[test]
+    fn shard_snapshot_is_consistent_and_split_by_start() {
+        let s = MetricsSink::new();
+        s.record(test_record("f", 512, StartKind::Cold, 1000));
+        s.record(test_record("f", 512, StartKind::Warm, 500));
+        s.record(test_record("f", 512, StartKind::Warm, 500));
+        s.record(test_record("g", 1024, StartKind::Warm, 300));
+        s.note_throttled("f");
+        let m = s.function_metrics("f");
+        assert_eq!(m.invocations, 3);
+        assert_eq!(m.cold_starts, 1);
+        assert_eq!(m.warm_starts(), 2);
+        assert_eq!(m.throttled, 1);
+        assert_eq!(m.response_cold.count(), 1);
+        assert_eq!(m.response_warm.count(), 2);
+        assert_eq!(m.response_all().count(), 3);
+        assert_eq!(m.predict_all().count(), 3);
+        assert_eq!(m.billed_ms_total, 1000 + 500 + 500);
+        // Cold response (~2.91s) dwarfs warm (~0.5s) in the split.
+        assert!(m.response_cold.p50() > m.response_warm.p50() * 4);
+        // gb_seconds matches the billing formula per record.
+        let expect = (512.0 / 1024.0) * (2000.0 / 1000.0);
+        assert!((m.gb_seconds_total - expect).abs() < 1e-12);
+        // Unknown functions read as empty, not a panic.
+        let empty = s.function_metrics("nope");
+        assert_eq!(empty.invocations, 0);
+        assert_eq!(empty.response_all().p99(), 0);
+        // Totals see every function.
+        let t = s.platform_metrics();
+        assert_eq!(t.invocations, 4);
+        assert_eq!(t.throttled, 1);
+    }
+
+    #[test]
+    fn remove_function_drops_shard_but_keeps_totals() {
+        let s = MetricsSink::new();
+        s.record(test_record("f", 512, StartKind::Cold, 100));
+        s.record(test_record("g", 512, StartKind::Warm, 100));
+        s.remove_function("f");
+        assert_eq!(s.function_metrics("f").invocations, 0, "shard memory released");
+        assert_eq!(s.function_metrics("g").invocations, 1, "other shards untouched");
+        assert_eq!(s.len(), 2, "platform totals keep the history");
+        assert_eq!(s.cold_count(), 1);
+        // Locked reads see the same data without copying the shard.
+        assert_eq!(s.with_function("g", |m| m.invocations), Some(1));
+        assert_eq!(s.with_function("f", |m| m.invocations), None);
+        assert_eq!(s.with_totals(|m| m.invocations), 2);
+    }
+
+    #[test]
+    fn ring_is_bounded_but_aggregates_are_not() {
+        let s = MetricsSink::with_capacity(8);
+        for i in 0..100 {
+            let kind = if i % 10 == 0 { StartKind::Cold } else { StartKind::Warm };
+            s.record(test_record("f", 512, kind, 100));
+        }
+        assert_eq!(s.records().len(), 8, "ring keeps only the newest 8");
+        assert_eq!(s.len(), 100, "aggregate counters keep the full horizon");
+        assert_eq!(s.cold_count(), 10);
+        assert_eq!(s.function_metrics("f").invocations, 100);
+        // Zero-capacity ring records aggregates only.
+        let z = MetricsSink::with_capacity(0);
+        z.record(test_record("f", 512, StartKind::Warm, 100));
+        assert!(z.records().is_empty());
+        assert_eq!(z.len(), 1);
     }
 }

@@ -4,6 +4,7 @@ pub mod async_invoke;
 pub mod billing;
 pub mod container;
 pub mod invoker;
+pub mod maintainer;
 pub mod metrics;
 pub mod pool;
 pub mod registry;
@@ -14,7 +15,8 @@ pub use async_invoke::{AsyncInvocation, AsyncInvoker, AsyncStatus, SubmitError};
 pub use billing::{BillingMeter, InvoiceLine};
 pub use container::{Container, ContainerState};
 pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform, ReconfigurePatch};
-pub use metrics::{InvocationRecord, MetricsSink, StartKind};
+pub use maintainer::{MaintenanceReport, PoolMaintainer};
+pub use metrics::{FnMetrics, InvocationRecord, MetricsSink, StartKind};
 pub use pool::WarmPool;
 pub use registry::{FunctionRegistry, FunctionSpec};
 pub use scaler::Scaler;

@@ -38,41 +38,53 @@ impl WarmPool {
     /// sweep for that function first, so an expired container is never
     /// handed out (it is reaped instead — the paper's forced-cold
     /// mechanism).
+    ///
+    /// Single-pass: the sweep, the pop, and the `total` adjustment for
+    /// the reaped containers all happen under one `idle` lock hold, so
+    /// a concurrent `try_reserve` never sees already-dead containers
+    /// still counted against the cap (which used to surface as
+    /// spurious 429s while actually under capacity). Only the engine
+    /// teardown (`reap`) runs outside the lock.
     pub fn acquire(&self, function: &str) -> Option<Container> {
-        let mut g = self.idle.lock().unwrap();
         let now = self.clock.now();
-        if let Some(stack) = g.get_mut(function) {
-            // Evict expired (oldest are at the bottom of the stack).
-            let ttl = self.keep_alive_ns;
-            let expired: Vec<Container> = {
-                let mut keep = Vec::with_capacity(stack.len());
-                let mut dead = Vec::new();
-                for c in stack.drain(..) {
-                    if now.saturating_sub(c.last_used) > ttl {
-                        dead.push(c);
-                    } else {
-                        keep.push(c);
-                    }
-                }
-                *stack = keep;
-                dead
-            };
-            let n_dead = expired.len();
-            drop(g); // reap outside the lock
-            for mut c in expired {
-                c.reap();
-            }
-            self.total.fetch_sub(n_dead, Ordering::SeqCst);
+        let ttl = self.keep_alive_ns;
+        let mut dead: Vec<Container> = Vec::new();
+        let hit = {
             let mut g = self.idle.lock().unwrap();
-            if let Some(stack) = g.get_mut(function) {
-                if let Some(mut c) = stack.pop() {
-                    c.activate();
-                    return Some(c);
+            let (hit, emptied) = match g.get_mut(function) {
+                None => (None, false),
+                Some(stack) => {
+                    // Evict expired (oldest are at the bottom).
+                    let mut keep = Vec::with_capacity(stack.len());
+                    for c in stack.drain(..) {
+                        if now.saturating_sub(c.last_used) > ttl {
+                            dead.push(c);
+                        } else {
+                            keep.push(c);
+                        }
+                    }
+                    *stack = keep;
+                    let hit = stack.pop();
+                    (hit, stack.is_empty())
                 }
+            };
+            if emptied {
+                // Drained entries are dropped so churned function
+                // names don't grow the map without bound.
+                g.remove(function);
             }
-            return None;
+            if !dead.is_empty() {
+                self.total.fetch_sub(dead.len(), Ordering::SeqCst);
+            }
+            hit
+        };
+        for mut c in dead {
+            c.reap();
         }
-        None
+        hit.map(|mut c| {
+            c.activate();
+            c
+        })
     }
 
     /// Return a busy container to the warm pool.
@@ -108,8 +120,9 @@ impl WarmPool {
         self.total.fetch_sub(1, Ordering::SeqCst);
     }
 
-    /// Sweep every function's stack, reaping expired containers.
-    /// Returns the number reaped.
+    /// Sweep every function's stack, reaping expired containers and
+    /// dropping fully-drained map entries. Returns the number reaped.
+    /// `total` is adjusted under the lock (see [`Self::acquire`]).
     pub fn evict_expired(&self) -> usize {
         let now = self.clock.now();
         let ttl = self.keep_alive_ns;
@@ -127,12 +140,15 @@ impl WarmPool {
                 }
                 *stack = keep;
             }
+            g.retain(|_, stack| !stack.is_empty());
+            if !dead.is_empty() {
+                self.total.fetch_sub(dead.len(), Ordering::SeqCst);
+            }
         }
         let n = dead.len();
         for mut c in dead {
             c.reap();
         }
-        self.total.fetch_sub(n, Ordering::SeqCst);
         n
     }
 
@@ -143,13 +159,16 @@ impl WarmPool {
     pub fn evict_function(&self, function: &str) -> usize {
         let dead: Vec<Container> = {
             let mut g = self.idle.lock().unwrap();
-            g.remove(function).unwrap_or_default()
+            let dead = g.remove(function).unwrap_or_default();
+            if !dead.is_empty() {
+                self.total.fetch_sub(dead.len(), Ordering::SeqCst);
+            }
+            dead
         };
         let n = dead.len();
         for mut c in dead {
             c.reap();
         }
-        self.total.fetch_sub(n, Ordering::SeqCst);
         n
     }
 
@@ -158,15 +177,17 @@ impl WarmPool {
         let mut dead = Vec::new();
         {
             let mut g = self.idle.lock().unwrap();
-            for stack in g.values_mut() {
-                dead.append(stack);
+            for (_, mut stack) in std::mem::take(&mut *g) {
+                dead.append(&mut stack);
+            }
+            if !dead.is_empty() {
+                self.total.fetch_sub(dead.len(), Ordering::SeqCst);
             }
         }
         let n = dead.len();
         for mut c in dead {
             c.reap();
         }
-        self.total.fetch_sub(n, Ordering::SeqCst);
         n
     }
 
@@ -178,6 +199,12 @@ impl WarmPool {
     /// Warm containers for one function.
     pub fn warm_count(&self, function: &str) -> usize {
         self.idle.lock().unwrap().get(function).map_or(0, Vec::len)
+    }
+
+    /// Function entries currently tracked in the idle map (sweeps must
+    /// drop drained entries so churned names don't leak).
+    pub fn tracked_functions(&self) -> usize {
+        self.idle.lock().unwrap().len()
     }
 }
 
@@ -355,6 +382,76 @@ mod tests {
         assert_eq!(f.pool.evict_all(), 3);
         assert_eq!(f.pool.total_alive(), 0);
         assert_eq!(f.engine.live_instances(), 0);
+    }
+
+    /// Regression (spurious 429): a thread that finds only expired
+    /// containers must already have released their capacity by the
+    /// time its `acquire` returns — and, because the sweep is now
+    /// single-pass, at any point where another thread can observe the
+    /// pool (the `idle` lock released), `total` no longer counts dead
+    /// containers. With C expired containers at cap C, C concurrent
+    /// acquire-then-reserve threads must therefore ALL get a slot;
+    /// under the old drop-relock sweep this raced and spuriously
+    /// exhausted capacity.
+    #[test]
+    fn expired_sweep_frees_capacity_atomically() {
+        const CAP: usize = 4;
+        for _round in 0..25 {
+            let mut f = fixture(CAP, 100.0);
+            for _ in 0..CAP {
+                let c = provision(&mut f);
+                f.pool.release(c);
+            }
+            f.clock.sleep(Duration::from_secs(101));
+            std::thread::scope(|s| {
+                for _ in 0..CAP {
+                    s.spawn(|| {
+                        assert!(f.pool.acquire("sq").is_none(), "expired, never handed out");
+                        assert!(
+                            f.pool.try_reserve(),
+                            "reaped capacity visible to the thread that swept it"
+                        );
+                    });
+                }
+            });
+            assert_eq!(f.pool.total_alive(), CAP, "all slots re-reserved");
+            assert_eq!(f.engine.live_instances(), 0, "all expired instances reaped");
+            for _ in 0..CAP {
+                f.pool.cancel_reservation();
+            }
+        }
+    }
+
+    /// Regression: sweeps and acquire must drop fully-drained map
+    /// entries, or an undeploy-heavy workload grows the idle map
+    /// without bound.
+    #[test]
+    fn sweeps_drop_empty_map_entries() {
+        let mut f = fixture(10, 100.0);
+        // evict_expired path.
+        let c = provision(&mut f);
+        f.pool.release(c);
+        assert_eq!(f.pool.tracked_functions(), 1);
+        f.clock.sleep(Duration::from_secs(101));
+        assert_eq!(f.pool.evict_expired(), 1);
+        assert_eq!(f.pool.tracked_functions(), 0, "evict_expired drops drained entry");
+        // acquire-sweep path.
+        let c = provision(&mut f);
+        f.pool.release(c);
+        f.clock.sleep(Duration::from_secs(101));
+        assert!(f.pool.acquire("sq").is_none());
+        assert_eq!(f.pool.tracked_functions(), 0, "acquire drops drained entry");
+        // acquire popping the last live container also drops the entry.
+        let c = provision(&mut f);
+        f.pool.release(c);
+        let c = f.pool.acquire("sq").expect("live container");
+        assert_eq!(f.pool.tracked_functions(), 0);
+        f.pool.retire(c);
+        // evict_all drains the whole map.
+        let c = provision(&mut f);
+        f.pool.release(c);
+        f.pool.evict_all();
+        assert_eq!(f.pool.tracked_functions(), 0, "evict_all drops all entries");
     }
 
     /// Property: through arbitrary interleavings of provision/release/

@@ -25,7 +25,14 @@ pub struct Scaler {
     in_flight: AtomicUsize,
     high_water: AtomicUsize,
     throttled: AtomicUsize,
+    /// Demand-driven provisions only: a request arrived and found no
+    /// warm container. This is the request-visible cold-start supply
+    /// side the paper's analysis keys on.
     cold_provisions: AtomicUsize,
+    /// Operator/maintainer-initiated provisions (deploy-time
+    /// `min_warm`, `/v1/prewarm`, pool-maintainer top-ups). Kept
+    /// separate so pre-warming does not inflate the cold-start rate.
+    prewarm_provisions: AtomicUsize,
 }
 
 /// RAII guard for one in-flight request.
@@ -57,6 +64,10 @@ impl Scaler {
         self.cold_provisions.fetch_add(1, Ordering::SeqCst);
     }
 
+    pub fn note_prewarm_provision(&self) {
+        self.prewarm_provisions.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::SeqCst)
     }
@@ -73,6 +84,10 @@ impl Scaler {
 
     pub fn cold_provision_count(&self) -> usize {
         self.cold_provisions.load(Ordering::SeqCst)
+    }
+
+    pub fn prewarm_provision_count(&self) -> usize {
+        self.prewarm_provisions.load(Ordering::SeqCst)
     }
 
     /// Pre-warm `n` containers for `spec` into the pool (the paper's
@@ -94,12 +109,17 @@ impl Scaler {
             if !pool.try_reserve() {
                 bail!("container cap hit after pre-warming {done} of {n}");
             }
-            let mut r = rng.lock().unwrap();
+            // Child-seed a local RNG so the shared lock is not held
+            // across the (possibly multi-second) provisioning sleeps —
+            // a background top-up must not stall request-path cold
+            // starts waiting on the same RNG.
+            let mut r = SplitMix64::new(rng.lock().unwrap().next_u64());
             match Container::provision(spec.clone(), engine.clone(), governor, bootstrap, clock, &mut r)
             {
                 Ok(c) => {
-                    drop(r);
-                    self.note_cold_provision();
+                    // Operator-initiated: NOT a request-visible cold
+                    // start (that counter feeds the cold-start rate).
+                    self.note_prewarm_provision();
                     pool.release(c);
                     done += 1;
                 }
@@ -142,8 +162,10 @@ mod tests {
         s.note_throttled();
         s.note_throttled();
         s.note_cold_provision();
+        s.note_prewarm_provision();
         assert_eq!(s.throttled_count(), 2);
         assert_eq!(s.cold_provision_count(), 1);
+        assert_eq!(s.prewarm_provision_count(), 1);
     }
 
     #[test]
@@ -163,7 +185,10 @@ mod tests {
         assert_eq!(n, 3);
         assert_eq!(pool.warm_count("sq"), 3);
         assert_eq!(pool.total_alive(), 3);
-        assert_eq!(s.cold_provision_count(), 3);
+        // Regression: pre-warms are tracked separately and must not
+        // inflate the request-visible cold-start rate.
+        assert_eq!(s.prewarm_provision_count(), 3);
+        assert_eq!(s.cold_provision_count(), 0);
     }
 
     #[test]

@@ -126,6 +126,94 @@ fn gateway_throttles_with_429() {
     t.join().unwrap();
 }
 
+/// Acceptance: min_warm capacity survives an idle gap longer than the
+/// keep-alive TTL. The background maintainer thread (wall-clock tick
+/// timer) sweeps the stale containers and replenishes the target on a
+/// virtual platform clock — before the fix, the pre-warmed capacity
+/// silently decayed and the next request after the gap was cold.
+#[test]
+fn min_warm_pool_survives_idle_gap_longer_than_ttl() {
+    let clock = ManualClock::new();
+    let p = Arc::new(Invoker::new(PlatformConfig::default(), fast_engine(), clock.clone()));
+    p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None).unwrap();
+    assert_eq!(p.pool.warm_count("sq"), 2);
+    assert!(Invoker::start_maintainer(&p, Duration::from_millis(2)));
+
+    // The paper's forced-cold regime: idle past the 300 s keep-alive.
+    clock.sleep(Duration::from_secs(601));
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while p.maintainer_replenished() < 2 {
+        assert!(std::time::Instant::now() < deadline, "maintainer never replenished the pool");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(p.pool.warm_count("sq"), 2, "warm capacity restored to min_warm");
+    // The restored capacity is fresh, so the next invocation is warm —
+    // and it is NOT counted as a request-visible cold provision.
+    assert_eq!(p.invoke("sq", 1).unwrap().record.start, StartKind::Warm);
+    assert_eq!(p.scaler.cold_provision_count(), 0);
+    p.stop_maintainer();
+}
+
+/// Acceptance: stats snapshots are internally consistent while
+/// invocations hammer the sink from many threads — the counters and
+/// the split histograms of one snapshot always agree (the old
+/// aggregation read the record vector under four separate locks and
+/// could tear).
+#[test]
+fn concurrent_invoke_vs_stats_snapshots_are_consistent() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let p = Arc::new(Invoker::live(fast_config(), fast_engine()));
+    p.deploy("sq", "squeezenet", "pallas", 1536).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let p = p.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut checks = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let m = p.metrics.function_metrics("sq");
+                    assert_eq!(m.invocations, m.cold_starts + m.warm_starts());
+                    assert_eq!(m.response_cold.count(), m.cold_starts, "torn cold counters");
+                    assert_eq!(m.response_warm.count(), m.warm_starts(), "torn warm counters");
+                    assert_eq!(m.predict_all().count(), m.invocations);
+                    let t = p.metrics.platform_metrics();
+                    assert_eq!(t.invocations, t.cold_starts + t.warm_starts());
+                    assert_eq!(t.response_all().count(), t.invocations);
+                    checks += 1;
+                }
+                checks
+            })
+        })
+        .collect();
+
+    let writers: Vec<_> = (0..4)
+        .map(|t| {
+            let p = p.clone();
+            std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    p.invoke("sq", t * 1000 + i).unwrap();
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "reader must have observed snapshots");
+    }
+
+    let m = p.metrics.function_metrics("sq");
+    assert_eq!(m.invocations, 200);
+    assert_eq!(m.invocations, m.cold_starts + m.warm_starts());
+    assert_eq!(m.response_all().count(), 200);
+    assert_eq!(p.metrics.len(), 200);
+}
+
 #[test]
 fn warm_probe_latency_decomposition_holds() {
     // latency = network + queue + (cold parts) + predict; verify the

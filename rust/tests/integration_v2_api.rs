@@ -76,23 +76,39 @@ fn sdk_full_lifecycle_sync_and_async() {
     let stats = api.stats("sq").unwrap();
     assert_eq!(stats.invocations, 2);
     assert_eq!(stats.cold_starts + stats.warm_starts, 2);
+    assert_eq!(stats.throttled, 0);
     assert!(stats.billed_ms_total >= r1.billed_ms);
     assert!(stats.cost_dollars_total > 0.0);
     assert!(stats.response_mean_s > 0.0);
+    // Cold/warm split percentiles: the sync invocation was warm, so
+    // the warm histogram is populated; the cold histogram is empty
+    // unless the async run went cold.
+    assert!(stats.response_warm_p50_s > 0.0);
+    assert!(stats.response_warm_p99_s >= stats.response_warm_p50_s);
+    if stats.cold_starts == 0 {
+        assert_eq!(stats.response_cold_p99_s, 0.0, "empty cold histogram reads as zero");
+    }
 
     // List shows exactly our function.
     let fns = api.functions().unwrap();
     assert_eq!(fns.len(), 1);
     assert_eq!(fns[0].name, "sq");
 
-    // Reconfigure: bump memory, clear pre-warm; old containers cycle.
+    // Reconfigure: bump memory AND clear the pre-warm target (else
+    // the new min_warm would be re-provisioned at the new spec and
+    // the next invocation would be warm); old containers cycle.
     let f = api
         .reconfigure(
             "sq",
-            &ReconfigureSpec { memory_mb: Some(1536), ..Default::default() },
+            &ReconfigureSpec {
+                memory_mb: Some(1536),
+                min_warm: Some(0),
+                ..Default::default()
+            },
         )
         .unwrap();
     assert_eq!(f.memory_mb, 1536);
+    assert_eq!(f.min_warm, 0);
     let r = api.invoke("sq", Some(9)).unwrap();
     assert_eq!(r.start, "cold", "stale warm containers evicted on reconfigure");
 
@@ -163,6 +179,36 @@ fn v1_and_v2_share_one_platform() {
     t.join().unwrap();
 }
 
+/// Pre-warm provisioning is operator-paid capacity, not a cold start:
+/// `/v2/stats` must report the two supply sides separately, and a
+/// request served by a pre-warmed container keeps the request-visible
+/// cold-start rate at zero.
+#[test]
+fn platform_stats_split_provision_sources() {
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+    let tmo = Duration::from_secs(10);
+
+    api.deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024).min_warm(2)).unwrap();
+    let r = api.invoke("sq", Some(1)).unwrap();
+    assert_eq!(r.start, "warm");
+
+    let resp = http_get(&addr, "/v2/stats", tmo).unwrap();
+    assert_eq!(resp.status, 200);
+    let j = Json::parse(&resp.body_str()).unwrap();
+    assert_eq!(j.get("invocations").unwrap().as_u64(), Some(1));
+    assert_eq!(j.get("cold_starts").unwrap().as_u64(), Some(0), "prewarm is not a cold start");
+    assert_eq!(j.get("warm_starts").unwrap().as_u64(), Some(1));
+    assert_eq!(j.get("cold_provisions").unwrap().as_u64(), Some(0));
+    assert!(j.get("prewarm_provisions").unwrap().as_u64().unwrap() >= 2);
+    // Cold/warm split percentiles are served platform-wide too.
+    assert!(j.get("response_warm_p50_s").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(j.get("response_cold_p99_s").unwrap().as_f64(), Some(0.0));
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
 #[test]
 fn per_function_concurrency_cap_is_enforced_over_http() {
     let (addr, sh, t) = start_gateway();
@@ -200,6 +246,12 @@ fn per_function_concurrency_cap_is_enforced_over_http() {
         .count();
     assert_eq!(ok + throttled, 4, "only 200s and 429s expected: {results:?}");
     assert!(ok >= 1, "at least one sync invocation must get through");
+
+    // The 429s are attributed to the function's own stats shard (the
+    // async workers' transient cap hits land there too).
+    let stats = api.stats("rn").unwrap();
+    assert!(stats.throttled >= throttled as u64, "sync 429s counted per function");
+    assert_eq!(stats.invocations, 4 + ok as u64, "completed async + successful sync");
 
     sh.shutdown();
     t.join().unwrap();
