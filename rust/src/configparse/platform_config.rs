@@ -17,6 +17,11 @@ pub type MemorySize = u32;
 pub const MEMORY_SIZES_2017: [MemorySize; 12] =
     [128, 256, 384, 512, 640, 768, 896, 1024, 1152, 1280, 1408, 1536];
 
+/// Ceiling on any dispatch deadline — the platform default and every
+/// per-function override (a parked request holds a gateway worker
+/// thread for the wait): one hour.
+pub const MAX_QUEUE_DEADLINE_MS: u64 = 3_600_000;
+
 /// Table 1: price per 100 ms for each memory size, in dollars.
 const PRICE_TABLE_2017: [(MemorySize, f64); 12] = [
     (128, 0.000000208),
@@ -142,6 +147,21 @@ pub struct PlatformConfig {
     /// Hard cap on concurrently provisioned containers per function
     /// (AWS account default: 1000 across the account).
     pub max_containers: usize,
+    /// Admission control: default bound on each function's dispatch
+    /// wait queue. A request that misses capacity parks here instead
+    /// of being rejected; when the queue for its function is already
+    /// this deep the request is refused with HTTP 503. `0` disables
+    /// parking only: a miss that can still take a freed container or
+    /// reserve a capacity slot on the spot is served; a genuine
+    /// shortage is refused immediately.
+    /// Per-function override: the deploy/reconfigure `queue_capacity`.
+    pub queue_capacity: usize,
+    /// Admission control: default deadline a parked request may wait
+    /// for capacity, in milliseconds, before it is failed with HTTP
+    /// 503 + `Retry-After`. `0` degenerates to try-once semantics.
+    /// Per-function override: the deploy/reconfigure
+    /// `queue_deadline_ms`.
+    pub queue_deadline_ms: u64,
     /// Background pool-maintainer tick interval, seconds: each tick
     /// runs the keep-alive eviction sweep and replenishes `min_warm`
     /// targets. `0` disables the maintainer.
@@ -169,6 +189,8 @@ impl Default for PlatformConfig {
             full_power_mem_mb: 1792,
             keep_alive_s: 300.0,
             max_containers: 1000,
+            queue_capacity: 64,
+            queue_deadline_ms: 2_000,
             maintainer_interval_s: 5.0,
             metrics_ring_capacity: 4096,
             throttle_quantum_s: 0.02,
@@ -204,6 +226,12 @@ impl PlatformConfig {
         }
         if let Some(v) = get_u64("platform.max_containers") {
             cfg.max_containers = v as usize;
+        }
+        if let Some(v) = get_u64("platform.queue_capacity") {
+            cfg.queue_capacity = v as usize;
+        }
+        if let Some(v) = get_u64("platform.queue_deadline_ms") {
+            cfg.queue_deadline_ms = v;
         }
         if let Some(v) = get_f64("platform.maintainer_interval_s") {
             cfg.maintainer_interval_s = v;
@@ -301,6 +329,12 @@ impl PlatformConfig {
         {
             bail!("maintainer_interval_s must be in [0, 1e9] seconds (0 disables)");
         }
+        // A deadline past the ceiling is almost certainly a unit
+        // mistake (seconds in a milliseconds field) and would park
+        // requests — and their gateway worker threads — for that long.
+        if self.queue_deadline_ms > MAX_QUEUE_DEADLINE_MS {
+            bail!("queue_deadline_ms must be at most {MAX_QUEUE_DEADLINE_MS} (one hour)");
+        }
         Ok(())
     }
 
@@ -368,6 +402,8 @@ full_power_mem_mb = 2048
 keep_alive_s = 300.0
 maintainer_interval_s = 2.5
 metrics_ring_capacity = 128
+queue_capacity = 16
+queue_deadline_ms = 750
 seed = 7
 
 [bootstrap]
@@ -383,6 +419,8 @@ rtt_s = 0.01
         assert_eq!(cfg.keep_alive_s, 300.0);
         assert_eq!(cfg.maintainer_interval_s, 2.5);
         assert_eq!(cfg.metrics_ring_capacity, 128);
+        assert_eq!(cfg.queue_capacity, 16);
+        assert_eq!(cfg.queue_deadline_ms, 750);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.bootstrap.runtime_init_s, 0.5);
         assert!(!cfg.bootstrap.simulate_delays);
@@ -409,6 +447,7 @@ dollars_per_unit = [1.0, 2.0]
     fn validation_failures() {
         assert!(PlatformConfig::from_toml("[platform]\nfull_power_mem_mb = 0").is_err());
         assert!(PlatformConfig::from_toml("[platform]\nmaintainer_interval_s = -1.0").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\nqueue_deadline_ms = 7200000").is_err());
         assert!(PlatformConfig::from_toml("[pricing]\ngranularity_ms = 0").is_err());
         assert!(PlatformConfig::from_toml(
             "[pricing]\nmemory_mb = [256, 128]\ndollars_per_unit = [1.0, 2.0]"

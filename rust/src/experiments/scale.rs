@@ -66,7 +66,7 @@ pub fn run_scale(ctx: &ExpCtx, model: &str, name: &str) -> Result<()> {
             "Prediction (s)",
             "±CI",
             "Cold frac",
-            "Throttled",
+            "Rejected",
             "Peak conc",
         ],
     );
@@ -93,7 +93,9 @@ pub fn run_scale(ctx: &ExpCtx, model: &str, name: &str) -> Result<()> {
             secs(prd),
             secs(prd_ci),
             format!("{:.2}", report.cold_count() as f64 / ok as f64),
-            report.throttled.to_string(),
+            // 429s (concurrency cap) + 503s (queue saturated): every
+            // request the admission layer turned away.
+            (report.throttled + report.saturated).to_string(),
             platform.scaler.high_water_mark().to_string(),
         ]);
         // Give the platform a beat to settle between memory sizes.

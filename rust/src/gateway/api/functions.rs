@@ -22,6 +22,21 @@ pub(crate) fn function_json(ctx: &ApiCtx, spec: &Arc<FunctionSpec>) -> Json {
                 None => Json::Null,
             },
         ),
+        // Admission-queue overrides: null = platform default applies.
+        (
+            "queue_capacity",
+            match spec.queue_capacity {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "queue_deadline_ms",
+            match spec.queue_deadline_ms {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        ),
         ("peak_mem_mb", Json::Num(spec.peak_mem_mb as f64)),
         ("package_mb", Json::Num(spec.package_bytes as f64 / 1e6)),
         ("warm_containers", Json::Num(ctx.platform.pool.warm_count(&spec.name) as f64)),
@@ -59,6 +74,14 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
         Ok(v) => v.map(|x| x as usize),
         Err(r) => return r,
     };
+    let queue_capacity = match opt_u64(&body, "queue_capacity") {
+        Ok(v) => v.map(|x| x as usize),
+        Err(r) => return r,
+    };
+    let queue_deadline_ms = match opt_u64(&body, "queue_deadline_ms") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
     let conflict = || {
         err(
             409,
@@ -73,7 +96,16 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
     }
     // create_full is insert-if-absent, so two racing creates cannot
     // both succeed; the loser maps to the same 409 as the pre-check.
-    match ctx.platform.create_full(&name, &model, &variant, memory_mb, min_warm, max_concurrency) {
+    match ctx.platform.create_full(
+        &name,
+        &model,
+        &variant,
+        memory_mb,
+        min_warm,
+        max_concurrency,
+        queue_capacity,
+        queue_deadline_ms,
+    ) {
         Ok(spec) => Responder::json(201, function_json(ctx, &spec).to_string()),
         Err(_) if ctx.platform.registry.get(&name).is_ok() => conflict(),
         Err(e) => err(400, "invalid_deployment", &format!("{e:#}")),
@@ -131,7 +163,36 @@ pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
             }
         },
     };
-    let patch = ReconfigurePatch { memory_mb, variant, min_warm, max_concurrency };
+    // Queue overrides share the tri-state shape: null reverts the
+    // function to the platform defaults.
+    let queue_capacity = match body.get("queue_capacity") {
+        None => None,
+        Some(Json::Null) => Some(None),
+        Some(v) => match v.as_u64() {
+            Some(n) => Some(Some(n as usize)),
+            None => {
+                return err(400, "invalid_field", "queue_capacity must be an integer or null")
+            }
+        },
+    };
+    let queue_deadline_ms = match body.get("queue_deadline_ms") {
+        None => None,
+        Some(Json::Null) => Some(None),
+        Some(v) => match v.as_u64() {
+            Some(n) => Some(Some(n)),
+            None => {
+                return err(400, "invalid_field", "queue_deadline_ms must be an integer or null")
+            }
+        },
+    };
+    let patch = ReconfigurePatch {
+        memory_mb,
+        variant,
+        min_warm,
+        max_concurrency,
+        queue_capacity,
+        queue_deadline_ms,
+    };
     match ctx.platform.reconfigure(name, &patch) {
         Ok(spec) => Responder::json(200, function_json(ctx, &spec).to_string()),
         Err(e) => err(400, "invalid_reconfigure", &format!("{e:#}")),

@@ -2,9 +2,9 @@
 //! /v2/functions/:name/invocations` and the async poll endpoint `GET
 //! /v2/invocations/:id`.
 
-use super::{err, json_body, ApiCtx};
+use super::{dispatch_deadline, err, json_body, retry_after_secs, ApiCtx};
 use crate::httpd::{HttpRequest, Params, Responder};
-use crate::platform::{AsyncInvocation, InvocationRecord, InvokeError};
+use crate::platform::{AsyncInvocation, InvocationRecord, InvokeError, SaturationKind};
 use crate::runtime::Prediction;
 use crate::util::json::{obj, Json};
 use std::sync::atomic::Ordering;
@@ -61,7 +61,22 @@ fn sync_invoke(ctx: &ApiCtx, name: &str, seed: u64) -> Responder {
         Err(InvokeError::NotFound(f)) => {
             err(404, "not_found", &format!("function {f:?} is not deployed"))
         }
-        Err(InvokeError::Throttled) => err(429, "throttled", "container capacity exhausted"),
+        // 429: the function's own concurrency cap. Retryable once an
+        // in-flight request finishes — hint with the same horizon the
+        // dispatcher would have waited.
+        Err(e @ InvokeError::Throttled) => {
+            let retry = retry_after_secs(dispatch_deadline(&ctx.platform, name));
+            err(429, "throttled", &e.to_string()).with_header("Retry-After", &retry.to_string())
+        }
+        // 503: admission queue saturated (full or deadline exhausted).
+        Err(e @ InvokeError::Saturated(kind)) => {
+            let retry = retry_after_secs(dispatch_deadline(&ctx.platform, name));
+            let code = match kind {
+                SaturationKind::QueueFull => "queue_full",
+                SaturationKind::DeadlineExpired => "queue_deadline_expired",
+            };
+            err(503, code, &e.to_string()).with_header("Retry-After", &retry.to_string())
+        }
         Err(InvokeError::Failed(e)) => err(500, "execution_failed", &format!("{e:#}")),
     }
 }
@@ -82,7 +97,10 @@ fn async_invoke(ctx: &ApiCtx, name: &str, seed: u64) -> Responder {
             ])
             .to_string(),
         ),
-        Err(e) => err(429, "queue_full", &e.to_string()),
+        Err(e) => {
+            let retry = retry_after_secs(dispatch_deadline(&ctx.platform, name));
+            err(429, "queue_full", &e.to_string()).with_header("Retry-After", &retry.to_string())
+        }
     }
 }
 

@@ -31,6 +31,25 @@ pub fn err(status: u16, code: &str, message: &str) -> Responder {
     Responder::json(status, error_envelope(code, message))
 }
 
+/// `Retry-After` hint (whole seconds, floor 1) for throttle
+/// responses. The dispatch deadline is how long the platform itself
+/// was willing to wait for capacity before giving up, so it is the
+/// natural horizon after which a retry has a fresh chance of landing
+/// inside a drained queue.
+pub fn retry_after_secs(deadline: std::time::Duration) -> u64 {
+    (deadline.as_secs_f64().ceil() as u64).max(1)
+}
+
+/// The dispatch deadline in effect for `function`: its own override
+/// when deployed, else the platform default (also the fallback for
+/// unknown names, e.g. an async submit racing an undeploy).
+pub fn dispatch_deadline(platform: &Platform, function: &str) -> std::time::Duration {
+    match platform.registry.get(function) {
+        Ok(spec) => platform.dispatcher.effective_deadline(&spec),
+        Err(_) => platform.dispatcher.default_deadline(),
+    }
+}
+
 /// Parse the request body as JSON; an empty body reads as `{}` so
 /// endpoints whose fields all have defaults accept bare POSTs.
 pub fn json_body(req: &HttpRequest) -> Result<Json, Responder> {

@@ -32,6 +32,10 @@ fn shard_fields(m: &FnMetrics) -> Vec<(&'static str, Json)> {
         ("cold_starts", Json::Num(m.cold_starts as f64)),
         ("warm_starts", Json::Num(m.warm_starts() as f64)),
         ("throttled", Json::Num(m.throttled as f64)),
+        ("queue_expired", Json::Num(m.queue_expired as f64)),
+        ("queue_wait_p50_s", secs(m.queue_wait.p50())),
+        ("queue_wait_p95_s", secs(m.queue_wait.p95())),
+        ("queue_wait_p99_s", secs(m.queue_wait.p99())),
         ("response_mean_s", Json::Num(response.mean() / NS)),
         ("response_p50_s", secs(response.p50())),
         ("response_p95_s", secs(response.p95())),
@@ -72,6 +76,8 @@ pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Resp
         None => zero_shard_fields(),
     });
     fields.push(("warm_containers", Json::Num(ctx.platform.pool.warm_count(name) as f64)));
+    // Live dispatcher saturation for this function.
+    fields.push(("queue_depth", Json::Num(ctx.platform.dispatcher.queue_depth(name) as f64)));
     Responder::json(200, obj(fields).to_string())
 }
 
@@ -93,6 +99,12 @@ pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Res
         ("peak_concurrency", Json::Num(p.scaler.high_water_mark() as f64)),
         ("total_cost_dollars", Json::Num(p.billing.total_dollars())),
         ("total_gb_seconds", Json::Num(p.billing.total_gb_seconds())),
+        // Dispatcher saturation: live depth, all-time peak, requests
+        // refused with 503 (queue full or deadline exhausted).
+        ("queue_depth", Json::Num(p.dispatcher.total_depth() as f64)),
+        ("queue_depth_peak", Json::Num(p.dispatcher.peak_depth() as f64)),
+        ("queue_deadline_expired", Json::Num(p.dispatcher.expired_total() as f64)),
+        ("saturated", Json::Num(p.scaler.saturated_count() as f64)),
         ("async_queued", Json::Num(ctx.async_inv.queued() as f64)),
         ("async_results_stored", Json::Num(ctx.async_inv.stored() as f64)),
     ]);

@@ -7,7 +7,7 @@
 //! hit with the wrong method now returns 405 instead of 404. New
 //! clients should use `/v2` (see API.md).
 
-use super::ApiCtx;
+use super::{dispatch_deadline, retry_after_secs, ApiCtx};
 use crate::httpd::{HttpRequest, Params, Responder};
 use crate::platform::InvokeError;
 use crate::util::json::{obj, Json};
@@ -87,7 +87,19 @@ pub fn invoke(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
         Err(InvokeError::NotFound(f)) => {
             Responder::json(404, v1_err(&format!("function {f} not deployed")))
         }
-        Err(InvokeError::Throttled) => Responder::json(429, v1_err("throttled")),
+        Err(InvokeError::Throttled) => {
+            let retry = retry_after_secs(dispatch_deadline(&ctx.platform, func));
+            Responder::json(429, v1_err("throttled"))
+                .with_header("Retry-After", &retry.to_string())
+        }
+        // Admission-control saturation post-dates the v1 surface;
+        // expose it with the proper status (plus the flat v1 error
+        // shape) rather than mislabelling it a 429.
+        Err(e @ InvokeError::Saturated(_)) => {
+            let retry = retry_after_secs(dispatch_deadline(&ctx.platform, func));
+            Responder::json(503, v1_err(&e.to_string()))
+                .with_header("Retry-After", &retry.to_string())
+        }
         Err(InvokeError::Failed(e)) => Responder::json(500, v1_err(&e.to_string())),
     }
 }

@@ -51,6 +51,12 @@ pub struct DeploySpec {
     pub memory_mb: Option<u32>,
     pub min_warm: Option<usize>,
     pub max_concurrency: Option<usize>,
+    /// Admission-queue depth override (`platform.queue_capacity`
+    /// applies when unset).
+    pub queue_capacity: Option<usize>,
+    /// Admission-deadline override in ms (`platform.queue_deadline_ms`
+    /// applies when unset).
+    pub queue_deadline_ms: Option<u64>,
 }
 
 impl DeploySpec {
@@ -77,16 +83,29 @@ impl DeploySpec {
         self.max_concurrency = Some(cap);
         self
     }
+
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = Some(capacity);
+        self
+    }
+
+    pub fn queue_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.queue_deadline_ms = Some(deadline_ms);
+        self
+    }
 }
 
-/// Partial update for `PATCH /v2/functions/:name`. `max_concurrency`
-/// is doubly optional: `Some(None)` clears the cap.
+/// Partial update for `PATCH /v2/functions/:name`. `max_concurrency`,
+/// `queue_capacity`, and `queue_deadline_ms` are doubly optional:
+/// `Some(None)` clears the cap/override (JSON `null`).
 #[derive(Debug, Clone, Default)]
 pub struct ReconfigureSpec {
     pub memory_mb: Option<u32>,
     pub variant: Option<String>,
     pub min_warm: Option<usize>,
     pub max_concurrency: Option<Option<usize>>,
+    pub queue_capacity: Option<Option<usize>>,
+    pub queue_deadline_ms: Option<Option<u64>>,
 }
 
 /// One deployed function, as reported by the API.
@@ -98,6 +117,9 @@ pub struct FunctionInfo {
     pub memory_mb: u32,
     pub min_warm: usize,
     pub max_concurrency: Option<usize>,
+    /// Admission-queue overrides; `None` = platform default applies.
+    pub queue_capacity: Option<usize>,
+    pub queue_deadline_ms: Option<u64>,
     pub warm_containers: usize,
 }
 
@@ -145,8 +167,17 @@ pub struct FunctionStats {
     pub invocations: u64,
     pub cold_starts: u64,
     pub warm_starts: u64,
-    /// 429s observed for this function (container or concurrency cap).
+    /// 429s observed for this function (per-function concurrency cap).
     pub throttled: u64,
+    /// 503s observed: admission queue full or dispatch deadline
+    /// exhausted while parked.
+    pub queue_expired: u64,
+    /// Requests currently parked in this function's wait queue.
+    pub queue_depth: u64,
+    /// True dispatch-queue wait percentiles (cold and warm requests).
+    pub queue_wait_p50_s: f64,
+    pub queue_wait_p95_s: f64,
+    pub queue_wait_p99_s: f64,
     pub response_mean_s: f64,
     pub response_p50_s: f64,
     pub response_p95_s: f64,
@@ -167,6 +198,39 @@ pub struct FunctionStats {
     pub cost_dollars_total: f64,
     pub gb_seconds_total: f64,
     pub warm_containers: u64,
+}
+
+/// Platform-wide snapshot (`GET /v2/stats`): the totals shard plus
+/// capacity, provisioning-source, dispatcher-saturation, and
+/// async-subsystem gauges.
+#[derive(Debug, Clone)]
+pub struct PlatformStats {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub throttled: u64,
+    /// Requests refused with 503 (queue full + deadline expired).
+    pub saturated: u64,
+    pub queue_expired: u64,
+    pub queue_wait_p50_s: f64,
+    pub queue_wait_p95_s: f64,
+    pub queue_wait_p99_s: f64,
+    pub cold_provisions: u64,
+    pub prewarm_provisions: u64,
+    pub functions: u64,
+    pub containers_alive: u64,
+    pub in_flight: u64,
+    pub peak_concurrency: u64,
+    /// Requests currently parked across all dispatch queues.
+    pub queue_depth: u64,
+    /// All-time high-water mark of the total queue depth.
+    pub queue_depth_peak: u64,
+    /// Parked requests that exhausted their deadline (503s).
+    pub queue_deadline_expired: u64,
+    pub total_cost_dollars: f64,
+    pub total_gb_seconds: f64,
+    pub async_queued: u64,
+    pub async_results_stored: u64,
 }
 
 /// Blocking typed client for one gateway address.
@@ -237,6 +301,12 @@ impl ApiClient {
         if let Some(c) = spec.max_concurrency {
             fields.push(("max_concurrency", Json::Num(c as f64)));
         }
+        if let Some(q) = spec.queue_capacity {
+            fields.push(("queue_capacity", Json::Num(q as f64)));
+        }
+        if let Some(d) = spec.queue_deadline_ms {
+            fields.push(("queue_deadline_ms", Json::Num(d as f64)));
+        }
         let (_, json) = self.call("POST", "/v2/functions", Some(&obj(fields)))?;
         Ok(parse_function(&json))
     }
@@ -273,6 +343,24 @@ impl ApiClient {
             fields.push((
                 "max_concurrency",
                 match c {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ));
+        }
+        if let Some(q) = patch.queue_capacity {
+            fields.push((
+                "queue_capacity",
+                match q {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ));
+        }
+        if let Some(d) = patch.queue_deadline_ms {
+            fields.push((
+                "queue_deadline_ms",
+                match d {
                     Some(n) => Json::Num(n as f64),
                     None => Json::Null,
                 },
@@ -374,6 +462,11 @@ impl ApiClient {
             cold_starts: u64_field(&json, "cold_starts"),
             warm_starts: u64_field(&json, "warm_starts"),
             throttled: u64_field(&json, "throttled"),
+            queue_expired: u64_field(&json, "queue_expired"),
+            queue_depth: u64_field(&json, "queue_depth"),
+            queue_wait_p50_s: num_field(&json, "queue_wait_p50_s"),
+            queue_wait_p95_s: num_field(&json, "queue_wait_p95_s"),
+            queue_wait_p99_s: num_field(&json, "queue_wait_p99_s"),
             response_mean_s: num_field(&json, "response_mean_s"),
             response_p50_s: num_field(&json, "response_p50_s"),
             response_p95_s: num_field(&json, "response_p95_s"),
@@ -391,6 +484,35 @@ impl ApiClient {
             cost_dollars_total: num_field(&json, "cost_dollars_total"),
             gb_seconds_total: num_field(&json, "gb_seconds_total"),
             warm_containers: u64_field(&json, "warm_containers"),
+        })
+    }
+
+    /// `GET /v2/stats`.
+    pub fn platform_stats(&self) -> ApiResult<PlatformStats> {
+        let (_, json) = self.call("GET", "/v2/stats", None)?;
+        Ok(PlatformStats {
+            invocations: u64_field(&json, "invocations"),
+            cold_starts: u64_field(&json, "cold_starts"),
+            warm_starts: u64_field(&json, "warm_starts"),
+            throttled: u64_field(&json, "throttled"),
+            saturated: u64_field(&json, "saturated"),
+            queue_expired: u64_field(&json, "queue_expired"),
+            queue_wait_p50_s: num_field(&json, "queue_wait_p50_s"),
+            queue_wait_p95_s: num_field(&json, "queue_wait_p95_s"),
+            queue_wait_p99_s: num_field(&json, "queue_wait_p99_s"),
+            cold_provisions: u64_field(&json, "cold_provisions"),
+            prewarm_provisions: u64_field(&json, "prewarm_provisions"),
+            functions: u64_field(&json, "functions"),
+            containers_alive: u64_field(&json, "containers_alive"),
+            in_flight: u64_field(&json, "in_flight"),
+            peak_concurrency: u64_field(&json, "peak_concurrency"),
+            queue_depth: u64_field(&json, "queue_depth"),
+            queue_depth_peak: u64_field(&json, "queue_depth_peak"),
+            queue_deadline_expired: u64_field(&json, "queue_deadline_expired"),
+            total_cost_dollars: num_field(&json, "total_cost_dollars"),
+            total_gb_seconds: num_field(&json, "total_gb_seconds"),
+            async_queued: u64_field(&json, "async_queued"),
+            async_results_stored: u64_field(&json, "async_results_stored"),
         })
     }
 }
@@ -415,6 +537,8 @@ fn parse_function(json: &Json) -> FunctionInfo {
         memory_mb: u64_field(json, "memory_mb") as u32,
         min_warm: u64_field(json, "min_warm") as usize,
         max_concurrency: json.get("max_concurrency").and_then(Json::as_u64).map(|v| v as usize),
+        queue_capacity: json.get("queue_capacity").and_then(Json::as_u64).map(|v| v as usize),
+        queue_deadline_ms: json.get("queue_deadline_ms").and_then(Json::as_u64),
         warm_containers: u64_field(json, "warm_containers") as usize,
     }
 }

@@ -24,7 +24,7 @@ pub mod client;
 
 pub use client::{
     ApiClient, ApiError, ApiResult, AsyncInvocationStatus, DeploySpec, FunctionInfo,
-    FunctionStats, InvocationResult, ReconfigureSpec,
+    FunctionStats, InvocationResult, PlatformStats, ReconfigureSpec,
 };
 
 use crate::httpd::{HttpServer, Router};

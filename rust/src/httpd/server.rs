@@ -30,16 +30,36 @@ impl HttpRequest {
 pub struct Responder {
     pub status: u16,
     pub content_type: String,
+    /// Extra response headers (name, value); `Content-Type`,
+    /// `Content-Length`, and `Connection` are emitted automatically.
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
 
 impl Responder {
     pub fn json(status: u16, body: String) -> Self {
-        Self { status, content_type: "application/json".into(), body: body.into_bytes() }
+        Self {
+            status,
+            content_type: "application/json".into(),
+            headers: Vec::new(),
+            body: body.into_bytes(),
+        }
     }
 
     pub fn text(status: u16, body: &str) -> Self {
-        Self { status, content_type: "text/plain".into(), body: body.as_bytes().to_vec() }
+        Self {
+            status,
+            content_type: "text/plain".into(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// Attach one extra response header (builder style), e.g. the
+    /// `Retry-After` hint on 429/503 throttle responses.
+    pub fn with_header(mut self, name: &str, value: &str) -> Self {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
     }
 }
 
@@ -117,7 +137,7 @@ fn handle_connection(stream: TcpStream, handler: &Arc<Handler>) -> Result<()> {
             Ok(Some(r)) => r,
             Ok(None) => return Ok(()), // clean close
             Err(e) => {
-                let _ = write_response(&mut stream, 400, "text/plain", e.to_string().as_bytes(), false);
+                let _ = write_response(&mut stream, &Responder::text(400, &e.to_string()), false);
                 return Ok(());
             }
         };
@@ -127,7 +147,7 @@ fn handle_connection(stream: TcpStream, handler: &Arc<Handler>) -> Result<()> {
             .map(|v| !v.eq_ignore_ascii_case("close"))
             .unwrap_or(true);
         let resp = handler(req);
-        write_response(&mut stream, resp.status, &resp.content_type, &resp.body, keep_alive)?;
+        write_response(&mut stream, &resp, keep_alive)?;
         if !keep_alive {
             return Ok(());
         }
@@ -240,24 +260,25 @@ fn status_text(code: u16) -> &'static str {
     }
 }
 
-fn write_response(
-    stream: &mut TcpStream,
-    status: u16,
-    content_type: &str,
-    body: &[u8],
-    keep_alive: bool,
-) -> Result<()> {
+fn write_response(stream: &mut TcpStream, resp: &Responder, keep_alive: bool) -> Result<()> {
     let conn = if keep_alive { "keep-alive" } else { "close" };
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-        status,
-        status_text(status),
-        content_type,
-        body.len(),
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
         conn
     );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
+    stream.write_all(&resp.body)?;
     stream.flush()?;
     Ok(())
 }
@@ -307,7 +328,27 @@ mod tests {
         assert_eq!(status_text(405), "Method Not Allowed");
         assert_eq!(status_text(409), "Conflict");
         assert_eq!(status_text(429), "Too Many Requests");
+        assert_eq!(status_text(503), "Service Unavailable");
         assert_eq!(status_text(777), "Unknown");
+    }
+
+    /// Extra headers attached via `with_header` reach the wire (the
+    /// gateway's `Retry-After` on 429/503 rides on this).
+    #[test]
+    fn extra_response_headers_are_emitted() {
+        let server = HttpServer::bind("127.0.0.1:0", 2, |_req| {
+            Responder::json(503, "{\"error\":\"busy\"}".to_string()).with_header("Retry-After", "2")
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let sh = server.shutdown_handle();
+        let t = std::thread::spawn(move || server.serve().unwrap());
+        let resp = crate::httpd::http_get(&addr, "/x", Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.headers.get("retry-after").map(String::as_str), Some("2"));
+        assert_eq!(resp.body_str(), "{\"error\":\"busy\"}");
+        sh.shutdown();
+        t.join().unwrap();
     }
 
     use std::io::{BufRead, BufReader, Read, Write};

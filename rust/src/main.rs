@@ -91,6 +91,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             None,
         )
         .flag(
+            "queue-capacity",
+            "admission: default per-function dispatch-queue bound (0 = never park)",
+            None,
+        )
+        .flag(
+            "queue-deadline-ms",
+            "admission: default wait deadline before 503, milliseconds (0 = try once)",
+            None,
+        )
+        .flag(
             "deploy",
             "comma list of name:model:mem to deploy at boot, e.g. sq:squeezenet:1024",
             None,
@@ -103,9 +113,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut config = load_config(&args)?;
     if let Some(v) = args.get_f64("maintainer-interval")? {
         config.maintainer_interval_s = v;
-        // Same rule as the TOML path: [0, 1e9] seconds, 0 disables.
-        config.validate()?;
     }
+    if let Some(v) = args.get_u64("queue-capacity")? {
+        config.queue_capacity = v as usize;
+    }
+    if let Some(v) = args.get_u64("queue-deadline-ms")? {
+        config.queue_deadline_ms = v;
+    }
+    // Same rules as the TOML path (maintainer range, deadline cap).
+    config.validate()?;
     let shards = args.get_u64("shards")?.unwrap_or(2) as usize;
     let engine = build_engine(args.get_or("engine", "pjrt"), &config, shards)?;
     let platform = Arc::new(Invoker::live(config, engine));
@@ -124,12 +140,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let threads = args.get_u64("threads")?.unwrap_or(16) as usize;
     let interval = platform.config().maintainer_interval_s;
+    let (queue_capacity, queue_deadline_ms) =
+        (platform.config().queue_capacity, platform.config().queue_deadline_ms);
     let gw = Gateway::bind(args.get_or("addr", "127.0.0.1:8080"), threads, platform)?;
     println!("lambdaserve gateway listening on http://{}", gw.local_addr());
     if interval > 0.0 {
         println!("  pool maintainer: sweep + min_warm top-up every {interval:.1}s");
     } else {
         println!("  pool maintainer: disabled (min_warm pools decay past the keep-alive TTL)");
+    }
+    if queue_capacity > 0 {
+        println!(
+            "  admission: per-function queue of {queue_capacity}, {queue_deadline_ms} ms deadline \
+             (then 503 + Retry-After)"
+        );
+    } else {
+        println!("  admission: parking disabled (a capacity shortage is an immediate 503)");
     }
     println!("  v2: POST /v2/functions  POST /v2/functions/<fn>/invocations[?mode=async]");
     println!("  v1: GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
@@ -146,6 +172,8 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         .flag("mem", "memory MB", Some("1024"))
         .flag("min-warm", "containers to keep pre-warmed", Some("0"))
         .flag("max-concurrency", "per-function in-flight cap", None)
+        .flag("queue-capacity", "per-function dispatch-queue bound override", None)
+        .flag("queue-deadline-ms", "per-function dispatch deadline override (ms)", None)
         .flag("config", "platform config TOML", None)
         .flag("engine", "pjrt | mock", Some("mock"));
     if argv.iter().any(|a| a == "--help") {
@@ -163,15 +191,24 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         if let Some(cap) = args.get_u64("max-concurrency")? {
             spec = spec.max_concurrency(cap as usize);
         }
+        if let Some(q) = args.get_u64("queue-capacity")? {
+            spec = spec.queue_capacity(q as usize);
+        }
+        if let Some(d) = args.get_u64("queue-deadline-ms")? {
+            spec = spec.queue_deadline_ms(d);
+        }
         let f = api.deploy(&spec)?;
         println!(
-            "deployed {} -> {} ({}) @ {} MB (min_warm={}, max_concurrency={}, warm={})",
+            "deployed {} -> {} ({}) @ {} MB (min_warm={}, max_concurrency={}, \
+             queue_capacity={}, queue_deadline_ms={}, warm={})",
             f.name,
             f.model,
             f.variant,
             f.memory_mb,
             f.min_warm,
             f.max_concurrency.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
+            f.queue_capacity.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
+            f.queue_deadline_ms.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.warm_containers
         );
         return Ok(());
@@ -319,14 +356,19 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
     for name in names {
         let s = api.stats(&name)?;
         println!(
-            "{}: {} invocations ({} cold / {} warm, {} throttled), warm_containers={}",
+            "{}: {} invocations ({} cold / {} warm, {} throttled, {} queue-expired), \
+             warm_containers={} queue_depth={}",
             s.function, s.invocations, s.cold_starts, s.warm_starts, s.throttled,
-            s.warm_containers
+            s.queue_expired, s.warm_containers, s.queue_depth
         );
         println!(
             "  response mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s predict mean={:.3}s",
             s.response_mean_s, s.response_p50_s, s.response_p95_s, s.response_p99_s,
             s.predict_mean_s
+        );
+        println!(
+            "  queue wait p50={:.3}s p95={:.3}s p99={:.3}s",
+            s.queue_wait_p50_s, s.queue_wait_p95_s, s.queue_wait_p99_s
         );
         println!(
             "  cold p50={:.3}s p99={:.3}s | warm p50={:.3}s p99={:.3}s",

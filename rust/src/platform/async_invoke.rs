@@ -8,14 +8,21 @@
 //! outcome is kept in a result store for `result_ttl` after completion
 //! and served by `GET /v2/invocations/:id`.
 //!
-//! Backpressure: a full queue rejects the submit (HTTP 429), mirroring
-//! the container-cap throttle on the sync path. A job the API already
-//! accepted with 202 is NOT failed on a transient throttle (container
-//! cap / per-function cap): workers back off briefly and requeue it,
-//! up to a bounded retry budget. Shutdown drops queued jobs
-//! (fire-and-forget semantics) but joins workers mid-invocation.
+//! Backpressure: a full queue rejects the submit (HTTP 429). A job
+//! the API already accepted with 202 is NOT failed on a transient
+//! capacity shortage: the worker's `invoke` itself parks in the
+//! platform's admission queue (the same waitable dispatch path the
+//! sync route uses), and when an attempt still comes back throttled
+//! (per-function cap) or saturated (dispatch deadline exhausted) the
+//! worker parks on the pool's capacity condvar until something frees
+//! and requeues the job — no blind fixed-interval backoff polling.
+//! The retry budget counts *admission attempts* (each worth a full
+//! dispatch deadline of waiting); a job that exhausts it surfaces a
+//! terminal `failed` status rather than vanishing. Shutdown drops
+//! queued jobs (fire-and-forget semantics) but joins workers
+//! mid-invocation.
 
-use super::invoker::{InvokeError, Platform};
+use super::invoker::{InvokeError, Platform, SaturationKind};
 use super::metrics::InvocationRecord;
 use crate::runtime::Prediction;
 use crate::util::clock::Nanos;
@@ -79,13 +86,14 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// Throttle-retry budget: ~60 s of cumulative backoff before an
-/// accepted job is failed for real. Sized against the paper-calibrated
-/// cold start (~2 s with simulated bootstrap delays) so a handful of
-/// jobs serialized behind a `max_concurrency: 1` function survive the
-/// wait; the backoff also yields the worker between attempts.
-const MAX_THROTTLE_RETRIES: u32 = 2400;
-const THROTTLE_BACKOFF: Duration = Duration::from_millis(25);
+/// Admission attempts per accepted job before it is failed for real.
+/// Each attempt waits up to the function's effective dispatch
+/// deadline — inside `Platform::invoke` when it parks, or on the
+/// capacity condvar before the requeue when the refusal was instant
+/// (cap hit, queue full) — so 30 attempts bound a job's life at
+/// roughly `2 x 30 x queue_deadline`: a minute at the 2 s default,
+/// in line with the old ~60 s cumulative-backoff budget.
+const MAX_ADMISSION_ATTEMPTS: u32 = 30;
 
 struct Job {
     id: String,
@@ -236,14 +244,47 @@ fn worker_loop(shared: &Arc<Shared>) {
         if let Some(entry) = shared.results.lock().unwrap().get_mut(&job.id) {
             entry.status = AsyncStatus::Running;
         }
+        // The invoke itself rides the shared admission path: a
+        // capacity miss parks in the dispatcher's bounded per-function
+        // queue until a container frees or the deadline passes.
         let outcome = shared.platform.invoke(&job.function, job.seed);
-        // Transient capacity pressure: the caller already got a 202,
-        // so back off and requeue rather than failing accepted work.
-        if matches!(outcome, Err(InvokeError::Throttled)) && job.attempts < MAX_THROTTLE_RETRIES {
+        // Transient shortage: the caller already got a 202, so an
+        // attempt that came back throttled (per-function cap) or
+        // saturated (deadline exhausted / queue full) is retried
+        // rather than failed — until the attempt budget runs out.
+        let transient = matches!(
+            outcome,
+            Err(InvokeError::Throttled) | Err(InvokeError::Saturated(_))
+        );
+        if transient && job.attempts + 1 < MAX_ADMISSION_ATTEMPTS {
             if let Some(entry) = shared.results.lock().unwrap().get_mut(&job.id) {
                 entry.status = AsyncStatus::Queued;
             }
-            std::thread::sleep(THROTTLE_BACKOFF);
+            // Park on the pool's capacity condvar — the same
+            // waitable primitive the dispatcher uses — until anything
+            // frees (a released container, a finished in-flight
+            // request) or one dispatch deadline passes, UNLESS the
+            // attempt already waited a nonzero dispatch deadline
+            // inside invoke. Throttled (cap precedes admission) and
+            // queue-full refusals return instantly, and so does a
+            // DeadlineExpired under try-once (deadline 0) semantics —
+            // without the park any of them would burn the whole
+            // attempt budget in a hot spin.
+            let effective_deadline = match shared.platform.registry.get(&job.function) {
+                Ok(spec) => shared.platform.dispatcher.effective_deadline(&spec),
+                Err(_) => shared.platform.dispatcher.default_deadline(),
+            };
+            let waited_inside = matches!(
+                outcome,
+                Err(InvokeError::Saturated(SaturationKind::DeadlineExpired))
+            ) && !effective_deadline.is_zero();
+            if !waited_inside {
+                // Floor the park so a zero-deadline config cannot
+                // turn contention into a hot requeue spin.
+                let park = effective_deadline.max(Duration::from_millis(10));
+                let deadline = shared.platform.clock().now() + park.as_nanos() as u64;
+                shared.platform.pool.wait_for_change(deadline);
+            }
             {
                 let mut queue = shared.queue.lock().unwrap();
                 queue.push_back(Job { attempts: job.attempts + 1, ..job });
@@ -265,6 +306,13 @@ fn worker_loop(shared: &Arc<Shared>) {
                     Err(InvokeError::NotFound(name)) => {
                         entry.status = AsyncStatus::Failed;
                         entry.error = Some(format!("function not found: {name}"));
+                    }
+                    Err(e) if transient => {
+                        entry.status = AsyncStatus::Failed;
+                        entry.error = Some(format!(
+                            "admission retry budget exhausted after {} attempts: {e}",
+                            job.attempts + 1
+                        ));
                     }
                     Err(e) => {
                         entry.status = AsyncStatus::Failed;
@@ -377,13 +425,87 @@ mod tests {
         // Per-function cap of 1 with 4 workers: concurrent dequeues
         // hit the cap constantly, but every accepted job must still
         // complete via backoff + requeue.
-        p.deploy_full("sq", "squeezenet", "pallas", 1024, 0, Some(1)).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 1024, 0, Some(1), None, None).unwrap();
         let inv = AsyncInvoker::start(p, 4, 64, Duration::from_secs(600));
         let ids: Vec<String> = (0..6).map(|i| inv.submit("sq", i).unwrap()).collect();
         for id in &ids {
             let done = wait_terminal(&inv, id);
             assert_eq!(done.status, AsyncStatus::Done, "{:?}", done.error);
         }
+    }
+
+    /// Satellite regression (ManualClock): workers hitting account-cap
+    /// exhaustion must complete once capacity frees. The worker's
+    /// invoke parks in the admission queue; the release of the held
+    /// container notifies the pool condvar and the parked worker
+    /// serves the job — no wall-clock backoff involved.
+    #[test]
+    fn account_cap_exhaustion_completes_once_capacity_frees() {
+        use crate::configparse::BootstrapConfig;
+        use crate::util::ManualClock;
+        let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+            "squeezenet",
+            2,
+            5.0,
+            85,
+        )]));
+        let clock = ManualClock::new();
+        let config = PlatformConfig {
+            max_containers: 1,
+            bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+            ..Default::default()
+        };
+        let p = Arc::new(Invoker::new(config, engine, clock.clone()));
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 0).unwrap();
+        // Account cap (1) exhausted: the only container is held busy.
+        let held = p.pool.acquire("sq").unwrap();
+        let inv = AsyncInvoker::start(p.clone(), 2, 16, Duration::from_secs(600));
+        let id = inv.submit("sq", 1).unwrap();
+        // Let the worker pick the job up and park against the cap,
+        // then free the capacity.
+        std::thread::sleep(Duration::from_millis(30));
+        p.pool.release(held);
+        let done = wait_terminal(&inv, &id);
+        assert_eq!(done.status, AsyncStatus::Done, "{:?}", done.error);
+        assert_eq!(done.record.expect("record").start, StartKind::Warm);
+    }
+
+    /// Satellite regression: a job whose admission-retry budget runs
+    /// out must surface a terminal `failed` status — not vanish, not
+    /// sit `queued` forever.
+    #[test]
+    fn retry_budget_exhaustion_is_terminal_failed_status() {
+        use crate::configparse::BootstrapConfig;
+        use crate::util::ManualClock;
+        let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+            "squeezenet",
+            2,
+            5.0,
+            85,
+        )]));
+        let clock = ManualClock::new();
+        let config = PlatformConfig {
+            max_containers: 1,
+            // Short (virtual) dispatch deadline so the 30 attempts
+            // burn down in milliseconds of wall time.
+            queue_deadline_ms: 40,
+            bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+            ..Default::default()
+        };
+        let p = Arc::new(Invoker::new(config, engine, clock.clone()));
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 0).unwrap();
+        // Capacity permanently exhausted: never released.
+        let _held = p.pool.acquire("sq").unwrap();
+        let inv = AsyncInvoker::start(p.clone(), 1, 16, Duration::from_secs(600));
+        let id = inv.submit("sq", 1).unwrap();
+        let done = wait_terminal(&inv, &id);
+        assert_eq!(done.status, AsyncStatus::Failed);
+        let err = done.error.expect("terminal error recorded");
+        assert!(err.contains("retry budget"), "{err}");
+        assert_eq!(inv.queued(), 0, "the job left the queue");
+        assert!(done.finished_at.is_some());
     }
 
     #[test]

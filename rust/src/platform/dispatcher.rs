@@ -1,0 +1,229 @@
+//! Admission-controlled dispatch: bounded per-function wait queues.
+//!
+//! The paper's central finding is that cold starts skew the latency
+//! distribution; rejecting every transient capacity miss with an
+//! instant 429 makes the platform *worse* than real Lambda, which
+//! absorbs bursts with brief queueing. The [`Dispatcher`] implements
+//! the admission side of that trade: each function has a bounded wait
+//! queue; a request that misses warm capacity takes a [`QueueTicket`]
+//! and parks in the waitable [`super::pool::WarmPool`] until a
+//! container or a capacity slot frees, up to a deadline. Admission
+//! outcomes map to HTTP:
+//!
+//! * queue at its bound → refuse immediately (`503` queue saturated),
+//! * deadline exhausted while parked → `503` + `Retry-After`,
+//! * per-function concurrency cap → `429` (enforced before admission;
+//!   the queue absorbs *capacity* misses, not cap violations).
+//!
+//! Both bounds come from `platform.queue_capacity` /
+//! `platform.queue_deadline_ms`, overridable per function at
+//! deploy/reconfigure time. The dispatcher also streams the
+//! saturation telemetry the stats routes serve: current and peak
+//! queue depth and the deadline-expired count.
+
+use super::registry::FunctionSpec;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+pub struct Dispatcher {
+    /// Platform-default per-function queue bound (0 = no queueing).
+    default_capacity: usize,
+    /// Platform-default wait deadline (0 = try once, never park).
+    default_deadline: Duration,
+    /// Live queued-request count per function (entries removed at 0).
+    depth_by_fn: Mutex<BTreeMap<String, usize>>,
+    /// Total requests currently queued across all functions.
+    depth: AtomicUsize,
+    /// High-water mark of `depth`.
+    peak_depth: AtomicUsize,
+    /// Requests that exhausted their deadline while parked.
+    expired: AtomicUsize,
+}
+
+/// RAII admission slot in one function's wait queue: holds the queue
+/// depth accounting for exactly as long as the request is waiting or
+/// being served, and carries the request's effective wait budget.
+pub struct QueueTicket<'a> {
+    dispatcher: &'a Dispatcher,
+    function: String,
+    /// Effective deadline for this request (per-function override or
+    /// the platform default).
+    pub deadline: Duration,
+}
+
+impl Dispatcher {
+    pub fn new(queue_capacity: usize, queue_deadline_ms: u64) -> Self {
+        Self {
+            default_capacity: queue_capacity,
+            default_deadline: Duration::from_millis(queue_deadline_ms),
+            depth_by_fn: Mutex::new(BTreeMap::new()),
+            depth: AtomicUsize::new(0),
+            peak_depth: AtomicUsize::new(0),
+            expired: AtomicUsize::new(0),
+        }
+    }
+
+    /// The queue bound in effect for `spec`.
+    pub fn effective_capacity(&self, spec: &FunctionSpec) -> usize {
+        spec.queue_capacity.unwrap_or(self.default_capacity)
+    }
+
+    /// The wait deadline in effect for `spec`.
+    pub fn effective_deadline(&self, spec: &FunctionSpec) -> Duration {
+        spec.queue_deadline_ms.map(Duration::from_millis).unwrap_or(self.default_deadline)
+    }
+
+    /// The platform-default wait deadline (for callers with no spec
+    /// at hand, e.g. the async workers' inter-attempt park).
+    pub fn default_deadline(&self) -> Duration {
+        self.default_deadline
+    }
+
+    /// Admit one request to `spec`'s wait queue. `None` when the
+    /// queue is already at its bound (the saturation signal the
+    /// gateway maps to 503) — including always, when the bound is 0
+    /// (the invoker then falls back to one non-parking capacity
+    /// probe, so "no queueing" cannot starve an idle platform).
+    pub fn admit(&self, spec: &FunctionSpec) -> Option<QueueTicket<'_>> {
+        let capacity = self.effective_capacity(spec);
+        {
+            let mut g = self.depth_by_fn.lock().unwrap();
+            let count = g.entry(spec.name.clone()).or_insert(0);
+            if *count >= capacity {
+                if *count == 0 {
+                    g.remove(&spec.name);
+                }
+                return None;
+            }
+            *count += 1;
+        }
+        let now = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak_depth.fetch_max(now, Ordering::SeqCst);
+        Some(QueueTicket {
+            dispatcher: self,
+            function: spec.name.clone(),
+            deadline: self.effective_deadline(spec),
+        })
+    }
+
+    /// Requests currently queued for `function`.
+    pub fn queue_depth(&self, function: &str) -> usize {
+        self.depth_by_fn.lock().unwrap().get(function).copied().unwrap_or(0)
+    }
+
+    /// Requests currently queued across all functions.
+    pub fn total_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of the total queue depth.
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth.load(Ordering::SeqCst)
+    }
+
+    /// Requests that exhausted their deadline while parked.
+    pub fn expired_total(&self) -> usize {
+        self.expired.load(Ordering::SeqCst)
+    }
+
+    pub fn note_expired(&self) {
+        self.expired.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+impl Drop for QueueTicket<'_> {
+    fn drop(&mut self) {
+        let mut g = self.dispatcher.depth_by_fn.lock().unwrap();
+        if let Some(count) = g.get_mut(&self.function) {
+            *count = count.saturating_sub(1);
+            if *count == 0 {
+                // Entries are dropped at zero so churned function
+                // names don't grow the map without bound.
+                g.remove(&self.function);
+            }
+        }
+        drop(g);
+        self.dispatcher.depth.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::registry::FunctionRegistry;
+    use crate::runtime::MockEngine;
+    use std::sync::Arc;
+
+    fn spec(queue_capacity: Option<usize>, queue_deadline_ms: Option<u64>) -> Arc<FunctionSpec> {
+        let reg = FunctionRegistry::new(Arc::new(MockEngine::paper_zoo()));
+        reg.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            512,
+            0,
+            None,
+            queue_capacity,
+            queue_deadline_ms,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn admission_bounded_by_capacity() {
+        let d = Dispatcher::new(2, 1000);
+        let s = spec(None, None);
+        let a = d.admit(&s).expect("first admitted");
+        let b = d.admit(&s).expect("second admitted");
+        assert!(d.admit(&s).is_none(), "queue at bound refuses");
+        assert_eq!(d.queue_depth("sq"), 2);
+        assert_eq!(d.total_depth(), 2);
+        drop(a);
+        assert_eq!(d.queue_depth("sq"), 1);
+        let c = d.admit(&s).expect("slot freed by drop");
+        drop(b);
+        drop(c);
+        assert_eq!(d.queue_depth("sq"), 0);
+        assert_eq!(d.total_depth(), 0);
+        assert_eq!(d.peak_depth(), 2, "peak sticks");
+        // Drained entries are dropped from the per-function map.
+        assert!(d.depth_by_fn.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn per_function_overrides_beat_defaults() {
+        let d = Dispatcher::new(8, 2000);
+        let s = spec(Some(1), Some(250));
+        assert_eq!(d.effective_capacity(&s), 1);
+        assert_eq!(d.effective_deadline(&s), Duration::from_millis(250));
+        let t = d.admit(&s).unwrap();
+        assert_eq!(t.deadline, Duration::from_millis(250));
+        assert!(d.admit(&s).is_none(), "override bound of 1 enforced");
+        let plain = spec(None, None);
+        assert_eq!(d.effective_capacity(&plain), 8);
+        assert_eq!(d.effective_deadline(&plain), Duration::from_millis(2000));
+    }
+
+    #[test]
+    fn zero_capacity_disables_queueing() {
+        let d = Dispatcher::new(0, 2000);
+        let s = spec(None, None);
+        assert!(d.admit(&s).is_none());
+        assert_eq!(d.total_depth(), 0);
+        assert!(d.depth_by_fn.lock().unwrap().is_empty(), "refusal leaves no entry behind");
+        // A per-function override re-enables it.
+        let s = spec(Some(1), None);
+        assert!(d.admit(&s).is_some());
+    }
+
+    #[test]
+    fn expired_counter() {
+        let d = Dispatcher::new(1, 1);
+        assert_eq!(d.expired_total(), 0);
+        d.note_expired();
+        d.note_expired();
+        assert_eq!(d.expired_total(), 2);
+    }
+}

@@ -1,17 +1,27 @@
-//! The invocation pipeline: route -> acquire (warm | cold provision)
-//! -> throttled execute -> meter -> release.
+//! The invocation pipeline: route -> admit (warm | queued wait |
+//! cold provision) -> throttled execute -> meter -> release.
 //!
 //! [`Platform`] is the top-level façade the gateway, experiments, and
-//! examples use: it owns the registry, warm pool, scaler, CPU
-//! governor, billing meter, metrics sink, and the engine. `invoke` is
-//! safe to call from many threads concurrently (the scalability
-//! experiments do).
+//! examples use: it owns the registry, warm pool, dispatcher, scaler,
+//! CPU governor, billing meter, metrics sink, and the engine.
+//! `invoke` is safe to call from many threads concurrently (the
+//! scalability experiments do).
+//!
+//! Admission contract (replaces the old "synchronous acquire or
+//! instant 429"): a request that misses warm capacity takes a bounded
+//! per-function queue slot from the [`Dispatcher`] and parks in the
+//! waitable [`WarmPool`] until a container or a capacity slot frees.
+//! 429 ([`InvokeError::Throttled`]) now means exactly one thing — the
+//! function's own `max_concurrency` cap; capacity pressure surfaces
+//! as bounded queue wait, and only as 503
+//! ([`InvokeError::Saturated`]) once the queue itself is full or the
+//! wait deadline is exhausted.
 
 use super::billing::BillingMeter;
-use super::container::Container;
+use super::dispatcher::Dispatcher;
 use super::maintainer::{MaintenanceReport, PoolMaintainer};
 use super::metrics::{InvocationRecord, MetricsSink, StartKind};
-use super::pool::WarmPool;
+use super::pool::{AcquireOutcome, WarmPool};
 use super::registry::{FunctionRegistry, FunctionSpec};
 use super::scaler::Scaler;
 use super::throttle::CpuGovernor;
@@ -23,11 +33,25 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+/// Why an admitted request was refused with 503.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaturationKind {
+    /// The function's wait queue was already at its bound.
+    QueueFull,
+    /// The request parked but its dispatch deadline passed before a
+    /// container or capacity slot freed.
+    DeadlineExpired,
+}
+
 /// Error kind surfaced to the gateway (HTTP status mapping).
 #[derive(Debug)]
 pub enum InvokeError {
     NotFound(String),
+    /// Per-function concurrency cap (HTTP 429).
     Throttled,
+    /// Admission queue saturated or wait deadline exhausted (HTTP 503
+    /// + `Retry-After`).
+    Saturated(SaturationKind),
     Failed(anyhow::Error),
 }
 
@@ -35,7 +59,15 @@ impl std::fmt::Display for InvokeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             InvokeError::NotFound(name) => write!(f, "function not found: {name}"),
-            InvokeError::Throttled => write!(f, "throttled: container capacity exhausted"),
+            InvokeError::Throttled => {
+                write!(f, "throttled: per-function concurrency cap reached")
+            }
+            InvokeError::Saturated(SaturationKind::QueueFull) => {
+                write!(f, "saturated: dispatch queue full")
+            }
+            InvokeError::Saturated(SaturationKind::DeadlineExpired) => {
+                write!(f, "saturated: no capacity freed within the dispatch deadline")
+            }
             InvokeError::Failed(e) => write!(f, "execution failed: {e:#}"),
         }
     }
@@ -59,6 +91,7 @@ pub struct InvokeOutcome {
 pub struct Invoker {
     pub registry: FunctionRegistry,
     pub pool: WarmPool,
+    pub dispatcher: Dispatcher,
     pub scaler: Scaler,
     pub billing: BillingMeter,
     pub metrics: MetricsSink,
@@ -75,19 +108,26 @@ pub struct Invoker {
 }
 
 /// Partial update applied by [`Invoker::reconfigure`]; `None` fields
-/// keep the current value. `max_concurrency` is doubly optional so a
-/// patch can explicitly clear the cap (`Some(None)`).
+/// keep the current value. `max_concurrency`, `queue_capacity`, and
+/// `queue_deadline_ms` are doubly optional so a patch can explicitly
+/// clear the cap/override (`Some(None)`).
 #[derive(Debug, Clone, Default)]
 pub struct ReconfigurePatch {
     pub memory_mb: Option<u32>,
     pub variant: Option<String>,
     pub min_warm: Option<usize>,
     pub max_concurrency: Option<Option<usize>>,
+    pub queue_capacity: Option<Option<usize>>,
+    pub queue_deadline_ms: Option<Option<u64>>,
 }
 
-/// RAII decrement for one function's in-flight counter.
+/// RAII decrement for one function's in-flight counter. The release
+/// notifies the pool's waiters: async workers that backed off on a
+/// 429 park on the same waitable primitive as capacity misses, so a
+/// freed concurrency slot must wake them.
 struct FnFlightGuard<'a> {
     map: &'a Mutex<BTreeMap<String, usize>>,
+    pool: &'a WarmPool,
     name: String,
 }
 
@@ -96,6 +136,7 @@ impl<'a> FnFlightGuard<'a> {
     /// function's concurrency cap is already saturated.
     fn acquire(
         map: &'a Mutex<BTreeMap<String, usize>>,
+        pool: &'a WarmPool,
         name: &str,
         cap: Option<usize>,
     ) -> Option<Self> {
@@ -103,23 +144,29 @@ impl<'a> FnFlightGuard<'a> {
         let count = g.entry(name.to_string()).or_insert(0);
         if let Some(cap) = cap {
             if *count >= cap {
+                if *count == 0 {
+                    g.remove(name);
+                }
                 return None;
             }
         }
         *count += 1;
-        Some(FnFlightGuard { map, name: name.to_string() })
+        Some(FnFlightGuard { map, pool, name: name.to_string() })
     }
 }
 
 impl Drop for FnFlightGuard<'_> {
     fn drop(&mut self) {
-        let mut g = self.map.lock().unwrap();
-        if let Some(count) = g.get_mut(&self.name) {
-            *count = count.saturating_sub(1);
-            if *count == 0 {
-                g.remove(&self.name);
+        {
+            let mut g = self.map.lock().unwrap();
+            if let Some(count) = g.get_mut(&self.name) {
+                *count = count.saturating_sub(1);
+                if *count == 0 {
+                    g.remove(&self.name);
+                }
             }
         }
+        self.pool.notify_waiters();
     }
 }
 
@@ -131,6 +178,7 @@ impl Invoker {
         Self {
             registry: FunctionRegistry::new(engine.clone()),
             pool: WarmPool::new(config.max_containers, config.keep_alive_s, clock.clone()),
+            dispatcher: Dispatcher::new(config.queue_capacity, config.queue_deadline_ms),
             scaler: Scaler::new(),
             billing: BillingMeter::new(config.pricing.clone()),
             metrics: MetricsSink::with_capacity(config.metrics_ring_capacity),
@@ -178,11 +226,13 @@ impl Invoker {
     }
 
     /// Deploy with the full v2 spec (warm-pool policy + concurrency
-    /// cap). `min_warm` containers are provisioned eagerly,
-    /// best-effort: the target is a policy, not a transaction, so
-    /// hitting the container cap mid-prewarm does not fail (or roll
-    /// back) the deployment — callers can read the achieved count
-    /// from the pool (`warm_containers` in the API resource).
+    /// cap + admission-queue overrides). `min_warm` containers are
+    /// provisioned eagerly, best-effort: the target is a policy, not
+    /// a transaction, so hitting the container cap mid-prewarm does
+    /// not fail (or roll back) the deployment — callers can read the
+    /// achieved count from the pool (`warm_containers` in the API
+    /// resource).
+    #[allow(clippy::too_many_arguments)]
     pub fn deploy_full(
         &self,
         name: &str,
@@ -191,9 +241,19 @@ impl Invoker {
         memory_mb: u32,
         min_warm: usize,
         max_concurrency: Option<usize>,
+        queue_capacity: Option<usize>,
+        queue_deadline_ms: Option<u64>,
     ) -> Result<Arc<FunctionSpec>> {
-        let spec =
-            self.registry.deploy_full(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        let spec = self.registry.deploy_full(
+            name,
+            model,
+            variant,
+            memory_mb,
+            min_warm,
+            max_concurrency,
+            queue_capacity,
+            queue_deadline_ms,
+        )?;
         self.top_up_warm_pool(&spec);
         Ok(spec)
     }
@@ -201,6 +261,7 @@ impl Invoker {
     /// Atomic create (v2 POST semantics): fails if the name is taken,
     /// so two racing creates cannot both succeed. Prewarm is
     /// best-effort, as in [`Self::deploy_full`].
+    #[allow(clippy::too_many_arguments)]
     pub fn create_full(
         &self,
         name: &str,
@@ -209,9 +270,19 @@ impl Invoker {
         memory_mb: u32,
         min_warm: usize,
         max_concurrency: Option<usize>,
+        queue_capacity: Option<usize>,
+        queue_deadline_ms: Option<u64>,
     ) -> Result<Arc<FunctionSpec>> {
-        let spec =
-            self.registry.create_full(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        let spec = self.registry.create_full(
+            name,
+            model,
+            variant,
+            memory_mb,
+            min_warm,
+            max_concurrency,
+            queue_capacity,
+            queue_deadline_ms,
+        )?;
         self.top_up_warm_pool(&spec);
         Ok(spec)
     }
@@ -271,6 +342,14 @@ impl Invoker {
                 Some(v) => v,
                 None => cur.max_concurrency,
             },
+            match patch.queue_capacity {
+                Some(v) => v,
+                None => cur.queue_capacity,
+            },
+            match patch.queue_deadline_ms {
+                Some(v) => v,
+                None => cur.queue_deadline_ms,
+            },
         )?;
         if spec.memory_mb != cur.memory_mb || spec.variant != cur.variant {
             self.pool.evict_function(name);
@@ -295,59 +374,107 @@ impl Invoker {
     }
 
     /// Invoke `function` on a (seeded) synthetic image.
+    ///
+    /// Admission order: the per-function concurrency cap is checked
+    /// first (429 — the queue absorbs capacity pressure, not cap
+    /// violations), then a warm container is tried, and only a miss
+    /// takes a dispatcher queue slot and parks in the waitable pool.
+    /// The park ends with a warm container (another request released
+    /// one), a capacity reservation (this request cold-provisions —
+    /// at most one provision per queued request, decided by the
+    /// [`Scaler`]), or a 503 when the deadline passes.
     pub fn invoke(&self, function: &str, image_seed: u64) -> Result<InvokeOutcome, InvokeError> {
         let spec = self
             .registry
             .get(function)
             .map_err(|_| InvokeError::NotFound(function.to_string()))?;
-        let _fn_flight =
-            match FnFlightGuard::acquire(&self.fn_in_flight, function, spec.max_concurrency) {
-                Some(guard) => guard,
-                None => {
-                    self.scaler.note_throttled();
-                    self.metrics.note_throttled(function);
-                    return Err(InvokeError::Throttled);
-                }
-            };
-        let _flight = self.scaler.arrive();
+        let _fn_flight = match FnFlightGuard::acquire(
+            &self.fn_in_flight,
+            &self.pool,
+            function,
+            spec.max_concurrency,
+        ) {
+            Some(guard) => guard,
+            None => {
+                self.scaler.note_throttled();
+                self.metrics.note_throttled(function);
+                return Err(InvokeError::Throttled);
+            }
+        };
         let t_queue_start = self.clock.now();
 
-        // Acquire: warm hit or cold provision.
-        let (mut container, start, queue_wait) = match self.pool.acquire(function) {
+        // Admit: warm hit, parked wait, or cold provision. The queue
+        // wait ends when the request holds a container or a capacity
+        // reservation — for cold starts that is BEFORE provisioning,
+        // so the wait never double-counts the provision components
+        // the record itemizes separately. The scaler's in-flight
+        // guard is taken at the same point: a request parked in the
+        // queue is visible as queue depth, not concurrency, so
+        // `peak_concurrency` keeps measuring containers' worth of
+        // demand (what the paper's Figure 7 ramp drives), provision
+        // time included.
+        let (mut container, start, queue_wait, _flight) = match self.pool.acquire(function) {
             Some(c) => {
                 let wait = Duration::from_nanos(self.clock.now() - t_queue_start);
-                (c, StartKind::Warm, wait)
+                (c, StartKind::Warm, wait, self.scaler.arrive())
             }
             None => {
-                if !self.pool.try_reserve() {
-                    self.scaler.note_throttled();
-                    self.metrics.note_throttled(function);
-                    return Err(InvokeError::Throttled);
-                }
-                let provisioned = {
-                    // Draw a child seed under the lock, then provision
-                    // with a local RNG: concurrent cold starts (and
-                    // maintainer replenishment) must never serialize
-                    // on the multi-second bootstrap sleeps.
-                    let mut rng = SplitMix64::new(self.rng.lock().unwrap().next_u64());
-                    Container::provision(
-                        spec.clone(),
-                        self.engine.clone(),
-                        &self.governor,
-                        &self.config.bootstrap,
-                        &self.clock,
-                        &mut rng,
-                    )
-                };
-                match provisioned {
-                    Ok(c) => {
-                        self.scaler.note_cold_provision();
-                        let wait = Duration::from_nanos(self.clock.now() - t_queue_start);
-                        (c, StartKind::Cold, wait)
+                let outcome = match self.dispatcher.admit(&spec) {
+                    Some(ticket) => {
+                        let deadline = t_queue_start + ticket.deadline.as_nanos() as u64;
+                        let outcome = self.pool.acquire_or_reserve(function, deadline);
+                        // The wait is over either way: leave the
+                        // queue accounting before serving (or
+                        // refusing) the request.
+                        drop(ticket);
+                        outcome
                     }
-                    Err(e) => {
-                        self.pool.cancel_reservation();
-                        return Err(InvokeError::Failed(e));
+                    None => {
+                        // Queue at its bound — or queueing disabled
+                        // (bound 0), where one immediate probe still
+                        // runs: a request that can take a freed
+                        // container or reserve a slot on the spot was
+                        // never a capacity miss, so "no queueing"
+                        // must not starve an idle platform.
+                        let outcome = if self.dispatcher.effective_capacity(&spec) == 0 {
+                            self.pool.acquire_or_reserve(function, self.clock.now())
+                        } else {
+                            AcquireOutcome::TimedOut
+                        };
+                        if matches!(outcome, AcquireOutcome::TimedOut) {
+                            self.scaler.note_saturated();
+                            self.metrics.note_queue_expired(function);
+                            return Err(InvokeError::Saturated(SaturationKind::QueueFull));
+                        }
+                        outcome
+                    }
+                };
+                let wait = Duration::from_nanos(self.clock.now() - t_queue_start);
+                match outcome {
+                    AcquireOutcome::Container(c) => {
+                        (c, StartKind::Warm, wait, self.scaler.arrive())
+                    }
+                    AcquireOutcome::Reserved => {
+                        let flight = self.scaler.arrive();
+                        let provisioned = self.scaler.provision_demand(
+                            &spec,
+                            &self.pool,
+                            &self.engine,
+                            &self.governor,
+                            &self.config.bootstrap,
+                            &self.clock,
+                            &self.rng,
+                        );
+                        match provisioned {
+                            Ok(c) => (c, StartKind::Cold, wait, flight),
+                            Err(e) => return Err(InvokeError::Failed(e)),
+                        }
+                    }
+                    AcquireOutcome::TimedOut => {
+                        self.dispatcher.note_expired();
+                        self.scaler.note_saturated();
+                        self.metrics.note_queue_expired(function);
+                        return Err(InvokeError::Saturated(SaturationKind::DeadlineExpired));
                     }
                 }
             }
@@ -373,22 +500,23 @@ impl Invoker {
             Duration::ZERO
         };
         let billed = cold_handler + effective_predict;
-        let line = self
-            .billing
-            .charge(function, spec.memory_mb, billed)
-            .map_err(InvokeError::Failed)?;
-
-        let queue = match start {
-            // Queue wait for cold starts is reported inside the
-            // provision components; avoid double counting.
-            StartKind::Cold => Duration::ZERO,
-            StartKind::Warm => queue_wait,
+        let line = match self.billing.charge(function, spec.memory_mb, billed) {
+            Ok(line) => line,
+            Err(e) => {
+                // The container executed but cannot be billed: retire
+                // it so its capacity slot is returned — dropping it
+                // here used to leak the slot permanently (the pool's
+                // `total` never decremented).
+                self.pool.retire(container);
+                return Err(InvokeError::Failed(e));
+            }
         };
+
         let record = InvocationRecord {
             function: function.to_string(),
             memory_mb: spec.memory_mb,
             start,
-            queue,
+            queue: queue_wait,
             sandbox: if start == StartKind::Cold { pc.sandbox } else { Duration::ZERO },
             runtime_init: if start == StartKind::Cold { pc.runtime_init } else { Duration::ZERO },
             package_fetch: if start == StartKind::Cold { pc.package_fetch } else { Duration::ZERO },
@@ -576,23 +704,109 @@ mod tests {
         assert!(cold.billed < cold.response());
     }
 
+    /// A capacity miss is no longer an instant 429: the request parks
+    /// in the dispatcher queue; with nothing freeing capacity it
+    /// exhausts its (virtual) deadline and surfaces a 503-mapped
+    /// `Saturated` error, with the expiry counted in the dispatcher,
+    /// the scaler, and the function's metrics shard.
     #[test]
-    fn throttles_at_container_cap() {
+    fn capacity_miss_parks_then_expires_as_saturated() {
         let engine = Arc::new(MockEngine::paper_zoo());
         let clock = ManualClock::new();
         let cfg = PlatformConfig { max_containers: 1, ..Default::default() };
         let p = Invoker::new(cfg, engine, clock.clone());
         p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
         p.invoke("sq", 1).unwrap();
-        // The one container is warm in the pool; a concurrent second
-        // request would need another container. Simulate by holding
-        // the warm one.
+        // The one container is busy (held); a second request parks,
+        // self-drives virtual time to its deadline, and gets 503.
         let held = p.pool.acquire("sq").unwrap();
+        let t0 = clock.now();
         let err = p.invoke("sq", 2).unwrap_err();
-        assert!(matches!(err, InvokeError::Throttled));
-        assert_eq!(p.scaler.throttled_count(), 1);
+        assert!(matches!(err, InvokeError::Saturated(SaturationKind::DeadlineExpired)), "{err}");
+        assert!(
+            clock.now() - t0 >= 2_000_000_000,
+            "waited the full default queue_deadline_ms in virtual time"
+        );
+        assert_eq!(p.scaler.saturated_count(), 1);
+        assert_eq!(p.scaler.throttled_count(), 0, "capacity misses are not 429s anymore");
+        assert_eq!(p.dispatcher.expired_total(), 1);
+        assert_eq!(p.dispatcher.total_depth(), 0, "refused request left the queue");
+        assert_eq!(p.metrics.function_metrics("sq").queue_expired, 1);
         p.pool.release(held);
         assert!(p.invoke("sq", 3).is_ok(), "released container serves again");
+    }
+
+    /// The queue absorbs a transient capacity miss: a parked request
+    /// completes (zero 429s/503s) once the busy container releases.
+    #[test]
+    fn parked_request_completes_when_capacity_frees() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig { max_containers: 1, ..Default::default() };
+        let p = Arc::new(Invoker::new(cfg, engine, clock.clone()));
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        let held = p.pool.acquire("sq").unwrap();
+        let p2 = p.clone();
+        let waiter = std::thread::spawn(move || p2.invoke("sq", 2));
+        // Let the request park, then free the container.
+        std::thread::sleep(Duration::from_millis(20));
+        p.pool.release(held);
+        let out = waiter.join().unwrap().expect("parked request served after release");
+        assert_eq!(out.record.start, StartKind::Warm);
+        assert_eq!(p.scaler.saturated_count(), 0);
+        assert_eq!(p.scaler.throttled_count(), 0);
+        // Every served request streams its queue wait (possibly zero).
+        assert_eq!(p.metrics.function_metrics("sq").queue_wait.count(), 2);
+    }
+
+    /// `queue_capacity = 0` disables *parking*, not serving: a warm
+    /// miss with free capacity still cold-provisions on the spot;
+    /// only a genuine capacity shortage is refused — immediately,
+    /// with 503 `queue_full`.
+    #[test]
+    fn queueing_disabled_still_serves_when_capacity_free() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg =
+            PlatformConfig { queue_capacity: 0, max_containers: 1, ..Default::default() };
+        let p = Invoker::new(cfg, engine, clock.clone());
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        // Idle platform, free slot: not a queue refusal.
+        let r = p.invoke("sq", 1).unwrap();
+        assert_eq!(r.record.start, StartKind::Cold);
+        // At cap with the container held busy: immediate 503.
+        let held = p.pool.acquire("sq").unwrap();
+        let t0 = clock.now();
+        let err = p.invoke("sq", 2).unwrap_err();
+        assert!(matches!(err, InvokeError::Saturated(SaturationKind::QueueFull)), "{err}");
+        assert_eq!(clock.now(), t0, "refusal is immediate — no (virtual) parking");
+        assert_eq!(p.dispatcher.expired_total(), 0, "a refusal is not a deadline expiry");
+        p.pool.release(held);
+        assert!(p.invoke("sq", 3).is_ok());
+    }
+
+    /// Satellite regression: a billing failure after a successful
+    /// execute must retire the container — the old `?` propagation
+    /// dropped it without `pool.retire()`, permanently leaking a
+    /// capacity slot (`total` never decremented) per occurrence.
+    #[test]
+    fn billing_failure_retires_container_and_frees_capacity() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let mut cfg = PlatformConfig { max_containers: 2, ..Default::default() };
+        // Pricing table without the function's 512 MB tier: `charge`
+        // fails after the execute succeeds.
+        cfg.pricing.table = vec![(128, 1e-6), (256, 2e-6)];
+        let p = Invoker::new(cfg, engine.clone(), clock);
+        p.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        for i in 0..3 {
+            let err = p.invoke("sq", i).unwrap_err();
+            assert!(matches!(err, InvokeError::Failed(_)), "attempt {i}: {err}");
+        }
+        assert_eq!(p.pool.total_alive(), 0, "capacity slots all returned");
+        assert_eq!(engine.live_instances(), 0, "engine instances reaped");
+        assert_eq!(p.metrics.len(), 0, "unbillable invocations are not recorded");
     }
 
     #[test]
@@ -656,7 +870,7 @@ mod tests {
     #[test]
     fn deploy_full_prewarms_min_warm() {
         let (p, _, _) = platform();
-        p.deploy_full("sq", "squeezenet", "pallas", 1024, 2, None).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 1024, 2, None, None, None).unwrap();
         assert_eq!(p.pool.warm_count("sq"), 2);
         // First invocation finds a warm container immediately.
         let r = p.invoke("sq", 1).unwrap();
@@ -771,13 +985,13 @@ mod tests {
     #[test]
     fn per_function_concurrency_cap_throttles() {
         let (p, _, _) = platform();
-        p.deploy_full("sq", "squeezenet", "pallas", 1024, 0, Some(1)).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 1024, 0, Some(1), None, None).unwrap();
         // Saturate the single slot by holding the counter via a warm
         // container acquired mid-flight: simulate by taking the guard
         // path directly — first invoke succeeds (counter returns to 0).
         assert!(p.invoke("sq", 1).is_ok());
         // Hold one in-flight slot manually.
-        let guard = FnFlightGuard::acquire(&p.fn_in_flight, "sq", Some(1)).unwrap();
+        let guard = FnFlightGuard::acquire(&p.fn_in_flight, &p.pool, "sq", Some(1)).unwrap();
         let err = p.invoke("sq", 2).unwrap_err();
         assert!(matches!(err, InvokeError::Throttled));
         assert_eq!(p.scaler.throttled_count(), 1);

@@ -103,9 +103,12 @@ impl InvocationRecord {
 pub struct FnMetrics {
     pub invocations: u64,
     pub cold_starts: u64,
-    /// Requests rejected with 429 for this function (container cap or
-    /// per-function concurrency cap).
+    /// Requests rejected with 429 for this function (per-function
+    /// concurrency cap).
     pub throttled: u64,
+    /// Requests refused with 503: admission queue at its bound, or a
+    /// parked request's dispatch deadline exhausted.
+    pub queue_expired: u64,
     pub billed_ms_total: u64,
     pub cost_dollars_total: f64,
     pub gb_seconds_total: f64,
@@ -116,6 +119,10 @@ pub struct FnMetrics {
     /// Prediction-time histograms in nanoseconds.
     pub predict_cold: Histogram,
     pub predict_warm: Histogram,
+    /// True dispatch-queue wait in nanoseconds, every served request
+    /// (cold and warm): the latency component the admission queue
+    /// trades for availability.
+    pub queue_wait: Histogram,
 }
 
 impl FnMetrics {
@@ -139,6 +146,7 @@ impl FnMetrics {
 
     fn apply(&mut self, r: &InvocationRecord, response_ns: u64, predict_ns: u64) {
         self.invocations += 1;
+        self.queue_wait.record(r.queue.as_nanos() as u64);
         match r.start {
             StartKind::Cold => {
                 self.cold_starts += 1;
@@ -213,6 +221,13 @@ impl MetricsSink {
     pub fn note_throttled(&self, function: &str) {
         self.shard(function).lock().unwrap().throttled += 1;
         self.totals.lock().unwrap().throttled += 1;
+    }
+
+    /// Count a 503 (queue saturated or deadline exhausted) against
+    /// `function`'s shard (and the totals).
+    pub fn note_queue_expired(&self, function: &str) {
+        self.shard(function).lock().unwrap().queue_expired += 1;
+        self.totals.lock().unwrap().queue_expired += 1;
     }
 
     /// One-lock consistent snapshot of a function's aggregates
@@ -413,11 +428,14 @@ mod tests {
         s.record(test_record("f", 512, StartKind::Warm, 500));
         s.record(test_record("g", 1024, StartKind::Warm, 300));
         s.note_throttled("f");
+        s.note_queue_expired("f");
         let m = s.function_metrics("f");
         assert_eq!(m.invocations, 3);
         assert_eq!(m.cold_starts, 1);
         assert_eq!(m.warm_starts(), 2);
         assert_eq!(m.throttled, 1);
+        assert_eq!(m.queue_expired, 1);
+        assert_eq!(m.queue_wait.count(), 3, "every served request records queue wait");
         assert_eq!(m.response_cold.count(), 1);
         assert_eq!(m.response_warm.count(), 2);
         assert_eq!(m.response_all().count(), 3);
@@ -436,6 +454,24 @@ mod tests {
         let t = s.platform_metrics();
         assert_eq!(t.invocations, 4);
         assert_eq!(t.throttled, 1);
+        assert_eq!(t.queue_expired, 1);
+        assert_eq!(t.queue_wait.count(), 4);
+    }
+
+    #[test]
+    fn queue_wait_histogram_tracks_parked_time() {
+        let s = MetricsSink::new();
+        let mut r = test_record("f", 512, StartKind::Warm, 100);
+        r.queue = Duration::from_millis(40);
+        s.record(r);
+        let mut r = test_record("f", 512, StartKind::Cold, 100);
+        r.queue = Duration::from_millis(400);
+        s.record(r);
+        let m = s.function_metrics("f");
+        assert_eq!(m.queue_wait.count(), 2, "cold requests record queue wait too");
+        // Log-bucketed: quantiles are bucket lower edges, ~1% under.
+        assert!(m.queue_wait.p99() >= 390_000_000, "p99={}", m.queue_wait.p99());
+        assert!(m.queue_wait.p50() >= 39_000_000, "p50={}", m.queue_wait.p50());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 pub mod async_invoke;
 pub mod billing;
 pub mod container;
+pub mod dispatcher;
 pub mod invoker;
 pub mod maintainer;
 pub mod metrics;
@@ -14,10 +15,11 @@ pub mod throttle;
 pub use async_invoke::{AsyncInvocation, AsyncInvoker, AsyncStatus, SubmitError};
 pub use billing::{BillingMeter, InvoiceLine};
 pub use container::{Container, ContainerState};
-pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform, ReconfigurePatch};
+pub use dispatcher::{Dispatcher, QueueTicket};
+pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform, ReconfigurePatch, SaturationKind};
 pub use maintainer::{MaintenanceReport, PoolMaintainer};
 pub use metrics::{FnMetrics, InvocationRecord, MetricsSink, StartKind};
-pub use pool::WarmPool;
+pub use pool::{AcquireOutcome, WarmPool};
 pub use registry::{FunctionRegistry, FunctionSpec};
 pub use scaler::Scaler;
 pub use throttle::CpuGovernor;

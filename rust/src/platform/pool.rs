@@ -1,4 +1,4 @@
-//! Warm-container pool with keep-alive eviction.
+//! Warm-container pool with keep-alive eviction and capacity waiting.
 //!
 //! Per-function LIFO stacks of warm containers (LIFO maximizes reuse
 //! and lets the oldest containers age out, matching observed Lambda
@@ -6,12 +6,47 @@
 //! keep-alive eviction: a container idle longer than the TTL is reaped
 //! on the next sweep. The paper forces cold starts with 10-minute gaps
 //! precisely because the platform's TTL was below that.
+//!
+//! The pool is *waitable*: every state change that can free capacity
+//! (release, retire, reservation cancel, eviction sweep) bumps a
+//! generation counter and signals a condvar, so an admitted request
+//! that finds no warm container and no free slot parks in
+//! [`WarmPool::acquire_or_reserve`] until capacity appears or its
+//! deadline (platform-clock time) passes — instead of the old instant
+//! `try_reserve` failure. On virtual clocks the waiters double as the
+//! time driver of last resort: when nothing frees capacity for a few
+//! wall slices, a parked waiter advances virtual time toward its own
+//! deadline so a deadline expiry can never hang a time-virtualized
+//! run.
 
 use super::container::Container;
+use crate::util::clock::Nanos;
 use crate::util::Clock;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Wall-clock wait quantum on non-real clocks: short enough that a
+/// virtual-deadline expiry is noticed promptly, long enough not to
+/// busy-spin.
+const WAIT_SLICE: Duration = Duration::from_millis(1);
+/// Empty wall slices tolerated before a parked waiter on a virtual
+/// clock starts advancing virtual time itself.
+const WAIT_GRACE_SLICES: u32 = 3;
+/// Virtual time consumed per further empty slice; bounded by the
+/// waiter's remaining deadline.
+const VIRTUAL_WAIT_STEP: Duration = Duration::from_millis(25);
+
+/// Result of [`WarmPool::acquire_or_reserve`].
+pub enum AcquireOutcome {
+    /// A warm container was handed out (warm start).
+    Container(Container),
+    /// A capacity slot was reserved; the caller cold-provisions.
+    Reserved,
+    /// The deadline passed without a container or a free slot.
+    TimedOut,
+}
 
 pub struct WarmPool {
     /// function name -> warm containers (LIFO).
@@ -21,6 +56,10 @@ pub struct WarmPool {
     max_containers: usize,
     keep_alive_ns: u64,
     clock: Arc<dyn Clock>,
+    /// Generation counter bumped on every capacity-freeing change;
+    /// parked waiters re-check on each bump.
+    waiters: Mutex<u64>,
+    waiter_cv: Condvar,
 }
 
 impl WarmPool {
@@ -31,7 +70,17 @@ impl WarmPool {
             max_containers,
             keep_alive_ns: (keep_alive_s * 1e9) as u64,
             clock,
+            waiters: Mutex::new(0),
+            waiter_cv: Condvar::new(),
         }
+    }
+
+    /// Wake every parked waiter: a container or a capacity slot may
+    /// have freed (also called by the invoker when a per-function
+    /// concurrency slot frees, so throttled async workers can re-try).
+    pub fn notify_waiters(&self) {
+        *self.waiters.lock().unwrap() += 1;
+        self.waiter_cv.notify_all();
     }
 
     /// Try to take a warm container for `function`. Runs an eviction
@@ -78,8 +127,13 @@ impl WarmPool {
             }
             hit
         };
+        let reaped = !dead.is_empty();
         for mut c in dead {
             c.reap();
+        }
+        if reaped {
+            // Reaping decremented `total`: capacity freed.
+            self.notify_waiters();
         }
         hit.map(|mut c| {
             c.activate();
@@ -90,8 +144,11 @@ impl WarmPool {
     /// Return a busy container to the warm pool.
     pub fn release(&self, mut container: Container) {
         container.park(&self.clock);
-        let mut g = self.idle.lock().unwrap();
-        g.entry(container.spec.name.clone()).or_default().push(container);
+        {
+            let mut g = self.idle.lock().unwrap();
+            g.entry(container.spec.name.clone()).or_default().push(container);
+        }
+        self.notify_waiters();
     }
 
     /// Reserve a slot for a new (cold) container; `false` when the
@@ -112,12 +169,96 @@ impl WarmPool {
     /// Release a reservation after a failed provision.
     pub fn cancel_reservation(&self) {
         self.total.fetch_sub(1, Ordering::SeqCst);
+        self.notify_waiters();
     }
 
     /// Destroy a container without returning it to the pool.
     pub fn retire(&self, mut container: Container) {
         container.reap();
         self.total.fetch_sub(1, Ordering::SeqCst);
+        self.notify_waiters();
+    }
+
+    /// Block until a warm container for `function` or a free capacity
+    /// slot is available, or until the platform clock reaches
+    /// `deadline`. This is the admission path's waitable primitive:
+    /// the first iteration tries immediately (an uncontended request
+    /// never parks), after which the caller sleeps on the pool condvar
+    /// and re-checks on every capacity-freeing change.
+    pub fn acquire_or_reserve(&self, function: &str, deadline: Nanos) -> AcquireOutcome {
+        let mut idle_slices = 0u32;
+        loop {
+            // Capture the generation BEFORE probing so a change that
+            // lands between the probe and the wait is never missed.
+            let generation = *self.waiters.lock().unwrap();
+            if let Some(c) = self.acquire(function) {
+                return AcquireOutcome::Container(c);
+            }
+            if self.try_reserve() {
+                return AcquireOutcome::Reserved;
+            }
+            if self.clock.now() >= deadline {
+                return AcquireOutcome::TimedOut;
+            }
+            self.wait_for_generation(generation, deadline, &mut idle_slices);
+        }
+    }
+
+    /// Park until any capacity-freeing change or until the platform
+    /// clock reaches `deadline` (the async workers' inter-attempt
+    /// wait; replaces their old fixed wall-clock backoff).
+    pub fn wait_for_change(&self, deadline: Nanos) {
+        let mut idle_slices = 0u32;
+        loop {
+            let generation = *self.waiters.lock().unwrap();
+            if self.clock.now() >= deadline {
+                return;
+            }
+            if self.wait_for_generation(generation, deadline, &mut idle_slices) {
+                return;
+            }
+        }
+    }
+
+    /// One bounded wait for the generation to move past `gen`;
+    /// returns whether a change was observed. On a real clock this is
+    /// a plain condvar wait capped by the remaining deadline. On a
+    /// virtual clock the condvar still delivers cross-thread wakeups
+    /// (worker threads are real even when time is not), but a wall
+    /// timeout cannot advance virtual time — so after a few empty
+    /// slices the waiter advances the virtual clock toward `deadline`
+    /// itself, ensuring a deadline expiry even when it is the only
+    /// active thread (e.g. the single-threaded closed-loop driver).
+    fn wait_for_generation(&self, generation: u64, deadline: Nanos, idle_slices: &mut u32) -> bool {
+        let changed = {
+            let g = self.waiters.lock().unwrap();
+            if *g != generation {
+                true
+            } else {
+                let timeout = if self.clock.is_real() {
+                    Duration::from_nanos(deadline.saturating_sub(self.clock.now()).max(1))
+                } else {
+                    WAIT_SLICE
+                };
+                let (g, _) = self.waiter_cv.wait_timeout(g, timeout).unwrap();
+                *g != generation
+            }
+        };
+        if changed {
+            *idle_slices = 0;
+            return true;
+        }
+        if !self.clock.is_real() {
+            *idle_slices += 1;
+            if *idle_slices >= WAIT_GRACE_SLICES {
+                let now = self.clock.now();
+                if now < deadline {
+                    let step = VIRTUAL_WAIT_STEP.min(Duration::from_nanos(deadline - now));
+                    self.clock.sleep(step);
+                }
+            }
+        }
+        false
     }
 
     /// Sweep every function's stack, reaping expired containers and
@@ -149,6 +290,9 @@ impl WarmPool {
         for mut c in dead {
             c.reap();
         }
+        if n > 0 {
+            self.notify_waiters();
+        }
         n
     }
 
@@ -169,6 +313,9 @@ impl WarmPool {
         for mut c in dead {
             c.reap();
         }
+        if n > 0 {
+            self.notify_waiters();
+        }
         n
     }
 
@@ -187,6 +334,9 @@ impl WarmPool {
         let n = dead.len();
         for mut c in dead {
             c.reap();
+        }
+        if n > 0 {
+            self.notify_waiters();
         }
         n
     }
@@ -452,6 +602,78 @@ mod tests {
         f.pool.release(c);
         f.pool.evict_all();
         assert_eq!(f.pool.tracked_functions(), 0, "evict_all drops all entries");
+    }
+
+    /// The waitable primitive: a thread that finds no capacity parks
+    /// in `acquire_or_reserve` and is handed the container released by
+    /// another thread — no polling, no 429.
+    #[test]
+    fn acquire_or_reserve_wakes_on_release() {
+        let mut f = fixture(1, 600.0);
+        let c = provision(&mut f);
+        let id = c.id;
+        // Pool at cap with the container "busy" (held by this test).
+        std::thread::scope(|s| {
+            let pool = &f.pool;
+            let clock = &f.clock;
+            let waiter = s.spawn(move || {
+                // Far-future deadline: must return via wakeup, not expiry.
+                match pool.acquire_or_reserve("sq", u64::MAX) {
+                    AcquireOutcome::Container(c) => {
+                        let got = c.id;
+                        pool.retire(c);
+                        got
+                    }
+                    _ => panic!("expected the released container"),
+                }
+            });
+            // Let the waiter park, then free the container.
+            std::thread::sleep(Duration::from_millis(20));
+            clock.sleep(Duration::from_secs(1)); // virtual time moves too
+            pool.release(c);
+            assert_eq!(waiter.join().unwrap(), id, "parked thread got the released container");
+        });
+        assert_eq!(f.pool.total_alive(), 0);
+    }
+
+    /// A parked waiter whose (virtual) deadline passes times out — on
+    /// a non-real clock the waiter itself advances time when nothing
+    /// frees capacity, so the expiry needs no outside driver.
+    #[test]
+    fn acquire_or_reserve_times_out_on_virtual_deadline() {
+        let mut f = fixture(1, 600.0);
+        let _held = provision(&mut f); // cap consumed, never released
+        let deadline = f.dyn_clock.now() + 200_000_000; // 200 ms virtual
+        let t0 = std::time::Instant::now();
+        assert!(matches!(f.pool.acquire_or_reserve("sq", deadline), AcquireOutcome::TimedOut));
+        assert!(f.dyn_clock.now() >= deadline, "virtual clock reached the deadline");
+        // The whole wait self-drove in a few wall milliseconds.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        f.pool.retire(_held);
+    }
+
+    /// Uncontended calls never park: a warm container or a free slot
+    /// is taken on the first probe even with an already-passed
+    /// deadline (try-once semantics for `queue_deadline_ms = 0`).
+    #[test]
+    fn acquire_or_reserve_uncontended_is_immediate() {
+        let mut f = fixture(2, 600.0);
+        let c = provision(&mut f);
+        f.pool.release(c);
+        match f.pool.acquire_or_reserve("sq", 0) {
+            AcquireOutcome::Container(c) => f.pool.retire(c),
+            _ => panic!("warm container expected"),
+        }
+        match f.pool.acquire_or_reserve("sq", 0) {
+            AcquireOutcome::Reserved => f.pool.cancel_reservation(),
+            _ => panic!("free slot expected"),
+        }
+        // At cap with a spent deadline: immediate timeout.
+        let _a = provision(&mut f);
+        let _b = provision(&mut f);
+        assert!(matches!(f.pool.acquire_or_reserve("sq", 0), AcquireOutcome::TimedOut));
+        f.pool.retire(_a);
+        f.pool.retire(_b);
     }
 
     /// Property: through arbitrary interleavings of provision/release/

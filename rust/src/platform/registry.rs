@@ -32,6 +32,12 @@ pub struct FunctionSpec {
     /// Per-function in-flight cap; `None` leaves only the account-wide
     /// container cap.
     pub max_concurrency: Option<usize>,
+    /// Admission-queue depth override for this function; `None` falls
+    /// back to `platform.queue_capacity`.
+    pub queue_capacity: Option<usize>,
+    /// Admission-deadline override in milliseconds; `None` falls back
+    /// to `platform.queue_deadline_ms`.
+    pub queue_deadline_ms: Option<u64>,
 }
 
 pub struct FunctionRegistry {
@@ -64,11 +70,12 @@ impl FunctionRegistry {
         variant: &str,
         memory_mb: MemorySize,
     ) -> Result<Arc<FunctionSpec>> {
-        self.deploy_full(name, model, variant, memory_mb, 0, None)
+        self.deploy_full(name, model, variant, memory_mb, 0, None, None, None)
     }
 
     /// Deploy (or redeploy) a function. Validates the memory tier and
     /// the model's peak-memory floor against the engine's manifest.
+    #[allow(clippy::too_many_arguments)]
     pub fn deploy_full(
         &self,
         name: &str,
@@ -77,9 +84,19 @@ impl FunctionRegistry {
         memory_mb: MemorySize,
         min_warm: usize,
         max_concurrency: Option<usize>,
+        queue_capacity: Option<usize>,
+        queue_deadline_ms: Option<u64>,
     ) -> Result<Arc<FunctionSpec>> {
-        let spec =
-            self.validated_spec(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        let spec = self.validated_spec(
+            name,
+            model,
+            variant,
+            memory_mb,
+            min_warm,
+            max_concurrency,
+            queue_capacity,
+            queue_deadline_ms,
+        )?;
         self.functions.write().unwrap().insert(name.to_string(), spec.clone());
         Ok(spec)
     }
@@ -87,6 +104,7 @@ impl FunctionRegistry {
     /// Atomic create: like [`Self::deploy_full`] but fails instead of
     /// overwriting an existing deployment (the v2 POST semantics — two
     /// racing creates cannot both succeed).
+    #[allow(clippy::too_many_arguments)]
     pub fn create_full(
         &self,
         name: &str,
@@ -95,9 +113,19 @@ impl FunctionRegistry {
         memory_mb: MemorySize,
         min_warm: usize,
         max_concurrency: Option<usize>,
+        queue_capacity: Option<usize>,
+        queue_deadline_ms: Option<u64>,
     ) -> Result<Arc<FunctionSpec>> {
-        let spec =
-            self.validated_spec(name, model, variant, memory_mb, min_warm, max_concurrency)?;
+        let spec = self.validated_spec(
+            name,
+            model,
+            variant,
+            memory_mb,
+            min_warm,
+            max_concurrency,
+            queue_capacity,
+            queue_deadline_ms,
+        )?;
         let mut functions = self.functions.write().unwrap();
         if functions.contains_key(name) {
             bail!("function {name:?} is already deployed");
@@ -107,7 +135,8 @@ impl FunctionRegistry {
     }
 
     /// Shared validation: name charset, memory tier, model manifest,
-    /// peak-memory floor, concurrency cap sanity.
+    /// peak-memory floor, concurrency cap and queue-policy sanity.
+    #[allow(clippy::too_many_arguments)]
     fn validated_spec(
         &self,
         name: &str,
@@ -116,6 +145,8 @@ impl FunctionRegistry {
         memory_mb: MemorySize,
         min_warm: usize,
         max_concurrency: Option<usize>,
+        queue_capacity: Option<usize>,
+        queue_deadline_ms: Option<u64>,
     ) -> Result<Arc<FunctionSpec>> {
         if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
         {
@@ -147,6 +178,16 @@ impl FunctionRegistry {
         if let Some(0) = max_concurrency {
             bail!("function {name}: max_concurrency must be at least 1 when set");
         }
+        if let Some(ms) = queue_deadline_ms {
+            // Same ceiling as the platform-wide config: a parked
+            // request holds a gateway worker thread for the wait.
+            if ms > crate::configparse::MAX_QUEUE_DEADLINE_MS {
+                bail!(
+                    "function {name}: queue_deadline_ms must be at most {} (one hour)",
+                    crate::configparse::MAX_QUEUE_DEADLINE_MS
+                );
+            }
+        }
         Ok(Arc::new(FunctionSpec {
             name: name.to_string(),
             model: model.to_string(),
@@ -156,6 +197,8 @@ impl FunctionRegistry {
             package_bytes: manifest.package_bytes(),
             min_warm,
             max_concurrency,
+            queue_capacity,
+            queue_deadline_ms,
         }))
     }
 
@@ -210,12 +253,13 @@ mod tests {
     #[test]
     fn create_full_refuses_existing_name() {
         let r = reg();
-        r.create_full("f", "squeezenet", "pallas", 512, 0, None).unwrap();
-        let err = r.create_full("f", "squeezenet", "pallas", 1024, 0, None).unwrap_err();
+        r.create_full("f", "squeezenet", "pallas", 512, 0, None, None, None).unwrap();
+        let err =
+            r.create_full("f", "squeezenet", "pallas", 1024, 0, None, None, None).unwrap_err();
         assert!(err.to_string().contains("already deployed"));
         assert_eq!(r.get("f").unwrap().memory_mb, 512, "loser must not overwrite");
         // Invalid specs are rejected before touching the map.
-        assert!(r.create_full("g", "squeezenet", "pallas", 100, 0, None).is_err());
+        assert!(r.create_full("g", "squeezenet", "pallas", 100, 0, None, None, None).is_err());
         assert!(r.get("g").is_err());
     }
 
@@ -245,7 +289,8 @@ mod tests {
     #[test]
     fn deploy_full_policy_fields() {
         let r = reg();
-        let spec = r.deploy_full("sq", "squeezenet", "pallas", 512, 2, Some(8)).unwrap();
+        let spec =
+            r.deploy_full("sq", "squeezenet", "pallas", 512, 2, Some(8), None, None).unwrap();
         assert_eq!(spec.min_warm, 2);
         assert_eq!(spec.max_concurrency, Some(8));
         // Plain deploy defaults.
@@ -253,7 +298,7 @@ mod tests {
         assert_eq!(spec.min_warm, 0);
         assert_eq!(spec.max_concurrency, None);
         // A zero cap would make the function uninvokable.
-        assert!(r.deploy_full("sq3", "squeezenet", "pallas", 512, 0, Some(0)).is_err());
+        assert!(r.deploy_full("sq3", "squeezenet", "pallas", 512, 0, Some(0), None, None).is_err());
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub struct Scaler {
     in_flight: AtomicUsize,
     high_water: AtomicUsize,
     throttled: AtomicUsize,
+    /// Requests refused with 503: admission queue at its bound, or a
+    /// parked request's deadline exhausted. Kept apart from
+    /// `throttled` (429: per-function concurrency cap) because the
+    /// two signals ask the caller for different remedies.
+    saturated: AtomicUsize,
     /// Demand-driven provisions only: a request arrived and found no
     /// warm container. This is the request-visible cold-start supply
     /// side the paper's analysis keys on.
@@ -60,6 +65,10 @@ impl Scaler {
         self.throttled.fetch_add(1, Ordering::SeqCst);
     }
 
+    pub fn note_saturated(&self) {
+        self.saturated.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub fn note_cold_provision(&self) {
         self.cold_provisions.fetch_add(1, Ordering::SeqCst);
     }
@@ -82,12 +91,60 @@ impl Scaler {
         self.throttled.load(Ordering::SeqCst)
     }
 
+    pub fn saturated_count(&self) -> usize {
+        self.saturated.load(Ordering::SeqCst)
+    }
+
     pub fn cold_provision_count(&self) -> usize {
         self.cold_provisions.load(Ordering::SeqCst)
     }
 
     pub fn prewarm_provision_count(&self) -> usize {
         self.prewarm_provisions.load(Ordering::SeqCst)
+    }
+
+    /// Demand-driven cold provision for one admitted request that
+    /// already holds a capacity reservation (granted by the waitable
+    /// pool's `acquire_or_reserve`). This is the single place the
+    /// cold-provision decision lives: exactly one provision per
+    /// admitted request, so N requests missing warm capacity
+    /// simultaneously provision N containers — never a stampede of
+    /// retries per request. On failure the reservation is returned to
+    /// the pool (waking a parked waiter) before the error propagates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn provision_demand(
+        &self,
+        spec: &Arc<FunctionSpec>,
+        pool: &WarmPool,
+        engine: &Arc<dyn Engine>,
+        governor: &CpuGovernor,
+        bootstrap: &BootstrapConfig,
+        clock: &Arc<dyn Clock>,
+        rng: &Mutex<SplitMix64>,
+    ) -> Result<Container> {
+        // Draw a child seed under the lock, then provision with a
+        // local RNG: concurrent cold starts (and maintainer
+        // replenishment) must never serialize on the multi-second
+        // bootstrap sleeps.
+        let mut local = SplitMix64::new(rng.lock().unwrap().next_u64());
+        let provisioned = Container::provision(
+            spec.clone(),
+            engine.clone(),
+            governor,
+            bootstrap,
+            clock,
+            &mut local,
+        );
+        match provisioned {
+            Ok(c) => {
+                self.note_cold_provision();
+                Ok(c)
+            }
+            Err(e) => {
+                pool.cancel_reservation();
+                Err(e)
+            }
+        }
     }
 
     /// Pre-warm `n` containers for `spec` into the pool (the paper's
@@ -161,11 +218,41 @@ mod tests {
         let s = Scaler::new();
         s.note_throttled();
         s.note_throttled();
+        s.note_saturated();
         s.note_cold_provision();
         s.note_prewarm_provision();
         assert_eq!(s.throttled_count(), 2);
+        assert_eq!(s.saturated_count(), 1);
         assert_eq!(s.cold_provision_count(), 1);
         assert_eq!(s.prewarm_provision_count(), 1);
+    }
+
+    #[test]
+    fn provision_demand_counts_cold_and_returns_reservation_on_failure() {
+        let mock = Arc::new(MockEngine::paper_zoo());
+        let engine: Arc<dyn Engine> = mock.clone();
+        let reg = FunctionRegistry::new(engine.clone());
+        let spec = reg.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let clock: Arc<dyn Clock> = ManualClock::new();
+        let pool = WarmPool::new(4, 600.0, clock.clone());
+        let gov = CpuGovernor::new(1792, clock.clone());
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let s = Scaler::new();
+        let rng = Mutex::new(SplitMix64::new(0));
+
+        assert!(pool.try_reserve());
+        let c = s.provision_demand(&spec, &pool, &engine, &gov, &cfg, &clock, &rng).unwrap();
+        assert_eq!(s.cold_provision_count(), 1);
+        assert_eq!(s.prewarm_provision_count(), 0, "demand provisions are not prewarms");
+        pool.retire(c);
+        assert_eq!(pool.total_alive(), 0);
+
+        // A failed provision hands the reserved slot back.
+        mock.fail_create.store(true, std::sync::atomic::Ordering::SeqCst);
+        assert!(pool.try_reserve());
+        assert!(s.provision_demand(&spec, &pool, &engine, &gov, &cfg, &clock, &rng).is_err());
+        assert_eq!(pool.total_alive(), 0, "reservation cancelled on failure");
+        assert_eq!(s.cold_provision_count(), 1, "failed provision not counted");
     }
 
     #[test]

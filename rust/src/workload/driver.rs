@@ -29,7 +29,12 @@ pub struct ClientSample {
 pub struct DriverReport {
     pub samples: Vec<ClientSample>,
     pub discarded: usize,
+    /// 429s: per-function concurrency cap.
     pub throttled: usize,
+    /// 503s: admission queue full or dispatch deadline exhausted —
+    /// the request waited its bounded queue delay and still found no
+    /// capacity.
+    pub saturated: usize,
     pub failed: usize,
 }
 
@@ -113,6 +118,7 @@ pub fn run_closed_loop(
             Err(e) => {
                 match e {
                     InvokeError::Throttled => report.throttled += 1,
+                    InvokeError::Saturated(_) => report.saturated += 1,
                     _ => report.failed += 1,
                 }
                 ClientSample {
@@ -152,7 +158,15 @@ pub fn run_open_loop(
             .unwrap_or(Duration::ZERO), // unrepresentable ≈ never ticks ≈ off
     );
     let pool = ThreadPool::new(workers, "client");
-    let results: Arc<Mutex<Vec<ClientSample>>> = Arc::new(Mutex::new(Vec::new()));
+    /// Error classification carried out of the worker closure, so the
+    /// report never re-derives it from display strings.
+    enum SampleKind {
+        Ok,
+        Throttled,
+        Saturated,
+        Failed,
+    }
+    let results: Arc<Mutex<Vec<(ClientSample, SampleKind)>>> = Arc::new(Mutex::new(Vec::new()));
     let t_start = std::time::Instant::now();
 
     let mut handles = Vec::new();
@@ -169,25 +183,38 @@ pub fn run_open_loop(
         handles.push(pool.submit(move || {
             let mut rng = SplitMix64::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E37));
             let net = network_delay(&platform.config().network, &mut rng);
-            let sample = match platform.invoke(&function, seed.wrapping_add(i as u64)) {
-                Ok(out) => ClientSample {
-                    at,
-                    latency: net + out.record.response(),
-                    predict: out.record.predict,
-                    start: out.record.start,
-                    cost_dollars: out.record.cost_dollars,
-                    error: None,
-                },
-                Err(e) => ClientSample {
-                    at,
-                    latency: net,
-                    predict: Duration::ZERO,
-                    start: StartKind::Cold,
-                    cost_dollars: 0.0,
-                    error: Some(e.to_string()),
-                },
+            let entry = match platform.invoke(&function, seed.wrapping_add(i as u64)) {
+                Ok(out) => (
+                    ClientSample {
+                        at,
+                        latency: net + out.record.response(),
+                        predict: out.record.predict,
+                        start: out.record.start,
+                        cost_dollars: out.record.cost_dollars,
+                        error: None,
+                    },
+                    SampleKind::Ok,
+                ),
+                Err(e) => {
+                    let kind = match &e {
+                        InvokeError::Throttled => SampleKind::Throttled,
+                        InvokeError::Saturated(_) => SampleKind::Saturated,
+                        _ => SampleKind::Failed,
+                    };
+                    (
+                        ClientSample {
+                            at,
+                            latency: net,
+                            predict: Duration::ZERO,
+                            start: StartKind::Cold,
+                            cost_dollars: 0.0,
+                            error: Some(e.to_string()),
+                        },
+                        kind,
+                    )
+                }
             };
-            results.lock().unwrap().push(sample);
+            results.lock().unwrap().push(entry);
         }));
     }
     for h in handles {
@@ -197,10 +224,18 @@ pub fn run_open_loop(
         platform.stop_maintainer();
     }
 
-    let samples = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
-    let throttled = samples.iter().filter(|s| s.error.as_deref() == Some("throttled: container capacity exhausted")).count();
-    let failed = samples.iter().filter(|s| s.error.is_some()).count() - throttled;
-    DriverReport { samples, discarded: 0, throttled, failed }
+    let entries = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+    let mut report = DriverReport::default();
+    for (sample, kind) in entries {
+        match kind {
+            SampleKind::Ok => {}
+            SampleKind::Throttled => report.throttled += 1,
+            SampleKind::Saturated => report.saturated += 1,
+            SampleKind::Failed => report.failed += 1,
+        }
+        report.samples.push(sample);
+    }
+    report
 }
 
 #[cfg(test)]
@@ -269,7 +304,7 @@ mod tests {
             Arc::new(MockEngine::paper_zoo()),
             clock.clone(),
         ));
-        p.deploy_full("sq", "squeezenet", "pallas", 1024, 1, None).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 1024, 1, None, None, None).unwrap();
         let report = run_closed_loop(&p, "sq", &ColdProbe::default(), 9);
         assert_eq!(report.samples.len(), 5);
         assert_eq!(report.cold_count(), 0, "maintained min_warm pool absorbs every gap");

@@ -95,35 +95,166 @@ fn gateway_serves_warm_probe_over_http() {
     t.join().unwrap();
 }
 
+/// Acceptance (real threads, real HTTP): a burst of concurrent
+/// invokes exceeding warm capacity but within queue capacity
+/// completes with ZERO 429s — requests park in the dispatcher and
+/// drain as containers free — and the queue wait shows up in the
+/// per-function stats percentiles.
 #[test]
-fn gateway_throttles_with_429() {
-    let config = PlatformConfig { max_containers: 1, ..fast_config() };
+fn gateway_absorbs_burst_within_queue_capacity() {
+    let config = PlatformConfig { max_containers: 2, ..fast_config() };
     let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
         "squeezenet",
-        300, // slow enough to hold the one container busy
+        100, // long enough that the burst genuinely overlaps
         5.0,
         85,
     )]));
     let p = Arc::new(Invoker::live(config, engine));
     p.deploy("sq", "squeezenet", "pallas", 1536).unwrap();
-    let gw = Gateway::bind("127.0.0.1:0", 8, p).unwrap();
+    let gw = Gateway::bind("127.0.0.1:0", 8, p.clone()).unwrap();
     let addr = gw.local_addr().to_string();
     let sh = gw.shutdown_handle();
     let t = std::thread::spawn(move || gw.serve().unwrap());
     let tmo = Duration::from_secs(30);
 
-    // Two concurrent requests against capacity 1: one succeeds, the
-    // other gets 429.
-    let a1 = addr.clone();
-    let h1 = std::thread::spawn(move || http_get(&a1, "/v1/invoke/sq?seed=1", tmo).unwrap().status);
-    std::thread::sleep(Duration::from_millis(50));
-    let s2 = http_get(&addr, "/v1/invoke/sq?seed=2", tmo).unwrap().status;
-    let s1 = h1.join().unwrap();
-    assert_eq!(s1, 200);
-    assert_eq!(s2, 429, "second concurrent request throttled");
+    // 6 concurrent requests against 2 capacity slots: the overflow
+    // parks (bounded queue, 2 s default deadline) instead of failing.
+    // A barrier lines the clients up so the burst genuinely overlaps
+    // even on a loaded CI runner.
+    let barrier = Arc::new(std::sync::Barrier::new(6));
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                http_get(&addr, &format!("/v1/invoke/sq?seed={i}"), tmo).unwrap().status
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(statuses, vec![200; 6], "burst absorbed with zero 429s/503s");
+    assert_eq!(p.scaler.throttled_count(), 0);
+    assert_eq!(p.scaler.saturated_count(), 0);
+    assert!(p.pool.total_alive() <= 2, "the cap was never exceeded");
+
+    // The wait is measured: per-function stats expose queue-wait
+    // percentiles, and at least one parked request waited for a full
+    // service time.
+    let r = http_get(&addr, "/v2/functions/sq/stats", tmo).unwrap();
+    let j = Json::parse(&r.body_str()).unwrap();
+    assert_eq!(j.get("invocations").unwrap().as_u64(), Some(6));
+    assert_eq!(j.get("throttled").unwrap().as_u64(), Some(0));
+    assert_eq!(j.get("queue_expired").unwrap().as_u64(), Some(0));
+    assert_eq!(j.get("queue_depth").unwrap().as_u64(), Some(0), "queue drained");
+    let p99 = j.get("queue_wait_p99_s").unwrap().as_f64().unwrap();
+    assert!(p99 > 0.05, "parked requests show real queue wait, p99={p99}");
 
     sh.shutdown();
     t.join().unwrap();
+}
+
+/// Acceptance: a parked request whose dispatch deadline passes gets
+/// 503 + `Retry-After` (not 429), and the expiry is visible in the
+/// dispatcher telemetry of `/v2/stats`.
+#[test]
+fn gateway_deadline_expiry_returns_503_with_retry_after() {
+    let config = PlatformConfig { max_containers: 1, ..fast_config() };
+    let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+        "squeezenet",
+        3000, // one slow request holds the only container
+        5.0,
+        85,
+    )]));
+    let p = Arc::new(Invoker::live(config, engine));
+    let gw = Gateway::bind("127.0.0.1:0", 8, p.clone()).unwrap();
+    let addr = gw.local_addr().to_string();
+    let sh = gw.shutdown_handle();
+    let t = std::thread::spawn(move || gw.serve().unwrap());
+    let tmo = Duration::from_secs(30);
+
+    // Deploy with a short per-function deadline override so the test
+    // does not sit out the 2 s platform default.
+    let r = http_post(
+        &addr,
+        "/v2/functions",
+        br#"{"name": "sq", "model": "squeezenet", "memory_mb": 1536, "queue_deadline_ms": 150}"#,
+        tmo,
+    )
+    .unwrap();
+    assert_eq!(r.status, 201, "{}", r.body_str());
+    let j = Json::parse(&r.body_str()).unwrap();
+    assert_eq!(j.get("queue_deadline_ms").unwrap().as_u64(), Some(150), "override echoed");
+
+    let a1 = addr.clone();
+    let h1 = std::thread::spawn(move || http_get(&a1, "/v1/invoke/sq?seed=1", tmo).unwrap().status);
+    std::thread::sleep(Duration::from_millis(100)); // let it occupy the slot
+    let resp = http_get(&addr, "/v1/invoke/sq?seed=2", tmo).unwrap();
+    assert_eq!(resp.status, 503, "deadline expiry is 503, not 429: {}", resp.body_str());
+    assert!(
+        resp.headers.get("retry-after").is_some(),
+        "503 carries Retry-After: {:?}",
+        resp.headers
+    );
+
+    // The same condition through v2 (the slow request still holds the
+    // slot for seconds) yields the structured envelope.
+    let resp =
+        http_post(&addr, "/v2/functions/sq/invocations", br#"{"seed": 3}"#, tmo).unwrap();
+    assert_eq!(resp.status, 503, "{}", resp.body_str());
+    let j = Json::parse(&resp.body_str()).unwrap();
+    assert_eq!(j.path(&["error", "code"]).unwrap().as_str(), Some("queue_deadline_expired"));
+    assert!(resp.headers.get("retry-after").is_some());
+
+    assert_eq!(h1.join().unwrap(), 200, "the in-flight request was unaffected");
+
+    let r = http_get(&addr, "/v2/stats", tmo).unwrap();
+    let j = Json::parse(&r.body_str()).unwrap();
+    assert!(
+        j.get("queue_deadline_expired").unwrap().as_u64().unwrap() >= 1,
+        "expiry counted in dispatcher telemetry"
+    );
+    assert!(j.get("saturated").unwrap().as_u64().unwrap() >= 1);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+/// Acceptance (ManualClock): the same burst-absorption contract holds
+/// on virtual time — concurrent invokes over capacity park and drain
+/// with zero 429s/503s, and the parked waiters' virtual-deadline
+/// machinery never misfires while capacity is actively cycling.
+#[test]
+fn burst_drains_with_zero_rejections_on_manual_clock() {
+    let clock = ManualClock::new();
+    // Instant bootstrap: simulated multi-second cold-start sleeps
+    // would advance the SHARED virtual clock past the parked waiters'
+    // deadlines — here the contention itself is under test, not the
+    // cold-start model.
+    let config = PlatformConfig { max_containers: 2, ..fast_config() };
+    let p = Arc::new(Invoker::new(config, fast_engine(), clock));
+    p.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let p = p.clone();
+                s.spawn(move || p.invoke("sq", i))
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap().expect("every burst request completes");
+            assert!(out.record.billed_ms > 0);
+        }
+    });
+    assert_eq!(p.scaler.throttled_count(), 0, "zero 429s");
+    assert_eq!(p.scaler.saturated_count(), 0, "zero 503s");
+    assert_eq!(p.dispatcher.expired_total(), 0);
+    assert_eq!(p.dispatcher.total_depth(), 0, "queue fully drained");
+    assert!(p.pool.total_alive() <= 2, "container cap respected");
+    let m = p.metrics.function_metrics("sq");
+    assert_eq!(m.invocations, 6);
+    assert_eq!(m.queue_wait.count(), 6, "queue wait recorded for every request");
 }
 
 /// Acceptance: min_warm capacity survives an idle gap longer than the
@@ -135,7 +266,7 @@ fn gateway_throttles_with_429() {
 fn min_warm_pool_survives_idle_gap_longer_than_ttl() {
     let clock = ManualClock::new();
     let p = Arc::new(Invoker::new(PlatformConfig::default(), fast_engine(), clock.clone()));
-    p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None).unwrap();
+    p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None, None, None).unwrap();
     assert_eq!(p.pool.warm_count("sq"), 2);
     assert!(Invoker::start_maintainer(&p, Duration::from_millis(2)));
 

@@ -209,6 +209,74 @@ fn platform_stats_split_provision_sources() {
     t.join().unwrap();
 }
 
+/// Admission-queue config: deploy-time overrides round-trip through
+/// the SDK, PATCH can set and clear them (null = platform default),
+/// and the stats surfaces expose the new saturation fields.
+#[test]
+fn queue_config_roundtrip_and_stats_fields() {
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+
+    let f = api
+        .deploy(
+            &DeploySpec::new("sq", "squeezenet")
+                .memory_mb(1024)
+                .queue_capacity(5)
+                .queue_deadline_ms(1500),
+        )
+        .unwrap();
+    assert_eq!(f.queue_capacity, Some(5));
+    assert_eq!(f.queue_deadline_ms, Some(1500));
+
+    // PATCH: change the deadline, keep the capacity.
+    let f = api
+        .reconfigure(
+            "sq",
+            &ReconfigureSpec { queue_deadline_ms: Some(Some(800)), ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(f.queue_capacity, Some(5), "untouched override kept");
+    assert_eq!(f.queue_deadline_ms, Some(800));
+
+    // PATCH null: revert both to the platform defaults.
+    let f = api
+        .reconfigure(
+            "sq",
+            &ReconfigureSpec {
+                queue_capacity: Some(None),
+                queue_deadline_ms: Some(None),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(f.queue_capacity, None);
+    assert_eq!(f.queue_deadline_ms, None);
+
+    // An out-of-range deadline override is rejected at deploy time.
+    let err = api
+        .deploy(&DeploySpec::new("bad", "squeezenet").memory_mb(512).queue_deadline_ms(7_200_000))
+        .unwrap_err();
+    assert_eq!(err.status, 400);
+
+    // Typed stats carry the queue fields on both surfaces.
+    api.invoke("sq", Some(1)).unwrap();
+    let s = api.stats("sq").unwrap();
+    assert_eq!(s.invocations, 1);
+    assert_eq!(s.queue_depth, 0);
+    assert_eq!(s.queue_expired, 0);
+    assert!(s.queue_wait_p99_s >= 0.0);
+    let ps = api.platform_stats().unwrap();
+    assert_eq!(ps.invocations, 1);
+    assert_eq!(ps.queue_depth, 0);
+    assert_eq!(ps.queue_deadline_expired, 0);
+    assert_eq!(ps.saturated, 0);
+    assert!(ps.queue_depth_peak <= 1, "uncontended invoke barely queued");
+    assert_eq!(ps.containers_alive, 1);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
 #[test]
 fn per_function_concurrency_cap_is_enforced_over_http() {
     let (addr, sh, t) = start_gateway();
@@ -227,8 +295,9 @@ fn per_function_concurrency_cap_is_enforced_over_http() {
         assert!(s.result.is_some());
     }
 
-    // A sync burst against the same cap still sees 429s: the sync
-    // path has no queue to absorb the pressure.
+    // A sync burst against the same cap still sees 429s: the cap
+    // check precedes admission — the dispatch queue absorbs capacity
+    // pressure, not concurrency-cap violations.
     let handles: Vec<_> = (0..4)
         .map(|i| {
             let addr = addr.clone();
