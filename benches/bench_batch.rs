@@ -1,0 +1,92 @@
+//! Bench: micro-batching throughput vs batch size (§Perf).
+//!
+//! Two layers, both on the MockEngine (no artifacts needed):
+//!
+//! * the *modeled* economics — the mock's sublinear batch cost
+//!   (`1 + 0.25·(n-1)` of a solo pass) as requests-per-second-of-
+//!   compute, which is what a real batched kernel buys, and
+//! * the *measured* platform overhead — wall ns/request through
+//!   `Engine::predict_batch` and the full `Container::execute_batch`
+//!   path (governor + accounting) with zero-cost models, i.e. what
+//!   the batching machinery itself costs per coalesced request.
+//!
+//! `cargo bench --bench bench_batch`
+
+use lambdaserve::configparse::BootstrapConfig;
+use lambdaserve::platform::registry::FunctionRegistry;
+use lambdaserve::platform::{Container, CpuGovernor};
+use lambdaserve::runtime::{Engine, MockEngine, MockModelCosts, BATCH_COST_MARGINAL};
+use lambdaserve::util::{Clock, ManualClock, SplitMix64};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    for _ in 0..iters.min(1000) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<44} {per:>12.0} ns/op   ({iters} iters)");
+    per
+}
+
+fn main() {
+    println!("=== micro-batching: throughput vs batch size ===\n");
+
+    // Modeled economics: requests served per second of container
+    // compute, from the mock's sublinear batch-cost model.
+    let zoo = MockEngine::paper_zoo();
+    let sq = zoo.manifest("squeezenet").unwrap();
+    let solo_s = 0.105; // squeezenet full-speed predict
+    println!("model {} ({} classes): solo pass {:.0} ms", sq.name, sq.num_classes, solo_s * 1e3);
+    println!("{:>6} {:>14} {:>16} {:>10}", "batch", "total (ms)", "req/s compute", "speedup");
+    for n in [1usize, 2, 4, 8, 16, 32] {
+        let total = solo_s * (1.0 + BATCH_COST_MARGINAL * (n as f64 - 1.0));
+        let rps = n as f64 / total;
+        println!(
+            "{:>6} {:>14.1} {:>16.1} {:>9.2}x",
+            n,
+            total * 1e3,
+            rps,
+            rps / (1.0 / solo_s)
+        );
+    }
+    println!();
+
+    // Measured machinery overhead: zero-cost model so everything left
+    // is dispatch + accounting, per coalesced request.
+    let engine = Arc::new(MockEngine::new(vec![MockModelCosts {
+        predict: Duration::ZERO,
+        init_run: Duration::ZERO,
+        compile: Duration::ZERO,
+        manifest: MockModelCosts::paper_like("m", 1, 5.0, 85).manifest,
+    }]));
+    let (handle, _) = engine.create_instance("m", "pallas").unwrap();
+    for n in [1usize, 8, 32] {
+        let seeds: Vec<u64> = (0..n as u64).collect();
+        bench(&format!("engine.predict_batch n={n} (per request)"), 100_000 / n, || {
+            let preds = engine.predict_batch(&handle, &seeds).unwrap();
+            std::hint::black_box(preds);
+        });
+    }
+
+    let reg = FunctionRegistry::new(engine.clone());
+    let spec = reg.deploy("m", "m", "pallas", 1536).unwrap();
+    let clock: Arc<dyn Clock> = ManualClock::new();
+    let gov = CpuGovernor::new(1792, clock.clone());
+    let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+    let mut rng = SplitMix64::new(1);
+    let mut container =
+        Container::provision(spec, engine.clone(), &gov, &cfg, &clock, &mut rng).unwrap();
+    for n in [1usize, 8, 32] {
+        let seeds: Vec<u64> = (0..n as u64).collect();
+        bench(&format!("container.execute_batch n={n} (per request)"), 50_000 / n, || {
+            let out = container.execute_batch(&gov, &clock, &seeds).unwrap();
+            std::hint::black_box(out);
+        });
+    }
+    println!("\nserved by the bench container: {}", container.served);
+}

@@ -162,6 +162,20 @@ pub struct PlatformConfig {
     /// Per-function override: the deploy/reconfigure
     /// `queue_deadline_ms`.
     pub queue_deadline_ms: u64,
+    /// Micro-batching: default max number of concurrent invocations of
+    /// one function coalesced into a single batched forward pass on
+    /// one warm container. `1` (the default) disables batching — the
+    /// execution path is then bit-for-bit the pre-batching pipeline.
+    /// Per-function override: the deploy/reconfigure `max_batch_size`.
+    pub max_batch_size: usize,
+    /// Micro-batching: default window, in milliseconds, a batch
+    /// leader holds its container open to absorb followers before
+    /// flushing (an under-sized batch flushes at the window; a full
+    /// batch flushes early). `0` means a leader never waits — only
+    /// requests that arrive while a batch is already executing its
+    /// admission can coalesce. Per-function override: the
+    /// deploy/reconfigure `batch_window_ms`.
+    pub batch_window_ms: u64,
     /// Background pool-maintainer tick interval, seconds: each tick
     /// runs the keep-alive eviction sweep and replenishes `min_warm`
     /// targets. `0` disables the maintainer.
@@ -191,6 +205,8 @@ impl Default for PlatformConfig {
             max_containers: 1000,
             queue_capacity: 64,
             queue_deadline_ms: 2_000,
+            max_batch_size: 1,
+            batch_window_ms: 0,
             maintainer_interval_s: 5.0,
             metrics_ring_capacity: 4096,
             throttle_quantum_s: 0.02,
@@ -232,6 +248,12 @@ impl PlatformConfig {
         }
         if let Some(v) = get_u64("platform.queue_deadline_ms") {
             cfg.queue_deadline_ms = v;
+        }
+        if let Some(v) = get_u64("platform.max_batch_size") {
+            cfg.max_batch_size = v as usize;
+        }
+        if let Some(v) = get_u64("platform.batch_window_ms") {
+            cfg.batch_window_ms = v;
         }
         if let Some(v) = get_f64("platform.maintainer_interval_s") {
             cfg.maintainer_interval_s = v;
@@ -335,6 +357,15 @@ impl PlatformConfig {
         if self.queue_deadline_ms > MAX_QUEUE_DEADLINE_MS {
             bail!("queue_deadline_ms must be at most {MAX_QUEUE_DEADLINE_MS} (one hour)");
         }
+        if self.max_batch_size == 0 {
+            bail!("max_batch_size must be at least 1 (1 disables batching)");
+        }
+        // A batch leader holds a container and a gateway worker thread
+        // open for the window: same unit-mistake ceiling as the
+        // dispatch deadline.
+        if self.batch_window_ms > MAX_QUEUE_DEADLINE_MS {
+            bail!("batch_window_ms must be at most {MAX_QUEUE_DEADLINE_MS} (one hour)");
+        }
         Ok(())
     }
 
@@ -404,6 +435,8 @@ maintainer_interval_s = 2.5
 metrics_ring_capacity = 128
 queue_capacity = 16
 queue_deadline_ms = 750
+max_batch_size = 8
+batch_window_ms = 15
 seed = 7
 
 [bootstrap]
@@ -421,6 +454,8 @@ rtt_s = 0.01
         assert_eq!(cfg.metrics_ring_capacity, 128);
         assert_eq!(cfg.queue_capacity, 16);
         assert_eq!(cfg.queue_deadline_ms, 750);
+        assert_eq!(cfg.max_batch_size, 8);
+        assert_eq!(cfg.batch_window_ms, 15);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.bootstrap.runtime_init_s, 0.5);
         assert!(!cfg.bootstrap.simulate_delays);
@@ -448,6 +483,8 @@ dollars_per_unit = [1.0, 2.0]
         assert!(PlatformConfig::from_toml("[platform]\nfull_power_mem_mb = 0").is_err());
         assert!(PlatformConfig::from_toml("[platform]\nmaintainer_interval_s = -1.0").is_err());
         assert!(PlatformConfig::from_toml("[platform]\nqueue_deadline_ms = 7200000").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\nmax_batch_size = 0").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\nbatch_window_ms = 7200000").is_err());
         assert!(PlatformConfig::from_toml("[pricing]\ngranularity_ms = 0").is_err());
         assert!(PlatformConfig::from_toml(
             "[pricing]\nmemory_mb = [256, 128]\ndollars_per_unit = [1.0, 2.0]"

@@ -13,7 +13,7 @@ mod warm;
 
 pub use ablations::{run_kernel_ablation, run_keepalive_ablation, run_memopt, run_provisioned};
 pub use cold::run_cold;
-pub use report::{write_csv, Table};
+pub use report::{pct, write_csv, Table};
 pub use scale::{print_fig7, run_scale};
 pub use table1::run_table1;
 pub use warm::run_warm;

@@ -97,6 +97,12 @@ pub fn cost_x1000(v: f64) -> String {
     format!("{:.4}", v * 1000.0)
 }
 
+/// `xx.x%` share formatting (SLA-violation rates, cold fractions,
+/// batched-request shares).
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +151,7 @@ mod tests {
     fn formatters() {
         assert_eq!(secs(1.23456), "1.235");
         assert_eq!(cost_x1000(0.0000015), "0.0015");
+        assert_eq!(pct(0.051), "5.1%");
+        assert_eq!(pct(0.0), "0.0%");
     }
 }

@@ -68,6 +68,7 @@ pub fn run_scale(ctx: &ExpCtx, model: &str, name: &str) -> Result<()> {
             "Cold frac",
             "Rejected",
             "Peak conc",
+            "Queue p95 (s)",
         ],
     );
 
@@ -77,6 +78,7 @@ pub fn run_scale(ctx: &ExpCtx, model: &str, name: &str) -> Result<()> {
             t.row(vec![
                 mem.to_string(),
                 "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                "-".into(),
             ]);
             continue;
         }
@@ -97,6 +99,11 @@ pub fn run_scale(ctx: &ExpCtx, model: &str, name: &str) -> Result<()> {
             // request the admission layer turned away.
             (report.throttled + report.saturated).to_string(),
             platform.scaler.high_water_mark().to_string(),
+            // The dispatch-queue wait the admission layer traded for
+            // those non-rejections — part of the latency column
+            // already (records fold it into response time), surfaced
+            // here so the trade is visible per memory size.
+            secs(platform.metrics.with_totals(|m| m.queue_wait.p95()) as f64 / 1e9),
         ]);
         // Give the platform a beat to settle between memory sizes.
         if ctx.engine_kind == EngineKind::Pjrt {

@@ -3,7 +3,7 @@
 
 use super::{err, json_body, opt_str, opt_u32, opt_u64, ApiCtx};
 use crate::httpd::{HttpRequest, Params, Responder};
-use crate::platform::{FunctionSpec, ReconfigurePatch};
+use crate::platform::{FunctionPolicy, FunctionSpec, ReconfigurePatch};
 use crate::util::json::{obj, Json};
 use std::sync::Arc;
 
@@ -33,6 +33,21 @@ pub(crate) fn function_json(ctx: &ApiCtx, spec: &Arc<FunctionSpec>) -> Json {
         (
             "queue_deadline_ms",
             match spec.queue_deadline_ms {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        ),
+        // Micro-batching overrides: null = platform default applies.
+        (
+            "max_batch_size",
+            match spec.max_batch_size {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "batch_window_ms",
+            match spec.batch_window_ms {
                 Some(v) => Json::Num(v as f64),
                 None => Json::Null,
             },
@@ -82,6 +97,14 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
         Ok(v) => v,
         Err(r) => return r,
     };
+    let max_batch_size = match opt_u64(&body, "max_batch_size") {
+        Ok(v) => v.map(|x| x as usize),
+        Err(r) => return r,
+    };
+    let batch_window_ms = match opt_u64(&body, "batch_window_ms") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
     let conflict = || {
         err(
             409,
@@ -101,10 +124,14 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
         &model,
         &variant,
         memory_mb,
-        min_warm,
-        max_concurrency,
-        queue_capacity,
-        queue_deadline_ms,
+        FunctionPolicy {
+            min_warm,
+            max_concurrency,
+            queue_capacity,
+            queue_deadline_ms,
+            max_batch_size,
+            batch_window_ms,
+        },
     ) {
         Ok(spec) => Responder::json(201, function_json(ctx, &spec).to_string()),
         Err(_) if ctx.platform.registry.get(&name).is_ok() => conflict(),
@@ -152,38 +179,27 @@ pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
         Ok(v) => v.map(|x| x as usize),
         Err(r) => return r,
     };
-    // Tri-state: absent = keep, null = clear, integer = set.
-    let max_concurrency = match body.get("max_concurrency") {
-        None => None,
-        Some(Json::Null) => Some(None),
-        Some(v) => match v.as_u64() {
-            Some(n) => Some(Some(n as usize)),
-            None => {
-                return err(400, "invalid_field", "max_concurrency must be an integer or null")
-            }
-        },
+    // Tri-state fields: absent = keep, null = clear back to the
+    // platform default, integer = set.
+    let max_concurrency = match super::tri_state_u64(&body, "max_concurrency") {
+        Ok(v) => v.map(|inner| inner.map(|n| n as usize)),
+        Err(r) => return r,
     };
-    // Queue overrides share the tri-state shape: null reverts the
-    // function to the platform defaults.
-    let queue_capacity = match body.get("queue_capacity") {
-        None => None,
-        Some(Json::Null) => Some(None),
-        Some(v) => match v.as_u64() {
-            Some(n) => Some(Some(n as usize)),
-            None => {
-                return err(400, "invalid_field", "queue_capacity must be an integer or null")
-            }
-        },
+    let queue_capacity = match super::tri_state_u64(&body, "queue_capacity") {
+        Ok(v) => v.map(|inner| inner.map(|n| n as usize)),
+        Err(r) => return r,
     };
-    let queue_deadline_ms = match body.get("queue_deadline_ms") {
-        None => None,
-        Some(Json::Null) => Some(None),
-        Some(v) => match v.as_u64() {
-            Some(n) => Some(Some(n)),
-            None => {
-                return err(400, "invalid_field", "queue_deadline_ms must be an integer or null")
-            }
-        },
+    let queue_deadline_ms = match super::tri_state_u64(&body, "queue_deadline_ms") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
+    let max_batch_size = match super::tri_state_u64(&body, "max_batch_size") {
+        Ok(v) => v.map(|inner| inner.map(|n| n as usize)),
+        Err(r) => return r,
+    };
+    let batch_window_ms = match super::tri_state_u64(&body, "batch_window_ms") {
+        Ok(v) => v,
+        Err(r) => return r,
     };
     let patch = ReconfigurePatch {
         memory_mb,
@@ -192,6 +208,8 @@ pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
         max_concurrency,
         queue_capacity,
         queue_deadline_ms,
+        max_batch_size,
+        batch_window_ms,
     };
     match ctx.platform.reconfigure(name, &patch) {
         Ok(spec) => Responder::json(200, function_json(ctx, &spec).to_string()),

@@ -84,6 +84,24 @@ pub fn opt_u32(body: &Json, key: &str) -> Result<Option<u32>, Responder> {
     }
 }
 
+/// Tri-state PATCH field: absent = keep (`None`), explicit `null` =
+/// clear back to the platform default (`Some(None)`), integer = set
+/// (`Some(Some(n))`).
+pub fn tri_state_u64(body: &Json, key: &str) -> Result<Option<Option<u64>>, Responder> {
+    match body.get(key) {
+        None => Ok(None),
+        Some(Json::Null) => Ok(Some(None)),
+        Some(v) => match v.as_u64() {
+            Some(n) => Ok(Some(Some(n))),
+            None => Err(err(
+                400,
+                "invalid_field",
+                &format!("field {key:?} must be a non-negative integer or null"),
+            )),
+        },
+    }
+}
+
 /// Optional string body field.
 pub fn opt_str(body: &Json, key: &str) -> Result<Option<String>, Responder> {
     match body.get(key) {

@@ -36,6 +36,24 @@ fn shard_fields(m: &FnMetrics) -> Vec<(&'static str, Json)> {
         ("queue_wait_p50_s", secs(m.queue_wait.p50())),
         ("queue_wait_p95_s", secs(m.queue_wait.p95())),
         ("queue_wait_p99_s", secs(m.queue_wait.p99())),
+        // Micro-batching: how many requests were coalesced, what size
+        // batch the average request rode (request-weighted), and what
+        // the collector wait cost per request.
+        ("batched_requests", Json::Num(m.batched_requests as f64)),
+        (
+            "batched_share",
+            Json::Num(if m.invocations == 0 {
+                0.0
+            } else {
+                m.batched_requests as f64 / m.invocations as f64
+            }),
+        ),
+        ("batch_size_p50", Json::Num(m.batch_size.p50() as f64)),
+        ("batch_size_p95", Json::Num(m.batch_size.p95() as f64)),
+        ("batch_size_p99", Json::Num(m.batch_size.p99() as f64)),
+        ("batch_wait_p50_s", secs(m.batch_wait.p50())),
+        ("batch_wait_p95_s", secs(m.batch_wait.p95())),
+        ("batch_wait_p99_s", secs(m.batch_wait.p99())),
         ("response_mean_s", Json::Num(response.mean() / NS)),
         ("response_p50_s", secs(response.p50())),
         ("response_p95_s", secs(response.p95())),
@@ -105,6 +123,11 @@ pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Res
         ("queue_depth_peak", Json::Num(p.dispatcher.peak_depth() as f64)),
         ("queue_deadline_expired", Json::Num(p.dispatcher.expired_total() as f64)),
         ("saturated", Json::Num(p.scaler.saturated_count() as f64)),
+        // Micro-batching: executed batched passes and the largest
+        // flush so far (per-request coalescing counts come from the
+        // shared shard block above — `batched_requests` et al.).
+        ("batches_executed", Json::Num(p.batcher.batches_executed() as f64)),
+        ("largest_batch", Json::Num(p.batcher.largest_batch() as f64)),
         ("async_queued", Json::Num(ctx.async_inv.queued() as f64)),
         ("async_results_stored", Json::Num(ctx.async_inv.stored() as f64)),
     ]);

@@ -57,6 +57,12 @@ pub struct DeploySpec {
     /// Admission-deadline override in ms (`platform.queue_deadline_ms`
     /// applies when unset).
     pub queue_deadline_ms: Option<u64>,
+    /// Micro-batching override: max coalesced requests per forward
+    /// pass (`platform.max_batch_size` applies when unset; 1 = off).
+    pub max_batch_size: Option<usize>,
+    /// Micro-batching override: collection window in ms
+    /// (`platform.batch_window_ms` applies when unset).
+    pub batch_window_ms: Option<u64>,
 }
 
 impl DeploySpec {
@@ -93,6 +99,16 @@ impl DeploySpec {
         self.queue_deadline_ms = Some(deadline_ms);
         self
     }
+
+    pub fn max_batch_size(mut self, max_batch_size: usize) -> Self {
+        self.max_batch_size = Some(max_batch_size);
+        self
+    }
+
+    pub fn batch_window_ms(mut self, window_ms: u64) -> Self {
+        self.batch_window_ms = Some(window_ms);
+        self
+    }
 }
 
 /// Partial update for `PATCH /v2/functions/:name`. `max_concurrency`,
@@ -106,6 +122,8 @@ pub struct ReconfigureSpec {
     pub max_concurrency: Option<Option<usize>>,
     pub queue_capacity: Option<Option<usize>>,
     pub queue_deadline_ms: Option<Option<u64>>,
+    pub max_batch_size: Option<Option<usize>>,
+    pub batch_window_ms: Option<Option<u64>>,
 }
 
 /// One deployed function, as reported by the API.
@@ -120,6 +138,9 @@ pub struct FunctionInfo {
     /// Admission-queue overrides; `None` = platform default applies.
     pub queue_capacity: Option<usize>,
     pub queue_deadline_ms: Option<u64>,
+    /// Micro-batching overrides; `None` = platform default applies.
+    pub max_batch_size: Option<usize>,
+    pub batch_window_ms: Option<u64>,
     pub warm_containers: usize,
 }
 
@@ -135,6 +156,11 @@ pub struct InvocationResult {
     pub response_s: f64,
     pub billed_ms: u64,
     pub cost_dollars: f64,
+    /// Requests coalesced into the forward pass that served this one
+    /// (1 = solo execution).
+    pub batch_size: u64,
+    /// Time parked in the batch collector before the pass started.
+    pub batch_wait_s: f64,
 }
 
 impl InvocationResult {
@@ -178,6 +204,18 @@ pub struct FunctionStats {
     pub queue_wait_p50_s: f64,
     pub queue_wait_p95_s: f64,
     pub queue_wait_p99_s: f64,
+    /// Requests served by a coalesced batch of size >= 2, and their
+    /// share of all invocations.
+    pub batched_requests: u64,
+    pub batched_share: f64,
+    /// Request-weighted batch-size percentiles over the batching path.
+    pub batch_size_p50: u64,
+    pub batch_size_p95: u64,
+    pub batch_size_p99: u64,
+    /// Per-request batch-collector wait percentiles.
+    pub batch_wait_p50_s: f64,
+    pub batch_wait_p95_s: f64,
+    pub batch_wait_p99_s: f64,
     pub response_mean_s: f64,
     pub response_p50_s: f64,
     pub response_p95_s: f64,
@@ -215,6 +253,12 @@ pub struct PlatformStats {
     pub queue_wait_p50_s: f64,
     pub queue_wait_p95_s: f64,
     pub queue_wait_p99_s: f64,
+    /// Micro-batching totals (see `FunctionStats` for the per-request
+    /// percentiles): batched passes executed, the largest flush
+    /// observed, and the total requests served by size >= 2 batches.
+    pub batches_executed: u64,
+    pub largest_batch: u64,
+    pub batched_requests: u64,
     pub cold_provisions: u64,
     pub prewarm_provisions: u64,
     pub functions: u64,
@@ -307,6 +351,12 @@ impl ApiClient {
         if let Some(d) = spec.queue_deadline_ms {
             fields.push(("queue_deadline_ms", Json::Num(d as f64)));
         }
+        if let Some(b) = spec.max_batch_size {
+            fields.push(("max_batch_size", Json::Num(b as f64)));
+        }
+        if let Some(w) = spec.batch_window_ms {
+            fields.push(("batch_window_ms", Json::Num(w as f64)));
+        }
         let (_, json) = self.call("POST", "/v2/functions", Some(&obj(fields)))?;
         Ok(parse_function(&json))
     }
@@ -361,6 +411,24 @@ impl ApiClient {
             fields.push((
                 "queue_deadline_ms",
                 match d {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ));
+        }
+        if let Some(b) = patch.max_batch_size {
+            fields.push((
+                "max_batch_size",
+                match b {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ));
+        }
+        if let Some(w) = patch.batch_window_ms {
+            fields.push((
+                "batch_window_ms",
+                match w {
                     Some(n) => Json::Num(n as f64),
                     None => Json::Null,
                 },
@@ -467,6 +535,14 @@ impl ApiClient {
             queue_wait_p50_s: num_field(&json, "queue_wait_p50_s"),
             queue_wait_p95_s: num_field(&json, "queue_wait_p95_s"),
             queue_wait_p99_s: num_field(&json, "queue_wait_p99_s"),
+            batched_requests: u64_field(&json, "batched_requests"),
+            batched_share: num_field(&json, "batched_share"),
+            batch_size_p50: u64_field(&json, "batch_size_p50"),
+            batch_size_p95: u64_field(&json, "batch_size_p95"),
+            batch_size_p99: u64_field(&json, "batch_size_p99"),
+            batch_wait_p50_s: num_field(&json, "batch_wait_p50_s"),
+            batch_wait_p95_s: num_field(&json, "batch_wait_p95_s"),
+            batch_wait_p99_s: num_field(&json, "batch_wait_p99_s"),
             response_mean_s: num_field(&json, "response_mean_s"),
             response_p50_s: num_field(&json, "response_p50_s"),
             response_p95_s: num_field(&json, "response_p95_s"),
@@ -500,6 +576,9 @@ impl ApiClient {
             queue_wait_p50_s: num_field(&json, "queue_wait_p50_s"),
             queue_wait_p95_s: num_field(&json, "queue_wait_p95_s"),
             queue_wait_p99_s: num_field(&json, "queue_wait_p99_s"),
+            batches_executed: u64_field(&json, "batches_executed"),
+            largest_batch: u64_field(&json, "largest_batch"),
+            batched_requests: u64_field(&json, "batched_requests"),
             cold_provisions: u64_field(&json, "cold_provisions"),
             prewarm_provisions: u64_field(&json, "prewarm_provisions"),
             functions: u64_field(&json, "functions"),
@@ -539,6 +618,8 @@ fn parse_function(json: &Json) -> FunctionInfo {
         max_concurrency: json.get("max_concurrency").and_then(Json::as_u64).map(|v| v as usize),
         queue_capacity: json.get("queue_capacity").and_then(Json::as_u64).map(|v| v as usize),
         queue_deadline_ms: json.get("queue_deadline_ms").and_then(Json::as_u64),
+        max_batch_size: json.get("max_batch_size").and_then(Json::as_u64).map(|v| v as usize),
+        batch_window_ms: json.get("batch_window_ms").and_then(Json::as_u64),
         warm_containers: u64_field(json, "warm_containers") as usize,
     }
 }
@@ -553,5 +634,7 @@ fn parse_invocation(json: &Json) -> InvocationResult {
         response_s: num_field(json, "response_s"),
         billed_ms: u64_field(json, "billed_ms"),
         cost_dollars: num_field(json, "cost_dollars"),
+        batch_size: json.get("batch_size").and_then(Json::as_u64).unwrap_or(1),
+        batch_wait_s: num_field(json, "batch_wait_s"),
     }
 }

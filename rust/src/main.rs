@@ -101,6 +101,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             None,
         )
         .flag(
+            "max-batch-size",
+            "micro-batching: default max requests coalesced into one forward pass (1 = off)",
+            None,
+        )
+        .flag(
+            "batch-window-ms",
+            "micro-batching: default window a batch leader collects followers, milliseconds",
+            None,
+        )
+        .flag(
             "deploy",
             "comma list of name:model:mem to deploy at boot, e.g. sq:squeezenet:1024",
             None,
@@ -120,7 +130,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(v) = args.get_u64("queue-deadline-ms")? {
         config.queue_deadline_ms = v;
     }
-    // Same rules as the TOML path (maintainer range, deadline cap).
+    if let Some(v) = args.get_u64("max-batch-size")? {
+        config.max_batch_size = v as usize;
+    }
+    if let Some(v) = args.get_u64("batch-window-ms")? {
+        config.batch_window_ms = v;
+    }
+    // Same rules as the TOML path (maintainer range, deadline cap,
+    // batch-size floor).
     config.validate()?;
     let shards = args.get_u64("shards")?.unwrap_or(2) as usize;
     let engine = build_engine(args.get_or("engine", "pjrt"), &config, shards)?;
@@ -142,6 +159,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let interval = platform.config().maintainer_interval_s;
     let (queue_capacity, queue_deadline_ms) =
         (platform.config().queue_capacity, platform.config().queue_deadline_ms);
+    let (max_batch_size, batch_window_ms) =
+        (platform.config().max_batch_size, platform.config().batch_window_ms);
     let gw = Gateway::bind(args.get_or("addr", "127.0.0.1:8080"), threads, platform)?;
     println!("lambdaserve gateway listening on http://{}", gw.local_addr());
     if interval > 0.0 {
@@ -156,6 +175,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         );
     } else {
         println!("  admission: parking disabled (a capacity shortage is an immediate 503)");
+    }
+    if max_batch_size > 1 {
+        println!(
+            "  micro-batching: up to {max_batch_size} requests per forward pass, \
+             {batch_window_ms} ms collection window"
+        );
+    } else {
+        println!("  micro-batching: off (max_batch_size 1; enable per function or via config)");
     }
     println!("  v2: POST /v2/functions  POST /v2/functions/<fn>/invocations[?mode=async]");
     println!("  v1: GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
@@ -174,6 +201,8 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         .flag("max-concurrency", "per-function in-flight cap", None)
         .flag("queue-capacity", "per-function dispatch-queue bound override", None)
         .flag("queue-deadline-ms", "per-function dispatch deadline override (ms)", None)
+        .flag("max-batch-size", "per-function micro-batch size override (1 = off)", None)
+        .flag("batch-window-ms", "per-function batch collection window override (ms)", None)
         .flag("config", "platform config TOML", None)
         .flag("engine", "pjrt | mock", Some("mock"));
     if argv.iter().any(|a| a == "--help") {
@@ -197,10 +226,17 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         if let Some(d) = args.get_u64("queue-deadline-ms")? {
             spec = spec.queue_deadline_ms(d);
         }
+        if let Some(b) = args.get_u64("max-batch-size")? {
+            spec = spec.max_batch_size(b as usize);
+        }
+        if let Some(w) = args.get_u64("batch-window-ms")? {
+            spec = spec.batch_window_ms(w);
+        }
         let f = api.deploy(&spec)?;
         println!(
             "deployed {} -> {} ({}) @ {} MB (min_warm={}, max_concurrency={}, \
-             queue_capacity={}, queue_deadline_ms={}, warm={})",
+             queue_capacity={}, queue_deadline_ms={}, max_batch_size={}, \
+             batch_window_ms={}, warm={})",
             f.name,
             f.model,
             f.variant,
@@ -209,6 +245,8 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
             f.max_concurrency.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
             f.queue_capacity.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.queue_deadline_ms.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
+            f.max_batch_size.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
+            f.batch_window_ms.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.warm_containers
         );
         return Ok(());
@@ -370,6 +408,18 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
             "  queue wait p50={:.3}s p95={:.3}s p99={:.3}s",
             s.queue_wait_p50_s, s.queue_wait_p95_s, s.queue_wait_p99_s
         );
+        if s.batched_requests > 0 || s.batch_size_p99 > 0 {
+            println!(
+                "  batching: {} batched ({:.0}% of requests), size p50={} p99={}, \
+                 wait p50={:.3}s p99={:.3}s",
+                s.batched_requests,
+                s.batched_share * 100.0,
+                s.batch_size_p50,
+                s.batch_size_p99,
+                s.batch_wait_p50_s,
+                s.batch_wait_p99_s
+            );
+        }
         println!(
             "  cold p50={:.3}s p99={:.3}s | warm p50={:.3}s p99={:.3}s",
             s.response_cold_p50_s, s.response_cold_p99_s, s.response_warm_p50_s,

@@ -425,7 +425,14 @@ mod tests {
         // Per-function cap of 1 with 4 workers: concurrent dequeues
         // hit the cap constantly, but every accepted job must still
         // complete via backoff + requeue.
-        p.deploy_full("sq", "squeezenet", "pallas", 1024, 0, Some(1), None, None).unwrap();
+        p.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            1024,
+            crate::platform::FunctionPolicy { max_concurrency: Some(1), ..Default::default() },
+        )
+        .unwrap();
         let inv = AsyncInvoker::start(p, 4, 64, Duration::from_secs(600));
         let ids: Vec<String> = (0..6).map(|i| inv.submit("sq", i).unwrap()).collect();
         for id in &ids {

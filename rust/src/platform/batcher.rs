@@ -1,0 +1,703 @@
+//! Dynamic micro-batching: coalesce concurrent invocations of one
+//! function into a single batched forward pass on one warm container.
+//!
+//! The paper's throughput ceiling is requests-per-warm-container: once
+//! cold starts are amortized, every request still pays a full forward
+//! pass, so a parked burst (PR 3's admission queue) drains one pass at
+//! a time. The [`Batcher`] turns that queue into a batching
+//! opportunity: the first request of a function to hold a container
+//! becomes the **batch leader** — it opens a batch, waits up to
+//! `batch_window_ms` for **followers** (requests admitted meanwhile,
+//! including capacity misses that would otherwise park for a container
+//! of their own), then runs ONE [`Engine::predict_batch`] pass and
+//! fans the per-request results back out. `max_batch_size` flushes a
+//! full batch early; `max_batch_size = 1` (the default) disables the
+//! whole path, leaving the pre-batching pipeline bit-for-bit intact.
+//!
+//! Billing splits across members: every member is charged
+//! `effective_batch_duration / n` (the leader additionally pays its
+//! cold-start handler time), while everyone's *response* includes the
+//! full batched pass — you cannot bill n requests one pass and also
+//! pretend each finished in a fraction of it.
+//!
+//! Waiting is ManualClock-safe with the same virtual-time self-advance
+//! pattern as the waitable pool: a leader whose window nobody else
+//! advances drives the virtual clock toward its own flush deadline, so
+//! time-virtualized tests never hang. Followers never advance time —
+//! their leader is live by construction (its RAII guard fails the
+//! batch on any abnormal exit), so they only ever wait for real
+//! progress.
+//!
+//! [`Engine::predict_batch`]: crate::runtime::Engine::predict_batch
+
+use super::registry::FunctionSpec;
+use crate::runtime::Prediction;
+use crate::util::clock::Nanos;
+use crate::util::{Clock, VirtualWaitPacer};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Cap on one real-clock window wait slice: the leader re-evaluates
+/// its early-flush predicate (starving non-joinable demand) this
+/// often, so a held container never blocks a parked request for more
+/// than one probe interval past the moment it could be serving.
+const REAL_FLUSH_PROBE: Duration = Duration::from_millis(10);
+
+/// What each member of an executed batch gets back.
+#[derive(Debug, Clone)]
+pub struct BatchShare {
+    /// This member's own classification result.
+    pub prediction: Prediction,
+    /// How many requests rode the batch (including the leader).
+    pub batch_size: usize,
+    /// Effective (CPU-governed) duration of the WHOLE batched pass —
+    /// the latency component every member actually waited for.
+    pub effective: Duration,
+    /// This member's billed split: `effective / batch_size`.
+    pub billed_share: Duration,
+    /// Time this member spent parked in the collector before the
+    /// batched pass started (the leader's is its window wait).
+    pub batch_wait: Duration,
+}
+
+#[derive(PartialEq)]
+enum Phase {
+    /// Open: followers may still join.
+    Collecting,
+    /// Flushed: the leader is executing; no more joins.
+    Executing,
+    /// Results distributed.
+    Done,
+    /// The batched execute (or the leader itself) failed.
+    Failed,
+}
+
+struct BatchInner {
+    phase: Phase,
+    /// Member seeds; index 0 is the leader.
+    seeds: Vec<u64>,
+    /// Platform-clock join time per member (batch-wait accounting).
+    joined_at: Vec<Nanos>,
+    /// Flush-early bound for this batch.
+    max: usize,
+    /// Latest platform-clock time the leader will flush (window
+    /// deadline). Joiners compare it against their own admission
+    /// deadline: a request never commits to a batch that would hold
+    /// it past the horizon at which admission control would have
+    /// refused it with a 503.
+    flush_by: Nanos,
+    exec_started_at: Nanos,
+    shares: Vec<Option<BatchShare>>,
+    error: Option<String>,
+}
+
+struct BatchState {
+    inner: Mutex<BatchInner>,
+    cv: Condvar,
+    clock: Arc<dyn Clock>,
+    /// The spec the batch's container embodies (the leader's, at open
+    /// time). Joiners whose current spec no longer matches it by
+    /// content are refused — a reconfigure evicts stale warm
+    /// containers precisely so no post-patch request runs on one, and
+    /// an open batch must not smuggle them past that (same content
+    /// comparison as the invoker's release-or-retire check).
+    spec: Arc<FunctionSpec>,
+}
+
+/// The content identity a container embodies: a joiner may only ride
+/// a batch whose container matches its own current spec.
+fn same_embodiment(a: &FunctionSpec, b: &FunctionSpec) -> bool {
+    a.model == b.model && a.variant == b.variant && a.memory_mb == b.memory_mb
+}
+
+/// Per-function batch collector. One open (Collecting) batch per
+/// function at a time; a new leader can open the next batch as soon as
+/// the previous one flushes, so batches pipeline back-to-back under
+/// sustained load.
+pub struct Batcher {
+    default_max_batch: usize,
+    default_window: Duration,
+    clock: Arc<dyn Clock>,
+    open: Mutex<BTreeMap<String, Arc<BatchState>>>,
+    /// Batched passes executed (any size — a lone leader whose window
+    /// expired still ran through the batch path). Per-request
+    /// coalescing counts live in the metrics shards (`batched_requests`
+    /// / the `batch_size` histogram), not here: one quantity, one
+    /// owner.
+    batches: AtomicU64,
+    /// Histogram-free running peak, for quick telemetry.
+    largest_batch: AtomicU64,
+}
+
+impl Batcher {
+    pub fn new(max_batch_size: usize, batch_window_ms: u64, clock: Arc<dyn Clock>) -> Self {
+        Self {
+            default_max_batch: max_batch_size.max(1),
+            default_window: Duration::from_millis(batch_window_ms),
+            clock,
+            open: Mutex::new(BTreeMap::new()),
+            batches: AtomicU64::new(0),
+            largest_batch: AtomicU64::new(0),
+        }
+    }
+
+    /// The batch-size bound in effect for `spec`.
+    pub fn effective_max_batch(&self, spec: &FunctionSpec) -> usize {
+        spec.max_batch_size.unwrap_or(self.default_max_batch).max(1)
+    }
+
+    /// The collection window in effect for `spec`.
+    pub fn effective_window(&self, spec: &FunctionSpec) -> Duration {
+        spec.batch_window_ms.map(Duration::from_millis).unwrap_or(self.default_window)
+    }
+
+    /// True when the batching path applies to `spec` at all. With the
+    /// defaults (`max_batch_size = 1`) this is false and `invoke`
+    /// never touches the batcher — the PR 3 pipeline is preserved
+    /// bit-for-bit.
+    pub fn enabled(&self, spec: &FunctionSpec) -> bool {
+        self.effective_max_batch(spec) > 1
+    }
+
+    /// Whether `inner` can accept a joiner whose own admission
+    /// deadline is `deadline`: the batch must be collecting with
+    /// room, and either it flushes before the joiner's deadline or
+    /// the join itself fills it (an immediate flush waits for no
+    /// window at all). Joining is a commitment — a member cannot be
+    /// refused later — so a request never boards a batch that would
+    /// hold it past the horizon at which admission control was
+    /// allowed to 503 it.
+    fn joinable(inner: &BatchInner, deadline: Nanos) -> bool {
+        inner.phase == Phase::Collecting
+            && inner.seeds.len() < inner.max
+            && (inner.flush_by <= deadline || inner.seeds.len() + 1 >= inner.max)
+    }
+
+    /// True when `spec`'s function has an open batch this request
+    /// could join right now (same container embodiment, flushes
+    /// within the given admission deadline) — the parked-waiter
+    /// interrupt probe (see `WarmPool::acquire_or_reserve_or`).
+    pub fn has_open(&self, spec: &FunctionSpec, deadline: Nanos) -> bool {
+        let open = self.open.lock().unwrap();
+        match open.get(&spec.name) {
+            None => false,
+            Some(state) => {
+                same_embodiment(&state.spec, spec)
+                    && Self::joinable(&state.inner.lock().unwrap(), deadline)
+            }
+        }
+    }
+
+    /// Join `spec`'s open batch as a follower, if one is collecting,
+    /// has room, embodies the same spec content, and flushes within
+    /// the joiner's own admission `deadline` (see [`Self::has_open`]).
+    /// The returned member parks in [`BatchMember::wait`] until the
+    /// leader distributes results.
+    pub fn try_join(&self, spec: &FunctionSpec, seed: u64, deadline: Nanos) -> Option<BatchMember> {
+        let open = self.open.lock().unwrap();
+        let state = open.get(&spec.name)?.clone();
+        if !same_embodiment(&state.spec, spec) {
+            return None;
+        }
+        let mut g = state.inner.lock().unwrap();
+        if !Self::joinable(&g, deadline) {
+            return None;
+        }
+        g.seeds.push(seed);
+        g.joined_at.push(state.clock.now());
+        let index = g.seeds.len() - 1;
+        let full = g.seeds.len() >= g.max;
+        drop(g);
+        drop(open);
+        if full {
+            // Wake the leader for an early flush.
+            state.cv.notify_all();
+        }
+        Some(BatchMember { state, index })
+    }
+
+    /// Open a batch for `spec` with this request as leader (it holds
+    /// the container). `None` when batching is off for the function or
+    /// another batch is already collecting (the caller then executes
+    /// solo — its container is in hand, following would waste it).
+    pub fn lead(&self, spec: &Arc<FunctionSpec>, seed: u64) -> Option<BatchLeader<'_>> {
+        if !self.enabled(spec) {
+            return None;
+        }
+        let mut open = self.open.lock().unwrap();
+        if open.contains_key(&spec.name) {
+            return None;
+        }
+        let now = self.clock.now();
+        let window = self.effective_window(spec);
+        let state = Arc::new(BatchState {
+            inner: Mutex::new(BatchInner {
+                phase: Phase::Collecting,
+                seeds: vec![seed],
+                joined_at: vec![now],
+                max: self.effective_max_batch(spec),
+                flush_by: now + window.as_nanos() as Nanos,
+                exec_started_at: 0,
+                shares: Vec::new(),
+                error: None,
+            }),
+            cv: Condvar::new(),
+            clock: self.clock.clone(),
+            spec: spec.clone(),
+        });
+        open.insert(spec.name.clone(), state.clone());
+        Some(BatchLeader {
+            batcher: self,
+            state,
+            function: spec.name.clone(),
+            window,
+            opened_at: now,
+            closed: false,
+            finished: false,
+        })
+    }
+
+    /// Batched passes executed so far.
+    pub fn batches_executed(&self) -> u64 {
+        self.batches.load(Ordering::SeqCst)
+    }
+
+    /// Largest batch flushed so far.
+    pub fn largest_batch(&self) -> u64 {
+        self.largest_batch.load(Ordering::SeqCst)
+    }
+
+    /// Drop `function`'s open-batch slot if it holds `state`.
+    fn release_slot(&self, function: &str, state: &Arc<BatchState>) {
+        let mut open = self.open.lock().unwrap();
+        if let Some(cur) = open.get(function) {
+            if Arc::ptr_eq(cur, state) {
+                open.remove(function);
+            }
+        }
+    }
+}
+
+/// The leading request's handle on its open batch. RAII: a leader
+/// dropped without [`BatchLeader::complete`] fails the batch so
+/// followers surface an error instead of hanging.
+pub struct BatchLeader<'a> {
+    batcher: &'a Batcher,
+    state: Arc<BatchState>,
+    function: String,
+    window: Duration,
+    opened_at: Nanos,
+    closed: bool,
+    finished: bool,
+}
+
+impl BatchLeader<'_> {
+    /// Park up to the window for followers; returns early once the
+    /// batch is full — or once `flush_early` fires: the invoker wires
+    /// it to "this function has requests parked for capacity", so a
+    /// leader never holds its container through a window while demand
+    /// that cannot board the batch is starving behind it (joinable
+    /// demand boards within a probe slice and leaves the queue; what
+    /// remains parked after that genuinely needs the container).
+    /// ManualClock-safe via the shared [`VirtualWaitPacer`]: an
+    /// undisturbed leader advances virtual time toward its own flush
+    /// deadline, so a lone leader's window expires in
+    /// wall-microseconds.
+    pub fn wait_window(&self, flush_early: impl Fn() -> bool) {
+        if self.window.is_zero() {
+            return;
+        }
+        let deadline = self.opened_at + self.window.as_nanos() as Nanos;
+        let clock = &self.state.clock;
+        let mut pacer = VirtualWaitPacer::new();
+        let mut waited_once = false;
+        loop {
+            let g = self.state.inner.lock().unwrap();
+            if g.seeds.len() >= g.max {
+                return;
+            }
+            if clock.now() >= deadline {
+                return;
+            }
+            // Honored only after at least one wait slice, so joiners
+            // woken by the batch opening get their chance to board
+            // (and leave the queue) before the depth check fires.
+            if waited_once && flush_early() {
+                return;
+            }
+            let len_before = g.seeds.len();
+            let timeout = pacer.next_timeout(&**clock, deadline).min(REAL_FLUSH_PROBE);
+            let (g, _) = self.state.cv.wait_timeout(g, timeout).unwrap();
+            let progressed = g.seeds.len() != len_before;
+            drop(g);
+            waited_once = true;
+            pacer.on_wake(&**clock, progressed, deadline);
+        }
+    }
+
+    /// Flush: stop accepting followers, free the function's open-batch
+    /// slot (the next leader can start collecting while this batch
+    /// executes), and return the member seeds (index 0 = leader) for
+    /// `Container::execute_batch`.
+    pub fn close(&mut self) -> Vec<u64> {
+        let mut g = self.state.inner.lock().unwrap();
+        g.phase = Phase::Executing;
+        g.exec_started_at = self.state.clock.now();
+        let seeds = g.seeds.clone();
+        drop(g);
+        self.closed = true;
+        self.batcher.release_slot(&self.function, &self.state);
+        seeds
+    }
+
+    /// Size of the batch right now (after `close`: final size).
+    pub fn size(&self) -> usize {
+        self.state.inner.lock().unwrap().seeds.len()
+    }
+
+    /// Distribute the executed batch: per-member predictions (seed
+    /// order) plus the effective duration of the whole pass. Returns
+    /// the LEADER's own share; followers wake with theirs.
+    pub fn complete(mut self, predictions: Vec<Prediction>, effective: Duration) -> BatchShare {
+        let mut g = self.state.inner.lock().unwrap();
+        assert_eq!(predictions.len(), g.seeds.len(), "one prediction per member");
+        let n = g.seeds.len();
+        let billed_share = effective / n as u32;
+        let exec_started_at = g.exec_started_at;
+        let joined_at = std::mem::take(&mut g.joined_at);
+        g.shares = predictions
+            .into_iter()
+            .zip(joined_at)
+            .map(|(prediction, joined)| {
+                Some(BatchShare {
+                    prediction,
+                    batch_size: n,
+                    effective,
+                    billed_share,
+                    batch_wait: Duration::from_nanos(exec_started_at.saturating_sub(joined)),
+                })
+            })
+            .collect();
+        g.phase = Phase::Done;
+        let leader_share = g.shares[0].take().expect("leader share");
+        drop(g);
+        self.finished = true;
+        if !self.closed {
+            // A leader completing without an explicit close (size-1
+            // shortcut paths) must still free the function's slot.
+            self.closed = true;
+            self.batcher.release_slot(&self.function, &self.state);
+        }
+        self.batcher.batches.fetch_add(1, Ordering::SeqCst);
+        self.batcher.largest_batch.fetch_max(n as u64, Ordering::SeqCst);
+        self.state.cv.notify_all();
+        leader_share
+    }
+
+    /// Fail the batch (the batched execute errored): every follower's
+    /// `wait` returns the error.
+    pub fn fail(mut self, error: String) {
+        self.fail_inner(error);
+    }
+
+    fn fail_inner(&mut self, error: String) {
+        let mut g = self.state.inner.lock().unwrap();
+        g.phase = Phase::Failed;
+        g.error = Some(error);
+        drop(g);
+        self.finished = true;
+        if !self.closed {
+            self.closed = true;
+            self.batcher.release_slot(&self.function, &self.state);
+        }
+        self.state.cv.notify_all();
+    }
+}
+
+impl Drop for BatchLeader<'_> {
+    fn drop(&mut self) {
+        // Abnormal exit (error return, panic unwinding): never strand
+        // the followers.
+        if !self.finished {
+            self.fail_inner("batch leader aborted before completing the batch".to_string());
+        }
+    }
+}
+
+/// A follower's handle: one slot in an open batch.
+pub struct BatchMember {
+    state: Arc<BatchState>,
+    index: usize,
+}
+
+impl BatchMember {
+    /// Park until the leader distributes results (or fails the
+    /// batch). Followers never advance virtual time — the leader is
+    /// live and does (its window wait and the batched execute both
+    /// drive the clock); on non-real clocks this waits in bounded wall
+    /// slices so cross-thread wakeups are never missed.
+    pub fn wait(self) -> Result<BatchShare, String> {
+        let mut g = self.state.inner.lock().unwrap();
+        loop {
+            match g.phase {
+                Phase::Done => {
+                    return Ok(g.shares[self.index].take().expect("each member taken once"));
+                }
+                Phase::Failed => {
+                    return Err(g
+                        .error
+                        .clone()
+                        .unwrap_or_else(|| "batched execution failed".to_string()));
+                }
+                Phase::Collecting | Phase::Executing => {
+                    g = if self.state.clock.is_real() {
+                        self.state.cv.wait(g).unwrap()
+                    } else {
+                        self.state
+                            .cv
+                            .wait_timeout(g, VirtualWaitPacer::WAIT_SLICE)
+                            .unwrap()
+                            .0
+                    };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::registry::{FunctionPolicy, FunctionRegistry};
+    use crate::runtime::MockEngine;
+    use crate::util::ManualClock;
+
+    fn spec(max_batch: Option<usize>, window_ms: Option<u64>) -> Arc<FunctionSpec> {
+        let reg = FunctionRegistry::new(Arc::new(MockEngine::paper_zoo()));
+        reg.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            512,
+            FunctionPolicy {
+                max_batch_size: max_batch,
+                batch_window_ms: window_ms,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    fn pred(top1: i32, ms: u64) -> Prediction {
+        Prediction { top1, top_prob: 0.9, compute: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn disabled_by_default_and_per_function_overrides() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(1, 0, clock.clone());
+        let s = spec(None, None);
+        assert!(!b.enabled(&s), "platform default 1 = off");
+        assert!(b.lead(&s, 1).is_none());
+        assert!(b.try_join(&s, 1, u64::MAX).is_none());
+        assert!(!b.has_open(&s, u64::MAX));
+        // Per-function override turns it on; platform default window.
+        let s = spec(Some(4), Some(10));
+        assert!(b.enabled(&s));
+        assert_eq!(b.effective_max_batch(&s), 4);
+        assert_eq!(b.effective_window(&s), Duration::from_millis(10));
+        // And a spec override of 1 turns it off under a batching-on
+        // platform default.
+        let b = Batcher::new(8, 5, clock);
+        let s1 = spec(Some(1), None);
+        assert!(!b.enabled(&s1));
+        assert_eq!(b.effective_window(&spec(None, None)), Duration::from_millis(5));
+    }
+
+    /// Lone leader on a ManualClock: the window flushes at its
+    /// (virtual) deadline with no outside time driver, and the batch
+    /// stays size 1.
+    #[test]
+    fn window_flush_at_virtual_deadline() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(8, 50, clock.clone());
+        let s = spec(None, None);
+        let mut leader = b.lead(&s, 7).expect("batching on");
+        assert!(b.has_open(&s, u64::MAX));
+        let wall0 = std::time::Instant::now();
+        leader.wait_window(|| false);
+        assert!(clock.now() >= 50_000_000, "virtual clock reached the window deadline");
+        assert!(wall0.elapsed() < Duration::from_secs(5), "self-advanced in wall-microseconds");
+        let seeds = leader.close();
+        assert_eq!(seeds, vec![7]);
+        assert!(!b.has_open(&s, u64::MAX), "flushed batch no longer joinable");
+        let share = leader.complete(vec![pred(3, 100)], Duration::from_millis(100));
+        assert_eq!(share.batch_size, 1);
+        assert_eq!(share.billed_share, Duration::from_millis(100));
+        assert!(share.batch_wait >= Duration::from_millis(50), "leader waited the window");
+        assert_eq!(b.batches_executed(), 1);
+    }
+
+    /// A full batch flushes early: the joining thread wakes the
+    /// leader before the window deadline, and every member gets its
+    /// own share with the billed split.
+    #[test]
+    fn early_flush_at_max_batch_size_with_shares() {
+        let clock = ManualClock::new();
+        let b = Arc::new(Batcher::new(2, 60_000, clock.clone()));
+        let s = spec(None, None);
+        let mut leader = b.lead(&s, 1).unwrap();
+        let member = b.try_join(&s, 2, u64::MAX).expect("room for one follower");
+        assert!(b.try_join(&s, 3, u64::MAX).is_none(), "batch full");
+        // Window is 60 s of virtual time; the full batch must return
+        // without consuming it.
+        let t0 = clock.now();
+        leader.wait_window(|| false);
+        assert_eq!(clock.now(), t0, "early flush burned no (virtual) window time");
+        let seeds = leader.close();
+        assert_eq!(seeds, vec![1, 2]);
+        let follower = std::thread::spawn(move || member.wait().unwrap());
+        let effective = Duration::from_millis(120);
+        let mine = leader.complete(vec![pred(10, 60), pred(20, 60)], effective);
+        let theirs = follower.join().unwrap();
+        assert_eq!(mine.prediction.top1, 10);
+        assert_eq!(theirs.prediction.top1, 20);
+        for share in [&mine, &theirs] {
+            assert_eq!(share.batch_size, 2);
+            assert_eq!(share.effective, effective);
+            assert_eq!(share.billed_share, Duration::from_millis(60), "billed split");
+        }
+        assert_eq!(b.batches_executed(), 1);
+        assert_eq!(b.largest_batch(), 2);
+    }
+
+    /// A reconfigure evicts stale-spec warm containers so no
+    /// post-patch request runs on one; an open batch (whose leader
+    /// holds such a container) must enforce the same rule: joiners
+    /// whose current spec no longer matches the batch's embodiment
+    /// are refused and execute through the normal (fresh-container)
+    /// path instead.
+    #[test]
+    fn stale_spec_batch_refuses_new_spec_joiners() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(4, 60_000, clock);
+        let old = spec(None, None); // 512 MB
+        let _leader = b.lead(&old, 1).unwrap();
+        // The function was PATCHed to a new memory size mid-window.
+        let reg = FunctionRegistry::new(Arc::new(MockEngine::paper_zoo()));
+        let new = reg.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        assert!(!b.has_open(&new, u64::MAX), "stale batch invisible to new-spec probes");
+        assert!(b.try_join(&new, 2, u64::MAX).is_none(), "new-spec joiner refused");
+        // A policy-only difference keeps the same embodiment (model/
+        // variant/memory) and may still board, like the invoker's
+        // release-or-retire content check.
+        let same = reg
+            .deploy_full(
+                "sq",
+                "squeezenet",
+                "pallas",
+                512,
+                FunctionPolicy { max_concurrency: Some(9), ..Default::default() },
+            )
+            .unwrap();
+        assert!(b.try_join(&same, 3, u64::MAX).is_some(), "same embodiment boards");
+    }
+
+    /// A leader must not starve parked demand that cannot board its
+    /// batch: the early-flush predicate ends the window after one
+    /// probe slice instead of holding the container for the full
+    /// window.
+    #[test]
+    fn window_flushes_early_on_starving_demand() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(8, 60_000, clock.clone());
+        let s = spec(None, None);
+        let mut leader = b.lead(&s, 1).unwrap();
+        let wall0 = std::time::Instant::now();
+        let t0 = clock.now();
+        leader.wait_window(|| true); // parked demand that cannot board
+        assert!(
+            clock.now() - t0 < 60_000_000_000,
+            "starved demand ends the window early, not at the 60 s deadline"
+        );
+        assert!(wall0.elapsed() < Duration::from_secs(5));
+        let seeds = leader.close();
+        leader.complete(vec![pred(1, 10)], Duration::from_millis(10));
+        assert_eq!(seeds, vec![1]);
+    }
+
+    /// A join is a commitment, so a request whose admission deadline
+    /// lands before the batch's window flush refuses to board — unless
+    /// its join fills the batch (which flushes immediately).
+    #[test]
+    fn join_refused_when_flush_lands_past_admission_deadline() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(3, 1_000, clock.clone()); // flush_by = 1 s
+        let s = spec(None, None);
+        let _leader = b.lead(&s, 1).unwrap();
+        let short = 500_000_000; // 0.5 s admission horizon
+        let long = 2_000_000_000;
+        assert!(!b.has_open(&s, short), "flush at 1 s exceeds a 0.5 s horizon");
+        assert!(b.try_join(&s, 2, short).is_none());
+        assert!(b.has_open(&s, long));
+        let _m2 = b.try_join(&s, 2, long).expect("2 s horizon covers the window");
+        // Now one slot left: a filling join flushes immediately, so
+        // even the short-horizon request may board.
+        assert!(b.has_open(&s, short), "filling join waits for no window");
+        let _m3 = b.try_join(&s, 3, short).expect("filling join allowed");
+        assert!(b.try_join(&s, 4, long).is_none(), "batch full");
+    }
+
+    #[test]
+    fn failed_batch_propagates_to_followers() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(4, 1_000, clock);
+        let s = spec(None, None);
+        let mut leader = b.lead(&s, 1).unwrap();
+        let member = b.try_join(&s, 2, u64::MAX).unwrap();
+        leader.close();
+        let follower = std::thread::spawn(move || member.wait());
+        leader.fail("engine exploded".to_string());
+        let err = follower.join().unwrap().unwrap_err();
+        assert!(err.contains("engine exploded"));
+        assert_eq!(b.batches_executed(), 0, "failed batches are not counted as executed");
+    }
+
+    /// RAII: a leader that errors out (drops without complete/fail)
+    /// must not strand its followers, and must free the open slot for
+    /// the next leader.
+    #[test]
+    fn dropped_leader_fails_batch_and_frees_slot() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(4, 1_000, clock);
+        let s = spec(None, None);
+        let leader = b.lead(&s, 1).unwrap();
+        let member = b.try_join(&s, 2, u64::MAX).unwrap();
+        let follower = std::thread::spawn(move || member.wait());
+        drop(leader); // e.g. an early `?` return in the invoker
+        let err = follower.join().unwrap().unwrap_err();
+        assert!(err.contains("aborted"), "{err}");
+        assert!(!b.has_open(&s, u64::MAX));
+        assert!(b.lead(&s, 9).is_some(), "slot reusable after the abort");
+    }
+
+    /// One open batch per function: while one collects, a second
+    /// would-be leader executes solo; once flushed, leading works
+    /// again.
+    #[test]
+    fn single_open_batch_per_function() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(4, 1_000, clock);
+        let s = spec(None, None);
+        let mut first = b.lead(&s, 1).unwrap();
+        assert!(b.lead(&s, 2).is_none(), "slot taken");
+        first.close();
+        let second = b.lead(&s, 3);
+        assert!(second.is_some(), "next leader can collect while the first executes");
+        second.unwrap().complete(vec![pred(1, 10)], Duration::from_millis(10));
+        first.complete(vec![pred(0, 10)], Duration::from_millis(10));
+        assert_eq!(b.batches_executed(), 2);
+    }
+}

@@ -44,6 +44,23 @@ impl ProvisionCost {
     pub fn total(&self) -> Duration {
         self.sandbox + self.runtime_init + self.package_fetch + self.model_load
     }
+
+    /// The components attributed to a request of the given start
+    /// kind: the real costs for the (cold) request that provisioned
+    /// the container, all-zero for warm reuse — so record builders
+    /// copy fields instead of re-gating each one.
+    pub fn attributed_to(&self, start: StartKind) -> ProvisionCost {
+        match start {
+            StartKind::Cold => self.clone(),
+            StartKind::Warm => ProvisionCost::default(),
+        }
+    }
+
+    /// The provision components that ran INSIDE the handler — billed
+    /// in 2017-era Lambda (the platform-side sandbox is not).
+    pub fn handler_time(&self) -> Duration {
+        self.runtime_init + self.package_fetch + self.model_load
+    }
 }
 
 pub struct Container {
@@ -142,6 +159,31 @@ impl Container {
         Ok((pred, effective))
     }
 
+    /// Execute one *batched* forward pass for `seeds.len()` coalesced
+    /// requests under the CPU governor. Returns one raw prediction per
+    /// seed (in order) plus the effective (throttled) duration of the
+    /// whole batched pass — the caller splits billing across members
+    /// (each is charged `effective / n`; everyone waits the full
+    /// pass). Counts every member in `served`: the batch is one
+    /// forward pass but `n` requests of container work.
+    pub fn execute_batch(
+        &mut self,
+        governor: &CpuGovernor,
+        clock: &Arc<dyn Clock>,
+        seeds: &[u64],
+    ) -> Result<(Vec<Prediction>, Duration)> {
+        assert_eq!(self.state, ContainerState::Busy, "execute_batch on non-busy container");
+        assert!(!seeds.is_empty(), "empty batch");
+        let t0 = Instant::now();
+        let preds = self.engine.predict_batch(&self.handle, seeds)?;
+        let real = t0.elapsed();
+        let full_speed: Duration = preds.iter().map(|p| p.compute).sum();
+        let effective = governor.throttle(full_speed, real, self.spec.memory_mb);
+        self.served += seeds.len() as u64;
+        self.last_used = clock.now();
+        Ok((preds, effective))
+    }
+
     /// Move Busy -> Warm (returned to the pool).
     pub fn park(&mut self, clock: &Arc<dyn Clock>) {
         assert_eq!(self.state, ContainerState::Busy);
@@ -231,6 +273,33 @@ mod tests {
         let expect = pred.compute.as_secs_f64() * 2.0;
         assert!((effective.as_secs_f64() - expect).abs() < 1e-9);
         assert_eq!(c.served, 1);
+    }
+
+    #[test]
+    fn execute_batch_one_pass_shared_cost_per_request_served() {
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(5);
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let mut c =
+            Container::provision(spec, engine.clone(), &gov, &cfg, &clock, &mut rng).unwrap();
+        let before = engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst);
+        let t0 = clock.now();
+        let (preds, effective) = c.execute_batch(&gov, &clock, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(preds.len(), 4);
+        assert_eq!(
+            engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst),
+            before + 1,
+            "a batch is one engine forward pass"
+        );
+        assert_eq!(c.served, 4, "every member counts as served");
+        // Effective = governor-scaled sum of the members' shares; the
+        // platform clock advanced by exactly that (896 MB = 2x).
+        let full: f64 = preds.iter().map(|p| p.compute.as_secs_f64()).sum();
+        assert!((effective.as_secs_f64() - full * 2.0).abs() < 1e-9);
+        assert_eq!(clock.now() - t0, effective.as_nanos() as u64);
+        // Sublinear: the batch of 4 costs less than 4 solo passes.
+        let solo = c.execute(&gov, &clock, 1).unwrap().1;
+        assert!(effective < solo * 4, "batched {effective:?} vs 4x solo {solo:?}");
     }
 
     #[test]

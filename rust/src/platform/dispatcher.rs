@@ -20,6 +20,19 @@
 //! deploy/reconfigure time. The dispatcher also streams the
 //! saturation telemetry the stats routes serve: current and peak
 //! queue depth and the deadline-expired count.
+//!
+//! Micro-batching (see [`super::batcher::Batcher`]) composes with
+//! admission rather than replacing it: a parked capacity waiter is
+//! interrupted out of its pool wait when a joinable batch opens —
+//! riding an existing container beats waiting for one — and resumes
+//! the same wait (same ticket, same arrival-anchored deadline) if it
+//! loses the join race. Two rules keep batching from degrading the
+//! admission contract: a request only boards a batch whose window
+//! flush lands within its own admission horizon (joining is a
+//! commitment, so boarding a slower batch could otherwise outwait the
+//! 503 the dispatcher owed), and a batch leader flushes its window
+//! early while requests it cannot absorb sit parked in this queue —
+//! a held container must not starve the demand behind it.
 
 use super::registry::FunctionSpec;
 use std::collections::BTreeMap;
@@ -163,10 +176,11 @@ mod tests {
             "squeezenet",
             "pallas",
             512,
-            0,
-            None,
-            queue_capacity,
-            queue_deadline_ms,
+            crate::platform::registry::FunctionPolicy {
+                queue_capacity,
+                queue_deadline_ms,
+                ..Default::default()
+            },
         )
         .unwrap()
     }

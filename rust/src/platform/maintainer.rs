@@ -146,10 +146,14 @@ mod tests {
         (p, clock)
     }
 
+    fn min_warm(n: usize) -> crate::platform::FunctionPolicy {
+        crate::platform::FunctionPolicy { min_warm: n, ..Default::default() }
+    }
+
     #[test]
     fn manual_tick_replenishes_decayed_min_warm() {
         let (p, clock) = platform(1000);
-        p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None, None, None).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 512, min_warm(2)).unwrap();
         assert_eq!(p.pool.warm_count("sq"), 2);
         // Idle past the keep-alive TTL: the warm capacity has decayed.
         clock.sleep(Duration::from_secs(601));
@@ -168,7 +172,7 @@ mod tests {
     #[test]
     fn maintain_respects_container_cap_and_missing_functions() {
         let (p, clock) = platform(1);
-        p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None, None, None).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 512, min_warm(2)).unwrap();
         // Cap 1: deploy-time prewarm got only 1 of the 2.
         assert_eq!(p.pool.warm_count("sq"), 1);
         clock.sleep(Duration::from_secs(601));
@@ -185,7 +189,7 @@ mod tests {
     #[test]
     fn maintain_is_noop_within_ttl() {
         let (p, clock) = platform(1000);
-        p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None, None, None).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 512, min_warm(2)).unwrap();
         clock.sleep(Duration::from_secs(100));
         assert_eq!(p.maintain(), MaintenanceReport::default());
         assert_eq!(p.pool.warm_count("sq"), 2);
@@ -194,7 +198,7 @@ mod tests {
     #[test]
     fn background_thread_replenishes_and_joins() {
         let (p, clock) = platform(1000);
-        p.deploy_full("sq", "squeezenet", "pallas", 512, 1, None, None, None).unwrap();
+        p.deploy_full("sq", "squeezenet", "pallas", 512, min_warm(1)).unwrap();
         assert!(Invoker::start_maintainer(&p, Duration::from_millis(2)));
         assert!(!Invoker::start_maintainer(&p, Duration::from_millis(2)), "second start no-ops");
         clock.sleep(Duration::from_secs(601));

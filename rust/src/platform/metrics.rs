@@ -59,10 +59,21 @@ pub struct InvocationRecord {
     /// CPU-scaled into effective time).
     pub model_load: Duration,
     /// Effective (CPU-share-scaled) forward-pass time — the paper's
-    /// "prediction time".
+    /// "prediction time". For a batched request this is the WHOLE
+    /// batched pass (what the request actually waited for); the
+    /// billing split lives in `billed`.
     pub predict: Duration,
-    /// Raw full-speed compute measured by the engine.
+    /// Raw full-speed compute measured by the engine (for a batched
+    /// request: this member's share of the batched pass).
     pub predict_full_speed: Duration,
+    /// Requests coalesced into the forward pass that served this one
+    /// (1 = solo execution; also 1 for a batch leader whose window
+    /// attracted no followers).
+    pub batch_size: usize,
+    /// Time parked in the batch collector before the batched pass
+    /// started: the leader's window wait, a follower's join-to-flush
+    /// wait. Zero off the batching path.
+    pub batch_wait: Duration,
     /// Billed handler duration (prediction + cold init work).
     pub billed: Duration,
     pub billed_ms: u64,
@@ -80,6 +91,7 @@ impl InvocationRecord {
             + self.runtime_init
             + self.package_fetch
             + self.model_load
+            + self.batch_wait
             + self.predict
     }
 
@@ -123,6 +135,18 @@ pub struct FnMetrics {
     /// (cold and warm): the latency component the admission queue
     /// trades for availability.
     pub queue_wait: Histogram,
+    /// Requests served by a coalesced forward pass of size >= 2 (the
+    /// batched-request share is this over `invocations`).
+    pub batched_requests: u64,
+    /// Batch sizes, recorded once per request that rode the batching
+    /// path (request-weighted: a size-8 batch contributes 8 samples
+    /// of value 8 — what the *average request* experienced, which is
+    /// the batching win per request).
+    pub batch_size: Histogram,
+    /// Per-request batch-collector wait in nanoseconds (leaders'
+    /// window wait, followers' join-to-flush wait) — the latency the
+    /// batching path trades for throughput.
+    pub batch_wait: Histogram,
 }
 
 impl FnMetrics {
@@ -147,6 +171,17 @@ impl FnMetrics {
     fn apply(&mut self, r: &InvocationRecord, response_ns: u64, predict_ns: u64) {
         self.invocations += 1;
         self.queue_wait.record(r.queue.as_nanos() as u64);
+        // Requests that rode the batcher (a member of a real batch, or
+        // a lone leader that paid a window wait) stream the batching
+        // telemetry; the solo path records nothing here, so the batch
+        // percentiles describe the batching path only.
+        if r.batch_size > 1 || r.batch_wait > Duration::ZERO {
+            if r.batch_size > 1 {
+                self.batched_requests += 1;
+            }
+            self.batch_size.record(r.batch_size as u64);
+            self.batch_wait.record(r.batch_wait.as_nanos() as u64);
+        }
         match r.start {
             StartKind::Cold => {
                 self.cold_starts += 1;
@@ -365,6 +400,8 @@ pub(crate) fn test_record(
         model_load: if cold { Duration::from_millis(400) } else { Duration::ZERO },
         predict: Duration::from_millis(predict_ms),
         predict_full_speed: Duration::from_millis(predict_ms / 2),
+        batch_size: 1,
+        batch_wait: Duration::ZERO,
         billed: Duration::from_millis(predict_ms),
         billed_ms: predict_ms.div_ceil(100) * 100,
         cost_dollars: 1e-6,
@@ -472,6 +509,41 @@ mod tests {
         // Log-bucketed: quantiles are bucket lower edges, ~1% under.
         assert!(m.queue_wait.p99() >= 390_000_000, "p99={}", m.queue_wait.p99());
         assert!(m.queue_wait.p50() >= 39_000_000, "p50={}", m.queue_wait.p50());
+    }
+
+    #[test]
+    fn batch_telemetry_streams_for_batched_requests_only() {
+        let s = MetricsSink::new();
+        // Two solo requests: no batch telemetry at all.
+        s.record(test_record("f", 512, StartKind::Warm, 100));
+        s.record(test_record("f", 512, StartKind::Cold, 100));
+        // A batch of 3 (leader cold, 2 followers warm), 40 ms waits.
+        for start in [StartKind::Cold, StartKind::Warm, StartKind::Warm] {
+            let mut r = test_record("f", 512, start, 100);
+            r.batch_size = 3;
+            r.batch_wait = Duration::from_millis(40);
+            s.record(r);
+        }
+        // A lone leader whose window expired: size 1 but a real wait.
+        let mut r = test_record("f", 512, StartKind::Warm, 100);
+        r.batch_wait = Duration::from_millis(25);
+        s.record(r);
+        let m = s.function_metrics("f");
+        assert_eq!(m.invocations, 6);
+        assert_eq!(m.batched_requests, 3, "only real coalescing counts as batched");
+        assert_eq!(m.batch_size.count(), 4, "batch path requests incl. the lone leader");
+        assert_eq!(m.batch_size.max(), 3);
+        assert_eq!(m.batch_wait.count(), 4);
+        assert!(m.batch_wait.p50() >= 24_000_000, "p50={}", m.batch_wait.p50());
+        // batch_wait is a response component.
+        let batched = {
+            let mut r = test_record("g", 512, StartKind::Warm, 100);
+            r.batch_wait = Duration::from_millis(40);
+            r
+        };
+        assert_eq!(batched.response(), Duration::from_millis(140));
+        // Totals see the same stream.
+        assert_eq!(s.platform_metrics().batched_requests, 3);
     }
 
     #[test]

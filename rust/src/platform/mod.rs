@@ -1,6 +1,7 @@
 //! The FaaS platform core (the paper's measured system, built).
 
 pub mod async_invoke;
+pub mod batcher;
 pub mod billing;
 pub mod container;
 pub mod dispatcher;
@@ -13,6 +14,7 @@ pub mod scaler;
 pub mod throttle;
 
 pub use async_invoke::{AsyncInvocation, AsyncInvoker, AsyncStatus, SubmitError};
+pub use batcher::Batcher;
 pub use billing::{BillingMeter, InvoiceLine};
 pub use container::{Container, ContainerState};
 pub use dispatcher::{Dispatcher, QueueTicket};
@@ -20,6 +22,6 @@ pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform, ReconfigurePatc
 pub use maintainer::{MaintenanceReport, PoolMaintainer};
 pub use metrics::{FnMetrics, InvocationRecord, MetricsSink, StartKind};
 pub use pool::{AcquireOutcome, WarmPool};
-pub use registry::{FunctionRegistry, FunctionSpec};
+pub use registry::{FunctionPolicy, FunctionRegistry, FunctionSpec};
 pub use scaler::Scaler;
 pub use throttle::CpuGovernor;

@@ -21,22 +21,10 @@
 
 use super::container::Container;
 use crate::util::clock::Nanos;
-use crate::util::Clock;
+use crate::util::{Clock, VirtualWaitPacer};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
-
-/// Wall-clock wait quantum on non-real clocks: short enough that a
-/// virtual-deadline expiry is noticed promptly, long enough not to
-/// busy-spin.
-const WAIT_SLICE: Duration = Duration::from_millis(1);
-/// Empty wall slices tolerated before a parked waiter on a virtual
-/// clock starts advancing virtual time itself.
-const WAIT_GRACE_SLICES: u32 = 3;
-/// Virtual time consumed per further empty slice; bounded by the
-/// waiter's remaining deadline.
-const VIRTUAL_WAIT_STEP: Duration = Duration::from_millis(25);
 
 /// Result of [`WarmPool::acquire_or_reserve`].
 pub enum AcquireOutcome {
@@ -46,6 +34,11 @@ pub enum AcquireOutcome {
     Reserved,
     /// The deadline passed without a container or a free slot.
     TimedOut,
+    /// The caller's interrupt probe fired while parked (e.g. a batch
+    /// opened that this request can join instead of waiting for a
+    /// container); only returned by
+    /// [`WarmPool::acquire_or_reserve_or`].
+    Interrupted,
 }
 
 pub struct WarmPool {
@@ -186,7 +179,24 @@ impl WarmPool {
     /// never parks), after which the caller sleeps on the pool condvar
     /// and re-checks on every capacity-freeing change.
     pub fn acquire_or_reserve(&self, function: &str, deadline: Nanos) -> AcquireOutcome {
-        let mut idle_slices = 0u32;
+        self.acquire_or_reserve_or(function, deadline, || false)
+    }
+
+    /// [`Self::acquire_or_reserve`] with an interrupt probe: checked
+    /// on every wakeup (after the container/slot probes — holding real
+    /// capacity always beats the alternative), a true probe returns
+    /// [`AcquireOutcome::Interrupted`] so the caller can take another
+    /// path (the invoker joins a freshly opened micro-batch instead of
+    /// keeping waiting for a container). The probe is also consulted
+    /// before declaring a timeout: an open batch at the deadline
+    /// converts a would-be 503 into a served, batched request.
+    pub fn acquire_or_reserve_or(
+        &self,
+        function: &str,
+        deadline: Nanos,
+        interrupt: impl Fn() -> bool,
+    ) -> AcquireOutcome {
+        let mut pacer = VirtualWaitPacer::new();
         loop {
             // Capture the generation BEFORE probing so a change that
             // lands between the probe and the wait is never missed.
@@ -197,10 +207,13 @@ impl WarmPool {
             if self.try_reserve() {
                 return AcquireOutcome::Reserved;
             }
+            if interrupt() {
+                return AcquireOutcome::Interrupted;
+            }
             if self.clock.now() >= deadline {
                 return AcquireOutcome::TimedOut;
             }
-            self.wait_for_generation(generation, deadline, &mut idle_slices);
+            self.wait_for_generation(generation, deadline, &mut pacer);
         }
     }
 
@@ -208,57 +221,43 @@ impl WarmPool {
     /// clock reaches `deadline` (the async workers' inter-attempt
     /// wait; replaces their old fixed wall-clock backoff).
     pub fn wait_for_change(&self, deadline: Nanos) {
-        let mut idle_slices = 0u32;
+        let mut pacer = VirtualWaitPacer::new();
         loop {
             let generation = *self.waiters.lock().unwrap();
             if self.clock.now() >= deadline {
                 return;
             }
-            if self.wait_for_generation(generation, deadline, &mut idle_slices) {
+            if self.wait_for_generation(generation, deadline, &mut pacer) {
                 return;
             }
         }
     }
 
     /// One bounded wait for the generation to move past `gen`;
-    /// returns whether a change was observed. On a real clock this is
-    /// a plain condvar wait capped by the remaining deadline. On a
-    /// virtual clock the condvar still delivers cross-thread wakeups
-    /// (worker threads are real even when time is not), but a wall
-    /// timeout cannot advance virtual time — so after a few empty
-    /// slices the waiter advances the virtual clock toward `deadline`
-    /// itself, ensuring a deadline expiry even when it is the only
-    /// active thread (e.g. the single-threaded closed-loop driver).
-    fn wait_for_generation(&self, generation: u64, deadline: Nanos, idle_slices: &mut u32) -> bool {
+    /// returns whether a change was observed. The
+    /// [`VirtualWaitPacer`] keeps the wait live on virtual clocks: a
+    /// plain deadline-capped condvar wait on a real clock, short wall
+    /// slices plus a self-driven advance toward `deadline` on a
+    /// virtual one (see its docs — the batch collector waits with the
+    /// same pacer).
+    fn wait_for_generation(
+        &self,
+        generation: u64,
+        deadline: Nanos,
+        pacer: &mut VirtualWaitPacer,
+    ) -> bool {
         let changed = {
             let g = self.waiters.lock().unwrap();
             if *g != generation {
                 true
             } else {
-                let timeout = if self.clock.is_real() {
-                    Duration::from_nanos(deadline.saturating_sub(self.clock.now()).max(1))
-                } else {
-                    WAIT_SLICE
-                };
+                let timeout = pacer.next_timeout(&*self.clock, deadline);
                 let (g, _) = self.waiter_cv.wait_timeout(g, timeout).unwrap();
                 *g != generation
             }
         };
-        if changed {
-            *idle_slices = 0;
-            return true;
-        }
-        if !self.clock.is_real() {
-            *idle_slices += 1;
-            if *idle_slices >= WAIT_GRACE_SLICES {
-                let now = self.clock.now();
-                if now < deadline {
-                    let step = VIRTUAL_WAIT_STEP.min(Duration::from_nanos(deadline - now));
-                    self.clock.sleep(step);
-                }
-            }
-        }
-        false
+        pacer.on_wake(&*self.clock, changed, deadline);
+        changed
     }
 
     /// Sweep every function's stack, reaping expired containers and
@@ -650,6 +649,47 @@ mod tests {
         // The whole wait self-drove in a few wall milliseconds.
         assert!(t0.elapsed() < Duration::from_secs(5));
         f.pool.retire(_held);
+    }
+
+    /// The interrupt probe: a parked waiter returns `Interrupted` when
+    /// the probe fires (woken by `notify_waiters`), but real capacity
+    /// always wins over the interrupt.
+    #[test]
+    fn acquire_or_reserve_interrupt_probe() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let mut f = fixture(1, 600.0);
+        let _held = provision(&mut f); // at cap
+        let flag = AtomicBool::new(false);
+        // Probe already true: immediate interrupt, no timeout burned.
+        flag.store(true, Ordering::SeqCst);
+        let deadline = f.dyn_clock.now() + 60_000_000_000;
+        assert!(matches!(
+            f.pool.acquire_or_reserve_or("sq", deadline, || flag.load(Ordering::SeqCst)),
+            AcquireOutcome::Interrupted
+        ));
+        // Probe true but capacity free: capacity wins.
+        f.pool.retire(_held);
+        assert!(matches!(
+            f.pool.acquire_or_reserve_or("sq", deadline, || true),
+            AcquireOutcome::Reserved
+        ));
+        f.pool.cancel_reservation();
+        // A parked waiter wakes into the interrupt when the flag flips
+        // and the pool is notified.
+        let held = provision(&mut f);
+        std::thread::scope(|s| {
+            let pool = &f.pool;
+            let flag = &flag;
+            flag.store(false, Ordering::SeqCst);
+            let waiter = s.spawn(move || {
+                pool.acquire_or_reserve_or("sq", u64::MAX, || flag.load(Ordering::SeqCst))
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            flag.store(true, Ordering::SeqCst);
+            pool.notify_waiters();
+            assert!(matches!(waiter.join().unwrap(), AcquireOutcome::Interrupted));
+        });
+        f.pool.retire(held);
     }
 
     /// Uncontended calls never park: a warm container or a free slot

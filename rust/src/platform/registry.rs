@@ -38,6 +38,45 @@ pub struct FunctionSpec {
     /// Admission-deadline override in milliseconds; `None` falls back
     /// to `platform.queue_deadline_ms`.
     pub queue_deadline_ms: Option<u64>,
+    /// Micro-batching override: max requests coalesced into one
+    /// batched forward pass; `None` falls back to
+    /// `platform.max_batch_size` (1 = batching off).
+    pub max_batch_size: Option<usize>,
+    /// Micro-batching override: how long a batch leader holds its
+    /// container open for followers, in milliseconds; `None` falls
+    /// back to `platform.batch_window_ms`.
+    pub batch_window_ms: Option<u64>,
+}
+
+/// Deploy-time policy knobs (everything beyond the identity tuple
+/// `name/model/variant/memory`): warm-pool target, concurrency cap,
+/// admission-queue overrides, micro-batching overrides. `None` fields
+/// fall back to the platform-wide defaults. Grew out of the old
+/// positional `deploy_full` tail, which stopped scaling at four
+/// knobs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FunctionPolicy {
+    pub min_warm: usize,
+    pub max_concurrency: Option<usize>,
+    pub queue_capacity: Option<usize>,
+    pub queue_deadline_ms: Option<u64>,
+    pub max_batch_size: Option<usize>,
+    pub batch_window_ms: Option<u64>,
+}
+
+impl FunctionPolicy {
+    /// The policy embodied by an existing spec (reconfigure reads
+    /// this, then overlays the patch).
+    pub fn of(spec: &FunctionSpec) -> Self {
+        Self {
+            min_warm: spec.min_warm,
+            max_concurrency: spec.max_concurrency,
+            queue_capacity: spec.queue_capacity,
+            queue_deadline_ms: spec.queue_deadline_ms,
+            max_batch_size: spec.max_batch_size,
+            batch_window_ms: spec.batch_window_ms,
+        }
+    }
 }
 
 pub struct FunctionRegistry {
@@ -70,33 +109,20 @@ impl FunctionRegistry {
         variant: &str,
         memory_mb: MemorySize,
     ) -> Result<Arc<FunctionSpec>> {
-        self.deploy_full(name, model, variant, memory_mb, 0, None, None, None)
+        self.deploy_full(name, model, variant, memory_mb, FunctionPolicy::default())
     }
 
     /// Deploy (or redeploy) a function. Validates the memory tier and
     /// the model's peak-memory floor against the engine's manifest.
-    #[allow(clippy::too_many_arguments)]
     pub fn deploy_full(
         &self,
         name: &str,
         model: &str,
         variant: &str,
         memory_mb: MemorySize,
-        min_warm: usize,
-        max_concurrency: Option<usize>,
-        queue_capacity: Option<usize>,
-        queue_deadline_ms: Option<u64>,
+        policy: FunctionPolicy,
     ) -> Result<Arc<FunctionSpec>> {
-        let spec = self.validated_spec(
-            name,
-            model,
-            variant,
-            memory_mb,
-            min_warm,
-            max_concurrency,
-            queue_capacity,
-            queue_deadline_ms,
-        )?;
+        let spec = self.validated_spec(name, model, variant, memory_mb, policy)?;
         self.functions.write().unwrap().insert(name.to_string(), spec.clone());
         Ok(spec)
     }
@@ -104,28 +130,15 @@ impl FunctionRegistry {
     /// Atomic create: like [`Self::deploy_full`] but fails instead of
     /// overwriting an existing deployment (the v2 POST semantics — two
     /// racing creates cannot both succeed).
-    #[allow(clippy::too_many_arguments)]
     pub fn create_full(
         &self,
         name: &str,
         model: &str,
         variant: &str,
         memory_mb: MemorySize,
-        min_warm: usize,
-        max_concurrency: Option<usize>,
-        queue_capacity: Option<usize>,
-        queue_deadline_ms: Option<u64>,
+        policy: FunctionPolicy,
     ) -> Result<Arc<FunctionSpec>> {
-        let spec = self.validated_spec(
-            name,
-            model,
-            variant,
-            memory_mb,
-            min_warm,
-            max_concurrency,
-            queue_capacity,
-            queue_deadline_ms,
-        )?;
+        let spec = self.validated_spec(name, model, variant, memory_mb, policy)?;
         let mut functions = self.functions.write().unwrap();
         if functions.contains_key(name) {
             bail!("function {name:?} is already deployed");
@@ -135,18 +148,15 @@ impl FunctionRegistry {
     }
 
     /// Shared validation: name charset, memory tier, model manifest,
-    /// peak-memory floor, concurrency cap and queue-policy sanity.
-    #[allow(clippy::too_many_arguments)]
+    /// peak-memory floor, concurrency cap, queue- and batch-policy
+    /// sanity.
     fn validated_spec(
         &self,
         name: &str,
         model: &str,
         variant: &str,
         memory_mb: MemorySize,
-        min_warm: usize,
-        max_concurrency: Option<usize>,
-        queue_capacity: Option<usize>,
-        queue_deadline_ms: Option<u64>,
+        policy: FunctionPolicy,
     ) -> Result<Arc<FunctionSpec>> {
         if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
         {
@@ -175,15 +185,28 @@ impl FunctionRegistry {
                 manifest.paper_peak_mem_mb
             );
         }
-        if let Some(0) = max_concurrency {
+        if let Some(0) = policy.max_concurrency {
             bail!("function {name}: max_concurrency must be at least 1 when set");
         }
-        if let Some(ms) = queue_deadline_ms {
+        if let Some(ms) = policy.queue_deadline_ms {
             // Same ceiling as the platform-wide config: a parked
             // request holds a gateway worker thread for the wait.
             if ms > crate::configparse::MAX_QUEUE_DEADLINE_MS {
                 bail!(
                     "function {name}: queue_deadline_ms must be at most {} (one hour)",
+                    crate::configparse::MAX_QUEUE_DEADLINE_MS
+                );
+            }
+        }
+        if let Some(0) = policy.max_batch_size {
+            bail!("function {name}: max_batch_size must be at least 1 when set (1 = off)");
+        }
+        if let Some(ms) = policy.batch_window_ms {
+            // A leader holds a container AND a gateway worker thread
+            // open for the window: same one-hour sanity ceiling.
+            if ms > crate::configparse::MAX_QUEUE_DEADLINE_MS {
+                bail!(
+                    "function {name}: batch_window_ms must be at most {} (one hour)",
                     crate::configparse::MAX_QUEUE_DEADLINE_MS
                 );
             }
@@ -195,10 +218,12 @@ impl FunctionRegistry {
             memory_mb,
             peak_mem_mb: manifest.paper_peak_mem_mb,
             package_bytes: manifest.package_bytes(),
-            min_warm,
-            max_concurrency,
-            queue_capacity,
-            queue_deadline_ms,
+            min_warm: policy.min_warm,
+            max_concurrency: policy.max_concurrency,
+            queue_capacity: policy.queue_capacity,
+            queue_deadline_ms: policy.queue_deadline_ms,
+            max_batch_size: policy.max_batch_size,
+            batch_window_ms: policy.batch_window_ms,
         }))
     }
 
@@ -253,13 +278,16 @@ mod tests {
     #[test]
     fn create_full_refuses_existing_name() {
         let r = reg();
-        r.create_full("f", "squeezenet", "pallas", 512, 0, None, None, None).unwrap();
-        let err =
-            r.create_full("f", "squeezenet", "pallas", 1024, 0, None, None, None).unwrap_err();
+        r.create_full("f", "squeezenet", "pallas", 512, FunctionPolicy::default()).unwrap();
+        let err = r
+            .create_full("f", "squeezenet", "pallas", 1024, FunctionPolicy::default())
+            .unwrap_err();
         assert!(err.to_string().contains("already deployed"));
         assert_eq!(r.get("f").unwrap().memory_mb, 512, "loser must not overwrite");
         // Invalid specs are rejected before touching the map.
-        assert!(r.create_full("g", "squeezenet", "pallas", 100, 0, None, None, None).is_err());
+        assert!(r
+            .create_full("g", "squeezenet", "pallas", 100, FunctionPolicy::default())
+            .is_err());
         assert!(r.get("g").is_err());
     }
 
@@ -289,16 +317,42 @@ mod tests {
     #[test]
     fn deploy_full_policy_fields() {
         let r = reg();
-        let spec =
-            r.deploy_full("sq", "squeezenet", "pallas", 512, 2, Some(8), None, None).unwrap();
+        let spec = r
+            .deploy_full(
+                "sq",
+                "squeezenet",
+                "pallas",
+                512,
+                FunctionPolicy {
+                    min_warm: 2,
+                    max_concurrency: Some(8),
+                    max_batch_size: Some(4),
+                    batch_window_ms: Some(25),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
         assert_eq!(spec.min_warm, 2);
         assert_eq!(spec.max_concurrency, Some(8));
+        assert_eq!(spec.max_batch_size, Some(4));
+        assert_eq!(spec.batch_window_ms, Some(25));
+        assert_eq!(FunctionPolicy::of(&spec).max_batch_size, Some(4), "policy round-trips");
         // Plain deploy defaults.
         let spec = r.deploy("sq2", "squeezenet", "pallas", 512).unwrap();
         assert_eq!(spec.min_warm, 0);
         assert_eq!(spec.max_concurrency, None);
+        assert_eq!(spec.max_batch_size, None);
+        assert_eq!(spec.batch_window_ms, None);
         // A zero cap would make the function uninvokable.
-        assert!(r.deploy_full("sq3", "squeezenet", "pallas", 512, 0, Some(0), None, None).is_err());
+        let zero_cap = FunctionPolicy { max_concurrency: Some(0), ..Default::default() };
+        assert!(r.deploy_full("sq3", "squeezenet", "pallas", 512, zero_cap).is_err());
+        // A zero batch size is nonsense (1 is "off"); an over-ceiling
+        // window is almost certainly a unit mistake.
+        let zero_batch = FunctionPolicy { max_batch_size: Some(0), ..Default::default() };
+        assert!(r.deploy_full("sq4", "squeezenet", "pallas", 512, zero_batch).is_err());
+        let huge_window =
+            FunctionPolicy { batch_window_ms: Some(4_000_000), ..Default::default() };
+        assert!(r.deploy_full("sq5", "squeezenet", "pallas", 512, huge_window).is_err());
     }
 
     #[test]

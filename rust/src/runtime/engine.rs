@@ -57,6 +57,22 @@ pub trait Engine: Send + Sync {
     /// while letting workloads vary inputs).
     fn predict(&self, handle: &InstanceHandle, image_seed: u64) -> Result<Prediction>;
 
+    /// Run one *batched* forward pass: `image_seeds.len()` inputs
+    /// coalesced into a single engine execution on `handle`. Returns
+    /// exactly one [`Prediction`] per seed, in seed order; each
+    /// member's `compute` is its share of the batched pass, so the
+    /// sum over members is the real compute the batch cost (sublinear
+    /// in the batch size for engines with a true batched path). The
+    /// default implementation loops [`Self::predict`] — correct for
+    /// any engine, with no batching win.
+    fn predict_batch(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+    ) -> Result<Vec<Prediction>> {
+        image_seeds.iter().map(|&seed| self.predict(handle, seed)).collect()
+    }
+
     /// Free a live instance (container reaped / evicted).
     fn drop_instance(&self, handle: &InstanceHandle);
 

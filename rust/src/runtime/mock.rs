@@ -15,6 +15,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Marginal full-speed cost of each extra input in a batched forward
+/// pass, as a fraction of a solo pass: a batch of `n` costs
+/// `predict * (1 + BATCH_COST_MARGINAL * (n - 1))` in total — sublinear
+/// in `n`, modeling the weight-reuse/amortization a real batched
+/// kernel gets (activations grow with `n`, weight traffic does not).
+pub const BATCH_COST_MARGINAL: f64 = 0.25;
+
 /// Configured costs for one mock model.
 #[derive(Debug, Clone)]
 pub struct MockModelCosts {
@@ -147,6 +154,44 @@ impl Engine for MockEngine {
         })
     }
 
+    fn predict_batch(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+    ) -> Result<Vec<Prediction>> {
+        if image_seeds.is_empty() {
+            return Ok(Vec::new());
+        }
+        // A singleton "batch" is exactly a solo pass (same jitter, same
+        // cost), so `max_batch_size = 1` and lone flushes reproduce
+        // today's behavior bit-for-bit.
+        if image_seeds.len() == 1 {
+            return Ok(vec![self.predict(handle, image_seeds[0])?]);
+        }
+        // One batched forward pass, however many inputs ride it.
+        self.predict_calls.fetch_add(1, Ordering::SeqCst);
+        if !self.instances.lock().unwrap().contains(&(handle.shard, handle.id)) {
+            return Err(anyhow!("mock engine: batched predict on dead instance {:?}", handle));
+        }
+        let costs = self.costs(&handle.model)?;
+        let n = image_seeds.len() as f64;
+        let total = costs.predict.as_secs_f64() * (1.0 + BATCH_COST_MARGINAL * (n - 1.0));
+        let share = Duration::from_secs_f64(total / n);
+        Ok(image_seeds
+            .iter()
+            .map(|&seed| {
+                // Same per-seed stream as `predict` (top1, jitter draw,
+                // top_prob) so a batched member classifies identically
+                // to a solo invocation of the same seed; only the
+                // compute is the shared (jitter-free) batch split.
+                let mut rng = SplitMix64::new(seed);
+                let top1 = rng.gen_range(0, costs.manifest.num_classes as u64) as i32;
+                let _jitter = rng.next_f64();
+                Prediction { top1, top_prob: 0.5 + 0.5 * rng.next_f32(), compute: share }
+            })
+            .collect())
+    }
+
     fn drop_instance(&self, handle: &InstanceHandle) {
         self.instances.lock().unwrap().remove(&(handle.shard, handle.id));
     }
@@ -202,6 +247,73 @@ mod tests {
         assert!(e.create_instance("squeezenet", "pallas").is_err());
         e.fail_create.store(false, Ordering::SeqCst);
         assert!(e.create_instance("squeezenet", "pallas").is_ok());
+    }
+
+    #[test]
+    fn batched_predict_is_one_sublinear_pass() {
+        let e = MockEngine::paper_zoo();
+        let (h, _) = e.create_instance("squeezenet", "pallas").unwrap();
+        let solo = e.predict(&h, 7).unwrap();
+        let calls_before = e.predict_calls.load(Ordering::SeqCst);
+
+        let seeds = [7u64, 8, 9, 10];
+        let preds = e.predict_batch(&h, &seeds).unwrap();
+        assert_eq!(preds.len(), 4, "one prediction per seed");
+        assert_eq!(
+            e.predict_calls.load(Ordering::SeqCst),
+            calls_before + 1,
+            "a batch is ONE forward pass"
+        );
+        // Classification matches the solo run of the same seed.
+        assert_eq!(preds[0].top1, solo.top1);
+        assert_eq!(preds[0].top_prob, solo.top_prob);
+        // Batch total is sublinear: 4x inputs cost (1 + 0.25*3) = 1.75x
+        // a solo pass, split evenly across members.
+        let total: f64 = preds.iter().map(|p| p.compute.as_secs_f64()).sum();
+        let solo_full = e.costs("squeezenet").unwrap().predict.as_secs_f64();
+        assert!((total - solo_full * 1.75).abs() < 1e-9, "total={total}");
+        assert!(preds.windows(2).all(|w| w[0].compute == w[1].compute), "even split");
+
+        // A singleton batch is exactly a solo pass (jitter included).
+        let single = e.predict_batch(&h, &[7]).unwrap();
+        assert_eq!(single[0].compute, solo.compute);
+
+        e.drop_instance(&h);
+        assert!(e.predict_batch(&h, &seeds).is_err(), "dead instance refused");
+    }
+
+    #[test]
+    fn default_trait_batch_loops_predict() {
+        // The trait's default impl (exercised through a &dyn Engine
+        // whose concrete type overrides it — so call the default
+        // explicitly on a throwaway wrapper).
+        struct Looper(MockEngine);
+        impl Engine for Looper {
+            fn manifest(&self, m: &str) -> Result<ModelManifest> {
+                self.0.manifest(m)
+            }
+            fn create_instance(&self, m: &str, v: &str) -> Result<(InstanceHandle, InitStats)> {
+                self.0.create_instance(m, v)
+            }
+            fn predict(&self, h: &InstanceHandle, s: u64) -> Result<Prediction> {
+                self.0.predict(h, s)
+            }
+            fn drop_instance(&self, h: &InstanceHandle) {
+                self.0.drop_instance(h)
+            }
+            fn live_instances(&self) -> usize {
+                self.0.live_instances()
+            }
+        }
+        let e = Looper(MockEngine::paper_zoo());
+        let (h, _) = e.create_instance("squeezenet", "pallas").unwrap();
+        let preds = e.predict_batch(&h, &[1, 2, 3]).unwrap();
+        assert_eq!(preds.len(), 3);
+        // No batching win: three full solo passes.
+        assert_eq!(e.0.predict_calls.load(Ordering::SeqCst), 3);
+        for (seed, p) in [1u64, 2, 3].iter().zip(&preds) {
+            assert_eq!(p.top1, e.predict(&h, *seed).unwrap().top1);
+        }
     }
 
     #[test]

@@ -18,5 +18,5 @@ mod pjrt;
 pub use engine::{Engine, InitStats, InstanceHandle, Prediction};
 pub use image::synthetic_image;
 pub use manifest::{ModelManifest, Zoo};
-pub use mock::{MockEngine, MockModelCosts};
+pub use mock::{MockEngine, MockModelCosts, BATCH_COST_MARGINAL};
 pub use pjrt::PjrtEngine;

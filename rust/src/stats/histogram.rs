@@ -164,6 +164,24 @@ impl std::fmt::Debug for Histogram {
     }
 }
 
+impl std::fmt::Display for Histogram {
+    /// Human-facing summary line with the full percentile ladder —
+    /// p95 included, since that is where batching/queueing trade-offs
+    /// show before they reach the p99 tail.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1} p50={} p95={} p99={} max={}",
+            self.total,
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +273,51 @@ mod tests {
         assert_eq!(a.mean(), c.mean());
         assert_eq!(a.p99(), c.p99());
         assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut a = Histogram::new();
+        a.record(10);
+        a.record(1000);
+        // Merging an empty histogram in must not disturb min/max/mean.
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 1000);
+        assert_eq!(a.mean(), 505.0);
+        // Merging into an empty histogram reproduces the source.
+        let mut b = Histogram::new();
+        b.merge(&a);
+        assert_eq!(b.count(), 2);
+        assert_eq!(b.min(), 10);
+        assert_eq!(b.max(), 1000);
+        assert_eq!(b.p99(), a.p99());
+        // Empty + empty stays empty (and min() stays the reported 0).
+        let mut e = Histogram::new();
+        e.merge(&Histogram::new());
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.min(), 0);
+        assert_eq!(e.max(), 0);
+    }
+
+    #[test]
+    fn display_includes_p95_between_p50_and_p99() {
+        let mut h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.to_string();
+        assert!(s.contains("n=100"), "{s}");
+        assert!(s.contains(&format!("p50={}", h.p50())), "{s}");
+        assert!(s.contains(&format!("p95={}", h.p95())), "{s}");
+        assert!(s.contains(&format!("p99={}", h.p99())), "{s}");
+        assert!(s.contains("max=100"), "{s}");
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99());
+        // The p95 estimate is within the histogram's ~1% error band.
+        assert!((h.p95() as i64 - 95).abs() <= 2, "p95={}", h.p95());
+        // Empty histograms render all-zero, no panic.
+        assert_eq!(Histogram::new().to_string(), "n=0 mean=0.0 p50=0 p95=0 p99=0 max=0");
     }
 
     #[test]

@@ -178,6 +178,71 @@ impl Clock for VirtualClock {
     }
 }
 
+/// Pacing for a condvar waiter that must stay live on virtual clocks,
+/// shared by the waitable warm pool and the batch collector.
+///
+/// On a real clock a waiter simply sleeps until its deadline. On a
+/// virtual clock a wall timeout cannot advance virtual time, so the
+/// waiter wakes in short wall slices — and, after a few slices in
+/// which nothing progressed, starts advancing the virtual clock toward
+/// its own deadline, ensuring a (virtual) deadline expiry even when it
+/// is the only active thread (e.g. the single-threaded closed-loop
+/// driver). Cross-thread condvar wakeups still work throughout:
+/// worker threads are real even when time is not.
+#[derive(Default)]
+pub struct VirtualWaitPacer {
+    idle_slices: u32,
+}
+
+impl VirtualWaitPacer {
+    /// Wall-clock wait quantum on non-real clocks: short enough that
+    /// a virtual-deadline expiry is noticed promptly, long enough not
+    /// to busy-spin.
+    pub const WAIT_SLICE: Duration = Duration::from_millis(1);
+    /// Empty wall slices tolerated before a parked waiter on a
+    /// virtual clock starts advancing virtual time itself.
+    const GRACE_SLICES: u32 = 3;
+    /// Virtual time consumed per further empty slice; bounded by the
+    /// waiter's remaining deadline.
+    const STEP: Duration = Duration::from_millis(25);
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Timeout for the next condvar wait toward `deadline` (absolute
+    /// platform-clock nanos): the full remainder on a real clock, one
+    /// short slice on a virtual one.
+    pub fn next_timeout(&self, clock: &dyn Clock, deadline: Nanos) -> Duration {
+        if clock.is_real() {
+            Duration::from_nanos(deadline.saturating_sub(clock.now()).max(1))
+        } else {
+            Self::WAIT_SLICE
+        }
+    }
+
+    /// Record one wait outcome; `progressed` means the condition the
+    /// caller is waiting on changed. After the grace, an unprogressed
+    /// waiter on a virtual clock advances the clock one bounded step
+    /// toward `deadline`.
+    pub fn on_wake(&mut self, clock: &dyn Clock, progressed: bool, deadline: Nanos) {
+        if progressed {
+            self.idle_slices = 0;
+            return;
+        }
+        if clock.is_real() {
+            return;
+        }
+        self.idle_slices += 1;
+        if self.idle_slices >= Self::GRACE_SLICES {
+            let now = clock.now();
+            if now < deadline {
+                clock.sleep(Self::STEP.min(Duration::from_nanos(deadline - now)));
+            }
+        }
+    }
+}
+
 /// Test clock settable from the outside, no waiter machinery.
 pub struct ManualClock(pub AtomicU64);
 
@@ -266,6 +331,48 @@ mod tests {
         // Single participating thread: sleep must self-advance.
         c.sleep(Duration::from_secs(3));
         assert_eq!(c.now(), 3_000_000_000);
+    }
+
+    #[test]
+    fn pacer_slices_on_virtual_clock_and_self_advances_after_grace() {
+        let manual = ManualClock::new();
+        let clock: &dyn Clock = &*manual;
+        let mut p = VirtualWaitPacer::new();
+        let deadline = 100_000_000; // 100 ms virtual
+        assert_eq!(p.next_timeout(clock, deadline), VirtualWaitPacer::WAIT_SLICE);
+        // Progress keeps resetting the grace: no time advance.
+        for _ in 0..10 {
+            p.on_wake(clock, true, deadline);
+        }
+        assert_eq!(clock.now(), 0);
+        // Idle wakes burn the grace, then advance bounded steps until
+        // the deadline is reached exactly.
+        for _ in 0..10 {
+            p.on_wake(clock, false, deadline);
+        }
+        assert!(clock.now() > 0, "self-advanced after the grace");
+        while clock.now() < deadline {
+            p.on_wake(clock, false, deadline);
+        }
+        assert_eq!(clock.now(), deadline, "advance is bounded by the deadline");
+        p.on_wake(clock, false, deadline); // at the deadline: no-op
+        assert_eq!(clock.now(), deadline);
+    }
+
+    #[test]
+    fn pacer_real_clock_sleeps_remainder_and_never_advances() {
+        let real = SystemClock::new();
+        let clock: &dyn Clock = &real;
+        let mut p = VirtualWaitPacer::new();
+        let deadline = clock.now() + 50_000_000;
+        let t = p.next_timeout(clock, deadline);
+        assert!(t > Duration::from_millis(1), "real clocks wait the remainder, {t:?}");
+        for _ in 0..10 {
+            p.on_wake(clock, false, deadline); // must not sleep wall time
+        }
+        // An expired deadline still yields a positive (floor 1 ns)
+        // timeout so wait_timeout never panics.
+        assert!(p.next_timeout(clock, 0) >= Duration::from_nanos(1));
     }
 
     #[test]

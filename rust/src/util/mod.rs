@@ -4,5 +4,5 @@ pub mod clock;
 pub mod json;
 pub mod rng;
 
-pub use clock::{Clock, ManualClock, SystemClock, VirtualClock};
+pub use clock::{Clock, ManualClock, SystemClock, VirtualClock, VirtualWaitPacer};
 pub use rng::SplitMix64;

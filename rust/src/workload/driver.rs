@@ -106,6 +106,7 @@ pub fn run_closed_loop(
         }
 
         let net = network_delay(&platform.config().network, &mut rng);
+        let t_invoke = clock.now();
         let sample = match platform.invoke(function, seed.wrapping_add(i as u64)) {
             Ok(out) => ClientSample {
                 at: *at,
@@ -123,7 +124,14 @@ pub fn run_closed_loop(
                 }
                 ClientSample {
                     at: *at,
-                    latency: net,
+                    // A refused request still WAITED: a 503 after a
+                    // parked dispatch deadline held the client for the
+                    // whole deadline. Fold the measured platform-clock
+                    // wait into the client-observed latency — before
+                    // the admission queue existed, errors really were
+                    // instant, and charging refusals only the network
+                    // leg undercounted end-to-end response time.
+                    latency: net + Duration::from_nanos(clock.now() - t_invoke),
                     predict: Duration::ZERO,
                     start: StartKind::Cold,
                     cost_dollars: 0.0,
@@ -183,6 +191,7 @@ pub fn run_open_loop(
         handles.push(pool.submit(move || {
             let mut rng = SplitMix64::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E37));
             let net = network_delay(&platform.config().network, &mut rng);
+            let t_invoke = platform.clock().now();
             let entry = match platform.invoke(&function, seed.wrapping_add(i as u64)) {
                 Ok(out) => (
                     ClientSample {
@@ -204,7 +213,12 @@ pub fn run_open_loop(
                     (
                         ClientSample {
                             at,
-                            latency: net,
+                            // Fold the measured admission wait into a
+                            // refusal's latency (see run_closed_loop).
+                            latency: net
+                                + Duration::from_nanos(
+                                    platform.clock().now().saturating_sub(t_invoke),
+                                ),
                             predict: Duration::ZERO,
                             start: StartKind::Cold,
                             cost_dollars: 0.0,
@@ -304,7 +318,14 @@ mod tests {
             Arc::new(MockEngine::paper_zoo()),
             clock.clone(),
         ));
-        p.deploy_full("sq", "squeezenet", "pallas", 1024, 1, None, None, None).unwrap();
+        p.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            1024,
+            crate::platform::FunctionPolicy { min_warm: 1, ..Default::default() },
+        )
+        .unwrap();
         let report = run_closed_loop(&p, "sq", &ColdProbe::default(), 9);
         assert_eq!(report.samples.len(), 5);
         assert_eq!(report.cold_count(), 0, "maintained min_warm pool absorbs every gap");

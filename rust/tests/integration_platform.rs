@@ -5,7 +5,7 @@
 use lambdaserve::configparse::{BootstrapConfig, PlatformConfig};
 use lambdaserve::gateway::Gateway;
 use lambdaserve::httpd::{http_get, http_post};
-use lambdaserve::platform::{Invoker, StartKind};
+use lambdaserve::platform::{FunctionPolicy, Invoker, StartKind};
 use lambdaserve::runtime::{MockEngine, MockModelCosts};
 use lambdaserve::util::json::Json;
 use lambdaserve::util::ManualClock;
@@ -154,6 +154,101 @@ fn gateway_absorbs_burst_within_queue_capacity() {
     t.join().unwrap();
 }
 
+/// Acceptance (tentpole): with `max_batch_size = 8`, a concurrent
+/// same-function burst over real HTTP coalesces into strictly fewer
+/// engine forward passes than requests — every request still gets its
+/// own 200 with its own correct prediction — and the batch-size
+/// percentiles appear in BOTH stats routes.
+#[test]
+fn gateway_batches_concurrent_burst_into_fewer_passes() {
+    const BURST: usize = 8;
+    let config = PlatformConfig {
+        max_batch_size: BURST,
+        batch_window_ms: 500, // early flush at 8 usually ends it sooner
+        max_containers: 2,
+        ..fast_config()
+    };
+    let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+        "squeezenet",
+        60,
+        5.0,
+        85,
+    )]));
+    let p = Arc::new(Invoker::live(config, engine.clone()));
+    p.deploy_full(
+        "sq",
+        "squeezenet",
+        "pallas",
+        1536,
+        FunctionPolicy { min_warm: 1, ..Default::default() },
+    )
+    .unwrap();
+    let gw = Gateway::bind("127.0.0.1:0", 2 * BURST, p.clone()).unwrap();
+    let addr = gw.local_addr().to_string();
+    let sh = gw.shutdown_handle();
+    let t = std::thread::spawn(move || gw.serve().unwrap());
+    let tmo = Duration::from_secs(30);
+
+    let passes_before = engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst);
+    let barrier = Arc::new(std::sync::Barrier::new(BURST));
+    let handles: Vec<_> = (0..BURST)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                let r = http_get(&addr, &format!("/v1/invoke/sq?seed={i}"), tmo).unwrap();
+                (r.status, r.body_str())
+            })
+        })
+        .collect();
+    let responses: Vec<(u16, String)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (status, body) in &responses {
+        assert_eq!(*status, 200, "{body}");
+    }
+    let passes =
+        engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst) - passes_before;
+    assert!(
+        (passes as usize) < BURST,
+        "{BURST} requests must coalesce into fewer forward passes, got {passes}"
+    );
+
+    // Every request got its own seed's classification (the mock is a
+    // deterministic function of the seed): compare as multisets.
+    use lambdaserve::runtime::Engine as _;
+    let solo = MockEngine::new(vec![MockModelCosts::paper_like("squeezenet", 60, 5.0, 85)]);
+    let (h, _) = solo.create_instance("squeezenet", "pallas").unwrap();
+    let mut expect: Vec<u64> =
+        (0..BURST as u64).map(|s| solo.predict(&h, s).unwrap().top1 as u64).collect();
+    let mut got: Vec<u64> = responses
+        .iter()
+        .map(|(_, body)| {
+            Json::parse(body).unwrap().get("top1").unwrap().as_u64().unwrap()
+        })
+        .collect();
+    expect.sort_unstable();
+    got.sort_unstable();
+    assert_eq!(got, expect, "each member got its own prediction");
+
+    // Batch telemetry on BOTH stats routes.
+    let r = http_get(&addr, "/v2/functions/sq/stats", tmo).unwrap();
+    let j = Json::parse(&r.body_str()).unwrap();
+    assert_eq!(j.get("invocations").unwrap().as_u64(), Some(BURST as u64));
+    assert!(j.get("batched_requests").unwrap().as_u64().unwrap() >= 2);
+    assert!(j.get("batched_share").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("batch_size_p95").unwrap().as_u64().unwrap() >= 2);
+    assert!(j.get("batch_wait_p99_s").unwrap().as_f64().unwrap() >= 0.0);
+    let r = http_get(&addr, "/v2/stats", tmo).unwrap();
+    let j = Json::parse(&r.body_str()).unwrap();
+    assert!(j.get("batch_size_p95").unwrap().as_u64().unwrap() >= 2);
+    assert!(j.get("batches_executed").unwrap().as_u64().unwrap() >= 1);
+    assert!(j.get("batched_requests").unwrap().as_u64().unwrap() >= 2);
+    assert!(j.get("largest_batch").unwrap().as_u64().unwrap() >= 2);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
 /// Acceptance: a parked request whose dispatch deadline passes gets
 /// 503 + `Retry-After` (not 429), and the expiry is visible in the
 /// dispatcher telemetry of `/v2/stats`.
@@ -266,7 +361,14 @@ fn burst_drains_with_zero_rejections_on_manual_clock() {
 fn min_warm_pool_survives_idle_gap_longer_than_ttl() {
     let clock = ManualClock::new();
     let p = Arc::new(Invoker::new(PlatformConfig::default(), fast_engine(), clock.clone()));
-    p.deploy_full("sq", "squeezenet", "pallas", 512, 2, None, None, None).unwrap();
+    p.deploy_full(
+        "sq",
+        "squeezenet",
+        "pallas",
+        512,
+        FunctionPolicy { min_warm: 2, ..Default::default() },
+    )
+    .unwrap();
     assert_eq!(p.pool.warm_count("sq"), 2);
     assert!(Invoker::start_maintainer(&p, Duration::from_millis(2)));
 

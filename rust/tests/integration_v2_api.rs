@@ -277,6 +277,76 @@ fn queue_config_roundtrip_and_stats_fields() {
     t.join().unwrap();
 }
 
+/// Micro-batching config: deploy-time overrides round-trip through
+/// the SDK and the function resource JSON, PATCH can set and clear
+/// them (null = platform default), invalid values are rejected, and
+/// the new stats fields are served on both surfaces (zero off the
+/// batching path).
+#[test]
+fn batching_config_roundtrip_and_stats_fields() {
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+
+    let f = api
+        .deploy(
+            &DeploySpec::new("sq", "squeezenet")
+                .memory_mb(1024)
+                .max_batch_size(4)
+                .batch_window_ms(40),
+        )
+        .unwrap();
+    assert_eq!(f.max_batch_size, Some(4));
+    assert_eq!(f.batch_window_ms, Some(40));
+
+    // PATCH: shrink the window, keep the size override.
+    let f = api
+        .reconfigure(
+            "sq",
+            &ReconfigureSpec { batch_window_ms: Some(Some(10)), ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(f.max_batch_size, Some(4), "untouched override kept");
+    assert_eq!(f.batch_window_ms, Some(10));
+
+    // PATCH null: revert both to the platform defaults (batching off).
+    let f = api
+        .reconfigure(
+            "sq",
+            &ReconfigureSpec {
+                max_batch_size: Some(None),
+                batch_window_ms: Some(None),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(f.max_batch_size, None);
+    assert_eq!(f.batch_window_ms, None);
+
+    // A zero batch size is rejected (1 is "off"; 0 is a config bug).
+    let err = api
+        .deploy(&DeploySpec::new("bad", "squeezenet").memory_mb(512).max_batch_size(0))
+        .unwrap_err();
+    assert_eq!(err.status, 400);
+
+    // Solo invocations carry the unbatched markers and the stats
+    // fields read zero on both surfaces.
+    let r = api.invoke("sq", Some(1)).unwrap();
+    assert_eq!(r.batch_size, 1);
+    assert_eq!(r.batch_wait_s, 0.0);
+    let s = api.stats("sq").unwrap();
+    assert_eq!(s.batched_requests, 0);
+    assert_eq!(s.batched_share, 0.0);
+    assert_eq!(s.batch_size_p99, 0);
+    assert_eq!(s.batch_wait_p99_s, 0.0);
+    let ps = api.platform_stats().unwrap();
+    assert_eq!(ps.batches_executed, 0);
+    assert_eq!(ps.largest_batch, 0);
+    assert_eq!(ps.batched_requests, 0);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
 #[test]
 fn per_function_concurrency_cap_is_enforced_over_http() {
     let (addr, sh, t) = start_gateway();
