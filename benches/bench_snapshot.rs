@@ -1,0 +1,102 @@
+//! Bench: snapshot/restore — cold vs restored provision latency as a
+//! function of weight size (§Perf).
+//!
+//! Runs on the MockEngine + ManualClock, so the numbers are the
+//! platform's *modeled* provision economics in virtual time (what the
+//! experiments and SLA analyses see), plus the measured wall overhead
+//! of the snapshot machinery itself (capture + restore round trip
+//! through the store with zero-cost models).
+//!
+//! `cargo bench --bench bench_snapshot`
+
+use lambdaserve::configparse::{BootstrapConfig, CapturePolicy, SnapshotConfig};
+use lambdaserve::platform::registry::FunctionRegistry;
+use lambdaserve::platform::{CpuGovernor, SnapshotStore, StartKind};
+use lambdaserve::runtime::{Engine, MockEngine, MockModelCosts};
+use lambdaserve::util::{Clock, ManualClock, SplitMix64};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    println!("=== snapshot/restore: provision latency vs weight size ===\n");
+
+    let engine: Arc<dyn Engine> = Arc::new(MockEngine::paper_zoo());
+    let reg = FunctionRegistry::new(engine.clone());
+    let snap_cfg = SnapshotConfig {
+        enabled: true,
+        capture_policy: CapturePolicy::Sync,
+        ..Default::default()
+    };
+    println!(
+        "restore_bw {:.0} MB/s, capacity {} MB, capture sync; 1024 MB functions\n",
+        snap_cfg.restore_bw / 1e6,
+        snap_cfg.capacity_bytes >> 20
+    );
+    println!(
+        "{:>10} {:>10} {:>12} {:>14} {:>9}",
+        "model", "MB", "cold (s)", "restored (s)", "speedup"
+    );
+    for model in ["squeezenet", "resnet18", "resnext50"] {
+        let spec = reg.deploy(model, model, "pallas", 1024).unwrap();
+        let clock: Arc<dyn Clock> = ManualClock::new();
+        let gov = CpuGovernor::new(1792, clock.clone());
+        let bootstrap = BootstrapConfig::default();
+        let store = Arc::new(SnapshotStore::new(snap_cfg.clone()));
+        let mut rng = SplitMix64::new(7);
+        // First provision: full cold (compile + init + bootstrap),
+        // captured synchronously.
+        let cold = store
+            .provision(&spec, &engine, &gov, &bootstrap, &clock, &mut rng)
+            .unwrap();
+        // Second provision: restored from the checkpoint.
+        let restored = store
+            .provision(&spec, &engine, &gov, &bootstrap, &clock, &mut rng)
+            .unwrap();
+        assert_eq!(cold.start_kind_for_first_use(), StartKind::Cold);
+        assert_eq!(restored.start_kind_for_first_use(), StartKind::Restored);
+        let cold_s = cold.provision_cost.total().as_secs_f64();
+        let rest_s = restored.provision_cost.total().as_secs_f64();
+        let bytes = engine.manifest(model).unwrap().param_bytes;
+        println!(
+            "{:>10} {:>10.1} {:>12.3} {:>14.3} {:>8.1}x",
+            model,
+            bytes as f64 / 1e6,
+            cold_s,
+            rest_s,
+            cold_s / rest_s
+        );
+    }
+
+    // Measured machinery overhead: zero-cost model, real clock — what
+    // the capture and restore paths themselves cost in wall time.
+    println!("\n=== machinery overhead (zero-cost model, wall time) ===\n");
+    let engine: Arc<dyn Engine> = Arc::new(MockEngine::new(vec![MockModelCosts {
+        predict: std::time::Duration::ZERO,
+        init_run: std::time::Duration::ZERO,
+        compile: std::time::Duration::ZERO,
+        manifest: MockModelCosts::paper_like("m", 1, 5.0, 85).manifest,
+    }]));
+    let (handle, _) = engine.create_instance("m", "pallas").unwrap();
+    const ITERS: usize = 50_000;
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        let blob = engine.snapshot_instance(&handle).unwrap();
+        std::hint::black_box(&blob);
+    }
+    println!(
+        "engine.snapshot_instance {:>10.0} ns/op   ({ITERS} iters)",
+        t0.elapsed().as_nanos() as f64 / ITERS as f64
+    );
+    let blob = engine.snapshot_instance(&handle).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        let (h, stats) = engine.restore_instance("m", "pallas", &blob).unwrap();
+        std::hint::black_box(&stats);
+        engine.drop_instance(&h);
+    }
+    println!(
+        "engine.restore_instance  {:>10.0} ns/op   ({ITERS} iters, incl. drop)",
+        t0.elapsed().as_nanos() as f64 / ITERS as f64
+    );
+    assert_eq!(engine.live_instances(), 1, "bench leaked instances");
+}

@@ -1,13 +1,14 @@
-//! The paper's core experiment, end to end on real inference: warm and
-//! cold memory sweeps for one model, printed side by side — a compact
-//! version of Figures 1 & 4 (SqueezeNet by default).
+//! The paper's core experiment, end to end on real inference: warm,
+//! cold, and snapshot-restored memory sweeps for one model, printed
+//! side by side — a compact version of Figures 1 & 4 (SqueezeNet by
+//! default) plus the snapshot-on vs snapshot-off cold ablation.
 //!
 //!     cargo run --release --example paper_sweep [-- model [reps]]
 //!
 //! 10-minute cold gaps run on the manual clock (instant), while every
 //! prediction and model load is real XLA compute; see DESIGN.md §4.
 
-use lambdaserve::configparse::{PlatformConfig, MEMORY_SIZES_2017};
+use lambdaserve::configparse::{CapturePolicy, PlatformConfig, MEMORY_SIZES_2017};
 use lambdaserve::platform::Invoker;
 use lambdaserve::runtime::PjrtEngine;
 use lambdaserve::stats::mean_ci95;
@@ -25,11 +26,11 @@ fn main() -> anyhow::Result<()> {
     let config = PlatformConfig::default();
     let engine = Arc::new(PjrtEngine::new(Path::new(&config.artifacts_dir), 1)?);
     println!(
-        "{model}: warm ({reps} reqs @1s) vs cold (5 reqs @10min) across memory sizes\n"
+        "{model}: warm ({reps} reqs @1s) vs cold (5 reqs @10min) vs snapshot-restored\n"
     );
     println!(
-        "{:>8}  {:>12} {:>12}  {:>12} {:>12}",
-        "MB", "warm lat(s)", "warm pred(s)", "cold lat(s)", "cold pred(s)"
+        "{:>8}  {:>12} {:>12}  {:>12} {:>12}  {:>12}",
+        "MB", "warm lat(s)", "warm pred(s)", "cold lat(s)", "cold pred(s)", "rest lat(s)"
     );
 
     for mem in MEMORY_SIZES_2017 {
@@ -56,9 +57,29 @@ fn main() -> anyhow::Result<()> {
         let (cl, _) = mean_ci95(&cold.latencies_s());
         let (cp, _) = mean_ci95(&cold.predicts_s());
 
-        println!("{mem:>8}  {wl:>12.3} {wp:>12.3}  {cl:>12.3} {cp:>12.3}");
+        // Snapshot ablation: the same cold probe with snapshot/restore
+        // on — a fresh platform whose first (discarded-by-hand) cold
+        // start seeds the checkpoint, so every probed provision
+        // restores instead of recompiling.
+        let mut snap_config = config.clone();
+        snap_config.snapshot.enabled = true;
+        snap_config.snapshot.capture_policy = CapturePolicy::Sync;
+        let clock = ManualClock::new();
+        let snap_platform = Invoker::new(snap_config, engine.clone(), clock);
+        snap_platform.deploy("f", model, "pallas", mem)?;
+        snap_platform
+            .invoke("f", 0)
+            .map_err(|e| anyhow::anyhow!("snapshot seed invoke: {e}"))?;
+        snap_platform.evict_all();
+        let rest = run_closed_loop(&snap_platform, "f", &ColdProbe::default(), 3);
+        assert_eq!(rest.restored_count(), rest.ok_samples().len(), "all probes restored");
+        let (rl, _) = mean_ci95(&rest.latencies_s());
+
+        println!("{mem:>8}  {wl:>12.3} {wp:>12.3}  {cl:>12.3} {cp:>12.3}  {rl:>12.3}");
     }
-    println!("\n(the paper's shape: both fall with memory; cold stays several");
-    println!(" seconds above warm because sandbox+runtime+model-load dominate)");
+    println!("\n(the paper's shape: all fall with memory; cold stays several seconds");
+    println!(" above warm because sandbox+runtime+model-load dominate, while the");
+    println!(" restored column pays sandbox + restore I/O only — the checkpoint");
+    println!(" ablation the snapshot subsystem buys)");
     Ok(())
 }

@@ -9,7 +9,7 @@ mod platform_config;
 mod toml;
 
 pub use platform_config::{
-    BootstrapConfig, MemorySize, ModelConfig, NetworkConfig, PlatformConfig, PricingConfig,
-    MAX_QUEUE_DEADLINE_MS, MEMORY_SIZES_2017,
+    BootstrapConfig, CapturePolicy, MemorySize, ModelConfig, NetworkConfig, PlatformConfig,
+    PricingConfig, SnapshotConfig, MAX_QUEUE_DEADLINE_MS, MEMORY_SIZES_2017,
 };
 pub use toml::{parse_toml, TomlError, TomlValue};

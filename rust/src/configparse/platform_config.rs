@@ -111,6 +111,67 @@ impl Default for BootstrapConfig {
     }
 }
 
+/// When the platform captures instance snapshots (see
+/// [`SnapshotConfig::capture_policy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapturePolicy {
+    /// Capture after a full cold provision, on a detached worker —
+    /// off the request's critical path (the default).
+    Background,
+    /// Capture inline before the provisioning request is served:
+    /// deterministic, for tests/benches and eager pre-seeding.
+    Sync,
+    /// Never capture; the store only serves pre-seeded snapshots.
+    Off,
+}
+
+impl std::str::FromStr for CapturePolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "background" => Ok(Self::Background),
+            "sync" => Ok(Self::Sync),
+            "off" => Ok(Self::Off),
+            other => bail!("unknown snapshot.capture_policy {other:?} (background|sync|off)"),
+        }
+    }
+}
+
+/// Snapshot/restore cold-start mitigation (`[snapshot]` in the TOML):
+/// checkpoint a warmed instance once, then provision future cold
+/// starts from the checkpoint — paying sandbox + restore I/O instead
+/// of runtime init + package fetch + compile + weight init.
+#[derive(Debug, Clone)]
+pub struct SnapshotConfig {
+    /// Master switch, default off (the per-function `snapshot` policy
+    /// field overrides it either way).
+    pub enabled: bool,
+    /// Bound on total stored snapshot bytes; least-recently-used
+    /// snapshots are evicted beyond it.
+    pub capacity_bytes: u64,
+    /// Simulated snapshot-fetch bandwidth, bytes/s: the platform-side
+    /// I/O a restore pays instead of the package fetch, scaled by the
+    /// CPU/memory share exactly like `bootstrap.package_read_bw`.
+    pub restore_bw: f64,
+    /// When captures happen (`"background"` | `"sync"` | `"off"`).
+    pub capture_policy: CapturePolicy,
+}
+
+impl Default for SnapshotConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            capacity_bytes: 1 << 30,
+            // Snapshot artifacts live on fast local/zonal storage, not
+            // the 2017 package path: restores move bytes ~2.5x faster
+            // than the package fetch they replace.
+            restore_bw: 200e6,
+            capture_policy: CapturePolicy::Background,
+        }
+    }
+}
+
 /// Client<->gateway network model (the JMeter<->API-Gateway leg).
 #[derive(Debug, Clone)]
 pub struct NetworkConfig {
@@ -191,6 +252,8 @@ pub struct PlatformConfig {
     pub pricing: PricingConfig,
     pub bootstrap: BootstrapConfig,
     pub network: NetworkConfig,
+    /// Snapshot/restore cold-start mitigation (default: disabled).
+    pub snapshot: SnapshotConfig,
     /// Deterministic seed for every stochastic component.
     pub seed: u64,
     /// Directory of AOT artifacts.
@@ -214,6 +277,7 @@ impl Default for PlatformConfig {
             pricing: PricingConfig::default(),
             bootstrap: BootstrapConfig::default(),
             network: NetworkConfig::default(),
+            snapshot: SnapshotConfig::default(),
             seed: 20171001,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -322,6 +386,19 @@ impl PlatformConfig {
             cfg.network.jitter_mean_s = v;
         }
 
+        if let Some(v) = doc.get("snapshot.enabled").and_then(TomlValue::as_bool) {
+            cfg.snapshot.enabled = v;
+        }
+        if let Some(v) = get_u64("snapshot.capacity_bytes") {
+            cfg.snapshot.capacity_bytes = v;
+        }
+        if let Some(v) = get_f64("snapshot.restore_bw") {
+            cfg.snapshot.restore_bw = v;
+        }
+        if let Some(v) = doc.get("snapshot.capture_policy").and_then(TomlValue::as_str) {
+            cfg.snapshot.capture_policy = v.parse()?;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -365,6 +442,9 @@ impl PlatformConfig {
         // dispatch deadline.
         if self.batch_window_ms > MAX_QUEUE_DEADLINE_MS {
             bail!("batch_window_ms must be at most {MAX_QUEUE_DEADLINE_MS} (one hour)");
+        }
+        if !self.snapshot.restore_bw.is_finite() || self.snapshot.restore_bw <= 0.0 {
+            bail!("snapshot.restore_bw must be a positive number of bytes/s");
         }
         Ok(())
     }
@@ -462,6 +542,35 @@ rtt_s = 0.01
         assert_eq!(cfg.network.rtt_s, 0.01);
         // untouched defaults survive
         assert_eq!(cfg.pricing.table.len(), 12);
+    }
+
+    #[test]
+    fn snapshot_toml_overlay_and_defaults() {
+        let cfg = PlatformConfig::default();
+        assert!(!cfg.snapshot.enabled, "snapshots are opt-in");
+        assert_eq!(cfg.snapshot.capacity_bytes, 1 << 30);
+        assert_eq!(cfg.snapshot.capture_policy, CapturePolicy::Background);
+
+        let cfg = PlatformConfig::from_toml(
+            r#"
+[snapshot]
+enabled = true
+capacity_bytes = 67108864
+restore_bw = 5e7
+capture_policy = "sync"
+"#,
+        )
+        .unwrap();
+        assert!(cfg.snapshot.enabled);
+        assert_eq!(cfg.snapshot.capacity_bytes, 64 << 20);
+        assert_eq!(cfg.snapshot.restore_bw, 5e7);
+        assert_eq!(cfg.snapshot.capture_policy, CapturePolicy::Sync);
+
+        assert!(PlatformConfig::from_toml("[snapshot]\nrestore_bw = 0.0").is_err());
+        assert!(PlatformConfig::from_toml("[snapshot]\nrestore_bw = -1.0").is_err());
+        assert!(PlatformConfig::from_toml("[snapshot]\ncapture_policy = \"eager\"").is_err());
+        assert_eq!("off".parse::<CapturePolicy>().unwrap(), CapturePolicy::Off);
+        assert_eq!("background".parse::<CapturePolicy>().unwrap(), CapturePolicy::Background);
     }
 
     #[test]

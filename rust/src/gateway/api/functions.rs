@@ -1,7 +1,7 @@
 //! `/v2/functions` resource handlers: deploy (POST), list (GET), get
 //! (GET /:name), reconfigure (PATCH /:name), undeploy (DELETE /:name).
 
-use super::{err, json_body, opt_str, opt_u32, opt_u64, ApiCtx};
+use super::{err, json_body, opt_bool, opt_str, opt_u32, opt_u64, ApiCtx};
 use crate::httpd::{HttpRequest, Params, Responder};
 use crate::platform::{FunctionPolicy, FunctionSpec, ReconfigurePatch};
 use crate::util::json::{obj, Json};
@@ -49,6 +49,14 @@ pub(crate) fn function_json(ctx: &ApiCtx, spec: &Arc<FunctionSpec>) -> Json {
             "batch_window_ms",
             match spec.batch_window_ms {
                 Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        ),
+        // Snapshot/restore override: null = platform default applies.
+        (
+            "snapshot",
+            match spec.snapshot {
+                Some(v) => Json::Bool(v),
                 None => Json::Null,
             },
         ),
@@ -105,6 +113,10 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
         Ok(v) => v,
         Err(r) => return r,
     };
+    let snapshot = match opt_bool(&body, "snapshot") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
     let conflict = || {
         err(
             409,
@@ -131,6 +143,7 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
             queue_deadline_ms,
             max_batch_size,
             batch_window_ms,
+            snapshot,
         },
     ) {
         Ok(spec) => Responder::json(201, function_json(ctx, &spec).to_string()),
@@ -201,6 +214,10 @@ pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
         Ok(v) => v,
         Err(r) => return r,
     };
+    let snapshot = match super::tri_state_bool(&body, "snapshot") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
     let patch = ReconfigurePatch {
         memory_mb,
         variant,
@@ -210,6 +227,7 @@ pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
         queue_deadline_ms,
         max_batch_size,
         batch_window_ms,
+        snapshot,
     };
     match ctx.platform.reconfigure(name, &patch) {
         Ok(spec) => Responder::json(200, function_json(ctx, &spec).to_string()),

@@ -102,6 +102,34 @@ pub fn tri_state_u64(body: &Json, key: &str) -> Result<Option<Option<u64>>, Resp
     }
 }
 
+/// Optional boolean body field.
+pub fn opt_bool(body: &Json, key: &str) -> Result<Option<bool>, Responder> {
+    match body.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v.as_bool().map(Some).ok_or_else(|| {
+            err(400, "invalid_field", &format!("field {key:?} must be a boolean"))
+        }),
+    }
+}
+
+/// Tri-state boolean PATCH field: absent = keep (`None`), explicit
+/// `null` = clear back to the platform default (`Some(None)`),
+/// boolean = set (`Some(Some(b))`).
+pub fn tri_state_bool(body: &Json, key: &str) -> Result<Option<Option<bool>>, Responder> {
+    match body.get(key) {
+        None => Ok(None),
+        Some(Json::Null) => Ok(Some(None)),
+        Some(v) => match v.as_bool() {
+            Some(b) => Ok(Some(Some(b))),
+            None => Err(err(
+                400,
+                "invalid_field",
+                &format!("field {key:?} must be a boolean or null"),
+            )),
+        },
+    }
+}
+
 /// Optional string body field.
 pub fn opt_str(body: &Json, key: &str) -> Result<Option<String>, Responder> {
     match body.get(key) {

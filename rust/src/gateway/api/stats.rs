@@ -10,7 +10,7 @@
 
 use super::{err, ApiCtx};
 use crate::httpd::{HttpRequest, Params, Responder};
-use crate::platform::FnMetrics;
+use crate::platform::{FnMetrics, Platform};
 use crate::util::json::{obj, Json};
 
 const NS: f64 = 1e9;
@@ -30,6 +30,7 @@ fn shard_fields(m: &FnMetrics) -> Vec<(&'static str, Json)> {
     vec![
         ("invocations", Json::Num(m.invocations as f64)),
         ("cold_starts", Json::Num(m.cold_starts as f64)),
+        ("restored_starts", Json::Num(m.restored_starts as f64)),
         ("warm_starts", Json::Num(m.warm_starts() as f64)),
         ("throttled", Json::Num(m.throttled as f64)),
         ("queue_expired", Json::Num(m.queue_expired as f64)),
@@ -64,6 +65,26 @@ fn shard_fields(m: &FnMetrics) -> Vec<(&'static str, Json)> {
         ("response_warm_p50_s", secs(m.response_warm.p50())),
         ("response_warm_p95_s", secs(m.response_warm.p95())),
         ("response_warm_p99_s", secs(m.response_warm.p99())),
+        // Snapshot-restored-only response percentiles (the middle mode
+        // the restore path carves out of the cold distribution).
+        ("response_restored_p50_s", secs(m.response_restored.p50())),
+        ("response_restored_p95_s", secs(m.response_restored.p95())),
+        ("response_restored_p99_s", secs(m.response_restored.p99())),
+        // Per-component provision-cost percentiles: each histogram is
+        // fed by the requests that actually paid the component (the
+        // trio by full cold starts, restore by restored starts,
+        // sandbox by both), so the restore win reads straight off the
+        // route — no raw-record parsing.
+        ("provision_sandbox_p50_s", secs(m.provision_sandbox.p50())),
+        ("provision_sandbox_p99_s", secs(m.provision_sandbox.p99())),
+        ("provision_runtime_init_p50_s", secs(m.provision_runtime_init.p50())),
+        ("provision_runtime_init_p99_s", secs(m.provision_runtime_init.p99())),
+        ("provision_package_fetch_p50_s", secs(m.provision_package_fetch.p50())),
+        ("provision_package_fetch_p99_s", secs(m.provision_package_fetch.p99())),
+        ("provision_model_load_p50_s", secs(m.provision_model_load.p50())),
+        ("provision_model_load_p99_s", secs(m.provision_model_load.p99())),
+        ("provision_restore_p50_s", secs(m.provision_restore.p50())),
+        ("provision_restore_p99_s", secs(m.provision_restore.p99())),
         ("predict_mean_s", Json::Num(predict.mean() / NS)),
         ("predict_p50_s", secs(predict.p50())),
         ("predict_p99_s", secs(predict.p99())),
@@ -81,6 +102,20 @@ fn zero_shard_fields() -> Vec<(&'static str, Json)> {
     ZERO.get_or_init(|| shard_fields(&FnMetrics::default())).clone()
 }
 
+/// Snapshot-store gauges, served identically on both stats routes
+/// (the store is a platform-wide resource shared by every function of
+/// the same deployment shape, like the dispatcher's totals).
+fn snapshot_fields(p: &Platform) -> [(&'static str, Json); 5] {
+    let s = &p.snapshots;
+    [
+        ("snapshot_hits", Json::Num(s.hits() as f64)),
+        ("snapshot_misses", Json::Num(s.misses() as f64)),
+        ("snapshot_captures", Json::Num(s.captures() as f64)),
+        ("snapshot_evictions", Json::Num(s.evictions() as f64)),
+        ("snapshot_bytes", Json::Num(s.bytes() as f64)),
+    ]
+}
+
 /// `GET /v2/functions/:name/stats`.
 pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
     let name = params.require("name");
@@ -96,6 +131,7 @@ pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Resp
     fields.push(("warm_containers", Json::Num(ctx.platform.pool.warm_count(name) as f64)));
     // Live dispatcher saturation for this function.
     fields.push(("queue_depth", Json::Num(ctx.platform.dispatcher.queue_depth(name) as f64)));
+    fields.extend(snapshot_fields(&ctx.platform));
     Responder::json(200, obj(fields).to_string())
 }
 
@@ -110,6 +146,9 @@ pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Res
         // kept separate so pre-warming does not inflate the
         // request-visible cold-start rate.
         ("cold_provisions", Json::Num(p.scaler.cold_provision_count() as f64)),
+        // Demand provisions served from a snapshot restore — the
+        // keep-warm-vs-snapshot-vs-pure-cold ablation's third column.
+        ("restored_provisions", Json::Num(p.scaler.restored_provision_count() as f64)),
         ("prewarm_provisions", Json::Num(p.scaler.prewarm_provision_count() as f64)),
         ("functions", Json::Num(p.registry.list().len() as f64)),
         ("containers_alive", Json::Num(p.pool.total_alive() as f64)),
@@ -131,5 +170,9 @@ pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Res
         ("async_queued", Json::Num(ctx.async_inv.queued() as f64)),
         ("async_results_stored", Json::Num(ctx.async_inv.stored() as f64)),
     ]);
+    fields.extend(snapshot_fields(p));
+    // Redeploy/undeploy invalidations, platform route only (a store
+    // lifecycle detail, not a per-function signal).
+    fields.push(("snapshot_stale", Json::Num(p.snapshots.stale() as f64)));
     Responder::json(200, obj(fields).to_string())
 }

@@ -63,6 +63,9 @@ pub struct DeploySpec {
     /// Micro-batching override: collection window in ms
     /// (`platform.batch_window_ms` applies when unset).
     pub batch_window_ms: Option<u64>,
+    /// Snapshot/restore override (`platform.snapshot.enabled` applies
+    /// when unset).
+    pub snapshot: Option<bool>,
 }
 
 impl DeploySpec {
@@ -109,11 +112,16 @@ impl DeploySpec {
         self.batch_window_ms = Some(window_ms);
         self
     }
+
+    pub fn snapshot(mut self, enabled: bool) -> Self {
+        self.snapshot = Some(enabled);
+        self
+    }
 }
 
-/// Partial update for `PATCH /v2/functions/:name`. `max_concurrency`,
-/// `queue_capacity`, and `queue_deadline_ms` are doubly optional:
-/// `Some(None)` clears the cap/override (JSON `null`).
+/// Partial update for `PATCH /v2/functions/:name`. Everything after
+/// `min_warm` is doubly optional: `Some(None)` clears the
+/// cap/override back to the platform default (JSON `null`).
 #[derive(Debug, Clone, Default)]
 pub struct ReconfigureSpec {
     pub memory_mb: Option<u32>,
@@ -124,6 +132,7 @@ pub struct ReconfigureSpec {
     pub queue_deadline_ms: Option<Option<u64>>,
     pub max_batch_size: Option<Option<usize>>,
     pub batch_window_ms: Option<Option<u64>>,
+    pub snapshot: Option<Option<bool>>,
 }
 
 /// One deployed function, as reported by the API.
@@ -141,6 +150,8 @@ pub struct FunctionInfo {
     /// Micro-batching overrides; `None` = platform default applies.
     pub max_batch_size: Option<usize>,
     pub batch_window_ms: Option<u64>,
+    /// Snapshot/restore override; `None` = platform default applies.
+    pub snapshot: Option<bool>,
     pub warm_containers: usize,
 }
 
@@ -192,6 +203,8 @@ pub struct FunctionStats {
     pub function: String,
     pub invocations: u64,
     pub cold_starts: u64,
+    /// Snapshot-restored provisions (the third start kind).
+    pub restored_starts: u64,
     pub warm_starts: u64,
     /// 429s observed for this function (per-function concurrency cap).
     pub throttled: u64,
@@ -229,6 +242,31 @@ pub struct FunctionStats {
     pub response_warm_p50_s: f64,
     pub response_warm_p95_s: f64,
     pub response_warm_p99_s: f64,
+    /// Snapshot-restored-only response percentiles (the middle mode).
+    pub response_restored_p50_s: f64,
+    pub response_restored_p95_s: f64,
+    pub response_restored_p99_s: f64,
+    /// Per-component provision-cost percentiles: each fed by the
+    /// requests that paid the component (sandbox by cold + restored,
+    /// the runtime-init/package-fetch/model-load trio by full cold
+    /// starts, restore by restored starts).
+    pub provision_sandbox_p50_s: f64,
+    pub provision_sandbox_p99_s: f64,
+    pub provision_runtime_init_p50_s: f64,
+    pub provision_runtime_init_p99_s: f64,
+    pub provision_package_fetch_p50_s: f64,
+    pub provision_package_fetch_p99_s: f64,
+    pub provision_model_load_p50_s: f64,
+    pub provision_model_load_p99_s: f64,
+    pub provision_restore_p50_s: f64,
+    pub provision_restore_p99_s: f64,
+    /// Snapshot-store gauges (platform-wide; repeated here so the
+    /// restore win is inspectable from a single function's route).
+    pub snapshot_hits: u64,
+    pub snapshot_misses: u64,
+    pub snapshot_captures: u64,
+    pub snapshot_evictions: u64,
+    pub snapshot_bytes: u64,
     pub predict_mean_s: f64,
     pub predict_p50_s: f64,
     pub predict_p99_s: f64,
@@ -245,6 +283,8 @@ pub struct FunctionStats {
 pub struct PlatformStats {
     pub invocations: u64,
     pub cold_starts: u64,
+    /// Snapshot-restored provisions observed platform-wide.
+    pub restored_starts: u64,
     pub warm_starts: u64,
     pub throttled: u64,
     /// Requests refused with 503 (queue full + deadline expired).
@@ -260,7 +300,18 @@ pub struct PlatformStats {
     pub largest_batch: u64,
     pub batched_requests: u64,
     pub cold_provisions: u64,
+    /// Demand provisions served from a snapshot restore.
+    pub restored_provisions: u64,
     pub prewarm_provisions: u64,
+    /// Snapshot-store totals: lookups that hit/missed, snapshots
+    /// stored, LRU evictions, live stored bytes, and entries dropped
+    /// by redeploy/undeploy invalidation.
+    pub snapshot_hits: u64,
+    pub snapshot_misses: u64,
+    pub snapshot_captures: u64,
+    pub snapshot_evictions: u64,
+    pub snapshot_bytes: u64,
+    pub snapshot_stale: u64,
     pub functions: u64,
     pub containers_alive: u64,
     pub in_flight: u64,
@@ -357,6 +408,9 @@ impl ApiClient {
         if let Some(w) = spec.batch_window_ms {
             fields.push(("batch_window_ms", Json::Num(w as f64)));
         }
+        if let Some(s) = spec.snapshot {
+            fields.push(("snapshot", Json::Bool(s)));
+        }
         let (_, json) = self.call("POST", "/v2/functions", Some(&obj(fields)))?;
         Ok(parse_function(&json))
     }
@@ -430,6 +484,15 @@ impl ApiClient {
                 "batch_window_ms",
                 match w {
                     Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ));
+        }
+        if let Some(s) = patch.snapshot {
+            fields.push((
+                "snapshot",
+                match s {
+                    Some(b) => Json::Bool(b),
                     None => Json::Null,
                 },
             ));
@@ -528,6 +591,7 @@ impl ApiClient {
             function: str_field(&json, "function"),
             invocations: u64_field(&json, "invocations"),
             cold_starts: u64_field(&json, "cold_starts"),
+            restored_starts: u64_field(&json, "restored_starts"),
             warm_starts: u64_field(&json, "warm_starts"),
             throttled: u64_field(&json, "throttled"),
             queue_expired: u64_field(&json, "queue_expired"),
@@ -553,6 +617,24 @@ impl ApiClient {
             response_warm_p50_s: num_field(&json, "response_warm_p50_s"),
             response_warm_p95_s: num_field(&json, "response_warm_p95_s"),
             response_warm_p99_s: num_field(&json, "response_warm_p99_s"),
+            response_restored_p50_s: num_field(&json, "response_restored_p50_s"),
+            response_restored_p95_s: num_field(&json, "response_restored_p95_s"),
+            response_restored_p99_s: num_field(&json, "response_restored_p99_s"),
+            provision_sandbox_p50_s: num_field(&json, "provision_sandbox_p50_s"),
+            provision_sandbox_p99_s: num_field(&json, "provision_sandbox_p99_s"),
+            provision_runtime_init_p50_s: num_field(&json, "provision_runtime_init_p50_s"),
+            provision_runtime_init_p99_s: num_field(&json, "provision_runtime_init_p99_s"),
+            provision_package_fetch_p50_s: num_field(&json, "provision_package_fetch_p50_s"),
+            provision_package_fetch_p99_s: num_field(&json, "provision_package_fetch_p99_s"),
+            provision_model_load_p50_s: num_field(&json, "provision_model_load_p50_s"),
+            provision_model_load_p99_s: num_field(&json, "provision_model_load_p99_s"),
+            provision_restore_p50_s: num_field(&json, "provision_restore_p50_s"),
+            provision_restore_p99_s: num_field(&json, "provision_restore_p99_s"),
+            snapshot_hits: u64_field(&json, "snapshot_hits"),
+            snapshot_misses: u64_field(&json, "snapshot_misses"),
+            snapshot_captures: u64_field(&json, "snapshot_captures"),
+            snapshot_evictions: u64_field(&json, "snapshot_evictions"),
+            snapshot_bytes: u64_field(&json, "snapshot_bytes"),
             predict_mean_s: num_field(&json, "predict_mean_s"),
             predict_p50_s: num_field(&json, "predict_p50_s"),
             predict_p99_s: num_field(&json, "predict_p99_s"),
@@ -569,6 +651,7 @@ impl ApiClient {
         Ok(PlatformStats {
             invocations: u64_field(&json, "invocations"),
             cold_starts: u64_field(&json, "cold_starts"),
+            restored_starts: u64_field(&json, "restored_starts"),
             warm_starts: u64_field(&json, "warm_starts"),
             throttled: u64_field(&json, "throttled"),
             saturated: u64_field(&json, "saturated"),
@@ -580,7 +663,14 @@ impl ApiClient {
             largest_batch: u64_field(&json, "largest_batch"),
             batched_requests: u64_field(&json, "batched_requests"),
             cold_provisions: u64_field(&json, "cold_provisions"),
+            restored_provisions: u64_field(&json, "restored_provisions"),
             prewarm_provisions: u64_field(&json, "prewarm_provisions"),
+            snapshot_hits: u64_field(&json, "snapshot_hits"),
+            snapshot_misses: u64_field(&json, "snapshot_misses"),
+            snapshot_captures: u64_field(&json, "snapshot_captures"),
+            snapshot_evictions: u64_field(&json, "snapshot_evictions"),
+            snapshot_bytes: u64_field(&json, "snapshot_bytes"),
+            snapshot_stale: u64_field(&json, "snapshot_stale"),
             functions: u64_field(&json, "functions"),
             containers_alive: u64_field(&json, "containers_alive"),
             in_flight: u64_field(&json, "in_flight"),
@@ -620,6 +710,7 @@ fn parse_function(json: &Json) -> FunctionInfo {
         queue_deadline_ms: json.get("queue_deadline_ms").and_then(Json::as_u64),
         max_batch_size: json.get("max_batch_size").and_then(Json::as_u64).map(|v| v as usize),
         batch_window_ms: json.get("batch_window_ms").and_then(Json::as_u64),
+        snapshot: json.get("snapshot").and_then(Json::as_bool),
         warm_containers: u64_field(json, "warm_containers") as usize,
     }
 }

@@ -110,6 +110,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "micro-batching: default window a batch leader collects followers, milliseconds",
             None,
         )
+        .bool_flag(
+            "snapshot",
+            "enable snapshot/restore cold-start mitigation platform-wide (overrides config)",
+        )
+        .bool_flag("no-snapshot", "disable snapshot/restore platform-wide (overrides config)")
         .flag(
             "deploy",
             "comma list of name:model:mem to deploy at boot, e.g. sq:squeezenet:1024",
@@ -136,8 +141,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(v) = args.get_u64("batch-window-ms")? {
         config.batch_window_ms = v;
     }
+    if args.get_bool("snapshot") && args.get_bool("no-snapshot") {
+        bail!("--snapshot and --no-snapshot are mutually exclusive");
+    }
+    if args.get_bool("snapshot") {
+        config.snapshot.enabled = true;
+    }
+    if args.get_bool("no-snapshot") {
+        config.snapshot.enabled = false;
+    }
     // Same rules as the TOML path (maintainer range, deadline cap,
-    // batch-size floor).
+    // batch-size floor, restore bandwidth).
     config.validate()?;
     let shards = args.get_u64("shards")?.unwrap_or(2) as usize;
     let engine = build_engine(args.get_or("engine", "pjrt"), &config, shards)?;
@@ -161,6 +175,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         (platform.config().queue_capacity, platform.config().queue_deadline_ms);
     let (max_batch_size, batch_window_ms) =
         (platform.config().max_batch_size, platform.config().batch_window_ms);
+    let snapshot_cfg = platform.config().snapshot.clone();
     let gw = Gateway::bind(args.get_or("addr", "127.0.0.1:8080"), threads, platform)?;
     println!("lambdaserve gateway listening on http://{}", gw.local_addr());
     if interval > 0.0 {
@@ -184,6 +199,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     } else {
         println!("  micro-batching: off (max_batch_size 1; enable per function or via config)");
     }
+    if snapshot_cfg.enabled {
+        println!(
+            "  snapshots: cold provisions restore from checkpoints ({} MB store, \
+             {:.0} MB/s restore, capture {:?})",
+            snapshot_cfg.capacity_bytes >> 20,
+            snapshot_cfg.restore_bw / 1e6,
+            snapshot_cfg.capture_policy
+        );
+    } else {
+        println!("  snapshots: off (enable per function or with --snapshot)");
+    }
     println!("  v2: POST /v2/functions  POST /v2/functions/<fn>/invocations[?mode=async]");
     println!("  v1: GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
     println!("  reference: API.md");
@@ -203,6 +229,8 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         .flag("queue-deadline-ms", "per-function dispatch deadline override (ms)", None)
         .flag("max-batch-size", "per-function micro-batch size override (1 = off)", None)
         .flag("batch-window-ms", "per-function batch collection window override (ms)", None)
+        .bool_flag("snapshot", "force snapshot/restore ON for this function")
+        .bool_flag("no-snapshot", "force snapshot/restore OFF for this function")
         .flag("config", "platform config TOML", None)
         .flag("engine", "pjrt | mock", Some("mock"));
     if argv.iter().any(|a| a == "--help") {
@@ -232,11 +260,20 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         if let Some(w) = args.get_u64("batch-window-ms")? {
             spec = spec.batch_window_ms(w);
         }
+        if args.get_bool("snapshot") && args.get_bool("no-snapshot") {
+            bail!("--snapshot and --no-snapshot are mutually exclusive");
+        }
+        if args.get_bool("snapshot") {
+            spec = spec.snapshot(true);
+        }
+        if args.get_bool("no-snapshot") {
+            spec = spec.snapshot(false);
+        }
         let f = api.deploy(&spec)?;
         println!(
             "deployed {} -> {} ({}) @ {} MB (min_warm={}, max_concurrency={}, \
              queue_capacity={}, queue_deadline_ms={}, max_batch_size={}, \
-             batch_window_ms={}, warm={})",
+             batch_window_ms={}, snapshot={}, warm={})",
             f.name,
             f.model,
             f.variant,
@@ -247,6 +284,7 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
             f.queue_deadline_ms.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.max_batch_size.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.batch_window_ms.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
+            f.snapshot.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.warm_containers
         );
         return Ok(());
@@ -394,10 +432,10 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
     for name in names {
         let s = api.stats(&name)?;
         println!(
-            "{}: {} invocations ({} cold / {} warm, {} throttled, {} queue-expired), \
-             warm_containers={} queue_depth={}",
-            s.function, s.invocations, s.cold_starts, s.warm_starts, s.throttled,
-            s.queue_expired, s.warm_containers, s.queue_depth
+            "{}: {} invocations ({} cold / {} restored / {} warm, {} throttled, \
+             {} queue-expired), warm_containers={} queue_depth={}",
+            s.function, s.invocations, s.cold_starts, s.restored_starts, s.warm_starts,
+            s.throttled, s.queue_expired, s.warm_containers, s.queue_depth
         );
         println!(
             "  response mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s predict mean={:.3}s",
@@ -425,6 +463,21 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
             s.response_cold_p50_s, s.response_cold_p99_s, s.response_warm_p50_s,
             s.response_warm_p99_s
         );
+        if s.restored_starts > 0 || s.snapshot_captures > 0 {
+            println!(
+                "  snapshots: {} restored (p50={:.3}s p99={:.3}s, restore p99={:.3}s), \
+                 {} hits / {} misses, {} captured, {} evicted, {:.1} MB stored",
+                s.restored_starts,
+                s.response_restored_p50_s,
+                s.response_restored_p99_s,
+                s.provision_restore_p99_s,
+                s.snapshot_hits,
+                s.snapshot_misses,
+                s.snapshot_captures,
+                s.snapshot_evictions,
+                s.snapshot_bytes as f64 / 1e6
+            );
+        }
         println!(
             "  billed={}ms cost=${:.8} gb_seconds={:.4}",
             s.billed_ms_total, s.cost_dollars_total, s.gb_seconds_total

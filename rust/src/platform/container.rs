@@ -11,7 +11,7 @@ use super::metrics::StartKind;
 use super::registry::FunctionSpec;
 use super::throttle::CpuGovernor;
 use crate::configparse::BootstrapConfig;
-use crate::runtime::{Engine, InstanceHandle, Prediction};
+use crate::runtime::{Engine, InstanceHandle, Prediction, SnapshotBlob};
 use crate::util::{Clock, SplitMix64};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,7 +30,7 @@ pub enum ContainerState {
     Reaped,
 }
 
-/// Cost breakdown of a cold provision.
+/// Cost breakdown of a cold (or snapshot-restored) provision.
 #[derive(Debug, Clone, Default)]
 pub struct ProvisionCost {
     pub sandbox: Duration,
@@ -38,20 +38,27 @@ pub struct ProvisionCost {
     pub package_fetch: Duration,
     /// Effective (CPU-scaled) model compile + weight materialization.
     pub model_load: Duration,
+    /// Effective snapshot restore — blob fetch (I/O-scaled by the
+    /// CPU/memory share, like the package fetch) plus the engine's
+    /// weight re-upload (CPU-scaled, like the model load) — paid by a
+    /// snapshot-restored provision INSTEAD of the
+    /// `runtime_init`/`package_fetch`/`model_load` trio; zero on the
+    /// full cold path.
+    pub restore: Duration,
 }
 
 impl ProvisionCost {
     pub fn total(&self) -> Duration {
-        self.sandbox + self.runtime_init + self.package_fetch + self.model_load
+        self.sandbox + self.runtime_init + self.package_fetch + self.model_load + self.restore
     }
 
     /// The components attributed to a request of the given start
-    /// kind: the real costs for the (cold) request that provisioned
-    /// the container, all-zero for warm reuse — so record builders
-    /// copy fields instead of re-gating each one.
+    /// kind: the real costs for the (cold or restored) request that
+    /// provisioned the container, all-zero for warm reuse — so record
+    /// builders copy fields instead of re-gating each one.
     pub fn attributed_to(&self, start: StartKind) -> ProvisionCost {
         match start {
-            StartKind::Cold => self.clone(),
+            StartKind::Cold | StartKind::Restored => self.clone(),
             StartKind::Warm => ProvisionCost::default(),
         }
     }
@@ -59,7 +66,7 @@ impl ProvisionCost {
     /// The provision components that ran INSIDE the handler — billed
     /// in 2017-era Lambda (the platform-side sandbox is not).
     pub fn handler_time(&self) -> Duration {
-        self.runtime_init + self.package_fetch + self.model_load
+        self.runtime_init + self.package_fetch + self.model_load + self.restore
     }
 }
 
@@ -74,6 +81,9 @@ pub struct Container {
     /// Requests served by this container.
     pub served: u64,
     pub provision_cost: ProvisionCost,
+    /// How this container came to exist: [`StartKind::Cold`] (full
+    /// provision) or [`StartKind::Restored`] (from a snapshot).
+    origin: StartKind,
 }
 
 impl Container {
@@ -133,12 +143,90 @@ impl Container {
             state: ContainerState::Busy,
             last_used: clock.now(),
             served: 0,
-            provision_cost: ProvisionCost { sandbox, runtime_init, package_fetch, model_load },
+            provision_cost: ProvisionCost {
+                sandbox,
+                runtime_init,
+                package_fetch,
+                model_load,
+                restore: Duration::ZERO,
+            },
+            origin: StartKind::Cold,
+        })
+    }
+
+    /// Provision a container from an instance snapshot: simulate the
+    /// sandbox (a restore still needs one to restore INTO), fetch the
+    /// blob (I/O-bound, scaled by the CPU/memory share exactly like
+    /// the package fetch it replaces), and run the engine's restore —
+    /// no language-runtime init, no package fetch, no compile, no init
+    /// execution. This is the saving the checkpoint/restore literature
+    /// promises; everything skipped shows up as zeros in the cost.
+    #[allow(clippy::too_many_arguments)]
+    pub fn provision_from_snapshot(
+        spec: Arc<FunctionSpec>,
+        engine: Arc<dyn Engine>,
+        governor: &CpuGovernor,
+        bootstrap: &BootstrapConfig,
+        restore_bw: f64,
+        blob: &SnapshotBlob,
+        clock: &Arc<dyn Clock>,
+        rng: &mut SplitMix64,
+    ) -> Result<Self> {
+        let mem = spec.memory_mb;
+        let share = governor.share(mem);
+
+        // 1. Sandbox provisioning: platform-side, memory-independent —
+        //    unchanged from the cold path.
+        let sandbox = if bootstrap.simulate_delays {
+            Duration::from_secs_f64(rng.lognormal(bootstrap.sandbox_median_s, bootstrap.sandbox_sigma))
+        } else {
+            Duration::ZERO
+        };
+        clock.sleep(sandbox);
+
+        // 2. Snapshot fetch: I/O-bound, share-scaled like package
+        //    fetch (simulated; the engine pays the real upload below).
+        let fetch = if bootstrap.simulate_delays {
+            Duration::from_secs_f64(blob.size_bytes as f64 / restore_bw / share)
+        } else {
+            Duration::ZERO
+        };
+        clock.sleep(fetch);
+
+        // 3. REAL engine restore: weight upload from the blob, compile
+        //    skipped via the capturing shard's cache. Measured wall
+        //    time, scaled into effective time like the model load.
+        let t0 = Instant::now();
+        let (handle, stats) = engine.restore_instance(&spec.model, &spec.variant, blob)?;
+        let real = t0.elapsed();
+        let upload = governor.throttle(stats.compile + stats.init_run, real, mem);
+
+        Ok(Self {
+            id: NEXT_CONTAINER_ID.fetch_add(1, Ordering::Relaxed),
+            spec,
+            handle,
+            engine,
+            state: ContainerState::Busy,
+            last_used: clock.now(),
+            served: 0,
+            provision_cost: ProvisionCost {
+                sandbox,
+                runtime_init: Duration::ZERO,
+                package_fetch: Duration::ZERO,
+                model_load: Duration::ZERO,
+                restore: fetch + upload,
+            },
+            origin: StartKind::Restored,
         })
     }
 
     pub fn state(&self) -> ContainerState {
         self.state
+    }
+
+    /// The engine instance this container runs (snapshot capture).
+    pub fn handle(&self) -> &InstanceHandle {
+        &self.handle
     }
 
     /// Execute one prediction under the CPU governor; returns the raw
@@ -205,9 +293,11 @@ impl Container {
         }
     }
 
-    /// Cold-start kind for the request that provisioned this container.
+    /// Start kind for the request that provisioned this container:
+    /// [`StartKind::Cold`] for a full provision, [`StartKind::Restored`]
+    /// for a snapshot restore.
     pub fn start_kind_for_first_use(&self) -> StartKind {
-        StartKind::Cold
+        self.origin
     }
 }
 
@@ -260,6 +350,61 @@ mod tests {
         assert_eq!(c.provision_cost.sandbox, Duration::ZERO);
         assert_eq!(c.provision_cost.runtime_init, Duration::ZERO);
         assert!(c.provision_cost.model_load > Duration::ZERO, "real work still counted");
+    }
+
+    #[test]
+    fn provision_from_snapshot_pays_sandbox_plus_restore_only() {
+        use crate::runtime::MOCK_RESTORE_BW;
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(1);
+        let cfg = BootstrapConfig::default();
+        // Capture a blob from a cold-provisioned container.
+        let cold = Container::provision(
+            spec.clone(), engine.clone(), &gov, &cfg, &clock, &mut rng,
+        )
+        .unwrap();
+        assert_eq!(cold.start_kind_for_first_use(), StartKind::Cold);
+        let blob = engine.snapshot_instance(cold.handle()).unwrap();
+
+        const RESTORE_BW: f64 = 200e6;
+        let t0 = clock.now();
+        let c = Container::provision_from_snapshot(
+            spec, engine.clone(), &gov, &cfg, RESTORE_BW, &blob, &clock, &mut rng,
+        )
+        .unwrap();
+        assert_eq!(c.start_kind_for_first_use(), StartKind::Restored);
+        let pc = &c.provision_cost;
+        assert!(pc.sandbox > Duration::ZERO, "a restore still needs a sandbox");
+        assert_eq!(pc.runtime_init, Duration::ZERO, "runtime state rides the snapshot");
+        assert_eq!(pc.package_fetch, Duration::ZERO, "the blob replaces the package");
+        assert_eq!(pc.model_load, Duration::ZERO, "no compile, no init run");
+        // restore = blob fetch / share + engine upload / share, both
+        // scaled by the 896 MB half share.
+        let share = 0.5;
+        let expect = blob.size_bytes as f64 / RESTORE_BW / share
+            + blob.size_bytes as f64 / MOCK_RESTORE_BW / share;
+        assert!((pc.restore.as_secs_f64() - expect).abs() < 1e-9, "restore={:?}", pc.restore);
+        assert!(pc.total() < cold.provision_cost.total(), "strictly cheaper than cold");
+        // The platform clock advanced by sandbox + restore exactly.
+        assert_eq!(clock.now() - t0, (pc.sandbox + pc.restore).as_nanos() as u64);
+        assert_eq!(engine.live_instances(), 2);
+    }
+
+    #[test]
+    fn failed_restore_leaves_no_instance_but_spends_sandbox() {
+        let (spec, engine, gov, clock) = setup();
+        let mut rng = SplitMix64::new(2);
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let cold =
+            Container::provision(spec.clone(), engine.clone(), &gov, &cfg, &clock, &mut rng)
+                .unwrap();
+        let blob = engine.snapshot_instance(cold.handle()).unwrap();
+        engine.fail_restore.store(true, std::sync::atomic::Ordering::SeqCst);
+        let err = Container::provision_from_snapshot(
+            spec, engine.clone(), &gov, &cfg, 200e6, &blob, &clock, &mut rng,
+        );
+        assert!(err.is_err());
+        assert_eq!(engine.live_instances(), 1, "no half-created instance leaks");
     }
 
     #[test]

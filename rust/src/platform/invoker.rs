@@ -26,6 +26,7 @@ use super::metrics::{InvocationRecord, MetricsSink, StartKind};
 use super::pool::{AcquireOutcome, WarmPool};
 use super::registry::{FunctionPolicy, FunctionRegistry, FunctionSpec};
 use super::scaler::Scaler;
+use super::snapshots::{SnapshotKey, SnapshotStore};
 use super::throttle::CpuGovernor;
 use crate::configparse::PlatformConfig;
 use crate::runtime::{Engine, Prediction};
@@ -98,6 +99,10 @@ pub struct Invoker {
     pub scaler: Scaler,
     pub billing: BillingMeter,
     pub metrics: MetricsSink,
+    /// Snapshot/checkpoint-restore store: every cold provision
+    /// (demand and prewarm/maintainer) goes through it; disabled by
+    /// default (`platform.snapshot.enabled` / per-function override).
+    pub snapshots: Arc<SnapshotStore>,
     governor: CpuGovernor,
     engine: Arc<dyn Engine>,
     config: PlatformConfig,
@@ -124,6 +129,7 @@ pub struct ReconfigurePatch {
     pub queue_deadline_ms: Option<Option<u64>>,
     pub max_batch_size: Option<Option<usize>>,
     pub batch_window_ms: Option<Option<u64>>,
+    pub snapshot: Option<Option<bool>>,
 }
 
 /// RAII decrement for one function's in-flight counter. The release
@@ -189,6 +195,7 @@ impl Invoker {
             billing: BillingMeter::new(config.pricing.clone()),
             metrics: MetricsSink::with_capacity(config.metrics_ring_capacity),
             governor: CpuGovernor::new(config.full_power_mem_mb, clock.clone()),
+            snapshots: Arc::new(SnapshotStore::new(config.snapshot.clone())),
             engine,
             rng: Mutex::new(SplitMix64::new(config.seed)),
             config,
@@ -293,15 +300,33 @@ impl Invoker {
     }
 
     /// Remove a function: drop the registration, its metrics shard
-    /// (platform totals keep the history), and reap its warm
+    /// (platform totals keep the history), its shape's snapshot when
+    /// it was the shape's last user (the checkpoint must not outlive
+    /// every deployment that could have seeded it), and reap its warm
     /// containers. Returns the number of containers reaped. In-flight
     /// invocations complete; their containers age out via keep-alive.
     pub fn undeploy(&self, name: &str) -> Result<usize> {
+        let Ok(spec) = self.registry.get(name) else {
+            bail!("function {name:?} is not deployed");
+        };
         if !self.registry.remove(name) {
             bail!("function {name:?} is not deployed");
         }
         self.metrics.remove_function(name);
+        self.invalidate_snapshot_if_shape_unused(&SnapshotKey::of(&spec));
         Ok(self.pool.evict_function(name))
+    }
+
+    /// Invalidate `key`'s snapshot unless another deployed function
+    /// still embodies the same shape: snapshots are shared per shape
+    /// (model + variant + memory), so one function's lifecycle event
+    /// must not drop a checkpoint its siblings are actively restoring
+    /// from — the blob is function-agnostic and stays valid for them.
+    fn invalidate_snapshot_if_shape_unused(&self, key: &SnapshotKey) {
+        let still_used = self.registry.list().iter().any(|s| SnapshotKey::of(s) == *key);
+        if !still_used {
+            self.snapshots.invalidate(key);
+        }
     }
 
     /// Apply a partial spec update. Warm containers are evicted only
@@ -324,10 +349,15 @@ impl Invoker {
                 queue_deadline_ms: patch.queue_deadline_ms.unwrap_or(cur.queue_deadline_ms),
                 max_batch_size: patch.max_batch_size.unwrap_or(cur.max_batch_size),
                 batch_window_ms: patch.batch_window_ms.unwrap_or(cur.batch_window_ms),
+                snapshot: patch.snapshot.unwrap_or(cur.snapshot),
             },
         )?;
         if spec.memory_mb != cur.memory_mb || spec.variant != cur.variant {
             self.pool.evict_function(name);
+            // A redeploy that changes what a container embodies also
+            // obsoletes the old shape's checkpoint — unless a sibling
+            // deployment still uses that shape.
+            self.invalidate_snapshot_if_shape_unused(&SnapshotKey::of(&cur));
         }
         self.top_up_warm_pool(&spec);
         Ok(spec)
@@ -343,6 +373,7 @@ impl Invoker {
             &self.engine,
             &self.governor,
             &self.config.bootstrap,
+            &self.snapshots,
             &self.clock,
             &self.rng,
         )
@@ -501,11 +532,17 @@ impl Invoker {
                             &self.engine,
                             &self.governor,
                             &self.config.bootstrap,
+                            &self.snapshots,
                             &self.clock,
                             &self.rng,
                         );
                         match provisioned {
-                            Ok(c) => (c, StartKind::Cold, wait, flight),
+                            // Cold, or Restored when the snapshot
+                            // store served the provision.
+                            Ok(c) => {
+                                let start = c.start_kind_for_first_use();
+                                (c, start, wait, flight)
+                            }
                             Err(e) => return Err(InvokeError::Failed(e)),
                         }
                     }
@@ -567,6 +604,7 @@ impl Invoker {
             runtime_init: pc.runtime_init,
             package_fetch: pc.package_fetch,
             model_load: pc.model_load,
+            restore: pc.restore,
             predict: effective_predict,
             predict_full_speed: prediction.compute,
             batch_size: 1,
@@ -667,6 +705,7 @@ impl Invoker {
             runtime_init: pc.runtime_init,
             package_fetch: pc.package_fetch,
             model_load: pc.model_load,
+            restore: pc.restore,
             predict: share.effective,
             predict_full_speed: share.prediction.compute,
             batch_size: share.batch_size,
@@ -710,6 +749,7 @@ impl Invoker {
             runtime_init: Duration::ZERO,
             package_fetch: Duration::ZERO,
             model_load: Duration::ZERO,
+            restore: Duration::ZERO,
             predict: share.effective,
             predict_full_speed: share.prediction.compute,
             batch_size: share.batch_size,
@@ -1333,6 +1373,240 @@ mod tests {
         assert_eq!(m.batched_requests, MEMBERS);
         assert_eq!(m.batch_size.max(), MEMBERS);
         assert_eq!(p.batcher.largest_batch(), MEMBERS);
+    }
+
+    fn snapshot_platform() -> (Arc<Invoker>, Arc<ManualClock>, Arc<MockEngine>) {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            snapshot: crate::configparse::SnapshotConfig {
+                enabled: true,
+                capture_policy: crate::configparse::CapturePolicy::Sync,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let p = Arc::new(Invoker::new(cfg, engine.clone(), clock.clone()));
+        (p, clock, engine)
+    }
+
+    /// Acceptance: on a ManualClock, a snapshot-restored provision is
+    /// strictly cheaper than the full cold one — no runtime-init, no
+    /// package-fetch, no compile/model-load, a restore component that
+    /// scales with `weight_bytes / restore_bw` — and the restored
+    /// container classifies identically to the cold one on the same
+    /// seeds.
+    #[test]
+    fn snapshot_restore_beats_full_cold_with_identical_predictions() {
+        let (p, _, engine) = snapshot_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+
+        let cold = p.invoke("sq", 1).unwrap();
+        assert_eq!(cold.record.start, StartKind::Cold);
+        assert_eq!(p.snapshots.captures(), 1, "sync capture after the first cold");
+        assert_eq!(p.snapshots.misses(), 1);
+
+        // Force the next provision to miss the warm pool.
+        p.evict_all();
+        let rest = p.invoke("sq", 2).unwrap();
+        let r = &rest.record;
+        assert_eq!(r.start, StartKind::Restored);
+        assert_eq!(r.runtime_init, Duration::ZERO, "runtime state rode the snapshot");
+        assert_eq!(r.package_fetch, Duration::ZERO, "blob fetch replaced the package");
+        assert_eq!(r.model_load, Duration::ZERO, "no compile, no init run");
+        assert!(r.restore > Duration::ZERO);
+        // restore = bytes/restore_bw/share (simulated fetch) +
+        // bytes/MOCK_RESTORE_BW/share (engine upload).
+        let bytes = engine.manifest("squeezenet").unwrap().param_bytes as f64;
+        let share = 1024.0 / 1792.0;
+        let expect = bytes / p.config().snapshot.restore_bw / share
+            + bytes / crate::runtime::MOCK_RESTORE_BW / share;
+        assert!(
+            (r.restore.as_secs_f64() - expect).abs() < 1e-9,
+            "restore={:?} expect={expect}",
+            r.restore
+        );
+        assert!(
+            r.cold_overhead() < cold.record.cold_overhead(),
+            "restored {:?} vs cold {:?}",
+            r.cold_overhead(),
+            cold.record.cold_overhead()
+        );
+        assert!(r.billed < cold.record.billed, "cheaper handler time bills less");
+        assert_eq!(p.snapshots.hits(), 1);
+        assert_eq!(p.scaler.cold_provision_count(), 1);
+        assert_eq!(p.scaler.restored_provision_count(), 1);
+
+        // Same seeds, same classifications as a snapshot-free platform.
+        let (off, _, _) = platform();
+        off.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        for seed in [2u64, 3, 4] {
+            let a = p.invoke("sq", seed).unwrap().prediction;
+            let b = off.invoke("sq", seed).unwrap().prediction;
+            assert_eq!(a.top1, b.top1, "seed {seed}");
+            assert_eq!(a.top_prob, b.top_prob);
+            assert_eq!(a.compute, b.compute);
+        }
+
+        // The metrics shard streams the third mode + its components.
+        let m = p.metrics.function_metrics("sq");
+        assert_eq!(m.restored_starts, 1);
+        assert_eq!(m.response_restored.count(), 1);
+        assert_eq!(m.provision_restore.count(), 1);
+        assert_eq!(m.provision_model_load.count(), 1, "only the real cold start");
+        assert!(m.response_restored.p50() < m.response_cold.p50());
+    }
+
+    /// Satellite regression: `Engine::live_instances` returns to zero
+    /// after undeploy + keep-alive sweep across every eviction path —
+    /// including a failed restore mid-provision, which must fall back
+    /// to the full cold path (request served, not errored) without
+    /// leaking a half-created instance.
+    #[test]
+    fn engine_leak_free_across_eviction_paths_including_failed_restore() {
+        let (p, clock, engine) = snapshot_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+
+        // Seed the snapshot, then break restores.
+        assert_eq!(p.invoke("sq", 1).unwrap().record.start, StartKind::Cold);
+        p.evict_all();
+        assert_eq!(engine.live_instances(), 0, "evict_all reaps");
+        engine.fail_restore.store(true, std::sync::atomic::Ordering::SeqCst);
+        let out = p.invoke("sq", 2).unwrap();
+        assert_eq!(out.record.start, StartKind::Cold, "failed restore falls back, not errors");
+        assert_eq!(p.snapshots.restore_failures(), 1);
+        engine.fail_restore.store(false, std::sync::atomic::Ordering::SeqCst);
+
+        // A successful restore path, then keep-alive expiry.
+        p.evict_all();
+        assert_eq!(p.invoke("sq", 3).unwrap().record.start, StartKind::Restored);
+        clock.sleep(Duration::from_secs(601));
+        assert_eq!(p.sweep(), 1, "keep-alive sweep reaps the restored container");
+        assert_eq!(engine.live_instances(), 0);
+
+        // Reconfigure-eviction path: the restored-then-parked container
+        // and the old shape's snapshot both go.
+        assert_eq!(p.invoke("sq", 4).unwrap().record.start, StartKind::Restored);
+        p.reconfigure("sq", &ReconfigurePatch { memory_mb: Some(1536), ..Default::default() })
+            .unwrap();
+        assert_eq!(p.pool.warm_count("sq"), 0);
+        assert_eq!(engine.live_instances(), 0);
+        assert_eq!(p.snapshots.stale(), 1, "old 1024 MB shape invalidated");
+
+        // ...and undeploy drops the current shape's snapshot and reaps.
+        assert_eq!(p.invoke("sq", 5).unwrap().record.start, StartKind::Cold);
+        assert_eq!(p.snapshots.len(), 1, "the fresh 1536 MB shape is stored");
+        p.undeploy("sq").unwrap();
+        assert_eq!(p.pool.total_alive(), 0);
+        assert_eq!(engine.live_instances(), 0, "no instance outlives its deployment");
+        assert_eq!(p.snapshots.len(), 0, "undeployed shape's snapshot invalidated");
+        assert_eq!(p.snapshots.stale(), 2);
+    }
+
+    /// Reconfiguring memory/variant obsoletes the OLD shape's
+    /// snapshot; policy-only patches keep it.
+    #[test]
+    fn reconfigure_invalidates_old_shape_snapshot() {
+        let (p, _, _) = snapshot_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        assert_eq!(p.snapshots.len(), 1);
+        // Cap-only patch: snapshot survives.
+        p.reconfigure(
+            "sq",
+            &ReconfigurePatch { max_concurrency: Some(Some(4)), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(p.snapshots.len(), 1);
+        assert_eq!(p.snapshots.stale(), 0);
+        // Memory change: old shape invalidated.
+        p.reconfigure("sq", &ReconfigurePatch { memory_mb: Some(1536), ..Default::default() })
+            .unwrap();
+        assert_eq!(p.snapshots.len(), 0);
+        assert_eq!(p.snapshots.stale(), 1);
+        // The per-function override patches tri-state like the rest.
+        let off = ReconfigurePatch { snapshot: Some(Some(false)), ..Default::default() };
+        let spec = p.reconfigure("sq", &off).unwrap();
+        assert_eq!(spec.snapshot, Some(false));
+        assert_eq!(p.invoke("sq", 2).unwrap().record.start, StartKind::Cold);
+        assert!(p.snapshots.is_empty(), "snapshot=false override also skips captures");
+        p.evict_all();
+        assert_eq!(
+            p.invoke("sq", 3).unwrap().record.start,
+            StartKind::Cold,
+            "snapshot=false override wins over the enabled platform default"
+        );
+        let spec = p
+            .reconfigure("sq", &ReconfigurePatch { snapshot: Some(None), ..Default::default() })
+            .unwrap();
+        assert_eq!(spec.snapshot, None, "null clears back to the platform default");
+    }
+
+    /// Snapshots are shared per shape: one function's undeploy must
+    /// not drop the checkpoint a sibling with the same
+    /// model/variant/memory is restoring from — only the shape's LAST
+    /// user invalidates it.
+    #[test]
+    fn shared_shape_snapshot_survives_sibling_undeploy() {
+        let (p, _, _) = snapshot_platform();
+        p.deploy("f1", "squeezenet", "pallas", 1024).unwrap();
+        p.deploy("f2", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("f1", 1).unwrap(); // cold + capture of the shared shape
+        assert_eq!(p.snapshots.len(), 1);
+        // f2 restores from f1's checkpoint (shape-shared).
+        assert_eq!(p.invoke("f2", 1).unwrap().record.start, StartKind::Restored);
+        // f1 goes away: the shape still has a user — blob kept.
+        p.undeploy("f1").unwrap();
+        assert_eq!(p.snapshots.len(), 1, "sibling still uses the shape");
+        assert_eq!(p.snapshots.stale(), 0);
+        p.evict_all();
+        assert_eq!(p.invoke("f2", 2).unwrap().record.start, StartKind::Restored);
+        // The last user leaves: now the checkpoint goes too.
+        p.undeploy("f2").unwrap();
+        assert_eq!(p.snapshots.len(), 0);
+        assert_eq!(p.snapshots.stale(), 1);
+    }
+
+    /// Default-off contract: with `snapshot.enabled = false` and no
+    /// override, the snapshot machinery is never touched — the PR 4
+    /// pipeline bit-for-bit.
+    #[test]
+    fn snapshots_disabled_by_default_never_touch_the_store() {
+        let (p, clock, engine) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        clock.sleep(Duration::from_secs(601));
+        p.invoke("sq", 2).unwrap(); // a second cold start
+        p.prewarm("sq", 1).unwrap();
+        assert_eq!(p.snapshots.hits() + p.snapshots.misses() + p.snapshots.captures(), 0);
+        assert!(p.snapshots.is_empty());
+        assert_eq!(engine.snapshot_calls.load(std::sync::atomic::Ordering::SeqCst), 0);
+        assert_eq!(engine.restore_calls.load(std::sync::atomic::Ordering::SeqCst), 0);
+        assert_eq!(p.scaler.restored_provision_count(), 0);
+    }
+
+    /// The prewarm/maintainer path consults the store too: a top-up
+    /// after the first cold capture restores instead of full-colding.
+    #[test]
+    fn prewarm_path_restores_from_snapshot() {
+        let (p, _, engine) = snapshot_platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap(); // cold + sync capture
+        p.evict_all();
+        let n = p.prewarm("sq", 2).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(p.snapshots.hits(), 2, "both prewarms restored");
+        assert_eq!(
+            engine.restore_calls.load(std::sync::atomic::Ordering::SeqCst),
+            2,
+            "prewarm went through the restore path"
+        );
+        // Prewarm accounting is unchanged: operator-paid, not a
+        // request-visible cold start.
+        assert_eq!(p.scaler.prewarm_provision_count(), 2);
+        assert_eq!(p.scaler.cold_provision_count(), 1);
+        assert_eq!(p.scaler.restored_provision_count(), 0, "prewarms are not demand restores");
+        assert_eq!(p.invoke("sq", 2).unwrap().record.start, StartKind::Warm);
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub const DEFAULT_RING_CAPACITY: usize = 4096;
 pub enum StartKind {
     Cold,
     Warm,
+    /// Provisioned from a snapshot: a new container, but one that paid
+    /// sandbox + restore I/O instead of the full cold trio (runtime
+    /// init + package fetch + model load).
+    Restored,
 }
 
 impl std::fmt::Display for StartKind {
@@ -36,6 +40,7 @@ impl std::fmt::Display for StartKind {
         match self {
             StartKind::Cold => write!(f, "cold"),
             StartKind::Warm => write!(f, "warm"),
+            StartKind::Restored => write!(f, "restored"),
         }
     }
 }
@@ -58,6 +63,10 @@ pub struct InvocationRecord {
     /// Model compile + weight materialization (cold only; REAL work,
     /// CPU-scaled into effective time).
     pub model_load: Duration,
+    /// Snapshot restore — blob fetch (I/O-scaled) + weight re-upload
+    /// (CPU-scaled) — paid by restored provisions INSTEAD of
+    /// `runtime_init + package_fetch + model_load`; zero otherwise.
+    pub restore: Duration,
     /// Effective (CPU-share-scaled) forward-pass time — the paper's
     /// "prediction time". For a batched request this is the WHOLE
     /// batched pass (what the request actually waited for); the
@@ -91,14 +100,16 @@ impl InvocationRecord {
             + self.runtime_init
             + self.package_fetch
             + self.model_load
+            + self.restore
             + self.batch_wait
             + self.predict
     }
 
-    /// Total cold-start overhead (response minus what a warm start
-    /// would have cost).
+    /// Total provisioning overhead (response minus what a warm start
+    /// would have cost) — the full trio for a cold start, sandbox +
+    /// restore for a snapshot-restored one.
     pub fn cold_overhead(&self) -> Duration {
-        self.sandbox + self.runtime_init + self.package_fetch + self.model_load
+        self.sandbox + self.runtime_init + self.package_fetch + self.model_load + self.restore
     }
 
     /// GB-seconds consumed — the billing meter's own definition, so
@@ -115,6 +126,9 @@ impl InvocationRecord {
 pub struct FnMetrics {
     pub invocations: u64,
     pub cold_starts: u64,
+    /// Snapshot-restored provisions (the third start kind: a new
+    /// container that skipped the full cold path).
+    pub restored_starts: u64,
     /// Requests rejected with 429 for this function (per-function
     /// concurrency cap).
     pub throttled: u64,
@@ -128,9 +142,25 @@ pub struct FnMetrics {
     /// (the paper's bimodality analysis).
     pub response_cold: Histogram,
     pub response_warm: Histogram,
+    /// Response times of snapshot-restored starts — the middle mode
+    /// the restore path carves out of the cold distribution.
+    pub response_restored: Histogram,
     /// Prediction-time histograms in nanoseconds.
     pub predict_cold: Histogram,
     pub predict_warm: Histogram,
+    pub predict_restored: Histogram,
+    /// Per-component provision-cost histograms in nanoseconds, each
+    /// recorded by the requests that actually paid the component:
+    /// sandbox by every provisioned (cold or restored) request, the
+    /// runtime-init/package-fetch/model-load trio by full cold starts,
+    /// restore by snapshot-restored starts. This is the cold-start
+    /// decomposition served as percentiles, so the restore win is
+    /// observable without parsing raw records.
+    pub provision_sandbox: Histogram,
+    pub provision_runtime_init: Histogram,
+    pub provision_package_fetch: Histogram,
+    pub provision_model_load: Histogram,
+    pub provision_restore: Histogram,
     /// True dispatch-queue wait in nanoseconds, every served request
     /// (cold and warm): the latency component the admission queue
     /// trades for availability.
@@ -151,20 +181,22 @@ pub struct FnMetrics {
 
 impl FnMetrics {
     pub fn warm_starts(&self) -> u64 {
-        self.invocations - self.cold_starts
+        self.invocations - self.cold_starts - self.restored_starts
     }
 
-    /// Merged cold+warm response histogram.
+    /// Merged cold+warm+restored response histogram.
     pub fn response_all(&self) -> Histogram {
         let mut h = self.response_cold.clone();
         h.merge(&self.response_warm);
+        h.merge(&self.response_restored);
         h
     }
 
-    /// Merged cold+warm prediction histogram.
+    /// Merged cold+warm+restored prediction histogram.
     pub fn predict_all(&self) -> Histogram {
         let mut h = self.predict_cold.clone();
         h.merge(&self.predict_warm);
+        h.merge(&self.predict_restored);
         h
     }
 
@@ -187,6 +219,17 @@ impl FnMetrics {
                 self.cold_starts += 1;
                 self.response_cold.record(response_ns);
                 self.predict_cold.record(predict_ns);
+                self.provision_sandbox.record(r.sandbox.as_nanos() as u64);
+                self.provision_runtime_init.record(r.runtime_init.as_nanos() as u64);
+                self.provision_package_fetch.record(r.package_fetch.as_nanos() as u64);
+                self.provision_model_load.record(r.model_load.as_nanos() as u64);
+            }
+            StartKind::Restored => {
+                self.restored_starts += 1;
+                self.response_restored.record(response_ns);
+                self.predict_restored.record(predict_ns);
+                self.provision_sandbox.record(r.sandbox.as_nanos() as u64);
+                self.provision_restore.record(r.restore.as_nanos() as u64);
             }
             StartKind::Warm => {
                 self.response_warm.record(response_ns);
@@ -398,6 +441,7 @@ pub(crate) fn test_record(
         runtime_init: if cold { Duration::from_millis(1200) } else { Duration::ZERO },
         package_fetch: if cold { Duration::from_millis(60) } else { Duration::ZERO },
         model_load: if cold { Duration::from_millis(400) } else { Duration::ZERO },
+        restore: Duration::ZERO,
         predict: Duration::from_millis(predict_ms),
         predict_full_speed: Duration::from_millis(predict_ms / 2),
         batch_size: 1,
@@ -493,6 +537,44 @@ mod tests {
         assert_eq!(t.throttled, 1);
         assert_eq!(t.queue_expired, 1);
         assert_eq!(t.queue_wait.count(), 4);
+    }
+
+    #[test]
+    fn restored_records_split_and_component_histograms_stream() {
+        let s = MetricsSink::new();
+        s.record(test_record("f", 512, StartKind::Cold, 100));
+        s.record(test_record("f", 512, StartKind::Warm, 100));
+        // A snapshot-restored provision: sandbox + restore only.
+        let mut r = test_record("f", 512, StartKind::Restored, 100);
+        r.sandbox = Duration::from_millis(250);
+        r.restore = Duration::from_millis(80);
+        assert_eq!(r.response(), Duration::from_millis(250 + 80 + 100));
+        assert_eq!(r.cold_overhead(), Duration::from_millis(330));
+        s.record(r);
+        let m = s.function_metrics("f");
+        assert_eq!(m.invocations, 3);
+        assert_eq!(m.cold_starts, 1);
+        assert_eq!(m.restored_starts, 1);
+        assert_eq!(m.warm_starts(), 1, "restored is not warm");
+        assert_eq!(m.response_restored.count(), 1);
+        assert_eq!(m.predict_restored.count(), 1);
+        assert_eq!(m.response_all().count(), 3, "merged view sees all three kinds");
+        // Component histograms: sandbox from both provisioned kinds,
+        // the cold trio from the cold start only, restore from the
+        // restored start only — each percentile describes exactly the
+        // requests that paid the component.
+        assert_eq!(m.provision_sandbox.count(), 2);
+        assert_eq!(m.provision_runtime_init.count(), 1);
+        assert_eq!(m.provision_package_fetch.count(), 1);
+        assert_eq!(m.provision_model_load.count(), 1);
+        assert_eq!(m.provision_restore.count(), 1);
+        assert!(m.provision_restore.p50() >= 79_000_000);
+        assert!(m.provision_runtime_init.p50() >= 1_180_000_000);
+        // The restored mode sits between warm and cold.
+        assert!(m.response_restored.p50() > m.response_warm.p50());
+        assert!(m.response_restored.p50() < m.response_cold.p50());
+        // Totals stream the same split.
+        assert_eq!(s.platform_metrics().restored_starts, 1);
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod metrics;
 pub mod pool;
 pub mod registry;
 pub mod scaler;
+pub mod snapshots;
 pub mod throttle;
 
 pub use async_invoke::{AsyncInvocation, AsyncInvoker, AsyncStatus, SubmitError};
@@ -24,4 +25,5 @@ pub use metrics::{FnMetrics, InvocationRecord, MetricsSink, StartKind};
 pub use pool::{AcquireOutcome, WarmPool};
 pub use registry::{FunctionPolicy, FunctionRegistry, FunctionSpec};
 pub use scaler::Scaler;
+pub use snapshots::{SnapshotKey, SnapshotStore};
 pub use throttle::CpuGovernor;

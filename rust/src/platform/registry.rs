@@ -46,6 +46,10 @@ pub struct FunctionSpec {
     /// container open for followers, in milliseconds; `None` falls
     /// back to `platform.batch_window_ms`.
     pub batch_window_ms: Option<u64>,
+    /// Snapshot/restore override: `Some(true/false)` forces the
+    /// checkpoint-restore cold path on/off for this function; `None`
+    /// falls back to `platform.snapshot.enabled`.
+    pub snapshot: Option<bool>,
 }
 
 /// Deploy-time policy knobs (everything beyond the identity tuple
@@ -62,6 +66,7 @@ pub struct FunctionPolicy {
     pub queue_deadline_ms: Option<u64>,
     pub max_batch_size: Option<usize>,
     pub batch_window_ms: Option<u64>,
+    pub snapshot: Option<bool>,
 }
 
 impl FunctionPolicy {
@@ -75,6 +80,7 @@ impl FunctionPolicy {
             queue_deadline_ms: spec.queue_deadline_ms,
             max_batch_size: spec.max_batch_size,
             batch_window_ms: spec.batch_window_ms,
+            snapshot: spec.snapshot,
         }
     }
 }
@@ -224,6 +230,7 @@ impl FunctionRegistry {
             queue_deadline_ms: policy.queue_deadline_ms,
             max_batch_size: policy.max_batch_size,
             batch_window_ms: policy.batch_window_ms,
+            snapshot: policy.snapshot,
         }))
     }
 
@@ -328,6 +335,7 @@ mod tests {
                     max_concurrency: Some(8),
                     max_batch_size: Some(4),
                     batch_window_ms: Some(25),
+                    snapshot: Some(true),
                     ..Default::default()
                 },
             )
@@ -336,13 +344,16 @@ mod tests {
         assert_eq!(spec.max_concurrency, Some(8));
         assert_eq!(spec.max_batch_size, Some(4));
         assert_eq!(spec.batch_window_ms, Some(25));
+        assert_eq!(spec.snapshot, Some(true));
         assert_eq!(FunctionPolicy::of(&spec).max_batch_size, Some(4), "policy round-trips");
+        assert_eq!(FunctionPolicy::of(&spec).snapshot, Some(true));
         // Plain deploy defaults.
         let spec = r.deploy("sq2", "squeezenet", "pallas", 512).unwrap();
         assert_eq!(spec.min_warm, 0);
         assert_eq!(spec.max_concurrency, None);
         assert_eq!(spec.max_batch_size, None);
         assert_eq!(spec.batch_window_ms, None);
+        assert_eq!(spec.snapshot, None, "platform default applies");
         // A zero cap would make the function uninvokable.
         let zero_cap = FunctionPolicy { max_concurrency: Some(0), ..Default::default() };
         assert!(r.deploy_full("sq3", "squeezenet", "pallas", 512, zero_cap).is_err());

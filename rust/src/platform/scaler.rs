@@ -10,8 +10,10 @@
 //! the keep-alive/provisioned ablations.
 
 use super::container::Container;
+use super::metrics::StartKind;
 use super::pool::WarmPool;
 use super::registry::FunctionSpec;
+use super::snapshots::SnapshotStore;
 use super::throttle::CpuGovernor;
 use crate::configparse::BootstrapConfig;
 use crate::runtime::Engine;
@@ -30,10 +32,15 @@ pub struct Scaler {
     /// `throttled` (429: per-function concurrency cap) because the
     /// two signals ask the caller for different remedies.
     saturated: AtomicUsize,
-    /// Demand-driven provisions only: a request arrived and found no
-    /// warm container. This is the request-visible cold-start supply
-    /// side the paper's analysis keys on.
+    /// Demand-driven FULL cold provisions only: a request arrived,
+    /// found no warm container, and no snapshot restored. This is the
+    /// request-visible cold-start supply side the paper's analysis
+    /// keys on.
     cold_provisions: AtomicUsize,
+    /// Demand-driven provisions served from a snapshot restore — kept
+    /// apart from `cold_provisions` so the snapshot-vs-cold ablation
+    /// reads straight off the counters.
+    restored_provisions: AtomicUsize,
     /// Operator/maintainer-initiated provisions (deploy-time
     /// `min_warm`, `/v1/prewarm`, pool-maintainer top-ups). Kept
     /// separate so pre-warming does not inflate the cold-start rate.
@@ -73,6 +80,10 @@ impl Scaler {
         self.cold_provisions.fetch_add(1, Ordering::SeqCst);
     }
 
+    pub fn note_restored_provision(&self) {
+        self.restored_provisions.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub fn note_prewarm_provision(&self) {
         self.prewarm_provisions.fetch_add(1, Ordering::SeqCst);
     }
@@ -99,6 +110,10 @@ impl Scaler {
         self.cold_provisions.load(Ordering::SeqCst)
     }
 
+    pub fn restored_provision_count(&self) -> usize {
+        self.restored_provisions.load(Ordering::SeqCst)
+    }
+
     pub fn prewarm_provision_count(&self) -> usize {
         self.prewarm_provisions.load(Ordering::SeqCst)
     }
@@ -109,8 +124,11 @@ impl Scaler {
     /// cold-provision decision lives: exactly one provision per
     /// admitted request, so N requests missing warm capacity
     /// simultaneously provision N containers — never a stampede of
-    /// retries per request. On failure the reservation is returned to
-    /// the pool (waking a parked waiter) before the error propagates.
+    /// retries per request. The provision goes through the snapshot
+    /// store, which restores from a checkpoint when it holds one for
+    /// the function's shape (and schedules a capture after a full
+    /// cold otherwise). On failure the reservation is returned to the
+    /// pool (waking a parked waiter) before the error propagates.
     #[allow(clippy::too_many_arguments)]
     pub fn provision_demand(
         &self,
@@ -119,6 +137,7 @@ impl Scaler {
         engine: &Arc<dyn Engine>,
         governor: &CpuGovernor,
         bootstrap: &BootstrapConfig,
+        snapshots: &Arc<SnapshotStore>,
         clock: &Arc<dyn Clock>,
         rng: &Mutex<SplitMix64>,
     ) -> Result<Container> {
@@ -127,17 +146,15 @@ impl Scaler {
         // replenishment) must never serialize on the multi-second
         // bootstrap sleeps.
         let mut local = SplitMix64::new(rng.lock().unwrap().next_u64());
-        let provisioned = Container::provision(
-            spec.clone(),
-            engine.clone(),
-            governor,
-            bootstrap,
-            clock,
-            &mut local,
-        );
+        let provisioned =
+            snapshots.provision(spec, engine, governor, bootstrap, clock, &mut local);
         match provisioned {
             Ok(c) => {
-                self.note_cold_provision();
+                if c.start_kind_for_first_use() == StartKind::Restored {
+                    self.note_restored_provision();
+                } else {
+                    self.note_cold_provision();
+                }
                 Ok(c)
             }
             Err(e) => {
@@ -148,7 +165,10 @@ impl Scaler {
     }
 
     /// Pre-warm `n` containers for `spec` into the pool (the paper's
-    /// requested "minimum time to keep warm containers" knob).
+    /// requested "minimum time to keep warm containers" knob). Like
+    /// the demand path, each provision goes through the snapshot
+    /// store: a maintainer top-up restores from a checkpoint when one
+    /// exists, and the first full cold prewarm seeds one.
     #[allow(clippy::too_many_arguments)]
     pub fn prewarm(
         &self,
@@ -158,6 +178,7 @@ impl Scaler {
         engine: &Arc<dyn Engine>,
         governor: &CpuGovernor,
         bootstrap: &BootstrapConfig,
+        snapshots: &Arc<SnapshotStore>,
         clock: &Arc<dyn Clock>,
         rng: &Mutex<SplitMix64>,
     ) -> Result<usize> {
@@ -171,8 +192,7 @@ impl Scaler {
             // a background top-up must not stall request-path cold
             // starts waiting on the same RNG.
             let mut r = SplitMix64::new(rng.lock().unwrap().next_u64());
-            match Container::provision(spec.clone(), engine.clone(), governor, bootstrap, clock, &mut r)
-            {
+            match snapshots.provision(spec, engine, governor, bootstrap, clock, &mut r) {
                 Ok(c) => {
                     // Operator-initiated: NOT a request-visible cold
                     // start (that counter feeds the cold-start rate).
@@ -193,9 +213,14 @@ impl Scaler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::configparse::{CapturePolicy, SnapshotConfig};
     use crate::platform::registry::FunctionRegistry;
     use crate::runtime::MockEngine;
     use crate::util::ManualClock;
+
+    fn no_snapshots() -> Arc<SnapshotStore> {
+        Arc::new(SnapshotStore::new(SnapshotConfig::default()))
+    }
 
     #[test]
     fn flight_accounting() {
@@ -239,20 +264,60 @@ mod tests {
         let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
         let s = Scaler::new();
         let rng = Mutex::new(SplitMix64::new(0));
+        let snaps = no_snapshots();
 
         assert!(pool.try_reserve());
-        let c = s.provision_demand(&spec, &pool, &engine, &gov, &cfg, &clock, &rng).unwrap();
+        let c = s
+            .provision_demand(&spec, &pool, &engine, &gov, &cfg, &snaps, &clock, &rng)
+            .unwrap();
         assert_eq!(s.cold_provision_count(), 1);
         assert_eq!(s.prewarm_provision_count(), 0, "demand provisions are not prewarms");
+        assert_eq!(s.restored_provision_count(), 0);
         pool.retire(c);
         assert_eq!(pool.total_alive(), 0);
 
         // A failed provision hands the reserved slot back.
         mock.fail_create.store(true, std::sync::atomic::Ordering::SeqCst);
         assert!(pool.try_reserve());
-        assert!(s.provision_demand(&spec, &pool, &engine, &gov, &cfg, &clock, &rng).is_err());
+        assert!(s
+            .provision_demand(&spec, &pool, &engine, &gov, &cfg, &snaps, &clock, &rng)
+            .is_err());
         assert_eq!(pool.total_alive(), 0, "reservation cancelled on failure");
         assert_eq!(s.cold_provision_count(), 1, "failed provision not counted");
+    }
+
+    /// Snapshot-aware demand provisioning: the first demand provision
+    /// is a full cold (captured), the second restores — and the two
+    /// land in their own counters.
+    #[test]
+    fn provision_demand_splits_cold_and_restored_counters() {
+        let engine: Arc<dyn Engine> = Arc::new(MockEngine::paper_zoo());
+        let reg = FunctionRegistry::new(engine.clone());
+        let spec = reg.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let clock: Arc<dyn Clock> = ManualClock::new();
+        let pool = WarmPool::new(4, 600.0, clock.clone());
+        let gov = CpuGovernor::new(1792, clock.clone());
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let s = Scaler::new();
+        let rng = Mutex::new(SplitMix64::new(0));
+        let snaps = Arc::new(SnapshotStore::new(SnapshotConfig {
+            enabled: true,
+            capture_policy: CapturePolicy::Sync,
+            ..Default::default()
+        }));
+        assert!(pool.try_reserve());
+        let c1 = s
+            .provision_demand(&spec, &pool, &engine, &gov, &cfg, &snaps, &clock, &rng)
+            .unwrap();
+        assert!(pool.try_reserve());
+        let c2 = s
+            .provision_demand(&spec, &pool, &engine, &gov, &cfg, &snaps, &clock, &rng)
+            .unwrap();
+        assert_eq!(s.cold_provision_count(), 1);
+        assert_eq!(s.restored_provision_count(), 1);
+        assert_eq!(c2.start_kind_for_first_use(), StartKind::Restored);
+        pool.retire(c1);
+        pool.retire(c2);
     }
 
     #[test]
@@ -267,7 +332,7 @@ mod tests {
         let s = Scaler::new();
         let rng = Mutex::new(SplitMix64::new(0));
         let n = s
-            .prewarm(&spec, 3, &pool, &engine, &gov, &cfg, &clock, &rng)
+            .prewarm(&spec, 3, &pool, &engine, &gov, &cfg, &no_snapshots(), &clock, &rng)
             .unwrap();
         assert_eq!(n, 3);
         assert_eq!(pool.warm_count("sq"), 3);
@@ -290,7 +355,7 @@ mod tests {
         let s = Scaler::new();
         let rng = Mutex::new(SplitMix64::new(0));
         let err = s
-            .prewarm(&spec, 5, &pool, &engine, &gov, &cfg, &clock, &rng)
+            .prewarm(&spec, 5, &pool, &engine, &gov, &cfg, &no_snapshots(), &clock, &rng)
             .unwrap_err();
         assert!(err.to_string().contains("cap"));
         assert_eq!(pool.warm_count("sq"), 2);

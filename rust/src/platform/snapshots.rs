@@ -1,0 +1,730 @@
+//! Snapshot/checkpoint-restore cold-start mitigation.
+//!
+//! The paper's cold start is dominated by runtime init + model compile
+//! + weight materialization; the serverless-inference literature's
+//! state-of-the-art answer is checkpoint/restore: capture a warmed
+//! instance ONCE, then provision future cold starts from the snapshot
+//! so they pay `sandbox + restore I/O` instead of the whole trio.
+//!
+//! [`SnapshotStore`] owns the snapshot artifacts — one per
+//! model + variant + memory class ([`SnapshotKey`]), bounded by
+//! `snapshot.capacity_bytes` with LRU eviction — and the provisioning
+//! policy around them: [`SnapshotStore::provision`] is the single
+//! provision entry point the demand cold path (scaler) and the
+//! prewarm/maintainer path go through. A store hit restores; a failed
+//! restore falls back to the full cold path (never an error surfaced
+//! to the request); a full cold provision schedules a capture per the
+//! configured [`CapturePolicy`] so the NEXT cold start for this shape
+//! can restore. With `snapshot.enabled = false` (the default) and no
+//! per-function override, `provision` is exactly
+//! [`Container::provision`] — same RNG draws, same costs, bit-for-bit.
+
+use super::container::Container;
+use super::registry::FunctionSpec;
+use super::throttle::CpuGovernor;
+use crate::configparse::{BootstrapConfig, CapturePolicy, MemorySize, SnapshotConfig};
+use crate::runtime::{Engine, InstanceHandle, SnapshotBlob};
+use crate::util::{Clock, SplitMix64};
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Identity of one snapshot artifact: the model + artifact variant +
+/// memory class a restored container embodies — the same tuple a warm
+/// container is matched on, minus the function name, so functions
+/// sharing a deployment shape share snapshots.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SnapshotKey {
+    pub model: String,
+    pub variant: String,
+    pub memory_mb: MemorySize,
+}
+
+impl SnapshotKey {
+    /// The snapshot shape `spec`'s containers embody.
+    pub fn of(spec: &FunctionSpec) -> Self {
+        Self {
+            model: spec.model.clone(),
+            variant: spec.variant.clone(),
+            memory_mb: spec.memory_mb,
+        }
+    }
+}
+
+/// Consecutive restore failures after which a stored snapshot is
+/// dropped: failures are usually transient (the blob survives them),
+/// but a shape whose restores fail persistently must not pay a doomed
+/// restore attempt on every cold start forever — dropping the entry
+/// lets the next full cold provision re-capture fresh state.
+const MAX_RESTORE_FAILURES: u32 = 3;
+
+struct Entry {
+    blob: Arc<SnapshotBlob>,
+    /// Wall time the capture cost (observability only: captures run
+    /// off the request path, so no request waits this).
+    capture_cost: Duration,
+    /// LRU clock of the last hit (or the insert).
+    last_used: u64,
+    /// Consecutive restore failures against this entry (reset by a
+    /// successful restore; the entry is dropped at
+    /// [`MAX_RESTORE_FAILURES`]).
+    failures: u32,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    entries: BTreeMap<SnapshotKey, Entry>,
+    /// Sum of stored blob sizes (the capacity accounting).
+    bytes: u64,
+    /// Monotonic LRU clock, bumped per lookup/insert.
+    tick: u64,
+    /// Keys with a capture currently running (background dedupe).
+    in_flight: BTreeSet<SnapshotKey>,
+    /// Per-shape invalidation generations, bumped by
+    /// [`SnapshotStore::invalidate`]: a background capture that began
+    /// before its shape's redeploy/undeploy cannot land its (now
+    /// obsolete) blob afterwards — without fencing unrelated shapes'
+    /// captures. Absent key = generation 0.
+    invalidations: BTreeMap<SnapshotKey, u64>,
+}
+
+impl StoreInner {
+    fn generation_of(&self, key: &SnapshotKey) -> u64 {
+        self.invalidations.get(key).copied().unwrap_or(0)
+    }
+}
+
+/// See the module docs. Counters are monotonic except `bytes`, which
+/// is the live gauge of stored snapshot bytes.
+pub struct SnapshotStore {
+    config: SnapshotConfig,
+    inner: Mutex<StoreInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    captures: AtomicU64,
+    evictions: AtomicU64,
+    stale: AtomicU64,
+    restore_failures: AtomicU64,
+}
+
+impl SnapshotStore {
+    pub fn new(config: SnapshotConfig) -> Self {
+        Self {
+            config,
+            inner: Mutex::new(StoreInner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            captures: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
+            restore_failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &SnapshotConfig {
+        &self.config
+    }
+
+    /// Whether snapshot/restore applies to `spec`: its own `snapshot`
+    /// override when set, else the platform-wide `snapshot.enabled`.
+    pub fn enabled_for(&self, spec: &FunctionSpec) -> bool {
+        spec.snapshot.unwrap_or(self.config.enabled)
+    }
+
+    /// Look up a restorable snapshot, counting hit/miss and touching
+    /// the LRU clock.
+    pub fn lookup(&self, key: &SnapshotKey) -> Option<Arc<SnapshotBlob>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::SeqCst);
+                Some(e.blob.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::SeqCst);
+                None
+            }
+        }
+    }
+
+    /// Store a captured snapshot under `key`, evicting
+    /// least-recently-used entries until it fits; replaces any
+    /// existing entry for the key. Returns `false` (and stores
+    /// nothing) when the blob alone exceeds the whole capacity.
+    pub fn insert(&self, key: SnapshotKey, blob: SnapshotBlob, capture_cost: Duration) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        self.insert_locked(&mut g, key, blob, capture_cost)
+    }
+
+    /// [`Self::insert`], but only when no invalidation of THIS shape
+    /// has landed since the capture began: a background capture racing
+    /// a redeploy or undeploy must not resurrect a checkpoint the
+    /// lifecycle event just obsoleted (unrelated shapes' lifecycle
+    /// events don't fence it).
+    fn insert_captured(
+        &self,
+        key: SnapshotKey,
+        blob: SnapshotBlob,
+        capture_cost: Duration,
+        began_at_generation: u64,
+    ) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.generation_of(&key) != began_at_generation {
+            return false;
+        }
+        self.insert_locked(&mut g, key, blob, capture_cost)
+    }
+
+    fn insert_locked(
+        &self,
+        g: &mut StoreInner,
+        key: SnapshotKey,
+        blob: SnapshotBlob,
+        capture_cost: Duration,
+    ) -> bool {
+        if blob.size_bytes > self.config.capacity_bytes {
+            return false;
+        }
+        if let Some(old) = g.entries.remove(&key) {
+            g.bytes -= old.blob.size_bytes;
+        }
+        while g.bytes + blob.size_bytes > self.config.capacity_bytes {
+            let victim =
+                g.entries.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            if let Some(e) = g.entries.remove(&victim) {
+                g.bytes -= e.blob.size_bytes;
+                self.evictions.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        g.bytes += blob.size_bytes;
+        g.entries.insert(
+            key,
+            Entry { blob: Arc::new(blob), capture_cost, last_used: tick, failures: 0 },
+        );
+        self.captures.fetch_add(1, Ordering::SeqCst);
+        true
+    }
+
+    /// Drop the snapshot for one exact shape (redeploy/undeploy of a
+    /// function with that shape: the state behind the stored blob may
+    /// no longer match what a fresh deployment would build). Counted
+    /// as stale; also fences any capture currently in flight (its late
+    /// insert is discarded). Returns whether an entry was dropped.
+    pub fn invalidate(&self, key: &SnapshotKey) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        // Bumped even when nothing is stored yet: the capture that
+        // WOULD have stored this shape may still be running.
+        *g.invalidations.entry(key.clone()).or_insert(0) += 1;
+        match g.entries.remove(key) {
+            Some(e) => {
+                g.bytes -= e.blob.size_bytes;
+                self.stale.fetch_add(1, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Record one failed restore against `key`; the entry survives
+    /// (most failures are transient) until [`MAX_RESTORE_FAILURES`]
+    /// consecutive ones, at which point it is dropped (counted stale)
+    /// so the next full cold provision re-captures fresh state.
+    fn note_restore_failure(&self, key: &SnapshotKey) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.entries.get_mut(key) else { return };
+        e.failures += 1;
+        if e.failures >= MAX_RESTORE_FAILURES {
+            if let Some(e) = g.entries.remove(key) {
+                g.bytes -= e.blob.size_bytes;
+                self.stale.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// A successful restore proves the blob healthy again.
+    fn note_restore_success(&self, key: &SnapshotKey) {
+        if let Some(e) = self.inner.lock().unwrap().entries.get_mut(key) {
+            e.failures = 0;
+        }
+    }
+
+    /// Provision a container for `spec`, preferring a snapshot
+    /// restore when the store holds one for its shape. A hit restores
+    /// (the container's start kind is `Restored`); a failed restore
+    /// falls back to the full cold path — never an error surfaced to
+    /// the request; and a full cold provision schedules a capture per
+    /// the capture policy. When snapshots are off for `spec` this is
+    /// exactly [`Container::provision`].
+    pub fn provision(
+        self: &Arc<Self>,
+        spec: &Arc<FunctionSpec>,
+        engine: &Arc<dyn Engine>,
+        governor: &CpuGovernor,
+        bootstrap: &BootstrapConfig,
+        clock: &Arc<dyn Clock>,
+        rng: &mut SplitMix64,
+    ) -> Result<Container> {
+        let enabled = self.enabled_for(spec);
+        if enabled {
+            let key = SnapshotKey::of(spec);
+            if let Some(blob) = self.lookup(&key) {
+                let restored = Container::provision_from_snapshot(
+                    spec.clone(),
+                    engine.clone(),
+                    governor,
+                    bootstrap,
+                    self.config.restore_bw,
+                    &blob,
+                    clock,
+                    rng,
+                );
+                match restored {
+                    Ok(c) => {
+                        self.note_restore_success(&key);
+                        return Ok(c);
+                    }
+                    Err(_) => {
+                        // Fall through to the full cold path: a restore
+                        // failure must cost the request a slower start,
+                        // not an error. The entry survives transient
+                        // failures but is dropped after persistent
+                        // ones (see `note_restore_failure`).
+                        self.restore_failures.fetch_add(1, Ordering::SeqCst);
+                        self.note_restore_failure(&key);
+                    }
+                }
+            }
+        }
+        let container =
+            Container::provision(spec.clone(), engine.clone(), governor, bootstrap, clock, rng)?;
+        if enabled {
+            self.schedule_capture(spec, engine, &container);
+        }
+        Ok(container)
+    }
+
+    /// Capture `container`'s instance into the store per the capture
+    /// policy: at most one capture per key at a time, and none when
+    /// the key is already stored.
+    fn schedule_capture(
+        self: &Arc<Self>,
+        spec: &Arc<FunctionSpec>,
+        engine: &Arc<dyn Engine>,
+        container: &Container,
+    ) {
+        if self.config.capture_policy == CapturePolicy::Off {
+            return;
+        }
+        let key = SnapshotKey::of(spec);
+        let generation = {
+            let mut g = self.inner.lock().unwrap();
+            if g.entries.contains_key(&key) || !g.in_flight.insert(key.clone()) {
+                return;
+            }
+            g.generation_of(&key)
+        };
+        let handle = container.handle().clone();
+        match self.config.capture_policy {
+            CapturePolicy::Sync => self.run_capture(&key, engine, &handle, generation),
+            CapturePolicy::Background => {
+                let store = self.clone();
+                let engine = engine.clone();
+                let thread_key = key.clone();
+                // Short-lived detached worker holding only the store
+                // and engine Arcs. Racing the container's teardown is
+                // benign: a dead instance fails the capture, which is
+                // best-effort and simply dropped; racing an undeploy/
+                // redeploy is fenced by the generation.
+                let spawned = std::thread::Builder::new()
+                    .name("snapshot-capture".into())
+                    .spawn(move || store.run_capture(&thread_key, &engine, &handle, generation));
+                if let Err(e) = spawned {
+                    log::warn!("snapshot capture thread failed to spawn: {e}");
+                    self.inner.lock().unwrap().in_flight.remove(&key);
+                }
+            }
+            CapturePolicy::Off => unreachable!("filtered above"),
+        }
+    }
+
+    /// One capture attempt: serialize the instance and store the blob
+    /// (unless an invalidation landed since `generation` was read).
+    /// Best-effort — a failed capture (or a blob over capacity) costs
+    /// nothing and leaves the store unchanged.
+    fn run_capture(
+        &self,
+        key: &SnapshotKey,
+        engine: &Arc<dyn Engine>,
+        handle: &InstanceHandle,
+        generation: u64,
+    ) {
+        let t0 = Instant::now();
+        if let Ok(blob) = engine.snapshot_instance(handle) {
+            self.insert_captured(key.clone(), blob, t0.elapsed(), generation);
+        }
+        self.inner.lock().unwrap().in_flight.remove(key);
+    }
+
+    /// Successful lookups.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::SeqCst)
+    }
+
+    /// Lookups that found no snapshot for the shape.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::SeqCst)
+    }
+
+    /// Snapshots stored (inserts, including replacements).
+    pub fn captures(&self) -> u64 {
+        self.captures.load(Ordering::SeqCst)
+    }
+
+    /// Entries evicted by the LRU capacity bound.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::SeqCst)
+    }
+
+    /// Entries dropped by redeploy/undeploy invalidation.
+    pub fn stale(&self) -> u64 {
+        self.stale.load(Ordering::SeqCst)
+    }
+
+    /// Restores that failed and fell back to the full cold path.
+    pub fn restore_failures(&self) -> u64 {
+        self.restore_failures.load(Ordering::SeqCst)
+    }
+
+    /// Live gauge: bytes currently stored.
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Snapshots currently stored.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Wall cost of the stored capture for `key`, if present.
+    pub fn capture_cost(&self, key: &SnapshotKey) -> Option<Duration> {
+        self.inner.lock().unwrap().entries.get(key).map(|e| e.capture_cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::metrics::StartKind;
+    use crate::platform::registry::FunctionRegistry;
+    use crate::runtime::{MockEngine, SnapshotPayload};
+    use crate::util::ManualClock;
+
+    fn store(config: SnapshotConfig) -> Arc<SnapshotStore> {
+        Arc::new(SnapshotStore::new(config))
+    }
+
+    fn on_sync() -> SnapshotConfig {
+        SnapshotConfig {
+            enabled: true,
+            capture_policy: CapturePolicy::Sync,
+            ..Default::default()
+        }
+    }
+
+    fn blob(model: &str, bytes: u64) -> SnapshotBlob {
+        SnapshotBlob {
+            model: model.to_string(),
+            variant: "pallas".to_string(),
+            size_bytes: bytes,
+            payload: SnapshotPayload::Synthetic,
+        }
+    }
+
+    fn key(model: &str, mem: MemorySize) -> SnapshotKey {
+        SnapshotKey { model: model.to_string(), variant: "pallas".to_string(), memory_mb: mem }
+    }
+
+    struct Fixture {
+        engine: Arc<MockEngine>,
+        dyn_engine: Arc<dyn Engine>,
+        spec: Arc<FunctionSpec>,
+        gov: CpuGovernor,
+        clock: Arc<dyn Clock>,
+        rng: SplitMix64,
+        bootstrap: BootstrapConfig,
+    }
+
+    fn fixture() -> Fixture {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let dyn_engine: Arc<dyn Engine> = engine.clone();
+        let reg = FunctionRegistry::new(dyn_engine.clone());
+        let spec = reg.deploy("sq", "squeezenet", "pallas", 896).unwrap();
+        let clock: Arc<dyn Clock> = ManualClock::new();
+        Fixture {
+            engine,
+            dyn_engine,
+            spec,
+            gov: CpuGovernor::new(1792, clock.clone()),
+            clock,
+            rng: SplitMix64::new(7),
+            bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn lookup_insert_counters_and_lru_eviction() {
+        let s = store(SnapshotConfig { capacity_bytes: 100, ..Default::default() });
+        assert!(s.is_empty());
+        assert!(s.lookup(&key("a", 512)).is_none());
+        assert_eq!(s.misses(), 1);
+
+        assert!(s.insert(key("a", 512), blob("a", 60), Duration::from_millis(5)));
+        assert!(s.insert(key("b", 512), blob("b", 40), Duration::ZERO));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.bytes(), 100);
+        assert_eq!(s.captures(), 2);
+        assert_eq!(s.capture_cost(&key("a", 512)), Some(Duration::from_millis(5)));
+
+        // Touch "a" so "b" is the LRU victim when "c" needs room.
+        assert!(s.lookup(&key("a", 512)).is_some());
+        assert_eq!(s.hits(), 1);
+        assert!(s.insert(key("c", 512), blob("c", 30), Duration::ZERO));
+        assert_eq!(s.evictions(), 1);
+        assert!(s.lookup(&key("b", 512)).is_none(), "LRU entry evicted");
+        assert!(s.lookup(&key("a", 512)).is_some(), "recently used survives");
+        assert_eq!(s.bytes(), 90);
+
+        // A blob over the whole capacity is refused outright.
+        assert!(!s.insert(key("huge", 512), blob("huge", 101), Duration::ZERO));
+        assert_eq!(s.len(), 2);
+
+        // Replacement swaps bytes, not duplicates.
+        assert!(s.insert(key("a", 512), blob("a", 10), Duration::ZERO));
+        assert_eq!(s.bytes(), 40);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn invalidation_counts_stale_and_is_shape_exact() {
+        let s = store(SnapshotConfig::default());
+        s.insert(key("m", 512), blob("m", 10), Duration::ZERO);
+        s.insert(key("m", 1024), blob("m", 10), Duration::ZERO);
+        s.insert(key("other", 512), blob("other", 10), Duration::ZERO);
+        assert!(s.invalidate(&key("m", 512)));
+        assert!(!s.invalidate(&key("m", 512)), "second invalidate is a no-op");
+        assert_eq!(s.stale(), 1);
+        assert_eq!(s.len(), 2, "other shapes (same model included) untouched");
+        assert_eq!(s.bytes(), 20);
+    }
+
+    /// The undeploy/redeploy race: a capture that began before its
+    /// shape's invalidation must not land afterwards — the fence is
+    /// the shape's invalidation generation read when the capture was
+    /// scheduled, and it fences only that shape.
+    #[test]
+    fn capture_racing_invalidation_is_discarded_per_shape() {
+        let s = store(SnapshotConfig { enabled: true, ..Default::default() });
+        let k = key("m", 512);
+        let began = s.inner.lock().unwrap().generation_of(&k);
+        // The deployment goes away while the capture is in flight
+        // (nothing stored yet — the generation alone is the fence).
+        s.invalidate(&k);
+        assert!(!s.insert_captured(k.clone(), blob("m", 10), Duration::ZERO, began));
+        assert!(s.is_empty(), "obsolete capture discarded");
+        assert_eq!(s.captures(), 0);
+        // An UNRELATED shape's in-flight capture is not fenced.
+        let other = key("other", 512);
+        assert!(s.insert_captured(other, blob("other", 10), Duration::ZERO, 0));
+        assert_eq!(s.len(), 1);
+        // A capture of the invalidated shape begun after the
+        // invalidation lands normally.
+        let began = s.inner.lock().unwrap().generation_of(&k);
+        assert!(s.insert_captured(k, blob("m", 10), Duration::ZERO, began));
+        assert_eq!(s.len(), 2);
+    }
+
+    /// Persistent restore failures drop the entry (so cold starts stop
+    /// paying doomed restore attempts and the next cold re-captures);
+    /// a success in between resets the count.
+    #[test]
+    fn repeated_restore_failures_drop_the_entry() {
+        let s = store(on_sync());
+        let mut f = fixture();
+        s.provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(s.len(), 1);
+        let fail = &f.engine.fail_restore;
+        // Two failures, then a success: the count resets.
+        fail.store(true, std::sync::atomic::Ordering::SeqCst);
+        for _ in 0..2 {
+            s.provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+                .unwrap();
+        }
+        fail.store(false, std::sync::atomic::Ordering::SeqCst);
+        s.provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(s.len(), 1, "2 failures + success keep the entry");
+        // Three consecutive failures: the broken entry is dropped
+        // (stale) and the dropping provision's own cold fallback
+        // immediately re-captures fresh state in its place.
+        fail.store(true, std::sync::atomic::Ordering::SeqCst);
+        for _ in 0..3 {
+            let c = s
+                .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+                .unwrap();
+            assert_eq!(c.start_kind_for_first_use(), StartKind::Cold);
+        }
+        assert_eq!(s.stale(), 1, "persistently failing blob dropped");
+        assert_eq!(s.captures(), 2, "cold fallback re-captured a fresh blob");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.restore_failures(), 5);
+        // The replacement blob restores once the engine recovers.
+        fail.store(false, std::sync::atomic::Ordering::SeqCst);
+        let c = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c.start_kind_for_first_use(), StartKind::Restored);
+    }
+
+    #[test]
+    fn enabled_for_override_beats_platform_default() {
+        let off = store(SnapshotConfig::default());
+        let on = store(SnapshotConfig { enabled: true, ..Default::default() });
+        let f = fixture();
+        assert!(!off.enabled_for(&f.spec));
+        assert!(on.enabled_for(&f.spec));
+        let mut forced = (*f.spec).clone();
+        forced.snapshot = Some(true);
+        assert!(off.enabled_for(&forced));
+        forced.snapshot = Some(false);
+        assert!(!on.enabled_for(&forced));
+    }
+
+    #[test]
+    fn provision_captures_then_restores() {
+        let s = store(on_sync());
+        let mut f = fixture();
+        // First provision: miss, full cold, sync capture.
+        let c1 = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c1.start_kind_for_first_use(), StartKind::Cold);
+        assert_eq!(s.misses(), 1);
+        assert_eq!(s.captures(), 1);
+        assert_eq!(s.bytes(), f.engine.manifest("squeezenet").unwrap().param_bytes);
+        // Second provision: hit, restored, strictly cheaper.
+        let c2 = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c2.start_kind_for_first_use(), StartKind::Restored);
+        assert_eq!(s.hits(), 1);
+        assert!(c2.provision_cost.total() < c1.provision_cost.total());
+        assert_eq!(c2.provision_cost.model_load, Duration::ZERO);
+        // One snapshot per shape: the second cold didn't re-capture.
+        assert_eq!(s.captures(), 1);
+        assert_eq!(f.engine.live_instances(), 2);
+    }
+
+    #[test]
+    fn failed_restore_falls_back_to_full_cold() {
+        let s = store(on_sync());
+        let mut f = fixture();
+        s.provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        f.engine.fail_restore.store(true, std::sync::atomic::Ordering::SeqCst);
+        let c = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c.start_kind_for_first_use(), StartKind::Cold, "fell back, not errored");
+        assert_eq!(s.restore_failures(), 1);
+        assert_eq!(s.len(), 1, "the blob survives a transient failure");
+        assert_eq!(f.engine.live_instances(), 2, "no leaked half-restore");
+        // Recovered engine: the same blob restores again.
+        f.engine.fail_restore.store(false, std::sync::atomic::Ordering::SeqCst);
+        let c = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c.start_kind_for_first_use(), StartKind::Restored);
+    }
+
+    #[test]
+    fn disabled_store_never_looks_up_or_captures() {
+        let s = store(SnapshotConfig::default());
+        let mut f = fixture();
+        let c = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c.start_kind_for_first_use(), StartKind::Cold);
+        assert_eq!(s.hits() + s.misses() + s.captures(), 0, "store untouched when off");
+        assert_eq!(f.engine.snapshot_calls.load(std::sync::atomic::Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn capture_policy_off_restores_preseeded_but_never_captures() {
+        let s = store(SnapshotConfig {
+            enabled: true,
+            capture_policy: CapturePolicy::Off,
+            ..Default::default()
+        });
+        let mut f = fixture();
+        let c = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c.start_kind_for_first_use(), StartKind::Cold);
+        assert_eq!(s.captures(), 0, "off policy never captures");
+        // Pre-seed by hand: restores work.
+        let b = f.dyn_engine.snapshot_instance(c.handle()).unwrap();
+        s.insert(SnapshotKey::of(&f.spec), b, Duration::ZERO);
+        let c2 = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c2.start_kind_for_first_use(), StartKind::Restored);
+    }
+
+    #[test]
+    fn background_capture_lands_off_the_critical_path() {
+        let s = store(SnapshotConfig { enabled: true, ..Default::default() });
+        let mut f = fixture();
+        let _c = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        // The detached worker finishes on its own wall-clock schedule.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while s.captures() < 1 {
+            assert!(Instant::now() < deadline, "background capture never landed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn failed_capture_is_best_effort() {
+        let s = store(on_sync());
+        let mut f = fixture();
+        f.engine.fail_snapshot.store(true, std::sync::atomic::Ordering::SeqCst);
+        let c = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(c.start_kind_for_first_use(), StartKind::Cold);
+        assert_eq!(s.captures(), 0, "failed capture stores nothing");
+        assert!(s.is_empty());
+        // And the in-flight guard was released: a later capture works.
+        f.engine.fail_snapshot.store(false, std::sync::atomic::Ordering::SeqCst);
+        let _c2 = s
+            .provision(&f.spec, &f.dyn_engine, &f.gov, &f.bootstrap, &f.clock, &mut f.rng)
+            .unwrap();
+        assert_eq!(s.captures(), 1);
+    }
+}

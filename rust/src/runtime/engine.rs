@@ -1,7 +1,8 @@
 //! The thread-safe engine abstraction the platform codes against.
 
 use super::manifest::ModelManifest;
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Handle to a live model instance (weights resident on the device of
@@ -26,6 +27,45 @@ pub struct InitStats {
     pub init_run: Duration,
     /// Bytes of parameters now resident.
     pub weight_bytes: u64,
+}
+
+/// Serialized restorable state of a warmed instance, captured by
+/// [`Engine::snapshot_instance`] and replayed by
+/// [`Engine::restore_instance`]: the weights (and, engine-dependent, a
+/// pointer to already-compiled executables) that let a fresh provision
+/// pay I/O instead of compile + init.
+#[derive(Debug, Clone)]
+pub struct SnapshotBlob {
+    /// Model the snapshot was captured from.
+    pub model: String,
+    /// Artifact variant of the captured instance.
+    pub variant: String,
+    /// Serialized size in bytes (weights dominate): what a restore
+    /// must move, and what a snapshot store's capacity accounting
+    /// charges.
+    pub size_bytes: u64,
+    /// Engine-specific payload.
+    pub payload: SnapshotPayload,
+}
+
+/// Engine-specific contents of a [`SnapshotBlob`].
+#[derive(Debug, Clone)]
+pub enum SnapshotPayload {
+    /// No real state: the engine recreates the instance from its own
+    /// (cached) artifacts at restore-I/O cost ([`super::MockEngine`]).
+    Synthetic,
+    /// Host copy of the flat `f32` parameter vector plus the shard
+    /// whose compile cache already holds this model's executables
+    /// ([`super::PjrtEngine`]): restore re-uploads the weights to that
+    /// shard, skipping both the HLO compile and the init execution.
+    PjrtWeights {
+        /// Shard the instance was captured on (its compile cache is
+        /// the "seeded" one a restore routes back to).
+        shard: usize,
+        /// Flat parameter vector, shared so a stored blob is not
+        /// copied per restore.
+        flat: Arc<Vec<f32>>,
+    },
 }
 
 /// One inference result.
@@ -71,6 +111,33 @@ pub trait Engine: Send + Sync {
         image_seeds: &[u64],
     ) -> Result<Vec<Prediction>> {
         image_seeds.iter().map(|&seed| self.predict(handle, seed)).collect()
+    }
+
+    /// Serialize a live instance's restorable state (weights plus a
+    /// pointer to its compiled executables) into a [`SnapshotBlob`].
+    /// The instance stays live and usable; capture is read-only.
+    /// Engines without a snapshot path keep the default, which
+    /// reports the capability as unsupported — callers treat any
+    /// error as "no snapshot" and stay on the full cold path.
+    fn snapshot_instance(&self, handle: &InstanceHandle) -> Result<SnapshotBlob> {
+        bail!("engine does not support snapshotting instance {handle:?}")
+    }
+
+    /// Create a live instance from a snapshot instead of the full
+    /// compile + init path: the blob's weights are materialized
+    /// directly, so the returned [`InitStats`] carries no compile and
+    /// a (much cheaper) weight-transfer `init_run`. Fails when the
+    /// blob does not match `model`/`variant` or the engine cannot
+    /// honor it; callers fall back to [`Self::create_instance`]. The
+    /// default reports the capability as unsupported.
+    fn restore_instance(
+        &self,
+        model: &str,
+        variant: &str,
+        blob: &SnapshotBlob,
+    ) -> Result<(InstanceHandle, InitStats)> {
+        let _ = blob;
+        bail!("engine does not support restoring {model}/{variant} from a snapshot")
     }
 
     /// Free a live instance (container reaped / evicted).

@@ -5,7 +5,7 @@
 //! then scales/bills exactly like a real one (the CPU governor and the
 //! virtual clock treat reported compute uniformly).
 
-use super::engine::{Engine, InitStats, InstanceHandle, Prediction};
+use super::engine::{Engine, InitStats, InstanceHandle, Prediction, SnapshotBlob, SnapshotPayload};
 use super::manifest::ModelManifest;
 use crate::util::SplitMix64;
 use anyhow::{anyhow, Result};
@@ -21,6 +21,12 @@ use std::time::Duration;
 /// in `n`, modeling the weight-reuse/amortization a real batched
 /// kernel gets (activations grow with `n`, weight traffic does not).
 pub const BATCH_COST_MARGINAL: f64 = 0.25;
+
+/// Engine-side restore bandwidth of the mock (bytes/s): the mock's
+/// [`Engine::restore_instance`] costs `weight_bytes / MOCK_RESTORE_BW`
+/// of `init_run` and no compile at all — the weight upload a snapshot
+/// restore pays instead of the init execution.
+pub const MOCK_RESTORE_BW: f64 = 400e6;
 
 /// Configured costs for one mock model.
 #[derive(Debug, Clone)]
@@ -75,8 +81,16 @@ pub struct MockEngine {
     /// Calls observed (assertions in tests).
     pub predict_calls: AtomicU64,
     pub create_calls: AtomicU64,
+    pub snapshot_calls: AtomicU64,
+    pub restore_calls: AtomicU64,
     /// When true, `create_instance` fails (failure-injection tests).
     pub fail_create: std::sync::atomic::AtomicBool,
+    /// When true, `snapshot_instance` fails (capture must be
+    /// best-effort: a failed capture costs the request nothing).
+    pub fail_snapshot: std::sync::atomic::AtomicBool,
+    /// When true, `restore_instance` fails (a failed restore must fall
+    /// back to the full cold path without leaking an instance).
+    pub fail_restore: std::sync::atomic::AtomicBool,
 }
 
 impl MockEngine {
@@ -88,7 +102,11 @@ impl MockEngine {
             next_id: AtomicU64::new(0),
             predict_calls: AtomicU64::new(0),
             create_calls: AtomicU64::new(0),
+            snapshot_calls: AtomicU64::new(0),
+            restore_calls: AtomicU64::new(0),
             fail_create: std::sync::atomic::AtomicBool::new(false),
+            fail_snapshot: std::sync::atomic::AtomicBool::new(false),
+            fail_restore: std::sync::atomic::AtomicBool::new(false),
         }
     }
 
@@ -190,6 +208,61 @@ impl Engine for MockEngine {
                 Prediction { top1, top_prob: 0.5 + 0.5 * rng.next_f32(), compute: share }
             })
             .collect())
+    }
+
+    fn snapshot_instance(&self, handle: &InstanceHandle) -> Result<SnapshotBlob> {
+        self.snapshot_calls.fetch_add(1, Ordering::SeqCst);
+        if self.fail_snapshot.load(Ordering::SeqCst) {
+            return Err(anyhow!("mock engine: injected snapshot failure"));
+        }
+        if !self.instances.lock().unwrap().contains(&(handle.shard, handle.id)) {
+            return Err(anyhow!("mock engine: snapshot of dead instance {:?}", handle));
+        }
+        let costs = self.costs(&handle.model)?;
+        Ok(SnapshotBlob {
+            model: handle.model.clone(),
+            variant: handle.variant.clone(),
+            size_bytes: costs.manifest.param_bytes,
+            payload: SnapshotPayload::Synthetic,
+        })
+    }
+
+    fn restore_instance(
+        &self,
+        model: &str,
+        variant: &str,
+        blob: &SnapshotBlob,
+    ) -> Result<(InstanceHandle, InitStats)> {
+        self.restore_calls.fetch_add(1, Ordering::SeqCst);
+        if self.fail_restore.load(Ordering::SeqCst) {
+            return Err(anyhow!("mock engine: injected restore failure"));
+        }
+        if blob.model != model || blob.variant != variant {
+            return Err(anyhow!(
+                "mock engine: snapshot of {}/{} cannot restore {model}/{variant}",
+                blob.model,
+                blob.variant
+            ));
+        }
+        let costs = self.costs(model)?;
+        if variant != "pallas" && variant != "ref" {
+            return Err(anyhow!("mock engine: unknown variant {variant:?}"));
+        }
+        // A snapshot carries the compiled code with it: restoring also
+        // seeds the compile cache (the mock's analog of the PJRT shard
+        // cache seeding), so the restore itself pays only the weight
+        // upload — never a compile.
+        self.compiled.lock().unwrap().insert(model.to_string());
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.instances.lock().unwrap().insert((0, id));
+        Ok((
+            InstanceHandle { model: model.to_string(), variant: variant.to_string(), shard: 0, id },
+            InitStats {
+                compile: Duration::ZERO,
+                init_run: Duration::from_secs_f64(blob.size_bytes as f64 / MOCK_RESTORE_BW),
+                weight_bytes: costs.manifest.param_bytes,
+            },
+        ))
     }
 
     fn drop_instance(&self, handle: &InstanceHandle) {
@@ -314,6 +387,55 @@ mod tests {
         for (seed, p) in [1u64, 2, 3].iter().zip(&preds) {
             assert_eq!(p.top1, e.predict(&h, *seed).unwrap().top1);
         }
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_skips_compile() {
+        let e = MockEngine::paper_zoo();
+        let (h, cold) = e.create_instance("resnet18", "pallas").unwrap();
+        let blob = e.snapshot_instance(&h).unwrap();
+        assert_eq!(blob.model, "resnet18");
+        assert_eq!(blob.size_bytes, e.manifest("resnet18").unwrap().param_bytes);
+        assert!(matches!(blob.payload, SnapshotPayload::Synthetic));
+        // The source instance stays live and usable after capture.
+        let solo = e.predict(&h, 9).unwrap();
+
+        let (h2, restored) = e.restore_instance("resnet18", "pallas", &blob).unwrap();
+        assert_eq!(e.live_instances(), 2);
+        assert_eq!(restored.compile, Duration::ZERO, "restore never compiles");
+        assert!(restored.init_run < cold.init_run, "weight upload beats the init run");
+        let expect = blob.size_bytes as f64 / MOCK_RESTORE_BW;
+        assert!((restored.init_run.as_secs_f64() - expect).abs() < 1e-12);
+        // A restored instance predicts exactly like the original.
+        let p = e.predict(&h2, 9).unwrap();
+        assert_eq!(p.top1, solo.top1);
+        assert_eq!(p.compute, solo.compute);
+        e.drop_instance(&h);
+        e.drop_instance(&h2);
+        assert_eq!(e.live_instances(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_failure_injection_and_mismatch() {
+        let e = MockEngine::paper_zoo();
+        let (h, _) = e.create_instance("squeezenet", "pallas").unwrap();
+        let blob = e.snapshot_instance(&h).unwrap();
+        // Mismatched model/variant is refused, nothing leaks.
+        assert!(e.restore_instance("resnet18", "pallas", &blob).is_err());
+        assert!(e.restore_instance("squeezenet", "ref", &blob).is_err());
+        assert_eq!(e.live_instances(), 1);
+        // Injected failures: capture and restore both fail cleanly.
+        e.fail_snapshot.store(true, Ordering::SeqCst);
+        assert!(e.snapshot_instance(&h).is_err());
+        e.fail_snapshot.store(false, Ordering::SeqCst);
+        e.fail_restore.store(true, Ordering::SeqCst);
+        assert!(e.restore_instance("squeezenet", "pallas", &blob).is_err());
+        assert_eq!(e.live_instances(), 1, "failed restore creates nothing");
+        e.fail_restore.store(false, Ordering::SeqCst);
+        assert!(e.restore_instance("squeezenet", "pallas", &blob).is_ok());
+        // A dead instance cannot be captured.
+        e.drop_instance(&h);
+        assert!(e.snapshot_instance(&h).is_err());
     }
 
     #[test]

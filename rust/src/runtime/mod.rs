@@ -15,8 +15,8 @@ mod manifest;
 mod mock;
 mod pjrt;
 
-pub use engine::{Engine, InitStats, InstanceHandle, Prediction};
+pub use engine::{Engine, InitStats, InstanceHandle, Prediction, SnapshotBlob, SnapshotPayload};
 pub use image::synthetic_image;
 pub use manifest::{ModelManifest, Zoo};
-pub use mock::{MockEngine, MockModelCosts, BATCH_COST_MARGINAL};
+pub use mock::{MockEngine, MockModelCosts, BATCH_COST_MARGINAL, MOCK_RESTORE_BW};
 pub use pjrt::PjrtEngine;

@@ -18,7 +18,7 @@
 //! list, and `infer(param_0.., image) -> probs f32[1, C]` with argmax
 //! computed here.
 
-use super::engine::{Engine, InitStats, InstanceHandle, Prediction};
+use super::engine::{Engine, InitStats, InstanceHandle, Prediction, SnapshotBlob, SnapshotPayload};
 use super::image::synthetic_image;
 use super::manifest::{ModelManifest, Zoo};
 use crate::exec::channel::{bounded, unbounded, Receiver, Sender};
@@ -26,7 +26,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 enum Cmd {
@@ -44,6 +44,16 @@ enum Cmd {
         instance: u64,
         image_seeds: Vec<u64>,
         reply: Sender<Result<Vec<Prediction>>>,
+    },
+    SnapshotInstance {
+        instance: u64,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    RestoreInstance {
+        model: String,
+        variant: String,
+        flat: Arc<Vec<f32>>,
+        reply: Sender<Result<(u64, InitStats)>>,
     },
     DropInstance {
         instance: u64,
@@ -166,6 +176,65 @@ impl Engine for PjrtEngine {
         reply_rx.recv().map_err(|_| anyhow!("engine shard {} dropped reply", handle.shard))?
     }
 
+    fn snapshot_instance(&self, handle: &InstanceHandle) -> Result<SnapshotBlob> {
+        let manifest = self.zoo.get(&handle.model)?;
+        let (reply_tx, reply_rx) = bounded(1);
+        self.shards[handle.shard]
+            .send(Cmd::SnapshotInstance { instance: handle.id, reply: reply_tx })
+            .map_err(|_| anyhow!("engine shard {} is down", handle.shard))?;
+        let flat = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine shard {} dropped reply", handle.shard))??;
+        Ok(SnapshotBlob {
+            model: handle.model.clone(),
+            variant: handle.variant.clone(),
+            size_bytes: manifest.param_bytes,
+            payload: SnapshotPayload::PjrtWeights { shard: handle.shard, flat: Arc::new(flat) },
+        })
+    }
+
+    fn restore_instance(
+        &self,
+        model: &str,
+        variant: &str,
+        blob: &SnapshotBlob,
+    ) -> Result<(InstanceHandle, InitStats)> {
+        if blob.model != model || blob.variant != variant {
+            bail!(
+                "snapshot of {}/{} cannot restore {model}/{variant}",
+                blob.model,
+                blob.variant
+            );
+        }
+        let SnapshotPayload::PjrtWeights { shard, flat } = &blob.payload else {
+            bail!("snapshot payload is not restorable by the PJRT engine");
+        };
+        // Route back to the capturing shard: its compile cache already
+        // holds this model's executables, so the restore pays weight
+        // upload only.
+        let shard = *shard;
+        if shard >= self.shards.len() {
+            bail!("snapshot references unknown engine shard {shard}");
+        }
+        let (reply_tx, reply_rx) = bounded(1);
+        self.shards[shard]
+            .send(Cmd::RestoreInstance {
+                model: model.to_string(),
+                variant: variant.to_string(),
+                flat: flat.clone(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine shard {shard} is down"))?;
+        let (id, stats) = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine shard {shard} dropped reply"))??;
+        self.live.fetch_add(1, Ordering::SeqCst);
+        Ok((
+            InstanceHandle { model: model.to_string(), variant: variant.to_string(), shard, id },
+            stats,
+        ))
+    }
+
     fn drop_instance(&self, handle: &InstanceHandle) {
         if self.shards[handle.shard].send(Cmd::DropInstance { instance: handle.id }).is_ok() {
             self.live.fetch_sub(1, Ordering::SeqCst);
@@ -215,6 +284,12 @@ fn shard_main(zoo: Zoo, rx: Receiver<Cmd>) {
                     Cmd::PredictBatch { reply, .. } => {
                         let _ = reply.send(Err(anyhow!("no PJRT client: {e}")));
                     }
+                    Cmd::SnapshotInstance { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("no PJRT client: {e}")));
+                    }
+                    Cmd::RestoreInstance { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("no PJRT client: {e}")));
+                    }
                     Cmd::DropInstance { .. } => {}
                     Cmd::Shutdown => return,
                 }
@@ -236,6 +311,12 @@ fn shard_main(zoo: Zoo, rx: Receiver<Cmd>) {
                 let _ = reply.send(
                     image_seeds.iter().map(|&seed| shard.predict(instance, seed)).collect(),
                 );
+            }
+            Cmd::SnapshotInstance { instance, reply } => {
+                let _ = reply.send(shard.snapshot(instance));
+            }
+            Cmd::RestoreInstance { model, variant, flat, reply } => {
+                let _ = reply.send(shard.restore(&model, &variant, &flat));
             }
             Cmd::DropInstance { instance } => {
                 shard.instances.remove(&instance);
@@ -317,6 +398,69 @@ impl Shard {
         let id = self.next_id;
         self.next_id += 1;
         self.instances.insert(id, Instance { key, params });
+        Ok((id, InitStats { compile, init_run, weight_bytes: manifest.param_bytes }))
+    }
+
+    /// Pull a live instance's parameter buffers back to the host as
+    /// one flat `f32` vector (manifest order) — the restorable state a
+    /// snapshot stores. Read-only: the instance keeps serving.
+    fn snapshot(&mut self, instance: u64) -> Result<Vec<f32>> {
+        let inst = self
+            .instances
+            .get(&instance)
+            .ok_or_else(|| anyhow!("no such instance {instance} on this shard"))?;
+        let manifest = self.zoo.get(&inst.key.0)?;
+        let mut flat: Vec<f32> = Vec::with_capacity(manifest.param_elements as usize);
+        for p in &inst.params {
+            let lit = p
+                .to_literal_sync()
+                .map_err(|e| anyhow!("snapshot literal sync: {e}"))?;
+            flat.extend(lit.to_vec::<f32>().map_err(|e| anyhow!("snapshot to_vec: {e}"))?);
+        }
+        if flat.len() as u64 != manifest.param_elements {
+            bail!(
+                "snapshot of {} captured {} elements, manifest says {}",
+                inst.key.0,
+                flat.len(),
+                manifest.param_elements
+            );
+        }
+        Ok(flat)
+    }
+
+    /// Create an instance from snapshotted weights: the compile is a
+    /// cache hit when the blob lands on the shard that captured it
+    /// (the normal routing — "cache seeding"; a miss still compiles,
+    /// honestly reported), and the init execution is skipped entirely
+    /// in favor of uploading the blob's parameters.
+    fn restore(&mut self, model: &str, variant: &str, flat: &[f32]) -> Result<(u64, InitStats)> {
+        let compile = self.compile(model, variant)?;
+        let manifest = self.zoo.get(model)?;
+        if flat.len() as u64 != manifest.param_elements {
+            bail!(
+                "snapshot for {model} holds {} elements, manifest says {}",
+                flat.len(),
+                manifest.param_elements
+            );
+        }
+        let t0 = Instant::now();
+        let mut params = Vec::with_capacity(manifest.param_count);
+        let mut off = 0usize;
+        for shape in &manifest.param_shapes {
+            let n: usize = shape.iter().product();
+            params.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&flat[off..off + n], shape, None)
+                    .map_err(|e| anyhow!("uploading restored param: {e}"))?,
+            );
+            off += n;
+        }
+        let init_run = t0.elapsed();
+
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances
+            .insert(id, Instance { key: (model.to_string(), variant.to_string()), params });
         Ok((id, InitStats { compile, init_run, weight_bytes: manifest.param_bytes }))
     }
 

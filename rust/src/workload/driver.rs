@@ -58,6 +58,11 @@ impl DriverReport {
     pub fn cold_count(&self) -> usize {
         self.ok_samples().iter().filter(|s| s.start == StartKind::Cold).count()
     }
+
+    /// Requests served by a snapshot-restored provision.
+    pub fn restored_count(&self) -> usize {
+        self.ok_samples().iter().filter(|s| s.start == StartKind::Restored).count()
+    }
 }
 
 fn network_delay(net: &NetworkConfig, rng: &mut SplitMix64) -> Duration {

@@ -395,3 +395,92 @@ fn per_function_concurrency_cap_is_enforced_over_http() {
     sh.shutdown();
     t.join().unwrap();
 }
+
+/// Snapshot/restore over HTTP: the per-function `snapshot` override
+/// round-trips through deploy/PATCH (tri-state null), a forced-cold
+/// invocation restores from the checkpoint the first cold seeded, and
+/// both stats routes serve the snapshot gauges + the per-component
+/// provision percentiles.
+#[test]
+fn snapshot_roundtrip_restore_and_stats_fields_over_http() {
+    use lambdaserve::configparse::CapturePolicy;
+    let engine = Arc::new(MockEngine::new(vec![MockModelCosts::paper_like(
+        "squeezenet",
+        2,
+        5.0,
+        85,
+    )]));
+    let mut config = PlatformConfig {
+        bootstrap: BootstrapConfig { simulate_delays: false, ..Default::default() },
+        ..Default::default()
+    };
+    config.snapshot.enabled = true;
+    config.snapshot.capture_policy = CapturePolicy::Sync;
+    // Keep a platform handle so the test can force warm-pool misses.
+    let p = Arc::new(Invoker::live(config, engine));
+    let gw = Gateway::bind("127.0.0.1:0", 8, p.clone()).unwrap();
+    let addr = gw.local_addr().to_string();
+    let sh = gw.shutdown_handle();
+    let t = std::thread::spawn(move || gw.serve().unwrap());
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+
+    // Override round-trip: explicit false, PATCH to true, null clears.
+    let f = api
+        .deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024).snapshot(false))
+        .unwrap();
+    assert_eq!(f.snapshot, Some(false));
+    let f = api
+        .reconfigure("sq", &ReconfigureSpec { snapshot: Some(Some(true)), ..Default::default() })
+        .unwrap();
+    assert_eq!(f.snapshot, Some(true));
+    let f = api
+        .reconfigure("sq", &ReconfigureSpec { snapshot: Some(None), ..Default::default() })
+        .unwrap();
+    assert_eq!(f.snapshot, None, "null clears to the (enabled) platform default");
+
+    // First invocation: full cold + sync capture.
+    let r = api.invoke("sq", Some(1)).unwrap();
+    assert_eq!(r.start, "cold");
+    // Force the next provision to miss the warm pool, then restore.
+    p.evict_all();
+    let r = api.invoke("sq", Some(2)).unwrap();
+    assert_eq!(r.start, "restored");
+    assert!(r.response_s > 0.0);
+
+    // Function route: restored split + component percentiles + gauges.
+    let s = api.stats("sq").unwrap();
+    assert_eq!(s.invocations, 2);
+    assert_eq!(s.cold_starts, 1);
+    assert_eq!(s.restored_starts, 1);
+    assert_eq!(s.warm_starts, 0);
+    assert!(s.response_restored_p99_s > 0.0);
+    assert!(s.response_restored_p99_s < s.response_cold_p99_s, "restored beats cold");
+    assert!(s.provision_model_load_p99_s > 0.0, "the cold start's real compile+init");
+    assert!(s.provision_restore_p99_s > 0.0, "the restored start's weight upload");
+    assert_eq!(s.provision_runtime_init_p99_s, 0.0, "simulate_delays off");
+    assert_eq!(s.snapshot_hits, 1);
+    assert_eq!(s.snapshot_misses, 1);
+    assert_eq!(s.snapshot_captures, 1);
+    assert_eq!(s.snapshot_evictions, 0);
+    assert_eq!(s.snapshot_bytes, 5_000_000, "squeezenet weights stored");
+
+    // Platform route: same gauges + the provision-source split.
+    let ps = api.platform_stats().unwrap();
+    assert_eq!(ps.restored_starts, 1);
+    assert_eq!(ps.cold_provisions, 1);
+    assert_eq!(ps.restored_provisions, 1);
+    assert_eq!(ps.snapshot_hits, 1);
+    assert_eq!(ps.snapshot_captures, 1);
+    assert_eq!(ps.snapshot_bytes, 5_000_000);
+    assert_eq!(ps.snapshot_stale, 0);
+
+    // Undeploy invalidates the shape's snapshot: stale counted, bytes
+    // released.
+    api.undeploy("sq").unwrap();
+    let ps = api.platform_stats().unwrap();
+    assert_eq!(ps.snapshot_stale, 1);
+    assert_eq!(ps.snapshot_bytes, 0);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
