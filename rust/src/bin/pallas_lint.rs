@@ -1,0 +1,60 @@
+//! `pallas-lint` — the platform's concurrency / virtual-clock /
+//! doc-drift checker as a standalone binary (CI entry point; the same
+//! pass also runs as the `repo_tree_is_lint_clean` unit test).
+//!
+//! ```text
+//! pallas_lint [--json] [-D] [ROOT]
+//! ```
+//!
+//! `ROOT` is the `rust/` crate root (defaults to the compiled-in
+//! `CARGO_MANIFEST_DIR`). Exits 1 when any finding survives
+//! suppressions. `-D` (deny) is accepted for CI-invocation clarity;
+//! findings are always fatal, so it changes nothing.
+
+use lambdaserve::lints;
+use lambdaserve::util::json::Json;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "-D" | "--deny" => {}
+            "-h" | "--help" => {
+                println!("usage: pallas_lint [--json] [-D] [ROOT]");
+                println!("lints the lambdaserve tree for concurrency & clock invariants");
+                return ExitCode::SUCCESS;
+            }
+            other if root.is_none() && !other.starts_with('-') => {
+                root = Some(PathBuf::from(other));
+            }
+            other => {
+                eprintln!("pallas_lint: unknown argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let findings = lints::run(&root);
+    if json {
+        let arr = Json::Arr(findings.iter().map(lints::Finding::to_json).collect());
+        println!("{arr}");
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        if findings.is_empty() {
+            eprintln!("pallas-lint: clean ({} rules)", lints::ALL_RULES.len());
+        } else {
+            eprintln!("pallas-lint: {} finding(s)", findings.len());
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

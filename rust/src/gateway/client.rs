@@ -13,9 +13,12 @@
 //! ```
 
 use crate::httpd::http_request;
+use crate::util::clock::Nanos;
 use crate::util::json::{obj, Json};
+use crate::util::{Clock, SystemClock};
 use std::fmt;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Error from an API call: HTTP envelope errors keep their status and
 /// `code`; transport failures use status 0 / code `"transport"`.
@@ -332,15 +335,29 @@ pub struct PlatformStats {
 pub struct ApiClient {
     addr: String,
     timeout: Duration,
+    /// Drives [`Self::wait_invocation`] polling; a virtual clock makes
+    /// the wait deterministic in tests.
+    clock: Arc<dyn Clock>,
 }
 
 impl ApiClient {
     pub fn new(addr: &str) -> Self {
-        Self { addr: addr.to_string(), timeout: Duration::from_secs(600) }
+        Self {
+            addr: addr.to_string(),
+            timeout: Duration::from_secs(600),
+            clock: Arc::new(SystemClock::new()),
+        }
     }
 
     pub fn with_timeout(mut self, timeout: Duration) -> Self {
         self.timeout = timeout;
+        self
+    }
+
+    /// Replace the polling clock (tests pass a `ManualClock` so
+    /// `wait_invocation` deadlines run on virtual time).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
         self
     }
 
@@ -564,13 +581,13 @@ impl ApiClient {
         poll_every: Duration,
         timeout: Duration,
     ) -> ApiResult<AsyncInvocationStatus> {
-        let deadline = Instant::now() + timeout;
+        let deadline = self.clock.now().saturating_add(timeout.as_nanos() as Nanos);
         loop {
             let status = self.invocation(id)?;
             if status.is_terminal() {
                 return Ok(status);
             }
-            if Instant::now() >= deadline {
+            if self.clock.now() >= deadline {
                 return Err(ApiError {
                     status: 0,
                     code: "timeout".to_string(),
@@ -580,7 +597,7 @@ impl ApiClient {
                     ),
                 });
             }
-            std::thread::sleep(poll_every);
+            self.clock.sleep(poll_every);
         }
     }
 

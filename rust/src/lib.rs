@@ -21,6 +21,7 @@
 //! * model execution: [`runtime`]
 //! * measurement: [`workload`], [`experiments`]
 //! * front door: [`gateway`]
+//! * invariants: [`lints`] (the `pallas_lint` binary, see LINTS.md)
 
 pub mod cliparse;
 pub mod configparse;
@@ -28,6 +29,7 @@ pub mod exec;
 pub mod experiments;
 pub mod gateway;
 pub mod httpd;
+pub mod lints;
 pub mod platform;
 pub mod runtime;
 pub mod stats;

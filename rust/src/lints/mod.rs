@@ -1,0 +1,369 @@
+//! `pallas-lint`: in-repo static analysis for the platform's
+//! concurrency and virtual-clock invariants.
+//!
+//! The serving layer's tail-latency claims rest on hand-rolled
+//! concurrency — waitable pools, batch leaders, capture fences — and
+//! on every wait and timestamp flowing through the [`Clock`] trait so
+//! `ManualClock` tests stay fully virtualized. Those invariants are
+//! machine-checked here rather than left as tribal knowledge. Five
+//! rules (see `LINTS.md` at the repo root for the rationale of each):
+//!
+//! | rule id               | invariant                                          |
+//! |-----------------------|----------------------------------------------------|
+//! | `wall-clock`          | no `Instant::now`/`SystemTime::now`/`thread::sleep` in platform/gateway/runtime non-test code |
+//! | `naked-condvar-wait`  | every condvar wait is bounded (`wait_timeout`)     |
+//! | `lock-order`          | nested lock acquisitions follow the declared manifest; no wait while holding a second lock |
+//! | `poisoned-lock-unwrap`| `.lock().unwrap()` must be the poison-tolerant `plock()` |
+//! | `stats-doc-drift`     | stats JSON fields and API.md stay in sync          |
+//!
+//! Findings can be suppressed with `// lint:allow(rule-id: reason)` on
+//! the same or the preceding line; the reason is mandatory — an allow
+//! without one is itself a finding. The suite runs as a tier-1 test
+//! ([`tests::repo_tree_is_lint_clean`]) and as the `pallas_lint`
+//! binary in CI.
+//!
+//! [`Clock`]: crate::util::Clock
+
+pub mod rules;
+pub mod tokenizer;
+
+use crate::util::json::{obj, Json};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use tokenizer::{tokenize, Tok, TokKind};
+
+/// Rule identifiers (the `rule-id` accepted by `lint:allow`).
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const NAKED_CONDVAR_WAIT: &str = "naked-condvar-wait";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const POISONED_LOCK_UNWRAP: &str = "poisoned-lock-unwrap";
+pub const STATS_DOC_DRIFT: &str = "stats-doc-drift";
+/// Meta-rule: malformed `lint:allow` (missing rule id or reason).
+pub const LINT_ALLOW: &str = "lint-allow";
+
+/// Every registered rule id, in report order.
+pub const ALL_RULES: &[&str] = &[
+    WALL_CLOCK,
+    NAKED_CONDVAR_WAIT,
+    LOCK_ORDER,
+    POISONED_LOCK_UNWRAP,
+    STATS_DOC_DRIFT,
+    LINT_ALLOW,
+];
+
+/// Directories under `rust/src/` whose non-test code the concurrency
+/// rules scan. `util/` (the clock itself), `httpd` (a real socket
+/// transport), the simulation harness, and the lints are out of
+/// scope by construction.
+const SCOPED_DIRS: &[&str] = &["platform", "gateway", "runtime"];
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the repository root.
+    pub file: String,
+    /// 1-indexed; 0 for whole-file findings (stats-doc-drift).
+    pub line: u32,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+impl Finding {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rule", Json::Str(self.rule.to_string())),
+            ("file", Json::Str(self.file.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// A parsed `lint:allow(rule-id: reason)` comment.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub rule: String,
+    pub reason: String,
+    pub line: u32,
+}
+
+/// One tokenized source file plus the derived per-token facts the
+/// rules share.
+pub struct FileCtx {
+    /// Repo-relative path with forward slashes (manifest keys match
+    /// against this).
+    pub path: String,
+    pub toks: Vec<Tok>,
+    /// `is_test[i]` — token `i` sits inside a `#[cfg(test)]` item.
+    pub is_test: Vec<bool>,
+}
+
+impl FileCtx {
+    pub fn new(path: &str, source: &str) -> Self {
+        let toks = tokenize(source);
+        let is_test = mark_cfg_test_regions(&toks);
+        Self { path: path.to_string(), toks, is_test }
+    }
+}
+
+/// Mark the token span of every `#[cfg(test)]` item (attribute through
+/// the matching close brace of the item's body, or through the `;` of
+/// a braceless item).
+fn mark_cfg_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let attr = toks[i].is(TokKind::Punct, "#")
+            && toks[i + 1].is(TokKind::Punct, "[")
+            && toks[i + 2].is(TokKind::Ident, "cfg")
+            && toks[i + 3].is(TokKind::Punct, "(")
+            && toks[i + 4].is(TokKind::Ident, "test")
+            && toks[i + 5].is(TokKind::Punct, ")")
+            && toks[i + 6].is(TokKind::Punct, "]");
+        if !attr {
+            i += 1;
+            continue;
+        }
+        // Walk to the end of the attributed item: the matching `}` of
+        // the first brace block, or a `;` before any brace opens.
+        let mut j = i + 7;
+        let mut depth = 0usize;
+        let mut opened = false;
+        while j < toks.len() {
+            if toks[j].kind == TokKind::Punct {
+                match toks[j].text.as_str() {
+                    "{" => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    "}" => {
+                        depth = depth.saturating_sub(1);
+                        if opened && depth == 0 {
+                            break;
+                        }
+                    }
+                    ";" if !opened => break,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let end = j.min(toks.len().saturating_sub(1));
+        for m in &mut mask[i..=end] {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Parse every `lint:allow(...)` comment in the file. Malformed allows
+/// (no rule id / no reason) come back as findings in the second slot.
+pub fn parse_suppressions(ctx: &FileCtx) -> (Vec<Suppression>, Vec<Finding>) {
+    let mut sups = Vec::new();
+    let mut bad = Vec::new();
+    for t in &ctx.toks {
+        if t.kind != TokKind::Comment {
+            continue;
+        }
+        let Some(at) = t.text.find("lint:allow(") else { continue };
+        let rest = &t.text[at + "lint:allow(".len()..];
+        let Some(close) = rest.rfind(')') else {
+            bad.push(Finding {
+                rule: LINT_ALLOW,
+                file: ctx.path.clone(),
+                line: t.line,
+                message: "malformed lint:allow — missing closing `)`".to_string(),
+            });
+            continue;
+        };
+        let body = &rest[..close];
+        let (rule, reason) = match body.split_once(':') {
+            Some((r, why)) => (r.trim(), why.trim()),
+            None => (body.trim(), ""),
+        };
+        if rule.is_empty() || !ALL_RULES.contains(&rule) {
+            bad.push(Finding {
+                rule: LINT_ALLOW,
+                file: ctx.path.clone(),
+                line: t.line,
+                message: format!("lint:allow names unknown rule {rule:?}"),
+            });
+            continue;
+        }
+        if reason.is_empty() {
+            bad.push(Finding {
+                rule: LINT_ALLOW,
+                file: ctx.path.clone(),
+                line: t.line,
+                message: format!(
+                    "lint:allow({rule}) requires a reason: `lint:allow({rule}: why)`"
+                ),
+            });
+            continue;
+        }
+        sups.push(Suppression {
+            rule: rule.to_string(),
+            reason: reason.to_string(),
+            line: t.line,
+        });
+    }
+    (sups, bad)
+}
+
+/// Drop findings covered by a same-line or preceding-line suppression
+/// for their rule.
+fn apply_suppressions(findings: Vec<Finding>, sups: &[Suppression]) -> Vec<Finding> {
+    findings
+        .into_iter()
+        .filter(|f| {
+            !sups.iter().any(|s| {
+                s.rule == f.rule && (s.line == f.line || s.line + 1 == f.line)
+            })
+        })
+        .collect()
+}
+
+/// Run every rule over the repository. `manifest_dir` is the `rust/`
+/// crate root (`CARGO_MANIFEST_DIR`); API.md is resolved one level up.
+pub fn run(manifest_dir: &Path) -> Vec<Finding> {
+    let src = manifest_dir.join("src");
+    let repo = manifest_dir.parent().unwrap_or(manifest_dir);
+    let mut findings = Vec::new();
+    for dir in SCOPED_DIRS {
+        let mut files = Vec::new();
+        collect_rs_files(&src.join(dir), &mut files);
+        files.sort();
+        for path in files {
+            let Ok(source) = std::fs::read_to_string(&path) else { continue };
+            let rel = path
+                .strip_prefix(repo)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            findings.extend(check_source(&rel, &source));
+        }
+    }
+    findings.extend(rules::stats_doc::check_repo(manifest_dir));
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    findings
+}
+
+/// Run the token rules (1–4) plus suppression handling over one file's
+/// source. Public for the fixture tests.
+pub fn check_source(path: &str, source: &str) -> Vec<Finding> {
+    let ctx = FileCtx::new(path, source);
+    let (sups, mut malformed) = parse_suppressions(&ctx);
+    let mut found = Vec::new();
+    found.extend(rules::wall_clock::check(&ctx));
+    found.extend(rules::condvar_wait::check(&ctx));
+    found.extend(rules::lock_order::check(&ctx));
+    found.extend(rules::poison_lock::check(&ctx));
+    let mut out = apply_suppressions(found, &sups);
+    out.append(&mut malformed);
+    out
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// THE tier-1 gate: the tree must be lint-clean. Reverting any of
+    /// the PR's fixes (e.g. maintainer.rs back to `Instant::now()`
+    /// deadlines, or a `plock` back to `.lock().unwrap()`) makes this
+    /// test fail.
+    #[test]
+    fn repo_tree_is_lint_clean() {
+        let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = run(manifest_dir);
+        assert!(
+            findings.is_empty(),
+            "pallas-lint found {} violation(s):\n{}",
+            findings.len(),
+            findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn cfg_test_region_masks_mod_tests() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn inner() {}\n}\nfn after() {}\n";
+        let ctx = FileCtx::new("x.rs", src);
+        let live = ctx.toks.iter().position(|t| t.is(TokKind::Ident, "live")).unwrap();
+        let inner = ctx.toks.iter().position(|t| t.is(TokKind::Ident, "inner")).unwrap();
+        let after = ctx.toks.iter().position(|t| t.is(TokKind::Ident, "after")).unwrap();
+        assert!(!ctx.is_test[live]);
+        assert!(ctx.is_test[inner]);
+        assert!(!ctx.is_test[after], "masking ends at the matching brace");
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nuse std::time::Instant;\nfn live() {}\n";
+        let ctx = FileCtx::new("x.rs", src);
+        let live = ctx.toks.iter().position(|t| t.is(TokKind::Ident, "live")).unwrap();
+        assert!(!ctx.is_test[live]);
+    }
+
+    #[test]
+    fn suppression_requires_reason() {
+        let src = "// lint:allow(wall-clock)\nfn f() {}\n";
+        let ctx = FileCtx::new("x.rs", src);
+        let (sups, bad) = parse_suppressions(&ctx);
+        assert!(sups.is_empty());
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].rule, LINT_ALLOW);
+        assert!(bad[0].message.contains("requires a reason"), "{}", bad[0].message);
+    }
+
+    #[test]
+    fn suppression_with_reason_parses_and_suppresses_next_line() {
+        let src = "// lint:allow(wall-clock: measuring real engine work)\nlet t = Instant::now();\n";
+        let ctx = FileCtx::new("platform/x.rs", src);
+        let (sups, bad) = parse_suppressions(&ctx);
+        assert!(bad.is_empty());
+        assert_eq!(sups.len(), 1);
+        assert_eq!(sups[0].rule, "wall-clock");
+        assert_eq!(sups[0].reason, "measuring real engine work");
+        assert!(check_source("platform/x.rs", src).is_empty(), "finding suppressed");
+    }
+
+    #[test]
+    fn suppression_for_unknown_rule_is_a_finding() {
+        let src = "// lint:allow(made-up-rule: because)\nfn f() {}\n";
+        let (sups, bad) = parse_suppressions(&FileCtx::new("x.rs", src));
+        assert!(sups.is_empty());
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn suppression_does_not_leak_to_other_rules_or_lines() {
+        let src = "// lint:allow(wall-clock: only this rule)\nfn f() { x.lock().unwrap(); }\n";
+        let out = check_source("platform/x.rs", src);
+        assert_eq!(out.len(), 1, "poisoned-lock-unwrap still fires: {out:?}");
+        assert_eq!(out[0].rule, POISONED_LOCK_UNWRAP);
+        // Two lines below the allow: out of its reach.
+        let src = "// lint:allow(wall-clock: too far away)\n\nlet t = Instant::now();\n";
+        let out = check_source("platform/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, WALL_CLOCK);
+    }
+}

@@ -1,0 +1,75 @@
+//! Rule `naked-condvar-wait`: every condvar wait must be bounded.
+//!
+//! A bare `Condvar::wait(guard)` parks forever on a missed wakeup — a
+//! notifier that crashes between its state write and its `notify`, or
+//! a poisoned-mutex unwind, strands the waiter permanently. The
+//! platform's waiting idiom is a predicate loop around a *bounded*
+//! wait (`pwait_timeout` with a generation counter or re-checked
+//! phase), where a lost notify costs one slice, not liveness.
+//!
+//! Token shape: `.wait(<something>)` — a wait that consumes a guard
+//! argument. Argument-less `.wait()` calls (e.g. `BatchMember::wait`,
+//! thread joins) are domain methods, not condvar waits.
+
+use crate::lints::tokenizer::TokKind;
+use crate::lints::{FileCtx, Finding, NAKED_CONDVAR_WAIT};
+
+pub fn check(ctx: &FileCtx) -> Vec<Finding> {
+    let toks = &ctx.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        // `.` `wait` `(` <non-")"> …
+        if i + 3 < toks.len()
+            && toks[i].is(TokKind::Punct, ".")
+            && toks[i + 1].is(TokKind::Ident, "wait")
+            && toks[i + 2].is(TokKind::Punct, "(")
+            && !toks[i + 3].is(TokKind::Punct, ")")
+        {
+            out.push(Finding {
+                rule: NAKED_CONDVAR_WAIT,
+                file: ctx.path.clone(),
+                line: toks[i + 1].line,
+                message: "unbounded condvar wait — park in bounded slices \
+                          (util::sync::pwait_timeout) inside a predicate loop so a missed \
+                          notify can never strand the waiter"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        check(&FileCtx::new("platform/fixture.rs", src))
+    }
+
+    #[test]
+    fn flags_guard_consuming_wait() {
+        let hits = lint("fn f() { queue = shared.cv.wait(queue).unwrap(); }\n");
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, NAKED_CONDVAR_WAIT);
+    }
+
+    #[test]
+    fn argless_wait_is_a_domain_method() {
+        assert!(lint("fn f() { let share = member.wait()?; handle.wait(); }\n").is_empty());
+    }
+
+    #[test]
+    fn wait_timeout_is_fine() {
+        assert!(lint("fn f() { let (g, _) = cv.wait_timeout(g, d).unwrap(); }\n").is_empty());
+        assert!(lint("fn f() { let (g, _) = pwait_timeout(&cv, g, d); }\n").is_empty());
+    }
+
+    #[test]
+    fn test_code_may_wait_naked() {
+        assert!(lint("#[cfg(test)]\nmod tests {\n fn t() { cv.wait(g).unwrap(); }\n}\n").is_empty());
+    }
+}

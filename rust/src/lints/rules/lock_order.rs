@@ -1,0 +1,350 @@
+//! Rule `lock-order`: nested acquisitions of a file's declared locks
+//! must follow the manifest order, never re-enter a held lock, and
+//! never sit across a condvar wait alongside a second lock.
+//!
+//! [`MANIFEST`] is the repo's lock-ordering declaration: for each file
+//! owning more than zero platform mutexes, the order in which they may
+//! be nested (earlier may be held while acquiring later — never the
+//! reverse). The two real nestings today are the batcher (`open`, the
+//! function→batch map, held while probing a batch's `inner`) and the
+//! async invoker (`queue` held while seeding `results` in `submit`).
+//! Everything else is single-lock by design, and this rule keeps it
+//! that way: an innocent-looking "grab the other map too" refactor
+//! fails the lint instead of deadlocking a soak test three weeks
+//! later.
+//!
+//! The analysis is intra-function and token-level, with deliberately
+//! conservative guard-liveness tracking:
+//!
+//! - a `let`-bound guard lives until `drop(name)` or its block closes;
+//! - a temporary guard (`plock(&x).field`, `if let … = plock(&x)…`)
+//!   lives to the end of its statement — the `;`, or the `}` of an
+//!   attached block (matching Rust's real temporary-scope rules for
+//!   `match`/`if let`, which extend the guard across the whole arm);
+//! - acquisitions through a computed receiver (`self.shard(f)`) are
+//!   untracked: those are leaf locks keyed per function, not part of
+//!   any ordering relation.
+
+use crate::lints::tokenizer::{Tok, TokKind};
+use crate::lints::{FileCtx, Finding, LOCK_ORDER};
+
+use super::path_before;
+
+/// The declared lock order per file (path suffix → mutex field names,
+/// outermost first). A lock name absent here is untracked.
+const MANIFEST: &[(&str, &[&str])] = &[
+    ("platform/batcher.rs", &["open", "inner"]),
+    ("platform/async_invoke.rs", &["queue", "results", "workers"]),
+    ("platform/pool.rs", &["idle", "waiters"]),
+    ("platform/maintainer.rs", &["stop"]),
+    ("platform/snapshots.rs", &["inner"]),
+    ("platform/metrics.rs", &["totals", "recent"]),
+    ("platform/dispatcher.rs", &["depth_by_fn"]),
+    ("platform/invoker.rs", &["map", "maintainer"]),
+    ("platform/billing.rs", &["lines"]),
+    ("platform/scaler.rs", &["rng"]),
+    ("runtime/mock.rs", &["compiled", "instances"]),
+    ("runtime/pjrt.rs", &["joins"]),
+];
+
+/// One tracked lock currently (conservatively) held.
+struct Guard {
+    name: String,
+    rank: usize,
+    /// Brace depth at acquisition.
+    depth: usize,
+    /// `Some(var)` for `let var = …` guards, `None` for temporaries.
+    binding: Option<String>,
+    line: u32,
+}
+
+pub fn check(ctx: &FileCtx) -> Vec<Finding> {
+    let Some(order) = MANIFEST
+        .iter()
+        .find(|(suffix, _)| ctx.path.ends_with(suffix))
+        .map(|(_, names)| *names)
+    else {
+        return Vec::new();
+    };
+    let toks = &ctx.toks;
+    let mut out = Vec::new();
+    let mut held: Vec<Guard> = Vec::new();
+    let mut depth = 0usize;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Comment {
+            continue;
+        }
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => {
+                    depth += 1;
+                    continue;
+                }
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    // Block close ends every guard born inside it, and
+                    // the statement (so the temporaries) of the block's
+                    // own depth.
+                    held.retain(|g| g.depth <= depth && !(g.binding.is_none() && g.depth == depth));
+                    continue;
+                }
+                ";" => {
+                    held.retain(|g| !(g.binding.is_none() && g.depth == depth));
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        if ctx.is_test[i] {
+            continue;
+        }
+        // `drop(name)` releases a let-bound guard early.
+        if t.is(TokKind::Ident, "drop")
+            && i + 3 < toks.len()
+            && toks[i + 1].is(TokKind::Punct, "(")
+            && toks[i + 2].kind == TokKind::Ident
+            && toks[i + 3].is(TokKind::Punct, ")")
+        {
+            let name = toks[i + 2].text.as_str();
+            held.retain(|g| g.binding.as_deref() != Some(name));
+            continue;
+        }
+        // A condvar wait releases exactly the guard it consumes; any
+        // second held lock stays held across the park — a waiter that
+        // can deadlock every other toucher of that lock.
+        let is_wait = (t.is(TokKind::Ident, "pwait_timeout")
+            && i + 1 < toks.len()
+            && toks[i + 1].is(TokKind::Punct, "(")
+            && !(i > 0 && toks[i - 1].is(TokKind::Punct, ".")))
+            || (t.is(TokKind::Punct, ".")
+                && i + 2 < toks.len()
+                && (toks[i + 1].is(TokKind::Ident, "wait")
+                    || toks[i + 1].is(TokKind::Ident, "wait_timeout"))
+                && toks[i + 2].is(TokKind::Punct, "("));
+        if is_wait && held.len() >= 2 {
+            let names: Vec<&str> = held.iter().map(|g| g.name.as_str()).collect();
+            out.push(Finding {
+                rule: LOCK_ORDER,
+                file: ctx.path.clone(),
+                line: t.line,
+                message: format!(
+                    "condvar wait while holding {} tracked locks ({}) — the wait releases \
+                     only its own guard; drop the others first",
+                    held.len(),
+                    names.join(", ")
+                ),
+            });
+        }
+        // Acquisition A: `plock` `(` `&` <field path> `)`.
+        if t.is(TokKind::Ident, "plock")
+            && i + 2 < toks.len()
+            && toks[i + 1].is(TokKind::Punct, "(")
+            && toks[i + 2].is(TokKind::Punct, "&")
+        {
+            if let Some(name) = plain_path_after(toks, i + 3) {
+                acquire(ctx, order, &mut held, &mut out, toks, i, depth, &name);
+            }
+            continue;
+        }
+        // Acquisition B: `<field path>` `.` `lock` `(` `)`.
+        if t.is(TokKind::Punct, ".")
+            && i + 3 < toks.len()
+            && toks[i + 1].is(TokKind::Ident, "lock")
+            && toks[i + 2].is(TokKind::Punct, "(")
+            && toks[i + 3].is(TokKind::Punct, ")")
+        {
+            let segs = path_before(toks, i);
+            if let Some(name) = segs.last().cloned() {
+                let start = i - (2 * segs.len() - 1);
+                acquire(ctx, order, &mut held, &mut out, toks, start, depth, &name);
+            }
+            continue;
+        }
+    }
+    out
+}
+
+/// Forward-parse `ident (. ident)*` starting at `toks[i]`, requiring
+/// the very next token to be `)`. Returns the final segment — the
+/// lock's field name — or `None` for computed receivers (any `(`,
+/// index, etc. in the path).
+fn plain_path_after(toks: &[Tok], mut i: usize) -> Option<String> {
+    let mut last: Option<String> = None;
+    loop {
+        if i >= toks.len() || toks[i].kind != TokKind::Ident {
+            return None;
+        }
+        last = Some(toks[i].text.clone());
+        i += 1;
+        if i < toks.len() && toks[i].is(TokKind::Punct, ".") {
+            i += 1;
+            continue;
+        }
+        break;
+    }
+    if i < toks.len() && toks[i].is(TokKind::Punct, ")") {
+        last
+    } else {
+        None
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn acquire(
+    ctx: &FileCtx,
+    order: &[&str],
+    held: &mut Vec<Guard>,
+    out: &mut Vec<Finding>,
+    toks: &[Tok],
+    start: usize,
+    depth: usize,
+    name: &str,
+) {
+    let Some(rank) = order.iter().position(|n| *n == name) else {
+        return;
+    };
+    let line = toks[start].line;
+    for g in held.iter() {
+        if g.name == name {
+            out.push(Finding {
+                rule: LOCK_ORDER,
+                file: ctx.path.clone(),
+                line,
+                message: format!(
+                    "lock `{name}` acquired while already held (taken at line {}) — \
+                     self-deadlock",
+                    g.line
+                ),
+            });
+        } else if rank < g.rank {
+            out.push(Finding {
+                rule: LOCK_ORDER,
+                file: ctx.path.clone(),
+                line,
+                message: format!(
+                    "acquires `{name}` while holding `{}` — the declared order for this \
+                     file is [{}]",
+                    g.name,
+                    order.join(" < ")
+                ),
+            });
+        }
+    }
+    // `let g = …` / `let mut g = …` binds the guard; anything else is
+    // a temporary.
+    let binding = if start >= 3
+        && toks[start - 1].is(TokKind::Punct, "=")
+        && toks[start - 2].kind == TokKind::Ident
+        && (toks[start - 3].is(TokKind::Ident, "let")
+            || (start >= 4
+                && toks[start - 3].is(TokKind::Ident, "mut")
+                && toks[start - 4].is(TokKind::Ident, "let")))
+    {
+        Some(toks[start - 2].text.clone())
+    } else {
+        None
+    };
+    // Rebinding a name implicitly drops the old guard.
+    if let Some(b) = &binding {
+        held.retain(|g| g.binding.as_deref() != Some(b.as_str()));
+    }
+    held.push(Guard { name: name.to_string(), rank, depth, binding, line });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        check(&FileCtx::new("rust/src/platform/batcher.rs", src))
+    }
+
+    #[test]
+    fn manifest_order_nesting_is_legal() {
+        let src = "fn f(&self) {\n    let open = plock(&self.open);\n    let g = plock(&state.inner);\n    drop(g);\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn reverse_nesting_is_flagged() {
+        let src = "fn f(&self) {\n    let g = plock(&state.inner);\n    let open = plock(&self.open);\n}\n";
+        let hits = lint(src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, LOCK_ORDER);
+        assert_eq!(hits[0].line, 3);
+        assert!(hits[0].message.contains("declared order"), "{}", hits[0].message);
+    }
+
+    #[test]
+    fn reacquiring_a_held_lock_is_flagged() {
+        let src = "fn f(&self) {\n    let a = plock(&self.open);\n    let b = plock(&other.open);\n}\n";
+        let hits = lint(src);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].message.contains("self-deadlock"));
+    }
+
+    #[test]
+    fn temporaries_die_at_their_statement() {
+        // Sequential temps in reverse manifest order never overlap.
+        let src = "fn f(&self) {\n    plock(&state.inner).seeds.len();\n    plock(&self.open).clear();\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn temporaries_live_across_an_attached_block() {
+        // `if let` extends the guard across the arm (real Rust
+        // temporary-scope semantics) — a nested reverse acquisition
+        // inside the block is a genuine deadlock.
+        let src = "fn f(&self) {\n    if let Some(s) = plock(&state.inner).shares.first() {\n        plock(&self.open).remove(k);\n    }\n}\n";
+        let hits = lint(src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 3);
+    }
+
+    #[test]
+    fn drop_releases_a_let_bound_guard() {
+        let src = "fn f(&self) {\n    let g = plock(&state.inner);\n    drop(g);\n    let open = plock(&self.open);\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn block_close_releases_let_bound_guards() {
+        let src = "fn f(&self) {\n    {\n        let g = plock(&state.inner);\n    }\n    let open = plock(&self.open);\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn wait_while_holding_a_second_lock_is_flagged() {
+        let src = "fn f(&self) {\n    let open = plock(&self.open);\n    let g = plock(&state.inner);\n    let (g, _) = pwait_timeout(&state.cv, g, d);\n}\n";
+        let hits = lint(src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].message.contains("condvar wait while holding"));
+    }
+
+    #[test]
+    fn wait_with_only_its_own_guard_is_fine() {
+        let src = "fn f(&self) {\n    let mut g = plock(&state.inner);\n    g = pwait_timeout(&state.cv, g, d).0;\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn computed_receivers_are_untracked() {
+        let src = "fn f(&self) {\n    let open = plock(&self.open);\n    plock(&self.shard(name)).apply(r);\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn dot_lock_spelling_is_tracked_too() {
+        let src = "fn f(&self) {\n    let g = state.inner.lock().unwrap();\n    let open = self.open.lock().unwrap();\n}\n";
+        let hits = lint(src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].message.contains("declared order"));
+    }
+
+    #[test]
+    fn files_without_a_manifest_entry_are_skipped() {
+        let src = "fn f() { let a = plock(&x.inner); let b = plock(&y.open); }\n";
+        assert!(check(&FileCtx::new("platform/unlisted.rs", src)).is_empty());
+    }
+}

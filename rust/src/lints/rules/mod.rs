@@ -1,0 +1,42 @@
+//! The rule implementations. Each rule exposes
+//! `check(&FileCtx) -> Vec<Finding>` (rule 5, `stats_doc`, checks the
+//! stats route source against API.md instead and exposes
+//! `check_repo`).
+
+pub mod condvar_wait;
+pub mod lock_order;
+pub mod poison_lock;
+pub mod stats_doc;
+pub mod wall_clock;
+
+use super::tokenizer::{Tok, TokKind};
+
+/// True when `toks[i..]` starts with the given `(kind, text)` pattern.
+pub(crate) fn matches_seq(toks: &[Tok], i: usize, pat: &[(TokKind, &str)]) -> bool {
+    if i + pat.len() > toks.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(k, (kind, text))| toks[i + k].is(*kind, text))
+}
+
+/// Parse a field path ending at `toks[end]` (exclusive), walking
+/// backwards over `ident (. ident)*` — e.g. for the tokens of
+/// `self.shared.queue` returns `["self", "shared", "queue"]`. Returns
+/// an empty vec when `toks[end-1]` is not an identifier.
+pub(crate) fn path_before(toks: &[Tok], end: usize) -> Vec<String> {
+    let mut segs: Vec<String> = Vec::new();
+    let mut i = end;
+    loop {
+        if i == 0 || toks[i - 1].kind != TokKind::Ident {
+            break;
+        }
+        segs.push(toks[i - 1].text.clone());
+        i -= 1;
+        if i == 0 || !toks[i - 1].is(TokKind::Punct, ".") {
+            break;
+        }
+        i -= 1;
+    }
+    segs.reverse();
+    segs
+}

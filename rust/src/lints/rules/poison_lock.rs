@@ -1,0 +1,82 @@
+//! Rule `poisoned-lock-unwrap`: Mutex acquisition must tolerate
+//! poison.
+//!
+//! Every platform mutex protects plain data whose invariants hold
+//! between statements — poison after a panicking holder is noise, not
+//! corruption. `.lock().unwrap()` turns one panicking request thread
+//! into a platform-wide cascade: the batcher's state, the warm pool,
+//! the async queue all become landmines that panic every later
+//! toucher. The shared idiom is [`crate::util::plock`] (and
+//! `pwait_timeout` for condvar waits), which maps `PoisonError` to
+//! its inner guard.
+
+use crate::lints::tokenizer::TokKind;
+use crate::lints::{FileCtx, Finding, POISONED_LOCK_UNWRAP};
+
+pub fn check(ctx: &FileCtx) -> Vec<Finding> {
+    let toks = &ctx.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        // `.` `lock` `(` `)` `.` (`unwrap`|`expect`) `(`
+        if i + 6 < toks.len()
+            && toks[i].is(TokKind::Punct, ".")
+            && toks[i + 1].is(TokKind::Ident, "lock")
+            && toks[i + 2].is(TokKind::Punct, "(")
+            && toks[i + 3].is(TokKind::Punct, ")")
+            && toks[i + 4].is(TokKind::Punct, ".")
+            && (toks[i + 5].is(TokKind::Ident, "unwrap") || toks[i + 5].is(TokKind::Ident, "expect"))
+            && toks[i + 6].is(TokKind::Punct, "(")
+        {
+            out.push(Finding {
+                rule: POISONED_LOCK_UNWRAP,
+                file: ctx.path.clone(),
+                line: toks[i + 1].line,
+                message: format!(
+                    ".lock().{}() panics on a poisoned mutex, cascading one panicking \
+                     holder into every later toucher — use util::sync::plock, which maps \
+                     PoisonError to its inner guard",
+                    toks[i + 5].text
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        check(&FileCtx::new("platform/fixture.rs", src))
+    }
+
+    #[test]
+    fn flags_unwrap_and_expect() {
+        let hits = lint(
+            "fn f() {\n    let a = self.idle.lock().unwrap();\n    let b = m.lock().expect(\"poisoned\");\n}\n",
+        );
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].line, 2);
+        assert!(hits[1].message.contains("expect"));
+    }
+
+    #[test]
+    fn plock_is_the_fix() {
+        assert!(lint("fn f() { let g = plock(&self.idle); }\n").is_empty());
+    }
+
+    #[test]
+    fn unwrap_of_non_lock_results_is_fine() {
+        assert!(lint("fn f() { reg.get(name).unwrap(); cv.wait_timeout(g, d).unwrap(); }\n").is_empty());
+    }
+
+    #[test]
+    fn test_code_may_unwrap() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { s.inner.lock().unwrap(); }\n}\n";
+        assert!(lint(src).is_empty());
+    }
+}

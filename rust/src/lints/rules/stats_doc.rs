@@ -1,0 +1,188 @@
+//! Rule `stats-doc-drift`: the stats API and its documentation move
+//! together.
+//!
+//! Every JSON field emitted by the two stats routes
+//! (`rust/src/gateway/api/stats.rs`) must appear in the Stats section
+//! of `API.md`, and every key documented there must actually be
+//! emitted — in BOTH directions, so a new gauge cannot land
+//! undocumented and a renamed one cannot leave its old name behind in
+//! the reference. The comparison is union-set: a key may be shown in
+//! either route's example block (the shard block is shared between
+//! them, so documenting it once suffices).
+//!
+//! Emitted keys are read from the source tokens: string literals in
+//! `("name", value)` pair position (previous token `(`, next `,`)
+//! that look like JSON field names. Documented keys are read from the
+//! ```json fenced blocks under the two `### GET …stats` headings.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::lints::tokenizer::{tokenize, TokKind};
+use crate::lints::{Finding, STATS_DOC_DRIFT};
+
+const STATS_SRC: &str = "rust/src/gateway/api/stats.rs";
+const DOC: &str = "API.md";
+
+/// Repo-level check: compare the emitted and documented stats keys.
+/// `manifest_dir` is the crate root (`rust/`); API.md lives one level
+/// up.
+pub fn check_repo(manifest_dir: &Path) -> Vec<Finding> {
+    let repo = manifest_dir.parent().unwrap_or(manifest_dir);
+    let src_path = manifest_dir.join("src/gateway/api/stats.rs");
+    let doc_path = repo.join(DOC);
+    let mut out = Vec::new();
+    let Ok(src) = std::fs::read_to_string(&src_path) else {
+        out.push(whole_file(STATS_SRC, format!("cannot read {}", src_path.display())));
+        return out;
+    };
+    let Ok(doc) = std::fs::read_to_string(&doc_path) else {
+        out.push(whole_file(DOC, format!("cannot read {}", doc_path.display())));
+        return out;
+    };
+    compare(&emitted_keys(&src), &documented_keys(&doc))
+}
+
+/// The comparison itself, separated for fixture tests.
+pub fn compare(emitted: &BTreeSet<String>, documented: &BTreeSet<String>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for key in emitted.difference(documented) {
+        out.push(whole_file(
+            STATS_SRC,
+            format!("stats field \"{key}\" is emitted but not documented in API.md's Stats section"),
+        ));
+    }
+    for key in documented.difference(emitted) {
+        out.push(whole_file(
+            DOC,
+            format!("stats field \"{key}\" is documented in API.md but never emitted by stats.rs"),
+        ));
+    }
+    out
+}
+
+fn whole_file(file: &str, message: String) -> Finding {
+    Finding { rule: STATS_DOC_DRIFT, file: file.to_string(), line: 0, message }
+}
+
+/// Field names emitted by stats.rs: string literals in `("name", …)`
+/// pair position. The `(` Str `,` shape excludes every other string
+/// in the file (route params, error messages, format strings).
+pub fn emitted_keys(source: &str) -> BTreeSet<String> {
+    let toks = tokenize(source);
+    let mut keys = BTreeSet::new();
+    for i in 1..toks.len().saturating_sub(1) {
+        if toks[i].kind == TokKind::Str
+            && toks[i - 1].is(TokKind::Punct, "(")
+            && toks[i + 1].is(TokKind::Punct, ",")
+            && is_field_name(&toks[i].text)
+        {
+            keys.insert(toks[i].text.clone());
+        }
+    }
+    keys
+}
+
+/// Keys of every ```json block inside a `###` section whose heading
+/// mentions "stats".
+pub fn documented_keys(doc: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut in_stats_section = false;
+    let mut in_json = false;
+    for line in doc.lines() {
+        if let Some(heading) = line.strip_prefix("###") {
+            in_stats_section = heading.contains("stats");
+            continue;
+        }
+        if line.starts_with("##") {
+            in_stats_section = false;
+            continue;
+        }
+        if !in_stats_section {
+            continue;
+        }
+        if line.trim_start().starts_with("```") {
+            in_json = !in_json && line.trim_start().starts_with("```json");
+            continue;
+        }
+        if in_json {
+            collect_json_keys(line, &mut keys);
+        }
+    }
+    keys
+}
+
+/// Pull every `"key":` occurrence out of one line of a JSON example.
+fn collect_json_keys(line: &str, keys: &mut BTreeSet<String>) {
+    let mut rest = line;
+    while let Some(start) = rest.find('"') {
+        let after = &rest[start + 1..];
+        let Some(end) = after.find('"') else { return };
+        let (candidate, tail) = (&after[..end], &after[end + 1..]);
+        if tail.trim_start().starts_with(':') && is_field_name(candidate) {
+            keys.insert(candidate.to_string());
+        }
+        rest = tail;
+    }
+}
+
+fn is_field_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    matches!(chars.next(), Some('a'..='z'))
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emitted_keys_sees_pair_literals_only() {
+        let src = r#"
+            fn fields() -> Vec<(&'static str, Json)> {
+                vec![("invocations", Json::Num(1.0)), ("cold_starts", Json::Num(0.0))]
+            }
+            fn handler() -> Responder {
+                let name = params.require("name");
+                err(404, "not_found", &format!("function {name:?} is gone"))
+            }
+        "#;
+        let keys = emitted_keys(src);
+        assert!(keys.contains("invocations"));
+        assert!(keys.contains("cold_starts"));
+        assert!(!keys.contains("name"), "call-argument strings are not fields");
+        assert!(!keys.contains("not_found"), "non-pair position is not a field");
+    }
+
+    #[test]
+    fn documented_keys_reads_json_blocks_under_stats_headings_only() {
+        let doc = "\
+## Stats\n\n### `GET /v2/functions/:name/stats`\n\n```json\n{\"invocations\": 12,\n \"cold_starts\": 2}\n```\n\n### `GET /v2/stats`\n\n```json\n{\"functions\": 3}\n```\n\n## Other\n\n```json\n{\"unrelated\": 1}\n```\n";
+        let keys = documented_keys(doc);
+        assert_eq!(
+            keys,
+            ["invocations", "cold_starts", "functions"]
+                .iter()
+                .map(ToString::to_string)
+                .collect()
+        );
+    }
+
+    #[test]
+    fn drift_is_reported_in_both_directions() {
+        let emitted: BTreeSet<String> =
+            ["invocations", "new_gauge"].iter().map(ToString::to_string).collect();
+        let documented: BTreeSet<String> =
+            ["invocations", "stale_key"].iter().map(ToString::to_string).collect();
+        let out = compare(&emitted, &documented);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().any(|f| f.file == STATS_SRC && f.message.contains("new_gauge")));
+        assert!(out.iter().any(|f| f.file == DOC && f.message.contains("stale_key")));
+    }
+
+    #[test]
+    fn in_sync_sets_are_clean() {
+        let keys: BTreeSet<String> = ["a_key"].iter().map(ToString::to_string).collect();
+        assert!(compare(&keys, &keys).is_empty());
+    }
+}

@@ -1,0 +1,119 @@
+//! Rule `wall-clock`: platform, gateway, and runtime non-test code
+//! must not read or sleep on the wall clock directly.
+//!
+//! `util/clock.rs` is the platform's single source of time: every
+//! timestamp, deadline, and sleep goes through the `Clock` trait so a
+//! `ManualClock` test owns time completely. A stray `Instant::now()`
+//! mixes wall time into a virtual run — the exact bug this PR fixed in
+//! `maintainer.rs`, where the tick loop waited on wall deadlines while
+//! eviction read virtual time. Sites that measure *real engine work*
+//! (fed to `CpuGovernor::throttle`, which ignores them on virtual
+//! clocks) carry a reasoned `lint:allow`.
+
+use crate::lints::tokenizer::TokKind;
+use crate::lints::{FileCtx, Finding, WALL_CLOCK};
+
+use super::matches_seq;
+
+pub fn check(ctx: &FileCtx) -> Vec<Finding> {
+    let toks = &ctx.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        let banned = if matches_seq(
+            toks,
+            i,
+            &[
+                (TokKind::Ident, "Instant"),
+                (TokKind::Punct, ":"),
+                (TokKind::Punct, ":"),
+                (TokKind::Ident, "now"),
+            ],
+        ) {
+            Some("Instant::now()")
+        } else if matches_seq(
+            toks,
+            i,
+            &[
+                (TokKind::Ident, "SystemTime"),
+                (TokKind::Punct, ":"),
+                (TokKind::Punct, ":"),
+                (TokKind::Ident, "now"),
+            ],
+        ) {
+            Some("SystemTime::now()")
+        } else if matches_seq(
+            toks,
+            i,
+            &[
+                (TokKind::Ident, "thread"),
+                (TokKind::Punct, ":"),
+                (TokKind::Punct, ":"),
+                (TokKind::Ident, "sleep"),
+            ],
+        ) {
+            Some("thread::sleep")
+        } else {
+            None
+        };
+        if let Some(what) = banned {
+            out.push(Finding {
+                rule: WALL_CLOCK,
+                file: ctx.path.clone(),
+                line: toks[i].line,
+                message: format!(
+                    "{what} in non-test platform code — route time through the Clock trait \
+                     (clock.now() / clock.sleep()) so ManualClock runs stay virtual"
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        check(&FileCtx::new("platform/fixture.rs", src))
+    }
+
+    #[test]
+    fn flags_all_three_wall_clock_forms() {
+        let src = "fn f() {\n    let a = Instant::now();\n    let b = SystemTime::now();\n    std::thread::sleep(d);\n}\n";
+        let hits = lint(src);
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].line, 2);
+        assert_eq!(hits[1].line, 3);
+        assert_eq!(hits[2].line, 4);
+        assert!(hits[2].message.contains("thread::sleep"));
+    }
+
+    #[test]
+    fn ignores_test_code_comments_and_strings() {
+        let src = "\
+// Instant::now() in a comment\n\
+/* thread::sleep in a block comment */\n\
+fn f() { let s = \"Instant::now()\"; let r = r#\"SystemTime::now()\"#; }\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn t() { let a = Instant::now(); std::thread::sleep(d); }\n\
+}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn import_alone_is_not_flagged() {
+        // Importing the type is fine (tests may use it); calling
+        // `::now` is what leaks wall time.
+        assert!(lint("use std::time::{Duration, Instant};\n").is_empty());
+    }
+
+    #[test]
+    fn clock_trait_calls_are_fine() {
+        assert!(lint("fn f(c: &dyn Clock) { let t = c.now(); c.sleep(d); }\n").is_empty());
+    }
+}

@@ -1,0 +1,382 @@
+//! A minimal comment- and string-aware Rust tokenizer.
+//!
+//! Just enough lexing for `pallas-lint`'s rules: identifiers, single
+//! punctuation characters, and *opaque* literals. String/char literal
+//! contents and comment bodies become single tokens, so `Instant::now`
+//! inside a doc comment, a `"..."` fixture, or an `r#"..."#` raw
+//! string can never trip a rule — while comments stay addressable for
+//! `lint:allow` suppression parsing.
+
+/// Token classes the rules dispatch on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `Instant`, `lock`, ...).
+    Ident,
+    /// One punctuation character (`.`, `(`, `{`, `#`, ...).
+    Punct,
+    /// String literal of any flavor (`"..."`, `r"..."`, `r#"..."#`,
+    /// `b"..."`, `br#"..."#`); `text` is the raw content only.
+    Str,
+    /// Character or byte literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`) — distinguished from `Char` so `'a` never eats
+    /// a quote.
+    Lifetime,
+    /// Line, block, or doc comment; `text` is the body without the
+    /// delimiters (block comments keep interior newlines).
+    Comment,
+    /// Numeric literal (opaque).
+    Num,
+}
+
+/// One token with its 1-indexed starting line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Unterminated literals/comments end at EOF rather
+/// than erroring: the linter must degrade gracefully on any input.
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line: u32 = 1;
+    let n = chars.len();
+    // Count newlines inside a span and advance the cursor.
+    macro_rules! bump {
+        ($from:expr, $to:expr) => {
+            for &ch in &chars[$from..$to.min(n)] {
+                if ch == '\n' {
+                    line += 1;
+                }
+            }
+            i = $to;
+        };
+    }
+    while i < n {
+        let c = chars[i];
+        let start_line = line;
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Comment,
+                text: chars[i + 2..j].iter().collect(),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // Nested block comments, per the Rust grammar.
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let body_end = if depth == 0 { j - 2 } else { j };
+            toks.push(Tok {
+                kind: TokKind::Comment,
+                text: chars[i + 2..body_end.max(i + 2)].iter().collect(),
+                line: start_line,
+            });
+            bump!(i, j);
+            continue;
+        }
+        // Identifiers — including the raw/byte string prefixes `r`,
+        // `b`, `br`, which hand off to the literal scanners below.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            let word: String = chars[i..j].iter().collect();
+            if (word == "r" || word == "br") && j < n && (chars[j] == '"' || chars[j] == '#') {
+                if let Some((content, end)) = scan_raw_string(&chars, j) {
+                    toks.push(Tok { kind: TokKind::Str, text: content, line: start_line });
+                    bump!(i, end);
+                    continue;
+                }
+            }
+            if word == "b" && j < n && chars[j] == '"' {
+                let (content, end) = scan_quoted(&chars, j);
+                toks.push(Tok { kind: TokKind::Str, text: content, line: start_line });
+                bump!(i, end);
+                continue;
+            }
+            if word == "b" && j < n && chars[j] == '\'' {
+                let end = scan_char_literal(&chars, j);
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line: start_line });
+                bump!(i, end);
+                continue;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: word, line: start_line });
+            i = j;
+            continue;
+        }
+        // Plain strings.
+        if c == '"' {
+            let (content, end) = scan_quoted(&chars, i);
+            toks.push(Tok { kind: TokKind::Str, text: content, line: start_line });
+            bump!(i, end);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if is_char_literal(&chars, i) {
+                let end = scan_char_literal(&chars, i);
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line: start_line });
+                bump!(i, end);
+                continue;
+            }
+            // Lifetime: consume the quote + identifier.
+            let mut j = i + 1;
+            while j < n && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lifetime,
+                text: chars[i + 1..j].iter().collect(),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // Numbers (opaque; good enough to keep `0.5` from emitting a
+        // `.` punct that could confuse method-chain patterns).
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n
+                && (chars[j].is_ascii_alphanumeric()
+                    || chars[j] == '_'
+                    || (chars[j] == '.' && j + 1 < n && chars[j + 1].is_ascii_digit()))
+            {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: chars[i..j].iter().collect(),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line: start_line });
+        i += 1;
+    }
+    toks
+}
+
+/// `chars[at]` is `"`. Returns (content, index past the closing quote).
+fn scan_quoted(chars: &[char], at: usize) -> (String, usize) {
+    let n = chars.len();
+    let mut j = at + 1;
+    let mut content = String::new();
+    while j < n {
+        match chars[j] {
+            '\\' if j + 1 < n => {
+                content.push(chars[j]);
+                content.push(chars[j + 1]);
+                j += 2;
+            }
+            '"' => return (content, j + 1),
+            c => {
+                content.push(c);
+                j += 1;
+            }
+        }
+    }
+    (content, n)
+}
+
+/// `chars[at]` is `"` or `#` right after an `r`/`br` prefix. Returns
+/// (content, index past the closing delimiter), or `None` when this
+/// isn't actually a raw string (e.g. `r#foo` raw identifiers).
+fn scan_raw_string(chars: &[char], at: usize) -> Option<(String, usize)> {
+    let n = chars.len();
+    let mut hashes = 0;
+    let mut j = at;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        return None;
+    }
+    j += 1;
+    let content_start = j;
+    while j < n {
+        if chars[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0;
+            while k < n && seen < hashes && chars[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some((chars[content_start..j].iter().collect(), k));
+            }
+        }
+        j += 1;
+    }
+    Some((chars[content_start..].iter().collect(), n))
+}
+
+/// Disambiguate `'a'` (char) from `'a` (lifetime) at a `'`.
+fn is_char_literal(chars: &[char], at: usize) -> bool {
+    let n = chars.len();
+    if at + 1 >= n {
+        return false;
+    }
+    if chars[at + 1] == '\\' {
+        return true;
+    }
+    // 'x' where x is any single char followed by a closing quote —
+    // but NOT '' (empty) and not 'ident (lifetime).
+    chars[at + 1] != '\'' && at + 2 < n && chars[at + 2] == '\''
+}
+
+/// `chars[at]` is the opening `'` of a confirmed char literal.
+/// Returns the index past the closing quote.
+fn scan_char_literal(chars: &[char], at: usize) -> usize {
+    let n = chars.len();
+    let mut j = at + 1;
+    while j < n {
+        match chars[j] {
+            '\\' if j + 1 < n => j += 2,
+            '\'' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn code_in_string_literals_is_opaque() {
+        // The exact trap the wall-clock rule must not fall into.
+        let src = r#"let s = "Instant::now()"; let t = 1;"#;
+        assert!(!idents(src).contains(&"Instant".to_string()));
+        assert!(kinds(src).contains(&(TokKind::Str, "Instant::now()".to_string())));
+    }
+
+    #[test]
+    fn raw_strings_are_opaque_and_balanced() {
+        let src = r##"let s = r#"x.lock().unwrap() "quoted" more"#; Instant"##;
+        let ks = kinds(src);
+        assert!(ks.contains(&(TokKind::Str, r#"x.lock().unwrap() "quoted" more"#.to_string())));
+        // Tokenization resumes correctly after the raw terminator.
+        assert!(idents(src).contains(&"Instant".to_string()));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let src = r#"let a = b"Instant::now()"; let c = b'x';"#;
+        assert!(!idents(src).contains(&"Instant".to_string()));
+        assert!(kinds(src).iter().any(|(k, _)| *k == TokKind::Char));
+    }
+
+    #[test]
+    fn comments_are_tokens_not_code() {
+        let src = "// Instant::now() here\nlet x = 1; /* thread::sleep */";
+        let toks = tokenize(src);
+        assert!(!idents(src).contains(&"Instant".to_string()));
+        assert!(!idents(src).contains(&"thread".to_string()));
+        let comments: Vec<&str> =
+            toks.iter().filter(|t| t.kind == TokKind::Comment).map(|t| t.text.as_str()).collect();
+        assert_eq!(comments, vec![" Instant::now() here", " thread::sleep "]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ fn x() {}";
+        assert_eq!(idents(src), vec!["fn", "x"]);
+    }
+
+    #[test]
+    fn block_comment_containing_instant_now_spans_lines() {
+        let src = "/* line one\n Instant::now()\n line three */\nfn after() {}";
+        let toks = tokenize(src);
+        assert_eq!(toks[0].kind, TokKind::Comment);
+        assert_eq!(toks[0].line, 1);
+        let f = toks.iter().find(|t| t.is(TokKind::Ident, "fn")).unwrap();
+        assert_eq!(f.line, 4, "line counting survives multi-line comments");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'b' }";
+        let toks = tokenize(src);
+        let lifetimes: Vec<&str> =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text.as_str()).collect();
+        assert_eq!(lifetimes, vec!["a", "a"]);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn escaped_quotes_and_chars() {
+        let src = r#"let q = "say \"Instant\""; let c = '\''; let d = '\\'; fn after() {}"#;
+        assert!(idents(src).contains(&"after".to_string()));
+        assert!(!idents(src).contains(&"Instant".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_are_one_indexed_and_accurate() {
+        let src = "fn a() {}\n\nfn b() {}\n";
+        let toks = tokenize(src);
+        let b = toks.iter().find(|t| t.is(TokKind::Ident, "b")).unwrap();
+        assert_eq!(b.line, 3);
+    }
+}

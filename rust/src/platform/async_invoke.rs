@@ -26,6 +26,7 @@ use super::invoker::{InvokeError, Platform, SaturationKind};
 use super::metrics::InvocationRecord;
 use crate::runtime::Prediction;
 use crate::util::clock::Nanos;
+use crate::util::{plock, pwait_timeout};
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -95,6 +96,11 @@ impl std::error::Error for SubmitError {}
 /// in line with the old ~60 s cumulative-backoff budget.
 const MAX_ADMISSION_ATTEMPTS: u32 = 30;
 
+/// Cap on one idle worker park: jobs arrive with a notify, so this
+/// only bounds how long a lost wakeup (submitter crashing between
+/// enqueue and notify) can delay pickup or shutdown.
+const WORKER_PARK_SLICE: Duration = Duration::from_millis(100);
+
 struct Job {
     id: String,
     function: String,
@@ -118,7 +124,7 @@ impl Shared {
     fn purge(&self) {
         let now = self.platform.clock().now();
         let ttl = self.ttl_ns;
-        self.results.lock().unwrap().retain(|_, entry| match entry.finished_at {
+        plock(&self.results).retain(|_, entry| match entry.finished_at {
             Some(done) => now.saturating_sub(done) <= ttl,
             None => true,
         });
@@ -167,7 +173,7 @@ impl AsyncInvoker {
         let now = self.shared.platform.clock().now();
         let id = format!("inv-{:08x}", self.seq.fetch_add(1, Ordering::Relaxed));
         {
-            let mut queue = self.shared.queue.lock().unwrap();
+            let mut queue = plock(&self.shared.queue);
             if queue.len() >= self.shared.capacity {
                 return Err(SubmitError::QueueFull { capacity: self.shared.capacity });
             }
@@ -177,7 +183,7 @@ impl AsyncInvoker {
                 seed,
                 attempts: 0,
             });
-            self.shared.results.lock().unwrap().insert(
+            plock(&self.shared.results).insert(
                 id.clone(),
                 AsyncInvocation {
                     id: id.clone(),
@@ -198,17 +204,17 @@ impl AsyncInvoker {
     /// Snapshot of one invocation; `None` when unknown or expired.
     pub fn get(&self, id: &str) -> Option<AsyncInvocation> {
         self.shared.purge();
-        self.shared.results.lock().unwrap().get(id).cloned()
+        plock(&self.shared.results).get(id).cloned()
     }
 
     /// Jobs waiting in the queue (not yet picked up by a worker).
     pub fn queued(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        plock(&self.shared.queue).len()
     }
 
     /// Entries currently in the result store (any status).
     pub fn stored(&self) -> usize {
-        self.shared.results.lock().unwrap().len()
+        plock(&self.shared.results).len()
     }
 
     /// Force a TTL sweep (the store also self-purges on access).
@@ -221,7 +227,7 @@ impl Drop for AsyncInvoker {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
-        for handle in self.workers.lock().unwrap().drain(..) {
+        for handle in plock(&self.workers).drain(..) {
             let _ = handle.join();
         }
     }
@@ -230,7 +236,7 @@ impl Drop for AsyncInvoker {
 fn worker_loop(shared: &Arc<Shared>) {
     loop {
         let job = {
-            let mut queue = shared.queue.lock().unwrap();
+            let mut queue = plock(&shared.queue);
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -238,10 +244,13 @@ fn worker_loop(shared: &Arc<Shared>) {
                 if let Some(job) = queue.pop_front() {
                     break job;
                 }
-                queue = shared.cv.wait(queue).unwrap();
+                // Bounded park, never a naked wait: shutdown and new
+                // work are re-checked every slice, so a notify racing
+                // a worker crash can only delay a job by one slice.
+                queue = pwait_timeout(&shared.cv, queue, WORKER_PARK_SLICE).0;
             }
         };
-        if let Some(entry) = shared.results.lock().unwrap().get_mut(&job.id) {
+        if let Some(entry) = plock(&shared.results).get_mut(&job.id) {
             entry.status = AsyncStatus::Running;
         }
         // The invoke itself rides the shared admission path: a
@@ -257,7 +266,7 @@ fn worker_loop(shared: &Arc<Shared>) {
             Err(InvokeError::Throttled) | Err(InvokeError::Saturated(_))
         );
         if transient && job.attempts + 1 < MAX_ADMISSION_ATTEMPTS {
-            if let Some(entry) = shared.results.lock().unwrap().get_mut(&job.id) {
+            if let Some(entry) = plock(&shared.results).get_mut(&job.id) {
                 entry.status = AsyncStatus::Queued;
             }
             // Park on the pool's capacity condvar — the same
@@ -286,7 +295,7 @@ fn worker_loop(shared: &Arc<Shared>) {
                 shared.platform.pool.wait_for_change(deadline);
             }
             {
-                let mut queue = shared.queue.lock().unwrap();
+                let mut queue = plock(&shared.queue);
                 queue.push_back(Job { attempts: job.attempts + 1, ..job });
             }
             shared.cv.notify_one();
@@ -294,7 +303,7 @@ fn worker_loop(shared: &Arc<Shared>) {
         }
         let now = shared.platform.clock().now();
         {
-            let mut results = shared.results.lock().unwrap();
+            let mut results = plock(&shared.results);
             if let Some(entry) = results.get_mut(&job.id) {
                 entry.finished_at = Some(now);
                 match outcome {

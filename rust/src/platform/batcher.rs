@@ -33,7 +33,7 @@
 use super::registry::FunctionSpec;
 use crate::runtime::Prediction;
 use crate::util::clock::Nanos;
-use crate::util::{Clock, VirtualWaitPacer};
+use crate::util::{plock, pwait_timeout, Clock, VirtualWaitPacer};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -44,6 +44,11 @@ use std::time::Duration;
 /// often, so a held container never blocks a parked request for more
 /// than one probe interval past the moment it could be serving.
 const REAL_FLUSH_PROBE: Duration = Duration::from_millis(10);
+
+/// Cap on one real-clock follower park: results are delivered by
+/// notify, so this only bounds how long a lost wakeup (leader thread
+/// killed between state write and notify) can strand a follower.
+const FOLLOWER_PARK_SLICE: Duration = Duration::from_millis(50);
 
 /// What each member of an executed batch gets back.
 #[derive(Debug, Clone)]
@@ -180,12 +185,12 @@ impl Batcher {
     /// within the given admission deadline) — the parked-waiter
     /// interrupt probe (see `WarmPool::acquire_or_reserve_or`).
     pub fn has_open(&self, spec: &FunctionSpec, deadline: Nanos) -> bool {
-        let open = self.open.lock().unwrap();
+        let open = plock(&self.open);
         match open.get(&spec.name) {
             None => false,
             Some(state) => {
                 same_embodiment(&state.spec, spec)
-                    && Self::joinable(&state.inner.lock().unwrap(), deadline)
+                    && Self::joinable(&plock(&state.inner), deadline)
             }
         }
     }
@@ -196,12 +201,12 @@ impl Batcher {
     /// The returned member parks in [`BatchMember::wait`] until the
     /// leader distributes results.
     pub fn try_join(&self, spec: &FunctionSpec, seed: u64, deadline: Nanos) -> Option<BatchMember> {
-        let open = self.open.lock().unwrap();
+        let open = plock(&self.open);
         let state = open.get(&spec.name)?.clone();
         if !same_embodiment(&state.spec, spec) {
             return None;
         }
-        let mut g = state.inner.lock().unwrap();
+        let mut g = plock(&state.inner);
         if !Self::joinable(&g, deadline) {
             return None;
         }
@@ -226,7 +231,7 @@ impl Batcher {
         if !self.enabled(spec) {
             return None;
         }
-        let mut open = self.open.lock().unwrap();
+        let mut open = plock(&self.open);
         if open.contains_key(&spec.name) {
             return None;
         }
@@ -271,7 +276,7 @@ impl Batcher {
 
     /// Drop `function`'s open-batch slot if it holds `state`.
     fn release_slot(&self, function: &str, state: &Arc<BatchState>) {
-        let mut open = self.open.lock().unwrap();
+        let mut open = plock(&self.open);
         if let Some(cur) = open.get(function) {
             if Arc::ptr_eq(cur, state) {
                 open.remove(function);
@@ -314,7 +319,7 @@ impl BatchLeader<'_> {
         let mut pacer = VirtualWaitPacer::new();
         let mut waited_once = false;
         loop {
-            let g = self.state.inner.lock().unwrap();
+            let g = plock(&self.state.inner);
             if g.seeds.len() >= g.max {
                 return;
             }
@@ -329,7 +334,7 @@ impl BatchLeader<'_> {
             }
             let len_before = g.seeds.len();
             let timeout = pacer.next_timeout(&**clock, deadline).min(REAL_FLUSH_PROBE);
-            let (g, _) = self.state.cv.wait_timeout(g, timeout).unwrap();
+            let (g, _) = pwait_timeout(&self.state.cv, g, timeout);
             let progressed = g.seeds.len() != len_before;
             drop(g);
             waited_once = true;
@@ -342,7 +347,7 @@ impl BatchLeader<'_> {
     /// executes), and return the member seeds (index 0 = leader) for
     /// `Container::execute_batch`.
     pub fn close(&mut self) -> Vec<u64> {
-        let mut g = self.state.inner.lock().unwrap();
+        let mut g = plock(&self.state.inner);
         g.phase = Phase::Executing;
         g.exec_started_at = self.state.clock.now();
         let seeds = g.seeds.clone();
@@ -354,14 +359,14 @@ impl BatchLeader<'_> {
 
     /// Size of the batch right now (after `close`: final size).
     pub fn size(&self) -> usize {
-        self.state.inner.lock().unwrap().seeds.len()
+        plock(&self.state.inner).seeds.len()
     }
 
     /// Distribute the executed batch: per-member predictions (seed
     /// order) plus the effective duration of the whole pass. Returns
     /// the LEADER's own share; followers wake with theirs.
     pub fn complete(mut self, predictions: Vec<Prediction>, effective: Duration) -> BatchShare {
-        let mut g = self.state.inner.lock().unwrap();
+        let mut g = plock(&self.state.inner);
         assert_eq!(predictions.len(), g.seeds.len(), "one prediction per member");
         let n = g.seeds.len();
         let billed_share = effective / n as u32;
@@ -403,7 +408,7 @@ impl BatchLeader<'_> {
     }
 
     fn fail_inner(&mut self, error: String) {
-        let mut g = self.state.inner.lock().unwrap();
+        let mut g = plock(&self.state.inner);
         g.phase = Phase::Failed;
         g.error = Some(error);
         drop(g);
@@ -439,7 +444,7 @@ impl BatchMember {
     /// drive the clock); on non-real clocks this waits in bounded wall
     /// slices so cross-thread wakeups are never missed.
     pub fn wait(self) -> Result<BatchShare, String> {
-        let mut g = self.state.inner.lock().unwrap();
+        let mut g = plock(&self.state.inner);
         loop {
             match g.phase {
                 Phase::Done => {
@@ -452,15 +457,16 @@ impl BatchMember {
                         .unwrap_or_else(|| "batched execution failed".to_string()));
                 }
                 Phase::Collecting | Phase::Executing => {
-                    g = if self.state.clock.is_real() {
-                        self.state.cv.wait(g).unwrap()
+                    // Bounded park, never a naked wait: the phase is
+                    // re-checked every slice, so a notify lost to a
+                    // racing leader crash delays the follower by one
+                    // slice instead of parking it forever.
+                    let slice = if self.state.clock.is_real() {
+                        FOLLOWER_PARK_SLICE
                     } else {
-                        self.state
-                            .cv
-                            .wait_timeout(g, VirtualWaitPacer::WAIT_SLICE)
-                            .unwrap()
-                            .0
+                        VirtualWaitPacer::WAIT_SLICE
                     };
+                    g = pwait_timeout(&self.state.cv, g, slice).0;
                 }
             }
         }
@@ -681,6 +687,38 @@ mod tests {
         assert!(err.contains("aborted"), "{err}");
         assert!(!b.has_open(&s, u64::MAX));
         assert!(b.lead(&s, 9).is_some(), "slot reusable after the abort");
+    }
+
+    /// A batch leader that panics mid-pass *while holding the batch
+    /// mutex* poisons it — followers and the leader's own RAII fail
+    /// path must shrug that off (plock semantics) instead of turning
+    /// one crash into a platform-wide panic cascade.
+    #[test]
+    fn panicking_leader_does_not_wedge_or_panic_followers() {
+        let clock = ManualClock::new();
+        let b = Batcher::new(4, 60_000, clock);
+        let s = spec(None, None);
+        let leader = b.lead(&s, 1).unwrap();
+        let member = b.try_join(&s, 2, u64::MAX).unwrap();
+        let follower = std::thread::spawn(move || member.wait());
+        // Worst-case crash: the mutex is poisoned AND the leader
+        // unwinds without completing the batch.
+        let state = leader.state.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = state.inner.lock().unwrap();
+            panic!("leader dies mid-batch");
+        })
+        .join();
+        assert!(leader.state.inner.is_poisoned());
+        drop(leader); // the RAII fail path must tolerate the poison
+        let err = follower.join().expect("follower must not panic").unwrap_err();
+        assert!(err.contains("aborted"), "{err}");
+        // The slot was freed through the poisoned mutex: the next
+        // leader opens and completes a batch normally.
+        assert!(!b.has_open(&s, u64::MAX));
+        let next = b.lead(&s, 9).expect("slot reusable after the crash");
+        next.complete(vec![pred(1, 10)], Duration::from_millis(10));
+        assert_eq!(b.batches_executed(), 1);
     }
 
     /// One open batch per function: while one collects, a second

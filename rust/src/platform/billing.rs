@@ -7,6 +7,7 @@
 //! memory while execution time falls, so total cost is non-monotone.
 
 use crate::configparse::{MemorySize, PricingConfig};
+use crate::util::plock;
 use anyhow::Result;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -81,24 +82,24 @@ impl BillingMeter {
             execution_dollars: units as f64 * per_unit,
             request_dollars: self.pricing.per_request_dollars,
         };
-        self.lines.lock().unwrap().push(line.clone());
+        plock(&self.lines).push(line.clone());
         Ok(line)
     }
 
     pub fn lines(&self) -> Vec<InvoiceLine> {
-        self.lines.lock().unwrap().clone()
+        plock(&self.lines).clone()
     }
 
     pub fn total_dollars(&self) -> f64 {
-        self.lines.lock().unwrap().iter().map(InvoiceLine::total_dollars).sum()
+        plock(&self.lines).iter().map(InvoiceLine::total_dollars).sum()
     }
 
     pub fn total_gb_seconds(&self) -> f64 {
-        self.lines.lock().unwrap().iter().map(InvoiceLine::gb_seconds).sum()
+        plock(&self.lines).iter().map(InvoiceLine::gb_seconds).sum()
     }
 
     pub fn reset(&self) {
-        self.lines.lock().unwrap().clear();
+        plock(&self.lines).clear();
     }
 }
 

@@ -130,6 +130,7 @@ impl Container {
 
         // 4. REAL model load: compile (per-shard cache) + init run.
         //    Measured wall time, scaled into effective time.
+        // lint:allow(wall-clock: measuring REAL engine wall time for CpuGovernor::throttle, which ignores it on virtual clocks)
         let t0 = Instant::now();
         let (handle, stats) = engine.create_instance(&spec.model, &spec.variant)?;
         let real = t0.elapsed();
@@ -196,6 +197,7 @@ impl Container {
         // 3. REAL engine restore: weight upload from the blob, compile
         //    skipped via the capturing shard's cache. Measured wall
         //    time, scaled into effective time like the model load.
+        // lint:allow(wall-clock: measuring REAL engine wall time for CpuGovernor::throttle, which ignores it on virtual clocks)
         let t0 = Instant::now();
         let (handle, stats) = engine.restore_instance(&spec.model, &spec.variant, blob)?;
         let real = t0.elapsed();
@@ -238,6 +240,7 @@ impl Container {
         image_seed: u64,
     ) -> Result<(Prediction, Duration)> {
         assert_eq!(self.state, ContainerState::Busy, "execute on non-busy container");
+        // lint:allow(wall-clock: measuring REAL engine wall time for CpuGovernor::throttle, which ignores it on virtual clocks)
         let t0 = Instant::now();
         let pred = self.engine.predict(&self.handle, image_seed)?;
         let real = t0.elapsed();
@@ -262,6 +265,7 @@ impl Container {
     ) -> Result<(Vec<Prediction>, Duration)> {
         assert_eq!(self.state, ContainerState::Busy, "execute_batch on non-busy container");
         assert!(!seeds.is_empty(), "empty batch");
+        // lint:allow(wall-clock: measuring REAL engine wall time for CpuGovernor::throttle, which ignores it on virtual clocks)
         let t0 = Instant::now();
         let preds = self.engine.predict_batch(&self.handle, seeds)?;
         let real = t0.elapsed();

@@ -35,6 +35,7 @@
 //! a held container must not starve the demand behind it.
 
 use super::registry::FunctionSpec;
+use crate::util::plock;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -102,7 +103,7 @@ impl Dispatcher {
     pub fn admit(&self, spec: &FunctionSpec) -> Option<QueueTicket<'_>> {
         let capacity = self.effective_capacity(spec);
         {
-            let mut g = self.depth_by_fn.lock().unwrap();
+            let mut g = plock(&self.depth_by_fn);
             let count = g.entry(spec.name.clone()).or_insert(0);
             if *count >= capacity {
                 if *count == 0 {
@@ -123,7 +124,7 @@ impl Dispatcher {
 
     /// Requests currently queued for `function`.
     pub fn queue_depth(&self, function: &str) -> usize {
-        self.depth_by_fn.lock().unwrap().get(function).copied().unwrap_or(0)
+        plock(&self.depth_by_fn).get(function).copied().unwrap_or(0)
     }
 
     /// Requests currently queued across all functions.
@@ -148,7 +149,7 @@ impl Dispatcher {
 
 impl Drop for QueueTicket<'_> {
     fn drop(&mut self) {
-        let mut g = self.dispatcher.depth_by_fn.lock().unwrap();
+        let mut g = plock(&self.dispatcher.depth_by_fn);
         if let Some(count) = g.get_mut(&self.function) {
             *count = count.saturating_sub(1);
             if *count == 0 {

@@ -30,7 +30,7 @@ use super::snapshots::{SnapshotKey, SnapshotStore};
 use super::throttle::CpuGovernor;
 use crate::configparse::PlatformConfig;
 use crate::runtime::{Engine, Prediction};
-use crate::util::{Clock, SplitMix64, SystemClock};
+use crate::util::{plock, Clock, SplitMix64, SystemClock};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -151,7 +151,7 @@ impl<'a> FnFlightGuard<'a> {
         name: &str,
         cap: Option<usize>,
     ) -> Option<Self> {
-        let mut g = map.lock().unwrap();
+        let mut g = plock(&map);
         let count = g.entry(name.to_string()).or_insert(0);
         if let Some(cap) = cap {
             if *count >= cap {
@@ -169,7 +169,7 @@ impl<'a> FnFlightGuard<'a> {
 impl Drop for FnFlightGuard<'_> {
     fn drop(&mut self) {
         {
-            let mut g = self.map.lock().unwrap();
+            let mut g = plock(&self.map);
             if let Some(count) = g.get_mut(&self.name) {
                 *count = count.saturating_sub(1);
                 if *count == 0 {
@@ -796,7 +796,7 @@ impl Invoker {
         if interval.is_zero() {
             return false;
         }
-        let mut slot = platform.maintainer.lock().unwrap();
+        let mut slot = plock(&platform.maintainer);
         if slot.is_some() {
             return false;
         }
@@ -806,19 +806,19 @@ impl Invoker {
 
     /// Stop and join the background maintainer, if running.
     pub fn stop_maintainer(&self) {
-        let taken = self.maintainer.lock().unwrap().take();
+        let taken = plock(&self.maintainer).take();
         drop(taken); // joins on drop
     }
 
     /// Ticks completed by the running maintainer (0 when stopped).
     pub fn maintainer_ticks(&self) -> u64 {
-        self.maintainer.lock().unwrap().as_ref().map_or(0, PoolMaintainer::ticks)
+        plock(&self.maintainer).as_ref().map_or(0, PoolMaintainer::ticks)
     }
 
     /// Containers replenished by the running maintainer (0 when
     /// stopped).
     pub fn maintainer_replenished(&self) -> usize {
-        self.maintainer.lock().unwrap().as_ref().map_or(0, PoolMaintainer::replenished_total)
+        plock(&self.maintainer).as_ref().map_or(0, PoolMaintainer::replenished_total)
     }
 }
 

@@ -16,10 +16,12 @@
 //! [`Platform::maintain`], callable directly under a `ManualClock`.
 
 use super::invoker::Platform;
+use crate::util::clock::{Clock, Nanos, VirtualWaitPacer};
+use crate::util::{plock, pwait_timeout};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// What one maintenance tick did.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -45,9 +47,11 @@ pub struct PoolMaintainer {
 }
 
 impl PoolMaintainer {
-    /// Spawn the maintenance thread, ticking every `interval` of wall
-    /// time (the platform clock may still be virtual: eviction reads
-    /// platform time, the tick timer reads wall time).
+    /// Spawn the maintenance thread, ticking every `interval` of
+    /// *platform* time. Under a virtual clock the timer follows the
+    /// test-owned clock: wall time alone never produces a tick, and
+    /// the thread never advances virtual time itself — it parks in
+    /// short wall slices and re-checks the virtual deadline.
     pub fn start(platform: &Arc<Platform>, interval: Duration) -> Self {
         let shared = Arc::new(Shared {
             stop: Mutex::new(false),
@@ -57,10 +61,15 @@ impl PoolMaintainer {
             replenished: AtomicUsize::new(0),
         });
         let weak = Arc::downgrade(platform);
+        let clock = Arc::clone(platform.clock());
+        // First deadline is fixed before the thread runs, so a test
+        // that advances a ManualClock right after start() cannot race
+        // the spawn and push the first tick out by the advance amount.
+        let first_deadline = clock.now().saturating_add(interval.as_nanos() as Nanos);
         let thread_shared = shared.clone();
         let handle = std::thread::Builder::new()
             .name("pool-maintainer".into())
-            .spawn(move || maintainer_loop(weak, interval, thread_shared))
+            .spawn(move || maintainer_loop(weak, clock, interval, first_deadline, thread_shared))
             .expect("spawn pool-maintainer thread");
         Self { shared, handle: Some(handle) }
     }
@@ -82,7 +91,7 @@ impl PoolMaintainer {
 
     /// Signal the thread to stop and join it. Idempotent.
     pub fn stop(&mut self) {
-        *self.shared.stop.lock().unwrap() = true;
+        *plock(&self.shared.stop) = true;
         self.shared.cv.notify_all();
         if let Some(handle) = self.handle.take() {
             // The thread's transient upgrade can be the LAST strong
@@ -103,18 +112,35 @@ impl Drop for PoolMaintainer {
     }
 }
 
-fn maintainer_loop(platform: Weak<Platform>, interval: Duration, shared: Arc<Shared>) {
+fn maintainer_loop(
+    platform: Weak<Platform>,
+    clock: Arc<dyn Clock>,
+    interval: Duration,
+    first_deadline: Nanos,
+    shared: Arc<Shared>,
+) {
+    let interval_ns = interval.as_nanos() as Nanos;
+    let mut deadline = first_deadline;
     loop {
-        // Interruptible sleep: a stop() mid-interval wakes us.
+        // Interruptible sleep until the *platform-clock* deadline: a
+        // stop() mid-interval wakes us.
         {
-            let mut stop = shared.stop.lock().unwrap();
-            let deadline = Instant::now() + interval;
+            let mut stop = plock(&shared.stop);
             while !*stop {
-                let now = Instant::now();
+                let now = clock.now();
                 if now >= deadline {
                     break;
                 }
-                let (guard, _) = shared.cv.wait_timeout(stop, deadline - now).unwrap();
+                // Real clock: park for the exact remainder. Virtual
+                // clock: the test owns time, so park in short wall
+                // slices and re-check — never advance virtual time
+                // from a background daemon.
+                let park = if clock.is_real() {
+                    Duration::from_nanos(deadline - now)
+                } else {
+                    VirtualWaitPacer::WAIT_SLICE
+                };
+                let (guard, _) = pwait_timeout(&shared.cv, stop, park);
                 stop = guard;
             }
             if *stop {
@@ -128,6 +154,7 @@ fn maintainer_loop(platform: Weak<Platform>, interval: Duration, shared: Arc<Sha
         shared.ticks.fetch_add(1, Ordering::SeqCst);
         shared.evicted.fetch_add(report.evicted, Ordering::SeqCst);
         shared.replenished.fetch_add(report.replenished, Ordering::SeqCst);
+        deadline = clock.now().saturating_add(interval_ns);
     }
 }
 
@@ -138,6 +165,7 @@ mod tests {
     use crate::platform::{Invoker, StartKind};
     use crate::runtime::MockEngine;
     use crate::util::ManualClock;
+    use std::time::Instant;
 
     fn platform(max_containers: usize) -> (Arc<Platform>, Arc<ManualClock>) {
         let clock = ManualClock::new();
@@ -213,6 +241,29 @@ mod tests {
         assert!(Invoker::start_maintainer(&p, Duration::from_millis(2)), "restartable after stop");
         // Dropping the platform joins the thread (no hang, no leak).
         drop(p);
+    }
+
+    #[test]
+    fn manualclock_ticks_follow_virtual_time_not_wall_time() {
+        let (p, clock) = platform(1000);
+        p.deploy_full("sq", "squeezenet", "pallas", 512, min_warm(1)).unwrap();
+        assert!(Invoker::start_maintainer(&p, Duration::from_millis(5)));
+        // Plenty of wall time passes, but virtual time stands still:
+        // the tick timer must not fire. (With the old Instant::now()
+        // deadline this races through ~6 wall-clock ticks.)
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(p.maintainer_ticks(), 0, "tick timer leaked wall time under ManualClock");
+        // Advancing the virtual clock past the keep-alive TTL and the
+        // tick interval makes the next tick evict + replenish.
+        clock.sleep(Duration::from_secs(601));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while p.maintainer_ticks() < 1 {
+            assert!(Instant::now() < deadline, "maintainer never ticked on virtual time");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(p.maintainer_replenished() >= 1, "decayed min_warm restored on virtual tick");
+        assert_eq!(p.pool.warm_count("sq"), 1);
+        p.stop_maintainer();
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use crate::configparse::MemorySize;
 use crate::stats::{Histogram, Summary};
+use crate::util::plock;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
@@ -283,12 +284,12 @@ impl MetricsSink {
     pub fn record(&self, r: InvocationRecord) {
         let response_ns = r.response().as_nanos() as u64;
         let predict_ns = r.predict.as_nanos() as u64;
-        self.shard(&r.function).lock().unwrap().apply(&r, response_ns, predict_ns);
-        self.totals.lock().unwrap().apply(&r, response_ns, predict_ns);
+        plock(&self.shard(&r.function)).apply(&r, response_ns, predict_ns);
+        plock(&self.totals).apply(&r, response_ns, predict_ns);
         if self.ring_capacity == 0 {
             return;
         }
-        let mut ring = self.recent.lock().unwrap();
+        let mut ring = plock(&self.recent);
         if ring.len() == self.ring_capacity {
             ring.pop_front();
         }
@@ -297,15 +298,15 @@ impl MetricsSink {
 
     /// Count a 429 against `function`'s shard (and the totals).
     pub fn note_throttled(&self, function: &str) {
-        self.shard(function).lock().unwrap().throttled += 1;
-        self.totals.lock().unwrap().throttled += 1;
+        plock(&self.shard(function)).throttled += 1;
+        plock(&self.totals).throttled += 1;
     }
 
     /// Count a 503 (queue saturated or deadline exhausted) against
     /// `function`'s shard (and the totals).
     pub fn note_queue_expired(&self, function: &str) {
-        self.shard(function).lock().unwrap().queue_expired += 1;
-        self.totals.lock().unwrap().queue_expired += 1;
+        plock(&self.shard(function)).queue_expired += 1;
+        plock(&self.totals).queue_expired += 1;
     }
 
     /// One-lock consistent snapshot of a function's aggregates
@@ -315,7 +316,7 @@ impl MetricsSink {
             .read()
             .unwrap()
             .get(function)
-            .map(|s| s.lock().unwrap().clone())
+            .map(|s| plock(&s).clone())
             .unwrap_or_default()
     }
 
@@ -329,19 +330,19 @@ impl MetricsSink {
         read: impl FnOnce(&FnMetrics) -> R,
     ) -> Option<R> {
         let shard = self.shards.read().unwrap().get(function).cloned()?;
-        let g = shard.lock().unwrap();
+        let g = plock(&shard);
         Some(read(&g))
     }
 
     /// One-lock consistent snapshot of the platform-wide aggregates.
     pub fn platform_metrics(&self) -> FnMetrics {
-        self.totals.lock().unwrap().clone()
+        plock(&self.totals).clone()
     }
 
     /// Run `read` against the live platform totals under their lock
     /// (no histogram copy).
     pub fn with_totals<R>(&self, read: impl FnOnce(&FnMetrics) -> R) -> R {
-        read(&self.totals.lock().unwrap())
+        read(&plock(&self.totals))
     }
 
     /// Drop `function`'s shard (undeploy). Per-function stats are only
@@ -357,7 +358,7 @@ impl MetricsSink {
     /// The recent raw records (bounded by the ring capacity; the
     /// counters/histograms above are the unbounded-horizon truth).
     pub fn records(&self) -> Vec<InvocationRecord> {
-        self.recent.lock().unwrap().iter().cloned().collect()
+        plock(&self.recent).iter().cloned().collect()
     }
 
     pub fn ring_capacity(&self) -> usize {
@@ -366,7 +367,7 @@ impl MetricsSink {
 
     /// Total invocations recorded (NOT the ring length).
     pub fn len(&self) -> usize {
-        self.totals.lock().unwrap().invocations as usize
+        plock(&self.totals).invocations as usize
     }
 
     pub fn is_empty(&self) -> bool {
@@ -375,22 +376,19 @@ impl MetricsSink {
 
     pub fn reset(&self) {
         self.shards.write().unwrap().clear();
-        *self.totals.lock().unwrap() = FnMetrics::default();
-        self.recent.lock().unwrap().clear();
+        *plock(&self.totals) = FnMetrics::default();
+        plock(&self.recent).clear();
     }
 
     /// Count of cold starts observed.
     pub fn cold_count(&self) -> usize {
-        self.totals.lock().unwrap().cold_starts as usize
+        plock(&self.totals).cold_starts as usize
     }
 
     /// Summary of response times (seconds) over `filter`ed recent
     /// records (ring-bounded; experiment tooling).
     pub fn response_summary<F: Fn(&InvocationRecord) -> bool>(&self, filter: F) -> Summary {
-        let xs: Vec<f64> = self
-            .recent
-            .lock()
-            .unwrap()
+        let xs: Vec<f64> = plock(&self.recent)
             .iter()
             .filter(|r| filter(r))
             .map(|r| r.response().as_secs_f64())
@@ -401,10 +399,7 @@ impl MetricsSink {
     /// Summary of prediction times (seconds) over `filter`ed recent
     /// records (ring-bounded).
     pub fn predict_summary<F: Fn(&InvocationRecord) -> bool>(&self, filter: F) -> Summary {
-        let xs: Vec<f64> = self
-            .recent
-            .lock()
-            .unwrap()
+        let xs: Vec<f64> = plock(&self.recent)
             .iter()
             .filter(|r| filter(r))
             .map(|r| r.predict.as_secs_f64())
@@ -415,12 +410,12 @@ impl MetricsSink {
     /// Platform-wide response-time histogram in nanoseconds
     /// (bimodality analysis); streamed, not ring-bounded.
     pub fn response_histogram(&self) -> Histogram {
-        self.totals.lock().unwrap().response_all()
+        plock(&self.totals).response_all()
     }
 
     /// Total cost over all recorded invocations.
     pub fn total_cost(&self) -> f64 {
-        self.totals.lock().unwrap().cost_dollars_total
+        plock(&self.totals).cost_dollars_total
     }
 }
 

@@ -21,7 +21,7 @@
 
 use super::container::Container;
 use crate::util::clock::Nanos;
-use crate::util::{Clock, VirtualWaitPacer};
+use crate::util::{plock, pwait_timeout, Clock, VirtualWaitPacer};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -72,7 +72,7 @@ impl WarmPool {
     /// have freed (also called by the invoker when a per-function
     /// concurrency slot frees, so throttled async workers can re-try).
     pub fn notify_waiters(&self) {
-        *self.waiters.lock().unwrap() += 1;
+        *plock(&self.waiters) += 1;
         self.waiter_cv.notify_all();
     }
 
@@ -92,7 +92,7 @@ impl WarmPool {
         let ttl = self.keep_alive_ns;
         let mut dead: Vec<Container> = Vec::new();
         let hit = {
-            let mut g = self.idle.lock().unwrap();
+            let mut g = plock(&self.idle);
             let (hit, emptied) = match g.get_mut(function) {
                 None => (None, false),
                 Some(stack) => {
@@ -138,7 +138,7 @@ impl WarmPool {
     pub fn release(&self, mut container: Container) {
         container.park(&self.clock);
         {
-            let mut g = self.idle.lock().unwrap();
+            let mut g = plock(&self.idle);
             g.entry(container.spec.name.clone()).or_default().push(container);
         }
         self.notify_waiters();
@@ -200,7 +200,7 @@ impl WarmPool {
         loop {
             // Capture the generation BEFORE probing so a change that
             // lands between the probe and the wait is never missed.
-            let generation = *self.waiters.lock().unwrap();
+            let generation = *plock(&self.waiters);
             if let Some(c) = self.acquire(function) {
                 return AcquireOutcome::Container(c);
             }
@@ -223,7 +223,7 @@ impl WarmPool {
     pub fn wait_for_change(&self, deadline: Nanos) {
         let mut pacer = VirtualWaitPacer::new();
         loop {
-            let generation = *self.waiters.lock().unwrap();
+            let generation = *plock(&self.waiters);
             if self.clock.now() >= deadline {
                 return;
             }
@@ -247,12 +247,12 @@ impl WarmPool {
         pacer: &mut VirtualWaitPacer,
     ) -> bool {
         let changed = {
-            let g = self.waiters.lock().unwrap();
+            let g = plock(&self.waiters);
             if *g != generation {
                 true
             } else {
                 let timeout = pacer.next_timeout(&*self.clock, deadline);
-                let (g, _) = self.waiter_cv.wait_timeout(g, timeout).unwrap();
+                let (g, _) = pwait_timeout(&self.waiter_cv, g, timeout);
                 *g != generation
             }
         };
@@ -268,7 +268,7 @@ impl WarmPool {
         let ttl = self.keep_alive_ns;
         let mut dead = Vec::new();
         {
-            let mut g = self.idle.lock().unwrap();
+            let mut g = plock(&self.idle);
             for stack in g.values_mut() {
                 let mut keep = Vec::with_capacity(stack.len());
                 for c in stack.drain(..) {
@@ -301,7 +301,7 @@ impl WarmPool {
     /// retire through the normal release path.
     pub fn evict_function(&self, function: &str) -> usize {
         let dead: Vec<Container> = {
-            let mut g = self.idle.lock().unwrap();
+            let mut g = plock(&self.idle);
             let dead = g.remove(function).unwrap_or_default();
             if !dead.is_empty() {
                 self.total.fetch_sub(dead.len(), Ordering::SeqCst);
@@ -322,7 +322,7 @@ impl WarmPool {
     pub fn evict_all(&self) -> usize {
         let mut dead = Vec::new();
         {
-            let mut g = self.idle.lock().unwrap();
+            let mut g = plock(&self.idle);
             for (_, mut stack) in std::mem::take(&mut *g) {
                 dead.append(&mut stack);
             }
@@ -347,13 +347,13 @@ impl WarmPool {
 
     /// Warm containers for one function.
     pub fn warm_count(&self, function: &str) -> usize {
-        self.idle.lock().unwrap().get(function).map_or(0, Vec::len)
+        plock(&self.idle).get(function).map_or(0, Vec::len)
     }
 
     /// Function entries currently tracked in the idle map (sweeps must
     /// drop drained entries so churned names don't leak).
     pub fn tracked_functions(&self) -> usize {
-        self.idle.lock().unwrap().len()
+        plock(&self.idle).len()
     }
 }
 
@@ -714,6 +714,39 @@ mod tests {
         assert!(matches!(f.pool.acquire_or_reserve("sq", 0), AcquireOutcome::TimedOut));
         f.pool.retire(_a);
         f.pool.retire(_b);
+    }
+
+    /// A thread that panics while holding the pool's mutexes (the
+    /// batch-leader-crash blast radius) must not take the pool down
+    /// with it: release, acquire, and the waitable path all recover
+    /// through the poisoned locks.
+    #[test]
+    fn pool_survives_poisoned_mutexes() {
+        let mut f = fixture(4, 600.0);
+        let c = provision(&mut f);
+        std::thread::scope(|s| {
+            let pool = &f.pool;
+            let _ = s
+                .spawn(|| {
+                    let _idle = pool.idle.lock().unwrap();
+                    let _gen = pool.waiters.lock().unwrap();
+                    panic!("die holding both pool locks");
+                })
+                .join();
+        });
+        assert!(f.pool.idle.is_poisoned());
+        assert!(f.pool.waiters.is_poisoned());
+        let id = c.id;
+        f.pool.release(c);
+        assert_eq!(f.pool.warm_count("sq"), 1, "release works through poison");
+        match f.pool.acquire_or_reserve("sq", u64::MAX) {
+            AcquireOutcome::Container(c) => {
+                assert_eq!(c.id, id, "waitable acquire works through poison");
+                f.pool.retire(c);
+            }
+            _ => panic!("expected the released container"),
+        }
+        assert_eq!(f.pool.total_alive(), 0);
     }
 
     /// Property: through arbitrary interleavings of provision/release/

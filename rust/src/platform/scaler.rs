@@ -17,7 +17,7 @@ use super::snapshots::SnapshotStore;
 use super::throttle::CpuGovernor;
 use crate::configparse::BootstrapConfig;
 use crate::runtime::Engine;
-use crate::util::{Clock, SplitMix64};
+use crate::util::{plock, Clock, SplitMix64};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -145,7 +145,7 @@ impl Scaler {
         // local RNG: concurrent cold starts (and maintainer
         // replenishment) must never serialize on the multi-second
         // bootstrap sleeps.
-        let mut local = SplitMix64::new(rng.lock().unwrap().next_u64());
+        let mut local = SplitMix64::new(plock(&rng).next_u64());
         let provisioned =
             snapshots.provision(spec, engine, governor, bootstrap, clock, &mut local);
         match provisioned {
@@ -191,7 +191,7 @@ impl Scaler {
             // across the (possibly multi-second) provisioning sleeps —
             // a background top-up must not stall request-path cold
             // starts waiting on the same RNG.
-            let mut r = SplitMix64::new(rng.lock().unwrap().next_u64());
+            let mut r = SplitMix64::new(plock(&rng).next_u64());
             match snapshots.provision(spec, engine, governor, bootstrap, clock, &mut r) {
                 Ok(c) => {
                     // Operator-initiated: NOT a request-visible cold

@@ -24,12 +24,12 @@ use super::registry::FunctionSpec;
 use super::throttle::CpuGovernor;
 use crate::configparse::{BootstrapConfig, CapturePolicy, MemorySize, SnapshotConfig};
 use crate::runtime::{Engine, InstanceHandle, SnapshotBlob};
-use crate::util::{Clock, SplitMix64};
+use crate::util::{plock, Clock, SplitMix64};
 use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Identity of one snapshot artifact: the model + artifact variant +
 /// memory class a restored container embodies — the same tuple a warm
@@ -136,7 +136,7 @@ impl SnapshotStore {
     /// Look up a restorable snapshot, counting hit/miss and touching
     /// the LRU clock.
     pub fn lookup(&self, key: &SnapshotKey) -> Option<Arc<SnapshotBlob>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         g.tick += 1;
         let tick = g.tick;
         match g.entries.get_mut(key) {
@@ -157,7 +157,7 @@ impl SnapshotStore {
     /// existing entry for the key. Returns `false` (and stores
     /// nothing) when the blob alone exceeds the whole capacity.
     pub fn insert(&self, key: SnapshotKey, blob: SnapshotBlob, capture_cost: Duration) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         self.insert_locked(&mut g, key, blob, capture_cost)
     }
 
@@ -173,7 +173,7 @@ impl SnapshotStore {
         capture_cost: Duration,
         began_at_generation: u64,
     ) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         if g.generation_of(&key) != began_at_generation {
             return false;
         }
@@ -219,7 +219,7 @@ impl SnapshotStore {
     /// as stale; also fences any capture currently in flight (its late
     /// insert is discarded). Returns whether an entry was dropped.
     pub fn invalidate(&self, key: &SnapshotKey) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         // Bumped even when nothing is stored yet: the capture that
         // WOULD have stored this shape may still be running.
         *g.invalidations.entry(key.clone()).or_insert(0) += 1;
@@ -238,7 +238,7 @@ impl SnapshotStore {
     /// consecutive ones, at which point it is dropped (counted stale)
     /// so the next full cold provision re-captures fresh state.
     fn note_restore_failure(&self, key: &SnapshotKey) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         let Some(e) = g.entries.get_mut(key) else { return };
         e.failures += 1;
         if e.failures >= MAX_RESTORE_FAILURES {
@@ -251,7 +251,7 @@ impl SnapshotStore {
 
     /// A successful restore proves the blob healthy again.
     fn note_restore_success(&self, key: &SnapshotKey) {
-        if let Some(e) = self.inner.lock().unwrap().entries.get_mut(key) {
+        if let Some(e) = plock(&self.inner).entries.get_mut(key) {
             e.failures = 0;
         }
     }
@@ -306,7 +306,7 @@ impl SnapshotStore {
         let container =
             Container::provision(spec.clone(), engine.clone(), governor, bootstrap, clock, rng)?;
         if enabled {
-            self.schedule_capture(spec, engine, &container);
+            self.schedule_capture(spec, engine, &container, clock);
         }
         Ok(container)
     }
@@ -319,13 +319,14 @@ impl SnapshotStore {
         spec: &Arc<FunctionSpec>,
         engine: &Arc<dyn Engine>,
         container: &Container,
+        clock: &Arc<dyn Clock>,
     ) {
         if self.config.capture_policy == CapturePolicy::Off {
             return;
         }
         let key = SnapshotKey::of(spec);
         let generation = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = plock(&self.inner);
             if g.entries.contains_key(&key) || !g.in_flight.insert(key.clone()) {
                 return;
             }
@@ -333,11 +334,12 @@ impl SnapshotStore {
         };
         let handle = container.handle().clone();
         match self.config.capture_policy {
-            CapturePolicy::Sync => self.run_capture(&key, engine, &handle, generation),
+            CapturePolicy::Sync => self.run_capture(&key, engine, &handle, generation, clock),
             CapturePolicy::Background => {
                 let store = self.clone();
                 let engine = engine.clone();
                 let thread_key = key.clone();
+                let clock = Arc::clone(clock);
                 // Short-lived detached worker holding only the store
                 // and engine Arcs. Racing the container's teardown is
                 // benign: a dead instance fails the capture, which is
@@ -345,10 +347,12 @@ impl SnapshotStore {
                 // redeploy is fenced by the generation.
                 let spawned = std::thread::Builder::new()
                     .name("snapshot-capture".into())
-                    .spawn(move || store.run_capture(&thread_key, &engine, &handle, generation));
+                    .spawn(move || {
+                        store.run_capture(&thread_key, &engine, &handle, generation, &clock)
+                    });
                 if let Err(e) = spawned {
                     log::warn!("snapshot capture thread failed to spawn: {e}");
-                    self.inner.lock().unwrap().in_flight.remove(&key);
+                    plock(&self.inner).in_flight.remove(&key);
                 }
             }
             CapturePolicy::Off => unreachable!("filtered above"),
@@ -358,19 +362,23 @@ impl SnapshotStore {
     /// One capture attempt: serialize the instance and store the blob
     /// (unless an invalidation landed since `generation` was read).
     /// Best-effort — a failed capture (or a blob over capacity) costs
-    /// nothing and leaves the store unchanged.
+    /// nothing and leaves the store unchanged. The capture cost is
+    /// measured on the platform clock so ManualClock runs stay fully
+    /// virtualized.
     fn run_capture(
         &self,
         key: &SnapshotKey,
         engine: &Arc<dyn Engine>,
         handle: &InstanceHandle,
         generation: u64,
+        clock: &Arc<dyn Clock>,
     ) {
-        let t0 = Instant::now();
+        let t0 = clock.now();
         if let Ok(blob) = engine.snapshot_instance(handle) {
-            self.insert_captured(key.clone(), blob, t0.elapsed(), generation);
+            let cost = Duration::from_nanos(clock.now().saturating_sub(t0));
+            self.insert_captured(key.clone(), blob, cost, generation);
         }
-        self.inner.lock().unwrap().in_flight.remove(key);
+        plock(&self.inner).in_flight.remove(key);
     }
 
     /// Successful lookups.
@@ -405,12 +413,12 @@ impl SnapshotStore {
 
     /// Live gauge: bytes currently stored.
     pub fn bytes(&self) -> u64 {
-        self.inner.lock().unwrap().bytes
+        plock(&self.inner).bytes
     }
 
     /// Snapshots currently stored.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        plock(&self.inner).entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -419,7 +427,7 @@ impl SnapshotStore {
 
     /// Wall cost of the stored capture for `key`, if present.
     pub fn capture_cost(&self, key: &SnapshotKey) -> Option<Duration> {
-        self.inner.lock().unwrap().entries.get(key).map(|e| e.capture_cost)
+        plock(&self.inner).entries.get(key).map(|e| e.capture_cost)
     }
 }
 
@@ -430,6 +438,7 @@ mod tests {
     use crate::platform::registry::FunctionRegistry;
     use crate::runtime::{MockEngine, SnapshotPayload};
     use crate::util::ManualClock;
+    use std::time::Instant;
 
     fn store(config: SnapshotConfig) -> Arc<SnapshotStore> {
         Arc::new(SnapshotStore::new(config))

@@ -7,7 +7,7 @@
 
 use super::engine::{Engine, InitStats, InstanceHandle, Prediction, SnapshotBlob, SnapshotPayload};
 use super::manifest::ModelManifest;
-use crate::util::SplitMix64;
+use crate::util::{plock, SplitMix64};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -140,7 +140,7 @@ impl Engine for MockEngine {
             return Err(anyhow!("mock engine: unknown variant {variant:?}"));
         }
         let compile = {
-            let mut c = self.compiled.lock().unwrap();
+            let mut c = plock(&self.compiled);
             if c.insert(model.to_string()) {
                 costs.compile
             } else {
@@ -148,7 +148,7 @@ impl Engine for MockEngine {
             }
         };
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        self.instances.lock().unwrap().insert((0, id));
+        plock(&self.instances).insert((0, id));
         Ok((
             InstanceHandle { model: model.to_string(), variant: variant.to_string(), shard: 0, id },
             InitStats { compile, init_run: costs.init_run, weight_bytes: costs.manifest.param_bytes },
@@ -157,7 +157,7 @@ impl Engine for MockEngine {
 
     fn predict(&self, handle: &InstanceHandle, image_seed: u64) -> Result<Prediction> {
         self.predict_calls.fetch_add(1, Ordering::SeqCst);
-        if !self.instances.lock().unwrap().contains(&(handle.shard, handle.id)) {
+        if !plock(&self.instances).contains(&(handle.shard, handle.id)) {
             return Err(anyhow!("mock engine: predict on dead instance {:?}", handle));
         }
         let costs = self.costs(&handle.model)?;
@@ -188,7 +188,7 @@ impl Engine for MockEngine {
         }
         // One batched forward pass, however many inputs ride it.
         self.predict_calls.fetch_add(1, Ordering::SeqCst);
-        if !self.instances.lock().unwrap().contains(&(handle.shard, handle.id)) {
+        if !plock(&self.instances).contains(&(handle.shard, handle.id)) {
             return Err(anyhow!("mock engine: batched predict on dead instance {:?}", handle));
         }
         let costs = self.costs(&handle.model)?;
@@ -215,7 +215,7 @@ impl Engine for MockEngine {
         if self.fail_snapshot.load(Ordering::SeqCst) {
             return Err(anyhow!("mock engine: injected snapshot failure"));
         }
-        if !self.instances.lock().unwrap().contains(&(handle.shard, handle.id)) {
+        if !plock(&self.instances).contains(&(handle.shard, handle.id)) {
             return Err(anyhow!("mock engine: snapshot of dead instance {:?}", handle));
         }
         let costs = self.costs(&handle.model)?;
@@ -252,9 +252,9 @@ impl Engine for MockEngine {
         // seeds the compile cache (the mock's analog of the PJRT shard
         // cache seeding), so the restore itself pays only the weight
         // upload — never a compile.
-        self.compiled.lock().unwrap().insert(model.to_string());
+        plock(&self.compiled).insert(model.to_string());
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        self.instances.lock().unwrap().insert((0, id));
+        plock(&self.instances).insert((0, id));
         Ok((
             InstanceHandle { model: model.to_string(), variant: variant.to_string(), shard: 0, id },
             InitStats {
@@ -266,11 +266,11 @@ impl Engine for MockEngine {
     }
 
     fn drop_instance(&self, handle: &InstanceHandle) {
-        self.instances.lock().unwrap().remove(&(handle.shard, handle.id));
+        plock(&self.instances).remove(&(handle.shard, handle.id));
     }
 
     fn live_instances(&self) -> usize {
-        self.instances.lock().unwrap().len()
+        plock(&self.instances).len()
     }
 }
 

@@ -3,6 +3,8 @@
 pub mod clock;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use clock::{Clock, ManualClock, SystemClock, VirtualClock, VirtualWaitPacer};
 pub use rng::SplitMix64;
+pub use sync::{plock, pwait_timeout};

@@ -1,0 +1,86 @@
+//! Poison-tolerant locking primitives.
+//!
+//! The platform's shared state (warm pool, batch windows, queue depths,
+//! metrics shards) is guarded by `std::sync::Mutex`. A panic on one
+//! invocation thread — e.g. a batch leader dying mid-forward-pass —
+//! poisons every mutex it held, and a bare `.lock().unwrap()` on any
+//! other thread then turns that single failure into a platform-wide
+//! cascade of panics.
+//!
+//! None of the platform's critical sections leave state torn on panic:
+//! they push/pop whole items, or RAII guards (`BatchLeader`,
+//! `QueueTicket`) restore the invariant on drop. Poison is therefore
+//! noise for us, not a correctness signal, and every lock acquisition
+//! in non-test platform code goes through [`plock`] / [`pwait_timeout`]
+//! instead of `.lock().unwrap()`. The `poisoned-lock-unwrap` rule in
+//! `pallas-lint` enforces this.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn plock<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` that recovers from poison instead of
+/// panicking. Callers must still re-check their predicate in a loop —
+/// this only bounds the park so shutdown / generation bumps are never
+/// missed forever.
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn plock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // A bare .lock().unwrap() would panic here; plock recovers.
+        let mut g = plock(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*plock(&m), 8);
+    }
+
+    #[test]
+    fn pwait_timeout_times_out_and_recovers() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = plock(&m);
+        let (g, res) = pwait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+        assert!(!*g);
+    }
+
+    #[test]
+    fn pwait_timeout_survives_poison() {
+        let pair = Arc::new((Mutex::new(0u32), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("poison the waitable pair");
+        })
+        .join();
+        assert!(pair.0.is_poisoned());
+        let g = plock(&pair.0);
+        let (g, _res) = pwait_timeout(&pair.1, g, Duration::from_millis(1));
+        assert_eq!(*g, 0);
+    }
+}
