@@ -3,13 +3,15 @@
 //! pass also runs as the `repo_tree_is_lint_clean` unit test).
 //!
 //! ```text
-//! pallas_lint [--json] [-D] [ROOT]
+//! pallas_lint [--json] [--timing] [-D] [ROOT]
 //! ```
 //!
 //! `ROOT` is the `rust/` crate root (defaults to the compiled-in
 //! `CARGO_MANIFEST_DIR`). Exits 1 when any finding survives
 //! suppressions. `-D` (deny) is accepted for CI-invocation clarity;
-//! findings are always fatal, so it changes nothing.
+//! findings are always fatal, so it changes nothing. `--timing`
+//! prints per-rule wall time to stderr (stdout stays parseable, so
+//! `--json --timing` composes).
 
 use lambdaserve::lints;
 use lambdaserve::util::json::Json;
@@ -18,13 +20,15 @@ use std::process::ExitCode;
 
 fn main() -> ExitCode {
     let mut json = false;
+    let mut timing = false;
     let mut root: Option<PathBuf> = None;
     for arg in std::env::args().skip(1) {
         match arg.as_str() {
             "--json" => json = true,
+            "--timing" => timing = true,
             "-D" | "--deny" => {}
             "-h" | "--help" => {
-                println!("usage: pallas_lint [--json] [-D] [ROOT]");
+                println!("usage: pallas_lint [--json] [--timing] [-D] [ROOT]");
                 println!("lints the lambdaserve tree for concurrency & clock invariants");
                 return ExitCode::SUCCESS;
             }
@@ -38,7 +42,7 @@ fn main() -> ExitCode {
         }
     }
     let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
-    let findings = lints::run(&root);
+    let (findings, times) = lints::run_timed(&root);
     if json {
         let arr = Json::Arr(findings.iter().map(lints::Finding::to_json).collect());
         println!("{arr}");
@@ -51,6 +55,15 @@ fn main() -> ExitCode {
         } else {
             eprintln!("pallas-lint: {} finding(s)", findings.len());
         }
+    }
+    if timing {
+        let width = times.iter().map(|(r, _)| r.len()).max().unwrap_or(0);
+        let total: std::time::Duration = times.iter().map(|(_, d)| *d).sum();
+        eprintln!("pallas-lint timing:");
+        for (rule, d) in &times {
+            eprintln!("  {rule:width$}  {:>9.3} ms", d.as_secs_f64() * 1e3);
+        }
+        eprintln!("  {:width$}  {:>9.3} ms", "(total)", total.as_secs_f64() * 1e3);
     }
     if findings.is_empty() {
         ExitCode::SUCCESS

@@ -1,0 +1,174 @@
+//! Call-site resolution for the whole-program lint pass.
+//!
+//! Given a method call `recv.path.m(...)` inside a known function, find
+//! the `fn` items it may dispatch to. Resolution is *typed* where the
+//! receiver's type is recoverable — `self.field...` through struct
+//! fields, a parameter name through its declared type — and falls back
+//! to conservative name matching otherwise. Trait-typed receivers
+//! (`Arc<dyn Engine>`) fan out to every impl of the trait plus the
+//! trait's own default-method bodies, which is exactly the
+//! may-analysis the lock rules need: if *any* implementation blocks,
+//! the call site blocks.
+//!
+//! The name-match fallback is what keeps an unresolvable receiver from
+//! silently dropping a call edge, and [`FALLBACK_DENY`] is what keeps
+//! it honest: ubiquitous std-container/iterator/atomic method names
+//! (`get`, `len`, `insert`, ...) are never matched by name — a
+//! `guard.get(k)` on a `BTreeMap` must not resolve to some platform
+//! type's unrelated `get`. Beyond the deny list, a name-match is taken
+//! only when it is *unambiguous* (exactly one candidate method in
+//! scope); two candidates would mean guessing, and a wrong edge
+//! manufactures false deadlock findings.
+
+use crate::lints::symbols::{FnDef, Program};
+
+/// Method names never resolved by bare name matching: std
+/// collection/iterator/atomic/primitive vocabulary. A receiver we
+/// cannot type that calls one of these is treated as a leaf, not as a
+/// platform call. Typed resolution is unaffected — a platform struct
+/// that really defines `get` still resolves through its receiver type.
+pub const FALLBACK_DENY: &[&str] = &[
+    "get", "get_mut", "insert", "remove", "push", "push_back", "push_front", "pop", "pop_back",
+    "pop_front", "len", "is_empty", "clear", "drain", "iter", "iter_mut", "into_iter", "contains",
+    "contains_key", "entry", "clone", "take", "replace", "next", "last", "first", "retain",
+    "extend", "append", "keys", "values", "unwrap", "unwrap_or", "expect", "map", "and_then",
+    "or_insert", "or_default", "to_string", "as_ref", "as_str", "split", "trim", "parse", "send",
+    "store", "load", "fetch_add", "fetch_sub", "swap", "min", "max", "abs", "floor", "ceil",
+    "round", "cloned", "copied", "collect", "filter", "any", "all", "find", "fold", "sum",
+    "count", "rev", "chain", "zip", "enumerate", "starts_with", "ends_with", "upgrade",
+    "downgrade", "notify_all", "notify_one", "saturating_sub", "saturating_add", "checked_sub",
+    "checked_add",
+];
+
+/// Resolve `.m(` on the receiver path `segs` (e.g. `["self", "pool"]`)
+/// inside `caller`. Returns candidate indexes into `p.fns` — possibly
+/// several for a trait receiver, empty when the call is a leaf.
+pub fn resolve_method(p: &Program, caller: &FnDef, segs: &[String], m: &str) -> Vec<usize> {
+    // Typed path: root the walk at `self`'s impl type or a parameter's
+    // declared type, then follow struct fields.
+    let mut ty: Option<String> = None;
+    if let Some(first) = segs.first() {
+        if first == "self" {
+            ty = caller.self_type.clone();
+        } else if let Some(info) = caller.params.get(first.as_str()) {
+            ty = info.peeled.clone();
+        }
+        if ty.is_some() {
+            for seg in &segs[1..] {
+                ty = match ty {
+                    Some(t) => p.field_type(&t, seg),
+                    None => None,
+                };
+                if ty.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+    let named = p.by_name.get(m).map(Vec::as_slice).unwrap_or(&[]);
+    if let Some(t) = ty {
+        let mut cands: Vec<usize> = named
+            .iter()
+            .copied()
+            .filter(|&fi| {
+                p.fns[fi].self_type.as_deref() == Some(t.as_str()) && !p.fns[fi].is_trait_decl
+            })
+            .collect();
+        if cands.is_empty() {
+            // A trait type: fan out to impls and trait default bodies.
+            let impls = p.trait_impls.get(&t).map(Vec::as_slice).unwrap_or(&[]);
+            cands = named
+                .iter()
+                .copied()
+                .filter(|&fi| {
+                    let f = &p.fns[fi];
+                    f.self_type.as_ref().is_some_and(|st| impls.contains(st))
+                        || (f.self_type.as_deref() == Some(t.as_str())
+                            && f.is_trait_decl
+                            && f.body.is_some())
+                })
+                .collect();
+        }
+        // A typed receiver resolves (or doesn't) on its own merits —
+        // never through the name-match fallback.
+        return cands;
+    }
+    if FALLBACK_DENY.contains(&m) {
+        return Vec::new();
+    }
+    let cands: Vec<usize> = named
+        .iter()
+        .copied()
+        .filter(|&fi| p.fns[fi].has_self && p.fns[fi].body.is_some())
+        .collect();
+    if cands.len() == 1 {
+        cands
+    } else {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(ToString::to_string).collect()
+    }
+
+    fn prog(src: &str) -> Program {
+        Program::build(&[("rust/src/platform/fixture.rs".to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn self_field_resolves_through_struct_types() {
+        let p = prog(
+            "pub struct A { pool: Arc<WarmPool> }\nimpl A {\n    fn caller(&self) {}\n}\npub struct WarmPool;\nimpl WarmPool {\n    pub fn evict(&self) {}\n}\n",
+        );
+        let caller = p.fns.iter().find(|f| f.name == "caller").unwrap();
+        let cands = resolve_method(&p, caller, &seg(&["self", "pool"]), "evict");
+        assert_eq!(cands.len(), 1);
+        assert_eq!(p.fns[cands[0]].name, "evict");
+    }
+
+    #[test]
+    fn trait_receiver_fans_out_to_impls() {
+        let p = prog(
+            "pub struct A { engine: Arc<dyn Engine> }\nimpl A {\n    fn caller(&self) {}\n}\ntrait Engine {\n    fn warm(&self);\n}\npub struct Mock;\nimpl Engine for Mock {\n    fn warm(&self) {}\n}\npub struct Pjrt;\nimpl Engine for Pjrt {\n    fn warm(&self) {}\n}\n",
+        );
+        let caller = p.fns.iter().find(|f| f.name == "caller").unwrap();
+        let cands = resolve_method(&p, caller, &seg(&["self", "engine"]), "warm");
+        assert_eq!(cands.len(), 2, "both impls are candidates");
+    }
+
+    #[test]
+    fn deny_listed_names_never_match_by_name() {
+        let p = prog(
+            "pub struct A;\nimpl A {\n    pub fn get(&self) {}\n    fn caller(&self) {}\n}\n",
+        );
+        let caller = p.fns.iter().find(|f| f.name == "caller").unwrap();
+        // `unknown.get(...)` — untypeable receiver, denied name.
+        assert!(resolve_method(&p, caller, &seg(&["unknown"]), "get").is_empty());
+        // But the *typed* spelling still resolves.
+        assert_eq!(resolve_method(&p, caller, &seg(&["self"]), "get").len(), 1);
+    }
+
+    #[test]
+    fn ambiguous_fallback_resolves_nothing() {
+        let p = prog(
+            "pub struct A;\nimpl A {\n    pub fn reap(&self) {}\n    fn caller(&self) {}\n}\npub struct B;\nimpl B {\n    pub fn reap(&self) {}\n}\n",
+        );
+        let caller = p.fns.iter().find(|f| f.name == "caller").unwrap();
+        assert!(resolve_method(&p, caller, &seg(&["unknown"]), "reap").is_empty());
+    }
+
+    #[test]
+    fn unique_fallback_resolves() {
+        let p = prog(
+            "pub struct A;\nimpl A {\n    pub fn reap_idle(&self) {}\n    fn caller(&self) {}\n}\n",
+        );
+        let caller = p.fns.iter().find(|f| f.name == "caller").unwrap();
+        let cands = resolve_method(&p, caller, &seg(&["unknown"]), "reap_idle");
+        assert_eq!(cands.len(), 1);
+    }
+}

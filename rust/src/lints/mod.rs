@@ -5,39 +5,57 @@
 //! concurrency — waitable pools, batch leaders, capture fences — and
 //! on every wait and timestamp flowing through the [`Clock`] trait so
 //! `ManualClock` tests stay fully virtualized. Those invariants are
-//! machine-checked here rather than left as tribal knowledge. Five
+//! machine-checked here rather than left as tribal knowledge. Seven
 //! rules (see `LINTS.md` at the repo root for the rationale of each):
 //!
 //! | rule id               | invariant                                          |
 //! |-----------------------|----------------------------------------------------|
 //! | `wall-clock`          | no `Instant::now`/`SystemTime::now`/`thread::sleep` in platform/gateway/runtime non-test code |
 //! | `naked-condvar-wait`  | every condvar wait is bounded (`wait_timeout`)     |
-//! | `lock-order`          | nested lock acquisitions follow the declared manifest; no wait while holding a second lock |
+//! | `global-lock-order`   | every acquisition path — intra- or interprocedural — respects the one global lock rank table; no re-entry, no cycles, no stale table rows |
+//! | `blocking-under-lock` | no tracked guard live across a blocking operation (condvar wait, clock sleep, channel recv, thread join, engine call), even via callees |
 //! | `poisoned-lock-unwrap`| `.lock().unwrap()` must be the poison-tolerant `plock()` |
 //! | `stats-doc-drift`     | stats JSON fields and API.md stay in sync          |
+//! | `config-doc-drift`    | parsed `[platform]`/`[snapshot]` TOML keys and API.md stay in sync |
+//!
+//! The first two and `poisoned-lock-unwrap` are per-file token rules.
+//! `global-lock-order` and `blocking-under-lock` are **whole-program**:
+//! [`symbols`] parses every scoped file into structs/impls/fns,
+//! [`callgraph`] resolves call sites by receiver type (with a
+//! deny-listed name-match fallback), and [`summaries`] closes
+//! per-function effect summaries (locks acquired, ways of blocking)
+//! over the call graph to a fixpoint, so a deadlock assembled from two
+//! individually-clean files is still visible.
 //!
 //! Findings can be suppressed with `// lint:allow(rule-id: reason)` on
 //! the same or the preceding line; the reason is mandatory — an allow
 //! without one is itself a finding. The suite runs as a tier-1 test
 //! ([`tests::repo_tree_is_lint_clean`]) and as the `pallas_lint`
-//! binary in CI.
+//! binary in CI (`-D`, `--json`, `--timing`).
 //!
 //! [`Clock`]: crate::util::Clock
 
+pub mod callgraph;
 pub mod rules;
+pub mod summaries;
+pub mod symbols;
 pub mod tokenizer;
 
 use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
 use std::fmt;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 use tokenizer::{tokenize, Tok, TokKind};
 
 /// Rule identifiers (the `rule-id` accepted by `lint:allow`).
 pub const WALL_CLOCK: &str = "wall-clock";
 pub const NAKED_CONDVAR_WAIT: &str = "naked-condvar-wait";
-pub const LOCK_ORDER: &str = "lock-order";
+pub const GLOBAL_LOCK_ORDER: &str = "global-lock-order";
+pub const BLOCKING_UNDER_LOCK: &str = "blocking-under-lock";
 pub const POISONED_LOCK_UNWRAP: &str = "poisoned-lock-unwrap";
 pub const STATS_DOC_DRIFT: &str = "stats-doc-drift";
+pub const CONFIG_DOC_DRIFT: &str = "config-doc-drift";
 /// Meta-rule: malformed `lint:allow` (missing rule id or reason).
 pub const LINT_ALLOW: &str = "lint-allow";
 
@@ -45,11 +63,17 @@ pub const LINT_ALLOW: &str = "lint-allow";
 pub const ALL_RULES: &[&str] = &[
     WALL_CLOCK,
     NAKED_CONDVAR_WAIT,
-    LOCK_ORDER,
+    GLOBAL_LOCK_ORDER,
+    BLOCKING_UNDER_LOCK,
     POISONED_LOCK_UNWRAP,
     STATS_DOC_DRIFT,
+    CONFIG_DOC_DRIFT,
     LINT_ALLOW,
 ];
+
+/// Timing label for the shared symbol/call-graph/summary construction
+/// that the two whole-program rules consume.
+pub const SUMMARIES_PHASE: &str = "(call-graph + summaries)";
 
 /// Directories under `rust/src/` whose non-test code the concurrency
 /// rules scan. `util/` (the clock itself), `httpd` (a real socket
@@ -63,7 +87,7 @@ pub struct Finding {
     pub rule: &'static str,
     /// Path relative to the repository root.
     pub file: String,
-    /// 1-indexed; 0 for whole-file findings (stats-doc-drift).
+    /// 1-indexed; 0 for whole-file findings (doc drift, staleness).
     pub line: u32,
     pub message: String,
 }
@@ -96,8 +120,8 @@ pub struct Suppression {
 /// One tokenized source file plus the derived per-token facts the
 /// rules share.
 pub struct FileCtx {
-    /// Repo-relative path with forward slashes (manifest keys match
-    /// against this).
+    /// Repo-relative path with forward slashes (lock-table suffixes
+    /// match against this).
     pub path: String,
     pub toks: Vec<Tok>,
     /// `is_test[i]` — token `i` sits inside a `#[cfg(test)]` item.
@@ -230,12 +254,36 @@ fn apply_suppressions(findings: Vec<Finding>, sups: &[Suppression]) -> Vec<Findi
         .collect()
 }
 
+/// Accumulate `elapsed` onto `rule`'s row (creating it on first use).
+fn timed<T>(
+    times: &mut Vec<(&'static str, Duration)>,
+    rule: &'static str,
+    f: impl FnOnce() -> T,
+) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    let d = t0.elapsed();
+    match times.iter_mut().find(|(r, _)| *r == rule) {
+        Some((_, total)) => *total += d,
+        None => times.push((rule, d)),
+    }
+    out
+}
+
 /// Run every rule over the repository. `manifest_dir` is the `rust/`
 /// crate root (`CARGO_MANIFEST_DIR`); API.md is resolved one level up.
 pub fn run(manifest_dir: &Path) -> Vec<Finding> {
+    run_timed(manifest_dir).0
+}
+
+/// [`run`], also returning per-rule wall time (report order) for the
+/// binary's `--timing` flag — lint cost stays visible as rules grow.
+pub fn run_timed(manifest_dir: &Path) -> (Vec<Finding>, Vec<(&'static str, Duration)>) {
     let src = manifest_dir.join("src");
     let repo = manifest_dir.parent().unwrap_or(manifest_dir);
+    let mut times: Vec<(&'static str, Duration)> = Vec::new();
     let mut findings = Vec::new();
+    let mut sources: Vec<(String, String)> = Vec::new();
     for dir in SCOPED_DIRS {
         let mut files = Vec::new();
         collect_rs_files(&src.join(dir), &mut files);
@@ -247,27 +295,87 @@ pub fn run(manifest_dir: &Path) -> Vec<Finding> {
                 .unwrap_or(&path)
                 .to_string_lossy()
                 .replace('\\', "/");
-            findings.extend(check_source(&rel, &source));
+            let ctx = FileCtx::new(&rel, &source);
+            let (sups, mut malformed) = parse_suppressions(&ctx);
+            let mut found = Vec::new();
+            found.extend(timed(&mut times, WALL_CLOCK, || rules::wall_clock::check(&ctx)));
+            found.extend(timed(&mut times, NAKED_CONDVAR_WAIT, || {
+                rules::condvar_wait::check(&ctx)
+            }));
+            found.extend(timed(&mut times, POISONED_LOCK_UNWRAP, || {
+                rules::poison_lock::check(&ctx)
+            }));
+            let mut out = apply_suppressions(found, &sups);
+            out.append(&mut malformed);
+            findings.extend(out);
+            sources.push((rel, source));
         }
     }
-    findings.extend(rules::stats_doc::check_repo(manifest_dir));
+    findings.extend(check_program_inner(&sources, true, &mut times));
+    findings.extend(timed(&mut times, STATS_DOC_DRIFT, || {
+        rules::stats_doc::check_repo(manifest_dir)
+    }));
+    findings.extend(timed(&mut times, CONFIG_DOC_DRIFT, || {
+        rules::config_doc::check_repo(manifest_dir)
+    }));
     findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
-    findings
+    (findings, times)
 }
 
-/// Run the token rules (1–4) plus suppression handling over one file's
-/// source. Public for the fixture tests.
+/// Run the per-file token rules plus suppression handling over one
+/// file's source. Public for the fixture tests.
 pub fn check_source(path: &str, source: &str) -> Vec<Finding> {
     let ctx = FileCtx::new(path, source);
     let (sups, mut malformed) = parse_suppressions(&ctx);
     let mut found = Vec::new();
     found.extend(rules::wall_clock::check(&ctx));
     found.extend(rules::condvar_wait::check(&ctx));
-    found.extend(rules::lock_order::check(&ctx));
     found.extend(rules::poison_lock::check(&ctx));
     let mut out = apply_suppressions(found, &sups);
     out.append(&mut malformed);
     out
+}
+
+/// Run the whole-program rules over an explicit `(path, source)` set.
+/// Public for the fixture tests; staleness runs in partial mode (a
+/// declared lock site is only judged when its file is in the set).
+/// Suppressions apply; malformed-allow findings are NOT emitted here
+/// (the per-file pass owns those, so they never double-report).
+pub fn check_program(files: &[(String, String)]) -> Vec<Finding> {
+    let mut times = Vec::new();
+    check_program_inner(files, false, &mut times)
+}
+
+fn check_program_inner(
+    files: &[(String, String)],
+    complete_staleness: bool,
+    times: &mut Vec<(&'static str, Duration)>,
+) -> Vec<Finding> {
+    let (program, sums) = timed(times, SUMMARIES_PHASE, || {
+        let p = symbols::Program::build(files);
+        let s = summaries::compute(&p);
+        (p, s)
+    });
+    let mut found = timed(times, GLOBAL_LOCK_ORDER, || {
+        rules::lock_order::check(&program, &sums, complete_staleness)
+    });
+    found.extend(timed(times, BLOCKING_UNDER_LOCK, || {
+        rules::blocking_under_lock::check(&program, &sums)
+    }));
+    let sups_by_file: BTreeMap<&str, Vec<Suppression>> = program
+        .files
+        .iter()
+        .map(|fs| (fs.ctx.path.as_str(), parse_suppressions(&fs.ctx).0))
+        .collect();
+    found
+        .into_iter()
+        .filter(|f| {
+            let Some(sups) = sups_by_file.get(f.file.as_str()) else { return true };
+            !sups.iter().any(|s| {
+                s.rule == f.rule && (s.line == f.line || s.line + 1 == f.line)
+            })
+        })
+        .collect()
 }
 
 fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
@@ -286,10 +394,10 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
 mod tests {
     use super::*;
 
-    /// THE tier-1 gate: the tree must be lint-clean. Reverting any of
-    /// the PR's fixes (e.g. maintainer.rs back to `Instant::now()`
-    /// deadlines, or a `plock` back to `.lock().unwrap()`) makes this
-    /// test fail.
+    /// THE tier-1 gate: the tree must be lint-clean — now including
+    /// the whole-program rules. Reverting any of the PR's fixes (e.g.
+    /// the Drop impls back to joining worker threads while holding
+    /// their handle list's mutex) makes this test fail.
     #[test]
     fn repo_tree_is_lint_clean() {
         let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
@@ -300,6 +408,26 @@ mod tests {
             findings.len(),
             findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
         );
+    }
+
+    /// Timing rows cover every phase that ran, so `--timing` output
+    /// cannot silently omit a rule as the suite grows.
+    #[test]
+    fn run_timed_reports_every_phase() {
+        let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let (_, times) = run_timed(manifest_dir);
+        for rule in [
+            WALL_CLOCK,
+            NAKED_CONDVAR_WAIT,
+            POISONED_LOCK_UNWRAP,
+            SUMMARIES_PHASE,
+            GLOBAL_LOCK_ORDER,
+            BLOCKING_UNDER_LOCK,
+            STATS_DOC_DRIFT,
+            CONFIG_DOC_DRIFT,
+        ] {
+            assert!(times.iter().any(|(r, _)| *r == rule), "no timing row for {rule}");
+        }
     }
 
     #[test]

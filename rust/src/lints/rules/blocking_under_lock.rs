@@ -1,0 +1,174 @@
+//! Rule `blocking-under-lock`: no tracked guard may be live across an
+//! operation that can pause unboundedly (or for engine-scale time).
+//!
+//! The paper's tail-latency argument dies the moment a hot-path lock
+//! is held across a multi-second pause: a cold-start `create_instance`
+//! under the pool lock serializes every warm invocation behind one
+//! provision. The blocking vocabulary (from the effect summaries):
+//! condvar waits, `Clock::sleep`, channel `recv`/`recv_timeout`,
+//! zero-arg thread `join()`, and the blocking `Engine` methods.
+//!
+//! Two shapes, both from the [`Summaries`] event stream:
+//!
+//! - **direct** — a block event with a non-empty held snapshot. A
+//!   condvar wait is exempt for the one guard it *consumes* (the wait
+//!   releases it while parked); any second lock still held across the
+//!   park is the finding.
+//! - **transitive** — a call made while holding a tracked lock, where
+//!   some candidate callee's closed summary blocks. The finding prints
+//!   the witness chain, so a two-hop `pool → helper → clock.sleep`
+//!   reads as exactly that.
+
+use crate::lints::rules::lock_order::name_of;
+use crate::lints::summaries::{EventKind, Summaries};
+use crate::lints::symbols::Program;
+use crate::lints::{Finding, BLOCKING_UNDER_LOCK};
+use std::collections::BTreeSet;
+
+pub fn check(p: &Program, s: &Summaries) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, evs) in s.events.iter().enumerate() {
+        let path = &p.files[p.fns[idx].file].ctx.path;
+        for e in evs {
+            match &e.kind {
+                EventKind::Call { name, cands } if !e.held.is_empty() => {
+                    let mut tblk: BTreeSet<&str> = BTreeSet::new();
+                    for &c in cands {
+                        tblk.extend(s.blocks[c].iter().map(String::as_str));
+                    }
+                    if tblk.is_empty() {
+                        continue;
+                    }
+                    let held: Vec<&str> = e.held.iter().map(|h| name_of(h.lock)).collect();
+                    let kinds: Vec<&str> = tblk.iter().copied().collect();
+                    let witness = cands
+                        .iter()
+                        .find_map(|&c| {
+                            s.blocks[c].iter().next().map(|b| s.block_chain(p, c, b))
+                        })
+                        .unwrap_or_default();
+                    out.push(Finding {
+                        rule: BLOCKING_UNDER_LOCK,
+                        file: path.clone(),
+                        line: e.line,
+                        message: format!(
+                            "calls `{name}` which may block ({}) while holding [{}] [{witness}]",
+                            kinds.join(", "),
+                            held.join(", ")
+                        ),
+                    });
+                }
+                EventKind::Block { kind, own_guard } if !e.held.is_empty() => {
+                    // A condvar wait releases the guard it consumes —
+                    // that one lock is allowed across the park.
+                    let others: Vec<&str> = e
+                        .held
+                        .iter()
+                        .filter(|h| {
+                            !(kind == "condvar-wait"
+                                && h.binding.is_some()
+                                && h.binding == *own_guard)
+                        })
+                        .map(|h| name_of(h.lock))
+                        .collect();
+                    if others.is_empty() {
+                        continue;
+                    }
+                    out.push(Finding {
+                        rule: BLOCKING_UNDER_LOCK,
+                        file: path.clone(),
+                        line: e.line,
+                        message: format!(
+                            "direct {kind} while holding [{}] — every other toucher of \
+                             {} waits out the pause",
+                            others.join(", "),
+                            others[0]
+                        ),
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lints::check_program;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+        check_program(&owned)
+    }
+
+    fn has(f: &[Finding], substr: &str) -> bool {
+        f.iter().any(|x| x.rule == BLOCKING_UNDER_LOCK && x.message.contains(substr))
+    }
+
+    #[test]
+    fn two_hop_blocking_chain_is_flagged() {
+        // dispatcher lock held -> a() -> b() -> clock.sleep. The lock
+        // holder and the sleeper are two hops apart.
+        let f = run(&[(
+            "rust/src/platform/dispatcher.rs",
+            "pub struct Dispatcher { depth_by_fn: Mutex<u32>, h: Helper }\nimpl Dispatcher {\n    fn f(&self) {\n        let g = plock(&self.depth_by_fn);\n        self.h.a();\n    }\n}\npub struct Helper { clock: Arc<dyn Clock> }\nimpl Helper {\n    pub fn a(&self) { self.b(); }\n    pub fn b(&self) { self.clock.sleep(d); }\n}\n",
+        )]);
+        assert!(has(&f, "clock-sleep"), "{f:?}");
+        assert!(has(&f, "Helper::b"), "witness chain reaches the sleeper: {f:?}");
+    }
+
+    #[test]
+    fn wait_holding_a_second_lock_is_flagged() {
+        let f = run(&[(
+            "rust/src/platform/batcher.rs",
+            "pub struct Batcher { open: Mutex<u32>, inner: Mutex<u32> }\nimpl Batcher {\n    fn f(&self) {\n        let o = plock(&self.open);\n        let mut g = plock(&self.inner);\n        let (g2, _) = pwait_timeout(&self.cv, g, d);\n    }\n}\n",
+        )]);
+        assert!(has(&f, "condvar-wait"), "{f:?}");
+        assert!(has(&f, "batcher.open"), "the *other* lock is named: {f:?}");
+    }
+
+    #[test]
+    fn wait_consuming_its_own_guard_is_exempt() {
+        let f = run(&[(
+            "rust/src/platform/batcher.rs",
+            "pub struct Batcher { inner: Mutex<u32> }\nimpl Batcher {\n    fn f(&self) {\n        let mut g = plock(&self.inner);\n        let (g2, _) = pwait_timeout(&self.cv, g, d);\n    }\n}\n",
+        )]);
+        assert!(!f.iter().any(|x| x.rule == BLOCKING_UNDER_LOCK), "{f:?}");
+    }
+
+    #[test]
+    fn engine_call_under_lock_is_flagged() {
+        let f = run(&[(
+            "rust/src/platform/pool.rs",
+            "pub struct WarmPool { idle: Mutex<u32>, waiters: Mutex<u32>, engine: Arc<dyn Engine> }\nimpl WarmPool {\n    fn f(&self) {\n        let g = plock(&self.idle);\n        self.engine.predict(x);\n    }\n}\n",
+        )]);
+        assert!(has(&f, "engine-call:predict"), "{f:?}");
+    }
+
+    #[test]
+    fn join_under_lock_is_flagged_and_drain_then_join_is_not() {
+        // The shape the repo itself had in two Drop impls.
+        let bad = run(&[(
+            "rust/src/runtime/pjrt.rs",
+            "pub struct PjrtEngine { joins: Mutex<Vec<JoinHandle<()>>> }\nimpl Drop for PjrtEngine {\n    fn drop(&mut self) {\n        for j in plock(&self.joins).drain(..) {\n            let _ = j.join();\n        }\n    }\n}\n",
+        )]);
+        assert!(has(&bad, "thread-join"), "{bad:?}");
+        let good = run(&[(
+            "rust/src/runtime/pjrt.rs",
+            "pub struct PjrtEngine { joins: Mutex<Vec<JoinHandle<()>>> }\nimpl Drop for PjrtEngine {\n    fn drop(&mut self) {\n        let handles: Vec<JoinHandle<()>> = plock(&self.joins).drain(..).collect();\n        for j in handles {\n            let _ = j.join();\n        }\n    }\n}\n",
+        )]);
+        assert!(!good.iter().any(|x| x.rule == BLOCKING_UNDER_LOCK), "{good:?}");
+    }
+
+    #[test]
+    fn lint_allow_suppresses_blocking_under_lock() {
+        let f = run(&[(
+            "rust/src/platform/pool.rs",
+            "pub struct WarmPool { idle: Mutex<u32>, waiters: Mutex<u32>, engine: Arc<dyn Engine> }\nimpl WarmPool {\n    fn f(&self) {\n        let g = plock(&self.idle);\n        // lint:allow(blocking-under-lock: fixture proves suppression plumbing)\n        self.engine.predict(x);\n    }\n}\n",
+        )]);
+        assert!(!f.iter().any(|x| x.rule == BLOCKING_UNDER_LOCK), "{f:?}");
+    }
+}

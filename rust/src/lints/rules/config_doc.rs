@@ -1,0 +1,177 @@
+//! Rule `config-doc-drift`: the TOML config surface and its
+//! documentation move together.
+//!
+//! Every `platform.*` / `snapshot.*` key parsed by
+//! `rust/src/configparse/platform_config.rs` must appear in API.md's
+//! `## Configuration` section, and every key documented there must
+//! actually be parsed — BOTH directions, mirroring `stats-doc-drift`:
+//! a new knob cannot land undocumented, and a renamed one cannot leave
+//! its old spelling behind for operators to copy into dead config.
+//!
+//! Parsed keys are read from the source tokens: any non-test string
+//! literal that is *exactly* a dotted key (`"platform.seed"`). Prose
+//! strings that merely mention a key (`bail!("snapshot.restore_bw
+//! must be positive")`) don't full-match and are ignored. Documented
+//! keys are the first backticked cell of each table row in the
+//! Configuration section.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::lints::tokenizer::TokKind;
+use crate::lints::{FileCtx, Finding, CONFIG_DOC_DRIFT};
+
+const CONFIG_SRC: &str = "rust/src/configparse/platform_config.rs";
+const DOC: &str = "API.md";
+
+/// Repo-level check: compare the parsed and documented config keys.
+/// `manifest_dir` is the crate root (`rust/`); API.md lives one level
+/// up.
+pub fn check_repo(manifest_dir: &Path) -> Vec<Finding> {
+    let repo = manifest_dir.parent().unwrap_or(manifest_dir);
+    let src_path = manifest_dir.join("src/configparse/platform_config.rs");
+    let doc_path = repo.join(DOC);
+    let mut out = Vec::new();
+    let Ok(src) = std::fs::read_to_string(&src_path) else {
+        out.push(whole_file(CONFIG_SRC, format!("cannot read {}", src_path.display())));
+        return out;
+    };
+    let Ok(doc) = std::fs::read_to_string(&doc_path) else {
+        out.push(whole_file(DOC, format!("cannot read {}", doc_path.display())));
+        return out;
+    };
+    compare(&parsed_keys(&src), &documented_keys(&doc))
+}
+
+/// The comparison itself, separated for fixture tests.
+pub fn compare(parsed: &BTreeSet<String>, documented: &BTreeSet<String>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for key in parsed.difference(documented) {
+        out.push(whole_file(
+            CONFIG_SRC,
+            format!(
+                "config key \"{key}\" is parsed but not documented in API.md's \
+                 Configuration section"
+            ),
+        ));
+    }
+    for key in documented.difference(parsed) {
+        out.push(whole_file(
+            DOC,
+            format!(
+                "config key \"{key}\" is documented in API.md but never parsed by \
+                 platform_config.rs"
+            ),
+        ));
+    }
+    out
+}
+
+fn whole_file(file: &str, message: String) -> Finding {
+    Finding { rule: CONFIG_DOC_DRIFT, file: file.to_string(), line: 0, message }
+}
+
+/// Keys the config parser actually reads: non-test string literals
+/// that are exactly `platform.<ident>` or `snapshot.<ident>`.
+pub fn parsed_keys(source: &str) -> BTreeSet<String> {
+    let ctx = FileCtx::new(CONFIG_SRC, source);
+    let mut keys = BTreeSet::new();
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if t.kind == TokKind::Str && !ctx.is_test[i] && is_config_key(&t.text) {
+            keys.insert(t.text.clone());
+        }
+    }
+    keys
+}
+
+/// Keys documented in API.md: first backticked cell of each table row
+/// inside the `## Configuration` section.
+pub fn documented_keys(doc: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut in_config_section = false;
+    for line in doc.lines() {
+        if let Some(heading) = line.strip_prefix("## ") {
+            in_config_section = heading.trim().starts_with("Configuration");
+            continue;
+        }
+        if !in_config_section {
+            continue;
+        }
+        let Some(row) = line.trim_start().strip_prefix('|') else { continue };
+        let Some(cell) = row.split('|').next() else { continue };
+        let cell = cell.trim().trim_matches('`');
+        if is_config_key(cell) {
+            keys.insert(cell.to_string());
+        }
+    }
+    keys
+}
+
+/// Exactly `platform.<key>` or `snapshot.<key>` with a lowercase
+/// snake_case key — full match, no surrounding prose.
+fn is_config_key(s: &str) -> bool {
+    let Some((section, key)) = s.split_once('.') else { return false };
+    if section != "platform" && section != "snapshot" {
+        return false;
+    }
+    let mut chars = key.chars();
+    matches!(chars.next(), Some('a'..='z'))
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parsed_keys_full_match_only_and_skip_tests() {
+        let src = r#"
+            fn overlay() {
+                if let Some(v) = get_u64("platform.seed") { cfg.seed = v; }
+                if let Some(v) = get_f64("snapshot.restore_bw") { cfg.bw = v; }
+                bail!("snapshot.restore_bw must be a positive number");
+            }
+            #[cfg(test)]
+            mod tests {
+                fn t() { let _ = get_u64("platform.phantom_key"); }
+            }
+        "#;
+        let keys = parsed_keys(src);
+        assert!(keys.contains("platform.seed"));
+        assert!(keys.contains("snapshot.restore_bw"));
+        assert_eq!(keys.len(), 2, "prose and test strings excluded: {keys:?}");
+    }
+
+    #[test]
+    fn documented_keys_read_configuration_tables_only() {
+        let doc = "\
+## Configuration\n\nProse mentioning `platform.not_a_row`.\n\n### `[platform]`\n\n| key | default |\n|-----|---------|\n| `platform.seed` | `0` |\n| `platform.max_containers` | `8` |\n\n### `[snapshot]`\n\n| key | default |\n|-----|---------|\n| `snapshot.enabled` | `false` |\n\n## Batching\n\n| `platform.out_of_section` | `1` |\n";
+        let keys = documented_keys(doc);
+        assert_eq!(
+            keys,
+            ["platform.seed", "platform.max_containers", "snapshot.enabled"]
+                .iter()
+                .map(ToString::to_string)
+                .collect()
+        );
+    }
+
+    #[test]
+    fn drift_is_reported_in_both_directions() {
+        let parsed: BTreeSet<String> =
+            ["platform.seed", "platform.new_knob"].iter().map(ToString::to_string).collect();
+        let documented: BTreeSet<String> =
+            ["platform.seed", "snapshot.stale_key"].iter().map(ToString::to_string).collect();
+        let out = compare(&parsed, &documented);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().any(|f| f.file == CONFIG_SRC && f.message.contains("new_knob")));
+        assert!(out.iter().any(|f| f.file == DOC && f.message.contains("stale_key")));
+    }
+
+    #[test]
+    fn in_sync_sets_are_clean() {
+        let keys: BTreeSet<String> =
+            ["platform.seed"].iter().map(ToString::to_string).collect();
+        assert!(compare(&keys, &keys).is_empty());
+    }
+}

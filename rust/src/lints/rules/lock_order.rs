@@ -1,350 +1,413 @@
-//! Rule `lock-order`: nested acquisitions of a file's declared locks
-//! must follow the manifest order, never re-enter a held lock, and
-//! never sit across a condvar wait alongside a second lock.
+//! Rule `global-lock-order`: every tracked platform mutex has one
+//! global rank, and every acquisition path — within a function or
+//! across the call graph — must respect it.
 //!
-//! [`MANIFEST`] is the repo's lock-ordering declaration: for each file
-//! owning more than zero platform mutexes, the order in which they may
-//! be nested (earlier may be held while acquiring later — never the
-//! reverse). The two real nestings today are the batcher (`open`, the
-//! function→batch map, held while probing a batch's `inner`) and the
-//! async invoker (`queue` held while seeding `results` in `submit`).
-//! Everything else is single-lock by design, and this rule keeps it
-//! that way: an innocent-looking "grab the other map too" refactor
-//! fails the lint instead of deadlocking a soak test three weeks
-//! later.
+//! [`PLATFORM_LOCK_ORDER`] replaces the old per-file `MANIFEST`: a
+//! single declared rank order for all platform/runtime locks. Rank is
+//! table position; a lock may be held while acquiring a *later*
+//! (higher-rank) one, never the reverse. The two sanctioned nestings
+//! today are the batcher (`open` held while probing a batch's `inner`)
+//! and the async invoker (`queue` held while seeding `results`); both
+//! run outermost-first under the declared order. Everything else is
+//! single-lock by design, and this rule keeps it that way across
+//! refactors that smear a deadlock over two individually-clean files.
 //!
-//! The analysis is intra-function and token-level, with deliberately
-//! conservative guard-liveness tracking:
+//! Four findings, all from the [`Summaries`] event stream:
 //!
-//! - a `let`-bound guard lives until `drop(name)` or its block closes;
-//! - a temporary guard (`plock(&x).field`, `if let … = plock(&x)…`)
-//!   lives to the end of its statement — the `;`, or the `}` of an
-//!   attached block (matching Rust's real temporary-scope rules for
-//!   `match`/`if let`, which extend the guard across the whole arm);
-//! - acquisitions through a computed receiver (`self.shard(f)`) are
-//!   untracked: those are leaf locks keyed per function, not part of
-//!   any ordering relation.
+//! - **re-entry** — acquiring a lock already held (self-deadlock with
+//!   `std::sync::Mutex`), directly or via a callee whose transitive
+//!   summary re-acquires it;
+//! - **rank inversion** — acquiring a lower-ranked lock while a
+//!   higher-ranked one is held, directly or interprocedurally (the
+//!   finding prints the witness chain through the call graph);
+//! - **cycle** — a loop in the observed acquired-while-holding graph,
+//!   reported even if some edge pairs individually dodge the rank
+//!   check (belt and braces: the ranks make cycles impossible, so a
+//!   cycle means the table itself was edited into inconsistency);
+//! - **staleness** — a declared site naming a mutex field that no
+//!   longer exists in its file, so the table cannot rot as code moves.
 
-use crate::lints::tokenizer::{Tok, TokKind};
-use crate::lints::{FileCtx, Finding, LOCK_ORDER};
+use crate::lints::summaries::{EventKind, Summaries};
+use crate::lints::symbols::Program;
+use crate::lints::{Finding, GLOBAL_LOCK_ORDER};
+use std::collections::{BTreeMap, BTreeSet};
 
-use super::path_before;
-
-/// The declared lock order per file (path suffix → mutex field names,
-/// outermost first). A lock name absent here is untracked.
-const MANIFEST: &[(&str, &[&str])] = &[
-    ("platform/batcher.rs", &["open", "inner"]),
-    ("platform/async_invoke.rs", &["queue", "results", "workers"]),
-    ("platform/pool.rs", &["idle", "waiters"]),
-    ("platform/maintainer.rs", &["stop"]),
-    ("platform/snapshots.rs", &["inner"]),
-    ("platform/metrics.rs", &["totals", "recent"]),
-    ("platform/dispatcher.rs", &["depth_by_fn"]),
-    ("platform/invoker.rs", &["map", "maintainer"]),
-    ("platform/billing.rs", &["lines"]),
-    ("platform/scaler.rs", &["rng"]),
-    ("runtime/mock.rs", &["compiled", "instances"]),
-    ("runtime/pjrt.rs", &["joins"]),
-];
-
-/// One tracked lock currently (conservatively) held.
-struct Guard {
-    name: String,
-    rank: usize,
-    /// Brace depth at acquisition.
-    depth: usize,
-    /// `Some(var)` for `let var = …` guards, `None` for temporaries.
-    binding: Option<String>,
-    line: u32,
+/// One declared lock: display name and the `(file-suffix, field-name)`
+/// sites that constitute it. `rwlock` sites are tracked through
+/// zero-arg `.read()`/`.write()` instead of `plock`/`.lock()`.
+pub struct LockDecl {
+    pub name: &'static str,
+    pub sites: &'static [(&'static str, &'static str)],
+    pub rwlock: bool,
 }
 
-pub fn check(ctx: &FileCtx) -> Vec<Finding> {
-    let Some(order) = MANIFEST
-        .iter()
-        .find(|(suffix, _)| ctx.path.ends_with(suffix))
-        .map(|(_, names)| *names)
-    else {
-        return Vec::new();
-    };
-    let toks = &ctx.toks;
+const fn decl(
+    name: &'static str,
+    sites: &'static [(&'static str, &'static str)],
+    rwlock: bool,
+) -> LockDecl {
+    LockDecl { name, sites, rwlock }
+}
+
+/// THE global lock rank order, outermost first. Position is rank: a
+/// lock may be held while acquiring any lock *below* it in this table.
+/// Adding a platform mutex means inserting it here at the rank its
+/// callers need — and the staleness check fails CI if a renamed or
+/// deleted field leaves its row behind.
+pub const PLATFORM_LOCK_ORDER: &[LockDecl] = &[
+    decl("invoker.maintainer", &[("platform/invoker.rs", "maintainer")], false),
+    decl(
+        "invoker.fn_in_flight",
+        &[("platform/invoker.rs", "fn_in_flight"), ("platform/invoker.rs", "map")],
+        false,
+    ),
+    decl("dispatcher.depth_by_fn", &[("platform/dispatcher.rs", "depth_by_fn")], false),
+    decl("batcher.open", &[("platform/batcher.rs", "open")], false),
+    decl("batcher.inner", &[("platform/batcher.rs", "inner")], false),
+    decl("async_invoke.queue", &[("platform/async_invoke.rs", "queue")], false),
+    decl("async_invoke.results", &[("platform/async_invoke.rs", "results")], false),
+    decl("async_invoke.workers", &[("platform/async_invoke.rs", "workers")], false),
+    decl("maintainer.stop", &[("platform/maintainer.rs", "stop")], false),
+    decl("pool.idle", &[("platform/pool.rs", "idle")], false),
+    decl("pool.waiters", &[("platform/pool.rs", "waiters")], false),
+    decl("registry.functions", &[("platform/registry.rs", "functions")], true),
+    decl("snapshots.inner", &[("platform/snapshots.rs", "inner")], false),
+    decl("metrics.shards", &[("platform/metrics.rs", "shards")], true),
+    decl("metrics.totals", &[("platform/metrics.rs", "totals")], false),
+    decl("metrics.recent", &[("platform/metrics.rs", "recent")], false),
+    decl("billing.lines", &[("platform/billing.rs", "lines")], false),
+    decl(
+        "platform.rng",
+        &[("platform/invoker.rs", "rng"), ("platform/scaler.rs", "rng")],
+        false,
+    ),
+    decl("mock.compiled", &[("runtime/mock.rs", "compiled")], false),
+    decl("mock.instances", &[("runtime/mock.rs", "instances")], false),
+    decl("pjrt.joins", &[("runtime/pjrt.rs", "joins")], false),
+];
+
+/// Rank of the lock named `path::name`, or `None` when untracked.
+pub fn lock_for(path: &str, name: &str) -> Option<usize> {
+    PLATFORM_LOCK_ORDER.iter().position(|d| {
+        d.sites.iter().any(|(suf, local)| path.ends_with(suf) && *local == name)
+    })
+}
+
+/// Is `path::name` a declared RwLock site (tracked via `.read()` /
+/// `.write()`)?
+pub fn is_rw_site(path: &str, name: &str) -> bool {
+    PLATFORM_LOCK_ORDER.iter().any(|d| {
+        d.rwlock && d.sites.iter().any(|(suf, local)| path.ends_with(suf) && *local == name)
+    })
+}
+
+/// Display name of rank `lid`.
+pub fn name_of(lid: usize) -> &'static str {
+    PLATFORM_LOCK_ORDER[lid].name
+}
+
+/// Rank of a lock by display name — test/diagnostic convenience.
+pub fn rank_of(name: &str) -> usize {
+    PLATFORM_LOCK_ORDER.iter().position(|d| d.name == name).expect("declared lock")
+}
+
+/// Run the rule over the computed summaries. `complete_staleness`
+/// demands every declared site exist (the repo run); fixtures pass
+/// `false` so a partial file set only vouches for the files it has.
+pub fn check(p: &Program, s: &Summaries, complete_staleness: bool) -> Vec<Finding> {
     let mut out = Vec::new();
-    let mut held: Vec<Guard> = Vec::new();
-    let mut depth = 0usize;
-    for i in 0..toks.len() {
-        let t = &toks[i];
-        if t.kind == TokKind::Comment {
-            continue;
-        }
-        if t.kind == TokKind::Punct {
-            match t.text.as_str() {
-                "{" => {
-                    depth += 1;
-                    continue;
+    // Observed acquired-while-holding edges, for cycle detection.
+    let mut nest: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for (idx, evs) in s.events.iter().enumerate() {
+        let path = &p.files[p.fns[idx].file].ctx.path;
+        for e in evs {
+            match &e.kind {
+                EventKind::Acquire(lid) => {
+                    for h in &e.held {
+                        nest.entry(h.lock).or_default().insert(*lid);
+                        if h.lock == *lid {
+                            out.push(Finding {
+                                rule: GLOBAL_LOCK_ORDER,
+                                file: path.clone(),
+                                line: e.line,
+                                message: format!(
+                                    "re-enters `{}` already held (taken at line {}) — \
+                                     self-deadlock",
+                                    name_of(*lid),
+                                    h.line
+                                ),
+                            });
+                        } else if *lid < h.lock {
+                            out.push(Finding {
+                                rule: GLOBAL_LOCK_ORDER,
+                                file: path.clone(),
+                                line: e.line,
+                                message: format!(
+                                    "acquires `{}` (rank {}) while holding `{}` (rank {}) — \
+                                     the global order is outermost-first; see \
+                                     PLATFORM_LOCK_ORDER",
+                                    name_of(*lid),
+                                    lid,
+                                    name_of(h.lock),
+                                    h.lock
+                                ),
+                            });
+                        }
+                    }
                 }
-                "}" => {
-                    depth = depth.saturating_sub(1);
-                    // Block close ends every guard born inside it, and
-                    // the statement (so the temporaries) of the block's
-                    // own depth.
-                    held.retain(|g| g.depth <= depth && !(g.binding.is_none() && g.depth == depth));
-                    continue;
-                }
-                ";" => {
-                    held.retain(|g| !(g.binding.is_none() && g.depth == depth));
-                    continue;
+                EventKind::Call { name, cands } if !e.held.is_empty() => {
+                    let mut tacq: BTreeSet<usize> = BTreeSet::new();
+                    for &c in cands {
+                        tacq.extend(s.acquires[c].iter().copied());
+                    }
+                    for h in &e.held {
+                        for &lid in &tacq {
+                            nest.entry(h.lock).or_default().insert(lid);
+                            let witness = || {
+                                cands
+                                    .iter()
+                                    .find(|&&c| s.acquires[c].contains(&lid))
+                                    .map(|&c| s.acquire_chain(p, c, lid))
+                                    .unwrap_or_default()
+                            };
+                            if lid == h.lock {
+                                out.push(Finding {
+                                    rule: GLOBAL_LOCK_ORDER,
+                                    file: path.clone(),
+                                    line: e.line,
+                                    message: format!(
+                                        "calls `{name}` which (transitively) re-acquires held \
+                                         `{}` [{}]",
+                                        name_of(lid),
+                                        witness()
+                                    ),
+                                });
+                            } else if lid < h.lock {
+                                out.push(Finding {
+                                    rule: GLOBAL_LOCK_ORDER,
+                                    file: path.clone(),
+                                    line: e.line,
+                                    message: format!(
+                                        "calls `{name}` which acquires `{}` (rank {}) while \
+                                         `{}` (rank {}) is held [{}]",
+                                        name_of(lid),
+                                        lid,
+                                        name_of(h.lock),
+                                        h.lock,
+                                        witness()
+                                    ),
+                                });
+                            }
+                        }
+                    }
                 }
                 _ => {}
             }
         }
-        if ctx.is_test[i] {
-            continue;
-        }
-        // `drop(name)` releases a let-bound guard early.
-        if t.is(TokKind::Ident, "drop")
-            && i + 3 < toks.len()
-            && toks[i + 1].is(TokKind::Punct, "(")
-            && toks[i + 2].kind == TokKind::Ident
-            && toks[i + 3].is(TokKind::Punct, ")")
-        {
-            let name = toks[i + 2].text.as_str();
-            held.retain(|g| g.binding.as_deref() != Some(name));
-            continue;
-        }
-        // A condvar wait releases exactly the guard it consumes; any
-        // second held lock stays held across the park — a waiter that
-        // can deadlock every other toucher of that lock.
-        let is_wait = (t.is(TokKind::Ident, "pwait_timeout")
-            && i + 1 < toks.len()
-            && toks[i + 1].is(TokKind::Punct, "(")
-            && !(i > 0 && toks[i - 1].is(TokKind::Punct, ".")))
-            || (t.is(TokKind::Punct, ".")
-                && i + 2 < toks.len()
-                && (toks[i + 1].is(TokKind::Ident, "wait")
-                    || toks[i + 1].is(TokKind::Ident, "wait_timeout"))
-                && toks[i + 2].is(TokKind::Punct, "("));
-        if is_wait && held.len() >= 2 {
-            let names: Vec<&str> = held.iter().map(|g| g.name.as_str()).collect();
-            out.push(Finding {
-                rule: LOCK_ORDER,
-                file: ctx.path.clone(),
-                line: t.line,
-                message: format!(
-                    "condvar wait while holding {} tracked locks ({}) — the wait releases \
-                     only its own guard; drop the others first",
-                    held.len(),
-                    names.join(", ")
-                ),
-            });
-        }
-        // Acquisition A: `plock` `(` `&` <field path> `)`.
-        if t.is(TokKind::Ident, "plock")
-            && i + 2 < toks.len()
-            && toks[i + 1].is(TokKind::Punct, "(")
-            && toks[i + 2].is(TokKind::Punct, "&")
-        {
-            if let Some(name) = plain_path_after(toks, i + 3) {
-                acquire(ctx, order, &mut held, &mut out, toks, i, depth, &name);
+    }
+    out.extend(find_cycles(&nest));
+    out.extend(staleness(p, complete_staleness));
+    out
+}
+
+/// DFS over the observed acquired-while-holding edges; any back edge
+/// is a reportable cycle.
+fn find_cycles(edges: &BTreeMap<usize, BTreeSet<usize>>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut color: BTreeMap<usize, u8> = BTreeMap::new();
+    fn dfs(
+        u: usize,
+        stack: &mut Vec<usize>,
+        edges: &BTreeMap<usize, BTreeSet<usize>>,
+        color: &mut BTreeMap<usize, u8>,
+        out: &mut Vec<Finding>,
+    ) {
+        color.insert(u, 1);
+        if let Some(next) = edges.get(&u) {
+            for &v in next {
+                match color.get(&v).copied().unwrap_or(0) {
+                    1 => {
+                        let from = stack.iter().position(|&x| x == v).unwrap_or(0);
+                        let mut cyc: Vec<&str> =
+                            stack[from..].iter().map(|&x| name_of(x)).collect();
+                        cyc.push(name_of(v));
+                        out.push(Finding {
+                            rule: GLOBAL_LOCK_ORDER,
+                            file: "(global)".to_string(),
+                            line: 0,
+                            message: format!("lock cycle: {}", cyc.join(" -> ")),
+                        });
+                    }
+                    0 => {
+                        stack.push(v);
+                        dfs(v, stack, edges, color, out);
+                        stack.pop();
+                    }
+                    _ => {}
+                }
             }
-            continue;
         }
-        // Acquisition B: `<field path>` `.` `lock` `(` `)`.
-        if t.is(TokKind::Punct, ".")
-            && i + 3 < toks.len()
-            && toks[i + 1].is(TokKind::Ident, "lock")
-            && toks[i + 2].is(TokKind::Punct, "(")
-            && toks[i + 3].is(TokKind::Punct, ")")
-        {
-            let segs = path_before(toks, i);
-            if let Some(name) = segs.last().cloned() {
-                let start = i - (2 * segs.len() - 1);
-                acquire(ctx, order, &mut held, &mut out, toks, start, depth, &name);
-            }
-            continue;
+        color.insert(u, 2);
+    }
+    for &u in edges.keys() {
+        if color.get(&u).copied().unwrap_or(0) == 0 {
+            let mut stack = vec![u];
+            dfs(u, &mut stack, edges, &mut color, &mut out);
         }
     }
     out
 }
 
-/// Forward-parse `ident (. ident)*` starting at `toks[i]`, requiring
-/// the very next token to be `)`. Returns the final segment — the
-/// lock's field name — or `None` for computed receivers (any `(`,
-/// index, etc. in the path).
-fn plain_path_after(toks: &[Tok], mut i: usize) -> Option<String> {
-    let mut last: Option<String> = None;
-    loop {
-        if i >= toks.len() || toks[i].kind != TokKind::Ident {
-            return None;
+/// Every declared site must name a `Mutex`/`RwLock` field (or fn
+/// param) that still exists in its file. In partial mode, sites whose
+/// file is absent from the analyzed set are skipped.
+fn staleness(p: &Program, complete: bool) -> Vec<Finding> {
+    // path -> lock-ish field and param names present there.
+    let mut lockish: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for fs in &p.files {
+        let entry = lockish.entry(fs.ctx.path.as_str()).or_default();
+        for fields in fs.structs.values() {
+            for (fname, info) in fields {
+                if info.is_mutex || info.is_rwlock {
+                    entry.insert(fname.as_str());
+                }
+            }
         }
-        last = Some(toks[i].text.clone());
-        i += 1;
-        if i < toks.len() && toks[i].is(TokKind::Punct, ".") {
-            i += 1;
-            continue;
+    }
+    for fd in &p.fns {
+        let entry = lockish.entry(p.files[fd.file].ctx.path.as_str()).or_default();
+        for (pname, info) in &fd.params {
+            if info.is_mutex || info.is_rwlock {
+                entry.insert(pname.as_str());
+            }
         }
-        break;
     }
-    if i < toks.len() && toks[i].is(TokKind::Punct, ")") {
-        last
-    } else {
-        None
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn acquire(
-    ctx: &FileCtx,
-    order: &[&str],
-    held: &mut Vec<Guard>,
-    out: &mut Vec<Finding>,
-    toks: &[Tok],
-    start: usize,
-    depth: usize,
-    name: &str,
-) {
-    let Some(rank) = order.iter().position(|n| *n == name) else {
-        return;
-    };
-    let line = toks[start].line;
-    for g in held.iter() {
-        if g.name == name {
+    let mut out = Vec::new();
+    for d in PLATFORM_LOCK_ORDER {
+        for (suf, local) in d.sites {
+            let mut file_seen = false;
+            let mut hit = false;
+            for (path, names) in &lockish {
+                if path.ends_with(suf) {
+                    file_seen = true;
+                    if names.contains(local) {
+                        hit = true;
+                    }
+                }
+            }
+            if hit || (!complete && !file_seen) {
+                continue;
+            }
             out.push(Finding {
-                rule: LOCK_ORDER,
-                file: ctx.path.clone(),
-                line,
+                rule: GLOBAL_LOCK_ORDER,
+                file: suf.to_string(),
+                line: 0,
                 message: format!(
-                    "lock `{name}` acquired while already held (taken at line {}) — \
-                     self-deadlock",
-                    g.line
-                ),
-            });
-        } else if rank < g.rank {
-            out.push(Finding {
-                rule: LOCK_ORDER,
-                file: ctx.path.clone(),
-                line,
-                message: format!(
-                    "acquires `{name}` while holding `{}` — the declared order for this \
-                     file is [{}]",
-                    g.name,
-                    order.join(" < ")
+                    "declared lock `{}` names `{local}` which no longer exists in {suf} — \
+                     update PLATFORM_LOCK_ORDER",
+                    d.name
                 ),
             });
         }
     }
-    // `let g = …` / `let mut g = …` binds the guard; anything else is
-    // a temporary.
-    let binding = if start >= 3
-        && toks[start - 1].is(TokKind::Punct, "=")
-        && toks[start - 2].kind == TokKind::Ident
-        && (toks[start - 3].is(TokKind::Ident, "let")
-            || (start >= 4
-                && toks[start - 3].is(TokKind::Ident, "mut")
-                && toks[start - 4].is(TokKind::Ident, "let")))
-    {
-        Some(toks[start - 2].text.clone())
-    } else {
-        None
-    };
-    // Rebinding a name implicitly drops the old guard.
-    if let Some(b) = &binding {
-        held.retain(|g| g.binding.as_deref() != Some(b.as_str()));
-    }
-    held.push(Guard { name: name.to_string(), rank, depth, binding, line });
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lints::check_program;
 
-    fn lint(src: &str) -> Vec<Finding> {
-        check(&FileCtx::new("rust/src/platform/batcher.rs", src))
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+        check_program(&owned)
+    }
+
+    fn has(f: &[Finding], rule: &str, substr: &str) -> bool {
+        f.iter().any(|x| x.rule == rule && x.message.contains(substr))
     }
 
     #[test]
-    fn manifest_order_nesting_is_legal() {
-        let src = "fn f(&self) {\n    let open = plock(&self.open);\n    let g = plock(&state.inner);\n    drop(g);\n}\n";
-        assert!(lint(src).is_empty());
+    fn table_ranks_are_consistent() {
+        assert!(rank_of("batcher.open") < rank_of("batcher.inner"));
+        assert!(rank_of("async_invoke.queue") < rank_of("async_invoke.results"));
     }
 
     #[test]
-    fn reverse_nesting_is_flagged() {
-        let src = "fn f(&self) {\n    let g = plock(&state.inner);\n    let open = plock(&self.open);\n}\n";
-        let hits = lint(src);
-        assert_eq!(hits.len(), 1, "{hits:?}");
-        assert_eq!(hits[0].rule, LOCK_ORDER);
-        assert_eq!(hits[0].line, 3);
-        assert!(hits[0].message.contains("declared order"), "{}", hits[0].message);
+    fn cross_file_inversion_is_flagged() {
+        // pool.rs holds `idle` (rank 9) and calls a batcher method that
+        // acquires `open` (rank 3) — clean per file, deadlock-shaped
+        // globally.
+        let f = run(&[
+            (
+                "rust/src/platform/pool.rs",
+                "pub struct WarmPool { idle: Mutex<u32>, b: Batcher }\nimpl WarmPool {\n    fn f(&self) {\n        let g = plock(&self.idle);\n        self.b.grab(name);\n    }\n}\n",
+            ),
+            (
+                "rust/src/platform/batcher.rs",
+                "pub struct Batcher { open: Mutex<u32> }\nimpl Batcher {\n    pub fn grab(&self, name: &str) {\n        let o = plock(&self.open);\n    }\n}\n",
+            ),
+        ]);
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "batcher.open"), "{f:?}");
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "grab"), "witness names the callee: {f:?}");
     }
 
     #[test]
-    fn reacquiring_a_held_lock_is_flagged() {
-        let src = "fn f(&self) {\n    let a = plock(&self.open);\n    let b = plock(&other.open);\n}\n";
-        let hits = lint(src);
-        assert_eq!(hits.len(), 1);
-        assert!(hits[0].message.contains("self-deadlock"));
+    fn interprocedural_reentry_is_flagged() {
+        let f = run(&[(
+            "rust/src/platform/pool.rs",
+            "pub struct WarmPool { idle: Mutex<u32> }\nimpl WarmPool {\n    fn outer(&self) {\n        let g = plock(&self.idle);\n        self.inner_probe();\n    }\n    fn inner_probe(&self) {\n        let n = plock(&self.idle);\n    }\n}\n",
+        )]);
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "re-acquires held"), "{f:?}");
     }
 
     #[test]
-    fn temporaries_die_at_their_statement() {
-        // Sequential temps in reverse manifest order never overlap.
-        let src = "fn f(&self) {\n    plock(&state.inner).seeds.len();\n    plock(&self.open).clear();\n}\n";
-        assert!(lint(src).is_empty());
+    fn mutual_recursion_reaches_fixpoint_and_stays_precise() {
+        // Legal: hold `open` (rank 3), recursion briefly takes `inner`
+        // (rank 4) in an inner block — outermost-first, clean.
+        let legal = "pub struct Batcher { open: Mutex<u32>, inner: Mutex<u32> }\nimpl Batcher {\n    fn ping(&self, n: u32) { if n > 0 { self.pong(n); } }\n    fn pong(&self, n: u32) { { let g = plock(&self.inner); } self.ping(n - 1); }\n    fn top(&self) {\n        let o = plock(&self.open);\n        self.ping(3);\n    }\n}\n";
+        let f = run(&[("rust/src/platform/batcher.rs", legal)]);
+        assert!(!f.iter().any(|x| x.rule == GLOBAL_LOCK_ORDER), "{f:?}");
+        // Inverted: hold `inner`, recursion takes `open` — flagged.
+        let inverted = legal.replace("plock(&self.inner); }", "plock(&self.open); }").replace(
+            "let o = plock(&self.open);",
+            "let o = plock(&self.inner);",
+        );
+        let f = run(&[("rust/src/platform/batcher.rs", &inverted)]);
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "batcher.open"), "{f:?}");
     }
 
     #[test]
-    fn temporaries_live_across_an_attached_block() {
-        // `if let` extends the guard across the arm (real Rust
-        // temporary-scope semantics) — a nested reverse acquisition
-        // inside the block is a genuine deadlock.
-        let src = "fn f(&self) {\n    if let Some(s) = plock(&state.inner).shares.first() {\n        plock(&self.open).remove(k);\n    }\n}\n";
-        let hits = lint(src);
-        assert_eq!(hits.len(), 1, "{hits:?}");
-        assert_eq!(hits[0].line, 3);
+    fn cycles_in_the_nest_graph_are_named() {
+        let f = run(&[(
+            "rust/src/platform/batcher.rs",
+            "pub struct Batcher { open: Mutex<u32>, inner: Mutex<u32> }\nimpl Batcher {\n    fn ab(&self) { let a = plock(&self.open); let b = plock(&self.inner); }\n    fn ba(&self) { let b = plock(&self.inner); let a = plock(&self.open); }\n}\n",
+        )]);
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "lock cycle"), "{f:?}");
     }
 
     #[test]
-    fn drop_releases_a_let_bound_guard() {
-        let src = "fn f(&self) {\n    let g = plock(&state.inner);\n    drop(g);\n    let open = plock(&self.open);\n}\n";
-        assert!(lint(src).is_empty());
+    fn stale_declared_site_is_a_finding() {
+        // pool.rs is present but `idle` was renamed away.
+        let f = run(&[(
+            "rust/src/platform/pool.rs",
+            "pub struct WarmPool { idle_q: Mutex<u32> }\nimpl WarmPool {\n    fn f(&self) {}\n}\n",
+        )]);
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "no longer exists"), "{f:?}");
+        // Partial mode: absent files are not judged.
+        assert!(
+            !f.iter().any(|x| x.message.contains("batcher")),
+            "absent files vouch for nothing: {f:?}"
+        );
     }
 
     #[test]
-    fn block_close_releases_let_bound_guards() {
-        let src = "fn f(&self) {\n    {\n        let g = plock(&state.inner);\n    }\n    let open = plock(&self.open);\n}\n";
-        assert!(lint(src).is_empty());
-    }
-
-    #[test]
-    fn wait_while_holding_a_second_lock_is_flagged() {
-        let src = "fn f(&self) {\n    let open = plock(&self.open);\n    let g = plock(&state.inner);\n    let (g, _) = pwait_timeout(&state.cv, g, d);\n}\n";
-        let hits = lint(src);
-        assert_eq!(hits.len(), 1, "{hits:?}");
-        assert!(hits[0].message.contains("condvar wait while holding"));
-    }
-
-    #[test]
-    fn wait_with_only_its_own_guard_is_fine() {
-        let src = "fn f(&self) {\n    let mut g = plock(&state.inner);\n    g = pwait_timeout(&state.cv, g, d).0;\n}\n";
-        assert!(lint(src).is_empty());
-    }
-
-    #[test]
-    fn computed_receivers_are_untracked() {
-        let src = "fn f(&self) {\n    let open = plock(&self.open);\n    plock(&self.shard(name)).apply(r);\n}\n";
-        assert!(lint(src).is_empty());
-    }
-
-    #[test]
-    fn dot_lock_spelling_is_tracked_too() {
-        let src = "fn f(&self) {\n    let g = state.inner.lock().unwrap();\n    let open = self.open.lock().unwrap();\n}\n";
-        let hits = lint(src);
-        assert_eq!(hits.len(), 1, "{hits:?}");
-        assert!(hits[0].message.contains("declared order"));
-    }
-
-    #[test]
-    fn files_without_a_manifest_entry_are_skipped() {
-        let src = "fn f() { let a = plock(&x.inner); let b = plock(&y.open); }\n";
-        assert!(check(&FileCtx::new("platform/unlisted.rs", src)).is_empty());
+    fn lint_allow_suppresses_global_lock_order() {
+        let f = run(&[(
+            "rust/src/platform/batcher.rs",
+            "pub struct Batcher { open: Mutex<u32>, inner: Mutex<u32> }\nimpl Batcher {\n    fn f(&self) {\n        let b = plock(&self.inner);\n        // lint:allow(global-lock-order: fixture proves suppression plumbing)\n        let a = plock(&self.open);\n    }\n}\n",
+        )]);
+        assert!(!f.iter().any(|x| x.rule == GLOBAL_LOCK_ORDER), "{f:?}");
     }
 }

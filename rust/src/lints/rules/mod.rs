@@ -1,9 +1,12 @@
-//! The rule implementations. Each rule exposes
-//! `check(&FileCtx) -> Vec<Finding>` (rule 5, `stats_doc`, checks the
-//! stats route source against API.md instead and exposes
-//! `check_repo`).
+//! The rule implementations. Per-file rules expose
+//! `check(&FileCtx) -> Vec<Finding>`; the whole-program rules
+//! (`lock_order`, `blocking_under_lock`) run over the computed
+//! [`crate::lints::summaries::Summaries`] instead, and the doc-drift
+//! rules (`stats_doc`, `config_doc`) expose `check_repo`.
 
+pub mod blocking_under_lock;
 pub mod condvar_wait;
+pub mod config_doc;
 pub mod lock_order;
 pub mod poison_lock;
 pub mod stats_doc;
@@ -17,26 +20,4 @@ pub(crate) fn matches_seq(toks: &[Tok], i: usize, pat: &[(TokKind, &str)]) -> bo
         return false;
     }
     pat.iter().enumerate().all(|(k, (kind, text))| toks[i + k].is(*kind, text))
-}
-
-/// Parse a field path ending at `toks[end]` (exclusive), walking
-/// backwards over `ident (. ident)*` — e.g. for the tokens of
-/// `self.shared.queue` returns `["self", "shared", "queue"]`. Returns
-/// an empty vec when `toks[end-1]` is not an identifier.
-pub(crate) fn path_before(toks: &[Tok], end: usize) -> Vec<String> {
-    let mut segs: Vec<String> = Vec::new();
-    let mut i = end;
-    loop {
-        if i == 0 || toks[i - 1].kind != TokKind::Ident {
-            break;
-        }
-        segs.push(toks[i - 1].text.clone());
-        i -= 1;
-        if i == 0 || !toks[i - 1].is(TokKind::Punct, ".") {
-            break;
-        }
-        i -= 1;
-    }
-    segs.reverse();
-    segs
 }

@@ -1,0 +1,643 @@
+//! Per-function effect summaries and their transitive closure.
+//!
+//! For every non-test function in scope, one pass over its body tokens
+//! (with the same conservative guard-liveness simulation the old
+//! per-file `lock-order` rule used) produces a list of [`Event`]s:
+//!
+//! - **Acquire** — a tracked platform lock is taken (`plock(&path)`,
+//!   `path.lock()`, or `path.read()`/`path.write()` on a declared
+//!   `RwLock` site), with the set of locks already held;
+//! - **Block** — a potentially-unbounded pause: condvar wait, clock
+//!   sleep, channel recv, zero-arg `join()`, or one of the blocking
+//!   `Engine` methods (`predict`, `create_instance`, ...). Engine
+//!   calls are modeled as opaque blocking leaves at the trait
+//!   boundary rather than resolved into a particular engine impl;
+//! - **Call** — a resolvable call edge (see [`crate::lints::callgraph`])
+//!   with the held-lock snapshot at the call site.
+//!
+//! Anything inside a `spawn(...)` argument list — bare `spawn(`,
+//! `thread::spawn(`, or builder-style `.spawn(` — is excluded: it runs
+//! on another thread and holds nothing of ours.
+//!
+//! The per-function `acquires`/`blocks` sets are then propagated
+//! callee→caller over the call graph with a worklist until fixpoint
+//! (set-union is monotone, so recursion — mutual or direct — simply
+//! converges). Each propagated fact keeps a [`Witness`] back-pointer,
+//! so a finding two hops up can print the actual chain:
+//! `dispatcher.rs:Dispatcher::f -> helper.rs:Helper::b -> line 12`.
+
+use crate::lints::callgraph::resolve_method;
+use crate::lints::rules::lock_order::{is_rw_site, lock_for};
+use crate::lints::symbols::{skip_to_matching, Program};
+use crate::lints::tokenizer::{Tok, TokKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// `Engine` trait methods that can stall for model-serving reasons
+/// (compilation, weight transfer, inference). `drop_instance` is
+/// deliberately absent: it is bounded bookkeeping.
+pub const ENGINE_BLOCKING: &[&str] =
+    &["predict", "predict_batch", "create_instance", "snapshot_instance", "restore_instance"];
+
+/// One tracked lock held at an event, as seen by the simulation.
+#[derive(Debug, Clone)]
+pub struct HeldLock {
+    /// Index into [`crate::lints::rules::lock_order::PLATFORM_LOCK_ORDER`].
+    pub lock: usize,
+    /// Acquisition line.
+    pub line: u32,
+    /// `Some(var)` for `let var = …` guards, `None` for temporaries.
+    pub binding: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub enum EventKind {
+    /// Acquires the tracked lock with this rank index.
+    Acquire(usize),
+    /// Calls a resolved method/function; `cands` indexes `Program::fns`.
+    Call { name: String, cands: Vec<usize> },
+    /// Blocks directly. `kind` is a stable id (`condvar-wait`,
+    /// `clock-sleep`, `channel-recv`, `thread-join`,
+    /// `engine-call:<method>`). For condvar waits, `own_guard` is the
+    /// guard variable the wait consumes (that one is *released* while
+    /// parked and is exempt from blocking-under-lock).
+    Block { kind: String, own_guard: Option<String> },
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub kind: EventKind,
+    pub line: u32,
+    /// Snapshot of tracked locks held when the event fires.
+    pub held: Vec<HeldLock>,
+}
+
+/// How a transitive fact entered a function's summary.
+#[derive(Debug, Clone, Copy)]
+pub enum Witness {
+    /// Happens directly in this function, at this line.
+    Direct(u32),
+    /// Inherited from this callee (index into `Program::fns`).
+    Via(usize),
+}
+
+/// The computed whole-program summaries, indexed by `Program::fns`.
+pub struct Summaries {
+    pub events: Vec<Vec<Event>>,
+    /// Transitive closure: locks a call to fn `i` may acquire.
+    pub acquires: Vec<BTreeSet<usize>>,
+    /// Transitive closure: block kinds a call to fn `i` may hit.
+    pub blocks: Vec<BTreeSet<String>>,
+    via_acq: BTreeMap<(usize, usize), Witness>,
+    via_blk: BTreeMap<(usize, String), Witness>,
+}
+
+impl Summaries {
+    /// Human-readable chain explaining why fn `f` transitively
+    /// acquires `lock`: `pool.rs:WarmPool::take -> ... -> line 80`.
+    pub fn acquire_chain(&self, p: &Program, f: usize, lock: usize) -> String {
+        self.chain(p, f, |s, cur| s.via_acq.get(&(cur, lock)).copied())
+    }
+
+    /// Chain explaining why fn `f` transitively blocks with `kind`.
+    pub fn block_chain(&self, p: &Program, f: usize, kind: &str) -> String {
+        self.chain(p, f, |s, cur| s.via_blk.get(&(cur, kind.to_string())).copied())
+    }
+
+    fn chain(
+        &self,
+        p: &Program,
+        f: usize,
+        step: impl Fn(&Self, usize) -> Option<Witness>,
+    ) -> String {
+        let mut parts = vec![short_name(p, f)];
+        let mut cur = f;
+        // Bounded walk: witnesses are acyclic by construction (each
+        // points at the callee the fact was first copied from), but a
+        // cap keeps a future bug from looping the linter.
+        for _ in 0..50 {
+            match step(self, cur) {
+                Some(Witness::Direct(line)) => {
+                    parts.push(format!("line {line}"));
+                    break;
+                }
+                Some(Witness::Via(callee)) => {
+                    parts.push(short_name(p, callee));
+                    cur = callee;
+                }
+                None => break,
+            }
+        }
+        parts.join(" -> ")
+    }
+}
+
+/// `pool.rs:WarmPool::take` — compact fn identifier for messages.
+pub fn short_name(p: &Program, f: usize) -> String {
+    let fd = &p.fns[f];
+    let path = &p.files[fd.file].ctx.path;
+    let base = path.rsplit('/').next().unwrap_or(path);
+    match &fd.self_type {
+        Some(st) => format!("{base}:{st}::{}", fd.name),
+        None => format!("{base}:{}", fd.name),
+    }
+}
+
+/// Build every function's event list and close the summaries over the
+/// call graph.
+pub fn compute(p: &Program) -> Summaries {
+    let n = p.fns.len();
+    let mut events = Vec::with_capacity(n);
+    for idx in 0..n {
+        events.push(extract_effects(p, idx));
+    }
+    let mut acquires: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    let mut blocks: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n];
+    let mut via_acq: BTreeMap<(usize, usize), Witness> = BTreeMap::new();
+    let mut via_blk: BTreeMap<(usize, String), Witness> = BTreeMap::new();
+    let mut calls: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    for (idx, evs) in events.iter().enumerate() {
+        for e in evs {
+            match &e.kind {
+                EventKind::Acquire(l) => {
+                    acquires[idx].insert(*l);
+                    via_acq.entry((idx, *l)).or_insert(Witness::Direct(e.line));
+                }
+                EventKind::Block { kind, .. } => {
+                    blocks[idx].insert(kind.clone());
+                    via_blk.entry((idx, kind.clone())).or_insert(Witness::Direct(e.line));
+                }
+                EventKind::Call { cands, .. } => {
+                    calls[idx].extend(cands.iter().copied());
+                }
+            }
+        }
+    }
+    // Worklist over reverse edges: when a callee's summary grows, its
+    // callers re-absorb it. Union is monotone over finite sets, so
+    // this terminates even through recursion cycles.
+    let mut callers: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    for (idx, cs) in calls.iter().enumerate() {
+        for &c in cs {
+            callers[c].insert(idx);
+        }
+    }
+    let mut work: Vec<usize> = (0..n).collect();
+    while let Some(f) = work.pop() {
+        let f_acq: Vec<usize> = acquires[f].iter().copied().collect();
+        let f_blk: Vec<String> = blocks[f].iter().cloned().collect();
+        let cs: Vec<usize> = callers[f].iter().copied().collect();
+        for caller in cs {
+            let mut changed = false;
+            for &l in &f_acq {
+                if acquires[caller].insert(l) {
+                    via_acq.entry((caller, l)).or_insert(Witness::Via(f));
+                    changed = true;
+                }
+            }
+            for b in &f_blk {
+                if blocks[caller].insert(b.clone()) {
+                    via_blk.entry((caller, b.clone())).or_insert(Witness::Via(f));
+                    changed = true;
+                }
+            }
+            if changed {
+                work.push(caller);
+            }
+        }
+    }
+    Summaries { events, acquires, blocks, via_acq, via_blk }
+}
+
+/// Internal guard state: a [`HeldLock`] plus the brace depth it was
+/// born at (for block-scoped release).
+struct GuardState {
+    lock: usize,
+    line: u32,
+    binding: Option<String>,
+    depth: usize,
+}
+
+/// One pass over fn `fn_idx`'s body: guard-liveness simulation plus
+/// event extraction. Mirrors the old per-file rule's liveness model:
+/// let-bound guards live until `drop(name)` or their block closes;
+/// temporaries die at their statement's `;` (or the `}` of an attached
+/// block, matching Rust's temporary-scope extension for `if let`).
+fn extract_effects(p: &Program, fn_idx: usize) -> Vec<Event> {
+    let fd = &p.fns[fn_idx];
+    let fs = &p.files[fd.file];
+    let toks = &fs.ctx.toks;
+    let path = &fs.ctx.path;
+    let Some((start, end)) = fd.body else { return Vec::new() };
+    let mut events: Vec<Event> = Vec::new();
+    let mut held: Vec<GuardState> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = start;
+    while i <= end {
+        let t = &toks[i];
+        if t.kind == TokKind::Comment {
+            i += 1;
+            continue;
+        }
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => {
+                    depth += 1;
+                    i += 1;
+                    continue;
+                }
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    held.retain(|g| g.depth <= depth && !(g.binding.is_none() && g.depth == depth));
+                    i += 1;
+                    continue;
+                }
+                ";" => {
+                    held.retain(|g| !(g.binding.is_none() && g.depth == depth));
+                    i += 1;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        if fs.ctx.is_test[i] {
+            i += 1;
+            continue;
+        }
+        // `drop(name)` releases a let-bound guard early.
+        if t.is(TokKind::Ident, "drop")
+            && i + 3 <= end
+            && toks[i + 1].is(TokKind::Punct, "(")
+            && toks[i + 2].kind == TokKind::Ident
+            && toks[i + 3].is(TokKind::Punct, ")")
+        {
+            let name = toks[i + 2].text.as_str();
+            held.retain(|g| g.binding.as_deref() != Some(name));
+            i += 4;
+            continue;
+        }
+        // `spawn(...)` runs on another thread: its argument list
+        // (usually a closure) contributes nothing to THIS function's
+        // effects. Catches bare `spawn(` and, via the call branch
+        // below, `thread::spawn(` / builder `.spawn(`.
+        if t.is(TokKind::Ident, "spawn") && i + 1 <= end && toks[i + 1].is(TokKind::Punct, "(") {
+            i = skip_to_matching(toks, i + 1, "(", ")") + 1;
+            continue;
+        }
+        let snap: Vec<HeldLock> = held
+            .iter()
+            .map(|g| HeldLock { lock: g.lock, line: g.line, binding: g.binding.clone() })
+            .collect();
+        // ---- blocking operations -----------------------------------
+        // `pwait_timeout(&cv, guard, dur)` — the own guard is arg #2.
+        if t.is(TokKind::Ident, "pwait_timeout")
+            && i + 1 <= end
+            && toks[i + 1].is(TokKind::Punct, "(")
+            && !(i > 0 && toks[i - 1].is(TokKind::Punct, "."))
+        {
+            let mut own = None;
+            let mut j = i + 2;
+            let mut d2 = 1usize;
+            let mut commas = 0;
+            while j <= end && d2 > 0 {
+                if toks[j].kind == TokKind::Punct {
+                    match toks[j].text.as_str() {
+                        "(" => d2 += 1,
+                        ")" => d2 -= 1,
+                        "," if d2 == 1 => {
+                            commas += 1;
+                            if commas == 1 && j + 1 <= end && toks[j + 1].kind == TokKind::Ident {
+                                own = Some(toks[j + 1].text.clone());
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            events.push(Event {
+                kind: EventKind::Block { kind: "condvar-wait".to_string(), own_guard: own },
+                line: t.line,
+                held: snap,
+            });
+            i += 1;
+            continue;
+        }
+        if t.is(TokKind::Punct, ".")
+            && i + 2 <= end
+            && toks[i + 1].kind == TokKind::Ident
+            && toks[i + 2].is(TokKind::Punct, "(")
+        {
+            let m = toks[i + 1].text.as_str();
+            let line = toks[i + 1].line;
+            let zero_arg = i + 3 <= end && toks[i + 3].is(TokKind::Punct, ")");
+            if (m == "wait" || m == "wait_timeout") && !zero_arg {
+                let own = (i + 3 <= end && toks[i + 3].kind == TokKind::Ident)
+                    .then(|| toks[i + 3].text.clone());
+                events.push(Event {
+                    kind: EventKind::Block { kind: "condvar-wait".to_string(), own_guard: own },
+                    line,
+                    held: snap,
+                });
+                i += 2;
+                continue;
+            }
+            if m == "sleep" {
+                events.push(Event {
+                    kind: EventKind::Block { kind: "clock-sleep".to_string(), own_guard: None },
+                    line,
+                    held: snap,
+                });
+                i += 2;
+                continue;
+            }
+            if m == "recv" || m == "recv_timeout" {
+                events.push(Event {
+                    kind: EventKind::Block { kind: "channel-recv".to_string(), own_guard: None },
+                    line,
+                    held: snap,
+                });
+                i += 2;
+                continue;
+            }
+            if m == "join" && zero_arg {
+                events.push(Event {
+                    kind: EventKind::Block { kind: "thread-join".to_string(), own_guard: None },
+                    line,
+                    held: snap,
+                });
+                i += 2;
+                continue;
+            }
+            if ENGINE_BLOCKING.contains(&m) {
+                events.push(Event {
+                    kind: EventKind::Block { kind: format!("engine-call:{m}"), own_guard: None },
+                    line,
+                    held: snap,
+                });
+                i += 2;
+                continue;
+            }
+        }
+        // ---- acquisitions ------------------------------------------
+        // `plock(&path)`.
+        if t.is(TokKind::Ident, "plock")
+            && i + 2 <= end
+            && toks[i + 1].is(TokKind::Punct, "(")
+            && toks[i + 2].is(TokKind::Punct, "&")
+        {
+            if let Some(name) = plain_path_after(toks, i + 3) {
+                if let Some(lid) = lock_for(path, &name) {
+                    do_acquire(&mut events, &mut held, toks, i, depth, lid, snap);
+                }
+            }
+            i += 1;
+            continue;
+        }
+        // `path.lock()` / `path.read()` / `path.write()` — zero-arg
+        // only, so `stream.write(buf)` can never look like an RwLock.
+        if t.is(TokKind::Punct, ".")
+            && i + 3 <= end
+            && toks[i + 1].kind == TokKind::Ident
+            && toks[i + 2].is(TokKind::Punct, "(")
+            && toks[i + 3].is(TokKind::Punct, ")")
+        {
+            let m = toks[i + 1].text.as_str();
+            if m == "lock" || m == "read" || m == "write" {
+                let (segs, pstart) = path_before_idx(toks, i);
+                if let Some(name) = segs.last() {
+                    if let Some(lid) = lock_for(path, name) {
+                        if m == "lock" || is_rw_site(path, name) {
+                            do_acquire(&mut events, &mut held, toks, pstart, depth, lid, snap);
+                            i += 4;
+                            continue;
+                        }
+                    }
+                }
+            }
+        }
+        // ---- call sites --------------------------------------------
+        // Method call `recv.path.m(`.
+        if t.is(TokKind::Punct, ".")
+            && i + 2 <= end
+            && toks[i + 1].kind == TokKind::Ident
+            && toks[i + 2].is(TokKind::Punct, "(")
+        {
+            let m = toks[i + 1].text.clone();
+            if m == "spawn" {
+                i = skip_to_matching(toks, i + 2, "(", ")") + 1;
+                continue;
+            }
+            let (segs, _) = path_before_idx(toks, i);
+            let cands = resolve_method(p, fd, &segs, &m);
+            if !cands.is_empty() {
+                events.push(Event {
+                    kind: EventKind::Call { name: m, cands },
+                    line: toks[i + 1].line,
+                    held: snap,
+                });
+            }
+            i += 2;
+            continue;
+        }
+        // Free-function call `f(` (not `.f(`, not `::f(`).
+        if t.kind == TokKind::Ident
+            && i + 1 <= end
+            && toks[i + 1].is(TokKind::Punct, "(")
+            && !(i > 0 && toks[i - 1].is(TokKind::Punct, "."))
+            && !(i > 0 && toks[i - 1].is(TokKind::Punct, ":"))
+        {
+            let cands: Vec<usize> = p
+                .by_name
+                .get(&t.text)
+                .map(|v| {
+                    v.iter()
+                        .copied()
+                        .filter(|&fi| !p.fns[fi].has_self && p.fns[fi].self_type.is_none())
+                        .collect()
+                })
+                .unwrap_or_default();
+            if !cands.is_empty() {
+                events.push(Event {
+                    kind: EventKind::Call { name: t.text.clone(), cands },
+                    line: t.line,
+                    held: snap,
+                });
+            }
+            i += 1;
+            continue;
+        }
+        // Qualified call `Type::method(` (incl. `Self::`).
+        if t.kind == TokKind::Ident
+            && i + 4 <= end
+            && toks[i + 1].is(TokKind::Punct, ":")
+            && toks[i + 2].is(TokKind::Punct, ":")
+            && toks[i + 3].kind == TokKind::Ident
+            && toks[i + 4].is(TokKind::Punct, "(")
+        {
+            let m = toks[i + 3].text.clone();
+            if m == "spawn" {
+                i = skip_to_matching(toks, i + 4, "(", ")") + 1;
+                continue;
+            }
+            let qual =
+                if t.text == "Self" { fd.self_type.clone() } else { Some(t.text.clone()) };
+            let cands: Vec<usize> = p
+                .by_name
+                .get(&m)
+                .map(|v| {
+                    v.iter().copied().filter(|&fi| p.fns[fi].self_type == qual).collect()
+                })
+                .unwrap_or_default();
+            if !cands.is_empty() {
+                events.push(Event {
+                    kind: EventKind::Call { name: m, cands },
+                    line: toks[i + 3].line,
+                    held: snap,
+                });
+            }
+            i += 5;
+            continue;
+        }
+        i += 1;
+    }
+    events
+}
+
+fn do_acquire(
+    events: &mut Vec<Event>,
+    held: &mut Vec<GuardState>,
+    toks: &[Tok],
+    start: usize,
+    depth: usize,
+    lid: usize,
+    snap: Vec<HeldLock>,
+) {
+    let line = toks[start].line;
+    events.push(Event { kind: EventKind::Acquire(lid), line, held: snap });
+    // `let g = …` / `let mut g = …` binds the guard; else temporary.
+    let binding = if start >= 3
+        && toks[start - 1].is(TokKind::Punct, "=")
+        && toks[start - 2].kind == TokKind::Ident
+        && (toks[start - 3].is(TokKind::Ident, "let")
+            || (start >= 4
+                && toks[start - 3].is(TokKind::Ident, "mut")
+                && toks[start - 4].is(TokKind::Ident, "let")))
+    {
+        Some(toks[start - 2].text.clone())
+    } else {
+        None
+    };
+    // Rebinding a name implicitly drops the old guard.
+    if let Some(b) = &binding {
+        held.retain(|g| g.binding.as_deref() != Some(b.as_str()));
+    }
+    held.push(GuardState { lock: lid, line, binding, depth });
+}
+
+/// Forward-parse `ident (. ident)*` at `toks[i]`, requiring the next
+/// token to be `)`. Returns the final segment (the lock field name),
+/// or `None` for computed receivers.
+fn plain_path_after(toks: &[Tok], mut i: usize) -> Option<String> {
+    let mut last: Option<String> = None;
+    loop {
+        if i >= toks.len() || toks[i].kind != TokKind::Ident {
+            return None;
+        }
+        last = Some(toks[i].text.clone());
+        i += 1;
+        if i < toks.len() && toks[i].is(TokKind::Punct, ".") {
+            i += 1;
+            continue;
+        }
+        break;
+    }
+    if i < toks.len() && toks[i].is(TokKind::Punct, ")") {
+        last
+    } else {
+        None
+    }
+}
+
+/// Backward-parse the `ident (. ident)*` path ending at `toks[end]`
+/// (exclusive). Returns the segments and the index of the path's first
+/// token (where `let`-binding detection starts).
+fn path_before_idx(toks: &[Tok], end: usize) -> (Vec<String>, usize) {
+    let mut segs: Vec<String> = Vec::new();
+    let mut i = end;
+    loop {
+        if i == 0 || toks[i - 1].kind != TokKind::Ident {
+            break;
+        }
+        segs.push(toks[i - 1].text.clone());
+        i -= 1;
+        if i == 0 || !toks[i - 1].is(TokKind::Punct, ".") {
+            break;
+        }
+        i -= 1;
+    }
+    segs.reverse();
+    (segs, i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summarize(src: &str) -> (Program, Summaries) {
+        let p = Program::build(&[("rust/src/platform/pool.rs".to_string(), src.to_string())]);
+        let s = compute(&p);
+        (p, s)
+    }
+
+    fn fn_idx(p: &Program, name: &str) -> usize {
+        p.fns.iter().position(|f| f.name == name).unwrap()
+    }
+
+    #[test]
+    fn direct_acquire_and_block_land_in_summaries() {
+        let (p, s) = summarize(
+            "pub struct WarmPool { idle: Mutex<u32>, clock: Arc<dyn Clock> }\nimpl WarmPool {\n    fn f(&self) {\n        let g = plock(&self.idle);\n        drop(g);\n        self.clock.sleep(d);\n    }\n}\n",
+        );
+        let f = fn_idx(&p, "f");
+        assert!(s.acquires[f].contains(&super::super::rules::lock_order::rank_of("pool.idle")));
+        assert!(s.blocks[f].contains("clock-sleep"));
+    }
+
+    #[test]
+    fn effects_propagate_to_fixpoint_through_recursion() {
+        let (p, s) = summarize(
+            "pub struct WarmPool { clock: Arc<dyn Clock> }\nimpl WarmPool {\n    fn ping(&self, n: u32) { if n > 0 { self.pong(n); } }\n    fn pong(&self, n: u32) { self.clock.sleep(d); self.ping(n - 1); }\n}\n",
+        );
+        assert!(s.blocks[fn_idx(&p, "ping")].contains("clock-sleep"), "inherited from pong");
+        assert!(s.blocks[fn_idx(&p, "pong")].contains("clock-sleep"));
+    }
+
+    #[test]
+    fn spawn_bodies_are_another_threads_problem() {
+        let (p, s) = summarize(
+            "pub struct WarmPool { clock: Arc<dyn Clock> }\nimpl WarmPool {\n    fn a(&self) { spawn(move || self.clock.sleep(d)); }\n    fn b(&self) { std::thread::Builder::new().name(n).spawn(move || self.clock.sleep(d)); }\n    fn c(&self) { thread::spawn(move || self.clock.sleep(d)); }\n}\n",
+        );
+        for name in ["a", "b", "c"] {
+            assert!(s.blocks[fn_idx(&p, name)].is_empty(), "{name} must not inherit the closure");
+        }
+    }
+
+    #[test]
+    fn block_chain_names_the_hops() {
+        let (p, s) = summarize(
+            "pub struct WarmPool { clock: Arc<dyn Clock> }\nimpl WarmPool {\n    fn outer(&self) { self.inner(); }\n    fn inner(&self) { self.clock.sleep(d); }\n}\n",
+        );
+        let chain = s.block_chain(&p, fn_idx(&p, "outer"), "clock-sleep");
+        assert!(chain.contains("WarmPool::outer"), "{chain}");
+        assert!(chain.contains("WarmPool::inner"), "{chain}");
+        assert!(chain.contains("line "), "{chain}");
+    }
+
+    #[test]
+    fn engine_calls_are_opaque_blocking_leaves() {
+        let (p, s) = summarize(
+            "pub struct WarmPool { engine: Arc<dyn Engine> }\nimpl WarmPool {\n    fn f(&self) { self.engine.predict(x); }\n}\n",
+        );
+        assert!(s.blocks[fn_idx(&p, "f")].contains("engine-call:predict"));
+    }
+}

@@ -1,0 +1,468 @@
+//! Lightweight symbol resolution for the whole-program lint pass.
+//!
+//! Parses every scoped file's token stream into just enough structure
+//! for the call-graph and effect-summary layers: struct fields (with
+//! `Mutex`/`RwLock` flags and a *peeled* type name for receiver
+//! resolution), `impl`/`trait` blocks, and `fn` items with their
+//! parameter types and body token ranges. This is deliberately not a
+//! Rust parser — it is a brace/angle-matching walk over the existing
+//! tokenizer, conservative in the same way the token rules are:
+//! anything it cannot resolve is simply absent, and the downstream
+//! analyses treat absence as "unknown", never as "safe" *for declared
+//! locks* (an unknown callee contributes no effects; an unknown
+//! receiver falls back to name matching, see `callgraph`).
+//!
+//! "Peeled" types strip the smart-pointer/option wrappers that hide
+//! the interesting type from a receiver path: `Arc<dyn Engine>` peels
+//! to `Engine`, `Arc<Mutex<BTreeMap<..>>>` peels to its first
+//! non-wrapper ident. That is exactly what `self.field.method(...)`
+//! resolution needs, because method calls auto-deref through all of
+//! them.
+
+use crate::lints::tokenizer::{Tok, TokKind};
+use crate::lints::FileCtx;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Wrappers peeled off a field/param type before receiver resolution.
+const WRAPPERS: &[&str] = &["Arc", "Rc", "Box", "Weak", "Option", "dyn", "mut"];
+
+/// One struct field or fn parameter, reduced to what resolution needs.
+#[derive(Debug, Clone, Default)]
+pub struct TypeInfo {
+    /// First non-wrapper ident of the declared type, if any.
+    pub peeled: Option<String>,
+    /// The unpeeled type mentions `Mutex`.
+    pub is_mutex: bool,
+    /// The unpeeled type mentions `RwLock`.
+    pub is_rwlock: bool,
+}
+
+/// One `fn` item (free, inherent, trait-default, or trait-decl).
+#[derive(Debug)]
+pub struct FnDef {
+    /// Index into [`Program::files`].
+    pub file: usize,
+    /// Enclosing `impl`/`trait` type name, `None` for free functions.
+    pub self_type: Option<String>,
+    pub name: String,
+    /// Non-self parameters by name.
+    pub params: BTreeMap<String, TypeInfo>,
+    /// Token range of the body including both braces; `None` for a
+    /// bodyless trait declaration.
+    pub body: Option<(usize, usize)>,
+    pub has_self: bool,
+    /// Declared inside a `trait` block (a default method still gets a
+    /// body and is analyzed; a bare declaration has none).
+    pub is_trait_decl: bool,
+}
+
+/// Symbols of one file, wrapping the shared token context.
+pub struct FileSyms {
+    pub ctx: FileCtx,
+    /// struct name → field name → type info.
+    pub structs: BTreeMap<String, BTreeMap<String, TypeInfo>>,
+    /// impl type → traits it implements.
+    pub impl_traits: BTreeMap<String, BTreeSet<String>>,
+}
+
+/// The whole scoped program: every file's symbols plus the flat fn
+/// table and the indexes the call graph resolves through.
+pub struct Program {
+    pub files: Vec<FileSyms>,
+    pub fns: Vec<FnDef>,
+    /// fn name → indexes into `fns` (test-only fns are excluded: they
+    /// are neither analyzed nor valid fallback targets).
+    pub by_name: BTreeMap<String, Vec<usize>>,
+    /// trait name → impl type names.
+    pub trait_impls: BTreeMap<String, Vec<String>>,
+}
+
+impl Program {
+    /// Parse `(path, source)` pairs into a program. Paths are kept
+    /// verbatim (repo-relative in the real run, fixture names in
+    /// tests) — the lock table matches on path suffixes.
+    pub fn build(files: &[(String, String)]) -> Program {
+        let mut out = Program {
+            files: Vec::new(),
+            fns: Vec::new(),
+            by_name: BTreeMap::new(),
+            trait_impls: BTreeMap::new(),
+        };
+        for (path, source) in files {
+            let file_idx = out.files.len();
+            let ctx = FileCtx::new(path, source);
+            let mut fs = FileSyms { ctx, structs: BTreeMap::new(), impl_traits: BTreeMap::new() };
+            let fns = parse_file(&mut fs, file_idx);
+            for (ty, traits) in &fs.impl_traits {
+                for tr in traits {
+                    out.trait_impls.entry(tr.clone()).or_default().push(ty.clone());
+                }
+            }
+            for fd in fns {
+                let in_test = fd.body.is_some_and(|(s, _)| fs.ctx.is_test[s]);
+                if !in_test {
+                    out.by_name.entry(fd.name.clone()).or_default().push(out.fns.len());
+                    out.fns.push(fd);
+                }
+            }
+            out.files.push(fs);
+        }
+        out
+    }
+
+    /// Resolve `ty.field`'s peeled type across every file's structs.
+    pub fn field_type(&self, ty: &str, field: &str) -> Option<String> {
+        for fs in &self.files {
+            if let Some(fields) = fs.structs.get(ty) {
+                if let Some(info) = fields.get(field) {
+                    return info.peeled.clone();
+                }
+            }
+        }
+        None
+    }
+}
+
+/// `toks[i]` is `open`; index of the matching `close` (or last token).
+pub fn skip_to_matching(toks: &[Tok], mut i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Punct {
+            if toks[i].text == open {
+                depth += 1;
+            } else if toks[i].text == close {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return i;
+                }
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Skip a balanced `<...>` generic list when `toks[i]` opens one.
+fn skip_generics(toks: &[Tok], i: usize) -> usize {
+    if i >= toks.len() || !toks[i].is(TokKind::Punct, "<") {
+        return i;
+    }
+    let mut depth = 0usize;
+    let mut j = i;
+    while j < toks.len() {
+        if toks[j].kind == TokKind::Punct {
+            if toks[j].text == "<" {
+                depth += 1;
+            } else if toks[j].text == ">" {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+fn peel_type(ty: &[Tok]) -> TypeInfo {
+    let names: Vec<&str> = ty
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.as_str())
+        .collect();
+    TypeInfo {
+        peeled: names.iter().find(|n| !WRAPPERS.contains(n)).map(|n| n.to_string()),
+        is_mutex: names.contains(&"Mutex"),
+        is_rwlock: names.contains(&"RwLock"),
+    }
+}
+
+/// One pass over the file: structs, impl/trait contexts, fn items.
+fn parse_file(fs: &mut FileSyms, file_idx: usize) -> Vec<FnDef> {
+    let toks = &fs.ctx.toks;
+    let n = toks.len();
+    let mut fns = Vec::new();
+    // Stack of (is_trait, type name, close index) for impl/trait blocks.
+    let mut ctx: Vec<(bool, Option<String>, usize)> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        while ctx.last().is_some_and(|(_, _, close)| i > *close) {
+            ctx.pop();
+        }
+        if toks[i].kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        match toks[i].text.as_str() {
+            "struct" if i + 1 < n && toks[i + 1].kind == TokKind::Ident => {
+                let name = toks[i + 1].text.clone();
+                let j = skip_generics(toks, i + 2);
+                if j < n && toks[j].is(TokKind::Punct, "{") {
+                    let close = skip_to_matching(toks, j, "{", "}");
+                    let fields = parse_fields(toks, j + 1, close);
+                    fs.structs.insert(name, fields);
+                    i = close + 1;
+                } else {
+                    i = j + 1;
+                }
+            }
+            "impl" => {
+                let mut j = skip_generics(toks, i + 1);
+                let mut seg1 = None;
+                if j < n && toks[j].kind == TokKind::Ident {
+                    seg1 = Some(toks[j].text.clone());
+                    j = skip_generics(toks, j + 1);
+                }
+                let mut trait_name = None;
+                let mut ty = seg1.clone();
+                if j < n && toks[j].is(TokKind::Ident, "for") {
+                    trait_name = seg1;
+                    j += 1;
+                    while j < n && toks[j].kind == TokKind::Punct && toks[j].text == "&" {
+                        j += 1;
+                    }
+                    if j < n && toks[j].kind == TokKind::Ident {
+                        ty = Some(toks[j].text.clone());
+                        j += 1;
+                    }
+                    j = skip_generics(toks, j);
+                }
+                while j < n && !toks[j].is(TokKind::Punct, "{") {
+                    j += 1;
+                }
+                if j < n {
+                    let close = skip_to_matching(toks, j, "{", "}");
+                    if let (Some(tr), Some(t)) = (&trait_name, &ty) {
+                        fs.impl_traits.entry(t.clone()).or_default().insert(tr.clone());
+                    }
+                    ctx.push((false, ty, close));
+                    i = j + 1;
+                } else {
+                    i = j;
+                }
+            }
+            "trait" if i + 1 < n && toks[i + 1].kind == TokKind::Ident => {
+                let name = toks[i + 1].text.clone();
+                let mut j = skip_generics(toks, i + 2);
+                while j < n && !toks[j].is(TokKind::Punct, "{") {
+                    j += 1;
+                }
+                if j < n {
+                    let close = skip_to_matching(toks, j, "{", "}");
+                    ctx.push((true, Some(name), close));
+                    i = j + 1;
+                } else {
+                    i = j;
+                }
+            }
+            "fn" if i + 1 < n && toks[i + 1].kind == TokKind::Ident => {
+                let name = toks[i + 1].text.clone();
+                let j = skip_generics(toks, i + 2);
+                if j >= n || !toks[j].is(TokKind::Punct, "(") {
+                    i += 1;
+                    continue;
+                }
+                let close_paren = skip_to_matching(toks, j, "(", ")");
+                let (params, has_self) = parse_params(toks, j + 1, close_paren);
+                // Body: the next `{` before a `;` (trait decls have none).
+                let mut b = close_paren + 1;
+                let mut body = None;
+                while b < n {
+                    if toks[b].is(TokKind::Punct, ";") {
+                        break;
+                    }
+                    if toks[b].is(TokKind::Punct, "{") {
+                        body = Some((b, skip_to_matching(toks, b, "{", "}")));
+                        break;
+                    }
+                    b += 1;
+                }
+                let (is_trait, self_type) = match ctx.last() {
+                    Some((t, ty, _)) => (*t, ty.clone()),
+                    None => (false, None),
+                };
+                let next = body.map_or(b + 1, |(_, e)| e + 1);
+                fns.push(FnDef {
+                    file: file_idx,
+                    self_type,
+                    name,
+                    params,
+                    body,
+                    has_self,
+                    is_trait_decl: is_trait,
+                });
+                i = next;
+            }
+            _ => i += 1,
+        }
+    }
+    fns
+}
+
+/// Struct body fields: `name : Type ,` at struct-body depth 0.
+fn parse_fields(toks: &[Tok], start: usize, end: usize) -> BTreeMap<String, TypeInfo> {
+    let mut fields = BTreeMap::new();
+    let mut i = start;
+    let mut depth = 0i32;
+    while i < end {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "{" | "[" | "<" => {
+                    depth += 1;
+                    i += 1;
+                    continue;
+                }
+                ")" | "}" | "]" | ">" => {
+                    depth -= 1;
+                    i += 1;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        let colon_next = i + 1 < end
+            && toks[i + 1].is(TokKind::Punct, ":")
+            && !(i + 2 < end && toks[i + 2].is(TokKind::Punct, ":"));
+        if depth <= 0 && t.kind == TokKind::Ident && colon_next {
+            let name = t.text.clone();
+            let mut j = i + 2;
+            let mut d2 = 0i32;
+            let ty_start = j;
+            while j < end {
+                if toks[j].kind == TokKind::Punct {
+                    match toks[j].text.as_str() {
+                        "(" | "{" | "[" | "<" => d2 += 1,
+                        ")" | "}" | "]" | ">" => d2 -= 1,
+                        "," if d2 <= 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            fields.insert(name, peel_type(&toks[ty_start..j]));
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    fields
+}
+
+/// Param list between the fn's parens: comma-split at depth 0, each
+/// segment `name : Type` (or a `self` receiver form).
+fn parse_params(toks: &[Tok], start: usize, end: usize) -> (BTreeMap<String, TypeInfo>, bool) {
+    let mut params = BTreeMap::new();
+    let mut has_self = false;
+    let mut segs: Vec<(usize, usize)> = Vec::new();
+    let mut depth = 0i32;
+    let mut seg_start = start;
+    let mut i = start;
+    while i < end {
+        if toks[i].kind == TokKind::Punct {
+            match toks[i].text.as_str() {
+                "(" | "{" | "[" | "<" => depth += 1,
+                ")" | "}" | "]" | ">" => depth -= 1,
+                "," if depth == 0 => {
+                    segs.push((seg_start, i));
+                    seg_start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    if seg_start < end {
+        segs.push((seg_start, end));
+    }
+    for (s, e) in segs {
+        let seg = &toks[s..e];
+        let idents: Vec<&str> = seg
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .take(2)
+            .collect();
+        if idents.contains(&"self") {
+            has_self = true;
+            continue;
+        }
+        for (j, t) in seg.iter().enumerate() {
+            if t.kind == TokKind::Ident && j + 1 < seg.len() && seg[j + 1].is(TokKind::Punct, ":") {
+                params.insert(t.text.clone(), peel_type(&seg[j + 2..]));
+                break;
+            }
+        }
+    }
+    (params, has_self)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prog(src: &str) -> Program {
+        Program::build(&[("rust/src/platform/fixture.rs".to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn struct_fields_peel_wrappers_and_flag_locks() {
+        let p = prog(
+            "pub struct Pool {\n    idle: Mutex<BTreeMap<String, Vec<Container>>>,\n    engine: Arc<dyn Engine>,\n    shards: RwLock<BTreeMap<String, Arc<Mutex<FnMetrics>>>>,\n    clock: Arc<dyn Clock>,\n}\n",
+        );
+        let fields = &p.files[0].structs["Pool"];
+        assert!(fields["idle"].is_mutex);
+        assert!(!fields["idle"].is_rwlock);
+        assert!(fields["shards"].is_rwlock);
+        assert_eq!(fields["engine"].peeled.as_deref(), Some("Engine"));
+        assert_eq!(fields["clock"].peeled.as_deref(), Some("Clock"));
+    }
+
+    #[test]
+    fn impl_and_trait_methods_get_self_types() {
+        let p = prog(
+            "pub struct A;\nimpl A {\n    pub fn m(&self, x: u32) {}\n}\ntrait T {\n    fn d(&self) { }\n    fn decl(&self);\n}\nimpl T for A {\n    fn decl(&self) {}\n}\nfn free(n: usize) {}\n",
+        );
+        let names: Vec<(Option<&str>, &str, bool)> = p
+            .fns
+            .iter()
+            .map(|f| (f.self_type.as_deref(), f.name.as_str(), f.is_trait_decl))
+            .collect();
+        assert!(names.contains(&(Some("A"), "m", false)));
+        assert!(names.contains(&(Some("T"), "d", true)), "{names:?}");
+        assert!(names.contains(&(Some("A"), "decl", false)));
+        assert!(names.contains(&(None, "free", false)));
+        let decl = p.fns.iter().find(|f| f.name == "decl" && f.is_trait_decl).unwrap();
+        assert!(decl.body.is_none(), "bodyless trait declaration");
+        assert_eq!(p.trait_impls["T"], vec!["A".to_string()]);
+    }
+
+    #[test]
+    fn params_resolve_and_self_is_detected() {
+        let p = prog("fn f(rng: &Mutex<SplitMix64>, pool: &WarmPool) {}\n");
+        let f = &p.fns[0];
+        assert!(f.params["rng"].is_mutex);
+        assert_eq!(f.params["pool"].peeled.as_deref(), Some("WarmPool"));
+        assert!(!f.has_self);
+    }
+
+    #[test]
+    fn test_fns_are_excluded_from_the_index() {
+        let p = prog(
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n",
+        );
+        assert!(p.by_name.contains_key("live"));
+        assert!(!p.by_name.contains_key("helper"));
+    }
+
+    #[test]
+    fn field_type_resolves_across_files() {
+        let p = Program::build(&[
+            ("a.rs".to_string(), "pub struct X { pool: Arc<WarmPool> }\n".to_string()),
+            ("b.rs".to_string(), "pub struct WarmPool { n: u32 }\n".to_string()),
+        ]);
+        assert_eq!(p.field_type("X", "pool").as_deref(), Some("WarmPool"));
+        assert_eq!(p.field_type("X", "missing"), None);
+    }
+}

@@ -379,4 +379,56 @@ mod tests {
         let b = toks.iter().find(|t| t.is(TokKind::Ident, "b")).unwrap();
         assert_eq!(b.line, 3);
     }
+
+    /// Multi-hash raw strings: `r##"..."##` only terminates at a quote
+    /// followed by the *same* number of hashes, so `"#` inside is
+    /// content, not a terminator.
+    #[test]
+    fn multi_hash_raw_string_ignores_shorter_terminators() {
+        let src = r####"let s = r##"contains "# inside"##; fn after() {}"####;
+        let toks = tokenize(src);
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, r##"contains "# inside"##);
+        assert!(toks.iter().any(|t| t.is(TokKind::Ident, "after")), "resumed after terminator");
+        assert!(!toks.iter().any(|t| t.is(TokKind::Ident, "inside")));
+    }
+
+    #[test]
+    fn triple_hash_raw_string_swallows_double_hash_quote() {
+        let src = "let s = r###\"deep \"## still\"###; fn after() {}";
+        let toks = tokenize(src);
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, "deep \"## still");
+        assert!(toks.iter().any(|t| t.is(TokKind::Ident, "after")));
+    }
+
+    #[test]
+    fn raw_byte_strings_are_opaque() {
+        let src = r##"let b = br#"bytes "quoted" x"#; fn after() {}"##;
+        let toks = tokenize(src);
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, r#"bytes "quoted" x"#);
+        assert!(toks.iter().any(|t| t.is(TokKind::Ident, "after")));
+        assert!(!toks.iter().any(|t| t.is(TokKind::Ident, "quoted")));
+    }
+
+    /// A raw string spanning lines advances the line counter so tokens
+    /// after it report accurate positions.
+    #[test]
+    fn multi_line_raw_string_advances_line_counter() {
+        let src = "let s = r#\"one\ntwo\nthree\"#;\nfn after() {}\n";
+        let toks = tokenize(src);
+        let f = toks.iter().find(|t| t.is(TokKind::Ident, "fn")).unwrap();
+        assert_eq!(f.line, 4);
+    }
+
+    /// `r#foo` is a raw *identifier*, not a truncated raw string — the
+    /// scanner must not eat to end-of-file looking for a terminator.
+    #[test]
+    fn raw_identifier_is_not_a_raw_string() {
+        let src = "let r#type = 1; fn after() {}";
+        let toks = tokenize(src);
+        assert!(toks.iter().all(|t| t.kind != TokKind::Str));
+        assert!(toks.iter().any(|t| t.is(TokKind::Ident, "after")));
+    }
 }

@@ -227,7 +227,10 @@ impl Drop for AsyncInvoker {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
-        for handle in plock(&self.workers).drain(..) {
+        // Drain under the lock, join outside it: a worker mid-job must
+        // not find the handle list locked while we wait on a sibling.
+        let workers: Vec<_> = plock(&self.workers).drain(..).collect();
+        for handle in workers {
             let _ = handle.join();
         }
     }

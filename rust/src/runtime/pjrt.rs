@@ -112,7 +112,10 @@ impl Drop for PjrtEngine {
         for tx in &self.shards {
             let _ = tx.send(Cmd::Shutdown);
         }
-        for j in plock(&self.joins).drain(..) {
+        // Drain under the lock, join outside it — never hold the
+        // handle list's mutex across a shard's shutdown.
+        let joins: Vec<_> = plock(&self.joins).drain(..).collect();
+        for j in joins {
             let _ = j.join();
         }
     }
