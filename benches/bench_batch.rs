@@ -1,21 +1,31 @@
 //! Bench: micro-batching throughput vs batch size (§Perf).
 //!
-//! Two layers, both on the MockEngine (no artifacts needed):
+//! Three layers, all on the MockEngine (no artifacts needed):
 //!
 //! * the *modeled* economics — the mock's sublinear batch cost
 //!   (`1 + 0.25·(n-1)` of a solo pass) as requests-per-second-of-
-//!   compute, which is what a real batched kernel buys, and
+//!   compute, which is what a real batched kernel buys,
+//! * the *kernel-ladder* sweep — the same flush under increasing
+//!   `batch_kernel_max`, where a flush of n runs as k ladder chunks at
+//!   `1 + 0.25·(k-1) + 0.10·(n-k)` of a solo pass, so per-request cost
+//!   must fall strictly as larger compiled rungs engage, and
 //! * the *measured* platform overhead — wall ns/request through
 //!   `Engine::predict_batch` and the full `Container::execute_batch`
 //!   path (governor + accounting) with zero-cost models, i.e. what
 //!   the batching machinery itself costs per coalesced request.
+//!
+//! Emits `BENCH_batch.json` (machine-readable) next to the run so the
+//! perf trajectory is trackable across PRs.
 //!
 //! `cargo bench --bench bench_batch`
 
 use lambdaserve::configparse::BootstrapConfig;
 use lambdaserve::platform::registry::FunctionRegistry;
 use lambdaserve::platform::{Container, CpuGovernor};
-use lambdaserve::runtime::{Engine, MockEngine, MockModelCosts, BATCH_COST_MARGINAL};
+use lambdaserve::runtime::{
+    ladder_chunks, Engine, MockEngine, MockModelCosts, BATCH_COST_MARGINAL, KERNEL_COST_MARGINAL,
+};
+use lambdaserve::util::json::{obj, Json};
 use lambdaserve::util::{Clock, ManualClock, SplitMix64};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -56,6 +66,49 @@ fn main() {
     }
     println!();
 
+    // Kernel-ladder sweep: one flush of n = 8 under each ladder top.
+    // k ladder chunks cost `1 + 0.25·(k-1) + 0.10·(n-k)` of a solo
+    // pass (the mock's honest amortization model — pinned by
+    // ManualClock tests), so per-request cost falls strictly as larger
+    // compiled batch-N rungs engage. `batch_kernel_max = 1` is the
+    // pre-ladder pipeline exactly.
+    let flush_n = 8usize;
+    println!("--- batch-N kernel ladder: flush of n={flush_n} ---");
+    println!(
+        "{:>16} {:>8} {:>12} {:>16} {:>10}",
+        "batch_kernel_max", "kernels", "total (ms)", "per-req (ms)", "speedup"
+    );
+    let mut ladder_rows = Vec::new();
+    let mut baseline_per_req = 0.0f64;
+    for ladder in [1usize, 2, 4, 8] {
+        let chunks = ladder_chunks(flush_n, ladder);
+        let k = chunks.len() as f64;
+        let nf = flush_n as f64;
+        let total =
+            solo_s * (1.0 + BATCH_COST_MARGINAL * (k - 1.0) + KERNEL_COST_MARGINAL * (nf - k));
+        let per_req = total / nf;
+        if ladder == 1 {
+            baseline_per_req = per_req;
+        }
+        println!(
+            "{:>16} {:>8} {:>12.1} {:>16.2} {:>9.2}x",
+            ladder,
+            chunks.len(),
+            total * 1e3,
+            per_req * 1e3,
+            baseline_per_req / per_req
+        );
+        ladder_rows.push(obj(vec![
+            ("batch_kernel_max", Json::Num(ladder as f64)),
+            ("flush_n", Json::Num(flush_n as f64)),
+            ("kernel_launches", Json::Num(chunks.len() as f64)),
+            ("total_ms", Json::Num(total * 1e3)),
+            ("per_request_ms", Json::Num(per_req * 1e3)),
+            ("speedup_vs_ladder1", Json::Num(baseline_per_req / per_req)),
+        ]));
+    }
+    println!();
+
     // Measured machinery overhead: zero-cost model so everything left
     // is dispatch + accounting, per coalesced request.
     let engine = Arc::new(MockEngine::new(vec![MockModelCosts {
@@ -65,13 +118,31 @@ fn main() {
         manifest: MockModelCosts::paper_like("m", 1, 5.0, 85).manifest,
     }]));
     let (handle, _) = engine.create_instance("m", "pallas").unwrap();
+    let mut machinery_rows = Vec::new();
     for n in [1usize, 8, 32] {
         let seeds: Vec<u64> = (0..n as u64).collect();
-        bench(&format!("engine.predict_batch n={n} (per request)"), 100_000 / n, || {
+        let ns = bench(&format!("engine.predict_batch n={n} (per request)"), 100_000 / n, || {
             let preds = engine.predict_batch(&handle, &seeds).unwrap();
             std::hint::black_box(preds);
         });
+        machinery_rows.push(obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("predict_batch_ns_per_request", Json::Num(ns / n as f64)),
+        ]));
     }
+
+    // Same flush through the ladder path: the report must name the
+    // largest compiled rung, and the machinery cost stays flat.
+    engine.set_batch_kernel_max(4);
+    let seeds: Vec<u64> = (0..8u64).collect();
+    let (_, report) = engine.predict_batch_report(&handle, &seeds).unwrap();
+    println!("ladder flush n=8 under max=4: kernel_batch_n={}", report.kernel_batch_n);
+    assert_eq!(report.kernel_batch_n, 4);
+    bench("engine.predict_batch_report n=8 ladder=4", 100_000 / 8, || {
+        let out = engine.predict_batch_report(&handle, &seeds).unwrap();
+        std::hint::black_box(out);
+    });
+    engine.set_batch_kernel_max(1);
 
     let reg = FunctionRegistry::new(engine.clone());
     let spec = reg.deploy("m", "m", "pallas", 1536).unwrap();
@@ -88,5 +159,15 @@ fn main() {
             std::hint::black_box(out);
         });
     }
-    println!("\nserved by the bench container: {}", container.served);
+
+    let out = obj(vec![
+        ("bench", Json::Str("batch".to_string())),
+        ("model", Json::Str("squeezenet".to_string())),
+        ("solo_ms", Json::Num(solo_s * 1e3)),
+        ("ladder_sweep", Json::Arr(ladder_rows)),
+        ("machinery", Json::Arr(machinery_rows)),
+    ]);
+    std::fs::write("BENCH_batch.json", out.to_string()).expect("write BENCH_batch.json");
+    println!("\nwrote BENCH_batch.json");
+    println!("served by the bench container: {}", container.served);
 }

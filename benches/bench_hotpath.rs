@@ -5,16 +5,22 @@
 //! per-invoke platform overhead (routing + pool + governor + billing +
 //! metrics, everything except compute and simulated sleeps) has to sit
 //! in the microsecond range. This bench measures it, plus the
-//! substrate hot paths it is built on.
+//! substrate hot paths it is built on, plus the contended-acquire
+//! profile of the sharded warm pool (`platform.pool_shards`) against
+//! the single-lock baseline.
+//!
+//! Emits `BENCH_hotpath.json` (machine-readable) next to the run so
+//! the perf trajectory is trackable across PRs.
 //!
 //! `cargo bench --bench bench_hotpath`
 
 use lambdaserve::configparse::{BootstrapConfig, PlatformConfig};
-use lambdaserve::platform::Invoker;
+use lambdaserve::platform::registry::FunctionRegistry;
+use lambdaserve::platform::{Container, CpuGovernor, Invoker, WarmPool};
 use lambdaserve::runtime::{synthetic_image, MockEngine, MockModelCosts};
 use lambdaserve::stats::Histogram;
-use lambdaserve::util::json::Json;
-use lambdaserve::util::{ManualClock, SplitMix64};
+use lambdaserve::util::json::{obj, Json};
+use lambdaserve::util::{Clock, ManualClock, SplitMix64};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -30,6 +36,80 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     let per = t0.elapsed().as_nanos() as f64 / iters as f64;
     println!("{name:<44} {per:>12.0} ns/op   ({iters} iters)");
     per
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+/// N hot functions × M threads hammering `acquire`/`release` on one
+/// pool. Every cycle takes (and releases) a warm container, so with
+/// `shards = 1` all threads serialize on the single idle mutex and a
+/// release wakes the whole herd; with `shards > 1` each function's
+/// traffic stays on its own bucket. Returns `(p50, p99)` ns/cycle.
+fn contended_acquire(shards: usize, functions: usize, threads: usize, iters: usize) -> (u64, u64) {
+    let engine = Arc::new(MockEngine::paper_zoo());
+    let reg = FunctionRegistry::new(engine.clone());
+    let clock: Arc<dyn Clock> = ManualClock::new();
+    let pool = WarmPool::sharded(1000, 300.0, clock.clone(), shards);
+    let gov = CpuGovernor::new(1792, clock.clone());
+    let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+    let mut rng = SplitMix64::new(7);
+    let names: Vec<String> = (0..functions).map(|i| format!("f{i}")).collect();
+    for name in &names {
+        let spec = reg.deploy(name, "squeezenet", "pallas", 1536).unwrap();
+        // Two warm containers per function: a pair of threads on the
+        // same function contends on the shard lock, not on container
+        // availability.
+        for _ in 0..2 {
+            let c = Container::provision(
+                spec.clone(),
+                engine.clone(),
+                &gov,
+                &cfg,
+                &clock,
+                &mut rng,
+            )
+            .unwrap();
+            pool.release(c);
+        }
+    }
+    let mut samples: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let pool = &pool;
+                let name = names[t % functions].clone();
+                s.spawn(move || {
+                    // Per-thread warm-up outside the timed window.
+                    for _ in 0..1000 {
+                        if let Some(c) = pool.acquire(&name) {
+                            pool.release(c);
+                        }
+                    }
+                    let mut local = Vec::with_capacity(iters);
+                    for _ in 0..iters {
+                        let t0 = Instant::now();
+                        if let Some(c) = pool.acquire(&name) {
+                            pool.release(c);
+                        }
+                        local.push(t0.elapsed().as_nanos() as u64);
+                    }
+                    local
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(threads * iters);
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        all
+    });
+    samples.sort_unstable();
+    (percentile(&samples, 0.50), percentile(&samples, 0.99))
 }
 
 fn main() {
@@ -53,20 +133,42 @@ fn main() {
     platform.deploy("f", "m", "pallas", 1536).unwrap();
     platform.invoke("f", 0).unwrap(); // warm the container
     let mut seed = 0u64;
-    bench("invoke (warm, zero-cost model) = L3 overhead", 100_000, || {
+    let invoke_ns = bench("invoke (warm, zero-cost model) = L3 overhead", 100_000, || {
         seed += 1;
         platform.invoke("f", seed).unwrap();
     });
 
+    // Contended acquire: same workload (8 hot functions × 8 threads),
+    // single-lock pool vs the sharded one. The p99 gap is the price of
+    // the cross-function thundering herd.
+    println!("\n--- contended acquire: 8 functions x 8 threads ---");
+    let (functions, threads, iters) = (8usize, 8usize, 20_000usize);
+    let mut contended = Vec::new();
+    for shards in [1usize, 8] {
+        let (p50, p99) = contended_acquire(shards, functions, threads, iters);
+        println!(
+            "acquire/release cycle, pool_shards={shards:<2}          p50 {p50:>8} ns   p99 {p99:>8} ns"
+        );
+        contended.push(obj(vec![
+            ("pool_shards", Json::Num(shards as f64)),
+            ("functions", Json::Num(functions as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("iters_per_thread", Json::Num(iters as f64)),
+            ("p50_ns", Json::Num(p50 as f64)),
+            ("p99_ns", Json::Num(p99 as f64)),
+        ]));
+    }
+    println!();
+
     // Substrate hot paths.
     let mut h = Histogram::new();
     let mut rng = SplitMix64::new(1);
-    bench("histogram.record", 1_000_000, || {
+    let hist_ns = bench("histogram.record", 1_000_000, || {
         h.record(rng.gen_range(1, 10_000_000_000));
     });
 
     let mut rng2 = SplitMix64::new(2);
-    bench("splitmix64.next_u64", 1_000_000, || {
+    let rng_ns = bench("splitmix64.next_u64", 1_000_000, || {
         std::hint::black_box(rng2.next_u64());
     });
 
@@ -81,5 +183,14 @@ fn main() {
         });
     }
 
-    println!("\nmetrics snapshot: {} records collected", platform.metrics.len());
+    let out = obj(vec![
+        ("bench", Json::Str("hotpath".to_string())),
+        ("invoke_warm_ns", Json::Num(invoke_ns)),
+        ("histogram_record_ns", Json::Num(hist_ns)),
+        ("splitmix64_ns", Json::Num(rng_ns)),
+        ("contended_acquire", Json::Arr(contended)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", out.to_string()).expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json");
+    println!("metrics snapshot: {} records collected", platform.metrics.len());
 }

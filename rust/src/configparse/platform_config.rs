@@ -237,6 +237,21 @@ pub struct PlatformConfig {
     /// admission can coalesce. Per-function override: the
     /// deploy/reconfigure `batch_window_ms`.
     pub batch_window_ms: u64,
+    /// Warm-pool shard count: the idle map and waiter condvar are
+    /// split into this many function-hash buckets so one hot
+    /// function's release traffic doesn't contend with — or wake —
+    /// waiters of functions hashing elsewhere. `1` (the default) is
+    /// the single-lock pool, bit-for-bit. The container cap stays
+    /// global regardless of shard count.
+    pub pool_shards: usize,
+    /// Batch-N compiled kernels: largest batch size the engine
+    /// compiles a dedicated executable for, over a power-of-two
+    /// ladder (`4` means kernels for batch 1, 2, and 4). A flush
+    /// picks the largest compiled N ≤ the batch size and folds the
+    /// remainder through smaller kernels. `1` (the default) keeps
+    /// batched passes on per-member batch-1 kernels — the
+    /// pre-ladder pipeline, bit-for-bit. Must be a power of two.
+    pub batch_kernel_max: usize,
     /// Background pool-maintainer tick interval, seconds: each tick
     /// runs the keep-alive eviction sweep and replenishes `min_warm`
     /// targets. `0` disables the maintainer.
@@ -270,6 +285,8 @@ impl Default for PlatformConfig {
             queue_deadline_ms: 2_000,
             max_batch_size: 1,
             batch_window_ms: 0,
+            pool_shards: 1,
+            batch_kernel_max: 1,
             maintainer_interval_s: 5.0,
             metrics_ring_capacity: 4096,
             throttle_quantum_s: 0.02,
@@ -318,6 +335,12 @@ impl PlatformConfig {
         }
         if let Some(v) = get_u64("platform.batch_window_ms") {
             cfg.batch_window_ms = v;
+        }
+        if let Some(v) = get_u64("platform.pool_shards") {
+            cfg.pool_shards = v as usize;
+        }
+        if let Some(v) = get_u64("platform.batch_kernel_max") {
+            cfg.batch_kernel_max = v as usize;
         }
         if let Some(v) = get_f64("platform.maintainer_interval_s") {
             cfg.maintainer_interval_s = v;
@@ -443,6 +466,17 @@ impl PlatformConfig {
         if self.batch_window_ms > MAX_QUEUE_DEADLINE_MS {
             bail!("batch_window_ms must be at most {MAX_QUEUE_DEADLINE_MS} (one hour)");
         }
+        if self.pool_shards == 0 || self.pool_shards > 4096 {
+            bail!("pool_shards must be in [1, 4096] (1 is the single-lock pool)");
+        }
+        // The kernel ladder is powers of two up to this cap; a
+        // non-power value would silently waste the top kernel.
+        if self.batch_kernel_max == 0
+            || !self.batch_kernel_max.is_power_of_two()
+            || self.batch_kernel_max > 64
+        {
+            bail!("batch_kernel_max must be a power of two in [1, 64] (1 disables the ladder)");
+        }
         if !self.snapshot.restore_bw.is_finite() || self.snapshot.restore_bw <= 0.0 {
             bail!("snapshot.restore_bw must be a positive number of bytes/s");
         }
@@ -517,6 +551,8 @@ queue_capacity = 16
 queue_deadline_ms = 750
 max_batch_size = 8
 batch_window_ms = 15
+pool_shards = 16
+batch_kernel_max = 4
 seed = 7
 
 [bootstrap]
@@ -536,6 +572,8 @@ rtt_s = 0.01
         assert_eq!(cfg.queue_deadline_ms, 750);
         assert_eq!(cfg.max_batch_size, 8);
         assert_eq!(cfg.batch_window_ms, 15);
+        assert_eq!(cfg.pool_shards, 16);
+        assert_eq!(cfg.batch_kernel_max, 4);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.bootstrap.runtime_init_s, 0.5);
         assert!(!cfg.bootstrap.simulate_delays);
@@ -594,6 +632,11 @@ dollars_per_unit = [1.0, 2.0]
         assert!(PlatformConfig::from_toml("[platform]\nqueue_deadline_ms = 7200000").is_err());
         assert!(PlatformConfig::from_toml("[platform]\nmax_batch_size = 0").is_err());
         assert!(PlatformConfig::from_toml("[platform]\nbatch_window_ms = 7200000").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\npool_shards = 0").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\npool_shards = 5000").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\nbatch_kernel_max = 0").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\nbatch_kernel_max = 3").is_err());
+        assert!(PlatformConfig::from_toml("[platform]\nbatch_kernel_max = 128").is_err());
         assert!(PlatformConfig::from_toml("[pricing]\ngranularity_ms = 0").is_err());
         assert!(PlatformConfig::from_toml(
             "[pricing]\nmemory_mb = [256, 128]\ndollars_per_unit = [1.0, 2.0]"

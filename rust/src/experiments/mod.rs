@@ -59,11 +59,19 @@ impl ExpCtx {
     }
 
     pub fn build_engine(&self) -> Result<Arc<dyn Engine>> {
+        // Seed the batch-kernel ladder before type erasure — the knob
+        // lives on the concrete engines, not the `Engine` trait.
         match self.engine_kind {
-            EngineKind::Mock => Ok(Arc::new(MockEngine::paper_zoo())),
+            EngineKind::Mock => {
+                let engine = MockEngine::paper_zoo();
+                engine.set_batch_kernel_max(self.config.batch_kernel_max);
+                Ok(Arc::new(engine))
+            }
             EngineKind::Pjrt => {
                 let dir = std::path::Path::new(&self.config.artifacts_dir);
-                Ok(Arc::new(PjrtEngine::new(dir, self.engine_shards)?))
+                let engine = PjrtEngine::new(dir, self.engine_shards)?;
+                engine.set_batch_kernel_max(self.config.batch_kernel_max);
+                Ok(Arc::new(engine))
             }
         }
     }

@@ -21,6 +21,7 @@ pub(crate) fn invocation_json(record: &InvocationRecord, prediction: &Prediction
         ("queue_s", Json::Num(record.queue.as_secs_f64())),
         ("batch_size", Json::Num(record.batch_size as f64)),
         ("batch_wait_s", Json::Num(record.batch_wait.as_secs_f64())),
+        ("kernel_batch_n", Json::Num(record.kernel_batch_n as f64)),
         ("predict_s", Json::Num(record.predict.as_secs_f64())),
         ("cold_overhead_s", Json::Num(record.cold_overhead().as_secs_f64())),
         ("response_s", Json::Num(record.response().as_secs_f64())),

@@ -55,6 +55,15 @@ fn shard_fields(m: &FnMetrics) -> Vec<(&'static str, Json)> {
         ("batch_wait_p50_s", secs(m.batch_wait.p50())),
         ("batch_wait_p95_s", secs(m.batch_wait.p95())),
         ("batch_wait_p99_s", secs(m.batch_wait.p99())),
+        // Batch-N kernel ladder: which compiled rung the average
+        // batched request rode (request-weighted, like batch_size) and
+        // how the engine's kernel cache fared across flushes (deltas
+        // counted once per pass — the leader's record owns them).
+        ("kernel_batch_n_p50", Json::Num(m.kernel_batch_n.p50() as f64)),
+        ("kernel_batch_n_p99", Json::Num(m.kernel_batch_n.p99() as f64)),
+        ("kernel_batch_n_max", Json::Num(m.kernel_batch_n.max() as f64)),
+        ("batch_kernel_hits", Json::Num(m.batch_kernel_hits as f64)),
+        ("batch_kernel_misses", Json::Num(m.batch_kernel_misses as f64)),
         ("response_mean_s", Json::Num(response.mean() / NS)),
         ("response_p50_s", secs(response.p50())),
         ("response_p95_s", secs(response.p95())),
@@ -152,6 +161,9 @@ pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Res
         ("prewarm_provisions", Json::Num(p.scaler.prewarm_provision_count() as f64)),
         ("functions", Json::Num(p.registry.list().len() as f64)),
         ("containers_alive", Json::Num(p.pool.total_alive() as f64)),
+        // Warm-pool sharding in effect (the `platform.pool_shards`
+        // knob): 1 = the single-lock pool.
+        ("pool_shards", Json::Num(p.pool.shard_count() as f64)),
         ("in_flight", Json::Num(p.scaler.in_flight() as f64)),
         ("peak_concurrency", Json::Num(p.scaler.high_water_mark() as f64)),
         ("total_cost_dollars", Json::Num(p.billing.total_dollars())),

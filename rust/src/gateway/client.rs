@@ -175,6 +175,9 @@ pub struct InvocationResult {
     pub batch_size: u64,
     /// Time parked in the batch collector before the pass started.
     pub batch_wait_s: f64,
+    /// Largest compiled kernel rung the serving pass ran (1 = the
+    /// batch-1 executable; see `platform.batch_kernel_max`).
+    pub kernel_batch_n: u64,
 }
 
 impl InvocationResult {
@@ -744,5 +747,6 @@ fn parse_invocation(json: &Json) -> InvocationResult {
         cost_dollars: num_field(json, "cost_dollars"),
         batch_size: json.get("batch_size").and_then(Json::as_u64).unwrap_or(1),
         batch_wait_s: num_field(json, "batch_wait_s"),
+        kernel_batch_n: json.get("kernel_batch_n").and_then(Json::as_u64).unwrap_or(1),
     }
 }

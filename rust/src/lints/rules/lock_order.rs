@@ -5,12 +5,14 @@
 //! [`PLATFORM_LOCK_ORDER`] replaces the old per-file `MANIFEST`: a
 //! single declared rank order for all platform/runtime locks. Rank is
 //! table position; a lock may be held while acquiring a *later*
-//! (higher-rank) one, never the reverse. The two sanctioned nestings
-//! today are the batcher (`open` held while probing a batch's `inner`)
-//! and the async invoker (`queue` held while seeding `results`); both
-//! run outermost-first under the declared order. Everything else is
-//! single-lock by design, and this rule keeps it that way across
-//! refactors that smear a deadlock over two individually-clean files.
+//! (higher-rank) one, never the reverse. The sanctioned nestings
+//! today are the batcher (`open` held while probing a batch's
+//! `inner`) and the async invoker (`queue` held while seeding
+//! `results`, and held across the registry read that sizes a
+//! pre-formed drain); all run outermost-first under the declared
+//! order. Everything else is single-lock by design, and this rule
+//! keeps it that way across refactors that smear a deadlock over two
+//! individually-clean files.
 //!
 //! Four findings, all from the [`Summaries`] event stream:
 //!
@@ -68,6 +70,15 @@ pub const PLATFORM_LOCK_ORDER: &[LockDecl] = &[
     decl("async_invoke.results", &[("platform/async_invoke.rs", "results")], false),
     decl("async_invoke.workers", &[("platform/async_invoke.rs", "workers")], false),
     decl("maintainer.stop", &[("platform/maintainer.rs", "stop")], false),
+    // `idle`/`waiters` live on `PoolShard` (one instance per hash
+    // bucket). A rank covers every shard instance of the field, which
+    // is strictly stronger than per-instance ordering: pool code may
+    // hold at most ONE shard's `idle` (sweeps iterate shards
+    // sequentially, dropping each guard before the next), so holding
+    // rank 9 while taking rank 9 on a sibling shard would correctly
+    // flag as re-entry. `idle` before `waiters` because release paths
+    // update a shard's map, drop the guard, then bump+signal that
+    // shard's generation.
     decl("pool.idle", &[("platform/pool.rs", "idle")], false),
     decl("pool.waiters", &[("platform/pool.rs", "waiters")], false),
     decl("registry.functions", &[("platform/registry.rs", "functions")], true),
@@ -82,6 +93,11 @@ pub const PLATFORM_LOCK_ORDER: &[LockDecl] = &[
         false,
     ),
     decl("mock.compiled", &[("runtime/mock.rs", "compiled")], false),
+    // Batch-N kernel ladder cache. Ranked between the model cache and
+    // the instance map: a batched flush reads `instances` (liveness)
+    // after updating the ladder, and nothing holds `compiled_batch`
+    // while touching `compiled`.
+    decl("mock.compiled_batch", &[("runtime/mock.rs", "compiled_batch")], false),
     decl("mock.instances", &[("runtime/mock.rs", "instances")], false),
     decl("pjrt.joins", &[("runtime/pjrt.rs", "joins")], false),
 ];

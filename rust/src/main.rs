@@ -47,9 +47,19 @@ fn load_config(args: &lambdaserve::cliparse::Args) -> Result<PlatformConfig> {
 }
 
 fn build_engine(kind: &str, config: &PlatformConfig, shards: usize) -> Result<Arc<dyn Engine>> {
+    // The ladder top lives on the concrete engine types, so it must be
+    // set before the Arc<dyn Engine> erasure.
     match kind {
-        "pjrt" => Ok(Arc::new(PjrtEngine::new(Path::new(&config.artifacts_dir), shards)?)),
-        "mock" => Ok(Arc::new(MockEngine::paper_zoo())),
+        "pjrt" => {
+            let engine = PjrtEngine::new(Path::new(&config.artifacts_dir), shards)?;
+            engine.set_batch_kernel_max(config.batch_kernel_max);
+            Ok(Arc::new(engine))
+        }
+        "mock" => {
+            let engine = MockEngine::paper_zoo();
+            engine.set_batch_kernel_max(config.batch_kernel_max);
+            Ok(Arc::new(engine))
+        }
         other => bail!("unknown engine {other:?} (pjrt|mock)"),
     }
 }
@@ -110,6 +120,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "micro-batching: default window a batch leader collects followers, milliseconds",
             None,
         )
+        .flag(
+            "batch-kernel-max",
+            "top rung of the batch-N kernel ladder, power of two (1 = batch-1 executables only)",
+            None,
+        )
+        .flag(
+            "pool-shards",
+            "warm-pool lock shards, functions hash-partitioned across them (1 = single lock)",
+            None,
+        )
         .bool_flag(
             "snapshot",
             "enable snapshot/restore cold-start mitigation platform-wide (overrides config)",
@@ -140,6 +160,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     if let Some(v) = args.get_u64("batch-window-ms")? {
         config.batch_window_ms = v;
+    }
+    if let Some(v) = args.get_u64("batch-kernel-max")? {
+        config.batch_kernel_max = v as usize;
+    }
+    if let Some(v) = args.get_u64("pool-shards")? {
+        config.pool_shards = v as usize;
     }
     if args.get_bool("snapshot") && args.get_bool("no-snapshot") {
         bail!("--snapshot and --no-snapshot are mutually exclusive");

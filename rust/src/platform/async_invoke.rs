@@ -22,7 +22,7 @@
 //! queued jobs (fire-and-forget semantics) but joins workers
 //! mid-invocation.
 
-use super::invoker::{InvokeError, Platform, SaturationKind};
+use super::invoker::{InvokeError, InvokeOutcome, Platform, SaturationKind};
 use super::metrics::InvocationRecord;
 use crate::runtime::Prediction;
 use crate::util::clock::Nanos;
@@ -238,9 +238,9 @@ impl Drop for AsyncInvoker {
 
 fn worker_loop(shared: &Arc<Shared>) {
     loop {
-        let job = {
+        let mut batch = {
             let mut queue = plock(&shared.queue);
-            loop {
+            let job = loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
@@ -251,61 +251,94 @@ fn worker_loop(shared: &Arc<Shared>) {
                 // work are re-checked every slice, so a notify racing
                 // a worker crash can only delay a job by one slice.
                 queue = pwait_timeout(&shared.cv, queue, WORKER_PARK_SLICE).0;
+            };
+            let mut batch = vec![job];
+            // Pre-formed batching: while still under the queue lock,
+            // drain CONSECUTIVE same-function jobs (up to the
+            // function's effective max batch size) into one run —
+            // these members are already here, so the whole run becomes
+            // ONE batched pass via `invoke_preformed` with no
+            // collection window to wait out. Batching off (the
+            // default) leaves the one-job-per-dequeue path untouched.
+            if let Ok(spec) = shared.platform.registry.get(&batch[0].function) {
+                let cap = shared.platform.batcher.effective_max_batch(&spec);
+                while batch.len() < cap
+                    && queue.front().is_some_and(|next| next.function == batch[0].function)
+                {
+                    batch.push(queue.pop_front().expect("front checked"));
+                }
             }
+            batch
         };
-        if let Some(entry) = plock(&shared.results).get_mut(&job.id) {
-            entry.status = AsyncStatus::Running;
+        for job in &batch {
+            if let Some(entry) = plock(&shared.results).get_mut(&job.id) {
+                entry.status = AsyncStatus::Running;
+            }
         }
-        // The invoke itself rides the shared admission path: a
+        // The invoke rides the shared admission path either way: a
         // capacity miss parks in the dispatcher's bounded per-function
         // queue until a container frees or the deadline passes.
-        let outcome = shared.platform.invoke(&job.function, job.seed);
-        // Transient shortage: the caller already got a 202, so an
-        // attempt that came back throttled (per-function cap) or
-        // saturated (deadline exhausted / queue full) is retried
-        // rather than failed — until the attempt budget runs out.
-        let transient = matches!(
-            outcome,
-            Err(InvokeError::Throttled) | Err(InvokeError::Saturated(_))
-        );
-        if transient && job.attempts + 1 < MAX_ADMISSION_ATTEMPTS {
-            if let Some(entry) = plock(&shared.results).get_mut(&job.id) {
-                entry.status = AsyncStatus::Queued;
-            }
-            // Park on the pool's capacity condvar — the same
-            // waitable primitive the dispatcher uses — until anything
-            // frees (a released container, a finished in-flight
-            // request) or one dispatch deadline passes, UNLESS the
-            // attempt already waited a nonzero dispatch deadline
-            // inside invoke. Throttled (cap precedes admission) and
-            // queue-full refusals return instantly, and so does a
-            // DeadlineExpired under try-once (deadline 0) semantics —
-            // without the park any of them would burn the whole
-            // attempt budget in a hot spin.
-            let effective_deadline = match shared.platform.registry.get(&job.function) {
-                Ok(spec) => shared.platform.dispatcher.effective_deadline(&spec),
-                Err(_) => shared.platform.dispatcher.default_deadline(),
-            };
-            let waited_inside = matches!(
+        let settled: Vec<(Job, Result<InvokeOutcome, InvokeError>)> = if batch.len() >= 2 {
+            let function = batch[0].function.clone();
+            let seeds: Vec<u64> = batch.iter().map(|j| j.seed).collect();
+            let outcomes = shared.platform.invoke_preformed(&function, &seeds);
+            batch.into_iter().zip(outcomes).collect()
+        } else {
+            let job = batch.pop().expect("dequeued one job");
+            let outcome = shared.platform.invoke(&job.function, job.seed);
+            vec![(job, outcome)]
+        };
+        let mut parked_this_round = false;
+        for (job, outcome) in settled {
+            // Transient shortage: the caller already got a 202, so an
+            // attempt that came back throttled (per-function cap) or
+            // saturated (deadline exhausted / queue full) is retried
+            // rather than failed — until the attempt budget runs out.
+            let transient = matches!(
                 outcome,
-                Err(InvokeError::Saturated(SaturationKind::DeadlineExpired))
-            ) && !effective_deadline.is_zero();
-            if !waited_inside {
-                // Floor the park so a zero-deadline config cannot
-                // turn contention into a hot requeue spin.
-                let park = effective_deadline.max(Duration::from_millis(10));
-                let deadline = shared.platform.clock().now() + park.as_nanos() as u64;
-                shared.platform.pool.wait_for_change(deadline);
+                Err(InvokeError::Throttled) | Err(InvokeError::Saturated(_))
+            );
+            if transient && job.attempts + 1 < MAX_ADMISSION_ATTEMPTS {
+                if let Some(entry) = plock(&shared.results).get_mut(&job.id) {
+                    entry.status = AsyncStatus::Queued;
+                }
+                // Park on the function's pool-shard condvar — the same
+                // waitable primitive the dispatcher uses — until
+                // something of THIS function's frees (a released
+                // container, a finished in-flight request) or one
+                // dispatch deadline passes, UNLESS the attempt already
+                // waited a nonzero dispatch deadline inside invoke.
+                // Throttled (cap precedes admission) and queue-full
+                // refusals return instantly, and so does a
+                // DeadlineExpired under try-once (deadline 0)
+                // semantics — without the park any of them would burn
+                // the whole attempt budget in a hot spin. One park per
+                // settled batch: the wakeup that ends it speaks for
+                // every transient member of the same run.
+                let effective_deadline = match shared.platform.registry.get(&job.function) {
+                    Ok(spec) => shared.platform.dispatcher.effective_deadline(&spec),
+                    Err(_) => shared.platform.dispatcher.default_deadline(),
+                };
+                let waited_inside = matches!(
+                    outcome,
+                    Err(InvokeError::Saturated(SaturationKind::DeadlineExpired))
+                ) && !effective_deadline.is_zero();
+                if !waited_inside && !parked_this_round {
+                    parked_this_round = true;
+                    // Floor the park so a zero-deadline config cannot
+                    // turn contention into a hot requeue spin.
+                    let park = effective_deadline.max(Duration::from_millis(10));
+                    let deadline = shared.platform.clock().now() + park.as_nanos() as u64;
+                    shared.platform.pool.wait_for_change(&job.function, deadline);
+                }
+                {
+                    let mut queue = plock(&shared.queue);
+                    queue.push_back(Job { attempts: job.attempts + 1, ..job });
+                }
+                shared.cv.notify_one();
+                continue;
             }
-            {
-                let mut queue = plock(&shared.queue);
-                queue.push_back(Job { attempts: job.attempts + 1, ..job });
-            }
-            shared.cv.notify_one();
-            continue;
-        }
-        let now = shared.platform.clock().now();
-        {
+            let now = shared.platform.clock().now();
             let mut results = plock(&shared.results);
             if let Some(entry) = results.get_mut(&job.id) {
                 entry.finished_at = Some(now);

@@ -65,6 +65,12 @@ pub struct BatchShare {
     /// Time this member spent parked in the collector before the
     /// batched pass started (the leader's is its window wait).
     pub batch_wait: Duration,
+    /// Largest compiled batch-N kernel that served the flush (1 =
+    /// batch-1 executables only), from the engine's
+    /// [`crate::runtime::KernelReport`] — every member records it so
+    /// the per-function `kernel_batch_n` histogram is request-weighted
+    /// like `batch_size`.
+    pub kernel_batch_n: usize,
 }
 
 #[derive(PartialEq)]
@@ -363,9 +369,15 @@ impl BatchLeader<'_> {
     }
 
     /// Distribute the executed batch: per-member predictions (seed
-    /// order) plus the effective duration of the whole pass. Returns
-    /// the LEADER's own share; followers wake with theirs.
-    pub fn complete(mut self, predictions: Vec<Prediction>, effective: Duration) -> BatchShare {
+    /// order), the effective duration of the whole pass, and the
+    /// largest compiled batch-N kernel that served it. Returns the
+    /// LEADER's own share; followers wake with theirs.
+    pub fn complete(
+        mut self,
+        predictions: Vec<Prediction>,
+        effective: Duration,
+        kernel_batch_n: usize,
+    ) -> BatchShare {
         let mut g = plock(&self.state.inner);
         assert_eq!(predictions.len(), g.seeds.len(), "one prediction per member");
         let n = g.seeds.len();
@@ -382,6 +394,7 @@ impl BatchLeader<'_> {
                     effective,
                     billed_share,
                     batch_wait: Duration::from_nanos(exec_started_at.saturating_sub(joined)),
+                    kernel_batch_n: kernel_batch_n.max(1),
                 })
             })
             .collect();
@@ -539,7 +552,7 @@ mod tests {
         let seeds = leader.close();
         assert_eq!(seeds, vec![7]);
         assert!(!b.has_open(&s, u64::MAX), "flushed batch no longer joinable");
-        let share = leader.complete(vec![pred(3, 100)], Duration::from_millis(100));
+        let share = leader.complete(vec![pred(3, 100)], Duration::from_millis(100), 1);
         assert_eq!(share.batch_size, 1);
         assert_eq!(share.billed_share, Duration::from_millis(100));
         assert!(share.batch_wait >= Duration::from_millis(50), "leader waited the window");
@@ -566,7 +579,7 @@ mod tests {
         assert_eq!(seeds, vec![1, 2]);
         let follower = std::thread::spawn(move || member.wait().unwrap());
         let effective = Duration::from_millis(120);
-        let mine = leader.complete(vec![pred(10, 60), pred(20, 60)], effective);
+        let mine = leader.complete(vec![pred(10, 60), pred(20, 60)], effective, 2);
         let theirs = follower.join().unwrap();
         assert_eq!(mine.prediction.top1, 10);
         assert_eq!(theirs.prediction.top1, 20);
@@ -630,7 +643,7 @@ mod tests {
         );
         assert!(wall0.elapsed() < Duration::from_secs(5));
         let seeds = leader.close();
-        leader.complete(vec![pred(1, 10)], Duration::from_millis(10));
+        leader.complete(vec![pred(1, 10)], Duration::from_millis(10), 1);
         assert_eq!(seeds, vec![1]);
     }
 
@@ -717,7 +730,7 @@ mod tests {
         // leader opens and completes a batch normally.
         assert!(!b.has_open(&s, u64::MAX));
         let next = b.lead(&s, 9).expect("slot reusable after the crash");
-        next.complete(vec![pred(1, 10)], Duration::from_millis(10));
+        next.complete(vec![pred(1, 10)], Duration::from_millis(10), 1);
         assert_eq!(b.batches_executed(), 1);
     }
 
@@ -734,8 +747,8 @@ mod tests {
         first.close();
         let second = b.lead(&s, 3);
         assert!(second.is_some(), "next leader can collect while the first executes");
-        second.unwrap().complete(vec![pred(1, 10)], Duration::from_millis(10));
-        first.complete(vec![pred(0, 10)], Duration::from_millis(10));
+        second.unwrap().complete(vec![pred(1, 10)], Duration::from_millis(10), 1);
+        first.complete(vec![pred(0, 10)], Duration::from_millis(10), 1);
         assert_eq!(b.batches_executed(), 2);
     }
 }

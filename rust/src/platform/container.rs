@@ -11,7 +11,7 @@ use super::metrics::StartKind;
 use super::registry::FunctionSpec;
 use super::throttle::CpuGovernor;
 use crate::configparse::BootstrapConfig;
-use crate::runtime::{Engine, InstanceHandle, Prediction, SnapshotBlob};
+use crate::runtime::{Engine, InstanceHandle, KernelReport, Prediction, SnapshotBlob};
 use crate::util::{Clock, SplitMix64};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -252,28 +252,30 @@ impl Container {
 
     /// Execute one *batched* forward pass for `seeds.len()` coalesced
     /// requests under the CPU governor. Returns one raw prediction per
-    /// seed (in order) plus the effective (throttled) duration of the
+    /// seed (in order), the effective (throttled) duration of the
     /// whole batched pass — the caller splits billing across members
     /// (each is charged `effective / n`; everyone waits the full
-    /// pass). Counts every member in `served`: the batch is one
-    /// forward pass but `n` requests of container work.
+    /// pass) — and the engine's [`KernelReport`] saying which compiled
+    /// batch-N kernels served the flush. Counts every member in
+    /// `served`: the batch is one forward pass but `n` requests of
+    /// container work.
     pub fn execute_batch(
         &mut self,
         governor: &CpuGovernor,
         clock: &Arc<dyn Clock>,
         seeds: &[u64],
-    ) -> Result<(Vec<Prediction>, Duration)> {
+    ) -> Result<(Vec<Prediction>, Duration, KernelReport)> {
         assert_eq!(self.state, ContainerState::Busy, "execute_batch on non-busy container");
         assert!(!seeds.is_empty(), "empty batch");
         // lint:allow(wall-clock: measuring REAL engine wall time for CpuGovernor::throttle, which ignores it on virtual clocks)
         let t0 = Instant::now();
-        let preds = self.engine.predict_batch(&self.handle, seeds)?;
+        let (preds, kernels) = self.engine.predict_batch_report(&self.handle, seeds)?;
         let real = t0.elapsed();
         let full_speed: Duration = preds.iter().map(|p| p.compute).sum();
         let effective = governor.throttle(full_speed, real, self.spec.memory_mb);
         self.served += seeds.len() as u64;
         self.last_used = clock.now();
-        Ok((preds, effective))
+        Ok((preds, effective, kernels))
     }
 
     /// Move Busy -> Warm (returned to the pool).
@@ -433,8 +435,9 @@ mod tests {
             Container::provision(spec, engine.clone(), &gov, &cfg, &clock, &mut rng).unwrap();
         let before = engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst);
         let t0 = clock.now();
-        let (preds, effective) = c.execute_batch(&gov, &clock, &[1, 2, 3, 4]).unwrap();
+        let (preds, effective, kernels) = c.execute_batch(&gov, &clock, &[1, 2, 3, 4]).unwrap();
         assert_eq!(preds.len(), 4);
+        assert_eq!(kernels.kernel_batch_n, 1, "mock ladder disabled by default");
         assert_eq!(
             engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst),
             before + 1,

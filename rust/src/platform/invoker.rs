@@ -177,7 +177,11 @@ impl Drop for FnFlightGuard<'_> {
                 }
             }
         }
-        self.pool.notify_waiters();
+        // Targeted wake: only this function's parked waiters care that
+        // one of ITS concurrency slots freed — a broadcast would stampede
+        // every shard's waiters to re-probe a cap that never applied to
+        // them (the thundering herd the sharded pool exists to avoid).
+        self.pool.notify_function(&self.name);
     }
 }
 
@@ -188,7 +192,12 @@ impl Invoker {
     pub fn new(config: PlatformConfig, engine: Arc<dyn Engine>, clock: Arc<dyn Clock>) -> Self {
         Self {
             registry: FunctionRegistry::new(engine.clone()),
-            pool: WarmPool::new(config.max_containers, config.keep_alive_s, clock.clone()),
+            pool: WarmPool::sharded(
+                config.max_containers,
+                config.keep_alive_s,
+                clock.clone(),
+                config.pool_shards,
+            ),
             dispatcher: Dispatcher::new(config.queue_capacity, config.queue_deadline_ms),
             batcher: Batcher::new(config.max_batch_size, config.batch_window_ms, clock.clone()),
             scaler: Scaler::new(),
@@ -609,6 +618,9 @@ impl Invoker {
             predict_full_speed: prediction.compute,
             batch_size: 1,
             batch_wait: Duration::ZERO,
+            kernel_batch_n: 1,
+            batch_kernel_hits: 0,
+            batch_kernel_misses: 0,
             billed,
             billed_ms: line.billed_ms,
             cost_dollars: line.total_dollars(),
@@ -659,7 +671,10 @@ impl Invoker {
         queue_wait: Duration,
         mut leader: super::batcher::BatchLeader<'_>,
     ) -> Result<InvokeOutcome, InvokeError> {
-        self.pool.notify_waiters();
+        // Targeted wake: the batch this leader just opened is joinable
+        // by THIS function's parked requests only, so only its shard's
+        // waiters need to re-probe for the join door.
+        self.pool.notify_function(function);
         // Flush early when requests are parked for capacity and have
         // not boarded the batch: anyone who can join does so within a
         // probe slice of the notify above (dropping its queue ticket);
@@ -668,7 +683,7 @@ impl Invoker {
         leader.wait_window(|| self.dispatcher.queue_depth(function) > 0);
         let seeds = leader.close();
         let executed = container.execute_batch(&self.governor, &self.clock, &seeds);
-        let (predictions, effective) = match executed {
+        let (predictions, effective, kernels) = match executed {
             Ok(v) => v,
             Err(e) => {
                 // Fail the whole batch: followers surface the error,
@@ -679,7 +694,7 @@ impl Invoker {
                 return Err(InvokeError::Failed(e));
             }
         };
-        let share = leader.complete(predictions, effective);
+        let share = leader.complete(predictions, effective, kernels.kernel_batch_n);
 
         // Same cold accounting as the solo path: the leader (whose
         // container this is) alone pays the handler-side provision
@@ -710,6 +725,12 @@ impl Invoker {
             predict_full_speed: share.prediction.compute,
             batch_size: share.batch_size,
             batch_wait: share.batch_wait,
+            kernel_batch_n: share.kernel_batch_n,
+            // One owner for the pass-level cache deltas: the leader ran
+            // the flush, so its record alone carries the hit/miss counts
+            // (followers would double-count them).
+            batch_kernel_hits: kernels.batch_kernel_hits,
+            batch_kernel_misses: kernels.batch_kernel_misses,
             billed,
             billed_ms: line.billed_ms,
             cost_dollars: line.total_dollars(),
@@ -754,6 +775,9 @@ impl Invoker {
             predict_full_speed: share.prediction.compute,
             batch_size: share.batch_size,
             batch_wait: share.batch_wait,
+            kernel_batch_n: share.kernel_batch_n,
+            batch_kernel_hits: 0,
+            batch_kernel_misses: 0,
             billed: share.billed_share,
             billed_ms: line.billed_ms,
             cost_dollars: line.total_dollars(),
@@ -761,6 +785,213 @@ impl Invoker {
         };
         self.metrics.record(record.clone());
         Ok(InvokeOutcome { record, prediction: share.prediction })
+    }
+
+    /// Serve a pre-formed batch: the seeds arrive already grouped (an
+    /// async worker drained consecutive same-function jobs from its
+    /// queue), so the collection window is skipped entirely — one
+    /// admission wait, one container, ONE batched pass, one record and
+    /// one result per seed (in input order). The first admitted seed
+    /// plays the leader role from the interactive path: its record
+    /// carries the provision components and the pass's kernel-cache
+    /// deltas; every member is billed the even `effective / n` split
+    /// with `batch_wait = 0` (no window was held open).
+    ///
+    /// Admission is per seed for the concurrency cap — a pre-formed
+    /// batch must not dodge `max_concurrency`, so seeds over the cap
+    /// are refused with 429 while the rest proceed — and per batch for
+    /// capacity: one container (or cold provision) serves the whole
+    /// run, acquired through the same bounded queue wait as a solo
+    /// request.
+    pub fn invoke_preformed(
+        &self,
+        function: &str,
+        seeds: &[u64],
+    ) -> Vec<Result<InvokeOutcome, InvokeError>> {
+        let spec = match self.registry.get(function) {
+            Ok(spec) => spec,
+            Err(_) => {
+                return seeds
+                    .iter()
+                    .map(|_| Err(InvokeError::NotFound(function.to_string())))
+                    .collect();
+            }
+        };
+        let mut results: Vec<Option<Result<InvokeOutcome, InvokeError>>> =
+            seeds.iter().map(|_| None).collect();
+        let mut guards = Vec::new();
+        let mut admitted: Vec<(usize, u64)> = Vec::new();
+        for (i, &seed) in seeds.iter().enumerate() {
+            match FnFlightGuard::acquire(
+                &self.fn_in_flight,
+                &self.pool,
+                function,
+                spec.max_concurrency,
+            ) {
+                Some(g) => {
+                    guards.push(g);
+                    admitted.push((i, seed));
+                }
+                None => {
+                    self.scaler.note_throttled();
+                    self.metrics.note_throttled(function);
+                    results[i] = Some(Err(InvokeError::Throttled));
+                }
+            }
+        }
+        let resolve = |results: Vec<Option<Result<InvokeOutcome, InvokeError>>>| {
+            results.into_iter().map(|r| r.expect("every seed resolved")).collect()
+        };
+        if admitted.is_empty() {
+            return resolve(results);
+        }
+
+        // The same admission machinery as the solo path, minus the
+        // batch-join doors: this request group IS the batch already.
+        let t_queue_start = self.clock.now();
+        let outcome = match self.pool.acquire(function) {
+            Some(c) => AcquireOutcome::Container(c),
+            None => match self.dispatcher.admit(&spec) {
+                Some(ticket) => {
+                    let deadline = t_queue_start + ticket.deadline.as_nanos() as u64;
+                    let o = self.pool.acquire_or_reserve(function, deadline);
+                    drop(ticket);
+                    if matches!(o, AcquireOutcome::TimedOut) {
+                        self.dispatcher.note_expired();
+                        self.scaler.note_saturated();
+                        self.metrics.note_queue_expired(function);
+                        for &(i, _) in &admitted {
+                            results[i] = Some(Err(InvokeError::Saturated(
+                                SaturationKind::DeadlineExpired,
+                            )));
+                        }
+                        return resolve(results);
+                    }
+                    o
+                }
+                None => {
+                    // Queue at its bound, or queueing disabled — the
+                    // solo path's immediate-probe contract applies.
+                    let o = if self.dispatcher.effective_capacity(&spec) == 0 {
+                        self.pool.acquire_or_reserve(function, self.clock.now())
+                    } else {
+                        AcquireOutcome::TimedOut
+                    };
+                    if matches!(o, AcquireOutcome::TimedOut) {
+                        self.scaler.note_saturated();
+                        self.metrics.note_queue_expired(function);
+                        for &(i, _) in &admitted {
+                            results[i] =
+                                Some(Err(InvokeError::Saturated(SaturationKind::QueueFull)));
+                        }
+                        return resolve(results);
+                    }
+                    o
+                }
+            },
+        };
+        let queue_wait = Duration::from_nanos(self.clock.now() - t_queue_start);
+        let (mut container, start, _flight) = match outcome {
+            AcquireOutcome::Container(c) => (c, StartKind::Warm, self.scaler.arrive()),
+            AcquireOutcome::Reserved => {
+                let flight = self.scaler.arrive();
+                let provisioned = self.scaler.provision_demand(
+                    &spec,
+                    &self.pool,
+                    &self.engine,
+                    &self.governor,
+                    &self.config.bootstrap,
+                    &self.snapshots,
+                    &self.clock,
+                    &self.rng,
+                );
+                match provisioned {
+                    Ok(c) => {
+                        let start = c.start_kind_for_first_use();
+                        (c, start, flight)
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for &(i, _) in &admitted {
+                            results[i] = Some(Err(InvokeError::Failed(anyhow!("{msg}"))));
+                        }
+                        return resolve(results);
+                    }
+                }
+            }
+            AcquireOutcome::TimedOut | AcquireOutcome::Interrupted => {
+                unreachable!("refusals returned above; pre-formed waits take no interrupts")
+            }
+        };
+
+        let batch: Vec<u64> = admitted.iter().map(|&(_, s)| s).collect();
+        let executed = container.execute_batch(&self.governor, &self.clock, &batch);
+        let (predictions, effective, kernels) = match executed {
+            Ok(v) => v,
+            Err(e) => {
+                self.pool.retire(container);
+                let msg = format!("{e:#}");
+                for &(i, _) in &admitted {
+                    results[i] = Some(Err(InvokeError::Failed(anyhow!(
+                        "batched execution failed: {msg}"
+                    ))));
+                }
+                return resolve(results);
+            }
+        };
+        let n = batch.len();
+        let billed_share = effective / n as u32;
+        let pc = container.provision_cost.attributed_to(start);
+        let mut retire = false;
+        for (member, (&(slot, _seed), prediction)) in
+            admitted.iter().zip(predictions).enumerate()
+        {
+            let leader = member == 0;
+            let billed =
+                if leader { pc.handler_time() + billed_share } else { billed_share };
+            let line = match self.billing.charge(function, spec.memory_mb, billed) {
+                Ok(line) => line,
+                Err(e) => {
+                    if leader {
+                        // Unbillable leader: same as the solo path —
+                        // the container's capacity slot is returned.
+                        retire = true;
+                    }
+                    results[slot] = Some(Err(InvokeError::Failed(e)));
+                    continue;
+                }
+            };
+            let record = InvocationRecord {
+                function: function.to_string(),
+                memory_mb: spec.memory_mb,
+                start: if leader { start } else { StartKind::Warm },
+                queue: queue_wait,
+                sandbox: if leader { pc.sandbox } else { Duration::ZERO },
+                runtime_init: if leader { pc.runtime_init } else { Duration::ZERO },
+                package_fetch: if leader { pc.package_fetch } else { Duration::ZERO },
+                model_load: if leader { pc.model_load } else { Duration::ZERO },
+                restore: if leader { pc.restore } else { Duration::ZERO },
+                predict: effective,
+                predict_full_speed: prediction.compute,
+                batch_size: n,
+                batch_wait: Duration::ZERO,
+                kernel_batch_n: kernels.kernel_batch_n,
+                batch_kernel_hits: if leader { kernels.batch_kernel_hits } else { 0 },
+                batch_kernel_misses: if leader { kernels.batch_kernel_misses } else { 0 },
+                billed,
+                billed_ms: line.billed_ms,
+                cost_dollars: line.total_dollars(),
+                top1: prediction.top1,
+            };
+            self.metrics.record(record.clone());
+            results[slot] = Some(Ok(InvokeOutcome { record, prediction }));
+        }
+        if retire {
+            self.pool.retire(container);
+        } else {
+            self.release_or_retire(container, function);
+        }
+        resolve(results)
     }
 
     /// Force-evict every idle container (tests / forced cold).
@@ -1618,5 +1849,112 @@ mod tests {
         }
         assert_eq!(p.billing.lines().len(), 5);
         assert!((p.metrics.total_cost() - p.billing.total_dollars()).abs() < 1e-12);
+    }
+
+    /// `pool_shards > 1`: deployment prewarm and the maintainer's
+    /// `min_warm` top-up land containers on each function's own shard
+    /// while the capacity ledger stays global across shards.
+    #[test]
+    fn min_warm_top_up_spans_pool_shards() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig { pool_shards: 4, ..Default::default() };
+        let p = Invoker::new(cfg, engine, clock.clone());
+        assert_eq!(p.pool.shard_count(), 4);
+        for name in ["f0", "f1", "f2"] {
+            p.deploy_full(
+                name,
+                "squeezenet",
+                "pallas",
+                1024,
+                FunctionPolicy { min_warm: 2, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(p.pool.warm_count(name), 2, "{name} prewarmed on deploy");
+        }
+        assert_eq!(p.pool.total_alive(), 6, "global capacity count spans shards");
+        // Keep-alive expiry empties every shard; ONE maintenance tick
+        // replenishes every function back to its target.
+        clock.sleep(Duration::from_secs(601));
+        let report = p.maintain();
+        assert_eq!(report.evicted, 6);
+        assert_eq!(report.replenished, 6);
+        for name in ["f0", "f1", "f2"] {
+            assert_eq!(p.pool.warm_count(name), 2, "{name} topped back up");
+        }
+        // And invokes find their function's warm shard, whichever one
+        // the name hashes to.
+        for (i, name) in ["f0", "f1", "f2"].iter().enumerate() {
+            assert_eq!(p.invoke(name, i as u64).unwrap().record.start, StartKind::Warm);
+        }
+    }
+
+    /// Pre-formed batches (the async drain path): one admission, ONE
+    /// engine pass, per-member records with zero batch wait, and the
+    /// kernel ladder visible in the records — hit/miss deltas on the
+    /// leader's record only.
+    #[test]
+    fn preformed_batch_one_pass_with_kernel_report() {
+        let (p, _, engine) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 0).unwrap(); // warm one container
+        engine.set_batch_kernel_max(2);
+        let calls_before = engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst);
+        let outs = p.invoke_preformed("sq", &[1, 2, 3, 4]);
+        assert_eq!(
+            engine.predict_calls.load(std::sync::atomic::Ordering::SeqCst),
+            calls_before + 1,
+            "4 drained jobs, ONE forward pass"
+        );
+        let outs: Vec<InvokeOutcome> = outs.into_iter().map(|r| r.unwrap()).collect();
+        // Flush of 4 through the N<=2 ladder: chunks [2, 2] — the
+        // first compiles the rung (miss), the second reuses it (hit) —
+        // and only the leader's record owns those deltas.
+        assert_eq!(outs[0].record.kernel_batch_n, 2);
+        assert_eq!(outs[0].record.batch_kernel_misses, 1);
+        assert_eq!(outs[0].record.batch_kernel_hits, 1);
+        for out in &outs[1..] {
+            assert_eq!(out.record.start, StartKind::Warm);
+            assert_eq!(
+                out.record.batch_kernel_hits + out.record.batch_kernel_misses,
+                0,
+                "pass-level deltas have one owner"
+            );
+        }
+        for out in &outs {
+            assert_eq!(out.record.batch_size, 4);
+            assert_eq!(out.record.batch_wait, Duration::ZERO, "no collection window");
+            assert_eq!(out.record.kernel_batch_n, 2, "request-weighted like batch_size");
+            assert_eq!(out.record.billed, outs[0].record.billed, "even billed split");
+        }
+        // Per-member correctness: each seed classifies exactly as a
+        // solo run would (the mock is deterministic per seed).
+        let solo = MockEngine::paper_zoo();
+        let (h, _) = solo.create_instance("squeezenet", "pallas").unwrap();
+        for (out, seed) in outs.iter().zip([1u64, 2, 3, 4]) {
+            assert_eq!(out.prediction.top1, solo.predict(&h, seed).unwrap().top1, "seed {seed}");
+        }
+    }
+
+    /// A pre-formed batch takes one concurrency slot PER member — it
+    /// must not dodge `max_concurrency` by arriving pre-grouped. Seeds
+    /// over the cap are refused with 429; the rest ride one pass.
+    #[test]
+    fn preformed_batch_respects_concurrency_cap_per_seed() {
+        let (p, _, _) = platform();
+        p.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            1024,
+            FunctionPolicy { max_concurrency: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let outs = p.invoke_preformed("sq", &[1, 2, 3]);
+        assert!(matches!(outs[2], Err(InvokeError::Throttled)), "third seed over the cap");
+        assert_eq!(p.scaler.throttled_count(), 1);
+        for r in &outs[..2] {
+            assert_eq!(r.as_ref().unwrap().record.batch_size, 2, "admitted pair rode one pass");
+        }
     }
 }

@@ -84,6 +84,16 @@ pub struct InvocationRecord {
     /// started: the leader's window wait, a follower's join-to-flush
     /// wait. Zero off the batching path.
     pub batch_wait: Duration,
+    /// Largest compiled batch-N kernel that served the forward pass
+    /// (1 = batch-1 executables only, including the whole solo path).
+    pub kernel_batch_n: usize,
+    /// Batch-N (N >= 2) kernel-cache hits charged to this record. The
+    /// deltas of one batched pass have ONE owner — the leader that ran
+    /// the flush — so followers always carry zero here.
+    pub batch_kernel_hits: u64,
+    /// Batch-N kernel-cache misses charged to this record (leader
+    /// only, as above).
+    pub batch_kernel_misses: u64,
     /// Billed handler duration (prediction + cold init work).
     pub billed: Duration,
     pub billed_ms: u64,
@@ -178,6 +188,15 @@ pub struct FnMetrics {
     /// window wait, followers' join-to-flush wait) — the latency the
     /// batching path trades for throughput.
     pub batch_wait: Histogram,
+    /// Largest compiled batch-N kernel per request on the batching
+    /// path (request-weighted like `batch_size`: every member of a
+    /// flush records the rung that served it).
+    pub kernel_batch_n: Histogram,
+    /// Batch-N kernel-cache hits across all passes (leader-owned
+    /// deltas summed — each pass counted once).
+    pub batch_kernel_hits: u64,
+    /// Batch-N kernel-cache misses across all passes.
+    pub batch_kernel_misses: u64,
 }
 
 impl FnMetrics {
@@ -214,7 +233,12 @@ impl FnMetrics {
             }
             self.batch_size.record(r.batch_size as u64);
             self.batch_wait.record(r.batch_wait.as_nanos() as u64);
+            self.kernel_batch_n.record(r.kernel_batch_n.max(1) as u64);
         }
+        // Pass-level cache deltas: zero on every record except the
+        // leader's, so summing unconditionally counts each pass once.
+        self.batch_kernel_hits += r.batch_kernel_hits;
+        self.batch_kernel_misses += r.batch_kernel_misses;
         match r.start {
             StartKind::Cold => {
                 self.cold_starts += 1;
@@ -441,6 +465,9 @@ pub(crate) fn test_record(
         predict_full_speed: Duration::from_millis(predict_ms / 2),
         batch_size: 1,
         batch_wait: Duration::ZERO,
+        kernel_batch_n: 1,
+        batch_kernel_hits: 0,
+        batch_kernel_misses: 0,
         billed: Duration::from_millis(predict_ms),
         billed_ms: predict_ms.div_ceil(100) * 100,
         cost_dollars: 1e-6,
@@ -594,11 +621,21 @@ mod tests {
         // Two solo requests: no batch telemetry at all.
         s.record(test_record("f", 512, StartKind::Warm, 100));
         s.record(test_record("f", 512, StartKind::Cold, 100));
-        // A batch of 3 (leader cold, 2 followers warm), 40 ms waits.
-        for start in [StartKind::Cold, StartKind::Warm, StartKind::Warm] {
+        // A batch of 3 (leader cold, 2 followers warm), 40 ms waits,
+        // served by a batch-2 kernel; the leader alone owns the
+        // pass-level cache deltas.
+        for (i, start) in [StartKind::Cold, StartKind::Warm, StartKind::Warm]
+            .into_iter()
+            .enumerate()
+        {
             let mut r = test_record("f", 512, start, 100);
             r.batch_size = 3;
             r.batch_wait = Duration::from_millis(40);
+            r.kernel_batch_n = 2;
+            if i == 0 {
+                r.batch_kernel_hits = 1;
+                r.batch_kernel_misses = 1;
+            }
             s.record(r);
         }
         // A lone leader whose window expired: size 1 but a real wait.
@@ -612,6 +649,13 @@ mod tests {
         assert_eq!(m.batch_size.max(), 3);
         assert_eq!(m.batch_wait.count(), 4);
         assert!(m.batch_wait.p50() >= 24_000_000, "p50={}", m.batch_wait.p50());
+        // Kernel telemetry: request-weighted rung histogram on the
+        // batching path only; pass-level deltas counted once (the
+        // followers carried zeros).
+        assert_eq!(m.kernel_batch_n.count(), 4);
+        assert_eq!(m.kernel_batch_n.max(), 2);
+        assert_eq!(m.batch_kernel_hits, 1);
+        assert_eq!(m.batch_kernel_misses, 1);
         // batch_wait is a response component.
         let batched = {
             let mut r = test_record("g", 512, StartKind::Warm, 100);

@@ -1,4 +1,5 @@
-//! Warm-container pool with keep-alive eviction and capacity waiting.
+//! Warm-container pool with keep-alive eviction and capacity waiting,
+//! sharded by function hash.
 //!
 //! Per-function LIFO stacks of warm containers (LIFO maximizes reuse
 //! and lets the oldest containers age out, matching observed Lambda
@@ -18,6 +19,22 @@
 //! wall slices, a parked waiter advances virtual time toward its own
 //! deadline so a deadline expiry can never hang a time-virtualized
 //! run.
+//!
+//! **Sharding.** The idle map and the waiter generation/condvar pair
+//! are split into [`PoolShard`]s keyed by a hash of the function name
+//! (`pool_shards` in the platform config; `1` — the default — is the
+//! old single-lock pool, bit-for-bit). A hot function's release storm
+//! then bumps and signals only its own shard, so parked waiters of
+//! unrelated functions stay parked instead of stampeding awake on
+//! every release (the cross-function thundering herd). Events that
+//! free *global* capacity (retire, reservation cancel, eviction
+//! sweeps) still broadcast to every shard — a waiter parked for a
+//! capacity slot on shard A must see a slot freed by a retire on
+//! shard B. Capacity itself stays ONE lock-free atomic against
+//! `max_containers`: the cap is account-wide by definition, a
+//! per-shard budget split would silently turn `max_containers = 1`
+//! into "one per shard", and a CAS on an atomic was never the
+//! contention — the mutexes and the `notify_all` were.
 
 use super::container::Container;
 use crate::util::clock::Nanos;
@@ -41,39 +58,103 @@ pub enum AcquireOutcome {
     Interrupted,
 }
 
-pub struct WarmPool {
-    /// function name -> warm containers (LIFO).
+/// One hash bucket of the pool: a slice of the idle map plus its own
+/// waiter generation and condvar, so waits and wakes are scoped to the
+/// functions that hash here.
+struct PoolShard {
+    /// function name -> warm containers (LIFO), for the functions
+    /// hashing to this shard.
     idle: Mutex<BTreeMap<String, Vec<Container>>>,
-    /// All containers alive (busy + warm) against `max_containers`.
-    total: AtomicUsize,
-    max_containers: usize,
-    keep_alive_ns: u64,
-    clock: Arc<dyn Clock>,
-    /// Generation counter bumped on every capacity-freeing change;
-    /// parked waiters re-check on each bump.
+    /// Generation counter bumped on every change relevant to this
+    /// shard; parked waiters re-check on each bump.
     waiters: Mutex<u64>,
     waiter_cv: Condvar,
 }
 
-impl WarmPool {
-    pub fn new(max_containers: usize, keep_alive_s: f64, clock: Arc<dyn Clock>) -> Self {
+impl PoolShard {
+    fn new() -> Self {
         Self {
             idle: Mutex::new(BTreeMap::new()),
-            total: AtomicUsize::new(0),
-            max_containers,
-            keep_alive_ns: (keep_alive_s * 1e9) as u64,
-            clock,
             waiters: Mutex::new(0),
             waiter_cv: Condvar::new(),
         }
     }
+}
 
-    /// Wake every parked waiter: a container or a capacity slot may
-    /// have freed (also called by the invoker when a per-function
-    /// concurrency slot frees, so throttled async workers can re-try).
+pub struct WarmPool {
+    /// Per-function-hash shards (see the module docs); never empty.
+    shards: Vec<PoolShard>,
+    /// All containers alive (busy + warm) against `max_containers` —
+    /// global on purpose (the cap is account-wide; see module docs).
+    total: AtomicUsize,
+    max_containers: usize,
+    keep_alive_ns: u64,
+    clock: Arc<dyn Clock>,
+}
+
+impl WarmPool {
+    /// Single-shard pool: the pre-sharding behaviour, bit-for-bit.
+    pub fn new(max_containers: usize, keep_alive_s: f64, clock: Arc<dyn Clock>) -> Self {
+        Self::sharded(max_containers, keep_alive_s, clock, 1)
+    }
+
+    /// Pool with `shards` hash buckets (`platform.pool_shards`); `0`
+    /// is clamped to 1.
+    pub fn sharded(
+        max_containers: usize,
+        keep_alive_s: f64,
+        clock: Arc<dyn Clock>,
+        shards: usize,
+    ) -> Self {
+        Self {
+            shards: (0..shards.max(1)).map(|_| PoolShard::new()).collect(),
+            total: AtomicUsize::new(0),
+            max_containers,
+            keep_alive_ns: (keep_alive_s * 1e9) as u64,
+            clock,
+        }
+    }
+
+    /// Number of hash buckets (the `pool_shards` gauge).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// FNV-1a of the function name modulo the shard count — stable
+    /// across calls so a function always lives on one shard.
+    fn shard_index(&self, function: &str) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in function.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    fn shard_for(&self, function: &str) -> &PoolShard {
+        &self.shards[self.shard_index(function)]
+    }
+
+    /// Bump one shard's generation and wake its parked waiters.
+    fn notify_shard(shard: &PoolShard) {
+        *plock(&shard.waiters) += 1;
+        shard.waiter_cv.notify_all();
+    }
+
+    /// Wake every parked waiter on every shard: a *global* capacity
+    /// slot may have freed (retire, reservation cancel, eviction), and
+    /// a waiter parked for capacity on any shard can take it.
     pub fn notify_waiters(&self) {
-        *plock(&self.waiters) += 1;
-        self.waiter_cv.notify_all();
+        for shard in &self.shards {
+            Self::notify_shard(shard);
+        }
+    }
+
+    /// Wake only `function`'s shard: a per-function event (container
+    /// released, per-function concurrency slot freed) cannot help
+    /// waiters of functions hashing elsewhere, so they stay parked.
+    pub fn notify_function(&self, function: &str) {
+        Self::notify_shard(self.shard_for(function));
     }
 
     /// Try to take a warm container for `function`. Runs an eviction
@@ -82,17 +163,18 @@ impl WarmPool {
     /// mechanism).
     ///
     /// Single-pass: the sweep, the pop, and the `total` adjustment for
-    /// the reaped containers all happen under one `idle` lock hold, so
-    /// a concurrent `try_reserve` never sees already-dead containers
-    /// still counted against the cap (which used to surface as
-    /// spurious 429s while actually under capacity). Only the engine
+    /// the reaped containers all happen under one shard `idle` lock
+    /// hold, so a concurrent `try_reserve` never sees already-dead
+    /// containers still counted against the cap (which used to surface
+    /// as spurious 429s while actually under capacity). Only the engine
     /// teardown (`reap`) runs outside the lock.
     pub fn acquire(&self, function: &str) -> Option<Container> {
         let now = self.clock.now();
         let ttl = self.keep_alive_ns;
+        let shard = self.shard_for(function);
         let mut dead: Vec<Container> = Vec::new();
         let hit = {
-            let mut g = plock(&self.idle);
+            let mut g = plock(&shard.idle);
             let (hit, emptied) = match g.get_mut(function) {
                 None => (None, false),
                 Some(stack) => {
@@ -125,7 +207,8 @@ impl WarmPool {
             c.reap();
         }
         if reaped {
-            // Reaping decremented `total`: capacity freed.
+            // Reaping decremented `total`: GLOBAL capacity freed, so
+            // waiters on every shard get a look.
             self.notify_waiters();
         }
         hit.map(|mut c| {
@@ -134,14 +217,17 @@ impl WarmPool {
         })
     }
 
-    /// Return a busy container to the warm pool.
+    /// Return a busy container to the warm pool. Wakes only the
+    /// function's own shard: no capacity changed hands, so waiters of
+    /// unrelated functions have nothing to re-check.
     pub fn release(&self, mut container: Container) {
         container.park(&self.clock);
+        let shard = self.shard_for(&container.spec.name);
         {
-            let mut g = plock(&self.idle);
+            let mut g = plock(&shard.idle);
             g.entry(container.spec.name.clone()).or_default().push(container);
         }
-        self.notify_waiters();
+        Self::notify_shard(shard);
     }
 
     /// Reserve a slot for a new (cold) container; `false` when the
@@ -176,8 +262,8 @@ impl WarmPool {
     /// slot is available, or until the platform clock reaches
     /// `deadline`. This is the admission path's waitable primitive:
     /// the first iteration tries immediately (an uncontended request
-    /// never parks), after which the caller sleeps on the pool condvar
-    /// and re-checks on every capacity-freeing change.
+    /// never parks), after which the caller sleeps on its function's
+    /// shard condvar and re-checks on every relevant change.
     pub fn acquire_or_reserve(&self, function: &str, deadline: Nanos) -> AcquireOutcome {
         self.acquire_or_reserve_or(function, deadline, || false)
     }
@@ -196,11 +282,13 @@ impl WarmPool {
         deadline: Nanos,
         interrupt: impl Fn() -> bool,
     ) -> AcquireOutcome {
+        let shard = self.shard_for(function);
         let mut pacer = VirtualWaitPacer::new();
         loop {
-            // Capture the generation BEFORE probing so a change that
-            // lands between the probe and the wait is never missed.
-            let generation = *plock(&self.waiters);
+            // Capture the shard generation BEFORE probing so a change
+            // that lands between the probe and the wait is never
+            // missed.
+            let generation = *plock(&shard.waiters);
             if let Some(c) = self.acquire(function) {
                 return AcquireOutcome::Container(c);
             }
@@ -213,27 +301,31 @@ impl WarmPool {
             if self.clock.now() >= deadline {
                 return AcquireOutcome::TimedOut;
             }
-            self.wait_for_generation(generation, deadline, &mut pacer);
+            Self::wait_for_generation(shard, &*self.clock, generation, deadline, &mut pacer);
         }
     }
 
-    /// Park until any capacity-freeing change or until the platform
-    /// clock reaches `deadline` (the async workers' inter-attempt
-    /// wait; replaces their old fixed wall-clock backoff).
-    pub fn wait_for_change(&self, deadline: Nanos) {
+    /// Park until a change relevant to `function` (its shard's
+    /// generation moves: a release for a sibling, or any global
+    /// capacity event — those broadcast to every shard) or until the
+    /// platform clock reaches `deadline` (the async workers'
+    /// inter-attempt wait; replaces their old fixed wall-clock
+    /// backoff).
+    pub fn wait_for_change(&self, function: &str, deadline: Nanos) {
+        let shard = self.shard_for(function);
         let mut pacer = VirtualWaitPacer::new();
         loop {
-            let generation = *plock(&self.waiters);
+            let generation = *plock(&shard.waiters);
             if self.clock.now() >= deadline {
                 return;
             }
-            if self.wait_for_generation(generation, deadline, &mut pacer) {
+            if Self::wait_for_generation(shard, &*self.clock, generation, deadline, &mut pacer) {
                 return;
             }
         }
     }
 
-    /// One bounded wait for the generation to move past `gen`;
+    /// One bounded wait for the shard generation to move past `gen`;
     /// returns whether a change was observed. The
     /// [`VirtualWaitPacer`] keeps the wait live on virtual clocks: a
     /// plain deadline-capped condvar wait on a real clock, short wall
@@ -241,34 +333,38 @@ impl WarmPool {
     /// virtual one (see its docs — the batch collector waits with the
     /// same pacer).
     fn wait_for_generation(
-        &self,
+        shard: &PoolShard,
+        clock: &dyn Clock,
         generation: u64,
         deadline: Nanos,
         pacer: &mut VirtualWaitPacer,
     ) -> bool {
         let changed = {
-            let g = plock(&self.waiters);
+            let g = plock(&shard.waiters);
             if *g != generation {
                 true
             } else {
-                let timeout = pacer.next_timeout(&*self.clock, deadline);
-                let (g, _) = pwait_timeout(&self.waiter_cv, g, timeout);
+                let timeout = pacer.next_timeout(clock, deadline);
+                let (g, _) = pwait_timeout(&shard.waiter_cv, g, timeout);
                 *g != generation
             }
         };
-        pacer.on_wake(&*self.clock, changed, deadline);
+        pacer.on_wake(clock, changed, deadline);
         changed
     }
 
-    /// Sweep every function's stack, reaping expired containers and
-    /// dropping fully-drained map entries. Returns the number reaped.
-    /// `total` is adjusted under the lock (see [`Self::acquire`]).
+    /// Sweep every function's stack on every shard, reaping expired
+    /// containers and dropping fully-drained map entries. Returns the
+    /// number reaped. `total` is adjusted under each shard's lock (see
+    /// [`Self::acquire`]); shards are swept one at a time — no two
+    /// shard locks are ever held together.
     pub fn evict_expired(&self) -> usize {
         let now = self.clock.now();
         let ttl = self.keep_alive_ns;
         let mut dead = Vec::new();
-        {
-            let mut g = plock(&self.idle);
+        for shard in &self.shards {
+            let mut g = plock(&shard.idle);
+            let before = dead.len();
             for stack in g.values_mut() {
                 let mut keep = Vec::with_capacity(stack.len());
                 for c in stack.drain(..) {
@@ -281,8 +377,9 @@ impl WarmPool {
                 *stack = keep;
             }
             g.retain(|_, stack| !stack.is_empty());
-            if !dead.is_empty() {
-                self.total.fetch_sub(dead.len(), Ordering::SeqCst);
+            let reaped_here = dead.len() - before;
+            if reaped_here > 0 {
+                self.total.fetch_sub(reaped_here, Ordering::SeqCst);
             }
         }
         let n = dead.len();
@@ -300,8 +397,9 @@ impl WarmPool {
     /// Returns the number reaped; busy containers are untouched and
     /// retire through the normal release path.
     pub fn evict_function(&self, function: &str) -> usize {
+        let shard = self.shard_for(function);
         let dead: Vec<Container> = {
-            let mut g = plock(&self.idle);
+            let mut g = plock(&shard.idle);
             let dead = g.remove(function).unwrap_or_default();
             if !dead.is_empty() {
                 self.total.fetch_sub(dead.len(), Ordering::SeqCst);
@@ -321,13 +419,15 @@ impl WarmPool {
     /// Evict everything (tests / forced cold).
     pub fn evict_all(&self) -> usize {
         let mut dead = Vec::new();
-        {
-            let mut g = plock(&self.idle);
+        for shard in &self.shards {
+            let mut g = plock(&shard.idle);
+            let before = dead.len();
             for (_, mut stack) in std::mem::take(&mut *g) {
                 dead.append(&mut stack);
             }
-            if !dead.is_empty() {
-                self.total.fetch_sub(dead.len(), Ordering::SeqCst);
+            let drained = dead.len() - before;
+            if drained > 0 {
+                self.total.fetch_sub(drained, Ordering::SeqCst);
             }
         }
         let n = dead.len();
@@ -347,13 +447,21 @@ impl WarmPool {
 
     /// Warm containers for one function.
     pub fn warm_count(&self, function: &str) -> usize {
-        plock(&self.idle).get(function).map_or(0, Vec::len)
+        plock(&self.shard_for(function).idle).get(function).map_or(0, Vec::len)
     }
 
-    /// Function entries currently tracked in the idle map (sweeps must
-    /// drop drained entries so churned names don't leak).
+    /// Warm (idle) containers across every shard.
+    pub fn idle_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| plock(&s.idle).values().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    /// Function entries currently tracked across the shards' idle maps
+    /// (sweeps must drop drained entries so churned names don't leak).
     pub fn tracked_functions(&self) -> usize {
-        plock(&self.idle).len()
+        self.shards.iter().map(|s| plock(&s.idle).len()).sum()
     }
 }
 
@@ -361,16 +469,17 @@ impl WarmPool {
 mod tests {
     use super::*;
     use crate::configparse::BootstrapConfig;
-    use crate::platform::registry::FunctionRegistry;
+    use crate::platform::registry::{FunctionRegistry, FunctionSpec};
     use crate::platform::throttle::CpuGovernor;
     use crate::runtime::{Engine as _, MockEngine};
-    use crate::util::{ManualClock, SplitMix64};
+    use crate::util::{ManualClock, SplitMix64, SystemClock};
     use std::time::Duration;
 
     struct Fixture {
         pool: WarmPool,
         engine: Arc<MockEngine>,
-        spec: Arc<crate::platform::registry::FunctionSpec>,
+        registry: FunctionRegistry,
+        spec: Arc<FunctionSpec>,
         gov: CpuGovernor,
         clock: Arc<ManualClock>,
         dyn_clock: Arc<dyn Clock>,
@@ -378,14 +487,19 @@ mod tests {
     }
 
     fn fixture(max: usize, keep_alive_s: f64) -> Fixture {
+        fixture_sharded(max, keep_alive_s, 1)
+    }
+
+    fn fixture_sharded(max: usize, keep_alive_s: f64, shards: usize) -> Fixture {
         let engine = Arc::new(MockEngine::paper_zoo());
-        let reg = FunctionRegistry::new(engine.clone());
-        let spec = reg.deploy("sq", "squeezenet", "pallas", 512).unwrap();
+        let registry = FunctionRegistry::new(engine.clone());
+        let spec = registry.deploy("sq", "squeezenet", "pallas", 512).unwrap();
         let clock = ManualClock::new();
         let dyn_clock: Arc<dyn Clock> = clock.clone();
         Fixture {
-            pool: WarmPool::new(max, keep_alive_s, dyn_clock.clone()),
+            pool: WarmPool::sharded(max, keep_alive_s, dyn_clock.clone(), shards),
             engine,
+            registry,
             spec,
             gov: CpuGovernor::new(1792, dyn_clock.clone()),
             clock,
@@ -394,15 +508,15 @@ mod tests {
         }
     }
 
-    /// Reserve + provision; `None` when at the container cap.
-    fn try_provision(f: &mut Fixture) -> Option<Container> {
+    /// Reserve + provision for an arbitrary spec; `None` at the cap.
+    fn try_provision_for(f: &mut Fixture, spec: &Arc<FunctionSpec>) -> Option<Container> {
         if !f.pool.try_reserve() {
             return None;
         }
         let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
         Some(
             Container::provision(
-                f.spec.clone(),
+                spec.clone(),
                 f.engine.clone(),
                 &f.gov,
                 &cfg,
@@ -413,8 +527,29 @@ mod tests {
         )
     }
 
+    /// Reserve + provision; `None` when at the container cap.
+    fn try_provision(f: &mut Fixture) -> Option<Container> {
+        let spec = f.spec.clone();
+        try_provision_for(f, &spec)
+    }
+
     fn provision(f: &mut Fixture) -> Container {
         try_provision(f).expect("under cap")
+    }
+
+    /// Two function names guaranteed to live on different shards of
+    /// `pool` (panics only if the hash maps 64 names to one bucket,
+    /// which would be a broken hash).
+    fn names_on_distinct_shards(pool: &WarmPool) -> (String, String) {
+        let a = "fn0".to_string();
+        let ia = pool.shard_index(&a);
+        for i in 1..64 {
+            let b = format!("fn{i}");
+            if pool.shard_index(&b) != ia {
+                return (a, b);
+            }
+        }
+        panic!("hash mapped 64 names to one shard");
     }
 
     #[test]
@@ -725,17 +860,17 @@ mod tests {
         let mut f = fixture(4, 600.0);
         let c = provision(&mut f);
         std::thread::scope(|s| {
-            let pool = &f.pool;
+            let shard = f.pool.shard_for("sq");
             let _ = s
                 .spawn(|| {
-                    let _idle = pool.idle.lock().unwrap();
-                    let _gen = pool.waiters.lock().unwrap();
+                    let _idle = shard.idle.lock().unwrap();
+                    let _gen = shard.waiters.lock().unwrap();
                     panic!("die holding both pool locks");
                 })
                 .join();
         });
-        assert!(f.pool.idle.is_poisoned());
-        assert!(f.pool.waiters.is_poisoned());
+        assert!(f.pool.shard_for("sq").idle.is_poisoned());
+        assert!(f.pool.shard_for("sq").waiters.is_poisoned());
         let id = c.id;
         f.pool.release(c);
         assert_eq!(f.pool.warm_count("sq"), 1, "release works through poison");
@@ -749,13 +884,185 @@ mod tests {
         assert_eq!(f.pool.total_alive(), 0);
     }
 
+    /// Sharded: one poisoned bucket must not wedge acquires, releases,
+    /// or waits on any OTHER bucket (and the poisoned bucket itself
+    /// still recovers through `plock`).
+    #[test]
+    fn poisoned_shard_does_not_wedge_other_buckets() {
+        let mut f = fixture_sharded(8, 600.0, 8);
+        let (fa, fb) = names_on_distinct_shards(&f.pool);
+        let spec_a = f.registry.deploy(&fa, "squeezenet", "pallas", 512).unwrap();
+        let spec_b = f.registry.deploy(&fb, "squeezenet", "pallas", 512).unwrap();
+        let ca = try_provision_for(&mut f, &spec_a).unwrap();
+        let cb = try_provision_for(&mut f, &spec_b).unwrap();
+        // Poison fa's shard only.
+        std::thread::scope(|s| {
+            let shard = f.pool.shard_for(&fa);
+            let _ = s
+                .spawn(|| {
+                    let _idle = shard.idle.lock().unwrap();
+                    let _gen = shard.waiters.lock().unwrap();
+                    panic!("die holding one shard's locks");
+                })
+                .join();
+        });
+        assert!(f.pool.shard_for(&fa).idle.is_poisoned());
+        assert!(!f.pool.shard_for(&fb).idle.is_poisoned(), "blast radius is one bucket");
+        // The other bucket works untouched...
+        f.pool.release(cb);
+        assert_eq!(f.pool.warm_count(&fb), 1);
+        match f.pool.acquire_or_reserve(&fb, u64::MAX) {
+            AcquireOutcome::Container(c) => f.pool.retire(c),
+            _ => panic!("expected fb's container"),
+        }
+        // ...and the poisoned one recovers through plock.
+        f.pool.release(ca);
+        match f.pool.acquire_or_reserve(&fa, u64::MAX) {
+            AcquireOutcome::Container(c) => f.pool.retire(c),
+            _ => panic!("expected fa's container"),
+        }
+        assert_eq!(f.pool.total_alive(), 0);
+    }
+
+    /// The cross-function thundering herd, fixed: a release storm on
+    /// one shard leaves a waiter parked on another shard asleep. The
+    /// interrupt probe doubles as a spurious-wakeup counter — on a
+    /// real clock a parked waiter only re-runs its loop (and thus the
+    /// probe) when its own shard's condvar is signalled, so the count
+    /// stays flat through the storm and moves only for the waiter's
+    /// own release. Pre-sharding, the single `notify_all` re-ran the
+    /// probe once per storm release.
+    #[test]
+    fn release_storm_leaves_other_shards_parked() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        const STORM: usize = 40;
+        // Real clock: a parked waiter wakes only on a condvar signal
+        // (no virtual-time pacer slices to muddy the count).
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let registry = FunctionRegistry::new(engine.clone());
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock::new());
+        let pool = WarmPool::sharded(2, 600.0, clock.clone(), 8);
+        let (fa, fb) = names_on_distinct_shards(&pool);
+        let spec_a = registry.deploy(&fa, "squeezenet", "pallas", 512).unwrap();
+        let spec_b = registry.deploy(&fb, "squeezenet", "pallas", 512).unwrap();
+        let gov = CpuGovernor::new(1792, clock.clone());
+        let cfg = BootstrapConfig { simulate_delays: false, ..Default::default() };
+        let mut rng = SplitMix64::new(0);
+        let mut prov = |spec: &Arc<FunctionSpec>| {
+            assert!(pool.try_reserve());
+            Container::provision(spec.clone(), engine.clone(), &gov, &cfg, &clock, &mut rng)
+                .unwrap()
+        };
+        let ca = prov(&spec_a); // fa's only container, held busy
+        let cb = prov(&spec_b); // fb's container, released in the storm
+        let wakeups = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let (pool, wakeups) = (&pool, &wakeups);
+            let fa2 = fa.clone();
+            let waiter = s.spawn(move || {
+                let deadline = pool.clock.now() + 60_000_000_000; // 60 s real
+                match pool.acquire_or_reserve_or(&fa2, deadline, || {
+                    wakeups.fetch_add(1, Ordering::SeqCst);
+                    false
+                }) {
+                    AcquireOutcome::Container(c) => pool.retire(c),
+                    _ => panic!("expected fa's released container"),
+                }
+            });
+            std::thread::sleep(Duration::from_millis(50)); // let it park
+            let parked_baseline = wakeups.load(Ordering::SeqCst);
+            // fb's release storm: every cycle signals fb's shard only.
+            let mut c = cb;
+            for _ in 0..STORM {
+                pool.release(c);
+                c = pool.acquire(&fb).expect("fb's container cycles");
+            }
+            std::thread::sleep(Duration::from_millis(50));
+            let after_storm = wakeups.load(Ordering::SeqCst);
+            // Flat modulo at most one OS-level spurious wakeup; the
+            // pre-sharding pool re-ran the probe once per storm
+            // release (~STORM times).
+            assert!(
+                after_storm <= parked_baseline + 1,
+                "release storm on fb's shard woke fa's parked waiter \
+                 ({} probe runs during the storm)",
+                after_storm - parked_baseline
+            );
+            pool.release(ca); // fa's own release ends the wait
+            waiter.join().unwrap();
+            pool.retire(c);
+        });
+        assert_eq!(pool.total_alive(), 0);
+    }
+
+    /// Keep-alive sweeps, entry-drop hygiene, and the summed gauges
+    /// all span shards: functions pinned to different buckets age out
+    /// together under one `evict_expired`, and
+    /// `tracked_functions`/`idle_count`/`evict_all` sum over shards.
+    #[test]
+    fn sweeps_and_counts_span_shards() {
+        let mut f = fixture_sharded(16, 100.0, 8);
+        let (fa, fb) = names_on_distinct_shards(&f.pool);
+        let spec_a = f.registry.deploy(&fa, "squeezenet", "pallas", 512).unwrap();
+        let spec_b = f.registry.deploy(&fb, "squeezenet", "pallas", 512).unwrap();
+        let ca = try_provision_for(&mut f, &spec_a).unwrap();
+        let cb = try_provision_for(&mut f, &spec_b).unwrap();
+        f.pool.release(ca);
+        f.pool.release(cb);
+        assert_eq!(f.pool.tracked_functions(), 2, "entries summed across shards");
+        assert_eq!(f.pool.idle_count(), 2, "idle containers summed across shards");
+        assert_eq!(f.pool.warm_count(&fa), 1);
+        assert_eq!(f.pool.warm_count(&fb), 1);
+        // TTL expiry reaps across shards in one sweep.
+        f.clock.sleep(Duration::from_secs(101));
+        assert_eq!(f.pool.evict_expired(), 2, "one sweep reaps both shards");
+        assert_eq!(f.pool.tracked_functions(), 0, "drained entries dropped on every shard");
+        assert_eq!(f.pool.idle_count(), 0);
+        assert_eq!(f.pool.total_alive(), 0);
+        assert_eq!(f.engine.live_instances(), 0);
+        // evict_all drains every shard too.
+        let ca = try_provision_for(&mut f, &spec_a).unwrap();
+        let cb = try_provision_for(&mut f, &spec_b).unwrap();
+        f.pool.release(ca);
+        f.pool.release(cb);
+        assert_eq!(f.pool.evict_all(), 2);
+        assert_eq!(f.pool.total_alive(), 0);
+    }
+
+    /// The capacity cap stays account-wide under sharding: shard
+    /// locality never grants extra slots, and a retire on one shard
+    /// unparks a capacity waiter whose function hashes elsewhere.
+    #[test]
+    fn capacity_is_global_across_shards() {
+        let mut f = fixture_sharded(1, 600.0, 8);
+        let (fa, fb) = names_on_distinct_shards(&f.pool);
+        let spec_a = f.registry.deploy(&fa, "squeezenet", "pallas", 512).unwrap();
+        let _ = f.registry.deploy(&fb, "squeezenet", "pallas", 512).unwrap();
+        let ca = try_provision_for(&mut f, &spec_a).unwrap();
+        assert!(!f.pool.try_reserve(), "cap of 1 is global, not per shard");
+        std::thread::scope(|s| {
+            let pool = &f.pool;
+            let fb2 = fb.clone();
+            let waiter = s.spawn(move || {
+                matches!(pool.acquire_or_reserve(&fb2, u64::MAX), AcquireOutcome::Reserved)
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            // Retiring fa's container frees GLOBAL capacity: the
+            // broadcast must reach fb's shard.
+            pool.retire(ca);
+            assert!(waiter.join().unwrap(), "cross-shard capacity wakeup");
+        });
+        f.pool.cancel_reservation();
+        assert_eq!(f.pool.total_alive(), 0);
+    }
+
     /// Property: through arbitrary interleavings of provision/release/
     /// acquire/advance, the pool never exceeds its cap and never leaks
-    /// engine instances.
+    /// engine instances — including across shards.
     #[test]
     fn prop_pool_invariants() {
         crate::testkit::forall_cases("pool invariants", 60, |ops: &Vec<(u32, u64)>| {
-            let mut f = fixture(4, 100.0);
+            let mut f = fixture_sharded(4, 100.0, 4);
             let mut held: Vec<Container> = Vec::new();
             for (op, arg) in ops {
                 match op % 4 {

@@ -54,18 +54,65 @@ pub enum SnapshotPayload {
     /// No real state: the engine recreates the instance from its own
     /// (cached) artifacts at restore-I/O cost ([`super::MockEngine`]).
     Synthetic,
-    /// Host copy of the flat `f32` parameter vector plus the shard
-    /// whose compile cache already holds this model's executables
-    /// ([`super::PjrtEngine`]): restore re-uploads the weights to that
-    /// shard, skipping both the HLO compile and the init execution.
+    /// Host copy of the flat `f32` parameter vector
+    /// ([`super::PjrtEngine`]): restore re-uploads the weights to a
+    /// round-robin-chosen shard, skipping the init execution (and the
+    /// HLO compile too whenever that shard's cache already holds the
+    /// model — restores re-seed the batch-N kernel ladder on the
+    /// receiving shard so batched flushes stay warm wherever the
+    /// restore lands).
     PjrtWeights {
-        /// Shard the instance was captured on (its compile cache is
-        /// the "seeded" one a restore routes back to).
+        /// Shard the instance was captured on. Diagnostic only since
+        /// restores went round-robin: routing every restore back to
+        /// the capturing shard would hotspot it under restore storms.
         shard: usize,
         /// Flat parameter vector, shared so a stored blob is not
         /// copied per restore.
         flat: Arc<Vec<f32>>,
     },
+}
+
+/// How a batched forward pass was actually executed: which compiled
+/// kernels served it and how the engine's batch-N compile cache fared.
+/// Produced by [`Engine::predict_batch_report`]; the platform streams
+/// it into the per-function metrics (one owner: the batch leader's
+/// invocation record carries the hit/miss deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelReport {
+    /// Largest compiled batch-N kernel that served a chunk of this
+    /// pass (1 = every input went through the batch-1 executable).
+    pub kernel_batch_n: usize,
+    /// Batch-N (N >= 2) kernel-cache hits while serving this pass.
+    pub batch_kernel_hits: u64,
+    /// Batch-N (N >= 2) kernel-cache misses (a chunk wanted a ladder
+    /// kernel that was not compiled yet, or compiled it on the spot).
+    pub batch_kernel_misses: u64,
+}
+
+/// Largest power of two `<= n` (`n >= 1`).
+pub fn prev_power_of_two(n: usize) -> usize {
+    let mut p = 1usize;
+    while p * 2 <= n {
+        p *= 2;
+    }
+    p
+}
+
+/// Greedy power-of-two decomposition of a flush of `n` inputs into
+/// kernel-launch chunk sizes bounded by `ladder_max`: each chunk is the
+/// largest power of two that fits the remainder, so `n = 7,
+/// ladder_max = 4` yields `[4, 2, 1]`. This is the shared "pick the
+/// largest compiled N <= batch size, fold the remainder through smaller
+/// kernels" policy both engines implement.
+pub fn ladder_chunks(mut n: usize, ladder_max: usize) -> Vec<usize> {
+    let ladder_max = ladder_max.max(1);
+    let mut chunks = Vec::new();
+    while n > 0 {
+        let c = prev_power_of_two(n).min(ladder_max);
+        chunks.push(c);
+        n -= c;
+    }
+    chunks
 }
 
 /// One inference result.
@@ -111,6 +158,22 @@ pub trait Engine: Send + Sync {
         image_seeds: &[u64],
     ) -> Result<Vec<Prediction>> {
         image_seeds.iter().map(|&seed| self.predict(handle, seed)).collect()
+    }
+
+    /// [`Self::predict_batch`] plus a [`KernelReport`] describing which
+    /// compiled batch-N kernels served the pass. The default delegates
+    /// to `predict_batch` and reports a batch-1 execution (no ladder),
+    /// so engines without batch-N kernels stay correct; engines with a
+    /// kernel ladder override this method (keeping `predict_batch` as
+    /// the real implementation the default would otherwise recurse
+    /// into).
+    fn predict_batch_report(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+    ) -> Result<(Vec<Prediction>, KernelReport)> {
+        let preds = self.predict_batch(handle, image_seeds)?;
+        Ok((preds, KernelReport { kernel_batch_n: 1, ..Default::default() }))
     }
 
     /// Serialize a live instance's restorable state (weights plus a

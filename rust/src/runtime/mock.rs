@@ -5,13 +5,16 @@
 //! then scales/bills exactly like a real one (the CPU governor and the
 //! virtual clock treat reported compute uniformly).
 
-use super::engine::{Engine, InitStats, InstanceHandle, Prediction, SnapshotBlob, SnapshotPayload};
+use super::engine::{
+    ladder_chunks, prev_power_of_two, Engine, InitStats, InstanceHandle, KernelReport, Prediction,
+    SnapshotBlob, SnapshotPayload,
+};
 use super::manifest::ModelManifest;
 use crate::util::{plock, SplitMix64};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -21,6 +24,21 @@ use std::time::Duration;
 /// in `n`, modeling the weight-reuse/amortization a real batched
 /// kernel gets (activations grow with `n`, weight traffic does not).
 pub const BATCH_COST_MARGINAL: f64 = 0.25;
+
+/// Marginal full-speed cost of an extra input served by a *compiled
+/// batch-N kernel* (as a fraction of a solo pass). A flush of `n`
+/// inputs decomposed into `k` kernel launches costs
+/// `predict * (1 + BATCH_COST_MARGINAL * (k - 1)
+///            + KERNEL_COST_MARGINAL * (n - k))`
+/// in total: every launch past the first pays the launch margin, and
+/// every input that rides *inside* a batch-N kernel (rather than being
+/// its own launch) pays only this smaller kernel margin. With the
+/// ladder disabled (`batch_kernel_max = 1`) every input is its own
+/// launch (`k = n`), which reduces the formula to the pre-ladder
+/// `predict * (1 + BATCH_COST_MARGINAL * (n - 1))` exactly — so the
+/// single-kernel configuration reproduces the old cost bit-for-bit,
+/// and larger compiled kernels strictly lower the modeled cost.
+pub const KERNEL_COST_MARGINAL: f64 = 0.10;
 
 /// Engine-side restore bandwidth of the mock (bytes/s): the mock's
 /// [`Engine::restore_instance`] costs `weight_bytes / MOCK_RESTORE_BW`
@@ -76,6 +94,14 @@ impl MockModelCosts {
 pub struct MockEngine {
     models: BTreeMap<String, MockModelCosts>,
     compiled: Mutex<std::collections::BTreeSet<String>>,
+    /// Compiled batch-N kernels: `(model, batch_n)` entries for
+    /// `batch_n >= 2` (the batch-1 executable lives in `compiled`).
+    /// Seeded on first use (a miss "compiles on the spot") and by
+    /// snapshot restores, mirroring the PJRT shard-cache seeding.
+    compiled_batch: Mutex<std::collections::BTreeSet<(String, usize)>>,
+    /// Top of the power-of-two kernel ladder this engine will use for
+    /// batched passes (1 = ladder disabled, batch-1 kernels only).
+    batch_kernel_max: AtomicUsize,
     instances: Mutex<std::collections::BTreeSet<(usize, u64)>>,
     next_id: AtomicU64,
     /// Calls observed (assertions in tests).
@@ -98,6 +124,8 @@ impl MockEngine {
         Self {
             models: models.into_iter().map(|m| (m.manifest.name.clone(), m)).collect(),
             compiled: Mutex::new(Default::default()),
+            compiled_batch: Mutex::new(Default::default()),
+            batch_kernel_max: AtomicUsize::new(1),
             instances: Mutex::new(Default::default()),
             next_id: AtomicU64::new(0),
             predict_calls: AtomicU64::new(0),
@@ -122,6 +150,24 @@ impl MockEngine {
 
     fn costs(&self, model: &str) -> Result<&MockModelCosts> {
         self.models.get(model).ok_or_else(|| anyhow!("mock engine: unknown model {model:?}"))
+    }
+
+    /// Set the top of the power-of-two batch-kernel ladder (clamped to
+    /// at least 1; non-powers round down to the previous power of two,
+    /// matching what a real artifact zoo would actually ship).
+    pub fn set_batch_kernel_max(&self, n: usize) {
+        let n = n.max(1);
+        self.batch_kernel_max.store(prev_power_of_two(n), Ordering::SeqCst);
+    }
+
+    /// Current top of the batch-kernel ladder.
+    pub fn batch_kernel_max(&self) -> usize {
+        self.batch_kernel_max.load(Ordering::SeqCst)
+    }
+
+    /// Count of compiled batch-N (N >= 2) kernels (test assertions).
+    pub fn compiled_batch_kernels(&self) -> usize {
+        plock(&self.compiled_batch).len()
     }
 }
 
@@ -210,6 +256,67 @@ impl Engine for MockEngine {
             .collect())
     }
 
+    fn predict_batch_report(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+    ) -> Result<(Vec<Prediction>, KernelReport)> {
+        let n = image_seeds.len();
+        let ladder_max = self.batch_kernel_max.load(Ordering::SeqCst);
+        // Ladder disabled (or nothing to ladder): exactly the
+        // pre-ladder batched pass, bit-for-bit — including the
+        // singleton's solo jitter.
+        if ladder_max <= 1 || n <= 1 {
+            let preds = self.predict_batch(handle, image_seeds)?;
+            return Ok((preds, KernelReport { kernel_batch_n: 1, ..Default::default() }));
+        }
+        // One batched flush, decomposed into compiled batch-N kernel
+        // launches. Still ONE observable forward pass platform-side.
+        self.predict_calls.fetch_add(1, Ordering::SeqCst);
+        if !plock(&self.instances).contains(&(handle.shard, handle.id)) {
+            return Err(anyhow!("mock engine: batched predict on dead instance {:?}", handle));
+        }
+        let costs = self.costs(&handle.model)?;
+        let chunks = ladder_chunks(n, ladder_max);
+        let mut report = KernelReport { kernel_batch_n: 1, ..Default::default() };
+        {
+            let mut cache = plock(&self.compiled_batch);
+            for &c in &chunks {
+                if c < 2 {
+                    continue; // batch-1 executable: base compile cache.
+                }
+                report.kernel_batch_n = report.kernel_batch_n.max(c);
+                if cache.insert((handle.model.clone(), c)) {
+                    // Miss: the shard compiles the batch-c kernel on
+                    // the spot and caches it. Like `create_instance`'s
+                    // compile, the cost is charged platform-side (the
+                    // miss is visible in the report), not to this
+                    // pass's compute.
+                    report.batch_kernel_misses += 1;
+                } else {
+                    report.batch_kernel_hits += 1;
+                }
+            }
+        }
+        let k = chunks.len() as f64;
+        let nf = n as f64;
+        let total = costs.predict.as_secs_f64()
+            * (1.0 + BATCH_COST_MARGINAL * (k - 1.0) + KERNEL_COST_MARGINAL * (nf - k));
+        let share = Duration::from_secs_f64(total / nf);
+        let preds = image_seeds
+            .iter()
+            .map(|&seed| {
+                // Same per-seed stream as `predict`/`predict_batch`, so
+                // classification is independent of the kernel ladder.
+                let mut rng = SplitMix64::new(seed);
+                let top1 = rng.gen_range(0, costs.manifest.num_classes as u64) as i32;
+                let _jitter = rng.next_f64();
+                Prediction { top1, top_prob: 0.5 + 0.5 * rng.next_f32(), compute: share }
+            })
+            .collect();
+        Ok((preds, report))
+    }
+
     fn snapshot_instance(&self, handle: &InstanceHandle) -> Result<SnapshotBlob> {
         self.snapshot_calls.fetch_add(1, Ordering::SeqCst);
         if self.fail_snapshot.load(Ordering::SeqCst) {
@@ -253,6 +360,18 @@ impl Engine for MockEngine {
         // cache seeding), so the restore itself pays only the weight
         // upload — never a compile.
         plock(&self.compiled).insert(model.to_string());
+        // And the batch-N ladder rides along: the receiving shard's
+        // first batched flush after a restore hits the kernel cache
+        // instead of paying ladder compiles all over again.
+        let ladder_max = self.batch_kernel_max.load(Ordering::SeqCst);
+        if ladder_max >= 2 {
+            let mut cache = plock(&self.compiled_batch);
+            let mut c = 2usize;
+            while c <= ladder_max {
+                cache.insert((model.to_string(), c));
+                c *= 2;
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         plock(&self.instances).insert((0, id));
         Ok((
@@ -353,6 +472,112 @@ mod tests {
 
         e.drop_instance(&h);
         assert!(e.predict_batch(&h, &seeds).is_err(), "dead instance refused");
+    }
+
+    #[test]
+    fn ladder_disabled_report_reproduces_batch1_path_bit_for_bit() {
+        let e = MockEngine::paper_zoo();
+        assert_eq!(e.batch_kernel_max(), 1, "ladder off by default");
+        let (h, _) = e.create_instance("squeezenet", "pallas").unwrap();
+        let seeds = [7u64, 8, 9, 10];
+        let plain = e.predict_batch(&h, &seeds).unwrap();
+        let (preds, report) = e.predict_batch_report(&h, &seeds).unwrap();
+        assert_eq!(report, KernelReport { kernel_batch_n: 1, ..Default::default() });
+        for (a, b) in plain.iter().zip(&preds) {
+            assert_eq!(a.top1, b.top1);
+            assert_eq!(a.top_prob, b.top_prob);
+            assert_eq!(a.compute, b.compute);
+        }
+        // Singleton through the report path keeps the solo jitter.
+        let solo = e.predict(&h, 7).unwrap();
+        let (single, r1) = e.predict_batch_report(&h, &[7]).unwrap();
+        assert_eq!(single[0].compute, solo.compute);
+        assert_eq!(r1.kernel_batch_n, 1);
+        assert_eq!(e.compiled_batch_kernels(), 0, "no ladder entries ever compiled");
+    }
+
+    #[test]
+    fn kernel_ladder_cost_strictly_decreases() {
+        let e = MockEngine::paper_zoo();
+        let (h, _) = e.create_instance("squeezenet", "pallas").unwrap();
+        let solo_full = e.costs("squeezenet").unwrap().predict.as_secs_f64();
+        let seeds: Vec<u64> = (0..8).collect();
+        let solo = e.predict(&h, 0).unwrap();
+        // Modeled totals for n = 8 as the ladder grows:
+        //   L=1: k=8 launches -> 1 + 0.25*7            = 2.75x
+        //   L=2: k=4          -> 1 + 0.25*3 + 0.10*4   = 2.15x
+        //   L=4: k=2          -> 1 + 0.25*1 + 0.10*6   = 1.85x
+        //   L=8: k=1          -> 1          + 0.10*7   = 1.70x
+        let mut prev = f64::INFINITY;
+        for (ladder, expect) in [(1usize, 2.75), (2, 2.15), (4, 1.85), (8, 1.70)] {
+            e.set_batch_kernel_max(ladder);
+            let calls_before = e.predict_calls.load(Ordering::SeqCst);
+            let (preds, first) = e.predict_batch_report(&h, &seeds).unwrap();
+            assert_eq!(preds.len(), 8);
+            assert_eq!(
+                e.predict_calls.load(Ordering::SeqCst),
+                calls_before + 1,
+                "one observable pass regardless of kernel decomposition"
+            );
+            let total: f64 = preds.iter().map(|p| p.compute.as_secs_f64()).sum();
+            assert!((total - solo_full * expect).abs() < 1e-9, "L={ladder} total={total}");
+            assert!(total < prev, "cost strictly decreases as the ladder grows");
+            prev = total;
+            assert!(preds.windows(2).all(|w| w[0].compute == w[1].compute), "even split");
+            // Classification is ladder-independent.
+            assert_eq!(preds[0].top1, solo.top1);
+            assert_eq!(preds[0].top_prob, solo.top_prob);
+            assert_eq!(first.kernel_batch_n, ladder);
+            if ladder >= 2 {
+                assert_eq!(first.batch_kernel_misses, 1, "new rung compiled on first use");
+                // Second flush hits every ladder kernel it needs.
+                let (_, again) = e.predict_batch_report(&h, &seeds).unwrap();
+                assert_eq!(again.batch_kernel_misses, 0);
+                assert_eq!(again.batch_kernel_hits, 8 / ladder as u64);
+            }
+        }
+        // Non-power-of-two flush folds the remainder through smaller
+        // kernels: n=7 @ L=4 -> chunks [4, 2, 1], largest kernel 4.
+        let (preds7, r7) = e.predict_batch_report(&h, &(0..7).collect::<Vec<_>>()).unwrap();
+        assert_eq!(r7.kernel_batch_n, 4);
+        assert_eq!(r7.batch_kernel_hits + r7.batch_kernel_misses, 2, "chunk 1 is not a ladder hit");
+        let total7: f64 = preds7.iter().map(|p| p.compute.as_secs_f64()).sum();
+        assert!((total7 - solo_full * (1.0 + 0.25 * 2.0 + 0.10 * 4.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn restore_reseeds_batch_kernel_ladder() {
+        let e = MockEngine::paper_zoo();
+        e.set_batch_kernel_max(4);
+        let (h, _) = e.create_instance("resnet18", "pallas").unwrap();
+        let blob = e.snapshot_instance(&h).unwrap();
+        assert_eq!(e.compiled_batch_kernels(), 0, "snapshot capture compiles nothing");
+        let (h2, _) = e.restore_instance("resnet18", "pallas", &blob).unwrap();
+        assert_eq!(e.compiled_batch_kernels(), 2, "restore seeds the {{2, 4}} rungs");
+        let (_, report) = e.predict_batch_report(&h2, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(report.batch_kernel_misses, 0, "first post-restore flush hits the cache");
+        assert_eq!(report.batch_kernel_hits, 1);
+        assert_eq!(report.kernel_batch_n, 4);
+        e.drop_instance(&h);
+        e.drop_instance(&h2);
+    }
+
+    #[test]
+    fn ladder_chunks_decomposition() {
+        assert_eq!(ladder_chunks(8, 8), vec![8]);
+        assert_eq!(ladder_chunks(8, 4), vec![4, 4]);
+        assert_eq!(ladder_chunks(7, 4), vec![4, 2, 1]);
+        assert_eq!(ladder_chunks(5, 1), vec![1, 1, 1, 1, 1]);
+        assert_eq!(ladder_chunks(1, 64), vec![1]);
+        assert_eq!(prev_power_of_two(1), 1);
+        assert_eq!(prev_power_of_two(6), 4);
+        assert_eq!(prev_power_of_two(64), 64);
+        // The setter rounds non-powers down.
+        let e = MockEngine::paper_zoo();
+        e.set_batch_kernel_max(6);
+        assert_eq!(e.batch_kernel_max(), 4);
+        e.set_batch_kernel_max(0);
+        assert_eq!(e.batch_kernel_max(), 1);
     }
 
     #[test]

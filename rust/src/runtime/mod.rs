@@ -15,8 +15,13 @@ mod manifest;
 mod mock;
 mod pjrt;
 
-pub use engine::{Engine, InitStats, InstanceHandle, Prediction, SnapshotBlob, SnapshotPayload};
+pub use engine::{
+    ladder_chunks, prev_power_of_two, Engine, InitStats, InstanceHandle, KernelReport, Prediction,
+    SnapshotBlob, SnapshotPayload,
+};
 pub use image::synthetic_image;
 pub use manifest::{ModelManifest, Zoo};
-pub use mock::{MockEngine, MockModelCosts, BATCH_COST_MARGINAL, MOCK_RESTORE_BW};
+pub use mock::{
+    MockEngine, MockModelCosts, BATCH_COST_MARGINAL, KERNEL_COST_MARGINAL, MOCK_RESTORE_BW,
+};
 pub use pjrt::PjrtEngine;

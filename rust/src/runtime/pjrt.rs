@@ -18,7 +18,10 @@
 //! list, and `infer(param_0.., image) -> probs f32[1, C]` with argmax
 //! computed here.
 
-use super::engine::{Engine, InitStats, InstanceHandle, Prediction, SnapshotBlob, SnapshotPayload};
+use super::engine::{
+    ladder_chunks, prev_power_of_two, Engine, InitStats, InstanceHandle, KernelReport, Prediction,
+    SnapshotBlob, SnapshotPayload,
+};
 use super::image::synthetic_image;
 use super::manifest::{ModelManifest, Zoo};
 use crate::exec::channel::{bounded, unbounded, Receiver, Sender};
@@ -44,7 +47,10 @@ enum Cmd {
     PredictBatch {
         instance: u64,
         image_seeds: Vec<u64>,
-        reply: Sender<Result<Vec<Prediction>>>,
+        /// Top of the power-of-two batch-kernel ladder the flush may
+        /// use (1 = batch-1 executables only).
+        ladder_max: usize,
+        reply: Sender<Result<(Vec<Prediction>, KernelReport)>>,
     },
     SnapshotInstance {
         instance: u64,
@@ -54,6 +60,8 @@ enum Cmd {
         model: String,
         variant: String,
         flat: Arc<Vec<f32>>,
+        /// Ladder rungs to best-effort re-seed on the receiving shard.
+        ladder_max: usize,
         reply: Sender<Result<(u64, InitStats)>>,
     },
     DropInstance {
@@ -69,6 +77,10 @@ pub struct PjrtEngine {
     joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_shard: AtomicUsize,
     live: AtomicU64,
+    /// Top of the power-of-two batch-kernel ladder (1 = batch-1 only).
+    /// Rungs above 1 require `<infer>_b<N>` artifacts in the zoo; a
+    /// missing artifact just keeps that rung on the batch-1 path.
+    batch_kernel_max: AtomicUsize,
 }
 
 impl PjrtEngine {
@@ -95,6 +107,7 @@ impl PjrtEngine {
             joins: Mutex::new(joins),
             next_shard: AtomicUsize::new(0),
             live: AtomicU64::new(0),
+            batch_kernel_max: AtomicUsize::new(1),
         })
     }
 
@@ -104,6 +117,17 @@ impl PjrtEngine {
 
     pub fn zoo(&self) -> &Zoo {
         &self.zoo
+    }
+
+    /// Set the top of the power-of-two batch-kernel ladder (clamped to
+    /// at least 1; non-powers round down).
+    pub fn set_batch_kernel_max(&self, n: usize) {
+        self.batch_kernel_max.store(prev_power_of_two(n.max(1)), Ordering::SeqCst);
+    }
+
+    /// Current top of the batch-kernel ladder.
+    pub fn batch_kernel_max(&self) -> usize {
+        self.batch_kernel_max.load(Ordering::SeqCst)
     }
 }
 
@@ -162,18 +186,30 @@ impl Engine for PjrtEngine {
         handle: &InstanceHandle,
         image_seeds: &[u64],
     ) -> Result<Vec<Prediction>> {
+        Ok(self.predict_batch_report(handle, image_seeds)?.0)
+    }
+
+    fn predict_batch_report(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+    ) -> Result<(Vec<Prediction>, KernelReport)> {
         // One command crosses the channel for the whole batch: the
         // inputs run back-to-back on the owning shard without a
         // per-request cross-thread round trip in between, and without
         // interleaved commands evicting the instance's buffers from
-        // cache mid-batch. The artifacts are batch-1 executables, so
-        // the per-input compute is unchanged — the batching win here
-        // is the amortized dispatch, not a fused kernel.
+        // cache mid-batch. The shard decomposes the flush over its
+        // compiled batch-N kernel ladder (largest compiled N <= batch
+        // size, remainder folded through smaller kernels), falling
+        // back to the batch-1 executable for rungs the zoo does not
+        // ship — so the win ranges from amortized dispatch (ladder
+        // disabled) to genuinely fused batched passes.
         let (reply_tx, reply_rx) = bounded(1);
         self.shards[handle.shard]
             .send(Cmd::PredictBatch {
                 instance: handle.id,
                 image_seeds: image_seeds.to_vec(),
+                ladder_max: self.batch_kernel_max.load(Ordering::SeqCst),
                 reply: reply_tx,
             })
             .map_err(|_| anyhow!("engine shard {} is down", handle.shard))?;
@@ -210,22 +246,25 @@ impl Engine for PjrtEngine {
                 blob.variant
             );
         }
-        let SnapshotPayload::PjrtWeights { shard, flat } = &blob.payload else {
+        let SnapshotPayload::PjrtWeights { shard: _captured_on, flat } = &blob.payload else {
             bail!("snapshot payload is not restorable by the PJRT engine");
         };
-        // Route back to the capturing shard: its compile cache already
-        // holds this model's executables, so the restore pays weight
-        // upload only.
-        let shard = *shard;
-        if shard >= self.shards.len() {
-            bail!("snapshot references unknown engine shard {shard}");
-        }
+        // Round-robin like `create_instance` — NOT back to the
+        // capturing shard. Routing every restore to the shard that
+        // captured the snapshot hotspots it under a restore storm
+        // (every cold provision of a popular model lands on one
+        // thread) while the other shards idle. A compile-cache miss on
+        // the receiving shard is honestly charged to `InitStats`, and
+        // the shard re-seeds its batch-N kernel ladder right after, so
+        // later restores and batched flushes there are warm.
+        let shard = self.next_shard.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         let (reply_tx, reply_rx) = bounded(1);
         self.shards[shard]
             .send(Cmd::RestoreInstance {
                 model: model.to_string(),
                 variant: variant.to_string(),
                 flat: flat.clone(),
+                ladder_max: self.batch_kernel_max.load(Ordering::SeqCst),
                 reply: reply_tx,
             })
             .map_err(|_| anyhow!("engine shard {shard} is down"))?;
@@ -253,7 +292,10 @@ impl Engine for PjrtEngine {
 // ------------------------------------------------------------- shard
 
 struct CompiledModel {
-    init_exe: xla::PjRtLoadedExecutable,
+    /// Weight-materialization executable. `Some` for the batch-1 entry
+    /// (instance creation runs it); batch-N kernel entries share the
+    /// batch-1 instance's weights and carry no init of their own.
+    init_exe: Option<xla::PjRtLoadedExecutable>,
     infer_exe: xla::PjRtLoadedExecutable,
     input_shape: Vec<usize>,
 }
@@ -266,7 +308,14 @@ struct Instance {
 struct Shard {
     client: xla::PjRtClient,
     zoo: Zoo,
-    compiled: HashMap<(String, String), CompiledModel>,
+    /// Compile cache keyed `(model, variant, batch_n)`: `batch_n = 1`
+    /// is the classic init+infer pair, `batch_n >= 2` an infer-only
+    /// batch-N kernel compiled from the `<infer>_b<N>` artifact.
+    compiled: HashMap<(String, String, usize), CompiledModel>,
+    /// Ladder rungs the zoo ships no artifact for (or whose compile
+    /// failed): remembered so each absent rung is probed — and counted
+    /// as a miss — exactly once per shard, not per flush.
+    batch_unavailable: std::collections::HashSet<(String, String, usize)>,
     instances: HashMap<u64, Instance>,
     next_id: u64,
 }
@@ -301,8 +350,14 @@ fn shard_main(zoo: Zoo, rx: Receiver<Cmd>) {
             return;
         }
     };
-    let mut shard =
-        Shard { client, zoo, compiled: HashMap::new(), instances: HashMap::new(), next_id: 0 };
+    let mut shard = Shard {
+        client,
+        zoo,
+        compiled: HashMap::new(),
+        batch_unavailable: std::collections::HashSet::new(),
+        instances: HashMap::new(),
+        next_id: 0,
+    };
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Cmd::CreateInstance { model, variant, reply } => {
@@ -311,16 +366,14 @@ fn shard_main(zoo: Zoo, rx: Receiver<Cmd>) {
             Cmd::Predict { instance, image_seed, reply } => {
                 let _ = reply.send(shard.predict(instance, image_seed));
             }
-            Cmd::PredictBatch { instance, image_seeds, reply } => {
-                let _ = reply.send(
-                    image_seeds.iter().map(|&seed| shard.predict(instance, seed)).collect(),
-                );
+            Cmd::PredictBatch { instance, image_seeds, ladder_max, reply } => {
+                let _ = reply.send(shard.predict_batch(instance, &image_seeds, ladder_max));
             }
             Cmd::SnapshotInstance { instance, reply } => {
                 let _ = reply.send(shard.snapshot(instance));
             }
-            Cmd::RestoreInstance { model, variant, flat, reply } => {
-                let _ = reply.send(shard.restore(&model, &variant, &flat));
+            Cmd::RestoreInstance { model, variant, flat, ladder_max, reply } => {
+                let _ = reply.send(shard.restore(&model, &variant, &flat, ladder_max));
             }
             Cmd::DropInstance { instance } => {
                 shard.instances.remove(&instance);
@@ -332,7 +385,7 @@ fn shard_main(zoo: Zoo, rx: Receiver<Cmd>) {
 
 impl Shard {
     fn compile(&mut self, model: &str, variant: &str) -> Result<Duration> {
-        let key = (model.to_string(), variant.to_string());
+        let key = (model.to_string(), variant.to_string(), 1usize);
         if self.compiled.contains_key(&key) {
             return Ok(Duration::ZERO);
         }
@@ -345,9 +398,51 @@ impl Shard {
         let dt = t0.elapsed();
         self.compiled.insert(
             key,
-            CompiledModel { init_exe, infer_exe, input_shape: manifest.input_shape.clone() },
+            CompiledModel {
+                init_exe: Some(init_exe),
+                infer_exe,
+                input_shape: manifest.input_shape.clone(),
+            },
         );
         Ok(dt)
+    }
+
+    /// Ensure the batch-`n` infer kernel for `(model, variant)` is in
+    /// the compile cache. `Ok(true)` = cache hit, `Ok(false)` =
+    /// compiled on the spot (a miss the caller reports); `Err` = the
+    /// zoo ships no batch-`n` artifact or its compile failed, in which
+    /// case the rung is remembered as unavailable and never probed
+    /// again on this shard.
+    fn ensure_batch_kernel(&mut self, model: &str, variant: &str, n: usize) -> Result<bool> {
+        let key = (model.to_string(), variant.to_string(), n);
+        if self.compiled.contains_key(&key) {
+            return Ok(true);
+        }
+        if self.batch_unavailable.contains(&key) {
+            bail!("batch-{n} kernel for {model}/{variant} is unavailable on this shard");
+        }
+        let attempt = (|| -> Result<CompiledModel> {
+            let manifest = self.zoo.get(model)?;
+            let (_, infer_path) = manifest.artifact_paths(variant)?;
+            let batch_path = batch_artifact_path(&infer_path, n);
+            if !batch_path.is_file() {
+                bail!("no batch-{n} artifact at {}", batch_path.display());
+            }
+            let infer_exe = self.compile_file(&batch_path)?;
+            let mut input_shape = manifest.input_shape.clone();
+            input_shape[0] = n;
+            Ok(CompiledModel { init_exe: None, infer_exe, input_shape })
+        })();
+        match attempt {
+            Ok(cm) => {
+                self.compiled.insert(key, cm);
+                Ok(false)
+            }
+            Err(e) => {
+                self.batch_unavailable.insert(key);
+                Err(e)
+            }
+        }
     }
 
     fn compile_file(&self, path: &PathBuf) -> Result<xla::PjRtLoadedExecutable> {
@@ -361,8 +456,9 @@ impl Shard {
 
     fn create_instance(&mut self, model: &str, variant: &str) -> Result<(u64, InitStats)> {
         let compile = self.compile(model, variant)?;
-        let key = (model.to_string(), variant.to_string());
+        let key = (model.to_string(), variant.to_string(), 1usize);
         let cm = self.compiled.get(&key).expect("just compiled");
+        let init_exe = cm.init_exe.as_ref().expect("batch-1 entry always carries init");
         let manifest = self.zoo.get(model)?;
 
         // Run init() -> flat f32[N], pull it to the host, then slice
@@ -372,8 +468,7 @@ impl Shard {
         // start.)
         // lint:allow(wall-clock: PJRT engine work is inherently real; wall timings feed InitStats/Prediction, not platform scheduling)
         let t0 = Instant::now();
-        let out = cm
-            .init_exe
+        let out = init_exe
             .execute::<xla::Literal>(&[])
             .map_err(|e| anyhow!("init execute for {model}: {e}"))?;
         let lit = out[0][0]
@@ -403,7 +498,8 @@ impl Shard {
 
         let id = self.next_id;
         self.next_id += 1;
-        self.instances.insert(id, Instance { key, params });
+        self.instances
+            .insert(id, Instance { key: (model.to_string(), variant.to_string()), params });
         Ok((id, InitStats { compile, init_run, weight_bytes: manifest.param_bytes }))
     }
 
@@ -434,13 +530,27 @@ impl Shard {
         Ok(flat)
     }
 
-    /// Create an instance from snapshotted weights: the compile is a
-    /// cache hit when the blob lands on the shard that captured it
-    /// (the normal routing — "cache seeding"; a miss still compiles,
-    /// honestly reported), and the init execution is skipped entirely
-    /// in favor of uploading the blob's parameters.
-    fn restore(&mut self, model: &str, variant: &str, flat: &[f32]) -> Result<(u64, InitStats)> {
+    /// Create an instance from snapshotted weights: the init execution
+    /// is skipped entirely in favor of uploading the blob's
+    /// parameters. Restores route round-robin, so the compile may hit
+    /// (this shard served the model before) or honestly miss — after
+    /// which this shard re-seeds its batch-N kernel ladder up to
+    /// `ladder_max` best-effort, so the warmed state a snapshot
+    /// represents includes the batched kernels wherever it lands.
+    fn restore(
+        &mut self,
+        model: &str,
+        variant: &str,
+        flat: &[f32],
+        ladder_max: usize,
+    ) -> Result<(u64, InitStats)> {
         let compile = self.compile(model, variant)?;
+        let mut n = 2usize;
+        while n <= ladder_max {
+            // Best-effort: an absent rung artifact is not an error.
+            let _ = self.ensure_batch_kernel(model, variant, n);
+            n *= 2;
+        }
         let manifest = self.zoo.get(model)?;
         if flat.len() as u64 != manifest.param_elements {
             bail!(
@@ -476,7 +586,10 @@ impl Shard {
             .instances
             .get(&instance)
             .ok_or_else(|| anyhow!("no such instance {instance} on this shard"))?;
-        let cm = self.compiled.get(&inst.key).expect("instance without compiled model");
+        let cm = self
+            .compiled
+            .get(&(inst.key.0.clone(), inst.key.1.clone(), 1usize))
+            .expect("instance without compiled model");
         let (h, w) = (cm.input_shape[1], cm.input_shape[2]);
 
         // lint:allow(wall-clock: PJRT engine work is inherently real; wall timings feed InitStats/Prediction, not platform scheduling)
@@ -513,5 +626,172 @@ impl Shard {
                 }
             });
         Ok(Prediction { top1: top1 as i32, top_prob, compute })
+    }
+
+    /// Serve one batched flush by decomposing it over the compiled
+    /// batch-N kernel ladder: largest compiled `N <= remaining`, the
+    /// remainder folded through smaller kernels, and any rung the zoo
+    /// does not ship falling back to the batch-1 executable for that
+    /// chunk. The report tells the platform which kernels actually ran.
+    fn predict_batch(
+        &mut self,
+        instance: u64,
+        image_seeds: &[u64],
+        ladder_max: usize,
+    ) -> Result<(Vec<Prediction>, KernelReport)> {
+        let inst_key = self
+            .instances
+            .get(&instance)
+            .ok_or_else(|| anyhow!("no such instance {instance} on this shard"))?
+            .key
+            .clone();
+        let mut preds = Vec::with_capacity(image_seeds.len());
+        let mut report = KernelReport { kernel_batch_n: 1, ..Default::default() };
+        let mut off = 0usize;
+        for c in ladder_chunks(image_seeds.len(), ladder_max) {
+            let chunk = &image_seeds[off..off + c];
+            off += c;
+            if c >= 2 {
+                match self.ensure_batch_kernel(&inst_key.0, &inst_key.1, c) {
+                    Ok(hit) => {
+                        if hit {
+                            report.batch_kernel_hits += 1;
+                        } else {
+                            report.batch_kernel_misses += 1;
+                        }
+                        match self.predict_chunk_batched(instance, chunk, c) {
+                            Ok(mut ps) => {
+                                report.kernel_batch_n = report.kernel_batch_n.max(c);
+                                preds.append(&mut ps);
+                                continue;
+                            }
+                            Err(e) => log::warn!(
+                                "batch-{c} kernel run failed for {}/{}; batch-1 fallback: {e}",
+                                inst_key.0,
+                                inst_key.1
+                            ),
+                        }
+                    }
+                    Err(e) => {
+                        // First probe of an absent rung counts as the
+                        // one honest miss; later flushes skip it.
+                        if !report_probe_was_cached(&e) {
+                            report.batch_kernel_misses += 1;
+                        }
+                        log::debug!("batch-{c} kernel unavailable: {e}");
+                    }
+                }
+            }
+            for &seed in chunk {
+                preds.push(self.predict(instance, seed)?);
+            }
+        }
+        Ok((preds, report))
+    }
+
+    /// Run one chunk through its compiled batch-`n` kernel: inputs
+    /// stacked into a single `[n, h, w, c]` device buffer, one
+    /// `execute`, per-row argmax, compute split evenly across members.
+    fn predict_chunk_batched(
+        &mut self,
+        instance: u64,
+        seeds: &[u64],
+        batch_n: usize,
+    ) -> Result<Vec<Prediction>> {
+        let inst = self
+            .instances
+            .get(&instance)
+            .ok_or_else(|| anyhow!("no such instance {instance} on this shard"))?;
+        let cm = self
+            .compiled
+            .get(&(inst.key.0.clone(), inst.key.1.clone(), batch_n))
+            .ok_or_else(|| anyhow!("batch-{batch_n} kernel not compiled"))?;
+        let (h, w) = (cm.input_shape[1], cm.input_shape[2]);
+
+        // lint:allow(wall-clock: PJRT engine work is inherently real; wall timings feed InitStats/Prediction, not platform scheduling)
+        let t0 = Instant::now();
+        let mut pixels = Vec::with_capacity(seeds.len() * h * w * 3);
+        for &seed in seeds {
+            pixels.extend(synthetic_image(h, w, seed));
+        }
+        let image = self
+            .client
+            .buffer_from_host_buffer::<f32>(&pixels, &cm.input_shape, None)
+            .map_err(|e| anyhow!("uploading batched image: {e}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = inst.params.iter().collect();
+        args.push(&image);
+        let out = cm
+            .infer_exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("batch-{batch_n} infer execute: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("batched infer literal sync: {e}"))?;
+        let probs: Vec<f32> =
+            lit.to_vec::<f32>().map_err(|e| anyhow!("reading batched probs: {e}"))?;
+        let compute = t0.elapsed();
+
+        if probs.is_empty() || probs.len() % batch_n != 0 {
+            bail!(
+                "batch-{batch_n} kernel returned {} probabilities (not divisible)",
+                probs.len()
+            );
+        }
+        let classes = probs.len() / batch_n;
+        let share = compute / batch_n as u32;
+        Ok(probs
+            .chunks_exact(classes)
+            .map(|row| {
+                let (top1, top_prob) = row.iter().enumerate().fold(
+                    (0usize, f32::NEG_INFINITY),
+                    |(bi, bv), (i, &v)| if v > bv { (i, v) } else { (bi, bv) },
+                );
+                Prediction { top1: top1 as i32, top_prob, compute: share }
+            })
+            .collect())
+    }
+}
+
+/// `true` when an `ensure_batch_kernel` error came from the
+/// remembered-unavailable set (already counted as a miss once) rather
+/// than a fresh probe.
+fn report_probe_was_cached(e: &anyhow::Error) -> bool {
+    e.to_string().contains("unavailable on this shard")
+}
+
+/// Derive the batch-`n` infer artifact path from the batch-1 path:
+/// `squeezenet_infer.hlo.txt` -> `squeezenet_infer_b4.hlo.txt` (the
+/// `_b<N>` tag goes before the first extension dot).
+fn batch_artifact_path(infer_path: &std::path::Path, n: usize) -> PathBuf {
+    let name = infer_path.file_name().and_then(|s| s.to_str()).unwrap_or_default();
+    let tagged = match name.split_once('.') {
+        Some((stem, rest)) => format!("{stem}_b{n}.{rest}"),
+        None => format!("{name}_b{n}"),
+    };
+    infer_path.with_file_name(tagged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_artifact_path_tags_before_first_dot() {
+        let p = PathBuf::from("/zoo/squeezenet/squeezenet_infer.hlo.txt");
+        assert_eq!(
+            batch_artifact_path(&p, 4),
+            PathBuf::from("/zoo/squeezenet/squeezenet_infer_b4.hlo.txt")
+        );
+        let bare = PathBuf::from("/zoo/m/infer");
+        assert_eq!(batch_artifact_path(&bare, 2), PathBuf::from("/zoo/m/infer_b2"));
+    }
+
+    #[test]
+    fn cached_unavailability_is_distinguishable() {
+        let fresh = anyhow!("no batch-4 artifact at /zoo/x_infer_b4.hlo.txt");
+        let cached = anyhow!("batch-4 kernel for m/pallas is unavailable on this shard");
+        assert!(!report_probe_was_cached(&fresh));
+        assert!(report_probe_was_cached(&cached));
     }
 }
