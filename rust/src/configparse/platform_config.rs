@@ -172,6 +172,59 @@ impl Default for SnapshotConfig {
     }
 }
 
+/// Adaptive hot-path controllers (`[policy]` in the TOML): per-function
+/// feedback loops that steer the batch window, the batch-kernel rung
+/// target, and predictive pre-provisioning from live telemetry.
+/// Disabled by default — with `enabled = false` (and no per-function
+/// `adaptive` override) the static-knob pipeline is preserved
+/// bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Master switch, default off (the per-function `adaptive` policy
+    /// field overrides it either way).
+    pub enabled: bool,
+    /// Default end-to-end latency SLO, milliseconds; the batch-window
+    /// controller shrinks the window once the recent `batch_wait_p99`
+    /// consumes too much of this budget. Per-function override: the
+    /// deploy/reconfigure `slo_target_ms`.
+    pub slo_target_ms: u64,
+    /// Ceiling the adaptive batch window may grow to, milliseconds.
+    pub window_cap_ms: u64,
+    /// EWMA smoothing factor in `(0, 1]` for the per-function
+    /// arrival-rate level (higher = reacts faster, forgets faster).
+    pub ewma_alpha: f64,
+    /// Holt trend smoothing factor in `(0, 1]` for the arrival-rate
+    /// slope the pre-provisioning forecast extrapolates.
+    pub holt_beta: f64,
+    /// Span of the decaying sliding window the controllers read
+    /// percentiles from, seconds — recent traffic, not all-time.
+    pub decay_window_s: f64,
+    /// How far ahead the arrival-rate forecast projects when sizing
+    /// the pre-provisioned warm target, seconds (roughly one cold
+    /// provision's worth of lead time).
+    pub forecast_horizon_s: f64,
+    /// Cap on forecast-driven warm containers per function, on top of
+    /// `min_warm` (bounds what a runaway forecast can provision).
+    pub max_prewarm: usize,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            // The paper's mid-range SLA target (1 s) as the default
+            // budget the batch-window controller defends.
+            slo_target_ms: 1_000,
+            window_cap_ms: 100,
+            ewma_alpha: 0.3,
+            holt_beta: 0.1,
+            decay_window_s: 60.0,
+            forecast_horizon_s: 2.0,
+            max_prewarm: 8,
+        }
+    }
+}
+
 /// Client<->gateway network model (the JMeter<->API-Gateway leg).
 #[derive(Debug, Clone)]
 pub struct NetworkConfig {
@@ -269,6 +322,8 @@ pub struct PlatformConfig {
     pub network: NetworkConfig,
     /// Snapshot/restore cold-start mitigation (default: disabled).
     pub snapshot: SnapshotConfig,
+    /// Adaptive hot-path controllers (default: disabled).
+    pub policy: PolicyConfig,
     /// Deterministic seed for every stochastic component.
     pub seed: u64,
     /// Directory of AOT artifacts.
@@ -295,6 +350,7 @@ impl Default for PlatformConfig {
             bootstrap: BootstrapConfig::default(),
             network: NetworkConfig::default(),
             snapshot: SnapshotConfig::default(),
+            policy: PolicyConfig::default(),
             seed: 20171001,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -422,6 +478,31 @@ impl PlatformConfig {
             cfg.snapshot.capture_policy = v.parse()?;
         }
 
+        if let Some(v) = doc.get("policy.enabled").and_then(TomlValue::as_bool) {
+            cfg.policy.enabled = v;
+        }
+        if let Some(v) = get_u64("policy.slo_target_ms") {
+            cfg.policy.slo_target_ms = v;
+        }
+        if let Some(v) = get_u64("policy.window_cap_ms") {
+            cfg.policy.window_cap_ms = v;
+        }
+        if let Some(v) = get_f64("policy.ewma_alpha") {
+            cfg.policy.ewma_alpha = v;
+        }
+        if let Some(v) = get_f64("policy.holt_beta") {
+            cfg.policy.holt_beta = v;
+        }
+        if let Some(v) = get_f64("policy.decay_window_s") {
+            cfg.policy.decay_window_s = v;
+        }
+        if let Some(v) = get_f64("policy.forecast_horizon_s") {
+            cfg.policy.forecast_horizon_s = v;
+        }
+        if let Some(v) = get_u64("policy.max_prewarm") {
+            cfg.policy.max_prewarm = v as usize;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -480,7 +561,63 @@ impl PlatformConfig {
         if !self.snapshot.restore_bw.is_finite() || self.snapshot.restore_bw <= 0.0 {
             bail!("snapshot.restore_bw must be a positive number of bytes/s");
         }
+        if self.policy.slo_target_ms == 0 || self.policy.slo_target_ms > MAX_QUEUE_DEADLINE_MS {
+            bail!("policy.slo_target_ms must be in [1, {MAX_QUEUE_DEADLINE_MS}] (one hour)");
+        }
+        // The adaptive window is still a window a leader holds a
+        // container open for: same unit-mistake ceiling.
+        if self.policy.window_cap_ms > MAX_QUEUE_DEADLINE_MS {
+            bail!("policy.window_cap_ms must be at most {MAX_QUEUE_DEADLINE_MS} (one hour)");
+        }
+        for (name, v) in
+            [("policy.ewma_alpha", self.policy.ewma_alpha), ("policy.holt_beta", self.policy.holt_beta)]
+        {
+            if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                bail!("{name} must be in (0, 1]");
+            }
+        }
+        for (name, v) in [
+            ("policy.decay_window_s", self.policy.decay_window_s),
+            ("policy.forecast_horizon_s", self.policy.forecast_horizon_s),
+        ] {
+            if !v.is_finite() || v <= 0.0 || v > 1e9 {
+                bail!("{name} must be a positive number of seconds (at most 1e9)");
+            }
+        }
+        if self.policy.max_prewarm > 4096 {
+            bail!("policy.max_prewarm must be at most 4096 (0 disables forecast top-up)");
+        }
         Ok(())
+    }
+
+    /// Non-fatal configuration smells: combinations that validate but
+    /// almost certainly do not mean what the operator intended.
+    /// Surfaced at startup (the CLI prints them to stderr) instead of
+    /// being silently ignored.
+    pub fn warnings(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.batch_window_ms > 0 && self.max_batch_size == 1 {
+            out.push(format!(
+                "batch_window_ms = {} has no effect while max_batch_size = 1 \
+                 (batching is disabled; no leader ever opens a window)",
+                self.batch_window_ms
+            ));
+        }
+        if self.batch_kernel_max > 1 && self.max_batch_size == 1 {
+            out.push(format!(
+                "batch_kernel_max = {} compiles a kernel ladder no flush can ever \
+                 fill while max_batch_size = 1",
+                self.batch_kernel_max
+            ));
+        }
+        if self.policy.enabled && self.policy.window_cap_ms < self.batch_window_ms {
+            out.push(format!(
+                "policy.window_cap_ms = {} is below batch_window_ms = {}: the adaptive \
+                 controller can only shrink the window, never restore the static default",
+                self.policy.window_cap_ms, self.batch_window_ms
+            ));
+        }
+        out
     }
 
     /// CPU share in `(0, 1]` for a container of `mem` MB — Lambda's
@@ -609,6 +746,80 @@ capture_policy = "sync"
         assert!(PlatformConfig::from_toml("[snapshot]\ncapture_policy = \"eager\"").is_err());
         assert_eq!("off".parse::<CapturePolicy>().unwrap(), CapturePolicy::Off);
         assert_eq!("background".parse::<CapturePolicy>().unwrap(), CapturePolicy::Background);
+    }
+
+    #[test]
+    fn policy_toml_overlay_and_defaults() {
+        let cfg = PlatformConfig::default();
+        assert!(!cfg.policy.enabled, "controllers are opt-in");
+        assert_eq!(cfg.policy.slo_target_ms, 1_000);
+        assert_eq!(cfg.policy.window_cap_ms, 100);
+        assert_eq!(cfg.policy.max_prewarm, 8);
+
+        let cfg = PlatformConfig::from_toml(
+            r#"
+[policy]
+enabled = true
+slo_target_ms = 500
+window_cap_ms = 40
+ewma_alpha = 0.5
+holt_beta = 0.2
+decay_window_s = 30.0
+forecast_horizon_s = 1.5
+max_prewarm = 16
+"#,
+        )
+        .unwrap();
+        assert!(cfg.policy.enabled);
+        assert_eq!(cfg.policy.slo_target_ms, 500);
+        assert_eq!(cfg.policy.window_cap_ms, 40);
+        assert_eq!(cfg.policy.ewma_alpha, 0.5);
+        assert_eq!(cfg.policy.holt_beta, 0.2);
+        assert_eq!(cfg.policy.decay_window_s, 30.0);
+        assert_eq!(cfg.policy.forecast_horizon_s, 1.5);
+        assert_eq!(cfg.policy.max_prewarm, 16);
+
+        assert!(PlatformConfig::from_toml("[policy]\nslo_target_ms = 0").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\nslo_target_ms = 7200000").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\nwindow_cap_ms = 7200000").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\newma_alpha = 0.0").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\newma_alpha = 1.5").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\nholt_beta = -0.1").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\ndecay_window_s = 0.0").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\nforecast_horizon_s = -1.0").is_err());
+        assert!(PlatformConfig::from_toml("[policy]\nmax_prewarm = 100000").is_err());
+    }
+
+    #[test]
+    fn warnings_flag_window_without_batching() {
+        let cfg = PlatformConfig::default();
+        assert!(cfg.warnings().is_empty(), "defaults are clean");
+
+        // A window with batching off validates but does nothing —
+        // that must be warned about, not silently ignored.
+        let cfg =
+            PlatformConfig { batch_window_ms: 25, ..Default::default() };
+        let w = cfg.warnings();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("batch_window_ms"), "{w:?}");
+        assert!(w[0].contains("max_batch_size"), "{w:?}");
+        // And it still parses/validates fine.
+        let cfg = PlatformConfig::from_toml("[platform]\nbatch_window_ms = 25").unwrap();
+        assert_eq!(cfg.batch_window_ms, 25);
+        assert_eq!(cfg.warnings().len(), 1);
+
+        // Same for a kernel ladder no flush can fill.
+        let cfg = PlatformConfig { batch_kernel_max: 4, ..Default::default() };
+        assert!(cfg.warnings().iter().any(|w| w.contains("batch_kernel_max")));
+
+        // With batching actually on, both warnings clear.
+        let cfg = PlatformConfig {
+            batch_window_ms: 25,
+            batch_kernel_max: 4,
+            max_batch_size: 8,
+            ..Default::default()
+        };
+        assert!(cfg.warnings().is_empty());
     }
 
     #[test]

@@ -60,6 +60,21 @@ pub(crate) fn function_json(ctx: &ApiCtx, spec: &Arc<FunctionSpec>) -> Json {
                 None => Json::Null,
             },
         ),
+        // Adaptive-controller overrides: null = platform default applies.
+        (
+            "slo_target_ms",
+            match spec.slo_target_ms {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "adaptive",
+            match spec.adaptive {
+                Some(v) => Json::Bool(v),
+                None => Json::Null,
+            },
+        ),
         ("peak_mem_mb", Json::Num(spec.peak_mem_mb as f64)),
         ("package_mb", Json::Num(spec.package_bytes as f64 / 1e6)),
         ("warm_containers", Json::Num(ctx.platform.pool.warm_count(&spec.name) as f64)),
@@ -117,6 +132,14 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
         Ok(v) => v,
         Err(r) => return r,
     };
+    let slo_target_ms = match opt_u64(&body, "slo_target_ms") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
+    let adaptive = match opt_bool(&body, "adaptive") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
     let conflict = || {
         err(
             409,
@@ -144,6 +167,8 @@ pub fn create(ctx: &ApiCtx, req: &HttpRequest, _params: &Params) -> Responder {
             max_batch_size,
             batch_window_ms,
             snapshot,
+            slo_target_ms,
+            adaptive,
         },
     ) {
         Ok(spec) => Responder::json(201, function_json(ctx, &spec).to_string()),
@@ -218,6 +243,14 @@ pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
         Ok(v) => v,
         Err(r) => return r,
     };
+    let slo_target_ms = match super::tri_state_u64(&body, "slo_target_ms") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
+    let adaptive = match super::tri_state_bool(&body, "adaptive") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
     let patch = ReconfigurePatch {
         memory_mb,
         variant,
@@ -228,6 +261,8 @@ pub fn patch(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
         max_batch_size,
         batch_window_ms,
         snapshot,
+        slo_target_ms,
+        adaptive,
     };
     match ctx.platform.reconfigure(name, &patch) {
         Ok(spec) => Responder::json(200, function_json(ctx, &spec).to_string()),

@@ -111,6 +111,19 @@ fn zero_shard_fields() -> Vec<(&'static str, Json)> {
     ZERO.get_or_init(|| shard_fields(&FnMetrics::default())).clone()
 }
 
+/// Adaptive-controller gauges (PR 9): the Holt arrival-rate level the
+/// forecaster is tracking, the batch window the controller is
+/// currently commanding, and how many times it has moved a knob.
+/// Served on both stats routes — per-function from `snapshot_view`,
+/// platform-wide from the aggregated `platform_view`.
+fn policy_fields(s: &crate::platform::PolicySnapshot) -> [(&'static str, Json); 3] {
+    [
+        ("arrival_rate_ewma", Json::Num(s.arrival_rate_ewma)),
+        ("effective_batch_window_ms", Json::Num(s.effective_batch_window_ms as f64)),
+        ("policy_adjustments", Json::Num(s.policy_adjustments as f64)),
+    ]
+}
+
 /// Snapshot-store gauges, served identically on both stats routes
 /// (the store is a platform-wide resource shared by every function of
 /// the same deployment shape, like the dispatcher's totals).
@@ -140,6 +153,10 @@ pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Resp
     fields.push(("warm_containers", Json::Num(ctx.platform.pool.warm_count(name) as f64)));
     // Live dispatcher saturation for this function.
     fields.push(("queue_depth", Json::Num(ctx.platform.dispatcher.queue_depth(name) as f64)));
+    // Adaptive-controller gauges: all-zero until the policy layer has
+    // seen an arrival for this function (controllers default off).
+    let policy = ctx.platform.policy.snapshot_view(name).unwrap_or_default();
+    fields.extend(policy_fields(&policy));
     fields.extend(snapshot_fields(&ctx.platform));
     Responder::json(200, obj(fields).to_string())
 }
@@ -182,6 +199,7 @@ pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Res
         ("async_queued", Json::Num(ctx.async_inv.queued() as f64)),
         ("async_results_stored", Json::Num(ctx.async_inv.stored() as f64)),
     ]);
+    fields.extend(policy_fields(&p.policy.platform_view()));
     fields.extend(snapshot_fields(p));
     // Redeploy/undeploy invalidations, platform route only (a store
     // lifecycle detail, not a per-function signal).

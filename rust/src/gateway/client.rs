@@ -69,6 +69,12 @@ pub struct DeploySpec {
     /// Snapshot/restore override (`platform.snapshot.enabled` applies
     /// when unset).
     pub snapshot: Option<bool>,
+    /// SLO target override in ms (`policy.slo_target_ms` applies when
+    /// unset) — the latency budget the adaptive controllers defend.
+    pub slo_target_ms: Option<u64>,
+    /// Adaptive-controller override (`policy.enabled` applies when
+    /// unset).
+    pub adaptive: Option<bool>,
 }
 
 impl DeploySpec {
@@ -120,6 +126,16 @@ impl DeploySpec {
         self.snapshot = Some(enabled);
         self
     }
+
+    pub fn slo_target_ms(mut self, slo_target_ms: u64) -> Self {
+        self.slo_target_ms = Some(slo_target_ms);
+        self
+    }
+
+    pub fn adaptive(mut self, enabled: bool) -> Self {
+        self.adaptive = Some(enabled);
+        self
+    }
 }
 
 /// Partial update for `PATCH /v2/functions/:name`. Everything after
@@ -136,6 +152,8 @@ pub struct ReconfigureSpec {
     pub max_batch_size: Option<Option<usize>>,
     pub batch_window_ms: Option<Option<u64>>,
     pub snapshot: Option<Option<bool>>,
+    pub slo_target_ms: Option<Option<u64>>,
+    pub adaptive: Option<Option<bool>>,
 }
 
 /// One deployed function, as reported by the API.
@@ -155,6 +173,9 @@ pub struct FunctionInfo {
     pub batch_window_ms: Option<u64>,
     /// Snapshot/restore override; `None` = platform default applies.
     pub snapshot: Option<bool>,
+    /// Adaptive-controller overrides; `None` = platform default applies.
+    pub slo_target_ms: Option<u64>,
+    pub adaptive: Option<bool>,
     pub warm_containers: usize,
 }
 
@@ -280,6 +301,12 @@ pub struct FunctionStats {
     pub cost_dollars_total: f64,
     pub gb_seconds_total: f64,
     pub warm_containers: u64,
+    /// Adaptive-controller gauges (all zero while controllers are off):
+    /// the Holt arrival-rate level, the batch window the controller is
+    /// commanding, and how many times it has moved a knob.
+    pub arrival_rate_ewma: f64,
+    pub effective_batch_window_ms: u64,
+    pub policy_adjustments: u64,
 }
 
 /// Platform-wide snapshot (`GET /v2/stats`): the totals shard plus
@@ -332,6 +359,11 @@ pub struct PlatformStats {
     pub total_gb_seconds: f64,
     pub async_queued: u64,
     pub async_results_stored: u64,
+    /// Adaptive-controller aggregates: summed arrival rates and knob
+    /// adjustments, and the widest commanded batch window.
+    pub arrival_rate_ewma: f64,
+    pub effective_batch_window_ms: u64,
+    pub policy_adjustments: u64,
 }
 
 /// Blocking typed client for one gateway address.
@@ -431,6 +463,12 @@ impl ApiClient {
         if let Some(s) = spec.snapshot {
             fields.push(("snapshot", Json::Bool(s)));
         }
+        if let Some(t) = spec.slo_target_ms {
+            fields.push(("slo_target_ms", Json::Num(t as f64)));
+        }
+        if let Some(a) = spec.adaptive {
+            fields.push(("adaptive", Json::Bool(a)));
+        }
         let (_, json) = self.call("POST", "/v2/functions", Some(&obj(fields)))?;
         Ok(parse_function(&json))
     }
@@ -512,6 +550,24 @@ impl ApiClient {
             fields.push((
                 "snapshot",
                 match s {
+                    Some(b) => Json::Bool(b),
+                    None => Json::Null,
+                },
+            ));
+        }
+        if let Some(t) = patch.slo_target_ms {
+            fields.push((
+                "slo_target_ms",
+                match t {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ));
+        }
+        if let Some(a) = patch.adaptive {
+            fields.push((
+                "adaptive",
+                match a {
                     Some(b) => Json::Bool(b),
                     None => Json::Null,
                 },
@@ -662,6 +718,9 @@ impl ApiClient {
             cost_dollars_total: num_field(&json, "cost_dollars_total"),
             gb_seconds_total: num_field(&json, "gb_seconds_total"),
             warm_containers: u64_field(&json, "warm_containers"),
+            arrival_rate_ewma: num_field(&json, "arrival_rate_ewma"),
+            effective_batch_window_ms: u64_field(&json, "effective_batch_window_ms"),
+            policy_adjustments: u64_field(&json, "policy_adjustments"),
         })
     }
 
@@ -702,6 +761,9 @@ impl ApiClient {
             total_gb_seconds: num_field(&json, "total_gb_seconds"),
             async_queued: u64_field(&json, "async_queued"),
             async_results_stored: u64_field(&json, "async_results_stored"),
+            arrival_rate_ewma: num_field(&json, "arrival_rate_ewma"),
+            effective_batch_window_ms: u64_field(&json, "effective_batch_window_ms"),
+            policy_adjustments: u64_field(&json, "policy_adjustments"),
         })
     }
 }
@@ -731,6 +793,8 @@ fn parse_function(json: &Json) -> FunctionInfo {
         max_batch_size: json.get("max_batch_size").and_then(Json::as_u64).map(|v| v as usize),
         batch_window_ms: json.get("batch_window_ms").and_then(Json::as_u64),
         snapshot: json.get("snapshot").and_then(Json::as_bool),
+        slo_target_ms: json.get("slo_target_ms").and_then(Json::as_u64),
+        adaptive: json.get("adaptive").and_then(Json::as_bool),
         warm_containers: u64_field(json, "warm_containers") as usize,
     }
 }

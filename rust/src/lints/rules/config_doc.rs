@@ -1,7 +1,7 @@
 //! Rule `config-doc-drift`: the TOML config surface and its
 //! documentation move together.
 //!
-//! Every `platform.*` / `snapshot.*` key parsed by
+//! Every `platform.*` / `snapshot.*` / `policy.*` key parsed by
 //! `rust/src/configparse/platform_config.rs` must appear in API.md's
 //! `## Configuration` section, and every key documented there must
 //! actually be parsed — BOTH directions, mirroring `stats-doc-drift`:
@@ -72,7 +72,8 @@ fn whole_file(file: &str, message: String) -> Finding {
 }
 
 /// Keys the config parser actually reads: non-test string literals
-/// that are exactly `platform.<ident>` or `snapshot.<ident>`.
+/// that are exactly `platform.<ident>`, `snapshot.<ident>`, or
+/// `policy.<ident>`.
 pub fn parsed_keys(source: &str) -> BTreeSet<String> {
     let ctx = FileCtx::new(CONFIG_SRC, source);
     let mut keys = BTreeSet::new();
@@ -107,11 +108,11 @@ pub fn documented_keys(doc: &str) -> BTreeSet<String> {
     keys
 }
 
-/// Exactly `platform.<key>` or `snapshot.<key>` with a lowercase
-/// snake_case key — full match, no surrounding prose.
+/// Exactly `platform.<key>`, `snapshot.<key>`, or `policy.<key>` with
+/// a lowercase snake_case key — full match, no surrounding prose.
 fn is_config_key(s: &str) -> bool {
     let Some((section, key)) = s.split_once('.') else { return false };
-    if section != "platform" && section != "snapshot" {
+    if section != "platform" && section != "snapshot" && section != "policy" {
         return false;
     }
     let mut chars = key.chars();
@@ -129,6 +130,7 @@ mod tests {
             fn overlay() {
                 if let Some(v) = get_u64("platform.seed") { cfg.seed = v; }
                 if let Some(v) = get_f64("snapshot.restore_bw") { cfg.bw = v; }
+                if let Some(v) = get_u64("policy.slo_target_ms") { cfg.slo = v; }
                 bail!("snapshot.restore_bw must be a positive number");
             }
             #[cfg(test)]
@@ -139,7 +141,8 @@ mod tests {
         let keys = parsed_keys(src);
         assert!(keys.contains("platform.seed"));
         assert!(keys.contains("snapshot.restore_bw"));
-        assert_eq!(keys.len(), 2, "prose and test strings excluded: {keys:?}");
+        assert!(keys.contains("policy.slo_target_ms"));
+        assert_eq!(keys.len(), 3, "prose and test strings excluded: {keys:?}");
     }
 
     #[test]

@@ -83,6 +83,12 @@ pub const PLATFORM_LOCK_ORDER: &[LockDecl] = &[
     decl("pool.waiters", &[("platform/pool.rs", "waiters")], false),
     decl("registry.functions", &[("platform/registry.rs", "functions")], true),
     decl("snapshots.inner", &[("platform/snapshots.rs", "inner")], false),
+    // Adaptive-controller state. Ranked just above the metrics shards:
+    // the policy map is only ever taken standalone (arrival updates,
+    // window/rung/forecast reads after any flight-tracking or queue
+    // lock has been released), and nothing may call back into the
+    // invoker while holding it.
+    decl("policy.state", &[("platform/policy.rs", "state")], false),
     decl("metrics.shards", &[("platform/metrics.rs", "shards")], true),
     decl("metrics.totals", &[("platform/metrics.rs", "totals")], false),
     decl("metrics.recent", &[("platform/metrics.rs", "recent")], false),
@@ -348,6 +354,35 @@ mod tests {
     fn table_ranks_are_consistent() {
         assert!(rank_of("batcher.open") < rank_of("batcher.inner"));
         assert!(rank_of("async_invoke.queue") < rank_of("async_invoke.results"));
+    }
+
+    #[test]
+    fn policy_state_ranks_between_snapshots_and_metrics() {
+        assert!(rank_of("snapshots.inner") < rank_of("policy.state"));
+        assert!(rank_of("policy.state") < rank_of("metrics.shards"));
+        // Holding a metrics shard while consulting the policy map is an
+        // inversion: controllers read telemetry AFTER the sink's locks
+        // are released, never under them.
+        let metrics_src = "pub struct FnMetricsSink { shards: RwLock<u32>, totals: Mutex<u32>, recent: Mutex<u32>, p: PolicyEngine }\nimpl FnMetricsSink {\n    fn f(&self) {\n        let g = self.shards.read();\n        self.p.probe(name);\n    }\n    pub fn observe(&self) {\n        let g = self.shards.read();\n    }\n}\n";
+        let f = run(&[
+            ("rust/src/platform/metrics.rs", metrics_src),
+            (
+                "rust/src/platform/policy.rs",
+                "pub struct PolicyEngine { state: Mutex<u32> }\nimpl PolicyEngine {\n    pub fn probe(&self, name: &str) {\n        let s = plock(&self.state);\n    }\n}\n",
+            ),
+        ]);
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "policy.state"), "{f:?}");
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "probe"), "witness names the callee: {f:?}");
+        // The sanctioned direction — policy.state held while calling
+        // into a later-ranked metrics lock — is clean.
+        let ok = run(&[
+            ("rust/src/platform/metrics.rs", metrics_src),
+            (
+                "rust/src/platform/policy.rs",
+                "pub struct PolicyEngine { state: Mutex<u32>, m: FnMetricsSink }\nimpl PolicyEngine {\n    fn f(&self) {\n        let s = plock(&self.state);\n        self.m.observe();\n    }\n}\n",
+            ),
+        ]);
+        assert!(!ok.iter().any(|x| x.rule == GLOBAL_LOCK_ORDER), "{ok:?}");
     }
 
     #[test]

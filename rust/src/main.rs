@@ -135,6 +135,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "enable snapshot/restore cold-start mitigation platform-wide (overrides config)",
         )
         .bool_flag("no-snapshot", "disable snapshot/restore platform-wide (overrides config)")
+        .bool_flag(
+            "adaptive",
+            "enable the adaptive hot-path controllers platform-wide (overrides config)",
+        )
+        .bool_flag("no-adaptive", "disable the adaptive controllers platform-wide (overrides config)")
+        .flag(
+            "slo-target-ms",
+            "adaptive: default per-function response SLO budget the controllers defend (ms)",
+            None,
+        )
         .flag(
             "deploy",
             "comma list of name:model:mem to deploy at boot, e.g. sq:squeezenet:1024",
@@ -176,9 +186,26 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if args.get_bool("no-snapshot") {
         config.snapshot.enabled = false;
     }
+    if args.get_bool("adaptive") && args.get_bool("no-adaptive") {
+        bail!("--adaptive and --no-adaptive are mutually exclusive");
+    }
+    if args.get_bool("adaptive") {
+        config.policy.enabled = true;
+    }
+    if args.get_bool("no-adaptive") {
+        config.policy.enabled = false;
+    }
+    if let Some(v) = args.get_u64("slo-target-ms")? {
+        config.policy.slo_target_ms = v;
+    }
     // Same rules as the TOML path (maintainer range, deadline cap,
     // batch-size floor, restore bandwidth).
     config.validate()?;
+    // Non-fatal misconfigurations (e.g. adaptive controllers enabled
+    // with nothing for them to steer) go to stderr, not to a bail.
+    for w in config.warnings() {
+        eprintln!("warning: {w}");
+    }
     let shards = args.get_u64("shards")?.unwrap_or(2) as usize;
     let engine = build_engine(args.get_or("engine", "pjrt"), &config, shards)?;
     let platform = Arc::new(Invoker::live(config, engine));
@@ -202,6 +229,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let (max_batch_size, batch_window_ms) =
         (platform.config().max_batch_size, platform.config().batch_window_ms);
     let snapshot_cfg = platform.config().snapshot.clone();
+    let policy_cfg = platform.config().policy.clone();
     let gw = Gateway::bind(args.get_or("addr", "127.0.0.1:8080"), threads, platform)?;
     println!("lambdaserve gateway listening on http://{}", gw.local_addr());
     if interval > 0.0 {
@@ -236,6 +264,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     } else {
         println!("  snapshots: off (enable per function or with --snapshot)");
     }
+    if policy_cfg.enabled {
+        println!(
+            "  adaptive: SLO {} ms, batch window up to {} ms, forecast pre-warm up to {}",
+            policy_cfg.slo_target_ms, policy_cfg.window_cap_ms, policy_cfg.max_prewarm
+        );
+    } else {
+        println!("  adaptive: off (enable per function or with --adaptive)");
+    }
     println!("  v2: POST /v2/functions  POST /v2/functions/<fn>/invocations[?mode=async]");
     println!("  v1: GET /v1/invoke/<function>   POST /v1/functions?name=&model=&mem=");
     println!("  reference: API.md");
@@ -257,6 +293,9 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         .flag("batch-window-ms", "per-function batch collection window override (ms)", None)
         .bool_flag("snapshot", "force snapshot/restore ON for this function")
         .bool_flag("no-snapshot", "force snapshot/restore OFF for this function")
+        .flag("slo-target-ms", "per-function response SLO budget override (ms)", None)
+        .bool_flag("adaptive", "force the adaptive controllers ON for this function")
+        .bool_flag("no-adaptive", "force the adaptive controllers OFF for this function")
         .flag("config", "platform config TOML", None)
         .flag("engine", "pjrt | mock", Some("mock"));
     if argv.iter().any(|a| a == "--help") {
@@ -295,11 +334,23 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
         if args.get_bool("no-snapshot") {
             spec = spec.snapshot(false);
         }
+        if let Some(t) = args.get_u64("slo-target-ms")? {
+            spec = spec.slo_target_ms(t);
+        }
+        if args.get_bool("adaptive") && args.get_bool("no-adaptive") {
+            bail!("--adaptive and --no-adaptive are mutually exclusive");
+        }
+        if args.get_bool("adaptive") {
+            spec = spec.adaptive(true);
+        }
+        if args.get_bool("no-adaptive") {
+            spec = spec.adaptive(false);
+        }
         let f = api.deploy(&spec)?;
         println!(
             "deployed {} -> {} ({}) @ {} MB (min_warm={}, max_concurrency={}, \
              queue_capacity={}, queue_deadline_ms={}, max_batch_size={}, \
-             batch_window_ms={}, snapshot={}, warm={})",
+             batch_window_ms={}, snapshot={}, slo_target_ms={}, adaptive={}, warm={})",
             f.name,
             f.model,
             f.variant,
@@ -311,6 +362,8 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
             f.max_batch_size.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.batch_window_ms.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.snapshot.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
+            f.slo_target_ms.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
+            f.adaptive.map(|c| c.to_string()).unwrap_or_else(|| "default".into()),
             f.warm_containers
         );
         return Ok(());

@@ -234,6 +234,19 @@ impl Batcher {
     /// another batch is already collecting (the caller then executes
     /// solo — its container is in hand, following would waste it).
     pub fn lead(&self, spec: &Arc<FunctionSpec>, seed: u64) -> Option<BatchLeader<'_>> {
+        self.lead_with_window(spec, seed, None)
+    }
+
+    /// [`Self::lead`] with an explicit collection window. `None`
+    /// falls back to the static per-function/platform window; the
+    /// adaptive window controller passes its current output here so
+    /// the override lives entirely outside the batcher's own state.
+    pub fn lead_with_window(
+        &self,
+        spec: &Arc<FunctionSpec>,
+        seed: u64,
+        window_override: Option<Duration>,
+    ) -> Option<BatchLeader<'_>> {
         if !self.enabled(spec) {
             return None;
         }
@@ -242,7 +255,7 @@ impl Batcher {
             return None;
         }
         let now = self.clock.now();
-        let window = self.effective_window(spec);
+        let window = window_override.unwrap_or_else(|| self.effective_window(spec));
         let state = Arc::new(BatchState {
             inner: Mutex::new(BatchInner {
                 phase: Phase::Collecting,

@@ -265,11 +265,26 @@ impl Container {
         clock: &Arc<dyn Clock>,
         seeds: &[u64],
     ) -> Result<(Vec<Prediction>, Duration, KernelReport)> {
+        self.execute_batch_capped(governor, clock, seeds, usize::MAX)
+    }
+
+    /// [`Self::execute_batch`] with the engine's batch-kernel ladder
+    /// capped at `rung_cap` for this pass (the adaptive rung
+    /// controller's output; `usize::MAX` is the identity, which is
+    /// exactly what `execute_batch` passes).
+    pub fn execute_batch_capped(
+        &mut self,
+        governor: &CpuGovernor,
+        clock: &Arc<dyn Clock>,
+        seeds: &[u64],
+        rung_cap: usize,
+    ) -> Result<(Vec<Prediction>, Duration, KernelReport)> {
         assert_eq!(self.state, ContainerState::Busy, "execute_batch on non-busy container");
         assert!(!seeds.is_empty(), "empty batch");
         // lint:allow(wall-clock: measuring REAL engine wall time for CpuGovernor::throttle, which ignores it on virtual clocks)
         let t0 = Instant::now();
-        let (preds, kernels) = self.engine.predict_batch_report(&self.handle, seeds)?;
+        let (preds, kernels) =
+            self.engine.predict_batch_report_capped(&self.handle, seeds, rung_cap)?;
         let real = t0.elapsed();
         let full_speed: Duration = preds.iter().map(|p| p.compute).sum();
         let effective = governor.throttle(full_speed, real, self.spec.memory_mb);

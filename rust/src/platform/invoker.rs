@@ -23,6 +23,7 @@ use super::container::Container;
 use super::dispatcher::Dispatcher;
 use super::maintainer::{MaintenanceReport, PoolMaintainer};
 use super::metrics::{InvocationRecord, MetricsSink, StartKind};
+use super::policy::PolicyEngine;
 use super::pool::{AcquireOutcome, WarmPool};
 use super::registry::{FunctionPolicy, FunctionRegistry, FunctionSpec};
 use super::scaler::Scaler;
@@ -103,6 +104,12 @@ pub struct Invoker {
     /// (demand and prewarm/maintainer) goes through it; disabled by
     /// default (`platform.snapshot.enabled` / per-function override).
     pub snapshots: Arc<SnapshotStore>,
+    /// Adaptive hot-path controllers (batch window, kernel rungs,
+    /// predictive pre-provisioning): disabled by default
+    /// (`policy.enabled` / per-function `adaptive` override), in which
+    /// case every read-back returns the static knob and the fixed
+    /// pipeline is preserved bit-for-bit.
+    pub policy: Arc<PolicyEngine>,
     governor: CpuGovernor,
     engine: Arc<dyn Engine>,
     config: PlatformConfig,
@@ -130,6 +137,8 @@ pub struct ReconfigurePatch {
     pub max_batch_size: Option<Option<usize>>,
     pub batch_window_ms: Option<Option<u64>>,
     pub snapshot: Option<Option<bool>>,
+    pub slo_target_ms: Option<Option<u64>>,
+    pub adaptive: Option<Option<bool>>,
 }
 
 /// RAII decrement for one function's in-flight counter. The release
@@ -205,6 +214,7 @@ impl Invoker {
             metrics: MetricsSink::with_capacity(config.metrics_ring_capacity),
             governor: CpuGovernor::new(config.full_power_mem_mb, clock.clone()),
             snapshots: Arc::new(SnapshotStore::new(config.snapshot.clone())),
+            policy: Arc::new(PolicyEngine::new(config.policy.clone())),
             engine,
             rng: Mutex::new(SplitMix64::new(config.seed)),
             config,
@@ -244,7 +254,9 @@ impl Invoker {
         variant: &str,
         memory_mb: u32,
     ) -> Result<Arc<FunctionSpec>> {
-        self.registry.deploy(name, model, variant, memory_mb)
+        let spec = self.registry.deploy(name, model, variant, memory_mb)?;
+        self.eager_snapshot_capture(&spec);
+        Ok(spec)
     }
 
     /// Deploy with the full v2 spec (warm-pool policy + concurrency
@@ -264,6 +276,7 @@ impl Invoker {
     ) -> Result<Arc<FunctionSpec>> {
         let spec = self.registry.deploy_full(name, model, variant, memory_mb, policy)?;
         self.top_up_warm_pool(&spec);
+        self.eager_snapshot_capture(&spec);
         Ok(spec)
     }
 
@@ -280,7 +293,41 @@ impl Invoker {
     ) -> Result<Arc<FunctionSpec>> {
         let spec = self.registry.create_full(name, model, variant, memory_mb, policy)?;
         self.top_up_warm_pool(&spec);
+        self.eager_snapshot_capture(&spec);
         Ok(spec)
+    }
+
+    /// Deploy-time eager checkpoint capture (the predictive
+    /// pre-provisioning controller's deploy-side half): with the
+    /// adaptive controllers AND the snapshot store on for `spec`, and
+    /// no checkpoint for its shape yet, provision one container
+    /// through the snapshot path so the capture happens NOW — before
+    /// the first burst — instead of inside the first demand cold
+    /// start. Keep-warm vs snapshot-restore per function falls out of
+    /// the spec's own cost statement: a function that keeps no warm
+    /// pool (`min_warm == 0`) has declared idle memory rent too
+    /// expensive, so once the capture has landed the probe container
+    /// is evicted again and bursts are absorbed by restores; a
+    /// `min_warm > 0` function keeps the container — it doubles as
+    /// warm capacity. Best-effort like every prewarm (capture probes
+    /// with the shape-level cost map, not `lookup`, so hit/miss
+    /// counters stay demand-only).
+    fn eager_snapshot_capture(&self, spec: &Arc<FunctionSpec>) {
+        if !self.policy.enabled_for(spec) || !self.snapshots.enabled_for(spec) {
+            return;
+        }
+        let key = SnapshotKey::of(spec);
+        if self.snapshots.capture_cost(&key).is_some() {
+            return; // the shape is already captured
+        }
+        self.prewarm_up_to(spec, spec.min_warm.max(1));
+        // Only drop the probe once the capture actually landed (under
+        // `CapturePolicy::Background` it may still be in flight on the
+        // live instance — keep-alive reaps the probe later either
+        // way).
+        if spec.min_warm == 0 && self.snapshots.capture_cost(&key).is_some() {
+            self.pool.evict_function(&spec.name);
+        }
     }
 
     /// Best-effort top-up to `target` warm containers for `spec`;
@@ -322,6 +369,7 @@ impl Invoker {
             bail!("function {name:?} is not deployed");
         }
         self.metrics.remove_function(name);
+        self.policy.remove_function(name);
         self.invalidate_snapshot_if_shape_unused(&SnapshotKey::of(&spec));
         Ok(self.pool.evict_function(name))
     }
@@ -359,6 +407,8 @@ impl Invoker {
                 max_batch_size: patch.max_batch_size.unwrap_or(cur.max_batch_size),
                 batch_window_ms: patch.batch_window_ms.unwrap_or(cur.batch_window_ms),
                 snapshot: patch.snapshot.unwrap_or(cur.snapshot),
+                slo_target_ms: patch.slo_target_ms.unwrap_or(cur.slo_target_ms),
+                adaptive: patch.adaptive.unwrap_or(cur.adaptive),
             },
         )?;
         if spec.memory_mb != cur.memory_mb || spec.variant != cur.variant {
@@ -427,6 +477,14 @@ impl Invoker {
             }
         };
         let t_queue_start = self.clock.now();
+        // Feed the arrival forecast (admitted requests only — the
+        // controllers steer capacity for traffic the cap lets in).
+        // Gated so the default-off pipeline takes no policy lock, and
+        // ordered after the in-flight guard released its map lock:
+        // `policy.state` is only ever acquired standalone.
+        if self.policy.enabled_for(&spec) {
+            self.policy.on_arrival(function, t_queue_start);
+        }
         // The horizon admission control may hold this request to: the
         // batcher compares open batches' flush deadlines against it,
         // so joining a batch never waits longer than parking for a
@@ -572,8 +630,22 @@ impl Invoker {
         // collect followers for the window, flush, one batched pass.
         // `lead` is `None` when batching is off for this function (the
         // default) or another batch is already collecting; either way
-        // the solo path below is unchanged.
-        if let Some(leader) = self.batcher.lead(&spec, image_seed) {
+        // the solo path below is unchanged. With the adaptive window
+        // controller on, the leader opens with the controller's
+        // current window instead of the static knob (queue depth read
+        // BEFORE taking the policy lock — standalone acquisition).
+        let window_override = if self.policy.enabled_for(&spec) && self.batcher.enabled(&spec) {
+            let depth = self.dispatcher.queue_depth(function);
+            Some(self.policy.effective_window(
+                &spec,
+                self.batcher.effective_window(&spec),
+                depth,
+                self.clock.now(),
+            ))
+        } else {
+            None
+        };
+        if let Some(leader) = self.batcher.lead_with_window(&spec, image_seed, window_override) {
             return self.execute_batch_leader(function, &spec, container, start, queue_wait, leader);
         }
 
@@ -627,10 +699,22 @@ impl Invoker {
             top1: prediction.top1,
         };
         self.metrics.record(record.clone());
+        self.note_policy_record(&spec, &record);
 
         self.release_or_retire(container, function);
 
         Ok(InvokeOutcome { record, prediction })
+    }
+
+    /// Stream one finished record into the policy controllers. Called
+    /// strictly AFTER `MetricsSink::record` returns (its shard/totals
+    /// locks are released by then): `policy.state` ranks below the
+    /// metrics locks in `PLATFORM_LOCK_ORDER` and is only ever taken
+    /// standalone.
+    fn note_policy_record(&self, spec: &FunctionSpec, record: &InvocationRecord) {
+        if self.policy.enabled_for(spec) {
+            self.policy.on_record(record, self.clock.now());
+        }
     }
 
     /// Release a served container to the warm pool for reuse — unless
@@ -682,7 +766,18 @@ impl Invoker {
         // starving, which outweighs a fuller batch.
         leader.wait_window(|| self.dispatcher.queue_depth(function) > 0);
         let seeds = leader.close();
-        let executed = container.execute_batch(&self.governor, &self.clock, &seeds);
+        // Adaptive rung selection: cap the engine's batch-kernel
+        // ladder at what recent flush sizes actually fill, so shards
+        // stop compiling rungs no flush reaches. Off (or warming up),
+        // the cap is the identity and the flush is bit-for-bit the
+        // static pipeline's.
+        let rung_cap = if self.policy.enabled_for(spec) {
+            self.policy.rung_target(spec, self.config.batch_kernel_max, self.clock.now())
+        } else {
+            usize::MAX
+        };
+        let executed =
+            container.execute_batch_capped(&self.governor, &self.clock, &seeds, rung_cap);
         let (predictions, effective, kernels) = match executed {
             Ok(v) => v,
             Err(e) => {
@@ -737,6 +832,7 @@ impl Invoker {
             top1: share.prediction.top1,
         };
         self.metrics.record(record.clone());
+        self.note_policy_record(spec, &record);
         self.release_or_retire(container, function);
         Ok(InvokeOutcome { record, prediction: share.prediction })
     }
@@ -784,6 +880,7 @@ impl Invoker {
             top1: share.prediction.top1,
         };
         self.metrics.record(record.clone());
+        self.note_policy_record(spec, &record);
         Ok(InvokeOutcome { record, prediction: share.prediction })
     }
 
@@ -925,7 +1022,15 @@ impl Invoker {
         };
 
         let batch: Vec<u64> = admitted.iter().map(|&(_, s)| s).collect();
-        let executed = container.execute_batch(&self.governor, &self.clock, &batch);
+        // Same adaptive rung cap as the interactive leader path: a
+        // pre-formed batch is a flush like any other.
+        let rung_cap = if self.policy.enabled_for(&spec) {
+            self.policy.rung_target(&spec, self.config.batch_kernel_max, self.clock.now())
+        } else {
+            usize::MAX
+        };
+        let executed =
+            container.execute_batch_capped(&self.governor, &self.clock, &batch, rung_cap);
         let (predictions, effective, kernels) = match executed {
             Ok(v) => v,
             Err(e) => {
@@ -984,6 +1089,7 @@ impl Invoker {
                 top1: prediction.top1,
             };
             self.metrics.record(record.clone());
+            self.note_policy_record(&spec, &record);
             results[slot] = Some(Ok(InvokeOutcome { record, prediction }));
         }
         if retire {
@@ -1014,7 +1120,24 @@ impl Invoker {
         let evicted = self.pool.evict_expired();
         let mut replenished = 0;
         for spec in self.registry.list() {
-            replenished += self.prewarm_up_to(&spec, spec.min_warm);
+            let mut target = spec.min_warm;
+            // Predictive pre-provisioning: with the controllers on,
+            // the Holt forecast can raise (never lower) the top-up
+            // target ahead of a burst. A shape with a checkpoint on
+            // hand claims half as many warm containers — a restore
+            // absorbs overflow at a fraction of the cold cost, so
+            // keep-warm capacity is split with snapshot-restore.
+            if self.policy.enabled_for(&spec) {
+                let mut forecast = self.policy.warm_target(&spec, self.clock.now());
+                if forecast > 0
+                    && self.snapshots.enabled_for(&spec)
+                    && self.snapshots.capture_cost(&SnapshotKey::of(&spec)).is_some()
+                {
+                    forecast = forecast.div_ceil(2);
+                }
+                target = target.max(forecast);
+            }
+            replenished += self.prewarm_up_to(&spec, target);
         }
         MaintenanceReport { evicted, replenished }
     }
@@ -1956,5 +2079,271 @@ mod tests {
         for r in &outs[..2] {
             assert_eq!(r.as_ref().unwrap().record.batch_size, 2, "admitted pair rode one pass");
         }
+    }
+
+    // ---- adaptive controllers (policy.enabled / per-function `adaptive`) ----
+
+    /// With everything at defaults the policy layer is inert: no
+    /// controller state is even created (the hot path takes no policy
+    /// lock), and the pipeline is the fixed one bit-for-bit.
+    #[test]
+    fn adaptive_off_by_default_creates_no_policy_state() {
+        let (p, _, _) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        for i in 0..5 {
+            p.invoke("sq", i).unwrap();
+        }
+        assert!(p.policy.snapshot_view("sq").is_none(), "no arrivals/records streamed");
+        assert_eq!(p.policy.platform_view().policy_adjustments, 0);
+    }
+
+    /// End-to-end window shrink on virtual time: lone leaders pay the
+    /// static 50 ms window, which blows a 100 ms SLO's batch-wait
+    /// budget (25 ms) — the controller halves the window each flush
+    /// until the tail fits, and the shorter window is visible in the
+    /// records themselves.
+    #[test]
+    fn adaptive_window_shrinks_to_defend_the_slo() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            max_batch_size: 8,
+            batch_window_ms: 50,
+            policy: crate::configparse::PolicyConfig { enabled: true, ..Default::default() },
+            ..Default::default()
+        };
+        let p = Invoker::new(cfg, engine, clock.clone());
+        p.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            1024,
+            FunctionPolicy { slo_target_ms: Some(100), ..Default::default() },
+        )
+        .unwrap();
+        let first = p.invoke("sq", 0).unwrap().record;
+        assert!(first.batch_wait >= Duration::from_millis(50), "first leader pays the knob");
+        let mut waits = Vec::new();
+        for i in 1..=8 {
+            waits.push(p.invoke("sq", i).unwrap().record.batch_wait);
+        }
+        assert!(
+            waits.last().unwrap() < &Duration::from_millis(50),
+            "window shrank within a few flushes: {waits:?}"
+        );
+        let v = p.policy.snapshot_view("sq").unwrap();
+        assert!(v.policy_adjustments > 0, "adjustments counted");
+        assert!(v.effective_batch_window_ms < 50, "read-back shows the shrunken window");
+        // The same trace with the controller off pays the full static
+        // window every single time.
+        let engine2 = Arc::new(MockEngine::paper_zoo());
+        let clock2 = ManualClock::new();
+        let cfg2 = PlatformConfig { max_batch_size: 8, batch_window_ms: 50, ..Default::default() };
+        let p2 = Invoker::new(cfg2, engine2, clock2);
+        p2.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        for i in 0..=8 {
+            let r = p2.invoke("sq", i).unwrap().record;
+            assert!(r.batch_wait >= Duration::from_millis(50), "static window never adapts");
+        }
+    }
+
+    /// The rung controller stops a rare jumbo flush from compiling the
+    /// ladder's top rung once the recent flush-size p99 says typical
+    /// flushes are pairs: the jumbo flush runs through capped (batch-2)
+    /// kernels. Fixed mode compiles batch-8 for the same trace.
+    #[test]
+    fn adaptive_rung_cap_follows_observed_flush_sizes() {
+        let run = |adaptive: bool| {
+            let engine = Arc::new(MockEngine::paper_zoo());
+            engine.set_batch_kernel_max(8);
+            let clock = ManualClock::new();
+            let cfg = PlatformConfig {
+                max_batch_size: 8,
+                batch_kernel_max: 8,
+                policy: crate::configparse::PolicyConfig {
+                    enabled: adaptive,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let p = Invoker::new(cfg, engine, clock);
+            p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+            // Typical traffic: pair flushes (rung 2 is all demand needs).
+            for i in 0..10u64 {
+                for r in p.invoke_preformed("sq", &[i * 2, i * 2 + 1]) {
+                    r.unwrap();
+                }
+            }
+            // One jumbo flush.
+            let outs = p.invoke_preformed("sq", &[100, 101, 102, 103, 104, 105, 106, 107]);
+            outs.into_iter().map(|r| r.unwrap().record.kernel_batch_n).max().unwrap()
+        };
+        assert_eq!(run(false), 8, "fixed mode chases the full ladder");
+        assert_eq!(run(true), 2, "adaptive mode serves the jumbo flush through learned rungs");
+    }
+
+    /// Predictive pre-provisioning: after sustained traffic, one
+    /// maintenance tick tops the pool up to the forecast, so a burst
+    /// arriving on cold ground pays strictly fewer cold starts than
+    /// fixed mode (whose `min_warm = 0` tick provisions nothing).
+    #[test]
+    fn forecast_top_up_cuts_burst_cold_starts() {
+        let run = |adaptive: bool| {
+            let engine = Arc::new(MockEngine::paper_zoo());
+            let clock = ManualClock::new();
+            let cfg = PlatformConfig {
+                policy: crate::configparse::PolicyConfig {
+                    enabled: adaptive,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let p = Arc::new(Invoker::new(cfg, engine, clock.clone()));
+            p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+            // Sustained traffic builds the arrival-rate forecast.
+            for i in 0..60u64 {
+                p.invoke("sq", i).unwrap();
+                clock.sleep(Duration::from_millis(20));
+            }
+            // The pool goes cold (scale-to-zero moment)...
+            p.evict_all();
+            // ...then the maintainer ticks BEFORE the burst lands.
+            p.maintain();
+            let warm_ahead = p.pool.warm_count("sq");
+            let cold_before = p.scaler.cold_provision_count();
+            // Burst: 4 simultaneous requests on real threads.
+            let burst: Vec<_> = (0..4u64)
+                .map(|i| {
+                    let p = p.clone();
+                    std::thread::spawn(move || p.invoke("sq", 200 + i).unwrap())
+                })
+                .collect();
+            for t in burst {
+                t.join().unwrap();
+            }
+            (warm_ahead, p.scaler.cold_provision_count() - cold_before)
+        };
+        let (warm_fixed, cold_fixed) = run(false);
+        let (warm_adaptive, cold_adaptive) = run(true);
+        assert_eq!(warm_fixed, 0, "min_warm 0: fixed tick provisions nothing");
+        assert!(cold_fixed >= 1, "the fixed burst opens on cold ground");
+        assert!(warm_adaptive >= 4, "forecast topped the pool up ahead of the burst");
+        assert_eq!(cold_adaptive, 0, "the adaptive burst lands on warm containers");
+        assert!(cold_adaptive < cold_fixed, "strictly fewer burst cold starts");
+    }
+
+    /// Deploy-time eager capture: with the controllers and the
+    /// snapshot store on, deploying a `min_warm = 0` function captures
+    /// its shape's checkpoint immediately (and releases the probe
+    /// container — this function chose restore-over-keep-warm), so
+    /// the FIRST demand cold start already restores.
+    #[test]
+    fn eager_capture_on_deploy_makes_first_provision_restored() {
+        use crate::configparse::{CapturePolicy, SnapshotConfig};
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            policy: crate::configparse::PolicyConfig { enabled: true, ..Default::default() },
+            snapshot: SnapshotConfig {
+                enabled: true,
+                capture_policy: CapturePolicy::Sync,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let p = Invoker::new(cfg, engine, clock);
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        assert_eq!(p.snapshots.captures(), 1, "checkpoint captured at deploy time");
+        assert_eq!(p.pool.warm_count("sq"), 0, "min_warm 0: probe container released");
+        let r = p.invoke("sq", 1).unwrap().record;
+        assert_eq!(r.start, StartKind::Restored, "first demand provision restores");
+        assert_eq!(p.scaler.cold_provision_count(), 0);
+    }
+
+    /// A `min_warm > 0` function keeps its eager-capture probe as warm
+    /// capacity instead of evicting it (keep-warm stays primary when
+    /// the operator already pays for it).
+    #[test]
+    fn eager_capture_keeps_probe_when_min_warm_positive() {
+        use crate::configparse::{CapturePolicy, SnapshotConfig};
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            policy: crate::configparse::PolicyConfig { enabled: true, ..Default::default() },
+            snapshot: SnapshotConfig {
+                enabled: true,
+                capture_policy: CapturePolicy::Sync,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let p = Invoker::new(cfg, engine, clock);
+        p.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            1024,
+            FunctionPolicy { min_warm: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(p.snapshots.captures(), 1);
+        assert_eq!(p.pool.warm_count("sq"), 1, "probe doubles as the min_warm container");
+    }
+
+    /// Reconfigure round-trips the new tri-state policy fields: set,
+    /// keep (absent), clear (explicit null).
+    #[test]
+    fn reconfigure_patches_slo_and_adaptive_tri_state() {
+        let (p, _, _) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        let patched = p
+            .reconfigure(
+                "sq",
+                &ReconfigurePatch {
+                    slo_target_ms: Some(Some(750)),
+                    adaptive: Some(Some(true)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(patched.slo_target_ms, Some(750));
+        assert_eq!(patched.adaptive, Some(true));
+        // Absent fields keep the current values.
+        let kept =
+            p.reconfigure("sq", &ReconfigurePatch { min_warm: Some(0), ..Default::default() })
+                .unwrap();
+        assert_eq!(kept.slo_target_ms, Some(750));
+        assert_eq!(kept.adaptive, Some(true));
+        // Explicit null clears back to the platform defaults.
+        let cleared = p
+            .reconfigure(
+                "sq",
+                &ReconfigurePatch {
+                    slo_target_ms: Some(None),
+                    adaptive: Some(None),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(cleared.slo_target_ms, None);
+        assert_eq!(cleared.adaptive, None);
+    }
+
+    /// Undeploy drops the function's controller shard along with its
+    /// metrics shard.
+    #[test]
+    fn undeploy_drops_policy_state() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            policy: crate::configparse::PolicyConfig { enabled: true, ..Default::default() },
+            ..Default::default()
+        };
+        let p = Invoker::new(cfg, engine, clock);
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        assert!(p.policy.snapshot_view("sq").is_some());
+        p.undeploy("sq").unwrap();
+        assert!(p.policy.snapshot_view("sq").is_none());
     }
 }

@@ -8,6 +8,7 @@ pub mod dispatcher;
 pub mod invoker;
 pub mod maintainer;
 pub mod metrics;
+pub mod policy;
 pub mod pool;
 pub mod registry;
 pub mod scaler;
@@ -22,6 +23,7 @@ pub use dispatcher::{Dispatcher, QueueTicket};
 pub use invoker::{InvokeError, InvokeOutcome, Invoker, Platform, ReconfigurePatch, SaturationKind};
 pub use maintainer::{MaintenanceReport, PoolMaintainer};
 pub use metrics::{FnMetrics, InvocationRecord, MetricsSink, StartKind};
+pub use policy::{PolicyEngine, PolicySnapshot, BATCH_WAIT_SLO_FRACTION};
 pub use pool::{AcquireOutcome, WarmPool};
 pub use registry::{FunctionPolicy, FunctionRegistry, FunctionSpec};
 pub use scaler::Scaler;

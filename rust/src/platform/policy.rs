@@ -1,0 +1,572 @@
+//! Adaptive hot-path controllers: SLO-driven batch windows,
+//! kernel-rung selection, and predictive pre-provisioning.
+//!
+//! The static knobs (`batch_window_ms`, `batch_kernel_max`,
+//! `min_warm`) force one operating point onto traffic that shifts by
+//! the minute. This module closes the loop: telemetry that already
+//! streams through [`crate::platform::metrics::FnMetrics`] feeds a
+//! per-function [`PolicyEngine`] shard, and three controllers read it
+//! back out on the hot path:
+//!
+//! - **Adaptive batch window.** Grow the leader's hold-open window
+//!   toward `policy.window_cap_ms` while the dispatcher queue is
+//!   non-empty and the arrival-rate forecast says followers will show
+//!   up; halve it the moment the recent `batch_wait` p99 eats more
+//!   than [`BATCH_WAIT_SLO_FRACTION`] of the function's SLO budget.
+//!   Classic AIMD: additive increase chases throughput, multiplicative
+//!   decrease defends the tail.
+//! - **Adaptive kernel-rung selection.** Shards compile one batch-N
+//!   executable per power-of-two rung up to `batch_kernel_max` —
+//!   whether or not any flush ever fills the top rungs. The controller
+//!   watches the recent flush-size distribution and caps the ladder at
+//!   `next_power_of_two(p99)`, so a function whose flushes top out at
+//!   3 stops paying compile time and executable cache for batch-8.
+//! - **Predictive pre-provisioning.** A Holt (level + trend) forecast
+//!   of the arrival rate projects demand one `forecast_horizon_s`
+//!   ahead; the maintainer tops the warm pool up to the forecast
+//!   before the burst lands instead of eating cold starts during it.
+//!
+//! Controllers default **off** (`policy.enabled = false`, per-function
+//! `adaptive` override): with everything off, every read-back returns
+//! the static value and the fixed pipeline is preserved bit-for-bit.
+//!
+//! Lock discipline: `state` is rank `policy.state` in
+//! `PLATFORM_LOCK_ORDER`, ordered after `snapshots.inner` and before
+//! the metrics locks. Every acquisition in this module is standalone —
+//! callers feed the engine *after* releasing their own locks (arrival
+//! after admission returns, record after `FnMetrics::record` returns),
+//! never from inside a metrics shard section.
+
+use crate::configparse::PolicyConfig;
+use crate::platform::metrics::InvocationRecord;
+use crate::platform::registry::FunctionSpec;
+use crate::stats::WindowedHistogram;
+use crate::util::{plock, Nanos};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Share of the end-to-end SLO the batch-wait tail is allowed to
+/// consume before the window controller backs off. Queueing, cold
+/// starts, and the forward pass need the rest of the budget; a window
+/// that alone burns a quarter of the SLO is already too greedy.
+pub const BATCH_WAIT_SLO_FRACTION: f64 = 0.25;
+
+/// Flush-size samples required inside the decay window before the rung
+/// controller trusts the p99; below this it falls back to the static
+/// ladder so a cold function is never under-provisioned on rungs.
+const MIN_RUNG_SAMPLES: u64 = 4;
+
+/// Ring slots in each decaying histogram (smoothness of expiry vs one
+/// 64 KiB bucket vector per slot).
+const WINDOW_SLICES: usize = 8;
+
+/// Per-function controller state. One entry per function, created
+/// lazily on first arrival/record and dropped on undeploy.
+struct FnState {
+    /// Previous arrival timestamp; `None` until the first request.
+    last_arrival: Option<Nanos>,
+    /// Holt level: smoothed arrival rate, requests/second.
+    rate: f64,
+    /// Holt trend: change of `rate` per second; projects bursts while
+    /// they are still ramping.
+    trend: f64,
+    /// Recent batch-collector waits (ns), batching path only —
+    /// mirrors the `FnMetrics` gate so solo traffic cannot dilute the
+    /// tail the controller defends.
+    batch_wait: WindowedHistogram,
+    /// Recent flush sizes (requests per batched pass). Demand, not
+    /// service: fed from `batch_size` rather than the served
+    /// `kernel_batch_n`, so a capped ladder can still observe demand
+    /// above the cap and grow back.
+    flush_n: WindowedHistogram,
+    /// Current controller-owned window; `None` until the first
+    /// `effective_window` call seeds it from the static base.
+    window_ms: Option<u64>,
+    /// Times any controller changed its output for this function.
+    adjustments: u64,
+}
+
+/// Read-only view of one function's controller state, surfaced through
+/// the stats API.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PolicySnapshot {
+    /// Smoothed arrival rate, requests/second (Holt level).
+    pub arrival_rate_ewma: f64,
+    /// The batch window the controller is currently handing to
+    /// leaders, ms (the static base until the first adjustment).
+    pub effective_batch_window_ms: u64,
+    /// Cumulative controller output changes.
+    pub policy_adjustments: u64,
+}
+
+/// The per-function controller layer. One instance per platform,
+/// shared by the invoker hot path, the maintainer, and the stats API.
+pub struct PolicyEngine {
+    config: PolicyConfig,
+    /// Per-function controller shards. Rank `policy.state` in
+    /// `PLATFORM_LOCK_ORDER`: acquired standalone only — never while
+    /// holding a metrics lock.
+    state: Mutex<BTreeMap<String, FnState>>,
+}
+
+impl PolicyEngine {
+    pub fn new(config: PolicyConfig) -> Self {
+        Self { config, state: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn config(&self) -> &PolicyConfig {
+        &self.config
+    }
+
+    /// Whether the controllers steer this function: the per-function
+    /// `adaptive` override wins, else the platform default.
+    pub fn enabled_for(&self, spec: &FunctionSpec) -> bool {
+        spec.adaptive.unwrap_or(self.config.enabled)
+    }
+
+    /// The latency target the window controller defends, ms.
+    pub fn slo_target_ms(&self, spec: &FunctionSpec) -> u64 {
+        spec.slo_target_ms.unwrap_or(self.config.slo_target_ms)
+    }
+
+    fn fresh_state(&self) -> FnState {
+        let window = Duration::from_secs_f64(self.config.decay_window_s);
+        FnState {
+            last_arrival: None,
+            rate: 0.0,
+            trend: 0.0,
+            batch_wait: WindowedHistogram::new(window, WINDOW_SLICES),
+            flush_n: WindowedHistogram::new(window, WINDOW_SLICES),
+            window_ms: None,
+            adjustments: 0,
+        }
+    }
+
+    /// Feed one admission into the Holt arrival forecast. Called once
+    /// per request, after admission bookkeeping has released its own
+    /// locks.
+    pub fn on_arrival(&self, function: &str, now: Nanos) {
+        let mut g = plock(&self.state);
+        let st = match g.get_mut(function) {
+            Some(st) => st,
+            None => {
+                g.insert(function.to_string(), self.fresh_state());
+                g.get_mut(function).expect("just inserted")
+            }
+        };
+        if let Some(prev) = st.last_arrival {
+            // Holt's linear method on the instantaneous rate: the
+            // level damps inter-arrival jitter, the trend projects a
+            // ramp so the forecast leads a burst instead of trailing
+            // it. dt clamps to 1 ns (same virtual-clock tick).
+            let dt_s = now.saturating_sub(prev).max(1) as f64 / 1e9;
+            let inst = 1.0 / dt_s;
+            let a = self.config.ewma_alpha;
+            let b = self.config.holt_beta;
+            let prev_level = st.rate;
+            let level = a * inst + (1.0 - a) * (st.rate + st.trend * dt_s);
+            st.trend = b * ((level - prev_level) / dt_s) + (1.0 - b) * st.trend;
+            st.rate = level;
+        }
+        st.last_arrival = Some(now);
+    }
+
+    /// Feed one finished invocation's telemetry into the decaying
+    /// histograms. Called after `FnMetrics::record` returns (the
+    /// metrics locks are released by then).
+    pub fn on_record(&self, r: &InvocationRecord, now: Nanos) {
+        let mut g = plock(&self.state);
+        let st = match g.get_mut(&r.function) {
+            Some(st) => st,
+            None => {
+                g.insert(r.function.clone(), self.fresh_state());
+                g.get_mut(&r.function).expect("just inserted")
+            }
+        };
+        // Same gate as FnMetrics::apply: only traffic that rode the
+        // batcher describes the batching path.
+        if r.batch_size > 1 || r.batch_wait > Duration::ZERO {
+            st.batch_wait.record(now, r.batch_wait.as_nanos() as u64);
+            st.flush_n.record(now, r.batch_size.max(1) as u64);
+        }
+    }
+
+    /// The batch window a leader should hold open right now. `base` is
+    /// the static per-function/platform window; with the controller
+    /// off it is returned untouched (bit-for-bit fixed pipeline).
+    ///
+    /// AIMD: halve when the recent batch-wait p99 exceeds
+    /// [`BATCH_WAIT_SLO_FRACTION`] of the SLO budget; otherwise grow
+    /// by a quarter (at least 1 ms) toward the cap while the queue is
+    /// backed up and the forecast expects at least one follower within
+    /// a cap-sized window.
+    pub fn effective_window(
+        &self,
+        spec: &FunctionSpec,
+        base: Duration,
+        queue_depth: usize,
+        now: Nanos,
+    ) -> Duration {
+        if !self.enabled_for(spec) {
+            return base;
+        }
+        let base_ms = base.as_millis() as u64;
+        // Never cap below the operator's static setting: an explicit
+        // large window is a floor on ambition, not an error.
+        let cap_ms = self.config.window_cap_ms.max(base_ms);
+        let mut g = plock(&self.state);
+        let st = match g.get_mut(spec.name.as_str()) {
+            Some(st) => st,
+            None => {
+                g.insert(spec.name.clone(), self.fresh_state());
+                g.get_mut(spec.name.as_str()).expect("just inserted")
+            }
+        };
+        let cur = st.window_ms.unwrap_or(base_ms);
+        let budget_ns =
+            (self.slo_target_ms(spec) as f64 * 1e6 * BATCH_WAIT_SLO_FRACTION) as u64;
+        let wait = st.batch_wait.merged(now);
+        let next = if wait.count() > 0 && wait.p99() > budget_ns {
+            // Multiplicative decrease: the window is eating the SLO.
+            cur / 2
+        } else if queue_depth > 0 && st.rate * (cap_ms as f64 / 1e3) >= 1.0 {
+            // Additive-ish increase: demand is queued and the forecast
+            // says a cap-sized window would catch a follower.
+            (cur + (cur / 4).max(1)).min(cap_ms)
+        } else {
+            cur
+        };
+        if next != cur {
+            st.adjustments += 1;
+        }
+        st.window_ms = Some(next);
+        Duration::from_millis(next)
+    }
+
+    /// The batch-kernel rung ladder this function's flushes should
+    /// target: `next_power_of_two(recent flush-size p99)`, clamped to
+    /// the engine ladder. Falls back to `ladder_max` with the
+    /// controller off or fewer than [`MIN_RUNG_SAMPLES`] recent
+    /// flushes.
+    pub fn rung_target(&self, spec: &FunctionSpec, ladder_max: usize, now: Nanos) -> usize {
+        if !self.enabled_for(spec) || ladder_max <= 1 {
+            return ladder_max;
+        }
+        let g = plock(&self.state);
+        let Some(st) = g.get(spec.name.as_str()) else {
+            return ladder_max;
+        };
+        let h = st.flush_n.merged(now);
+        if h.count() < MIN_RUNG_SAMPLES {
+            return ladder_max;
+        }
+        (h.p99().max(1) as usize).next_power_of_two().min(ladder_max)
+    }
+
+    /// Warm containers the forecast wants standing by: the Holt rate
+    /// projected one horizon ahead, integrated over the horizon,
+    /// decayed by idle time so a function that went quiet releases its
+    /// claim. Capped at `policy.max_prewarm`; returns 0 with the
+    /// controller off (the maintainer then sees only `min_warm`).
+    pub fn warm_target(&self, spec: &FunctionSpec, now: Nanos) -> usize {
+        if !self.enabled_for(spec) {
+            return 0;
+        }
+        let g = plock(&self.state);
+        let Some(st) = g.get(spec.name.as_str()) else {
+            return 0;
+        };
+        let Some(last) = st.last_arrival else {
+            return 0;
+        };
+        let horizon = self.config.forecast_horizon_s;
+        let idle_s = now.saturating_sub(last) as f64 / 1e9;
+        let decay = (-idle_s / self.config.decay_window_s).exp();
+        let forecast = (st.rate + st.trend * horizon).max(0.0) * decay;
+        let target = (forecast * horizon).round() as usize;
+        target.min(self.config.max_prewarm)
+    }
+
+    /// One function's controller view for the stats API; `None` if the
+    /// function has no recorded traffic yet.
+    pub fn snapshot_view(&self, function: &str) -> Option<PolicySnapshot> {
+        let g = plock(&self.state);
+        g.get(function).map(|st| PolicySnapshot {
+            arrival_rate_ewma: st.rate,
+            effective_batch_window_ms: st.window_ms.unwrap_or(0),
+            policy_adjustments: st.adjustments,
+        })
+    }
+
+    /// Platform-wide aggregate: summed arrival rate and adjustment
+    /// count, max effective window (the most aggressive shard).
+    pub fn platform_view(&self) -> PolicySnapshot {
+        let g = plock(&self.state);
+        let mut out = PolicySnapshot {
+            arrival_rate_ewma: 0.0,
+            effective_batch_window_ms: 0,
+            policy_adjustments: 0,
+        };
+        for st in g.values() {
+            out.arrival_rate_ewma += st.rate;
+            out.effective_batch_window_ms =
+                out.effective_batch_window_ms.max(st.window_ms.unwrap_or(0));
+            out.policy_adjustments += st.adjustments;
+        }
+        out
+    }
+
+    /// Drop a function's controller state (undeploy).
+    pub fn remove_function(&self, function: &str) {
+        plock(&self.state).remove(function);
+    }
+}
+
+impl std::fmt::Debug for PolicyEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = plock(&self.state);
+        write!(f, "PolicyEngine(enabled={}, functions={})", self.config.enabled, g.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::metrics::StartKind;
+    use crate::platform::registry::{FunctionPolicy, FunctionRegistry};
+    use crate::runtime::MockEngine;
+    use std::sync::Arc;
+
+    const MS: Nanos = 1_000_000;
+    const S: Nanos = 1_000_000_000;
+
+    fn spec(policy: FunctionPolicy) -> Arc<FunctionSpec> {
+        let reg = FunctionRegistry::new(Arc::new(MockEngine::paper_zoo()));
+        reg.deploy_full("sq", "squeezenet", "pallas", 512, policy).unwrap()
+    }
+
+    fn adaptive_spec() -> Arc<FunctionSpec> {
+        spec(FunctionPolicy { adaptive: Some(true), ..Default::default() })
+    }
+
+    fn engine() -> PolicyEngine {
+        PolicyEngine::new(PolicyConfig::default())
+    }
+
+    fn record(batch_size: usize, batch_wait_ms: u64) -> InvocationRecord {
+        let mut r = crate::platform::metrics::test_record("sq", 512, StartKind::Warm, 10);
+        r.batch_size = batch_size;
+        r.batch_wait = Duration::from_millis(batch_wait_ms);
+        r
+    }
+
+    #[test]
+    fn disabled_is_the_identity() {
+        let p = engine();
+        let s = spec(FunctionPolicy::default());
+        assert!(!p.enabled_for(&s), "policy.enabled defaults off");
+        for i in 0..50u64 {
+            p.on_arrival("sq", i * MS);
+            p.on_record(&record(4, 90), i * MS);
+        }
+        let base = Duration::from_millis(7);
+        assert_eq!(p.effective_window(&s, base, 10, 60 * MS), base, "window untouched");
+        assert_eq!(p.rung_target(&s, 8, 60 * MS), 8, "ladder untouched");
+        assert_eq!(p.warm_target(&s, 60 * MS), 0, "no forecast top-up");
+        let v = p.snapshot_view("sq").unwrap();
+        assert_eq!(v.policy_adjustments, 0);
+    }
+
+    #[test]
+    fn per_function_override_beats_platform_default() {
+        let mut cfg = PolicyConfig::default();
+        cfg.enabled = true;
+        let p = PolicyEngine::new(cfg);
+        let forced_off = spec(FunctionPolicy { adaptive: Some(false), ..Default::default() });
+        assert!(!p.enabled_for(&forced_off));
+        assert!(p.enabled_for(&spec(FunctionPolicy::default())), "platform default on");
+        let p2 = engine();
+        assert!(p2.enabled_for(&adaptive_spec()), "forced on over default-off");
+    }
+
+    #[test]
+    fn slo_target_prefers_the_spec_override() {
+        let p = engine();
+        assert_eq!(p.slo_target_ms(&spec(FunctionPolicy::default())), 1_000);
+        let s = spec(FunctionPolicy { slo_target_ms: Some(250), ..Default::default() });
+        assert_eq!(p.slo_target_ms(&s), 250);
+    }
+
+    #[test]
+    fn window_grows_under_sustained_queue_depth() {
+        let p = engine();
+        let s = adaptive_spec();
+        // 1 kHz arrivals: rate ~1000/s, far above 1 follower per
+        // 100 ms cap window.
+        for i in 0..200u64 {
+            p.on_arrival("sq", i * MS);
+        }
+        let base = Duration::from_millis(4);
+        let mut last = base;
+        for i in 0..40u64 {
+            last = p.effective_window(&s, base, 3, (200 + i) * MS);
+        }
+        assert_eq!(last, Duration::from_millis(100), "grew to the cap");
+        let v = p.snapshot_view("sq").unwrap();
+        assert!(v.policy_adjustments > 0);
+        assert!(v.arrival_rate_ewma > 500.0, "rate ewma tracked, got {}", v.arrival_rate_ewma);
+    }
+
+    #[test]
+    fn window_does_not_grow_without_queue_depth_or_rate() {
+        let p = engine();
+        let s = adaptive_spec();
+        for i in 0..200u64 {
+            p.on_arrival("sq", i * MS);
+        }
+        let base = Duration::from_millis(4);
+        // Queue empty: no growth even at high rate.
+        assert_eq!(p.effective_window(&s, base, 0, 300 * MS), base);
+        // Queue backed up but trickle traffic (one arrival per 10 s,
+        // rate ~0.1/s): a 100 ms cap window cannot catch a follower,
+        // so the window holds at base.
+        let p2 = engine();
+        for i in 0..5u64 {
+            p2.on_arrival("sq", i * 10 * S);
+        }
+        assert_eq!(p2.effective_window(&s, base, 5, 50 * S), base);
+        assert_eq!(p2.snapshot_view("sq").unwrap().policy_adjustments, 0);
+    }
+
+    #[test]
+    fn window_shrinks_when_batch_wait_eats_the_slo() {
+        let p = engine();
+        let s = adaptive_spec();
+        for i in 0..200u64 {
+            p.on_arrival("sq", i * MS);
+        }
+        let base = Duration::from_millis(4);
+        let mut w = base;
+        for i in 0..40u64 {
+            w = p.effective_window(&s, base, 3, (200 + i) * MS);
+        }
+        assert_eq!(w, Duration::from_millis(100));
+        // Default SLO 1000 ms, budget 250 ms: 300 ms waits breach it.
+        let t0 = 300 * MS;
+        for i in 0..20u64 {
+            p.on_record(&record(4, 300), t0 + i * MS);
+        }
+        let shrunk = p.effective_window(&s, base, 3, t0 + 21 * MS);
+        assert_eq!(shrunk, Duration::from_millis(50), "halved within one tick");
+        let mut w = shrunk;
+        for i in 0..12u64 {
+            w = p.effective_window(&s, base, 3, t0 + (22 + i) * MS);
+        }
+        assert_eq!(w, Duration::ZERO, "repeated breach collapses the window");
+    }
+
+    #[test]
+    fn window_recovers_after_the_breach_ages_out() {
+        let p = engine();
+        let s = adaptive_spec();
+        for i in 0..200u64 {
+            p.on_arrival("sq", i * MS);
+        }
+        let base = Duration::from_millis(4);
+        for i in 0..5u64 {
+            p.on_record(&record(2, 400), (200 + i) * MS);
+        }
+        let w = p.effective_window(&s, base, 3, 210 * MS);
+        assert!(w < base, "shrank on breach");
+        // 10 minutes later the decaying window has dropped the breach
+        // samples; growth resumes (rate EWMA is stale but the Holt
+        // state persists, so re-arrivals restore it).
+        let later = 600 * S;
+        for i in 0..200u64 {
+            p.on_arrival("sq", later + i * MS);
+        }
+        let mut w2 = w;
+        for i in 0..40u64 {
+            w2 = p.effective_window(&s, base, 3, later + (200 + i) * MS);
+        }
+        assert_eq!(w2, Duration::from_millis(100), "reclimbed to the cap");
+    }
+
+    #[test]
+    fn rung_target_tracks_observed_flush_sizes() {
+        let p = engine();
+        let s = adaptive_spec();
+        // Below the sample floor: static ladder.
+        p.on_record(&record(2, 1), 0);
+        assert_eq!(p.rung_target(&s, 8, MS), 8, "too few samples, fall back");
+        for i in 0..50u64 {
+            p.on_record(&record(3, 1), i * MS);
+        }
+        assert_eq!(p.rung_target(&s, 8, 60 * MS), 4, "p99=3 rounds up to rung 4");
+        assert_eq!(p.rung_target(&s, 2, 60 * MS), 2, "never above the engine ladder");
+        // Demand grows: the target follows (records carry demand, not
+        // the capped served rung, so there is no feedback trap).
+        let t1 = 60 * MS;
+        for i in 0..300u64 {
+            p.on_record(&record(8, 1), t1 + i * MS);
+        }
+        assert_eq!(p.rung_target(&s, 8, t1 + 301 * MS), 8);
+        // Ladder 1 short-circuits (no batch kernels at all).
+        assert_eq!(p.rung_target(&s, 1, t1 + 301 * MS), 1);
+    }
+
+    #[test]
+    fn warm_target_forecasts_bursts_and_decays_when_idle() {
+        let p = engine();
+        let s = adaptive_spec();
+        assert_eq!(p.warm_target(&s, 0), 0, "no state, no claim");
+        // Steady 10 rps: forecast 10/s * 2 s horizon = 20, capped at 8.
+        for i in 0..100u64 {
+            p.on_arrival("sq", i * 100 * MS);
+        }
+        let now = 100 * 100 * MS;
+        assert_eq!(p.warm_target(&s, now), 8, "burst claim capped at max_prewarm");
+        // Five minutes idle: exp(-300/60) decays the claim to zero.
+        assert_eq!(p.warm_target(&s, now + 300 * S), 0, "idle function releases its claim");
+    }
+
+    #[test]
+    fn trend_leads_a_ramp() {
+        let p = engine();
+        // Inter-arrival gap shrinking 100 ms -> ~9 ms over 90
+        // arrivals: the Holt trend should be positive, projecting the
+        // ramp onward.
+        let mut t = 0u64;
+        for i in 0..90u64 {
+            t += (100 - i) * MS;
+            p.on_arrival("sq", t);
+        }
+        let g = plock(&p.state);
+        let st = g.get("sq").unwrap();
+        assert!(st.trend > 0.0, "ramp detected, trend={}", st.trend);
+        assert!(st.rate > 10.0, "level climbing, rate={}", st.rate);
+    }
+
+    #[test]
+    fn remove_function_drops_state() {
+        let p = engine();
+        p.on_arrival("sq", 0);
+        assert!(p.snapshot_view("sq").is_some());
+        p.remove_function("sq");
+        assert!(p.snapshot_view("sq").is_none());
+        assert_eq!(p.platform_view().policy_adjustments, 0);
+    }
+
+    #[test]
+    fn platform_view_aggregates_across_functions() {
+        let p = engine();
+        for i in 1..=100u64 {
+            p.on_arrival("a", i * 10 * MS);
+            p.on_arrival("b", i * 10 * MS + MS);
+        }
+        let v = p.platform_view();
+        assert!(v.arrival_rate_ewma > 150.0, "summed rates, got {}", v.arrival_rate_ewma);
+        assert_eq!(v.policy_adjustments, 0);
+    }
+}

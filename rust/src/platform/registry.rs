@@ -50,6 +50,14 @@ pub struct FunctionSpec {
     /// checkpoint-restore cold path on/off for this function; `None`
     /// falls back to `platform.snapshot.enabled`.
     pub snapshot: Option<bool>,
+    /// End-to-end latency SLO for this function, milliseconds; the
+    /// adaptive batch-window controller defends it. `None` falls back
+    /// to `policy.slo_target_ms`.
+    pub slo_target_ms: Option<u64>,
+    /// Adaptive-controller override: `Some(true/false)` forces the
+    /// policy engine's feedback loops on/off for this function; `None`
+    /// falls back to `policy.enabled`.
+    pub adaptive: Option<bool>,
 }
 
 /// Deploy-time policy knobs (everything beyond the identity tuple
@@ -67,6 +75,8 @@ pub struct FunctionPolicy {
     pub max_batch_size: Option<usize>,
     pub batch_window_ms: Option<u64>,
     pub snapshot: Option<bool>,
+    pub slo_target_ms: Option<u64>,
+    pub adaptive: Option<bool>,
 }
 
 impl FunctionPolicy {
@@ -81,6 +91,8 @@ impl FunctionPolicy {
             max_batch_size: spec.max_batch_size,
             batch_window_ms: spec.batch_window_ms,
             snapshot: spec.snapshot,
+            slo_target_ms: spec.slo_target_ms,
+            adaptive: spec.adaptive,
         }
     }
 }
@@ -217,6 +229,16 @@ impl FunctionRegistry {
                 );
             }
         }
+        if let Some(ms) = policy.slo_target_ms {
+            // A zero SLO budget is unservable; past the ceiling it is
+            // almost certainly a unit mistake, like the deadlines.
+            if ms == 0 || ms > crate::configparse::MAX_QUEUE_DEADLINE_MS {
+                bail!(
+                    "function {name}: slo_target_ms must be in [1, {}] when set (one hour)",
+                    crate::configparse::MAX_QUEUE_DEADLINE_MS
+                );
+            }
+        }
         Ok(Arc::new(FunctionSpec {
             name: name.to_string(),
             model: model.to_string(),
@@ -231,6 +253,8 @@ impl FunctionRegistry {
             max_batch_size: policy.max_batch_size,
             batch_window_ms: policy.batch_window_ms,
             snapshot: policy.snapshot,
+            slo_target_ms: policy.slo_target_ms,
+            adaptive: policy.adaptive,
         }))
     }
 
@@ -336,6 +360,8 @@ mod tests {
                     max_batch_size: Some(4),
                     batch_window_ms: Some(25),
                     snapshot: Some(true),
+                    slo_target_ms: Some(800),
+                    adaptive: Some(true),
                     ..Default::default()
                 },
             )
@@ -345,6 +371,10 @@ mod tests {
         assert_eq!(spec.max_batch_size, Some(4));
         assert_eq!(spec.batch_window_ms, Some(25));
         assert_eq!(spec.snapshot, Some(true));
+        assert_eq!(spec.slo_target_ms, Some(800));
+        assert_eq!(spec.adaptive, Some(true));
+        assert_eq!(FunctionPolicy::of(&spec).slo_target_ms, Some(800));
+        assert_eq!(FunctionPolicy::of(&spec).adaptive, Some(true));
         assert_eq!(FunctionPolicy::of(&spec).max_batch_size, Some(4), "policy round-trips");
         assert_eq!(FunctionPolicy::of(&spec).snapshot, Some(true));
         // Plain deploy defaults.
@@ -364,6 +394,11 @@ mod tests {
         let huge_window =
             FunctionPolicy { batch_window_ms: Some(4_000_000), ..Default::default() };
         assert!(r.deploy_full("sq5", "squeezenet", "pallas", 512, huge_window).is_err());
+        // SLO targets get the same sanity bounds as the deadlines.
+        let zero_slo = FunctionPolicy { slo_target_ms: Some(0), ..Default::default() };
+        assert!(r.deploy_full("sq6", "squeezenet", "pallas", 512, zero_slo).is_err());
+        let huge_slo = FunctionPolicy { slo_target_ms: Some(4_000_000), ..Default::default() };
+        assert!(r.deploy_full("sq7", "squeezenet", "pallas", 512, huge_slo).is_err());
     }
 
     #[test]

@@ -176,6 +176,25 @@ pub trait Engine: Send + Sync {
         Ok((preds, KernelReport { kernel_batch_n: 1, ..Default::default() }))
     }
 
+    /// [`Self::predict_batch_report`] with the kernel ladder capped at
+    /// `rung_cap` for this pass: the engine behaves as if its largest
+    /// compiled batch-N rung were `min(configured ladder, rung_cap)`
+    /// rounded down to a power of two. The adaptive rung controller
+    /// passes the recent flush-size p99 here so shards stop compiling
+    /// (and caching) rungs no flush ever fills; `usize::MAX` (or any
+    /// cap at/above the configured ladder) is the identity. The
+    /// default ignores the cap — correct for engines without a ladder,
+    /// whose report is batch-1 regardless.
+    fn predict_batch_report_capped(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+        rung_cap: usize,
+    ) -> Result<(Vec<Prediction>, KernelReport)> {
+        let _ = rung_cap;
+        self.predict_batch_report(handle, image_seeds)
+    }
+
     /// Serialize a live instance's restorable state (weights plus a
     /// pointer to its compiled executables) into a [`SnapshotBlob`].
     /// The instance stays live and usable; capture is read-only.

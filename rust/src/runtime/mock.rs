@@ -261,8 +261,24 @@ impl Engine for MockEngine {
         handle: &InstanceHandle,
         image_seeds: &[u64],
     ) -> Result<(Vec<Prediction>, KernelReport)> {
+        self.predict_batch_report_capped(handle, image_seeds, usize::MAX)
+    }
+
+    fn predict_batch_report_capped(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+        rung_cap: usize,
+    ) -> Result<(Vec<Prediction>, KernelReport)> {
         let n = image_seeds.len();
-        let ladder_max = self.batch_kernel_max.load(Ordering::SeqCst);
+        // The per-pass cap shrinks the ladder, never grows it: the
+        // configured engine rung stays the hard ceiling, and a cap of
+        // `usize::MAX` (the plain `predict_batch_report` path) is the
+        // identity.
+        let ladder_max = self
+            .batch_kernel_max
+            .load(Ordering::SeqCst)
+            .min(prev_power_of_two(rung_cap.max(1)));
         // Ladder disabled (or nothing to ladder): exactly the
         // pre-ladder batched pass, bit-for-bit — including the
         // singleton's solo jitter.

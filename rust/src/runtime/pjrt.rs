@@ -216,6 +216,33 @@ impl Engine for PjrtEngine {
         reply_rx.recv().map_err(|_| anyhow!("engine shard {} dropped reply", handle.shard))?
     }
 
+    fn predict_batch_report_capped(
+        &self,
+        handle: &InstanceHandle,
+        image_seeds: &[u64],
+        rung_cap: usize,
+    ) -> Result<(Vec<Prediction>, KernelReport)> {
+        // Same one-command-per-flush path as `predict_batch_report`,
+        // with the ladder clamped for this pass: the shard then never
+        // ensures (= compiles and caches) a batch-N executable above
+        // the cap. The configured engine rung stays the ceiling, so
+        // `usize::MAX` is the identity.
+        let ladder_max = self
+            .batch_kernel_max
+            .load(Ordering::SeqCst)
+            .min(prev_power_of_two(rung_cap.max(1)));
+        let (reply_tx, reply_rx) = bounded(1);
+        self.shards[handle.shard]
+            .send(Cmd::PredictBatch {
+                instance: handle.id,
+                image_seeds: image_seeds.to_vec(),
+                ladder_max,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine shard {} is down", handle.shard))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine shard {} dropped reply", handle.shard))?
+    }
+
     fn snapshot_instance(&self, handle: &InstanceHandle) -> Result<SnapshotBlob> {
         let manifest = self.zoo.get(&handle.model)?;
         let (reply_tx, reply_rx) = bounded(1);

@@ -73,6 +73,18 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Reset to empty in place, keeping the bucket allocation (the
+    /// windowed ring recycles slices on rotation; reallocating the
+    /// 64 KiB counts vector per slice expiry would churn the hot
+    /// path).
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.sum = 0.0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;

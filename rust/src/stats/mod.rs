@@ -4,6 +4,8 @@
 
 mod histogram;
 mod summary;
+mod windowed;
 
 pub use histogram::Histogram;
 pub use summary::{mean_ci95, Summary, T_TABLE_975};
+pub use windowed::WindowedHistogram;

@@ -1,0 +1,190 @@
+//! Sliding-window percentiles: a ring of sub-histograms merged on
+//! read.
+//!
+//! The all-time [`Histogram`] is the right tool for end-of-run
+//! reports, but a feedback controller steering on it would chase
+//! traffic from minutes ago: once a tail inflates the all-time p99,
+//! no amount of recovery moves the estimate back down. The
+//! [`WindowedHistogram`] keeps the last `window` of samples by
+//! splitting it into `slices` time buckets; recording rotates the
+//! ring (expired slices are cleared in place, no reallocation) and a
+//! read merges the live slices into one ordinary [`Histogram`], so
+//! every percentile/mean helper works unchanged on the recent view.
+//!
+//! Time is caller-supplied nanoseconds (the platform's virtual
+//! [`crate::util::Clock`] domain) — the type itself never reads a
+//! clock, which keeps it ManualClock-correct and trivially testable.
+
+use super::Histogram;
+use std::time::Duration;
+
+struct Slice {
+    /// Which ring rotation this slice's samples belong to
+    /// (`now / slice_ns`); [`EMPTY_EPOCH`] until first use. A slot
+    /// whose epoch is stale gets cleared before reuse, and a read
+    /// skips slots older than the window.
+    epoch: u64,
+    hist: Histogram,
+}
+
+/// Sentinel for a never-used slice; unreachable as a real epoch (it
+/// would need `now / slice_ns == u64::MAX`).
+const EMPTY_EPOCH: u64 = u64::MAX;
+
+pub struct WindowedHistogram {
+    slices: Vec<Slice>,
+    slice_ns: u64,
+}
+
+impl WindowedHistogram {
+    /// A window of `window` split into `slices` ring slots (clamped to
+    /// at least 1 each). Larger slice counts give smoother expiry at
+    /// the cost of a 64 KiB histogram per slot.
+    pub fn new(window: Duration, slices: usize) -> Self {
+        let slices = slices.max(1);
+        let slice_ns = ((window.as_nanos() as u64) / slices as u64).max(1);
+        Self {
+            slices: (0..slices).map(|_| Slice { epoch: EMPTY_EPOCH, hist: Histogram::new() }).collect(),
+            slice_ns,
+        }
+    }
+
+    fn slot(&self, epoch: u64) -> usize {
+        (epoch % self.slices.len() as u64) as usize
+    }
+
+    /// Record `v` at (virtual) time `now_ns`. Reusing a slot whose
+    /// epoch lies outside the current window clears it first — that is
+    /// the entire expiry mechanism.
+    pub fn record(&mut self, now_ns: u64, v: u64) {
+        let epoch = now_ns / self.slice_ns;
+        let slot = self.slot(epoch);
+        let slice = &mut self.slices[slot];
+        if slice.epoch != epoch {
+            slice.hist.clear();
+            slice.epoch = epoch;
+        }
+        slice.hist.record(v);
+    }
+
+    /// The recent view at `now_ns`: every slice younger than the
+    /// window merged into one [`Histogram`]. Slices the ring has not
+    /// rotated over yet are skipped by their epoch tag, so a read
+    /// never needs to mutate (or lock out) the recorder's ring state.
+    pub fn merged(&self, now_ns: u64) -> Histogram {
+        let epoch = now_ns / self.slice_ns;
+        let oldest = epoch.saturating_sub(self.slices.len() as u64 - 1);
+        let mut out = Histogram::new();
+        for slice in &self.slices {
+            if slice.epoch != EMPTY_EPOCH && slice.epoch >= oldest && slice.epoch <= epoch {
+                out.merge(&slice.hist);
+            }
+        }
+        out
+    }
+
+    /// Samples currently inside the window (merged count).
+    pub fn count(&self, now_ns: u64) -> u64 {
+        self.merged(now_ns).count()
+    }
+}
+
+impl std::fmt::Debug for WindowedHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WindowedHistogram(slices={}, slice_ns={})", self.slices.len(), self.slice_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000;
+
+    fn wh() -> WindowedHistogram {
+        // 8 slices of 1 s each.
+        WindowedHistogram::new(Duration::from_secs(8), 8)
+    }
+
+    #[test]
+    fn within_window_matches_plain_histogram() {
+        let mut w = wh();
+        let mut plain = Histogram::new();
+        let mut r = crate::util::SplitMix64::new(3);
+        for i in 0..1000u64 {
+            let v = r.gen_range(1, 1_000_000);
+            // Spread across 4 s — all inside the 8 s window.
+            w.record(i * 4_000_000, v);
+            plain.record(v);
+        }
+        let m = w.merged(4 * S);
+        assert_eq!(m.count(), plain.count());
+        assert_eq!(m.mean(), plain.mean());
+        assert_eq!(m.p50(), plain.p50());
+        assert_eq!(m.p99(), plain.p99());
+        assert_eq!(m.max(), plain.max());
+    }
+
+    #[test]
+    fn old_samples_age_out() {
+        let mut w = wh();
+        // A latency spike at t=0..1s.
+        for _ in 0..100 {
+            w.record(0, 5_000_000_000);
+        }
+        assert!(w.merged(S).p99() >= 4_900_000_000, "spike visible inside the window");
+        // Healthy traffic 20 s later: the ring has rotated past the
+        // spike's slice, so the recent p99 recovers.
+        for i in 0..100u64 {
+            w.record(20 * S + i, 1_000_000);
+        }
+        let recent = w.merged(20 * S);
+        assert_eq!(recent.count(), 100, "spike samples expired");
+        assert!(recent.p99() < 2_000_000, "recent p99 recovered, got {}", recent.p99());
+    }
+
+    #[test]
+    fn slot_reuse_clears_stale_counts() {
+        let mut w = WindowedHistogram::new(Duration::from_secs(2), 2);
+        w.record(0, 100);
+        w.record(S, 200);
+        // t=2s maps onto slot 0 again: the t=0 sample must be gone.
+        w.record(2 * S, 300);
+        let m = w.merged(2 * S);
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.min(), 200);
+        assert_eq!(m.max(), 300);
+    }
+
+    #[test]
+    fn read_far_in_the_future_is_empty() {
+        let mut w = wh();
+        for _ in 0..50 {
+            w.record(0, 777);
+        }
+        assert_eq!(w.count(0), 50);
+        assert_eq!(w.count(100 * S), 0, "everything expired");
+        assert_eq!(w.merged(100 * S).p99(), 0);
+    }
+
+    #[test]
+    fn empty_reads_and_degenerate_construction() {
+        let w = WindowedHistogram::new(Duration::from_secs(1), 0);
+        assert_eq!(w.count(0), 0, "slices clamp to 1, reads stay zero");
+        let mut z = WindowedHistogram::new(Duration::ZERO, 4);
+        z.record(123, 9); // slice_ns clamps to 1; must not divide by zero
+        assert!(z.count(123) <= 1);
+    }
+
+    #[test]
+    fn merged_is_stable_across_reads() {
+        let mut w = wh();
+        for i in 0..100u64 {
+            w.record(i * 10_000_000, i + 1);
+        }
+        let a = w.merged(S);
+        let b = w.merged(S);
+        assert_eq!(a.count(), b.count(), "reads do not mutate ring state");
+        assert_eq!(a.p99(), b.p99());
+    }
+}
