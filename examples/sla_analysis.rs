@@ -20,6 +20,12 @@
 //! as a violation at EVERY SLA target). The original example predated
 //! the dispatcher and undercounted response time for parked requests.
 //!
+//! Each experiment also prints the waterfalls of its five slowest
+//! retained traces (tracing on, sample rate 1.0) — the per-stage span
+//! timeline makes the SLA story concrete: the slow requests are the
+//! ones whose bars are dominated by provision children, not kernel
+//! execution.
+//!
 //!     cargo run --release --example sla_analysis [all|abl-snapshot|abl-adaptive]
 //!
 //! The positional experiment id selects which blocks run: `all` (the
@@ -50,6 +56,9 @@ struct DayReport {
     slas: Vec<(f64, f64)>,
     refused: usize,
     queue_wait_p99_s: f64,
+    /// Waterfalls of the five slowest retained traces — the span
+    /// timelines behind the tail of the latency distribution.
+    slowest_waterfalls: Vec<String>,
 }
 
 fn run_day(keep_alive_s: f64, prewarm: usize, snapshot: bool, adaptive: bool) -> DayReport {
@@ -61,6 +70,11 @@ fn run_day(keep_alive_s: f64, prewarm: usize, snapshot: bool, adaptive: bool) ->
     // the adaptive controllers on, the deploy-time eager capture.
     config.snapshot.capture_policy = CapturePolicy::Sync;
     config.policy.enabled = adaptive;
+    // Trace every request (sample rate 1.0) so `slowest` ranks over
+    // the whole day, not just the tail-retained exemplars; ~360
+    // requests fit the default 512-entry ring.
+    config.trace.enabled = true;
+    config.trace.sample_rate = 1.0;
     let clock = ManualClock::new();
     let platform = Invoker::new(config, engine, clock);
     platform.deploy("api", "squeezenet", "pallas", 1024).unwrap();
@@ -101,6 +115,8 @@ fn run_day(keep_alive_s: f64, prewarm: usize, snapshot: bool, adaptive: bool) ->
     // streaming per-function shard.
     let queue_wait_p99_s =
         platform.metrics.function_metrics("api").queue_wait.p99() as f64 / 1e9;
+    let slowest_waterfalls =
+        platform.trace.slowest(5).iter().map(|t| t.waterfall()).collect();
     DayReport {
         summary,
         cold_frac,
@@ -109,6 +125,7 @@ fn run_day(keep_alive_s: f64, prewarm: usize, snapshot: bool, adaptive: bool) ->
         slas,
         refused,
         queue_wait_p99_s,
+        slowest_waterfalls,
     }
 }
 
@@ -145,10 +162,21 @@ fn print_ablation(title: &str, left: (&str, &DayReport), right: (&str, &DayRepor
     println!();
 }
 
+fn print_slowest(name: &str, r: &DayReport) {
+    println!("--- {name}: five slowest traces ---");
+    for w in &r.slowest_waterfalls {
+        for line in w.lines() {
+            println!("  {line}");
+        }
+        println!();
+    }
+}
+
 fn run_keepwarm() {
     // The paper's situation: default platform, no mitigation.
     let off = run_day(300.0, 0, false, false);
     print_block("default platform (5 min keep-alive)", &off);
+    print_slowest("default platform", &off);
 
     // §5 mitigation 1: platform keeps containers warm much longer.
     let r = run_day(3600.0, 0, false, false);
@@ -175,6 +203,7 @@ fn run_abl_snapshot() {
         ("off", &off),
         ("snapshot", &snap),
     );
+    print_slowest("snapshot-restore", &snap);
 }
 
 fn run_abl_adaptive() {
@@ -190,6 +219,7 @@ fn run_abl_adaptive() {
         ("static", &fixed),
         ("adaptive", &adaptive),
     );
+    print_slowest("snapshot-restore + adaptive", &adaptive);
     println!("adaptive eagerly captures at deploy, so the first provision of the");
     println!("day restores instead of paying the full runtime-init + fetch + load");
     println!("chain; under sparse traffic the other two controllers stay quiet");

@@ -10,6 +10,7 @@ mod toml;
 
 pub use platform_config::{
     BootstrapConfig, CapturePolicy, MemorySize, ModelConfig, NetworkConfig, PlatformConfig,
-    PolicyConfig, PricingConfig, SnapshotConfig, MAX_QUEUE_DEADLINE_MS, MEMORY_SIZES_2017,
+    PolicyConfig, PricingConfig, SnapshotConfig, TraceConfig, MAX_QUEUE_DEADLINE_MS,
+    MEMORY_SIZES_2017,
 };
 pub use toml::{parse_toml, TomlError, TomlValue};

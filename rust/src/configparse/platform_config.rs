@@ -225,6 +225,34 @@ impl Default for PolicyConfig {
     }
 }
 
+/// End-to-end invocation tracing (`platform/trace.rs`): per-request
+/// span timelines in a tail-sampled exemplar ring. Disabled by
+/// default — with `enabled = false` no trace id is minted and no
+/// trace lock is ever acquired, so the serving pipeline is preserved
+/// bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Master switch, default off.
+    pub enabled: bool,
+    /// Capacity of the retained-trace exemplar ring (oldest evicted
+    /// first; `0` keeps counters only).
+    pub ring_capacity: usize,
+    /// Probability in `[0, 1]` that a steady-state (warm, in-budget,
+    /// error-free) trace is retained. Interesting traces —
+    /// cold/restored starts, SLO violations, errors, queue expiries —
+    /// are always retained regardless of this rate.
+    pub sample_rate: f64,
+    /// Emit one structured JSON line per finished invocation to
+    /// stdout (trace id, function, start kind, per-stage durations).
+    pub log_events: bool,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { enabled: false, ring_capacity: 512, sample_rate: 0.0, log_events: false }
+    }
+}
+
 /// Client<->gateway network model (the JMeter<->API-Gateway leg).
 #[derive(Debug, Clone)]
 pub struct NetworkConfig {
@@ -324,6 +352,8 @@ pub struct PlatformConfig {
     pub snapshot: SnapshotConfig,
     /// Adaptive hot-path controllers (default: disabled).
     pub policy: PolicyConfig,
+    /// End-to-end invocation tracing (default: disabled).
+    pub trace: TraceConfig,
     /// Deterministic seed for every stochastic component.
     pub seed: u64,
     /// Directory of AOT artifacts.
@@ -351,6 +381,7 @@ impl Default for PlatformConfig {
             network: NetworkConfig::default(),
             snapshot: SnapshotConfig::default(),
             policy: PolicyConfig::default(),
+            trace: TraceConfig::default(),
             seed: 20171001,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -503,6 +534,19 @@ impl PlatformConfig {
             cfg.policy.max_prewarm = v as usize;
         }
 
+        if let Some(v) = doc.get("trace.enabled").and_then(TomlValue::as_bool) {
+            cfg.trace.enabled = v;
+        }
+        if let Some(v) = get_u64("trace.ring_capacity") {
+            cfg.trace.ring_capacity = v as usize;
+        }
+        if let Some(v) = get_f64("trace.sample_rate") {
+            cfg.trace.sample_rate = v;
+        }
+        if let Some(v) = doc.get("trace.log_events").and_then(TomlValue::as_bool) {
+            cfg.trace.log_events = v;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -587,6 +631,16 @@ impl PlatformConfig {
         if self.policy.max_prewarm > 4096 {
             bail!("policy.max_prewarm must be at most 4096 (0 disables forecast top-up)");
         }
+        if !self.trace.sample_rate.is_finite()
+            || !(0.0..=1.0).contains(&self.trace.sample_rate)
+        {
+            bail!("trace.sample_rate must be in [0, 1]");
+        }
+        // Each retained trace is a few hundred bytes; a ring past a
+        // million entries is a unit mistake, not an exemplar buffer.
+        if self.trace.ring_capacity > 1_048_576 {
+            bail!("trace.ring_capacity must be at most 1048576 (0 keeps counters only)");
+        }
         Ok(())
     }
 
@@ -616,6 +670,20 @@ impl PlatformConfig {
                  controller can only shrink the window, never restore the static default",
                 self.policy.window_cap_ms, self.batch_window_ms
             ));
+        }
+        if !self.trace.enabled && (self.trace.sample_rate > 0.0 || self.trace.log_events) {
+            out.push(
+                "trace.sample_rate / trace.log_events have no effect while trace.enabled \
+                 = false (tracing is disabled; no trace is ever assembled)"
+                    .to_string(),
+            );
+        }
+        if self.trace.enabled && self.trace.ring_capacity == 0 {
+            out.push(
+                "trace.ring_capacity = 0 keeps tracing counters but retains no exemplar \
+                 traces (the trace routes will always 404)"
+                    .to_string(),
+            );
         }
         out
     }
@@ -788,6 +856,44 @@ max_prewarm = 16
         assert!(PlatformConfig::from_toml("[policy]\ndecay_window_s = 0.0").is_err());
         assert!(PlatformConfig::from_toml("[policy]\nforecast_horizon_s = -1.0").is_err());
         assert!(PlatformConfig::from_toml("[policy]\nmax_prewarm = 100000").is_err());
+    }
+
+    #[test]
+    fn trace_toml_overlay_and_defaults() {
+        let cfg = PlatformConfig::default();
+        assert!(!cfg.trace.enabled, "tracing is opt-in");
+        assert_eq!(cfg.trace.ring_capacity, 512);
+        assert_eq!(cfg.trace.sample_rate, 0.0);
+        assert!(!cfg.trace.log_events);
+
+        let cfg = PlatformConfig::from_toml(
+            r#"
+[trace]
+enabled = true
+ring_capacity = 64
+sample_rate = 0.25
+log_events = true
+"#,
+        )
+        .unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.ring_capacity, 64);
+        assert_eq!(cfg.trace.sample_rate, 0.25);
+        assert!(cfg.trace.log_events);
+
+        assert!(PlatformConfig::from_toml("[trace]\nsample_rate = 1.5").is_err());
+        assert!(PlatformConfig::from_toml("[trace]\nsample_rate = -0.1").is_err());
+        assert!(PlatformConfig::from_toml("[trace]\nring_capacity = 2000000").is_err());
+
+        // Knobs set while tracing is off warn instead of silently
+        // doing nothing; a zero-capacity ring with tracing on warns
+        // that no exemplars can be served.
+        let cfg = PlatformConfig::from_toml("[trace]\nsample_rate = 0.5").unwrap();
+        assert!(cfg.warnings().iter().any(|w| w.contains("trace.enabled")), "{:?}", cfg.warnings());
+        let cfg = PlatformConfig::from_toml("[trace]\nenabled = true\nring_capacity = 0").unwrap();
+        assert!(cfg.warnings().iter().any(|w| w.contains("trace.ring_capacity")));
+        let cfg = PlatformConfig::from_toml("[trace]\nenabled = true\nsample_rate = 0.5").unwrap();
+        assert!(cfg.warnings().is_empty(), "{:?}", cfg.warnings());
     }
 
     #[test]

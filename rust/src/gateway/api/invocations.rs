@@ -27,6 +27,13 @@ pub(crate) fn invocation_json(record: &InvocationRecord, prediction: &Prediction
         ("response_s", Json::Num(record.response().as_secs_f64())),
         ("billed_ms", Json::Num(record.billed_ms as f64)),
         ("cost_dollars", Json::Num(record.cost_dollars)),
+        (
+            "trace_id",
+            match &record.trace_id {
+                Some(id) => Json::Str(id.clone()),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 

@@ -10,6 +10,7 @@
 pub mod functions;
 pub mod invocations;
 pub mod stats;
+pub mod traces;
 pub mod v1;
 
 use crate::httpd::{error_envelope, HttpRequest, Params, Responder, Router};
@@ -161,6 +162,8 @@ pub fn build_router(ctx: &Arc<ApiCtx>) -> Router {
         .route("DELETE", "/v2/functions/:name", bind(ctx, functions::delete))
         .route("POST", "/v2/functions/:name/invocations", bind(ctx, invocations::create))
         .route("GET", "/v2/invocations/:id", bind(ctx, invocations::get_one))
+        .route("GET", "/v2/invocations/:id/trace", bind(ctx, traces::invocation_trace))
+        .route("GET", "/v2/functions/:name/traces", bind(ctx, traces::function_traces))
         .route("GET", "/v2/functions/:name/stats", bind(ctx, stats::function_stats))
         .route("GET", "/v2/stats", bind(ctx, stats::platform_stats))
         // -- v1 legacy shims ---------------------------------------------

@@ -138,6 +138,19 @@ fn snapshot_fields(p: &Platform) -> [(&'static str, Json); 5] {
     ]
 }
 
+/// Trace-derived gauges, served identically on both stats routes (the
+/// exemplar ring is a platform-wide resource, like the snapshot
+/// store). All-zero with `trace.enabled` off — the reads are plain
+/// atomics, no trace lock.
+fn trace_fields(p: &Platform) -> [(&'static str, Json); 3] {
+    let t = &p.trace;
+    [
+        ("traces_retained", Json::Num(t.retained() as f64)),
+        ("traces_sampled_out", Json::Num(t.sampled_out() as f64)),
+        ("trace_ring_bytes", Json::Num(t.ring_bytes() as f64)),
+    ]
+}
+
 /// `GET /v2/functions/:name/stats`.
 pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
     let name = params.require("name");
@@ -158,6 +171,7 @@ pub fn function_stats(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Resp
     let policy = ctx.platform.policy.snapshot_view(name).unwrap_or_default();
     fields.extend(policy_fields(&policy));
     fields.extend(snapshot_fields(&ctx.platform));
+    fields.extend(trace_fields(&ctx.platform));
     Responder::json(200, obj(fields).to_string())
 }
 
@@ -201,6 +215,7 @@ pub fn platform_stats(ctx: &ApiCtx, _req: &HttpRequest, _params: &Params) -> Res
     ]);
     fields.extend(policy_fields(&p.policy.platform_view()));
     fields.extend(snapshot_fields(p));
+    fields.extend(trace_fields(p));
     // Redeploy/undeploy invalidations, platform route only (a store
     // lifecycle detail, not a per-function signal).
     fields.push(("snapshot_stale", Json::Num(p.snapshots.stale() as f64)));

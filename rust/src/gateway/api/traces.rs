@@ -1,0 +1,98 @@
+//! Trace query handlers: one invocation's span timeline (`GET
+//! /v2/invocations/:id/trace`) and a function's retained exemplars
+//! (`GET /v2/functions/:name/traces`).
+//!
+//! Both routes read the platform's tail-sampled exemplar ring
+//! (`platform/trace.rs`). With `trace.enabled` off (the default) they
+//! answer 404 with a `tracing_disabled` code rather than an empty
+//! result, so a client can tell "not retained" from "never traced".
+
+use super::{err, ApiCtx};
+use crate::httpd::{HttpRequest, Params, Responder};
+use crate::util::json::{obj, Json};
+
+const KINDS: [&str; 4] = ["cold", "restored", "slow", "error"];
+const DEFAULT_LIMIT: usize = 10;
+const MAX_LIMIT: usize = 100;
+
+/// `GET /v2/invocations/:id/trace` — the span timeline for one
+/// invocation. Accepts either a trace id (`tr-…`, as returned in the
+/// invocation's `trace_id` field) or an async invocation id (`inv-…`,
+/// resolved through the result store to the trace its record carried).
+pub fn invocation_trace(ctx: &ApiCtx, _req: &HttpRequest, params: &Params) -> Responder {
+    let id = params.require("id");
+    if !ctx.platform.trace.enabled() {
+        return err(404, "tracing_disabled", "tracing is disabled (`trace.enabled = false`)");
+    }
+    let trace_id = if id.starts_with("inv-") {
+        match ctx.async_inv.get(id) {
+            Some(entry) => match entry.record.as_ref().and_then(|r| r.trace_id.clone()) {
+                Some(tid) => tid,
+                None => {
+                    return err(
+                        404,
+                        "not_found",
+                        &format!("invocation {id:?} has no trace (not finished, or untraced)"),
+                    );
+                }
+            },
+            None => {
+                return err(
+                    404,
+                    "not_found",
+                    &format!("invocation {id:?} is unknown or its result expired"),
+                );
+            }
+        }
+    } else {
+        id.to_string()
+    };
+    match ctx.platform.trace.get(&trace_id) {
+        Some(trace) => Responder::json(200, trace.to_json().to_string()),
+        None => err(
+            404,
+            "not_found",
+            &format!("trace {trace_id:?} is not retained (evicted or sampled out)"),
+        ),
+    }
+}
+
+/// `GET /v2/functions/:name/traces?kind=cold|restored|slow|error&limit=N`
+/// — newest-first retained exemplars for one function.
+pub fn function_traces(ctx: &ApiCtx, req: &HttpRequest, params: &Params) -> Responder {
+    let name = params.require("name");
+    if ctx.platform.registry.get(name).is_err() {
+        return err(404, "not_found", &format!("function {name:?} is not deployed"));
+    }
+    if !ctx.platform.trace.enabled() {
+        return err(404, "tracing_disabled", "tracing is disabled (`trace.enabled = false`)");
+    }
+    let kind = match req.query_param("kind") {
+        Some(k) if KINDS.contains(&k) => Some(k),
+        Some(k) => {
+            return err(
+                400,
+                "invalid_kind",
+                &format!("kind must be one of cold|restored|slow|error, got {k:?}"),
+            );
+        }
+        None => None,
+    };
+    let limit = match req.query_param("limit") {
+        Some(l) => match l.parse::<usize>() {
+            Ok(n) if n >= 1 => n.min(MAX_LIMIT),
+            _ => return err(400, "invalid_limit", "limit must be a positive integer"),
+        },
+        None => DEFAULT_LIMIT,
+    };
+    let traces = ctx.platform.trace.recent(name, kind, limit);
+    Responder::json(
+        200,
+        obj(vec![
+            ("function", Json::Str(name.to_string())),
+            ("count", Json::Num(traces.len() as f64)),
+            ("traces", Json::Arr(traces.iter().map(|t| t.to_json()).collect())),
+        ])
+        .to_string(),
+    )
+}

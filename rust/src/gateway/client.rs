@@ -199,6 +199,10 @@ pub struct InvocationResult {
     /// Largest compiled kernel rung the serving pass ran (1 = the
     /// batch-1 executable; see `platform.batch_kernel_max`).
     pub kernel_batch_n: u64,
+    /// Trace id minted for this invocation (`None` when
+    /// `trace.enabled` is off); feed it to
+    /// [`ApiClient::invocation_trace`].
+    pub trace_id: Option<String>,
 }
 
 impl InvocationResult {
@@ -222,6 +226,45 @@ impl AsyncInvocationStatus {
     pub fn is_terminal(&self) -> bool {
         self.status == "done" || self.status == "failed"
     }
+}
+
+/// One span in a trace timeline (`GET /v2/invocations/:id/trace`).
+#[derive(Debug, Clone)]
+pub struct SpanView {
+    /// Stage name: "admission", "queue_wait", "batch_collect",
+    /// "provision" (+ children "sandbox", "runtime_init",
+    /// "package_fetch", "model_load", "restore"), "kernel_exec",
+    /// "billing".
+    pub stage: String,
+    /// `Some("provision")` for provision child spans, else `None`.
+    pub parent: Option<String>,
+    /// Start offset from the trace origin, seconds.
+    pub offset_s: f64,
+    pub duration_s: f64,
+    /// Stage annotation (e.g. `kernel_batch_n=4 rung=hit` on
+    /// `kernel_exec`), `None` when empty.
+    pub note: Option<String>,
+}
+
+/// One invocation's span timeline, as returned by the trace routes.
+#[derive(Debug, Clone)]
+pub struct TraceView {
+    pub trace_id: String,
+    pub function: String,
+    /// "cold" | "warm" | "restored".
+    pub start: String,
+    /// Exemplar class: "cold" | "restored" | "slow" | "error" |
+    /// "steady".
+    pub kind: String,
+    pub response_s: f64,
+    pub slo_target_ms: u64,
+    pub slo_violation: bool,
+    pub batch_size: u64,
+    /// For a batch follower: the leader trace owning the shared
+    /// `kernel_exec` span.
+    pub shared_exec_with: Option<String>,
+    pub error: Option<String>,
+    pub spans: Vec<SpanView>,
 }
 
 /// Per-function stats breakdown.
@@ -307,6 +350,11 @@ pub struct FunctionStats {
     pub arrival_rate_ewma: f64,
     pub effective_batch_window_ms: u64,
     pub policy_adjustments: u64,
+    /// Trace exemplar-ring gauges (platform-wide; all zero while
+    /// `trace.enabled` is off).
+    pub traces_retained: u64,
+    pub traces_sampled_out: u64,
+    pub trace_ring_bytes: u64,
 }
 
 /// Platform-wide snapshot (`GET /v2/stats`): the totals shard plus
@@ -364,6 +412,12 @@ pub struct PlatformStats {
     pub arrival_rate_ewma: f64,
     pub effective_batch_window_ms: u64,
     pub policy_adjustments: u64,
+    /// Trace exemplar-ring gauges (all zero while `trace.enabled` is
+    /// off): traces kept, traces dropped by the sampler, and the
+    /// ring's approximate resident size.
+    pub traces_retained: u64,
+    pub traces_sampled_out: u64,
+    pub trace_ring_bytes: u64,
 }
 
 /// Blocking typed client for one gateway address.
@@ -721,6 +775,9 @@ impl ApiClient {
             arrival_rate_ewma: num_field(&json, "arrival_rate_ewma"),
             effective_batch_window_ms: u64_field(&json, "effective_batch_window_ms"),
             policy_adjustments: u64_field(&json, "policy_adjustments"),
+            traces_retained: u64_field(&json, "traces_retained"),
+            traces_sampled_out: u64_field(&json, "traces_sampled_out"),
+            trace_ring_bytes: u64_field(&json, "trace_ring_bytes"),
         })
     }
 
@@ -764,7 +821,48 @@ impl ApiClient {
             arrival_rate_ewma: num_field(&json, "arrival_rate_ewma"),
             effective_batch_window_ms: u64_field(&json, "effective_batch_window_ms"),
             policy_adjustments: u64_field(&json, "policy_adjustments"),
+            traces_retained: u64_field(&json, "traces_retained"),
+            traces_sampled_out: u64_field(&json, "traces_sampled_out"),
+            trace_ring_bytes: u64_field(&json, "trace_ring_bytes"),
         })
+    }
+
+    /// `GET /v2/invocations/:id/trace` — the span timeline for one
+    /// invocation. `id` is either a trace id (`tr-…`, from
+    /// [`InvocationResult::trace_id`]) or an async invocation id
+    /// (`inv-…`).
+    pub fn invocation_trace(&self, id: &str) -> ApiResult<TraceView> {
+        let (_, json) = self.call("GET", &format!("/v2/invocations/{id}/trace"), None)?;
+        Ok(parse_trace(&json))
+    }
+
+    /// `GET /v2/functions/:name/traces` — newest-first retained trace
+    /// exemplars. `kind` filters to one exemplar class
+    /// (`cold|restored|slow|error`); `limit` caps the result count
+    /// (server default 10, max 100).
+    pub fn function_traces(
+        &self,
+        name: &str,
+        kind: Option<&str>,
+        limit: Option<usize>,
+    ) -> ApiResult<Vec<TraceView>> {
+        let mut path = format!("/v2/functions/{name}/traces");
+        let mut sep = '?';
+        if let Some(k) = kind {
+            path.push(sep);
+            path.push_str(&format!("kind={k}"));
+            sep = '&';
+        }
+        if let Some(n) = limit {
+            path.push(sep);
+            path.push_str(&format!("limit={n}"));
+        }
+        let (_, json) = self.call("GET", &path, None)?;
+        Ok(json
+            .get("traces")
+            .and_then(Json::as_arr)
+            .map(|ts| ts.iter().map(parse_trace).collect())
+            .unwrap_or_default())
     }
 }
 
@@ -812,5 +910,37 @@ fn parse_invocation(json: &Json) -> InvocationResult {
         batch_size: json.get("batch_size").and_then(Json::as_u64).unwrap_or(1),
         batch_wait_s: num_field(json, "batch_wait_s"),
         kernel_batch_n: json.get("kernel_batch_n").and_then(Json::as_u64).unwrap_or(1),
+        trace_id: json.get("trace_id").and_then(Json::as_str).map(str::to_string),
+    }
+}
+
+fn parse_trace(json: &Json) -> TraceView {
+    TraceView {
+        trace_id: str_field(json, "trace_id"),
+        function: str_field(json, "function"),
+        start: str_field(json, "start"),
+        kind: str_field(json, "kind"),
+        response_s: num_field(json, "response_s"),
+        slo_target_ms: u64_field(json, "slo_target_ms"),
+        slo_violation: json.get("slo_violation").and_then(Json::as_bool).unwrap_or(false),
+        batch_size: u64_field(json, "batch_size"),
+        shared_exec_with: json.get("shared_exec_with").and_then(Json::as_str).map(str::to_string),
+        error: json.get("error").and_then(Json::as_str).map(str::to_string),
+        spans: json
+            .get("spans")
+            .and_then(Json::as_arr)
+            .map(|spans| {
+                spans
+                    .iter()
+                    .map(|s| SpanView {
+                        stage: str_field(s, "stage"),
+                        parent: s.get("parent").and_then(Json::as_str).map(str::to_string),
+                        offset_s: num_field(s, "offset_s"),
+                        duration_s: num_field(s, "duration_s"),
+                        note: s.get("note").and_then(Json::as_str).map(str::to_string),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default(),
     }
 }

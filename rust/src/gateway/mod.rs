@@ -10,6 +10,9 @@
 //!   POST   /v2/functions/:name/invocations   — invoke; `?mode=async`
 //!                                              returns 202 + id
 //!   GET    /v2/invocations/:id               — poll an async result
+//!   GET    /v2/invocations/:id/trace         — span timeline (trace or
+//!                                              async id)
+//!   GET    /v2/functions/:name/traces        — retained trace exemplars
 //!   GET    /v2/functions/:name/stats         — per-function breakdown
 //!   GET    /v2/stats                         — platform snapshot
 //!   GET    /healthz
@@ -24,7 +27,7 @@ pub mod client;
 
 pub use client::{
     ApiClient, ApiError, ApiResult, AsyncInvocationStatus, DeploySpec, FunctionInfo,
-    FunctionStats, InvocationResult, PlatformStats, ReconfigureSpec,
+    FunctionStats, InvocationResult, PlatformStats, ReconfigureSpec, SpanView, TraceView,
 };
 
 use crate::httpd::{HttpServer, Router};

@@ -1,7 +1,7 @@
 //! Rule `config-doc-drift`: the TOML config surface and its
 //! documentation move together.
 //!
-//! Every `platform.*` / `snapshot.*` / `policy.*` key parsed by
+//! Every `platform.*` / `snapshot.*` / `policy.*` / `trace.*` key parsed by
 //! `rust/src/configparse/platform_config.rs` must appear in API.md's
 //! `## Configuration` section, and every key documented there must
 //! actually be parsed — BOTH directions, mirroring `stats-doc-drift`:
@@ -72,8 +72,8 @@ fn whole_file(file: &str, message: String) -> Finding {
 }
 
 /// Keys the config parser actually reads: non-test string literals
-/// that are exactly `platform.<ident>`, `snapshot.<ident>`, or
-/// `policy.<ident>`.
+/// that are exactly `platform.<ident>`, `snapshot.<ident>`,
+/// `policy.<ident>`, or `trace.<ident>`.
 pub fn parsed_keys(source: &str) -> BTreeSet<String> {
     let ctx = FileCtx::new(CONFIG_SRC, source);
     let mut keys = BTreeSet::new();
@@ -108,11 +108,16 @@ pub fn documented_keys(doc: &str) -> BTreeSet<String> {
     keys
 }
 
-/// Exactly `platform.<key>`, `snapshot.<key>`, or `policy.<key>` with
-/// a lowercase snake_case key — full match, no surrounding prose.
+/// Exactly `platform.<key>`, `snapshot.<key>`, `policy.<key>`, or
+/// `trace.<key>` with a lowercase snake_case key — full match, no
+/// surrounding prose.
 fn is_config_key(s: &str) -> bool {
     let Some((section, key)) = s.split_once('.') else { return false };
-    if section != "platform" && section != "snapshot" && section != "policy" {
+    if section != "platform"
+        && section != "snapshot"
+        && section != "policy"
+        && section != "trace"
+    {
         return false;
     }
     let mut chars = key.chars();
@@ -131,7 +136,9 @@ mod tests {
                 if let Some(v) = get_u64("platform.seed") { cfg.seed = v; }
                 if let Some(v) = get_f64("snapshot.restore_bw") { cfg.bw = v; }
                 if let Some(v) = get_u64("policy.slo_target_ms") { cfg.slo = v; }
+                if let Some(v) = get_f64("trace.sample_rate") { cfg.rate = v; }
                 bail!("snapshot.restore_bw must be a positive number");
+                bail!("trace.sample_rate must be in [0, 1] if you read prose");
             }
             #[cfg(test)]
             mod tests {
@@ -142,17 +149,18 @@ mod tests {
         assert!(keys.contains("platform.seed"));
         assert!(keys.contains("snapshot.restore_bw"));
         assert!(keys.contains("policy.slo_target_ms"));
-        assert_eq!(keys.len(), 3, "prose and test strings excluded: {keys:?}");
+        assert!(keys.contains("trace.sample_rate"));
+        assert_eq!(keys.len(), 4, "prose and test strings excluded: {keys:?}");
     }
 
     #[test]
     fn documented_keys_read_configuration_tables_only() {
         let doc = "\
-## Configuration\n\nProse mentioning `platform.not_a_row`.\n\n### `[platform]`\n\n| key | default |\n|-----|---------|\n| `platform.seed` | `0` |\n| `platform.max_containers` | `8` |\n\n### `[snapshot]`\n\n| key | default |\n|-----|---------|\n| `snapshot.enabled` | `false` |\n\n## Batching\n\n| `platform.out_of_section` | `1` |\n";
+## Configuration\n\nProse mentioning `platform.not_a_row`.\n\n### `[platform]`\n\n| key | default |\n|-----|---------|\n| `platform.seed` | `0` |\n| `platform.max_containers` | `8` |\n\n### `[snapshot]`\n\n| key | default |\n|-----|---------|\n| `snapshot.enabled` | `false` |\n\n### `[trace]`\n\n| key | default |\n|-----|---------|\n| `trace.enabled` | `false` |\n\n## Batching\n\n| `platform.out_of_section` | `1` |\n";
         let keys = documented_keys(doc);
         assert_eq!(
             keys,
-            ["platform.seed", "platform.max_containers", "snapshot.enabled"]
+            ["platform.seed", "platform.max_containers", "snapshot.enabled", "trace.enabled"]
                 .iter()
                 .map(ToString::to_string)
                 .collect()

@@ -95,9 +95,19 @@ pub const PLATFORM_LOCK_ORDER: &[LockDecl] = &[
     decl("billing.lines", &[("platform/billing.rs", "lines")], false),
     decl(
         "platform.rng",
-        &[("platform/invoker.rs", "rng"), ("platform/scaler.rs", "rng")],
+        &[
+            ("platform/invoker.rs", "rng"),
+            ("platform/scaler.rs", "rng"),
+            ("platform/trace.rs", "rng"),
+        ],
         false,
     ),
+    // Trace exemplar ring. Taken standalone after the metrics record
+    // and the policy feed have both returned, and the sampling rng
+    // guard is drawn and dropped before the ring is touched — so the
+    // ring ranks below every hot-path lock and nothing may call back
+    // into the platform while holding it.
+    decl("trace.ring", &[("platform/trace.rs", "ring")], false),
     decl("mock.compiled", &[("runtime/mock.rs", "compiled")], false),
     // Batch-N kernel ladder cache. Ranked between the model cache and
     // the instance map: a batched flush reads `instances` (liveness)
@@ -382,6 +392,31 @@ mod tests {
                 "pub struct PolicyEngine { state: Mutex<u32>, m: FnMetricsSink }\nimpl PolicyEngine {\n    fn f(&self) {\n        let s = plock(&self.state);\n        self.m.observe();\n    }\n}\n",
             ),
         ]);
+        assert!(!ok.iter().any(|x| x.rule == GLOBAL_LOCK_ORDER), "{ok:?}");
+    }
+
+    #[test]
+    fn trace_ring_ranks_last_among_platform_locks() {
+        assert!(rank_of("platform.rng") < rank_of("trace.ring"));
+        assert!(rank_of("metrics.totals") < rank_of("trace.ring"));
+        // Holding the exemplar ring while calling back into the
+        // metrics sink is an inversion: traces are finished strictly
+        // AFTER the metrics record has been committed and released.
+        let trace_src = "pub struct TraceSink { ring: Mutex<u32>, m: FnMetricsSink }\nimpl TraceSink {\n    fn f(&self) {\n        let g = plock(&self.ring);\n        self.m.tally(name);\n    }\n}\n";
+        let f = run(&[
+            ("rust/src/platform/trace.rs", trace_src),
+            (
+                "rust/src/platform/metrics.rs",
+                "pub struct FnMetricsSink { totals: Mutex<u32> }\nimpl FnMetricsSink {\n    pub fn tally(&self, name: &str) {\n        let t = plock(&self.totals);\n    }\n}\n",
+            ),
+        ]);
+        assert!(has(&f, GLOBAL_LOCK_ORDER, "metrics.totals"), "{f:?}");
+        // The sanctioned shape — rng coin drawn and dropped, then the
+        // ring taken standalone — is clean.
+        let ok = run(&[(
+            "rust/src/platform/trace.rs",
+            "pub struct TraceSink { rng: Mutex<u32>, ring: Mutex<u32> }\nimpl TraceSink {\n    fn finish(&self) {\n        let keep = { let r = plock(&self.rng); true };\n        if keep {\n            let g = plock(&self.ring);\n        }\n    }\n}\n",
+        )]);
         assert!(!ok.iter().any(|x| x.rule == GLOBAL_LOCK_ORDER), "{ok:?}");
     }
 

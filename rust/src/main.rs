@@ -9,6 +9,8 @@
 //!                   (sync or `--mode async`), or one-shot local
 //! * `undeploy`    — remove a function from a remote gateway
 //! * `stats`       — per-function stats from a remote gateway
+//! * `trace`       — span waterfall for one invocation (`--id`) or a
+//!                   function's retained exemplars (`--function`)
 //! * `experiment`  — run a paper experiment by id (`table1`, `fig1`..
 //!                   `fig10`, `abl-*`, or `all`)
 //! * `price-table` — print Table 1
@@ -34,7 +36,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: lambdaserve <serve|deploy|invoke|undeploy|stats|loadgen|experiment|price-table|models> [flags]\n\
+    "usage: lambdaserve <serve|deploy|invoke|undeploy|stats|trace|loadgen|experiment|price-table|models> [flags]\n\
      run `lambdaserve <cmd> --help` for per-command flags"
         .to_string()
 }
@@ -76,6 +78,7 @@ fn run(argv: &[String]) -> Result<()> {
         "invoke" => cmd_invoke(rest),
         "undeploy" => cmd_undeploy(rest),
         "stats" => cmd_stats(rest),
+        "trace" => cmd_trace(rest),
         "loadgen" => cmd_loadgen(rest),
         "experiment" => cmd_experiment(rest),
         "price-table" => cmd_price_table(rest),
@@ -561,6 +564,92 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
             "  billed={}ms cost=${:.8} gb_seconds={:.4}",
             s.billed_ms_total, s.cost_dollars_total, s.gb_seconds_total
         );
+    }
+    Ok(())
+}
+
+/// Render one trace as the same ASCII waterfall shape
+/// `platform::Trace::waterfall` produces, reconstructed from the
+/// route JSON (offsets/durations in seconds).
+fn render_waterfall(t: &lambdaserve::gateway::TraceView) -> String {
+    const WIDTH: f64 = 40.0;
+    let total = t
+        .spans
+        .iter()
+        .map(|s| s.offset_s + s.duration_s)
+        .fold(0.0_f64, f64::max)
+        .max(1e-9);
+    let mut out = format!(
+        "{}  {}  {}  response {:.3}s{}{}\n",
+        t.trace_id,
+        t.function,
+        t.kind,
+        t.response_s,
+        if t.slo_target_ms > 0 {
+            format!("  slo {}ms {}", t.slo_target_ms, if t.slo_violation { "VIOLATED" } else { "ok" })
+        } else {
+            String::new()
+        },
+        match &t.error {
+            Some(e) => format!("  error: {e}"),
+            None => String::new(),
+        },
+    );
+    for s in &t.spans {
+        let pad = ((s.offset_s / total) * WIDTH).round() as usize;
+        let bar = ((s.duration_s / total) * WIDTH)
+            .round()
+            .max(if s.duration_s > 0.0 { 1.0 } else { 0.0 }) as usize;
+        let indent = if s.parent.is_some() { "    " } else { "  " };
+        out.push_str(&format!(
+            "{indent}{:<14} {}{} {:.3}s{}\n",
+            s.stage,
+            " ".repeat(pad.min(WIDTH as usize)),
+            "#".repeat(bar.min(WIDTH as usize + 1)),
+            s.duration_s,
+            match &s.note {
+                Some(n) => format!("  [{n}]"),
+                None => String::new(),
+            },
+        ));
+    }
+    out
+}
+
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("trace", "span waterfalls from a remote gateway's trace ring")
+        .flag("addr", "gateway address", Some("127.0.0.1:8080"))
+        .flag("id", "trace id (tr-…) or async invocation id (inv-…)", None)
+        .flag("function", "list retained exemplars for this function", None)
+        .flag("kind", "exemplar filter: cold | restored | slow | error", None)
+        .flag("limit", "max exemplars to list", Some("10"));
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let api = ApiClient::new(args.get_or("addr", "127.0.0.1:8080"));
+    match (args.get("id"), args.get("function")) {
+        (Some(id), _) => {
+            let t = api.invocation_trace(id)?;
+            print!("{}", render_waterfall(&t));
+            if let Some(leader) = &t.shared_exec_with {
+                println!("  (kernel_exec shared with leader trace {leader})");
+            }
+        }
+        (None, Some(function)) => {
+            let limit = args.get_u64("limit")?.map(|n| n as usize);
+            let traces = api.function_traces(function, args.get("kind"), limit)?;
+            if traces.is_empty() {
+                println!("no retained traces for {function} (ring empty or all sampled out)");
+                return Ok(());
+            }
+            for t in &traces {
+                print!("{}", render_waterfall(t));
+            }
+            println!("{} trace(s)", traces.len());
+        }
+        (None, None) => bail!("pass --id <trace-or-invocation-id> or --function <name>"),
     }
     Ok(())
 }

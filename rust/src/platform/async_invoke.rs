@@ -106,6 +106,10 @@ struct Job {
     function: String,
     seed: u64,
     attempts: u32,
+    /// Original submit time, preserved across requeues: the trace's
+    /// `admission` span stretches from here to the platform arrival,
+    /// so queue-crossing (and every retry) shows up as admission wait.
+    submitted_at: Nanos,
 }
 
 struct Shared {
@@ -182,6 +186,7 @@ impl AsyncInvoker {
                 function: function.to_string(),
                 seed,
                 attempts: 0,
+                submitted_at: now,
             });
             plock(&self.shared.results).insert(
                 id.clone(),
@@ -281,11 +286,14 @@ fn worker_loop(shared: &Arc<Shared>) {
         let settled: Vec<(Job, Result<InvokeOutcome, InvokeError>)> = if batch.len() >= 2 {
             let function = batch[0].function.clone();
             let seeds: Vec<u64> = batch.iter().map(|j| j.seed).collect();
-            let outcomes = shared.platform.invoke_preformed(&function, &seeds);
+            let origins: Vec<Nanos> = batch.iter().map(|j| j.submitted_at).collect();
+            let outcomes =
+                shared.platform.invoke_preformed_from(&function, &seeds, Some(&origins));
             batch.into_iter().zip(outcomes).collect()
         } else {
             let job = batch.pop().expect("dequeued one job");
-            let outcome = shared.platform.invoke(&job.function, job.seed);
+            let outcome =
+                shared.platform.invoke_from(&job.function, job.seed, Some(job.submitted_at));
             vec![(job, outcome)]
         };
         let mut parked_this_round = false;

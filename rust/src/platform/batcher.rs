@@ -71,6 +71,10 @@ pub struct BatchShare {
     /// the per-function `kernel_batch_n` histogram is request-weighted
     /// like `batch_size`.
     pub kernel_batch_n: usize,
+    /// Trace id of the leader whose container ran the batched pass,
+    /// when tracing is on — followers share the leader's execution
+    /// span and annotate their own timelines with it.
+    pub leader_trace: Option<String>,
 }
 
 #[derive(PartialEq)]
@@ -102,6 +106,9 @@ struct BatchInner {
     exec_started_at: Nanos,
     shares: Vec<Option<BatchShare>>,
     error: Option<String>,
+    /// The leader's trace id, when tracing is on (see
+    /// [`BatchShare::leader_trace`]).
+    leader_trace: Option<String>,
 }
 
 struct BatchState {
@@ -266,6 +273,7 @@ impl Batcher {
                 exec_started_at: 0,
                 shares: Vec::new(),
                 error: None,
+                leader_trace: None,
             }),
             cv: Condvar::new(),
             clock: self.clock.clone(),
@@ -397,6 +405,7 @@ impl BatchLeader<'_> {
         let billed_share = effective / n as u32;
         let exec_started_at = g.exec_started_at;
         let joined_at = std::mem::take(&mut g.joined_at);
+        let leader_trace = g.leader_trace.clone();
         g.shares = predictions
             .into_iter()
             .zip(joined_at)
@@ -408,6 +417,7 @@ impl BatchLeader<'_> {
                     billed_share,
                     batch_wait: Duration::from_nanos(exec_started_at.saturating_sub(joined)),
                     kernel_batch_n: kernel_batch_n.max(1),
+                    leader_trace: leader_trace.clone(),
                 })
             })
             .collect();
@@ -431,6 +441,14 @@ impl BatchLeader<'_> {
     /// `wait` returns the error.
     pub fn fail(mut self, error: String) {
         self.fail_inner(error);
+    }
+
+    /// Record the leader's trace id on the collecting batch so every
+    /// member's [`BatchShare`] carries it. Called by the invoker right
+    /// after the lead is taken (tracing on only) — strictly before
+    /// `complete`, which snapshots the id into the shares.
+    pub fn set_trace(&self, trace_id: &str) {
+        plock(&self.state.inner).leader_trace = Some(trace_id.to_string());
     }
 
     fn fail_inner(&mut self, error: String) {

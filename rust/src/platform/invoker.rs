@@ -19,7 +19,7 @@
 
 use super::batcher::{BatchMember, Batcher};
 use super::billing::BillingMeter;
-use super::container::Container;
+use super::container::{Container, ProvisionCost};
 use super::dispatcher::Dispatcher;
 use super::maintainer::{MaintenanceReport, PoolMaintainer};
 use super::metrics::{InvocationRecord, MetricsSink, StartKind};
@@ -29,8 +29,10 @@ use super::registry::{FunctionPolicy, FunctionRegistry, FunctionSpec};
 use super::scaler::Scaler;
 use super::snapshots::{SnapshotKey, SnapshotStore};
 use super::throttle::CpuGovernor;
+use super::trace::{Trace, TraceSink};
 use crate::configparse::PlatformConfig;
 use crate::runtime::{Engine, Prediction};
+use crate::util::clock::Nanos;
 use crate::util::{plock, Clock, SplitMix64, SystemClock};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -110,6 +112,12 @@ pub struct Invoker {
     /// case every read-back returns the static knob and the fixed
     /// pipeline is preserved bit-for-bit.
     pub policy: Arc<PolicyEngine>,
+    /// End-to-end invocation tracing (`trace.enabled`, default off):
+    /// one typed span timeline per invocation, tail-sampled into a
+    /// bounded exemplar ring. Disabled, `begin()` returns `None` and
+    /// no trace lock is ever acquired — the pipeline is preserved
+    /// bit-for-bit.
+    pub trace: TraceSink,
     governor: CpuGovernor,
     engine: Arc<dyn Engine>,
     config: PlatformConfig,
@@ -194,6 +202,21 @@ impl Drop for FnFlightGuard<'_> {
     }
 }
 
+/// Per-invocation trace context threaded from admission to the record
+/// site. `id` is `None` whenever tracing is off (the default), which
+/// makes the whole bundle inert: every trace helper checks it first
+/// and does nothing — no allocation, no lock, no rng draw.
+struct TraceCtx {
+    id: Option<String>,
+    /// Async submit time (span `admission` stretches from here to the
+    /// platform arrival); `None` for synchronous requests.
+    submitted_at: Option<Nanos>,
+    /// Platform arrival (queue-wait anchor).
+    arrived_at: Nanos,
+    /// Effective SLO budget for the trace's violation flag.
+    slo_ms: u64,
+}
+
 /// Alias used across the crate: the assembled platform.
 pub type Platform = Invoker;
 
@@ -215,6 +238,10 @@ impl Invoker {
             governor: CpuGovernor::new(config.full_power_mem_mb, clock.clone()),
             snapshots: Arc::new(SnapshotStore::new(config.snapshot.clone())),
             policy: Arc::new(PolicyEngine::new(config.policy.clone())),
+            // Salted so the sampling coin stream is independent of the
+            // provision-jitter stream even though both derive from
+            // `platform.seed`.
+            trace: TraceSink::new(&config.trace, config.seed ^ 0x7472_6163_65),
             engine,
             rng: Mutex::new(SplitMix64::new(config.seed)),
             config,
@@ -459,6 +486,19 @@ impl Invoker {
     /// With `max_batch_size = 1` (the default) none of this code is
     /// reached and the pipeline is the pre-batching one, bit-for-bit.
     pub fn invoke(&self, function: &str, image_seed: u64) -> Result<InvokeOutcome, InvokeError> {
+        self.invoke_from(function, image_seed, None)
+    }
+
+    /// [`Self::invoke`] with an explicit origin: `submitted_at` is the
+    /// async submit time carried across the queue, so the trace's
+    /// `admission` span covers the pre-platform wait. Synchronous
+    /// callers pass `None` (admission is zero-width).
+    pub fn invoke_from(
+        &self,
+        function: &str,
+        image_seed: u64,
+        submitted_at: Option<Nanos>,
+    ) -> Result<InvokeOutcome, InvokeError> {
         let spec = self
             .registry
             .get(function)
@@ -477,6 +517,7 @@ impl Invoker {
             }
         };
         let t_queue_start = self.clock.now();
+        let tctx = self.begin_trace(&spec, submitted_at, t_queue_start);
         // Feed the arrival forecast (admitted requests only — the
         // controllers steer capacity for traffic the cap lets in).
         // Gated so the default-off pipeline takes no policy lock, and
@@ -499,7 +540,7 @@ impl Invoker {
                 self.batcher.try_join(&spec, image_seed, admission_deadline)
             {
                 let wait = Duration::from_nanos(self.clock.now() - t_queue_start);
-                return self.finish_batch_member(function, &spec, member, wait);
+                return self.finish_batch_member(function, &spec, member, wait, &tctx);
             }
         }
 
@@ -551,7 +592,7 @@ impl Invoker {
                                             self.clock.now() - t_queue_start,
                                         );
                                         return self.finish_batch_member(
-                                            function, &spec, member, wait,
+                                            function, &spec, member, wait, &tctx,
                                         );
                                     }
                                     // Join race lost (batch flushed or
@@ -581,6 +622,7 @@ impl Invoker {
                         if matches!(outcome, AcquireOutcome::TimedOut) {
                             self.scaler.note_saturated();
                             self.metrics.note_queue_expired(function);
+                            self.trace_refusal(&tctx, function, "saturated: dispatch queue full");
                             return Err(InvokeError::Saturated(SaturationKind::QueueFull));
                         }
                         outcome
@@ -610,13 +652,25 @@ impl Invoker {
                                 let start = c.start_kind_for_first_use();
                                 (c, start, wait, flight)
                             }
-                            Err(e) => return Err(InvokeError::Failed(e)),
+                            Err(e) => {
+                                self.trace_refusal(
+                                    &tctx,
+                                    function,
+                                    &format!("provision failed: {e:#}"),
+                                );
+                                return Err(InvokeError::Failed(e));
+                            }
                         }
                     }
                     AcquireOutcome::TimedOut => {
                         self.dispatcher.note_expired();
                         self.scaler.note_saturated();
                         self.metrics.note_queue_expired(function);
+                        self.trace_refusal(
+                            &tctx,
+                            function,
+                            "saturated: no capacity freed within the dispatch deadline",
+                        );
                         return Err(InvokeError::Saturated(SaturationKind::DeadlineExpired));
                     }
                     AcquireOutcome::Interrupted => {
@@ -646,7 +700,9 @@ impl Invoker {
             None
         };
         if let Some(leader) = self.batcher.lead_with_window(&spec, image_seed, window_override) {
-            return self.execute_batch_leader(function, &spec, container, start, queue_wait, leader);
+            return self.execute_batch_leader(
+                function, &spec, container, start, queue_wait, leader, &tctx,
+            );
         }
 
         // Execute under the CPU governor.
@@ -655,6 +711,8 @@ impl Invoker {
             Ok(v) => v,
             Err(e) => {
                 // A failed container is not returned to the pool.
+                let pc = container.provision_cost.attributed_to(start);
+                self.trace_failure(&tctx, function, start, queue_wait, &pc, &format!("{e:#}"));
                 self.pool.retire(container);
                 return Err(InvokeError::Failed(e));
             }
@@ -671,6 +729,7 @@ impl Invoker {
                 // it so its capacity slot is returned — dropping it
                 // here used to leak the slot permanently (the pool's
                 // `total` never decremented).
+                self.trace_failure(&tctx, function, start, queue_wait, &pc, &format!("{e:#}"));
                 self.pool.retire(container);
                 return Err(InvokeError::Failed(e));
             }
@@ -697,13 +756,93 @@ impl Invoker {
             billed_ms: line.billed_ms,
             cost_dollars: line.total_dollars(),
             top1: prediction.top1,
+            trace_id: tctx.id.clone(),
         };
         self.metrics.record(record.clone());
         self.note_policy_record(&spec, &record);
+        self.finish_trace(&tctx, &record, None);
 
         self.release_or_retire(container, function);
 
         Ok(InvokeOutcome { record, prediction })
+    }
+
+    /// Mint this invocation's trace context. With tracing off this is
+    /// a single `bool` load (`begin` returns `None`) and the SLO read
+    /// is skipped — the context stays inert for the whole request.
+    fn begin_trace(
+        &self,
+        spec: &FunctionSpec,
+        submitted_at: Option<Nanos>,
+        arrived_at: Nanos,
+    ) -> TraceCtx {
+        let id = self.trace.begin();
+        let slo_ms = if id.is_some() { self.policy.slo_target_ms(spec) } else { 0 };
+        TraceCtx { id, submitted_at, arrived_at, slo_ms }
+    }
+
+    /// Land a successful invocation's trace. Called strictly AFTER
+    /// `MetricsSink::record` and the policy feed have both returned:
+    /// `trace.ring` is the last rank in `PLATFORM_LOCK_ORDER` and is
+    /// only ever taken standalone.
+    fn finish_trace(
+        &self,
+        ctx: &TraceCtx,
+        record: &InvocationRecord,
+        shared_exec_with: Option<String>,
+    ) {
+        if let Some(id) = &ctx.id {
+            self.trace.finish(Trace::from_record(
+                id,
+                record,
+                ctx.arrived_at,
+                ctx.submitted_at,
+                ctx.slo_ms,
+                shared_exec_with,
+            ));
+        }
+    }
+
+    /// Land a refusal trace (queue full, deadline expired, provision
+    /// or batch failure before any container work was attributable).
+    fn trace_refusal(&self, ctx: &TraceCtx, function: &str, error: &str) {
+        if let Some(id) = &ctx.id {
+            let waited = Duration::from_nanos(self.clock.now() - ctx.arrived_at);
+            self.trace.finish(Trace::refused(
+                id,
+                function,
+                ctx.arrived_at,
+                ctx.submitted_at,
+                waited,
+                error.to_string(),
+            ));
+        }
+    }
+
+    /// Land a failure trace for a request that did hold a container:
+    /// the provision components are known and itemized even though the
+    /// execution (or its billing) failed.
+    fn trace_failure(
+        &self,
+        ctx: &TraceCtx,
+        function: &str,
+        start: StartKind,
+        queue: Duration,
+        pc: &ProvisionCost,
+        error: &str,
+    ) {
+        if let Some(id) = &ctx.id {
+            self.trace.finish(Trace::failed(
+                id,
+                function,
+                start,
+                ctx.arrived_at,
+                ctx.submitted_at,
+                queue,
+                pc,
+                error.to_string(),
+            ));
+        }
     }
 
     /// Stream one finished record into the policy controllers. Called
@@ -754,7 +893,14 @@ impl Invoker {
         start: StartKind,
         queue_wait: Duration,
         mut leader: super::batcher::BatchLeader<'_>,
+        tctx: &TraceCtx,
     ) -> Result<InvokeOutcome, InvokeError> {
+        // Stamp the leader's trace id on the batch before any follower
+        // can observe a completed share: followers annotate their
+        // timelines with the id of the execution span they rode.
+        if let Some(id) = &tctx.id {
+            leader.set_trace(id);
+        }
         // Targeted wake: the batch this leader just opened is joinable
         // by THIS function's parked requests only, so only its shard's
         // waiters need to re-probe for the join door.
@@ -785,6 +931,8 @@ impl Invoker {
                 // and the broken container is not returned to the
                 // pool (same as the solo path).
                 leader.fail(format!("{e:#}"));
+                let pc = container.provision_cost.attributed_to(start);
+                self.trace_failure(tctx, function, start, queue_wait, &pc, &format!("{e:#}"));
                 self.pool.retire(container);
                 return Err(InvokeError::Failed(e));
             }
@@ -802,6 +950,7 @@ impl Invoker {
                 // Followers already hold their shares and bill
                 // themselves; only the leader's charge failed, so only
                 // its container slot is returned.
+                self.trace_failure(tctx, function, start, queue_wait, &pc, &format!("{e:#}"));
                 self.pool.retire(container);
                 return Err(InvokeError::Failed(e));
             }
@@ -830,9 +979,11 @@ impl Invoker {
             billed_ms: line.billed_ms,
             cost_dollars: line.total_dollars(),
             top1: share.prediction.top1,
+            trace_id: tctx.id.clone(),
         };
         self.metrics.record(record.clone());
         self.note_policy_record(spec, &record);
+        self.finish_trace(tctx, &record, None);
         self.release_or_retire(container, function);
         Ok(InvokeOutcome { record, prediction: share.prediction })
     }
@@ -849,14 +1000,22 @@ impl Invoker {
         spec: &Arc<FunctionSpec>,
         member: BatchMember,
         queue_wait: Duration,
+        tctx: &TraceCtx,
     ) -> Result<InvokeOutcome, InvokeError> {
-        let share = member
-            .wait()
-            .map_err(|msg| InvokeError::Failed(anyhow!("batched execution failed: {msg}")))?;
-        let line = self
-            .billing
-            .charge(function, spec.memory_mb, share.billed_share)
-            .map_err(InvokeError::Failed)?;
+        let share = match member.wait() {
+            Ok(share) => share,
+            Err(msg) => {
+                self.trace_refusal(tctx, function, &format!("batched execution failed: {msg}"));
+                return Err(InvokeError::Failed(anyhow!("batched execution failed: {msg}")));
+            }
+        };
+        let line = match self.billing.charge(function, spec.memory_mb, share.billed_share) {
+            Ok(line) => line,
+            Err(e) => {
+                self.trace_refusal(tctx, function, &format!("{e:#}"));
+                return Err(InvokeError::Failed(e));
+            }
+        };
         let record = InvocationRecord {
             function: function.to_string(),
             memory_mb: spec.memory_mb,
@@ -878,9 +1037,13 @@ impl Invoker {
             billed_ms: line.billed_ms,
             cost_dollars: line.total_dollars(),
             top1: share.prediction.top1,
+            trace_id: tctx.id.clone(),
         };
         self.metrics.record(record.clone());
         self.note_policy_record(spec, &record);
+        // A follower never ran the pass itself: its timeline points at
+        // the leader's execution span.
+        self.finish_trace(tctx, &record, share.leader_trace.clone());
         Ok(InvokeOutcome { record, prediction: share.prediction })
     }
 
@@ -904,6 +1067,20 @@ impl Invoker {
         &self,
         function: &str,
         seeds: &[u64],
+    ) -> Vec<Result<InvokeOutcome, InvokeError>> {
+        self.invoke_preformed_from(function, seeds, None)
+    }
+
+    /// [`Self::invoke_preformed`] with explicit origins: `origins[i]`
+    /// is seed `i`'s async submit time, so each member's trace carries
+    /// its own pre-platform `admission` wait (the group shares one
+    /// queue wait, but its members may have queued at different
+    /// times).
+    pub fn invoke_preformed_from(
+        &self,
+        function: &str,
+        seeds: &[u64],
+        origins: Option<&[Nanos]>,
     ) -> Vec<Result<InvokeOutcome, InvokeError>> {
         let spec = match self.registry.get(function) {
             Ok(spec) => spec,
@@ -946,6 +1123,21 @@ impl Invoker {
         // The same admission machinery as the solo path, minus the
         // batch-join doors: this request group IS the batch already.
         let t_queue_start = self.clock.now();
+        // One trace per admitted member (member 0 owns the execution
+        // span; the rest share it) — all inert `None`s when tracing is
+        // off.
+        let tctxs: Vec<TraceCtx> = admitted
+            .iter()
+            .map(|&(i, _)| {
+                let submitted = origins.and_then(|o| o.get(i)).copied();
+                self.begin_trace(&spec, submitted, t_queue_start)
+            })
+            .collect();
+        let trace_all_refused = |err: &str| {
+            for ctx in &tctxs {
+                self.trace_refusal(ctx, function, err);
+            }
+        };
         let outcome = match self.pool.acquire(function) {
             Some(c) => AcquireOutcome::Container(c),
             None => match self.dispatcher.admit(&spec) {
@@ -957,6 +1149,9 @@ impl Invoker {
                         self.dispatcher.note_expired();
                         self.scaler.note_saturated();
                         self.metrics.note_queue_expired(function);
+                        trace_all_refused(
+                            "saturated: no capacity freed within the dispatch deadline",
+                        );
                         for &(i, _) in &admitted {
                             results[i] = Some(Err(InvokeError::Saturated(
                                 SaturationKind::DeadlineExpired,
@@ -977,6 +1172,7 @@ impl Invoker {
                     if matches!(o, AcquireOutcome::TimedOut) {
                         self.scaler.note_saturated();
                         self.metrics.note_queue_expired(function);
+                        trace_all_refused("saturated: dispatch queue full");
                         for &(i, _) in &admitted {
                             results[i] =
                                 Some(Err(InvokeError::Saturated(SaturationKind::QueueFull)));
@@ -1009,6 +1205,7 @@ impl Invoker {
                     }
                     Err(e) => {
                         let msg = format!("{e:#}");
+                        trace_all_refused(&format!("provision failed: {msg}"));
                         for &(i, _) in &admitted {
                             results[i] = Some(Err(InvokeError::Failed(anyhow!("{msg}"))));
                         }
@@ -1036,6 +1233,7 @@ impl Invoker {
             Err(e) => {
                 self.pool.retire(container);
                 let msg = format!("{e:#}");
+                trace_all_refused(&format!("batched execution failed: {msg}"));
                 for &(i, _) in &admitted {
                     results[i] = Some(Err(InvokeError::Failed(anyhow!(
                         "batched execution failed: {msg}"
@@ -1052,6 +1250,7 @@ impl Invoker {
             admitted.iter().zip(predictions).enumerate()
         {
             let leader = member == 0;
+            let tctx = &tctxs[member];
             let billed =
                 if leader { pc.handler_time() + billed_share } else { billed_share };
             let line = match self.billing.charge(function, spec.memory_mb, billed) {
@@ -1062,6 +1261,7 @@ impl Invoker {
                         // the container's capacity slot is returned.
                         retire = true;
                     }
+                    self.trace_refusal(tctx, function, &format!("{e:#}"));
                     results[slot] = Some(Err(InvokeError::Failed(e)));
                     continue;
                 }
@@ -1087,9 +1287,14 @@ impl Invoker {
                 billed_ms: line.billed_ms,
                 cost_dollars: line.total_dollars(),
                 top1: prediction.top1,
+                trace_id: tctx.id.clone(),
             };
             self.metrics.record(record.clone());
             self.note_policy_record(&spec, &record);
+            // Member 0 played the leader: its trace owns the shared
+            // execution span, every other member points at it.
+            let shared = if leader { None } else { tctxs[0].id.clone() };
+            self.finish_trace(tctx, &record, shared);
             results[slot] = Some(Ok(InvokeOutcome { record, prediction }));
         }
         if retire {
@@ -2345,5 +2550,203 @@ mod tests {
         assert!(p.policy.snapshot_view("sq").is_some());
         p.undeploy("sq").unwrap();
         assert!(p.policy.snapshot_view("sq").is_none());
+    }
+
+    // ---- invocation tracing (trace.enabled / the exemplar ring) ----
+
+    use super::super::trace::Stage;
+
+    fn traced_platform(sample_rate: f64) -> (Arc<Invoker>, Arc<ManualClock>, Arc<MockEngine>) {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            trace: crate::configparse::TraceConfig {
+                enabled: true,
+                sample_rate,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let p = Arc::new(Invoker::new(cfg, engine.clone(), clock.clone()));
+        (p, clock, engine)
+    }
+
+    /// Acceptance: with everything at defaults the trace layer is
+    /// inert — no trace ids minted, no ring entries, every gauge zero.
+    /// The pipeline is the untraced one bit-for-bit.
+    #[test]
+    fn tracing_off_by_default_is_inert() {
+        let (p, _, _) = platform();
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        for i in 0..3 {
+            let out = p.invoke("sq", i).unwrap();
+            assert_eq!(out.record.trace_id, None, "no trace id minted while off");
+        }
+        assert!(!p.trace.enabled());
+        assert_eq!(p.trace.ring_len(), 0);
+        assert_eq!(p.trace.retained(), 0);
+        assert_eq!(p.trace.sampled_out(), 0);
+        assert_eq!(p.trace.ring_bytes(), 0);
+    }
+
+    /// Acceptance: on a ManualClock the cold trace's span durations
+    /// are exact — each provision child equals the record's
+    /// per-component cost, and the duration-bearing spans sum to the
+    /// record's response. The warm trace drops the provision subtree
+    /// and holds the same identity.
+    #[test]
+    fn cold_and_warm_traces_hold_span_sum_identity() {
+        let (p, _, _) = traced_platform(1.0);
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+
+        let cold = p.invoke("sq", 1).unwrap().record;
+        let t = p.trace.get(cold.trace_id.as_deref().unwrap()).unwrap();
+        assert_eq!(t.start, StartKind::Cold);
+        assert!(t.matches_kind("cold"));
+        assert_eq!(t.stage_sum(), cold.response());
+        for (stage, dur) in [
+            (Stage::Sandbox, cold.sandbox),
+            (Stage::RuntimeInit, cold.runtime_init),
+            (Stage::PackageFetch, cold.package_fetch),
+            (Stage::ModelLoad, cold.model_load),
+            (Stage::Restore, cold.restore),
+        ] {
+            assert_eq!(t.span(stage).unwrap().dur, dur, "{stage:?}");
+        }
+        assert_eq!(t.span(Stage::Provision).unwrap().dur, cold.cold_overhead());
+        assert_eq!(t.span(Stage::KernelExec).unwrap().dur, cold.predict);
+
+        let warm = p.invoke("sq", 2).unwrap().record;
+        let t = p.trace.get(warm.trace_id.as_deref().unwrap()).unwrap();
+        assert_eq!(t.start, StartKind::Warm);
+        assert_eq!(t.kind(), "steady", "warm under the default SLO");
+        assert_eq!(t.stage_sum(), warm.response());
+        assert!(t.span(Stage::Provision).is_none(), "warm start never provisioned");
+        assert_eq!(p.trace.retained(), 2);
+        assert_eq!(p.trace.sampled_out(), 0);
+    }
+
+    /// A snapshot-restored provision traces as `restored` with a real
+    /// restore child and zeroed cold-only components, and the span-sum
+    /// identity still holds.
+    #[test]
+    fn restored_trace_has_restore_child_and_identity() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            snapshot: crate::configparse::SnapshotConfig {
+                enabled: true,
+                capture_policy: crate::configparse::CapturePolicy::Sync,
+                ..Default::default()
+            },
+            trace: crate::configparse::TraceConfig { enabled: true, ..Default::default() },
+            ..Default::default()
+        };
+        let p = Arc::new(Invoker::new(cfg, engine, clock));
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        p.evict_all();
+        let rest = p.invoke("sq", 2).unwrap().record;
+        assert_eq!(rest.start, StartKind::Restored);
+        let t = p.trace.get(rest.trace_id.as_deref().unwrap()).unwrap();
+        assert!(t.matches_kind("restored"));
+        assert_eq!(t.stage_sum(), rest.response());
+        assert_eq!(t.span(Stage::Restore).unwrap().dur, rest.restore);
+        assert!(t.span(Stage::Restore).unwrap().dur > Duration::ZERO);
+        assert_eq!(t.span(Stage::ModelLoad).unwrap().dur, Duration::ZERO);
+        // Restored starts are always interesting: retained even at the
+        // default sample_rate of 0.
+        assert_eq!(p.trace.recent("sq", Some("restored"), 10).len(), 1);
+    }
+
+    /// Batch members each own a trace: the leader's holds the real
+    /// `kernel_exec` pass, each follower's links back to it via
+    /// `shared_exec_with` (and the exec-span note), and every member
+    /// still satisfies its own span-sum identity.
+    #[test]
+    fn batch_followers_share_the_leader_exec_span() {
+        let (p, _, _) = traced_platform(1.0);
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 0).unwrap(); // warm one container
+        let outs: Vec<InvokeOutcome> =
+            p.invoke_preformed("sq", &[1, 2, 3]).into_iter().map(|r| r.unwrap()).collect();
+        let leader_id = outs[0].record.trace_id.clone().unwrap();
+        let leader = p.trace.get(&leader_id).unwrap();
+        assert_eq!(leader.shared_exec_with, None);
+        assert_eq!(leader.batch_size, 3);
+        for out in &outs[1..] {
+            let fid = out.record.trace_id.as_deref().unwrap();
+            assert_ne!(fid, leader_id, "each member owns a distinct trace");
+            let follower = p.trace.get(fid).unwrap();
+            assert_eq!(follower.shared_exec_with.as_deref(), Some(leader_id.as_str()));
+            assert_eq!(follower.stage_sum(), out.record.response());
+            let note = &follower.span(Stage::KernelExec).unwrap().note;
+            assert!(note.contains(&format!("shared_with={leader_id}")), "{note}");
+        }
+    }
+
+    /// A queue refusal leaves an always-retained error trace carrying
+    /// the full (virtual) wait, even with steady sampling at zero.
+    #[test]
+    fn queue_expiry_leaves_an_error_trace() {
+        let engine = Arc::new(MockEngine::paper_zoo());
+        let clock = ManualClock::new();
+        let cfg = PlatformConfig {
+            max_containers: 1,
+            trace: crate::configparse::TraceConfig { enabled: true, ..Default::default() },
+            ..Default::default()
+        };
+        let p = Invoker::new(cfg, engine, clock.clone());
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 1).unwrap();
+        let held = p.pool.acquire("sq").unwrap();
+        assert!(matches!(p.invoke("sq", 2), Err(InvokeError::Saturated(_))));
+        p.pool.release(held);
+        let errors = p.trace.recent("sq", Some("error"), 10);
+        assert_eq!(errors.len(), 1);
+        let t = &errors[0];
+        assert_eq!(t.kind(), "error");
+        assert!(t.error.as_deref().unwrap().contains("deadline"), "{:?}", t.error);
+        assert!(
+            t.span(Stage::QueueWait).unwrap().dur >= Duration::from_secs(2),
+            "refusal trace carries the virtual queue wait"
+        );
+    }
+
+    /// Tail-based sampling: interesting traces (cold, SLO-violating)
+    /// bypass the coin; steady warm traffic is dropped at
+    /// `sample_rate = 0` and counted in `traces_sampled_out`.
+    #[test]
+    fn steady_traffic_sampled_out_but_tail_always_kept() {
+        let (p, _, _) = traced_platform(0.0);
+        p.deploy("sq", "squeezenet", "pallas", 1024).unwrap();
+        p.invoke("sq", 0).unwrap(); // cold: always kept
+        for i in 1..=5 {
+            let out = p.invoke("sq", i).unwrap();
+            assert!(out.record.trace_id.is_some(), "ids minted even when sampled out");
+        }
+        assert_eq!(p.trace.retained(), 1, "only the cold exemplar survived");
+        assert_eq!(p.trace.sampled_out(), 5);
+        assert_eq!(p.trace.ring_len(), 1);
+
+        // A tight SLO turns the same steady traffic into violators —
+        // all retained despite the zero rate.
+        let (p, _, _) = traced_platform(0.0);
+        p.deploy_full(
+            "sq",
+            "squeezenet",
+            "pallas",
+            1024,
+            FunctionPolicy { slo_target_ms: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        for i in 0..4 {
+            p.invoke("sq", i).unwrap();
+        }
+        assert_eq!(p.trace.retained(), 4, "every SLO violator kept");
+        assert_eq!(p.trace.sampled_out(), 0);
+        let slow = p.trace.recent("sq", Some("slow"), 10);
+        assert_eq!(slow.len(), 4);
+        assert!(slow.iter().all(|t| t.slo_violation));
     }
 }

@@ -100,6 +100,10 @@ pub struct InvocationRecord {
     pub cost_dollars: f64,
     /// Classification output (sanity checks).
     pub top1: i32,
+    /// Trace id minted by the tracing subsystem (`trace.enabled`);
+    /// `None` whenever tracing is off, so the default pipeline carries
+    /// no extra allocation.
+    pub trace_id: Option<String>,
 }
 
 impl InvocationRecord {
@@ -472,6 +476,7 @@ pub(crate) fn test_record(
         billed_ms: predict_ms.div_ceil(100) * 100,
         cost_dollars: 1e-6,
         top1: 42,
+        trace_id: None,
     }
 }
 

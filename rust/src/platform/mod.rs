@@ -14,6 +14,7 @@ pub mod registry;
 pub mod scaler;
 pub mod snapshots;
 pub mod throttle;
+pub mod trace;
 
 pub use async_invoke::{AsyncInvocation, AsyncInvoker, AsyncStatus, SubmitError};
 pub use batcher::Batcher;
@@ -29,3 +30,4 @@ pub use registry::{FunctionPolicy, FunctionRegistry, FunctionSpec};
 pub use scaler::Scaler;
 pub use snapshots::{SnapshotKey, SnapshotStore};
 pub use throttle::CpuGovernor;
+pub use trace::{Span, Stage, Trace, TraceSink};

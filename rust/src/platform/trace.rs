@@ -1,0 +1,887 @@
+//! End-to-end invocation tracing: typed span timelines with
+//! tail-based exemplar retention.
+//!
+//! Every invocation that crosses the platform while `trace.enabled`
+//! is on gets ONE [`Trace`]: an ordered span timeline — `admission`
+//! (pre-dispatch wait; the async queue for submitted invocations),
+//! `queue_wait`, `provision` (with `sandbox` / `runtime_init` /
+//! `package_fetch` / `model_load` / `restore` child spans),
+//! `batch_collect`, `kernel_exec` (annotated with the kernel rung and
+//! rung-cache hits/misses), and a zero-width `billing` marker. The
+//! timeline is assembled lock-free on the invoking thread from the
+//! finished [`InvocationRecord`], whose components the hot-path
+//! modules already measure, so span durations are the *same numbers*
+//! the metrics sink aggregates: the duration-bearing spans sum
+//! exactly to [`InvocationRecord::response`] by construction
+//! ([`Trace::stage_sum`]), and the `provision` children equal the
+//! container's per-component provision costs exactly.
+//!
+//! Batch followers share the leader's execution span — their
+//! `kernel_exec` carries the leader's trace id
+//! ([`Trace::shared_exec_with`]) — but own their `queue_wait` and
+//! `batch_collect` spans. Async invocations carry trace context
+//! across the queue: the worker threads the submit timestamp through,
+//! and it becomes the `admission` span.
+//!
+//! Completed traces land in a capacity-bounded ring with
+//! **tail-based sampling**: "interesting" traces (cold/restored
+//! starts, SLO-budget violations, errors, queue expiries) are always
+//! retained, the rest pass a `trace.sample_rate` coin flip drawn from
+//! a seeded [`SplitMix64`] — exemplars for the paper's cold-start
+//! tail are never lost, steady-state overhead stays O(1), and a
+//! `ManualClock` run is fully deterministic. With `trace.enabled`
+//! off (the default) [`TraceSink::begin`] returns `None` and no
+//! trace lock is ever acquired: the pipeline is preserved
+//! bit-for-bit.
+//!
+//! Lock discipline: the only tracked lock is `ring` (ranked
+//! `trace.ring` in `PLATFORM_LOCK_ORDER`), taken *standalone* at the
+//! very end of an invocation — strictly after the metrics sink's
+//! `record` and the policy feed return — and never held across any
+//! call back into the platform. The sampling `rng` rides the
+//! `platform.rng` rank and is likewise drawn-and-dropped before the
+//! ring is touched.
+
+use super::container::ProvisionCost;
+use super::metrics::{InvocationRecord, StartKind};
+use crate::configparse::TraceConfig;
+use crate::util::clock::Nanos;
+use crate::util::json::{obj, Json};
+use crate::util::{plock, SplitMix64};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The typed span vocabulary — every stage of the serving path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Pre-dispatch wait: zero-width for a sync arrival, the queue
+    /// residency for an async invocation whose context crossed the
+    /// worker queue. NOT part of the platform response time.
+    Admission,
+    /// Admission/dispatch-queue wait (the record's `queue`).
+    QueueWait,
+    /// Container provisioning (cold or restored); parent of the five
+    /// component child spans below.
+    Provision,
+    Sandbox,
+    RuntimeInit,
+    PackageFetch,
+    ModelLoad,
+    Restore,
+    /// Batch-collector residency: the leader's window wait, a
+    /// follower's join-to-flush wait.
+    BatchCollect,
+    /// The forward pass (solo or the whole batched pass).
+    KernelExec,
+    /// Zero-width marker carrying the billed split.
+    Billing,
+}
+
+impl Stage {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::Provision => "provision",
+            Stage::Sandbox => "sandbox",
+            Stage::RuntimeInit => "runtime_init",
+            Stage::PackageFetch => "package_fetch",
+            Stage::ModelLoad => "model_load",
+            Stage::Restore => "restore",
+            Stage::BatchCollect => "batch_collect",
+            Stage::KernelExec => "kernel_exec",
+            Stage::Billing => "billing",
+        }
+    }
+
+    /// The five provision components nested under [`Stage::Provision`].
+    pub fn is_provision_child(&self) -> bool {
+        matches!(
+            self,
+            Stage::Sandbox
+                | Stage::RuntimeInit
+                | Stage::PackageFetch
+                | Stage::ModelLoad
+                | Stage::Restore
+        )
+    }
+}
+
+/// One span of a trace timeline. `start` is an absolute platform
+/// clock reading; rendering subtracts the trace's `started_at`.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub stage: Stage,
+    pub start: Nanos,
+    pub dur: Duration,
+    /// Stage annotation (kernel rung, rung-cache hits, billed split);
+    /// empty = none.
+    pub note: String,
+}
+
+impl Span {
+    fn to_json(&self, trace_start: Nanos) -> Json {
+        obj(vec![
+            ("stage", Json::Str(self.stage.as_str().to_string())),
+            (
+                "parent",
+                if self.stage.is_provision_child() {
+                    Json::Str("provision".to_string())
+                } else {
+                    Json::Null
+                },
+            ),
+            (
+                "offset_s",
+                Json::Num(self.start.saturating_sub(trace_start) as f64 / 1e9),
+            ),
+            ("duration_s", Json::Num(self.dur.as_secs_f64())),
+            (
+                "note",
+                if self.note.is_empty() { Json::Null } else { Json::Str(self.note.clone()) },
+            ),
+        ])
+    }
+}
+
+/// One invocation's complete causal timeline.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub trace_id: String,
+    pub function: String,
+    /// Provisioning class of the serving container. Refusals (queue
+    /// expiry, batch failure) never touched a container and report
+    /// `Warm` here; their `error` drives classification instead.
+    pub start: StartKind,
+    /// When the request entered the platform: the async submit time
+    /// when the context crossed the queue, otherwise dispatch arrival.
+    pub started_at: Nanos,
+    pub spans: Vec<Span>,
+    /// Platform-side response time (the record's decomposition sum);
+    /// for a refusal, how long the client was held before the error.
+    pub response: Duration,
+    /// The SLO budget this trace was judged against (0 = none).
+    pub slo_target_ms: u64,
+    pub slo_violation: bool,
+    pub error: Option<String>,
+    pub batch_size: usize,
+    /// For a batch follower: the leader trace that owns the shared
+    /// `kernel_exec` span.
+    pub shared_exec_with: Option<String>,
+}
+
+impl Trace {
+    /// Assemble the timeline from a finished invocation record. The
+    /// record's components ARE the span durations, so the identity
+    /// `stage_sum() == record.response()` holds by construction.
+    pub fn from_record(
+        trace_id: &str,
+        r: &InvocationRecord,
+        arrived_at: Nanos,
+        submitted_at: Option<Nanos>,
+        slo_target_ms: u64,
+        shared_exec_with: Option<String>,
+    ) -> Trace {
+        let started_at = submitted_at.unwrap_or(arrived_at);
+        let mut spans = Vec::with_capacity(11);
+        spans.push(Span {
+            stage: Stage::Admission,
+            start: started_at,
+            dur: Duration::from_nanos(arrived_at.saturating_sub(started_at)),
+            note: String::new(),
+        });
+        let mut cursor = arrived_at;
+        spans.push(Span {
+            stage: Stage::QueueWait,
+            start: cursor,
+            dur: r.queue,
+            note: String::new(),
+        });
+        cursor += r.queue.as_nanos() as Nanos;
+        if r.start != StartKind::Warm {
+            spans.push(Span {
+                stage: Stage::Provision,
+                start: cursor,
+                dur: r.cold_overhead(),
+                note: String::new(),
+            });
+            for (stage, dur) in [
+                (Stage::Sandbox, r.sandbox),
+                (Stage::RuntimeInit, r.runtime_init),
+                (Stage::PackageFetch, r.package_fetch),
+                (Stage::ModelLoad, r.model_load),
+                (Stage::Restore, r.restore),
+            ] {
+                spans.push(Span { stage, start: cursor, dur, note: String::new() });
+                cursor += dur.as_nanos() as Nanos;
+            }
+        }
+        if r.batch_wait > Duration::ZERO || r.batch_size > 1 {
+            spans.push(Span {
+                stage: Stage::BatchCollect,
+                start: cursor,
+                dur: r.batch_wait,
+                note: String::new(),
+            });
+            cursor += r.batch_wait.as_nanos() as Nanos;
+        }
+        let mut exec_note = format!(
+            "kernel_batch_n={} batch={} rung_hits={} rung_misses={}",
+            r.kernel_batch_n, r.batch_size, r.batch_kernel_hits, r.batch_kernel_misses
+        );
+        if let Some(leader) = &shared_exec_with {
+            exec_note.push_str(&format!(" shared_with={leader}"));
+        }
+        spans.push(Span {
+            stage: Stage::KernelExec,
+            start: cursor,
+            dur: r.predict,
+            note: exec_note,
+        });
+        cursor += r.predict.as_nanos() as Nanos;
+        spans.push(Span {
+            stage: Stage::Billing,
+            start: cursor,
+            dur: Duration::ZERO,
+            note: format!("billed_ms={} cost=${:.8}", r.billed_ms, r.cost_dollars),
+        });
+        let response = r.response();
+        Trace {
+            trace_id: trace_id.to_string(),
+            function: r.function.clone(),
+            start: r.start,
+            started_at,
+            spans,
+            response,
+            slo_target_ms,
+            slo_violation: slo_target_ms > 0
+                && response > Duration::from_millis(slo_target_ms),
+            error: None,
+            batch_size: r.batch_size,
+            shared_exec_with,
+        }
+    }
+
+    /// A refusal timeline: the request waited `waited` in the
+    /// dispatch queue (or batch collector) and got an error instead
+    /// of a container. Always retained (errors are interesting).
+    pub fn refused(
+        trace_id: &str,
+        function: &str,
+        arrived_at: Nanos,
+        submitted_at: Option<Nanos>,
+        waited: Duration,
+        error: String,
+    ) -> Trace {
+        let started_at = submitted_at.unwrap_or(arrived_at);
+        let spans = vec![
+            Span {
+                stage: Stage::Admission,
+                start: started_at,
+                dur: Duration::from_nanos(arrived_at.saturating_sub(started_at)),
+                note: String::new(),
+            },
+            Span { stage: Stage::QueueWait, start: arrived_at, dur: waited, note: String::new() },
+        ];
+        Trace {
+            trace_id: trace_id.to_string(),
+            function: function.to_string(),
+            start: StartKind::Warm,
+            started_at,
+            spans,
+            response: waited,
+            slo_target_ms: 0,
+            slo_violation: false,
+            error: Some(error),
+            batch_size: 1,
+            shared_exec_with: None,
+        }
+    }
+
+    /// An execution-failure timeline: the container was provisioned
+    /// (its per-component costs are real) but the forward pass or the
+    /// billing step failed.
+    pub fn failed(
+        trace_id: &str,
+        function: &str,
+        start: StartKind,
+        arrived_at: Nanos,
+        submitted_at: Option<Nanos>,
+        queue: Duration,
+        pc: &ProvisionCost,
+        error: String,
+    ) -> Trace {
+        let started_at = submitted_at.unwrap_or(arrived_at);
+        let mut spans = vec![
+            Span {
+                stage: Stage::Admission,
+                start: started_at,
+                dur: Duration::from_nanos(arrived_at.saturating_sub(started_at)),
+                note: String::new(),
+            },
+            Span { stage: Stage::QueueWait, start: arrived_at, dur: queue, note: String::new() },
+        ];
+        let mut cursor = arrived_at + queue.as_nanos() as Nanos;
+        if start != StartKind::Warm {
+            spans.push(Span {
+                stage: Stage::Provision,
+                start: cursor,
+                dur: pc.total(),
+                note: String::new(),
+            });
+            for (stage, dur) in [
+                (Stage::Sandbox, pc.sandbox),
+                (Stage::RuntimeInit, pc.runtime_init),
+                (Stage::PackageFetch, pc.package_fetch),
+                (Stage::ModelLoad, pc.model_load),
+                (Stage::Restore, pc.restore),
+            ] {
+                spans.push(Span { stage, start: cursor, dur, note: String::new() });
+                cursor += dur.as_nanos() as Nanos;
+            }
+        }
+        Trace {
+            trace_id: trace_id.to_string(),
+            function: function.to_string(),
+            start,
+            started_at,
+            spans,
+            response: queue + pc.total(),
+            slo_target_ms: 0,
+            slo_violation: false,
+            error: Some(error),
+            batch_size: 1,
+            shared_exec_with: None,
+        }
+    }
+
+    /// Sum of the duration-bearing spans — everything the client
+    /// waited for platform-side. Excludes the `provision` parent (the
+    /// sum of its children), the `admission` span (pre-platform
+    /// wait), and the zero-width `billing` marker; equals
+    /// [`InvocationRecord::response`] exactly for record-built traces.
+    pub fn stage_sum(&self) -> Duration {
+        self.spans
+            .iter()
+            .filter(|s| !matches!(s.stage, Stage::Provision | Stage::Admission | Stage::Billing))
+            .map(|s| s.dur)
+            .sum()
+    }
+
+    pub fn span(&self, stage: Stage) -> Option<&Span> {
+        self.spans.iter().find(|s| s.stage == stage)
+    }
+
+    /// Tail-based retention predicate: cold/restored starts, SLO
+    /// violations, and errors (including queue expiries) are always
+    /// kept; everything else is subject to `trace.sample_rate`.
+    pub fn interesting(&self) -> bool {
+        self.error.is_some() || self.start != StartKind::Warm || self.slo_violation
+    }
+
+    /// Primary classification label (display; filters check the
+    /// individual flags via [`Trace::matches_kind`]).
+    pub fn kind(&self) -> &'static str {
+        if self.error.is_some() {
+            "error"
+        } else if self.start == StartKind::Cold {
+            "cold"
+        } else if self.start == StartKind::Restored {
+            "restored"
+        } else if self.slo_violation {
+            "slow"
+        } else {
+            "steady"
+        }
+    }
+
+    /// Query-filter match: a cold trace that also blew its SLO budget
+    /// matches both `cold` and `slow`.
+    pub fn matches_kind(&self, kind: &str) -> bool {
+        match kind {
+            "cold" => self.start == StartKind::Cold,
+            "restored" => self.start == StartKind::Restored,
+            "slow" => self.slo_violation,
+            "error" => self.error.is_some(),
+            _ => false,
+        }
+    }
+
+    /// Approximate heap + inline footprint, the unit of the
+    /// `trace_ring_bytes` gauge.
+    pub fn approx_bytes(&self) -> usize {
+        let strings = self.trace_id.len()
+            + self.function.len()
+            + self.error.as_ref().map_or(0, String::len)
+            + self.shared_exec_with.as_ref().map_or(0, String::len)
+            + self.spans.iter().map(|s| s.note.len()).sum::<usize>();
+        std::mem::size_of::<Trace>() + self.spans.len() * std::mem::size_of::<Span>() + strings
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("trace_id", Json::Str(self.trace_id.clone())),
+            ("function", Json::Str(self.function.clone())),
+            ("start", Json::Str(self.start.to_string())),
+            ("kind", Json::Str(self.kind().to_string())),
+            ("started_at_s", Json::Num(self.started_at as f64 / 1e9)),
+            ("response_s", Json::Num(self.response.as_secs_f64())),
+            ("slo_target_ms", Json::Num(self.slo_target_ms as f64)),
+            ("slo_violation", Json::Bool(self.slo_violation)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            (
+                "shared_exec_with",
+                match &self.shared_exec_with {
+                    Some(t) => Json::Str(t.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(|s| s.to_json(self.started_at)).collect()),
+            ),
+        ])
+    }
+
+    /// One greppable JSON line per finished invocation
+    /// (`trace.log_events`): trace id, function, start kind, and the
+    /// per-stage duration breakdown.
+    pub fn event_line(&self) -> String {
+        let stages: Vec<(&str, Json)> = self
+            .spans
+            .iter()
+            .filter(|s| s.stage != Stage::Provision)
+            .map(|s| (s.stage.as_str(), Json::Num(s.dur.as_secs_f64())))
+            .collect();
+        obj(vec![
+            ("event", Json::Str("invocation".to_string())),
+            ("trace_id", Json::Str(self.trace_id.clone())),
+            ("function", Json::Str(self.function.clone())),
+            ("start", Json::Str(self.start.to_string())),
+            ("kind", Json::Str(self.kind().to_string())),
+            ("response_s", Json::Num(self.response.as_secs_f64())),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("stages", obj(stages)),
+        ])
+        .to_string()
+    }
+
+    /// ASCII waterfall, one bar per span scaled to the trace's total
+    /// extent (used by `examples/sla_analysis.rs`; the CLI renders
+    /// the same shape from the route JSON).
+    pub fn waterfall(&self) -> String {
+        const WIDTH: f64 = 40.0;
+        let total = self
+            .spans
+            .iter()
+            .map(|s| s.start.saturating_sub(self.started_at) + s.dur.as_nanos() as Nanos)
+            .max()
+            .unwrap_or(1)
+            .max(1) as f64;
+        let mut out = format!(
+            "{}  {}  {}  response {:.3}s{}{}\n",
+            self.trace_id,
+            self.function,
+            self.kind(),
+            self.response.as_secs_f64(),
+            if self.slo_target_ms > 0 {
+                format!(
+                    "  slo {}ms {}",
+                    self.slo_target_ms,
+                    if self.slo_violation { "VIOLATED" } else { "ok" }
+                )
+            } else {
+                String::new()
+            },
+            match &self.error {
+                Some(e) => format!("  error: {e}"),
+                None => String::new(),
+            },
+        );
+        for s in &self.spans {
+            let off = s.start.saturating_sub(self.started_at) as f64;
+            let pad = ((off / total) * WIDTH).round() as usize;
+            let bar = (((s.dur.as_nanos() as f64) / total) * WIDTH).round().max(
+                if s.dur > Duration::ZERO { 1.0 } else { 0.0 },
+            ) as usize;
+            let indent = if s.stage.is_provision_child() { "    " } else { "  " };
+            out.push_str(&format!(
+                "{indent}{:<14} {}{} {:.3}s{}\n",
+                s.stage.as_str(),
+                " ".repeat(pad.min(WIDTH as usize)),
+                "#".repeat(bar.min(WIDTH as usize + 1)),
+                s.dur.as_secs_f64(),
+                if s.note.is_empty() { String::new() } else { format!("  [{}]", s.note) },
+            ));
+        }
+        out
+    }
+}
+
+/// The completed-trace sink: a capacity-bounded exemplar ring with
+/// tail-based sampling and O(1) gauges. One per [`super::Invoker`].
+pub struct TraceSink {
+    enabled: bool,
+    log_events: bool,
+    sample_rate: f64,
+    ring_capacity: usize,
+    /// Retained-exemplar ring, newest at the back. Ranked
+    /// `trace.ring` in `PLATFORM_LOCK_ORDER`: taken standalone at
+    /// invocation end, never held across a platform call.
+    ring: Mutex<VecDeque<Trace>>,
+    /// Sampling stream (rides the `platform.rng` rank); drawn and
+    /// dropped before the ring is touched.
+    rng: Mutex<SplitMix64>,
+    seq: AtomicU64,
+    retained: AtomicU64,
+    sampled_out: AtomicU64,
+    ring_bytes: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn new(config: &TraceConfig, seed: u64) -> Self {
+        Self {
+            enabled: config.enabled,
+            log_events: config.log_events,
+            sample_rate: config.sample_rate,
+            ring_capacity: config.ring_capacity,
+            ring: Mutex::new(VecDeque::new()),
+            rng: Mutex::new(SplitMix64::new(seed)),
+            seq: AtomicU64::new(1),
+            retained: AtomicU64::new(0),
+            sampled_out: AtomicU64::new(0),
+            ring_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// The bit-for-bit gate: plain bool, no lock.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Mint a trace id for a new invocation, or `None` when tracing
+    /// is off — the single gate every instrumentation site checks.
+    pub fn begin(&self) -> Option<String> {
+        if !self.enabled {
+            return None;
+        }
+        Some(format!("tr-{:08x}", self.seq.fetch_add(1, Ordering::Relaxed)))
+    }
+
+    /// Land a completed trace: log it (if `trace.log_events`), apply
+    /// tail-based retention, and push survivors into the ring.
+    pub fn finish(&self, trace: Trace) {
+        if !self.enabled {
+            return;
+        }
+        if self.log_events {
+            println!("{}", trace.event_line());
+        }
+        // Interesting traces short-circuit the coin flip, so the rng
+        // stream is consumed only by steady-state traffic.
+        let keep = trace.interesting()
+            || (self.sample_rate > 0.0 && plock(&self.rng).next_f64() < self.sample_rate);
+        if !keep {
+            self.sampled_out.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.retained.fetch_add(1, Ordering::Relaxed);
+        if self.ring_capacity == 0 {
+            return;
+        }
+        let bytes = trace.approx_bytes() as u64;
+        let mut ring = plock(&self.ring);
+        if ring.len() == self.ring_capacity {
+            if let Some(old) = ring.pop_front() {
+                self.ring_bytes.fetch_sub(old.approx_bytes() as u64, Ordering::Relaxed);
+            }
+        }
+        self.ring_bytes.fetch_add(bytes, Ordering::Relaxed);
+        ring.push_back(trace);
+    }
+
+    pub fn get(&self, trace_id: &str) -> Option<Trace> {
+        plock(&self.ring).iter().find(|t| t.trace_id == trace_id).cloned()
+    }
+
+    /// Newest-first retained traces for one function, optionally
+    /// filtered by kind (`cold` | `restored` | `slow` | `error`).
+    pub fn recent(&self, function: &str, kind: Option<&str>, limit: usize) -> Vec<Trace> {
+        plock(&self.ring)
+            .iter()
+            .rev()
+            .filter(|t| t.function == function)
+            .filter(|t| kind.map_or(true, |k| t.matches_kind(k)))
+            .take(limit)
+            .cloned()
+            .collect()
+    }
+
+    /// Slowest retained traces across every function, by response.
+    pub fn slowest(&self, limit: usize) -> Vec<Trace> {
+        let mut all: Vec<Trace> = plock(&self.ring).iter().cloned().collect();
+        all.sort_by(|a, b| b.response.cmp(&a.response));
+        all.truncate(limit);
+        all
+    }
+
+    /// Traces that passed retention (interesting or sampled in) —
+    /// counts survivors even after ring eviction.
+    pub fn retained(&self) -> u64 {
+        self.retained.load(Ordering::Relaxed)
+    }
+
+    /// Steady-state traces dropped by the sampling coin flip.
+    pub fn sampled_out(&self) -> u64 {
+        self.sampled_out.load(Ordering::Relaxed)
+    }
+
+    /// Approximate bytes currently held by the exemplar ring.
+    pub fn ring_bytes(&self) -> u64 {
+        self.ring_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn ring_len(&self) -> usize {
+        plock(&self.ring).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(start: StartKind) -> InvocationRecord {
+        InvocationRecord {
+            function: "fn".to_string(),
+            memory_mb: 1024,
+            start,
+            queue: Duration::from_millis(5),
+            sandbox: if start != StartKind::Warm { Duration::from_millis(50) } else { Duration::ZERO },
+            runtime_init: if start == StartKind::Cold { Duration::from_millis(120) } else { Duration::ZERO },
+            package_fetch: if start == StartKind::Cold { Duration::from_millis(300) } else { Duration::ZERO },
+            model_load: if start == StartKind::Cold { Duration::from_millis(800) } else { Duration::ZERO },
+            restore: if start == StartKind::Restored { Duration::from_millis(90) } else { Duration::ZERO },
+            predict: Duration::from_millis(40),
+            predict_full_speed: Duration::from_millis(40),
+            batch_size: 1,
+            batch_wait: Duration::ZERO,
+            kernel_batch_n: 1,
+            batch_kernel_hits: 0,
+            batch_kernel_misses: 0,
+            billed: Duration::from_millis(40),
+            billed_ms: 40,
+            cost_dollars: 1e-6,
+            top1: 3,
+            trace_id: None,
+        }
+    }
+
+    fn sink(enabled: bool, capacity: usize, rate: f64) -> TraceSink {
+        let cfg = TraceConfig {
+            enabled,
+            ring_capacity: capacity,
+            sample_rate: rate,
+            log_events: false,
+        };
+        TraceSink::new(&cfg, 42)
+    }
+
+    #[test]
+    fn stage_sum_matches_response_for_every_start_kind() {
+        for start in [StartKind::Cold, StartKind::Warm, StartKind::Restored] {
+            let r = record(start);
+            let t = Trace::from_record("tr-1", &r, 1_000, None, 0, None);
+            assert_eq!(t.stage_sum(), r.response(), "start={start}");
+        }
+    }
+
+    #[test]
+    fn provision_children_equal_record_components() {
+        let r = record(StartKind::Cold);
+        let t = Trace::from_record("tr-1", &r, 0, None, 0, None);
+        assert_eq!(t.span(Stage::Sandbox).unwrap().dur, r.sandbox);
+        assert_eq!(t.span(Stage::RuntimeInit).unwrap().dur, r.runtime_init);
+        assert_eq!(t.span(Stage::PackageFetch).unwrap().dur, r.package_fetch);
+        assert_eq!(t.span(Stage::ModelLoad).unwrap().dur, r.model_load);
+        assert_eq!(t.span(Stage::Restore).unwrap().dur, r.restore);
+        assert_eq!(t.span(Stage::Provision).unwrap().dur, r.cold_overhead());
+        // The parent is the exact sum of its children.
+        let children: Duration = t
+            .spans
+            .iter()
+            .filter(|s| s.stage.is_provision_child())
+            .map(|s| s.dur)
+            .sum();
+        assert_eq!(children, t.span(Stage::Provision).unwrap().dur);
+    }
+
+    #[test]
+    fn warm_record_has_no_provision_spans_and_async_context_sets_admission() {
+        let r = record(StartKind::Warm);
+        let t = Trace::from_record("tr-1", &r, 7_000_000, Some(2_000_000), 0, None);
+        assert!(t.span(Stage::Provision).is_none());
+        assert!(t.span(Stage::Sandbox).is_none());
+        let adm = t.span(Stage::Admission).unwrap();
+        assert_eq!(adm.dur, Duration::from_nanos(5_000_000));
+        assert_eq!(t.started_at, 2_000_000);
+        // Pre-platform wait stays out of the response identity.
+        assert_eq!(t.stage_sum(), r.response());
+    }
+
+    #[test]
+    fn batched_record_gets_collect_span_and_follower_is_annotated() {
+        let mut r = record(StartKind::Warm);
+        r.batch_size = 4;
+        r.batch_wait = Duration::from_millis(12);
+        let t = Trace::from_record("tr-9", &r, 0, None, 0, Some("tr-2".to_string()));
+        assert_eq!(t.span(Stage::BatchCollect).unwrap().dur, r.batch_wait);
+        assert_eq!(t.stage_sum(), r.response());
+        assert_eq!(t.shared_exec_with.as_deref(), Some("tr-2"));
+        assert!(t.span(Stage::KernelExec).unwrap().note.contains("shared_with=tr-2"));
+    }
+
+    #[test]
+    fn slo_violation_and_kind_classification() {
+        let r = record(StartKind::Warm); // response = 45 ms
+        let fast = Trace::from_record("tr-1", &r, 0, None, 100, None);
+        assert!(!fast.slo_violation);
+        assert_eq!(fast.kind(), "steady");
+        assert!(!fast.interesting());
+        let slow = Trace::from_record("tr-2", &r, 0, None, 10, None);
+        assert!(slow.slo_violation);
+        assert_eq!(slow.kind(), "slow");
+        assert!(slow.interesting() && slow.matches_kind("slow"));
+        let cold = Trace::from_record("tr-3", &record(StartKind::Cold), 0, None, 10, None);
+        assert_eq!(cold.kind(), "cold");
+        // A cold trace over budget matches BOTH filters.
+        assert!(cold.matches_kind("cold") && cold.matches_kind("slow"));
+        let refused = Trace::refused("tr-4", "fn", 0, None, Duration::from_secs(1), "full".into());
+        assert_eq!(refused.kind(), "error");
+        assert!(refused.interesting() && refused.matches_kind("error"));
+    }
+
+    #[test]
+    fn disabled_sink_mints_no_ids_and_never_touches_the_ring() {
+        let s = sink(false, 16, 1.0);
+        assert!(s.begin().is_none());
+        s.finish(Trace::from_record("tr-1", &record(StartKind::Cold), 0, None, 0, None));
+        assert_eq!(s.retained(), 0);
+        assert_eq!(s.sampled_out(), 0);
+        assert_eq!(s.ring_len(), 0);
+        assert_eq!(s.ring_bytes(), 0);
+    }
+
+    #[test]
+    fn interesting_always_retained_steady_sampled() {
+        let s = sink(true, 64, 0.0);
+        for i in 0..10 {
+            let kind = if i % 2 == 0 { StartKind::Cold } else { StartKind::Warm };
+            s.finish(Trace::from_record(&format!("tr-{i}"), &record(kind), 0, None, 0, None));
+        }
+        // rate 0: every warm/steady trace dropped, every cold kept.
+        assert_eq!(s.retained(), 5);
+        assert_eq!(s.sampled_out(), 5);
+        let s = sink(true, 64, 1.0);
+        for i in 0..10 {
+            s.finish(Trace::from_record(&format!("tr-{i}"), &record(StartKind::Warm), 0, None, 0, None));
+        }
+        assert_eq!(s.retained(), 10);
+        assert_eq!(s.sampled_out(), 0);
+    }
+
+    #[test]
+    fn fractional_sampling_is_seeded_and_partial() {
+        let run = || {
+            let s = sink(true, 1024, 0.5);
+            for i in 0..200 {
+                s.finish(Trace::from_record(
+                    &format!("tr-{i}"),
+                    &record(StartKind::Warm),
+                    0,
+                    None,
+                    0,
+                    None,
+                ));
+            }
+            (s.retained(), s.sampled_out())
+        };
+        let (kept, dropped) = run();
+        assert_eq!(kept + dropped, 200);
+        assert!(kept > 0 && dropped > 0, "rate 0.5 must split the stream ({kept}/{dropped})");
+        // Same seed, same stream, same decisions.
+        assert_eq!(run(), (kept, dropped));
+    }
+
+    #[test]
+    fn ring_bounds_capacity_and_byte_gauge_tracks_contents() {
+        let s = sink(true, 4, 0.0);
+        for i in 0..10 {
+            s.finish(Trace::from_record(&format!("tr-{i}"), &record(StartKind::Cold), 0, None, 0, None));
+        }
+        assert_eq!(s.ring_len(), 4);
+        assert_eq!(s.retained(), 10);
+        let expected: u64 = plock(&s.ring).iter().map(|t| t.approx_bytes() as u64).sum();
+        assert_eq!(s.ring_bytes(), expected);
+        // Eviction kept the NEWEST four.
+        assert!(s.get("tr-9").is_some() && s.get("tr-5").is_none());
+    }
+
+    #[test]
+    fn recent_filters_by_function_and_kind_newest_first() {
+        let s = sink(true, 64, 1.0);
+        s.finish(Trace::from_record("tr-1", &record(StartKind::Cold), 0, None, 0, None));
+        s.finish(Trace::from_record("tr-2", &record(StartKind::Warm), 0, None, 0, None));
+        let mut other = record(StartKind::Cold);
+        other.function = "other".to_string();
+        s.finish(Trace::from_record("tr-3", &other, 0, None, 0, None));
+        s.finish(Trace::refused("tr-4", "fn", 0, None, Duration::from_secs(1), "expired".into()));
+        let all = s.recent("fn", None, 10);
+        assert_eq!(
+            all.iter().map(|t| t.trace_id.as_str()).collect::<Vec<_>>(),
+            ["tr-4", "tr-2", "tr-1"]
+        );
+        assert_eq!(s.recent("fn", Some("cold"), 10).len(), 1);
+        assert_eq!(s.recent("fn", Some("error"), 10)[0].trace_id, "tr-4");
+        assert_eq!(s.recent("fn", None, 1).len(), 1);
+        assert_eq!(s.slowest(1)[0].trace_id, "tr-4");
+    }
+
+    #[test]
+    fn event_line_and_trace_json_round_trip() {
+        let r = record(StartKind::Cold);
+        let t = Trace::from_record("tr-1", &r, 0, None, 1000, None);
+        let line = Json::parse(&t.event_line()).expect("event line parses");
+        assert_eq!(line.get("trace_id").and_then(Json::as_str), Some("tr-1"));
+        assert_eq!(line.get("start").and_then(Json::as_str), Some("cold"));
+        let stages = line.get("stages").expect("stages");
+        assert!(stages.get("kernel_exec").is_some());
+        assert!(stages.get("model_load").is_some());
+        let json = Json::parse(&t.to_json().to_string()).expect("trace json parses");
+        let spans = json.get("spans").and_then(Json::as_arr).expect("spans");
+        assert_eq!(spans.len(), t.spans.len());
+        assert_eq!(
+            spans[2].get("parent").and_then(Json::as_str),
+            None,
+            "provision parent row has no parent"
+        );
+        assert_eq!(spans[3].get("parent").and_then(Json::as_str), Some("provision"));
+        // The waterfall renders one row per span.
+        assert_eq!(t.waterfall().lines().count(), 1 + t.spans.len());
+    }
+}

@@ -484,3 +484,193 @@ fn snapshot_roundtrip_restore_and_stats_fields_over_http() {
     sh.shutdown();
     t.join().unwrap();
 }
+
+// ---- invocation tracing over HTTP ----
+
+/// A trace-enabled gateway on a ManualClock: the simulated provision
+/// delays advance virtual time, so every span duration is exact.
+/// `maintainer_interval_s = 0` keeps the background sweeper off the
+/// virtual clock.
+fn traced_manual_gateway(
+    sample_rate: f64,
+) -> (
+    String,
+    Arc<Invoker>,
+    lambdaserve::httpd::ShutdownHandle,
+    std::thread::JoinHandle<()>,
+) {
+    let engine = Arc::new(MockEngine::paper_zoo());
+    let clock = lambdaserve::util::ManualClock::new();
+    let mut config = PlatformConfig { maintainer_interval_s: 0.0, ..Default::default() };
+    config.trace.enabled = true;
+    config.trace.sample_rate = sample_rate;
+    let p = Arc::new(Invoker::new(config, engine, clock));
+    let gw = Gateway::bind("127.0.0.1:0", 8, p.clone()).unwrap();
+    let addr = gw.local_addr().to_string();
+    let sh = gw.shutdown_handle();
+    let t = std::thread::spawn(move || gw.serve().unwrap());
+    (addr, p, sh, t)
+}
+
+/// Acceptance: over real HTTP on a ManualClock, the cold invocation's
+/// trace reports provision children that match the per-component
+/// provision percentiles on the function stats route exactly (one
+/// cold start, so p50 IS that start's cost), and the duration-bearing
+/// spans sum to the reported response.
+#[test]
+fn cold_trace_provision_children_match_stats_over_http() {
+    let (addr, _p, sh, t) = traced_manual_gateway(1.0);
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(30));
+
+    api.deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024)).unwrap();
+    let r = api.invoke("sq", Some(1)).unwrap();
+    assert_eq!(r.start, "cold");
+    let trace_id = r.trace_id.expect("trace id minted while tracing is on");
+    assert!(trace_id.starts_with("tr-"));
+
+    let trace = api.invocation_trace(&trace_id).unwrap();
+    assert_eq!(trace.trace_id, trace_id);
+    assert_eq!(trace.function, "sq");
+    assert_eq!(trace.start, "cold");
+    let child = |stage: &str| {
+        let s = trace
+            .spans
+            .iter()
+            .find(|s| s.stage == stage)
+            .unwrap_or_else(|| panic!("missing span {stage}"));
+        assert_eq!(s.parent.as_deref(), Some("provision"), "{stage} nests under provision");
+        s.duration_s
+    };
+    let stats = api.stats("sq").unwrap();
+    let close = |a: f64, b: f64| (a - b).abs() < 1e-9;
+    assert!(close(child("sandbox"), stats.provision_sandbox_p50_s));
+    assert!(close(child("runtime_init"), stats.provision_runtime_init_p50_s));
+    assert!(close(child("package_fetch"), stats.provision_package_fetch_p50_s));
+    assert!(close(child("model_load"), stats.provision_model_load_p50_s));
+    // Full cold start: nothing restored, and the kernel_exec note
+    // carries the rung annotation.
+    assert!(close(child("restore"), 0.0));
+    let exec = trace.spans.iter().find(|s| s.stage == "kernel_exec").unwrap();
+    assert!(exec.note.as_deref().unwrap().contains("kernel_batch_n="), "{:?}", exec.note);
+    // Span-sum identity, reconstructed from the wire: every span
+    // except the provision parent, the admission marker, and billing.
+    let sum: f64 = trace
+        .spans
+        .iter()
+        .filter(|s| !matches!(s.stage.as_str(), "provision" | "admission" | "billing"))
+        .map(|s| s.duration_s)
+        .sum();
+    assert!(close(sum, trace.response_s), "sum={sum} response={}", trace.response_s);
+    assert!(close(trace.response_s, r.response_s));
+
+    // The stats routes carry the ring gauges.
+    assert_eq!(stats.traces_retained, 1);
+    assert_eq!(stats.traces_sampled_out, 0);
+    assert!(stats.trace_ring_bytes > 0);
+    let ps = api.platform_stats().unwrap();
+    assert_eq!(ps.traces_retained, 1);
+    assert!(ps.trace_ring_bytes > 0);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+/// Acceptance: a burst against a tight SLO retains every violator in
+/// the exemplar ring, while steady traffic at `sample_rate = 0` is
+/// sampled out (only the tail-interesting cold exemplar survives).
+#[test]
+fn burst_retains_slo_violators_and_samples_out_steady() {
+    let (addr, p, sh, t) = traced_manual_gateway(0.0);
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(30));
+
+    // "tight": a 1 ms budget every real invocation blows. "steady": a
+    // 60 s budget even the simulated cold start sits well under, so
+    // nothing there is SLO-interesting.
+    api.deploy(&DeploySpec::new("tight", "squeezenet").memory_mb(1024).slo_target_ms(1))
+        .unwrap();
+    api.deploy(&DeploySpec::new("steady", "squeezenet").memory_mb(1024).slo_target_ms(60_000))
+        .unwrap();
+    for i in 0..8 {
+        api.invoke("tight", Some(i)).unwrap();
+        api.invoke("steady", Some(i)).unwrap();
+    }
+
+    // Every violator retained: 1 cold + 7 warm, all over 1 ms.
+    let slow = api.function_traces("tight", Some("slow"), Some(100)).unwrap();
+    assert_eq!(slow.len(), 8, "all SLO violators kept despite sample_rate = 0");
+    assert!(slow.iter().all(|tr| tr.slo_violation && tr.slo_target_ms == 1));
+
+    // Steady traffic: only the cold exemplar survives the zero rate.
+    let kept = api.function_traces("steady", None, Some(100)).unwrap();
+    assert_eq!(kept.len(), 1);
+    assert_eq!(kept[0].kind, "cold");
+    assert_eq!(api.function_traces("steady", Some("slow"), Some(100)).unwrap().len(), 0);
+    assert_eq!(p.trace.retained(), 9);
+    assert_eq!(p.trace.sampled_out(), 7, "the steady warm invocations");
+    let ps = api.platform_stats().unwrap();
+    assert_eq!(ps.traces_retained, 9);
+    assert_eq!(ps.traces_sampled_out, 7);
+
+    sh.shutdown();
+    t.join().unwrap();
+}
+
+/// Trace route plumbing: async `inv-…` ids resolve through the result
+/// store to the same trace, bad query parameters are 400s, and a
+/// trace-disabled platform answers 404 `tracing_disabled` (while the
+/// invocation response carries a null trace id).
+#[test]
+fn trace_route_resolution_and_validation() {
+    let (addr, _p, sh, t) = traced_manual_gateway(1.0);
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(30));
+    let tmo = Duration::from_secs(10);
+
+    api.deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024)).unwrap();
+    let id = api.invoke_async("sq", Some(1)).unwrap();
+    let done = api
+        .wait_invocation(&id, Duration::from_millis(2), Duration::from_secs(30))
+        .unwrap();
+    let trace_id = done.result.unwrap().trace_id.expect("async result carries the trace id");
+
+    // Both spellings resolve to the same retained trace.
+    let by_inv = api.invocation_trace(&id).unwrap();
+    let by_tr = api.invocation_trace(&trace_id).unwrap();
+    assert_eq!(by_inv.trace_id, trace_id);
+    assert_eq!(by_tr.trace_id, trace_id);
+    assert_eq!(by_inv.spans.len(), by_tr.spans.len());
+    // The async hop is visible: a non-zero admission span precedes
+    // the queue wait.
+    assert_eq!(by_inv.spans[0].stage, "admission");
+
+    // Unknown ids and bad parameters.
+    let err = api.invocation_trace("tr-ffffffff").unwrap_err();
+    assert_eq!(err.status, 404);
+    let err = api.invocation_trace("inv-ffffffff").unwrap_err();
+    assert_eq!(err.status, 404);
+    let err = api.function_traces("sq", Some("lukewarm"), None).unwrap_err();
+    assert_eq!((err.status, err.code.as_str()), (400, "invalid_kind"));
+    let r = http_get(&addr, "/v2/functions/sq/traces?limit=0", tmo).unwrap();
+    assert_eq!(r.status, 400);
+    let err = api.function_traces("ghost", None, None).unwrap_err();
+    assert_eq!(err.status, 404);
+
+    sh.shutdown();
+    t.join().unwrap();
+
+    // Tracing off (the default gateway): null trace ids, 404s with the
+    // dedicated code on both routes.
+    let (addr, sh, t) = start_gateway();
+    let api = ApiClient::new(&addr).with_timeout(Duration::from_secs(10));
+    api.deploy(&DeploySpec::new("sq", "squeezenet").memory_mb(1024)).unwrap();
+    let r = api.invoke("sq", Some(1)).unwrap();
+    assert_eq!(r.trace_id, None, "no trace id while tracing is off");
+    let err = api.invocation_trace("tr-00000001").unwrap_err();
+    assert_eq!((err.status, err.code.as_str()), (404, "tracing_disabled"));
+    let err = api.function_traces("sq", None, None).unwrap_err();
+    assert_eq!((err.status, err.code.as_str()), (404, "tracing_disabled"));
+    let s = api.stats("sq").unwrap();
+    assert_eq!((s.traces_retained, s.traces_sampled_out, s.trace_ring_bytes), (0, 0, 0));
+
+    sh.shutdown();
+    t.join().unwrap();
+}
